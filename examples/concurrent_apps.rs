@@ -1,0 +1,50 @@
+//! Concurrent apps under contention: the paper's Workload 2 (KWS +
+//! SimpleNet + WideNet) on four wearables, comparing Synergy's holistic
+//! planning against independent state-of-the-art partitioning — including
+//! the out-of-resource failure IndModel hits when each app plans alone.
+//!
+//! Run: `cargo run --release --example concurrent_apps`
+
+use synergy::baselines::{IndModel, JointModel};
+use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::orchestrator::{Planner, Synergy};
+use synergy::scheduler::{simulate, GroundTruth, SimConfig};
+use synergy::workload::{fleet4, workload};
+
+fn main() {
+    let w = workload(2);
+    let fleet = fleet4();
+    let gt = GroundTruth::with_seed(7);
+
+    for planner in [
+        &Synergy::planner() as &dyn Planner,
+        &IndModel::default(),
+        &JointModel::default(),
+    ] {
+        print!("{:<12}", planner.name());
+        match planner.plan(&w.pipelines, &fleet) {
+            Ok(plan) => {
+                let lm = LatencyModel::new(&fleet);
+                let est = estimate_plan(&plan, &w.pipelines, &fleet, &lm);
+                let rep = simulate(
+                    &plan,
+                    &w.pipelines,
+                    &fleet,
+                    &gt,
+                    SimConfig { policy: planner.exec_policy(), ..Default::default() },
+                );
+                println!(
+                    "estimated {:.2} inf/s → measured {:.2} inf/s, {:.0} ms latency, {:.2} W",
+                    est.throughput,
+                    rep.throughput,
+                    rep.avg_latency * 1e3,
+                    rep.power_w
+                );
+                for ep in &plan.plans {
+                    println!("             {ep}");
+                }
+            }
+            Err(e) => println!("{e}"),
+        }
+    }
+}

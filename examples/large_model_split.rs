@@ -1,0 +1,53 @@
+//! Large-model splitting: MobileNetV2 (821 KB) exceeds any single
+//! MAX78000's 442 KB weight memory — Workload 4 in the paper. Synergy
+//! splits it across the fleet; this example shows how the split adapts as
+//! devices join, and what a heterogeneous upgrade (MAX78002) changes.
+//!
+//! Run: `cargo run --release --example large_model_split`
+
+use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::model::zoo::{model_by_name, ModelName};
+use synergy::orchestrator::{PlanError, Planner, Synergy};
+use synergy::workload::{fleet4_hetero, fleet_n, workload};
+
+fn main() {
+    let w = workload(4); // MobileNetV2, glasses → ring
+    let model = model_by_name(ModelName::MobileNetV2);
+    println!(
+        "MobileNetV2: {} layers, {} weights — single MAX78000 holds 442 KB\n",
+        model.num_layers(),
+        synergy::util::fmt_bytes(model.weight_bytes(model.full())),
+    );
+
+    for n in 1..=5 {
+        let fleet = fleet_n(n);
+        // Keep the endpoints on devices that exist in the shrunken fleet.
+        let pipelines = vec![synergy::workload::pipeline(
+            0,
+            ModelName::MobileNetV2,
+            1 % n,
+            3 % n.max(1),
+        )];
+        print!("{n} × MAX78000: ");
+        match Synergy::planner().plan(&pipelines, &fleet) {
+            Ok(plan) => {
+                let lm = LatencyModel::new(&fleet);
+                let est = estimate_plan(&plan, &pipelines, &fleet, &lm);
+                println!("{} — {:.2} inf/s", plan.plans[0], est.throughput);
+            }
+            Err(PlanError::Oor { .. }) => println!("OOR (cannot hold the model)"),
+            Err(e) => println!("{e}"),
+        }
+    }
+
+    let fleet = fleet4_hetero();
+    let plan = Synergy::planner()
+        .plan(&w.pipelines, &fleet)
+        .expect("hetero fleet must fit");
+    let lm = LatencyModel::new(&fleet);
+    let est = estimate_plan(&plan, &w.pipelines, &fleet, &lm);
+    println!(
+        "\nwith a MAX78002 in the fleet: {} — {:.2} inf/s",
+        plan.plans[0], est.throughput
+    );
+}

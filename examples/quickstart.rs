@@ -1,0 +1,69 @@
+//! Quickstart: register two on-body AI apps through the device-agnostic
+//! interface, let the moderator orchestrate, and inspect/simulate the
+//! selected holistic collaboration plan.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use synergy::coordinator::Moderator;
+use synergy::device::{DeviceId, InteractionKind, SensorKind};
+use synergy::model::zoo::{model_by_name, ModelName};
+use synergy::orchestrator::Synergy;
+use synergy::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use synergy::workload::fleet4;
+
+fn main() -> anyhow::Result<()> {
+    // Four wearables: earbud (d0), glasses (d1), watch (d2), ring (d3).
+    let fleet = fleet4();
+    let mut moderator = Moderator::new(fleet, Synergy::planner());
+
+    // App 1 — keyword spotting: any microphone → KWS → haptic alert.
+    // No devices named: the runtime decides placement (§IV-B).
+    moderator.register_app(PipelineSpec::new(
+        0,
+        "keyword-spotting",
+        SourceReq::Sensor(SensorKind::Microphone),
+        model_by_name(ModelName::KWS).clone(),
+        TargetReq::Interaction(InteractionKind::Haptic),
+    ))?;
+
+    // App 2 — attention alert: the glasses camera → SimpleNet → display.
+    // The source pins a designated device instead of a capability.
+    moderator.register_app(PipelineSpec::new(
+        1,
+        "attention-alert",
+        SourceReq::Device(DeviceId(1)),
+        model_by_name(ModelName::SimpleNet).clone(),
+        TargetReq::Interaction(InteractionKind::Display),
+    ))?;
+
+    let dep = moderator.deployment().unwrap();
+    println!("holistic collaboration plan:");
+    for ep in &dep.plan.plans {
+        println!("  {ep}");
+    }
+    println!(
+        "planner estimate: {:.2} inf/s, round latency {:.0} ms, {:.2} W",
+        dep.estimate.throughput,
+        dep.estimate.round_latency * 1e3,
+        dep.estimate.power_w,
+    );
+
+    // Execute on the simulated hardware (cycle-accurate device models).
+    let report = moderator.simulate(32, 7).unwrap();
+    println!(
+        "simulated 32 rounds: {:.2} inf/s, mean latency {:.0} ms, {:.2} W",
+        report.throughput,
+        report.avg_latency * 1e3,
+        report.power_w,
+    );
+
+    // The ring leaves the body — the moderator re-orchestrates (the watch
+    // still offers a haptic interface).
+    moderator.set_fleet(synergy::workload::fleet_n(3))?;
+    let dep = moderator.deployment().unwrap();
+    println!("after shrinking to 3 devices:");
+    for ep in &dep.plan.plans {
+        println!("  {ep}");
+    }
+    Ok(())
+}

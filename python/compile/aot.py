@@ -1,0 +1,144 @@
+"""AOT compile path: lower the model zoo to HLO text + manifest.json.
+
+Python runs exactly once (`make artifacts`); the rust coordinator loads the
+emitted artifacts via PJRT and Python never appears on the request path.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the vendored xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  artifacts/<Model>_full.hlo.txt          — whole-model executable
+  artifacts/<Model>_<i>_<j>.hlo.txt       — layer-range chunk (split unit)
+  artifacts/manifest.json                 — per-layer metadata + index,
+                                            cross-checked against the rust
+                                            zoo by tests on both sides
+
+Weights are deterministic (derived from model name + layer index, see
+model.py), so every chunk pair composes to exactly the full model — the
+property the e2e serving example asserts through the rust runtime.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+                             [--models ConvNet5,KWS,...]
+                             [--split-models ConvNet5,KWS,SimpleNet]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import archs, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_chunk(name: str, start: int, end: int) -> str:
+    """Lower layers [start, end) of `name` to HLO text."""
+    in_shape = model.chunk_input_shape(name, start)
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    lowered = jax.jit(model.chunk_fn(name, start, end)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(name: str, split_points, files) -> dict:
+    """Per-model manifest record: layer metadata + artifact index."""
+    n = len(archs.layers(name))
+    layer_meta = []
+    for l in range(n):
+        spec = archs.layers(name)[l]
+        wt, bias = archs.weight_bias_bytes(name, l)
+        layer_meta.append(
+            {
+                "kind": spec["kind"],
+                "k": spec["k"],
+                "pool": spec["pool"],
+                "cout": spec["cout"],
+                "bias": spec.get("bias", True),
+                "weight_bytes": wt,
+                "bias_bytes": bias,
+                "in_shape": list(archs.in_shapes(name)[l]),
+                "out_shape": list(archs.out_shapes(name)[l]),
+                "macs": archs.macs(name, l),
+                "cycles_accel_p64": archs.accel_cycles(name, l),
+            }
+        )
+    return {
+        "input": list(archs.input_shape(name)),
+        "layers": layer_meta,
+        "artifacts": files,
+        "split_points": split_points,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--models",
+        default=",".join(archs.ARCHS.keys()),
+        help="comma-separated models to lower (full)",
+    )
+    ap.add_argument(
+        "--split-models",
+        default="ConvNet5,KWS,SimpleNet",
+        help="models that additionally get every 2-way split chunk pair",
+    )
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for name in [m for m in args.models.split(",") if m]:
+        n = len(archs.layers(name))
+        files = {}
+        split_points = []
+
+        full = f"{name}_full.hlo.txt"
+        text = lower_chunk(name, 0, n)
+        with open(os.path.join(args.out_dir, full), "w") as f:
+            f.write(text)
+        files["full"] = full
+        print(f"[aot] {full}: {len(text) / 1e6:.2f} MB", file=sys.stderr)
+
+        chunks = []
+        if name in args.split_models.split(","):
+            split_points = list(range(1, n))
+            for s in split_points:
+                for (a, b) in ((0, s), (s, n)):
+                    fname = f"{name}_{a}_{b}.hlo.txt"
+                    if not any(c["file"] == fname for c in chunks):
+                        text = lower_chunk(name, a, b)
+                        with open(os.path.join(args.out_dir, fname), "w") as f:
+                            f.write(text)
+                        chunks.append(
+                            {
+                                "start": a,
+                                "end": b,
+                                "file": fname,
+                                "in_shape": list(model.chunk_input_shape(name, a)),
+                                "out_shape": list(archs.out_shapes(name)[b - 1]),
+                            }
+                        )
+            print(f"[aot] {name}: {len(chunks)} split chunks", file=sys.stderr)
+        files["chunks"] = chunks
+        manifest[name] = manifest_entry(name, split_points, files)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest.json: {len(manifest)} models", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

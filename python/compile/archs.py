@@ -1,0 +1,120 @@
+"""The shared model-zoo architecture spec (single source of truth).
+
+`archs.json` is produced once by `design_zoo.py` (fitted to Table I) and
+consumed by BOTH this Python build path and the rust zoo
+(`rust/src/model/zoo.rs` via include_str!). Shape/size algebra here must
+mirror rust's `model/layer.rs`; `python/tests/test_manifest.py` and the
+rust zoo tests cross-check the two.
+"""
+
+import json
+import os
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+with open(os.path.join(_HERE, "archs.json")) as f:
+    ARCHS = json.load(f)
+
+# Table I model names in pipeline order, plus the Fig. 2 FaceID model.
+TABLE1 = [
+    "ConvNet5",
+    "ResSimpleNet",
+    "UNet",
+    "KWS",
+    "SimpleNet",
+    "WideNet",
+    "EfficientNetV2",
+    "MobileNetV2",
+]
+
+
+def layers(name):
+    """Layer spec list for a model."""
+    return ARCHS[name]["layers"]
+
+
+def input_shape(name):
+    """(H, W, C) input of a model."""
+    return tuple(ARCHS[name]["input"])
+
+
+def out_shapes(name):
+    """Per-layer output shapes; `out_shapes(m)[l]` is layer l's output.
+
+    Mirrors rust `ModelGraph::out_shape`.
+    """
+    h, w, c = input_shape(name)
+    shapes = []
+    for l in layers(name):
+        h, w = h // l["pool"], w // l["pool"]
+        if l["kind"] == "conv":
+            c = l["cout"]
+        elif l["kind"] == "dw":
+            pass
+        elif l["kind"] == "convt":
+            h, w, c = h * 2, w * 2, l["cout"]
+        elif l["kind"] == "linear":
+            h, w, c = 1, 1, l["cout"]
+        else:
+            raise ValueError(l["kind"])
+        shapes.append((h, w, c))
+    return shapes
+
+
+def in_shapes(name):
+    """Per-layer input shapes (`in_shapes(m)[l]` feeds layer l)."""
+    return [input_shape(name)] + out_shapes(name)[:-1]
+
+
+def weight_bias_bytes(name, l):
+    """(weight, bias) bytes of layer l — mirrors rust `Layer` exactly."""
+    spec = layers(name)[l]
+    h, w, c = in_shapes(name)[l]
+    ph, pw = h // spec["pool"], w // spec["pool"]
+    kind, k = spec["kind"], spec["k"]
+    if kind == "conv" or kind == "convt":
+        wt = k * k * c * spec["cout"]
+    elif kind == "dw":
+        wt = k * k * c
+    elif kind == "linear":
+        wt = ph * pw * c * spec["cout"]
+    else:
+        raise ValueError(kind)
+    oc = out_shapes(name)[l][2]
+    bias = oc if spec.get("bias", True) else 0
+    return wt, bias
+
+
+def accel_cycles(name, l, p=64):
+    """Clock cycles of layer l on the accelerator (paper Eq. 4–5) —
+    mirrors rust `estimator::clock::layer_cycles_accel`."""
+    spec = layers(name)[l]
+    h, w, c = in_shapes(name)[l]
+    ph, pw = h // spec["pool"], w // spec["pool"]
+    oh, ow, oc = out_shapes(name)[l]
+    blocks = -(-c // p)
+    kind = spec["kind"]
+    if kind == "conv" or kind == "convt":
+        return ph * ow * blocks * oc
+    if kind == "dw":
+        return ph * ow * blocks
+    if kind == "linear":
+        return ph * pw * blocks * oc
+    raise ValueError(kind)
+
+
+def macs(name, l):
+    """MAC count of layer l — mirrors rust `Layer::macs`."""
+    spec = layers(name)[l]
+    h, w, c = in_shapes(name)[l]
+    ph, pw = h // spec["pool"], w // spec["pool"]
+    oh, ow, oc = out_shapes(name)[l]
+    k = spec["k"]
+    kind = spec["kind"]
+    if kind == "conv" or kind == "convt":
+        return k * k * oh * ow * c * oc
+    if kind == "dw":
+        return k * k * oh * ow * oc
+    if kind == "linear":
+        return ph * pw * c * oc
+    raise ValueError(kind)

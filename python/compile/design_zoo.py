@@ -1,0 +1,346 @@
+"""Design-time tool: fit the 8-model zoo to Table I of the paper.
+
+The paper gives, per model, the layer count (where stated), total model size
+in bytes (8-bit weights + biases), input shape, and average output size.
+This script fixes each model's *template* (layer kinds, kernel sizes, pooling
+schedule — chosen to be faithful to the published MAX78000 reference
+networks) and searches integer channel widths so that
+
+  - total size (weights + biases)  ≈ Table I "Model Size", and
+  - mean per-layer output bytes    ≈ Table I "Avg. Out Size"
+
+both within ~2%. The result is written to `archs.json`, the single source of
+truth consumed by BOTH the rust zoo (`rust/src/model/zoo.rs`, via
+include_str!) and the python zoo (`python/compile/archs.py`). Run once at
+design time; the output is checked in.
+
+Usage: python design_zoo.py [--out archs.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import random
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class L:
+    """One layer-unit template entry."""
+
+    kind: str  # conv | dw | convt | linear
+    k: int = 3
+    pool: int = 1
+    cout: int = 0  # filled by the search (ignored for dw)
+    residual: bool = False
+    # ai8x layers may omit the bias (e.g. BN-folded expansion/depthwise
+    # convs in MobileNetV2) — bias memory is the scarcest resource.
+    bias: bool = True
+
+
+def shapes(inp, layers):
+    """Propagate (h, w, c) through the template; mirrors rust layer.rs."""
+    hs = [inp]
+    h, w, c = inp
+    for l in layers:
+        h, w = h // l.pool, w // l.pool
+        if l.kind == "conv":
+            c = l.cout
+        elif l.kind == "dw":
+            pass  # channels preserved
+        elif l.kind == "convt":
+            h, w, c = h * 2, w * 2, l.cout
+        elif l.kind == "linear":
+            h, w, c = 1, 1, l.cout
+        else:
+            raise ValueError(l.kind)
+        hs.append((h, w, c))
+    return hs
+
+def sizes(inp, layers):
+    """(total_weight+bias bytes, avg output bytes) — mirrors rust graph.rs."""
+    hs = shapes(inp, layers)
+    wsum = bsum = osum = 0
+    for i, l in enumerate(layers):
+        h, w, c = hs[i]
+        ph, pw = h // l.pool, w // l.pool
+        oh, ow, oc = hs[i + 1]
+        if l.kind == "conv":
+            wsum += l.k * l.k * c * l.cout
+        elif l.kind == "dw":
+            wsum += l.k * l.k * c
+        elif l.kind == "convt":
+            wsum += l.k * l.k * c * l.cout
+        elif l.kind == "linear":
+            wsum += ph * pw * c * l.cout
+        bsum += oc if l.bias else 0
+        osum += oh * ow * oc
+    return wsum + bsum, osum / len(layers)
+
+
+MAX78000_W, MAX78000_B, MAX78000_L = 442 * 1024, 2048, 32
+
+
+def per_layer_footprint(inp, layers):
+    """Per-layer (weight, bias) bytes — mirrors rust graph.rs."""
+    hs = shapes(inp, layers)
+    out = []
+    for i, l in enumerate(layers):
+        h, w, c = hs[i]
+        ph, pw = h // l.pool, w // l.pool
+        if l.kind == "conv" or l.kind == "convt":
+            wt = l.k * l.k * c * l.cout
+        elif l.kind == "dw":
+            wt = l.k * l.k * c
+        else:
+            wt = ph * pw * c * l.cout
+        out.append((wt, hs[i + 1][2] if l.bias else 0))
+    return out
+
+
+def deployable(inp, layers, max_parts):
+    """Does a contiguous ≤max_parts split fit max_parts MAX78000s?
+
+    Greedy first-fit is exact here: each device takes the longest prefix of
+    remaining layers that fits (weight, bias, layer-count) — feasible iff
+    the greedy needs ≤ max_parts devices (standard result for contiguous
+    partitioning with monotone constraints).
+    """
+    foot = per_layer_footprint(inp, layers)
+    parts, w, b, n = 1, 0, 0, 0
+    for wt, bi in foot:
+        if wt > MAX78000_W or bi > MAX78000_B:
+            return False  # single layer exceeds a device
+        if w + wt > MAX78000_W or b + bi > MAX78000_B or n + 1 > MAX78000_L:
+            parts += 1
+            w, b, n = 0, 0, 0
+        w, b, n = w + wt, b + bi, n + 1
+    return parts <= max_parts
+
+
+def fit(name, inp, template, target_size, target_avg_out, frozen=(), seed=0,
+        max_parts=1, min_cout=2, boundary_frac=0.0):
+    """Coordinate-descent over channel widths with random restarts.
+
+    `max_parts` encodes the paper's deployment constraint: the model must be
+    splittable over that many MAX78000s (Workload 3/4 run EfficientNetV2 /
+    MobileNetV2 over four devices; everything else fits one device).
+    `min_cout` prevents degenerate bottleneck layers: without it the search
+    happily inserts near-zero-width layers that make model splitting
+    communication-free, which contradicts the paper's measured boundary
+    costs (Fig. 8).
+    """
+    rng = random.Random(seed)
+    tunable = [
+        i for i, l in enumerate(template) if l.kind in ("conv", "convt") and i not in frozen
+    ]
+
+    def err(layers):
+        s, a = sizes(inp, layers)
+        e = abs(s - target_size) / target_size + abs(a - target_avg_out) / target_avg_out
+        if not deployable(inp, layers, max_parts):
+            e += 10.0
+        # Boundary floor: split boundaries (every layer output except the
+        # model's final one) must not collapse below a fraction of the
+        # average output — real CNNs keep h·w·c roughly level as pooling
+        # halves resolution, and degenerate bottlenecks would make model
+        # splitting communication-free, contradicting Fig. 8.
+        floor = boundary_frac * target_avg_out
+        if floor > 0:
+            hs = shapes(inp, layers)
+            for (h, w, c) in hs[1:-1]:
+                out = h * w * c
+                if out < floor:
+                    e += 0.8 * (1.0 - out / floor)
+        return e
+
+    best, best_err = None, float("inf")
+    for _ in range(60):
+        layers = [
+            replace(l, cout=l.cout if i in frozen or l.kind not in ("conv", "convt")
+                    else max(min_cout, int(l.cout * rng.uniform(0.5, 2.0))))
+            for i, l in enumerate(template)
+        ]
+        cur = err(layers)
+        improved = True
+        while improved:
+            improved = False
+            for i in tunable:
+                for delta in (-8, -4, -2, -1, 1, 2, 4, 8):
+                    cand = layers.copy()
+                    c = max(min_cout, layers[i].cout + delta)
+                    cand[i] = replace(layers[i], cout=c)
+                    e = err(cand)
+                    if e < cur:
+                        layers, cur, improved = cand, e, True
+        if cur < best_err:
+            best, best_err = layers, cur
+    s, a = sizes(inp, best)
+    print(
+        f"{name:16s} L={len(best):3d} size={s:8d} (target {target_size:8d}, "
+        f"{100*(s/target_size-1):+5.1f}%) avg_out={a:9.0f} (target {target_avg_out:9.0f}, "
+        f"{100*(a/target_avg_out-1):+5.1f}%)"
+    )
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="archs.json")
+    args = ap.parse_args()
+
+    conv = lambda cout, pool=1, k=3, res=False: L("conv", k, pool, cout, res)
+    dw = lambda pool=1, k=3: L("dw", k, pool, 0)
+    convt = lambda cout, k=3: L("convt", k, 1, cout)
+    lin = lambda cout: L("linear", 1, 1, cout)
+
+    zoo = {}
+
+    # ConvNet5 — MNIST-class, 5 layers (ai8x mnist net shape).
+    zoo["ConvNet5"] = dict(
+        input=(28, 28, 1),
+        layers=fit(
+            "ConvNet5", (28, 28, 1),
+            [conv(64), conv(24), conv(32, pool=2), conv(56, pool=2), conv(12, pool=2)],
+            71158, 14031, min_cout=8,
+        ),
+    )
+
+    # ResSimpleNet — 14 layers with residual units (paper cites ResNet).
+    zoo["ResSimpleNet"] = dict(
+        input=(32, 32, 3),
+        layers=fit(
+            "ResSimpleNet", (32, 32, 3),
+            [conv(16), conv(20, res=True), conv(20, res=True), conv(20, pool=2),
+             conv(40, res=True), conv(40, res=True), conv(40, pool=2),
+             conv(60, res=True), conv(60, res=True), conv(60, pool=2),
+             conv(90, res=True), conv(90), conv(120), lin(10)],
+            381792, 11217, min_cout=8,
+        ),
+    )
+
+    # UNet — 19 layers, hourglass (48×48×48 in/high-res out; avg out 74547
+    # implies most maps stay near 48×48).
+    zoo["UNet"] = dict(
+        input=(48, 48, 48),
+        layers=fit(
+            "UNet", (48, 48, 48),
+            [conv(32), conv(32), conv(32), conv(40, pool=2), conv(40), conv(40),
+             conv(48, pool=2), conv(48), conv(48), conv(48),
+             convt(40), conv(40), conv(40), convt(32), conv(32), conv(32),
+             conv(32), conv(32), conv(16)],
+            279084, 74547, min_cout=16,
+        ),
+    )
+
+    # KWS — 9 layers, 128×128×1 spectrogram, heavy early pooling (avg out
+    # 7976 ≪ input 16384).
+    zoo["KWS"] = dict(
+        input=(128, 128, 1),
+        layers=fit(
+            "KWS", (128, 128, 1),
+            [conv(16, pool=4), conv(32, pool=2), conv(48, pool=2), conv(64),
+             conv(64, pool=2), conv(96), conv(96), conv(128, pool=2), lin(21)],
+            169472, 7976, min_cout=8,
+        ),
+    )
+
+    # SimpleNet — 14 layers (Hasanpour et al. downscaled for MAX78000).
+    zoo["SimpleNet"] = dict(
+        input=(32, 32, 3),
+        layers=fit(
+            "SimpleNet", (32, 32, 3),
+            [conv(16), conv(20), conv(20), conv(20, pool=2), conv(40), conv(40),
+             conv(40, pool=2), conv(60), conv(60, pool=2), conv(60), conv(90),
+             conv(90), conv(120), lin(10)],
+            166448, 9237, min_cout=8,
+        ),
+    )
+
+    # WideNet — SimpleNet with wider channels (same 14-layer template).
+    zoo["WideNet"] = dict(
+        input=(32, 32, 3),
+        layers=fit(
+            "WideNet", (32, 32, 3),
+            [conv(24), conv(30), conv(30), conv(30, pool=2), conv(60), conv(60),
+             conv(60, pool=2), conv(90), conv(90, pool=2), conv(90), conv(120),
+             conv(120), conv(160), lin(10)],
+            313700, 10091, min_cout=8,
+        ),
+    )
+
+    # EfficientNetV2 — 29 layers (§IV-C: "EfficientNet has 29 layers");
+    # avg out 66468 ≈ 32·32·65, so most maps remain high-res.
+    zoo["EfficientNetV2"] = dict(
+        input=(32, 32, 3),
+        layers=fit(
+            "EfficientNetV2", (32, 32, 3),
+            [conv(24)] +
+            [conv(24, res=True) for _ in range(4)] +
+            [conv(48)] + [conv(48, res=True) for _ in range(4)] +
+            [conv(64, pool=2)] + [conv(64, res=True) for _ in range(4)] +
+            [conv(96)] + [conv(96, res=True) for _ in range(4)] +
+            [conv(128, pool=2)] + [conv(128, res=True) for _ in range(4)] +
+            [conv(160), conv(176), conv(192), lin(100)],
+            627220, 66468, max_parts=3, min_cout=16,
+        ),
+    )
+
+    # MobileNetV2 — 28 units of inverted residual blocks
+    # (expand 1×1 → depthwise 3×3 → project 1×1); avg out 296318 ≈ 32·32·290,
+    # i.e. expansion maps dominate at full resolution.
+    mb_template = [conv(32)]
+    for cexp, cproj in [(192, 32), (192, 32), (288, 48), (288, 48),
+                        (288, 48), (384, 64), (384, 64), (384, 64)]:
+        # BN-folded expand/depthwise layers carry no bias (ai8x option).
+        mb_template += [
+            L("conv", 1, 1, cexp, False, bias=False),
+            L("dw", 3, 1, 0, False, bias=False),
+            conv(cproj, k=1, res=True),
+        ]
+    mb_template += [L("conv", 1, 1, 384, False, bias=False), conv(512, k=1), lin(100)]
+    zoo["MobileNetV2"] = dict(
+        input=(32, 32, 3),
+        layers=fit(
+            "MobileNetV2", (32, 32, 3), mb_template, 821164, 296318, max_parts=3, min_cout=4,
+        ),
+    )
+
+    # FaceID — not in Table I; used by the Fig. 2 microbenchmark
+    # (MAX78000 FaceID reference net: 160×120×3 → 512-d embedding).
+    zoo["FaceID"] = dict(
+        input=(160, 120, 3),
+        layers=fit(
+            "FaceID", (160, 120, 3),
+            [conv(16, pool=2), conv(32, pool=2), conv(32, pool=2), conv(64, pool=2),
+             conv(64), conv(64, pool=2), conv(64), lin(512)],
+            350000, 30000,
+        ),
+    )
+
+    out = {
+        name: {
+            "input": list(spec["input"]),
+            "layers": [
+                {
+                    "kind": l.kind,
+                    "k": l.k,
+                    "pool": l.pool,
+                    "cout": l.cout,
+                    "residual": l.residual,
+                    "bias": l.bias,
+                }
+                for l in spec["layers"]
+            ],
+        }
+        for name, spec in zoo.items()
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

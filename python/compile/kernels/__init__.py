@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracle (`ref`)."""
+
+from . import conv, ref  # noqa: F401

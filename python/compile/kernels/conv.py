@@ -1,0 +1,249 @@
+"""Layer-1 Pallas kernels — the compute hot-spot of every model layer.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the MAX78000's CNN
+accelerator is P=64 parallel per-channel processors fed from dedicated
+weight SRAM, with a convolution engine that consumes a K×K window per
+cycle. The TPU-style translation used here:
+
+- the per-channel processor array becomes an explicit **channel-block
+  axis**: input channels are padded and processed in blocks of `P`,
+  mirroring the `⌈C_in/P⌉` term of the paper's cycle model (Eq. 4–5);
+- "weights resident in SRAM, activations streamed" becomes the BlockSpec
+  schedule: the grid tiles **output channels** (each step's weight tile
+  maps whole into VMEM — every Table I model obeys the 442 KB budget by
+  construction) while activations are revisited per tile;
+- the K×K window reduction is expressed as K² shifted `dot_general`s over
+  the channel axis, i.e. matmuls that land on the MXU rather than a
+  scalar window walk.
+
+All kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the
+lowering path that feeds the rust runtime (see /opt/xla-example/README.md).
+Real-TPU efficiency is estimated from the block structure in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parallel channel lanes — P in the paper's Eq. 4–5 (64 on MAX78000/78002).
+P = 64
+
+# Output-channel tile per grid step (the "weights resident per pass" unit).
+COUT_TILE = 64
+
+
+def _pad_channels(x, multiple):
+    """Pad the trailing channel axis to a multiple of `multiple`."""
+    c = x.shape[-1]
+    pad = (-c) % multiple
+    if pad == 0:
+        return x
+    width = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, width)
+
+
+def maxpool2d(x, pool):
+    """Non-overlapping max pool by factor `pool` via a Pallas kernel."""
+    if pool == 1:
+        return x
+    h, w, c = x.shape
+    oh, ow = h // pool, w // pool
+    x = x[: oh * pool, : ow * pool, :]  # floor semantics, as in the zoo
+
+    def kernel(x_ref, o_ref):
+        v = x_ref[...]
+        v = v.reshape(oh, pool, ow, pool, c)
+        o_ref[...] = v.max(axis=(1, 3))
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, k, cin_blocks, relu):
+    """One output-channel tile of a 'same' stride-1 conv.
+
+    x_ref: (H+k-1, W+k-1, cin_blocks·P) pre-padded input
+    w_ref: (k, k, cin_blocks·P, T) weight tile
+    b_ref: (T,) bias tile
+    o_ref: (H, W, T)
+    """
+    h, w, t = o_ref.shape
+    acc = jnp.zeros((h, w, t), jnp.float32)
+    # K×K window as K² channel-contracting matmuls (MXU-friendly), with the
+    # channel-block loop mirroring the accelerator's ⌈C_in/P⌉ passes.
+    for blk in range(cin_blocks):
+        c0 = blk * P
+        for kh in range(k):
+            for kw in range(k):
+                xs = x_ref[kh : kh + h, kw : kw + w, c0 : c0 + P]
+                ws = w_ref[kh, kw, c0 : c0 + P, :]
+                acc += jax.lax.dot_general(
+                    xs.astype(jnp.float32),
+                    ws.astype(jnp.float32),
+                    (((2,), (0,)), ((), ())),
+                )
+    acc += b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv2d(x, w, b=None, relu=True):
+    """'same' stride-1 conv. x: (H, W, Cin); w: (K, K, Cin, Cout)."""
+    h, w_sp, cin = x.shape
+    k = w.shape[0]
+    cout = w.shape[3]
+    assert w.shape == (k, k, cin, cout), w.shape
+
+    xp = _pad_channels(x, P)
+    wp = _pad_channels(jnp.moveaxis(w, 3, 0), P)  # (Cout, K, K, Cin·)
+    wp = jnp.moveaxis(wp, 0, 3)  # (K, K, Cin·, Cout)
+    cin_blocks = xp.shape[-1] // P
+    pad = k // 2
+    xp = jnp.pad(xp, ((pad, pad), (pad, pad), (0, 0)))
+
+    # Tile output channels; pad Cout so the grid divides evenly.
+    wp = jnp.pad(wp, ((0, 0), (0, 0), (0, 0), (0, (-cout) % COUT_TILE)))
+    bias = jnp.zeros(wp.shape[3], jnp.float32)
+    if b is not None:
+        bias = bias.at[:cout].set(b.astype(jnp.float32))
+    tiles = wp.shape[3] // COUT_TILE
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, k=k, cin_blocks=cin_blocks, relu=relu),
+        grid=(tiles,),
+        in_specs=[
+            # Activations revisited per output tile (index_map → block 0).
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            # One weight tile per step — the VMEM-resident unit.
+            pl.BlockSpec(
+                (k, k, cin_blocks * P, COUT_TILE), lambda i: (0, 0, 0, i)
+            ),
+            pl.BlockSpec((COUT_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((h, w_sp, COUT_TILE), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((h, w_sp, wp.shape[3]), x.dtype),
+        interpret=True,
+    )(xp, wp, bias)
+    return out[:, :, :cout]
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, k, relu):
+    """One P-channel block of a depthwise 'same' conv."""
+    h, w, c = o_ref.shape
+    acc = jnp.zeros((h, w, c), jnp.float32)
+    for kh in range(k):
+        for kw in range(k):
+            xs = x_ref[kh : kh + h, kw : kw + w, :]
+            acc += xs.astype(jnp.float32) * w_ref[kh, kw, :].astype(jnp.float32)
+    acc += b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def depthwise_conv2d(x, w, b=None, relu=True):
+    """Depthwise 'same' conv. x: (H, W, C); w: (K, K, C).
+
+    Each channel belongs to exactly one processor lane, so the grid tiles
+    channels in blocks of P — the accelerator's parallel axis.
+    """
+    h, w_sp, c = x.shape
+    k = w.shape[0]
+    assert w.shape == (k, k, c), w.shape
+
+    xp = _pad_channels(x, P)
+    wp = _pad_channels(w, P)
+    bias = jnp.zeros(xp.shape[-1], jnp.float32)
+    if b is not None:
+        bias = bias.at[:c].set(b.astype(jnp.float32))
+    pad = k // 2
+    xp = jnp.pad(xp, ((pad, pad), (pad, pad), (0, 0)))
+    blocks = wp.shape[-1] // P
+
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, k=k, relu=relu),
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((h + 2 * pad, w_sp + 2 * pad, P), lambda i: (0, 0, i)),
+            pl.BlockSpec((k, k, P), lambda i: (0, 0, i)),
+            pl.BlockSpec((P,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((h, w_sp, P), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((h, w_sp, wp.shape[-1]), x.dtype),
+        interpret=True,
+    )(xp, wp, bias)
+    return out[:, :, :c]
+
+
+def conv_transpose2d(x, w, b=None, relu=True):
+    """2× transpose conv: Pallas zero-insertion upsample, then `conv2d`."""
+    h, w_sp, c = x.shape
+
+    def upsample_kernel(x_ref, o_ref):
+        v = jnp.zeros((2 * h, 2 * w_sp, c), x_ref.dtype)
+        o_ref[...] = v.at[::2, ::2, :].set(x_ref[...])
+
+    up = pl.pallas_call(
+        upsample_kernel,
+        out_shape=jax.ShapeDtypeStruct((2 * h, 2 * w_sp, c), x.dtype),
+        interpret=True,
+    )(x)
+    return conv2d(up, w, b, relu)
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, cin_blocks, relu):
+    """Fully connected as channel-blocked dot products."""
+    f = x_ref.shape[0]
+    acc = jnp.zeros((o_ref.shape[-1],), jnp.float32)
+    blk = f // cin_blocks
+    for i in range(cin_blocks):
+        acc += x_ref[i * blk : (i + 1) * blk].astype(jnp.float32) @ w_ref[
+            i * blk : (i + 1) * blk, :
+        ].astype(jnp.float32)
+    acc += b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def linear(x, w, b=None, relu=False):
+    """Fully connected over the flattened input. w: (F_in, F_out)."""
+    f_in, f_out = w.shape
+    flat = x.reshape(-1)
+    assert flat.shape[0] == f_in, (flat.shape, w.shape)
+    flat = _pad_channels(flat, P)
+    wp = jnp.pad(w, ((0, flat.shape[0] - f_in), (0, 0)))
+    bias = (b if b is not None else jnp.zeros(f_out)).astype(jnp.float32)
+    cin_blocks = flat.shape[0] // P
+
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, cin_blocks=cin_blocks, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((1, 1, f_out), x.dtype),
+        interpret=True,
+    )(flat, wp, bias)
+    return out
+
+
+def layer_unit(x, spec, w, b):
+    """One splittable layer unit: pool → op (+ ReLU except final linear).
+
+    Mirrors `ref.layer_unit` but on the Pallas kernels.
+    """
+    x = maxpool2d(x, spec["pool"])
+    kind = spec["kind"]
+    if kind == "conv":
+        return conv2d(x, w, b)
+    if kind == "dw":
+        return depthwise_conv2d(x, w, b)
+    if kind == "convt":
+        return conv_transpose2d(x, w, b)
+    if kind == "linear":
+        return linear(x, w, b)
+    raise ValueError(f"unknown layer kind {kind!r}")

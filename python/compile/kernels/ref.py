@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the Pallas kernels — the correctness ground truth.
+
+Every kernel in `conv.py` must match these to float tolerance; pytest +
+hypothesis sweep shapes/dtypes against them (python/tests/test_kernels.py).
+
+Layer semantics mirror the MAX78000/ai8x conventions used across the repo
+(see rust/src/model/layer.rs): optional max-pool *before* the op, 'same'
+padding, stride-1 convs, 2× transpose-conv upsampling, ReLU folded into the
+layer except for the final linear. Tensors are unbatched (H, W, C) —
+wearable inference is batch-1 by nature.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def maxpool2d(x, pool):
+    """Non-overlapping max pool by factor `pool` (1 = identity)."""
+    if pool == 1:
+        return x
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(pool, pool, 1),
+        window_strides=(pool, pool, 1),
+        padding="VALID",
+    )
+
+
+def conv2d(x, w, b=None, relu=True):
+    """'same' stride-1 conv. x: (H, W, Cin); w: (K, K, Cin, Cout)."""
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        out = out + b
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def depthwise_conv2d(x, w, b=None, relu=True):
+    """Depthwise 'same' conv. x: (H, W, C); w: (K, K, C)."""
+    c = x.shape[-1]
+    out = lax.conv_general_dilated(
+        x[None],
+        w[:, :, None, :],  # (K, K, 1, C) with feature_group_count=C
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )[0]
+    if b is not None:
+        out = out + b
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def conv_transpose2d(x, w, b=None, relu=True):
+    """2× upsampling transpose conv as zero-insertion + 'same' conv.
+
+    x: (H, W, Cin) → (2H, 2W, Cout); w: (K, K, Cin, Cout).
+    """
+    h, w_, c = x.shape
+    up = jnp.zeros((2 * h, 2 * w_, c), x.dtype).at[::2, ::2, :].set(x)
+    return conv2d(up, w, b, relu)
+
+
+def linear(x, w, b=None, relu=False):
+    """Fully connected over the flattened input. w: (F_in, F_out)."""
+    out = x.reshape(-1) @ w
+    if b is not None:
+        out = out + b
+    out = jnp.maximum(out, 0.0) if relu else out
+    return out.reshape(1, 1, -1)
+
+
+def layer_unit(x, spec, w, b):
+    """One splittable layer unit: pool → op (+ ReLU except final linear)."""
+    x = maxpool2d(x, spec["pool"])
+    kind = spec["kind"]
+    if kind == "conv":
+        return conv2d(x, w, b)
+    if kind == "dw":
+        return depthwise_conv2d(x, w, b)
+    if kind == "convt":
+        return conv_transpose2d(x, w, b)
+    if kind == "linear":
+        return linear(x, w, b)
+    raise ValueError(f"unknown layer kind {kind!r}")

@@ -1,0 +1,93 @@
+"""Layer-2: JAX forward passes for the model zoo, built on the L1 kernels.
+
+A model (or any contiguous layer range — the unit of model splitting) is a
+pure function `activation -> activation` with deterministic weights derived
+from the model name and layer index, so the rust runtime, the oracle, and
+every AOT chunk agree on parameters without shipping checkpoints.
+
+Python never runs at serving time: `aot.py` lowers these functions to HLO
+text once, and the rust coordinator executes the artifacts via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import archs
+from .kernels import conv as pallas_kernels
+from .kernels import ref as ref_kernels
+
+
+def _layer_params(name, l):
+    """Deterministic (weight, bias) for layer `l` of model `name`.
+
+    He-style scaling keeps activations O(1) through deep ReLU chains.
+    """
+    spec = archs.layers(name)[l]
+    h, w, c = archs.in_shapes(name)[l]
+    ph, pw = h // spec["pool"], w // spec["pool"]
+    k = spec["k"]
+    kind = spec["kind"]
+    key = jax.random.PRNGKey(abs(hash((name, l))) % (2**31))
+    kw, kb = jax.random.split(key)
+    if kind == "conv" or kind == "convt":
+        shape = (k, k, c, spec["cout"])
+        fan_in = k * k * c
+    elif kind == "dw":
+        shape = (k, k, c)
+        fan_in = k * k
+    elif kind == "linear":
+        shape = (ph * pw * c, spec["cout"])
+        fan_in = ph * pw * c
+    else:
+        raise ValueError(kind)
+    weight = jax.random.normal(kw, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+    oc = archs.out_shapes(name)[l][2]
+    bias = (
+        jax.random.normal(kb, (oc,), jnp.float32) * 0.01
+        if spec.get("bias", True)
+        else None
+    )
+    return weight, bias
+
+
+def params_for_range(name, start, end):
+    """Parameters for layers [start, end) of a model."""
+    return [_layer_params(name, l) for l in range(start, end)]
+
+
+def forward_range(name, start, end, x, kernels=pallas_kernels):
+    """Run layers [start, end) of `name` on activation `x`.
+
+    `kernels` selects the implementation: the Pallas kernels (default, the
+    lowering path) or `ref_kernels` (the pure-jnp oracle).
+    """
+    specs = archs.layers(name)
+    for l in range(start, end):
+        w, b = _layer_params(name, l)
+        x = kernels.layer_unit(x, specs[l], w, b)
+    return x
+
+
+def forward(name, x, kernels=pallas_kernels):
+    """Full-model forward."""
+    return forward_range(name, 0, len(archs.layers(name)), x, kernels)
+
+
+def forward_range_ref(name, start, end, x):
+    """Oracle forward for layers [start, end)."""
+    return forward_range(name, start, end, x, kernels=ref_kernels)
+
+
+def chunk_fn(name, start, end):
+    """A jit-able single-argument function for one model chunk — the unit
+    `aot.py` lowers to an HLO artifact."""
+
+    def fn(x):
+        return (forward_range(name, start, end, x),)
+
+    return fn
+
+
+def chunk_input_shape(name, start):
+    """The activation shape feeding layer `start`."""
+    return archs.in_shapes(name)[start]

@@ -1,0 +1,103 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and the channel-padding boundary around P=64);
+assert_allclose is the core correctness signal for the lowering path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def arr(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype("float32"))
+
+
+dims = st.integers(min_value=1, max_value=12)
+chans = st.sampled_from([1, 2, 3, 5, 16, 63, 64, 65, 100])
+kernel_sizes = st.sampled_from([1, 3])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@given(h=dims, w=dims, cin=chans, cout=st.sampled_from([1, 4, 17, 64, 80]),
+       k=kernel_sizes, relu=st.booleans(), seed=seeds)
+def test_conv2d_matches_ref(h, w, cin, cout, k, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (h, w, cin))
+    wt = arr(rng, (k, k, cin, cout))
+    b = arr(rng, (cout,))
+    got = conv.conv2d(x, wt, b, relu=relu)
+    want = ref.conv2d(x, wt, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(h=dims, w=dims, c=chans, k=kernel_sizes, relu=st.booleans(), seed=seeds)
+def test_depthwise_matches_ref(h, w, c, k, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (h, w, c))
+    wt = arr(rng, (k, k, c))
+    b = arr(rng, (c,))
+    got = conv.depthwise_conv2d(x, wt, b, relu=relu)
+    want = ref.depthwise_conv2d(x, wt, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(h=dims, w=dims, cin=chans, cout=st.sampled_from([1, 4, 32]),
+       seed=seeds)
+def test_conv_transpose_matches_ref(h, w, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (h, w, cin))
+    wt = arr(rng, (3, 3, cin, cout))
+    b = arr(rng, (cout,))
+    got = conv.conv_transpose2d(x, wt, b)
+    want = ref.conv_transpose2d(x, wt, b)
+    assert got.shape == (2 * h, 2 * w, cout)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(h=st.integers(2, 16), w=st.integers(2, 16), c=st.sampled_from([1, 3, 64]),
+       pool=st.sampled_from([1, 2, 4]), seed=seeds)
+def test_maxpool_matches_ref(h, w, c, pool, seed):
+    if h < pool or w < pool:
+        return
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (h, w, c))
+    got = conv.maxpool2d(x, pool)
+    want = ref.maxpool2d(x[: (h // pool) * pool, : (w // pool) * pool, :], pool)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@given(h=dims, w=dims, c=st.sampled_from([1, 3, 16]),
+       fout=st.sampled_from([1, 10, 100]), relu=st.booleans(), seed=seeds)
+def test_linear_matches_ref(h, w, c, fout, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (h, w, c))
+    wt = arr(rng, (h * w * c, fout))
+    b = arr(rng, (fout,))
+    got = conv.linear(x, wt, b, relu=relu)
+    want = ref.linear(x, wt, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_no_bias_paths():
+    rng = np.random.default_rng(7)
+    x = arr(rng, (6, 6, 3))
+    wt = arr(rng, (3, 3, 3, 8))
+    np.testing.assert_allclose(
+        conv.conv2d(x, wt, None), ref.conv2d(x, wt, None), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_channel_padding_is_invisible():
+    """Channels just past the P boundary must not leak padded zeros."""
+    rng = np.random.default_rng(11)
+    x = arr(rng, (4, 4, 65))
+    wt = arr(rng, (3, 3, 65, 2))
+    np.testing.assert_allclose(
+        conv.conv2d(x, wt, None), ref.conv2d(x, wt, None), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,61 @@
+"""Manifest consistency: artifacts/manifest.json (if built) must agree with
+the archs.json math — the cross-check that keeps the Python build path and
+the rust zoo from drifting (DESIGN.md §4)."""
+
+import json
+import os
+
+import pytest
+
+from compile import archs
+
+MANIFEST = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts", "manifest.json"
+)
+
+needs_manifest = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@needs_manifest
+def test_manifest_models_and_layer_counts():
+    m = json.load(open(MANIFEST))
+    for name in m:
+        assert name in archs.ARCHS
+        assert len(m[name]["layers"]) == len(archs.layers(name))
+        assert tuple(m[name]["input"]) == archs.input_shape(name)
+
+
+@needs_manifest
+def test_manifest_sizes_and_cycles_match_archs():
+    m = json.load(open(MANIFEST))
+    for name, entry in m.items():
+        for l, meta in enumerate(entry["layers"]):
+            wt, bias = archs.weight_bias_bytes(name, l)
+            assert meta["weight_bytes"] == wt, (name, l)
+            assert meta["bias_bytes"] == bias, (name, l)
+            assert meta["cycles_accel_p64"] == archs.accel_cycles(name, l), (name, l)
+            assert tuple(meta["out_shape"]) == archs.out_shapes(name)[l], (name, l)
+
+
+@needs_manifest
+def test_manifest_artifact_files_exist():
+    m = json.load(open(MANIFEST))
+    base = os.path.dirname(MANIFEST)
+    for name, entry in m.items():
+        assert os.path.exists(os.path.join(base, entry["artifacts"]["full"])), name
+        for chunk in entry["artifacts"]["chunks"]:
+            assert os.path.exists(os.path.join(base, chunk["file"])), chunk
+
+
+@needs_manifest
+def test_chunk_shapes_chain():
+    m = json.load(open(MANIFEST))
+    for name, entry in m.items():
+        n = len(entry["layers"])
+        chunks = entry["artifacts"]["chunks"]
+        by_range = {(c["start"], c["end"]): c for c in chunks}
+        for s in entry["split_points"]:
+            head, tail = by_range[(0, s)], by_range[(s, n)]
+            assert head["out_shape"] == tail["in_shape"], (name, s)

@@ -1,0 +1,92 @@
+"""L2 correctness: model zoo shapes, Pallas==oracle forwards, and the
+split-composition property that underwrites model splitting (§IV-C)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs, model
+from compile.kernels import ref
+
+TABLE1_SIZES = {
+    "ConvNet5": 71158,
+    "ResSimpleNet": 381792,
+    "UNet": 279084,
+    "KWS": 169472,
+    "SimpleNet": 166448,
+    "WideNet": 313700,
+    "EfficientNetV2": 627220,
+    "MobileNetV2": 821164,
+}
+
+TABLE1_LAYERS = {"KWS": 9, "SimpleNet": 14, "UNet": 19, "EfficientNetV2": 29}
+
+
+def x_for(name, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=archs.input_shape(name)).astype("float32"))
+
+
+@pytest.mark.parametrize("name", archs.TABLE1)
+def test_zoo_sizes_match_table1(name):
+    total = sum(
+        sum(archs.weight_bias_bytes(name, l)) for l in range(len(archs.layers(name)))
+    )
+    assert abs(total - TABLE1_SIZES[name]) / TABLE1_SIZES[name] < 0.005
+
+
+@pytest.mark.parametrize("name,expect", sorted(TABLE1_LAYERS.items()))
+def test_paper_layer_counts(name, expect):
+    assert len(archs.layers(name)) == expect
+
+
+@pytest.mark.parametrize("name", ["ConvNet5", "KWS", "SimpleNet"])
+def test_ref_forward_shapes(name):
+    y = model.forward(name, x_for(name), kernels=ref)
+    assert tuple(y.shape) == archs.out_shapes(name)[-1]
+
+
+@pytest.mark.parametrize("name", ["ConvNet5", "SimpleNet"])
+def test_pallas_forward_matches_ref(name):
+    x = x_for(name)
+    y_pallas = model.forward(name, x)
+    y_ref = model.forward(name, x, kernels=ref)
+    np.testing.assert_allclose(y_pallas, y_ref, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("name,cut", [("ConvNet5", 2), ("KWS", 4), ("SimpleNet", 7)])
+def test_split_composes_to_full(name, cut):
+    """Chunk(0,cut) ∘ Chunk(cut,L) == full model — the invariant that makes
+    layer-wise splitting across accelerators semantically free."""
+    x = x_for(name)
+    n = len(archs.layers(name))
+    full = model.forward_range(name, 0, n, x, kernels=ref)
+    mid = model.forward_range(name, 0, cut, x, kernels=ref)
+    composed = model.forward_range(name, cut, n, mid, kernels=ref)
+    np.testing.assert_allclose(composed, full, rtol=1e-5, atol=1e-6)
+
+
+def test_weights_are_deterministic():
+    a, _ = model._layer_params("KWS", 3)
+    b, _ = model._layer_params("KWS", 3)
+    np.testing.assert_array_equal(a, b)
+    c, _ = model._layer_params("KWS", 4)
+    assert a.shape != c.shape or not np.array_equal(a, c)
+
+
+def test_every_zoo_model_has_consistent_shape_chain():
+    for name in archs.ARCHS:
+        ins = archs.in_shapes(name)
+        outs = archs.out_shapes(name)
+        assert len(ins) == len(outs) == len(archs.layers(name))
+        assert ins[1:] == outs[:-1]
+
+
+def test_bias_free_layers_have_zero_bias_bytes():
+    # MobileNetV2's expansion/depthwise layers are BN-folded, bias-free.
+    name = "MobileNetV2"
+    flags = [l.get("bias", True) for l in archs.layers(name)]
+    assert not all(flags), "expected some bias-free layers"
+    for l, has in enumerate(flags):
+        _, bias = archs.weight_bias_bytes(name, l)
+        assert (bias > 0) == has

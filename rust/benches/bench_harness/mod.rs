@@ -1,0 +1,40 @@
+//! Minimal benchmarking harness (criterion is not vendored; the bench
+//! targets set `harness = false`). Median-of-N wall-clock with warmup,
+//! printed in a stable, grep-friendly format:
+//!
+//!   bench <name>  median <t>  min <t>  iters <n>
+
+use std::time::Instant;
+
+/// Time `f`, returning seconds.
+pub fn time_once<T>(f: &mut impl FnMut() -> T) -> f64 {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(out);
+    dt
+}
+
+fn fmt(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3} s")
+    } else if t >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else {
+        format!("{:.1} µs", t * 1e6)
+    }
+}
+
+/// Run a benchmark: 1 warmup + `iters` timed runs; prints median and min.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
+    let _ = time_once(&mut f); // warmup
+    let mut samples: Vec<f64> = (0..iters.max(1)).map(|_| time_once(&mut f)).collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    println!(
+        "bench {name:<44} median {:>10}  min {:>10}  iters {}",
+        fmt(median),
+        fmt(samples[0]),
+        samples.len()
+    );
+}

@@ -1,0 +1,87 @@
+//! Hot-path micro/macro benchmarks (deliverable (e)): the planner's inner
+//! loops and the DES, which dominate orchestration cost. Targets recorded
+//! in EXPERIMENTS.md §Perf.
+
+mod bench_harness;
+
+use bench_harness::bench;
+use synergy::estimator::{estimate_plan, EstimateAccum, LatencyModel};
+use synergy::model::zoo::{model_by_name, ModelName};
+use synergy::orchestrator::{oracle::oracle_search, Objective, Planner, Synergy};
+use synergy::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use synergy::plan::{enumerate_plans, EnumerateCfg};
+use synergy::scheduler::{simulate, GroundTruth, Policy, SimConfig};
+use synergy::workload::{fleet4, fleet_n, workload};
+
+fn main() {
+    let fleet = fleet4();
+
+    // Plan enumeration per model class (§IV-C inner loop).
+    for m in [ModelName::KWS, ModelName::UNet, ModelName::EfficientNetV2] {
+        let p = PipelineSpec::new(
+            0,
+            m.as_str(),
+            SourceReq::Any,
+            model_by_name(m).clone(),
+            TargetReq::Any,
+        );
+        bench(&format!("enumerate/{m}x4dev"), 10, || {
+            enumerate_plans(&p, &fleet, EnumerateCfg::default()).len()
+        });
+    }
+
+    // Single-candidate estimation (the progressive search's inner call).
+    {
+        let w = workload(1);
+        let lm = LatencyModel::new(&fleet);
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let mut accum = EstimateAccum::new(&fleet);
+        accum.add_plan(&plan.plans[0], &w.pipelines[0], &fleet, &lm);
+        bench("estimate/peek-one-candidate", 200, || {
+            accum.peek(&plan.plans[2], &w.pipelines[2], &fleet, &lm).throughput
+        });
+        bench("estimate/full-plan", 200, || {
+            estimate_plan(&plan, &w.pipelines, &fleet, &lm).throughput
+        });
+    }
+
+    // Holistic orchestration per workload (the moderator-visible latency).
+    for wid in 1..=4 {
+        let w = workload(wid);
+        bench(&format!("orchestrate/workload{wid}"), 5, || {
+            Synergy::planner().plan(&w.pipelines, &fleet).unwrap()
+        });
+    }
+
+    // Complete search on the Fig. 9 instance class.
+    {
+        let ps: Vec<PipelineSpec> = [ModelName::KWS, ModelName::ConvNet5]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                PipelineSpec::new(i, m.as_str(), SourceReq::Any, model_by_name(m).clone(), TargetReq::Any)
+            })
+            .collect();
+        let f2 = fleet_n(2);
+        bench("oracle/2pipelines-2dev", 3, || {
+            oracle_search(&ps, &f2, Objective::TputMax, EnumerateCfg::default()).best_score
+        });
+    }
+
+    // DES throughput (events/s) on the heaviest workload.
+    {
+        let w = workload(1);
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let gt = GroundTruth::with_seed(7);
+        bench("simulate/workload1-48rounds", 5, || {
+            simulate(
+                &plan,
+                &w.pipelines,
+                &fleet,
+                &gt,
+                SimConfig { runs: 48, warmup: 8, policy: Policy::atp(), record_trace: false },
+            )
+            .throughput
+        });
+    }
+}

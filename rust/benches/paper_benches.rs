@@ -1,0 +1,31 @@
+//! End-to-end benchmarks: one per paper table/figure (deliverable (d)).
+//! Each bench regenerates the corresponding experiment's data, so `cargo
+//! bench` both times the harness and re-exercises every reproduction
+//! end-to-end. `--full` is intentionally NOT used here — fig9 runs its
+//! sampled sweep to keep bench time sane.
+
+mod bench_harness;
+
+use bench_harness::bench;
+use synergy::experiments;
+use synergy::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        [
+            "--runs".to_string(),
+            "16".to_string(),
+            "--combos".to_string(),
+            "6".to_string(),
+        ],
+        &["runs", "combos"],
+    );
+    for e in experiments::registry() {
+        let iters = match e.id {
+            // The Oracle sweep is the heavy one.
+            "fig9" => 1,
+            _ => 3,
+        };
+        bench(&format!("exp/{}", e.id), iters, || (e.runner)(&args));
+    }
+}

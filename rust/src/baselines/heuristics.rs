@@ -1,0 +1,192 @@
+//! Heuristic baselines (§VI-A2): MinDev, MaxDev, PriMinDev, PriMaxDev.
+//!
+//! All four account for the resource usage of previously selected plans
+//! (like Synergy) but rank candidates with fixed structural heuristics
+//! instead of throughput estimation:
+//!
+//! - **MinDev** — fewest inference devices (avoid splitting), rationale:
+//!   fewer devices ⇒ less communication.
+//! - **MaxDev** — split across *all* available accelerators, rationale:
+//!   more devices ⇒ more parallelism.
+//! - **PriMinDev** — MinDev plus smarter tie-breaking: minimize
+//!   intermediate output sizes and prefer MAX78002 over MAX78000.
+//! - **PriMaxDev** — the same prioritization over all-device splits.
+
+use crate::device::Fleet;
+use crate::pipeline::PipelineSpec;
+use crate::plan::collab::MemoryLedger;
+use crate::plan::{enumerate_plans, CollabPlan, EnumerateCfg, ExecutionPlan};
+
+use super::weight_share_on_78002;
+use crate::orchestrator::{PlanError, Planner};
+
+/// Ranking rule shared by the four heuristics. Lower key wins.
+#[derive(Clone, Copy, Debug)]
+enum Rank {
+    MinDev,
+    MaxDev,
+    PriMinDev,
+    PriMaxDev,
+}
+
+impl Rank {
+    fn key(&self, ep: &ExecutionPlan, spec: &PipelineSpec, fleet: &Fleet) -> (f64, f64, f64) {
+        let ndev = ep.num_infer_devices() as f64;
+        let radio = ep.radio_bytes(&spec.model) as f64;
+        let share02 = weight_share_on_78002(ep, spec, fleet);
+        match self {
+            Rank::MinDev => (ndev, radio, 0.0),
+            Rank::MaxDev => (-ndev, radio, 0.0),
+            Rank::PriMinDev => (ndev, -share02, radio),
+            Rank::PriMaxDev => (-ndev, -share02, radio),
+        }
+    }
+}
+
+fn plan_with_rank(
+    rank: Rank,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+) -> Result<CollabPlan, PlanError> {
+    let mut ledger = MemoryLedger::default();
+    let mut out = Vec::with_capacity(pipelines.len());
+    for spec in pipelines {
+        if spec.source_candidates(fleet).is_empty() || spec.target_candidates(fleet).is_empty() {
+            return Err(PlanError::Unsatisfiable { pipeline: spec.name.clone() });
+        }
+        let candidates = enumerate_plans(spec, fleet, EnumerateCfg::default());
+        let chosen = candidates
+            .into_iter()
+            .filter(|c| ledger.fits(c, &spec.model, fleet))
+            .min_by(|a, b| {
+                rank.key(a, spec, fleet)
+                    .partial_cmp(&rank.key(b, spec, fleet))
+                    .unwrap()
+            })
+            .ok_or_else(|| PlanError::Oor { pipeline: spec.name.clone() })?;
+        ledger.commit(&chosen, &spec.model);
+        out.push(chosen);
+    }
+    Ok(CollabPlan::new(out))
+}
+
+macro_rules! heuristic_planner {
+    ($name:ident, $rank:expr, $label:literal) => {
+        #[doc = concat!("The ", $label, " baseline.")]
+        #[derive(Clone, Copy, Debug, Default)]
+        pub struct $name;
+
+        impl Planner for $name {
+            fn name(&self) -> &'static str {
+                $label
+            }
+
+            fn plan(
+                &self,
+                pipelines: &[PipelineSpec],
+                fleet: &Fleet,
+            ) -> Result<CollabPlan, PlanError> {
+                plan_with_rank($rank, pipelines, fleet)
+            }
+        }
+    };
+}
+
+heuristic_planner!(MinDev, Rank::MinDev, "MinDev");
+heuristic_planner!(MaxDev, Rank::MaxDev, "MaxDev");
+heuristic_planner!(PriMinDev, Rank::PriMinDev, "PriMinDev");
+heuristic_planner!(PriMaxDev, Rank::PriMaxDev, "PriMaxDev");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::zoo::{model_by_name, ModelName};
+    use crate::pipeline::{SourceReq, TargetReq};
+
+    fn fleet(kinds: &[DeviceKind]) -> Fleet {
+        Fleet::new(
+            kinds
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| Device::new(i, format!("d{i}"), k, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn pipes(models: &[ModelName]) -> Vec<PipelineSpec> {
+        models
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                PipelineSpec::new(i, m.as_str(), SourceReq::Any, model_by_name(m).clone(), TargetReq::Any)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mindev_avoids_splitting() {
+        let f = fleet(&[DeviceKind::Max78000; 3]);
+        let ps = pipes(&[ModelName::KWS]);
+        let plan = MinDev.plan(&ps, &f).unwrap();
+        assert_eq!(plan.plans[0].chunks.len(), 1);
+    }
+
+    #[test]
+    fn maxdev_splits_to_all_devices() {
+        let f = fleet(&[DeviceKind::Max78000; 3]);
+        let ps = pipes(&[ModelName::KWS]);
+        let plan = MaxDev.plan(&ps, &f).unwrap();
+        assert_eq!(plan.plans[0].num_infer_devices(), 3);
+    }
+
+    #[test]
+    fn primindev_packs_the_78002() {
+        // Three pipelines, one 78002 among 78000s: PriMinDev routes models
+        // to the big device until it fills (the Fig. 17 pathology).
+        let f = fleet(&[
+            DeviceKind::Max78000,
+            DeviceKind::Max78000,
+            DeviceKind::Max78000,
+            DeviceKind::Max78002,
+        ]);
+        let ps = pipes(&[ModelName::ConvNet5, ModelName::UNet, ModelName::EfficientNetV2]);
+        let plan = PriMinDev.plan(&ps, &f).unwrap();
+        for ep in &plan.plans {
+            assert_eq!(ep.chunks.len(), 1);
+            assert_eq!(
+                f.get(ep.chunks[0].device).spec.kind,
+                DeviceKind::Max78002,
+                "{ep}"
+            );
+        }
+        plan.check_runnable(&ps, &f).unwrap();
+    }
+
+    #[test]
+    fn heuristics_respect_joint_memory() {
+        // Two MobileNetV2 (821 KB each) over two MAX78000 + one MAX78002:
+        // whatever the heuristic, the result must be runnable.
+        let f = fleet(&[DeviceKind::Max78000, DeviceKind::Max78000, DeviceKind::Max78002]);
+        let ps = pipes(&[ModelName::MobileNetV2, ModelName::MobileNetV2]);
+        for planner in [&MinDev as &dyn Planner, &MaxDev, &PriMinDev, &PriMaxDev] {
+            match planner.plan(&ps, &f) {
+                Ok(plan) => plan.check_runnable(&ps, &f).unwrap(),
+                Err(PlanError::Oor { .. }) => {} // allowed: heuristic painted itself into a corner
+                Err(e) => panic!("{}: {e:?}", planner.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn overcommitment_is_oor_not_panic() {
+        let f = fleet(&[DeviceKind::Max78000]);
+        let ps = pipes(&[ModelName::MobileNetV2]);
+        for planner in [&MinDev as &dyn Planner, &MaxDev, &PriMinDev, &PriMaxDev] {
+            assert!(matches!(
+                planner.plan(&ps, &f),
+                Err(PlanError::Oor { .. })
+            ));
+        }
+    }
+}

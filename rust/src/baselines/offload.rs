@@ -1,0 +1,142 @@
+//! Smartphone offloading (§II-B): every model runs on the phone; raw
+//! sensor data streams from the source wearable to the phone and results
+//! stream back to the target wearable. The phone's compute is effectively
+//! free — the wearables' UART-bridged radios are the bottleneck, which is
+//! precisely the paper's argument for accelerator collaboration (Fig. 3/4).
+
+use crate::device::{DeviceId, DeviceKind, Fleet};
+use crate::pipeline::PipelineSpec;
+use crate::plan::{Assignment, CollabPlan, ExecutionPlan};
+use crate::scheduler::Policy;
+
+use crate::orchestrator::{PlanError, Planner};
+
+/// The phone-offloading comparator. The fleet must contain a
+/// [`DeviceKind::Phone`] device.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhoneOffload;
+
+impl PhoneOffload {
+    fn phone_id(fleet: &Fleet) -> Option<DeviceId> {
+        fleet
+            .devices
+            .iter()
+            .find(|d| d.spec.kind == DeviceKind::Phone)
+            .map(|d| d.id)
+    }
+
+    /// First source/target candidate that is a wearable (sensing and
+    /// interaction happen on the body, not on the phone).
+    fn wearable_endpoint(cands: &[DeviceId], _fleet: &Fleet, phone: DeviceId) -> Option<DeviceId> {
+        cands.iter().copied().find(|&d| d != phone).or_else(|| {
+            // Degenerate fleets (phone only) fall back to the phone itself.
+            cands.first().copied()
+        })
+    }
+}
+
+impl Planner for PhoneOffload {
+    fn name(&self) -> &'static str {
+        "PhoneOffload"
+    }
+
+    fn plan(&self, pipelines: &[PipelineSpec], fleet: &Fleet) -> Result<CollabPlan, PlanError> {
+        let phone = Self::phone_id(fleet).ok_or_else(|| PlanError::Unsatisfiable {
+            pipeline: "no phone in fleet".to_string(),
+        })?;
+        let mut out = Vec::with_capacity(pipelines.len());
+        for spec in pipelines {
+            let sources = spec.source_candidates(fleet);
+            let targets = spec.target_candidates(fleet);
+            let source = Self::wearable_endpoint(&sources, fleet, phone).ok_or_else(|| {
+                PlanError::Unsatisfiable { pipeline: spec.name.clone() }
+            })?;
+            let target = Self::wearable_endpoint(&targets, fleet, phone).ok_or_else(|| {
+                PlanError::Unsatisfiable { pipeline: spec.name.clone() }
+            })?;
+            out.push(ExecutionPlan {
+                pipeline: spec.id,
+                source_dev: source,
+                target_dev: target,
+                chunks: vec![Assignment { device: phone, range: spec.model.full() }],
+            });
+        }
+        Ok(CollabPlan::new(out))
+    }
+
+    /// Offloading gets the benefit of the doubt: fully parallel execution
+    /// on the phone side. The radio bottleneck dominates regardless.
+    fn exec_policy(&self) -> Policy {
+        Policy::atp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::model::zoo::{model_by_name, ModelName};
+    use crate::pipeline::{SourceReq, TargetReq};
+
+    fn fleet_with_phone() -> Fleet {
+        Fleet::new(vec![
+            Device::new(0, "earbud", DeviceKind::Max78000, vec![], vec![]),
+            Device::new(1, "ring", DeviceKind::Max78000, vec![], vec![]),
+            Device::new(2, "phone", DeviceKind::Phone, vec![], vec![]),
+        ])
+    }
+
+    #[test]
+    fn all_inference_lands_on_the_phone() {
+        let f = fleet_with_phone();
+        let ps = vec![PipelineSpec::new(
+            0,
+            "kws",
+            SourceReq::Device(DeviceId(0)),
+            model_by_name(ModelName::KWS).clone(),
+            TargetReq::Device(DeviceId(1)),
+        )];
+        let plan = PhoneOffload.plan(&ps, &f).unwrap();
+        let ep = &plan.plans[0];
+        assert_eq!(ep.chunks.len(), 1);
+        assert_eq!(ep.chunks[0].device, DeviceId(2));
+        assert_eq!(ep.source_dev, DeviceId(0));
+        assert_eq!(ep.target_dev, DeviceId(1));
+        // Raw input + result both cross the radio.
+        assert_eq!(
+            ep.radio_bytes(&ps[0].model),
+            ps[0].model.in_bytes() + ps[0].model.output().bytes()
+        );
+    }
+
+    #[test]
+    fn endpoints_avoid_the_phone_under_any() {
+        let f = fleet_with_phone();
+        let ps = vec![PipelineSpec::new(
+            0,
+            "x",
+            SourceReq::Any,
+            model_by_name(ModelName::ConvNet5).clone(),
+            TargetReq::Any,
+        )];
+        let plan = PhoneOffload.plan(&ps, &f).unwrap();
+        assert_ne!(plan.plans[0].source_dev, DeviceId(2));
+        assert_ne!(plan.plans[0].target_dev, DeviceId(2));
+    }
+
+    #[test]
+    fn no_phone_is_unsatisfiable() {
+        let f = Fleet::new(vec![Device::new(0, "d", DeviceKind::Max78000, vec![], vec![])]);
+        let ps = vec![PipelineSpec::new(
+            0,
+            "x",
+            SourceReq::Any,
+            model_by_name(ModelName::ConvNet5).clone(),
+            TargetReq::Any,
+        )];
+        assert!(matches!(
+            PhoneOffload.plan(&ps, &f),
+            Err(PlanError::Unsatisfiable { .. })
+        ));
+    }
+}

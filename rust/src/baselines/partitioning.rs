@@ -1,0 +1,274 @@
+//! Adapted state-of-the-art model-partitioning baselines (§VI-A2).
+//!
+//! - **IndModel** — Neurosurgeon/DADS/SPINN-class methods: each pipeline
+//!   independently picks the split minimizing *model-centric* latency.
+//!   No joint resource view → out-of-resource (OOR) collisions when the
+//!   independently chosen plans land on the same accelerator (Fig. 5a).
+//! - **JointModel** — IndModel plus a joint resource assessment (the JRC
+//!   ablation row of Table II): candidates that no longer fit are skipped.
+//!   Still model-centric: blind to source/target placement (Fig. 5b).
+//! - **IndE2E** — optimizes the full end-to-end chain (sensing → …  →
+//!   interaction) per pipeline, but independently: no joint memory view,
+//!   so it too can OOR under contention (it shines when resources are
+//!   plentiful — Fig. 17).
+
+use crate::device::Fleet;
+use crate::estimator::LatencyModel;
+use crate::pipeline::PipelineSpec;
+use crate::plan::collab::MemoryLedger;
+use crate::plan::{enumerate_plans, CollabPlan, EnumerateCfg};
+
+use super::{e2e_chain_latency, model_centric_latency};
+use crate::orchestrator::{PlanError, Planner};
+
+/// What the adapted partitioning methods minimize. `Latency` is their
+/// native objective; `Energy` is the Fig. 19 variant where every method
+/// instead prioritizes minimal power.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Cost {
+    #[default]
+    Latency,
+    Energy,
+}
+
+/// Independent model-centric partitioning (state of the art, single-model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IndModel {
+    pub cost: Cost,
+}
+
+/// IndModel with joint resource assessment (multi-tenant).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JointModel {
+    pub cost: Cost,
+}
+
+/// Independent end-to-end optimization (no joint resources).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IndE2E {
+    pub cost: Cost,
+}
+
+/// End-to-end optimization *with* joint resource assessment — the
+/// JRC+STT ablation row of Table II (not a named baseline in Fig. 15).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JointE2E {
+    pub cost: Cost,
+}
+
+/// Active energy of one pipeline's chain (for `Cost::Energy`).
+fn e2e_chain_energy(
+    ep: &crate::plan::ExecutionPlan,
+    spec: &PipelineSpec,
+    fleet: &Fleet,
+    lm: &LatencyModel,
+) -> f64 {
+    let mut acc = crate::estimator::EstimateAccum::new(fleet);
+    acc.add_plan(ep, spec, fleet, lm);
+    acc.finish().active_energy_j
+}
+
+fn best_by<F: FnMut(&crate::plan::ExecutionPlan) -> f64>(
+    spec: &PipelineSpec,
+    fleet: &Fleet,
+    mut cost: F,
+    ledger: Option<&MemoryLedger>,
+) -> Result<crate::plan::ExecutionPlan, PlanError> {
+    if spec.source_candidates(fleet).is_empty() || spec.target_candidates(fleet).is_empty() {
+        return Err(PlanError::Unsatisfiable { pipeline: spec.name.clone() });
+    }
+    let candidates = enumerate_plans(spec, fleet, EnumerateCfg::default());
+    candidates
+        .into_iter()
+        .filter(|c| ledger.map(|l| l.fits(c, &spec.model, fleet)).unwrap_or(true))
+        .map(|c| (cost(&c), c))
+        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .map(|(_, c)| c)
+        .ok_or_else(|| PlanError::Oor { pipeline: spec.name.clone() })
+}
+
+impl Planner for IndModel {
+    fn name(&self) -> &'static str {
+        "IndModel"
+    }
+
+    fn plan(&self, pipelines: &[PipelineSpec], fleet: &Fleet) -> Result<CollabPlan, PlanError> {
+        let lm = LatencyModel::new(fleet);
+        let mut out = Vec::with_capacity(pipelines.len());
+        for spec in pipelines {
+            // Independent decision: no ledger.
+            out.push(best_by(
+                spec,
+                fleet,
+                |c| match self.cost {
+                    Cost::Latency => model_centric_latency(c, spec, &lm),
+                    Cost::Energy => e2e_chain_energy(c, spec, fleet, &lm),
+                },
+                None,
+            )?);
+        }
+        let plan = CollabPlan::new(out);
+        // Aggregation can exceed joint capacity — the IndModel failure mode.
+        plan.check_runnable(pipelines, fleet)
+            .map_err(|e| PlanError::Oor { pipeline: format!("joint ({e})") })?;
+        Ok(plan)
+    }
+}
+
+impl Planner for JointModel {
+    fn name(&self) -> &'static str {
+        "JointModel"
+    }
+
+    fn plan(&self, pipelines: &[PipelineSpec], fleet: &Fleet) -> Result<CollabPlan, PlanError> {
+        let lm = LatencyModel::new(fleet);
+        let mut ledger = MemoryLedger::default();
+        let mut out = Vec::with_capacity(pipelines.len());
+        for spec in pipelines {
+            let chosen = best_by(
+                spec,
+                fleet,
+                |c| match self.cost {
+                    Cost::Latency => model_centric_latency(c, spec, &lm),
+                    Cost::Energy => e2e_chain_energy(c, spec, fleet, &lm),
+                },
+                Some(&ledger),
+            )?;
+            ledger.commit(&chosen, &spec.model);
+            out.push(chosen);
+        }
+        Ok(CollabPlan::new(out))
+    }
+}
+
+impl Planner for IndE2E {
+    fn name(&self) -> &'static str {
+        "IndE2E"
+    }
+
+    fn plan(&self, pipelines: &[PipelineSpec], fleet: &Fleet) -> Result<CollabPlan, PlanError> {
+        let lm = LatencyModel::new(fleet);
+        let mut out = Vec::with_capacity(pipelines.len());
+        for spec in pipelines {
+            out.push(best_by(
+                spec,
+                fleet,
+                |c| match self.cost {
+                    Cost::Latency => e2e_chain_latency(c, spec, &lm),
+                    Cost::Energy => e2e_chain_energy(c, spec, fleet, &lm),
+                },
+                None,
+            )?);
+        }
+        let plan = CollabPlan::new(out);
+        plan.check_runnable(pipelines, fleet)
+            .map_err(|e| PlanError::Oor { pipeline: format!("joint ({e})") })?;
+        Ok(plan)
+    }
+}
+
+impl Planner for JointE2E {
+    fn name(&self) -> &'static str {
+        "JointE2E"
+    }
+
+    fn plan(&self, pipelines: &[PipelineSpec], fleet: &Fleet) -> Result<CollabPlan, PlanError> {
+        let lm = LatencyModel::new(fleet);
+        let mut ledger = MemoryLedger::default();
+        let mut out = Vec::with_capacity(pipelines.len());
+        for spec in pipelines {
+            let chosen = best_by(
+                spec,
+                fleet,
+                |c| match self.cost {
+                    Cost::Latency => e2e_chain_latency(c, spec, &lm),
+                    Cost::Energy => e2e_chain_energy(c, spec, fleet, &lm),
+                },
+                Some(&ledger),
+            )?;
+            ledger.commit(&chosen, &spec.model);
+            out.push(chosen);
+        }
+        Ok(CollabPlan::new(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceId, DeviceKind};
+    use crate::model::zoo::{model_by_name, ModelName};
+    use crate::pipeline::{SourceReq, TargetReq};
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn pipes(models: &[ModelName]) -> Vec<PipelineSpec> {
+        models
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                PipelineSpec::new(i, m.as_str(), SourceReq::Any, model_by_name(m).clone(), TargetReq::Any)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn indmodel_collides_where_jointmodel_survives() {
+        // Workload-2-like contention: three mid-size models, two devices.
+        // IndModel puts every model on its individually-best accelerator
+        // (they all look identical) and trips joint OOR; JointModel spreads.
+        let f = fleet(2);
+        let ps = pipes(&[ModelName::KWS, ModelName::SimpleNet, ModelName::WideNet]);
+        let ind = IndModel::default().plan(&ps, &f);
+        let joint = JointModel::default().plan(&ps, &f);
+        // KWS+SimpleNet+WideNet = 649 KB > 442 KB: independent picks that
+        // stack on one device OOR. (If the independent optimum happens to
+        // spread, both succeed — assert consistency instead of exact OOR.)
+        match ind {
+            Err(PlanError::Oor { .. }) => {}
+            Ok(plan) => plan.check_runnable(&ps, &f).unwrap(),
+            Err(e) => panic!("{e:?}"),
+        }
+        joint.unwrap().check_runnable(&ps, &f).unwrap();
+    }
+
+    #[test]
+    fn inde2e_places_near_endpoints() {
+        let f = fleet(3);
+        let mut ps = pipes(&[ModelName::ConvNet5]);
+        ps[0].source = SourceReq::Device(DeviceId(2));
+        ps[0].target = TargetReq::Device(DeviceId(2));
+        let plan = IndE2E::default().plan(&ps, &f).unwrap();
+        // E2E view keeps inference on the endpoint device (no radio hops).
+        assert_eq!(plan.plans[0].chunks[0].device, DeviceId(2));
+        // Model-centric IndModel is indifferent — whatever it picks, its
+        // cost ignores the endpoints; verify it scores all devices equally.
+        let lm = LatencyModel::new(&f);
+        let c0 = model_centric_latency(
+            &crate::plan::ExecutionPlan::monolithic(&ps[0], DeviceId(2), DeviceId(0), DeviceId(2)),
+            &ps[0], &lm,
+        );
+        let c2 = model_centric_latency(
+            &crate::plan::ExecutionPlan::monolithic(&ps[0], DeviceId(2), DeviceId(2), DeviceId(2)),
+            &ps[0], &lm,
+        );
+        assert!((c0 - c2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_three_handle_single_pipeline() {
+        let f = fleet(2);
+        let ps = pipes(&[ModelName::UNet]);
+        let (ind, joint, inde) = (IndModel::default(), JointModel::default(), IndE2E::default());
+        for planner in [&ind as &dyn Planner, &joint, &inde] {
+            let plan = planner.plan(&ps, &f).unwrap();
+            plan.check_runnable(&ps, &f).unwrap();
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! §V — the moderator and the real serving loop.
+//!
+//! The [`moderator`] owns the device registry and the registered apps,
+//! re-orchestrates whenever either changes (the only time Python-side work
+//! would ever matter is `make artifacts`, long before this), and records
+//! the deployment. [`serve`] executes a deployment for real: per-device
+//! threads with per-unit work queues, mpsc channels as radio links, and
+//! PJRT inference through the runtime service — the paper's runtime made
+//! concrete on this testbed.
+
+pub mod moderator;
+pub mod serve;
+
+pub use moderator::{Deployment, Moderator};
+pub use serve::{serve, ServeConfig, ServeReport};

@@ -1,0 +1,185 @@
+//! The moderator (§III-C "moderator-initiated orchestration"): discovers
+//! and manages devices, accepts app registrations through the
+//! device-agnostic interface, and triggers holistic orchestration whenever
+//! apps or device availability change. Once deployed, runtime inference
+//! proceeds without it.
+
+use crate::device::Fleet;
+use crate::estimator::{estimate_plan, LatencyModel, PlanEstimate};
+use crate::orchestrator::{PlanError, Planner};
+use crate::pipeline::{PipelineId, PipelineSpec};
+use crate::plan::CollabPlan;
+use crate::scheduler::{simulate, GroundTruth, Policy, SimConfig, SimReport};
+
+/// A selected + checked holistic collaboration plan, ready to deploy.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub plan: CollabPlan,
+    pub policy: Policy,
+    pub estimate: PlanEstimate,
+}
+
+/// The orchestration moderator.
+pub struct Moderator<P: Planner> {
+    fleet: Fleet,
+    planner: P,
+    apps: Vec<PipelineSpec>,
+    deployment: Option<Deployment>,
+    /// Orchestrations performed (diagnostics; †every app/fleet change
+    /// triggers exactly one).
+    pub orchestrations: usize,
+}
+
+impl<P: Planner> Moderator<P> {
+    pub fn new(fleet: Fleet, planner: P) -> Moderator<P> {
+        Moderator {
+            fleet,
+            planner,
+            apps: Vec::new(),
+            deployment: None,
+            orchestrations: 0,
+        }
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    pub fn apps(&self) -> &[PipelineSpec] {
+        &self.apps
+    }
+
+    pub fn deployment(&self) -> Option<&Deployment> {
+        self.deployment.as_ref()
+    }
+
+    /// Register an app pipeline; triggers re-orchestration.
+    pub fn register_app(&mut self, spec: PipelineSpec) -> Result<&Deployment, PlanError> {
+        assert!(
+            self.apps.iter().all(|a| a.id != spec.id),
+            "duplicate pipeline id {:?}",
+            spec.id
+        );
+        self.apps.push(spec);
+        self.orchestrate()
+    }
+
+    /// Remove an app; triggers re-orchestration (no-op plan when empty).
+    pub fn remove_app(&mut self, id: PipelineId) -> Result<Option<&Deployment>, PlanError> {
+        self.apps.retain(|a| a.id != id);
+        if self.apps.is_empty() {
+            self.deployment = None;
+            return Ok(None);
+        }
+        self.orchestrate().map(Some)
+    }
+
+    /// Replace the fleet (device joined/left); triggers re-orchestration.
+    pub fn set_fleet(&mut self, fleet: Fleet) -> Result<Option<&Deployment>, PlanError> {
+        self.fleet = fleet;
+        if self.apps.is_empty() {
+            return Ok(None);
+        }
+        self.orchestrate().map(Some)
+    }
+
+    /// Run holistic orchestration over the current apps + fleet.
+    pub fn orchestrate(&mut self) -> Result<&Deployment, PlanError> {
+        self.orchestrations += 1;
+        let plan = self.planner.plan(&self.apps, &self.fleet)?;
+        debug_assert!(plan.check_runnable(&self.apps, &self.fleet).is_ok());
+        let lm = LatencyModel::new(&self.fleet);
+        let estimate = estimate_plan(&plan, &self.apps, &self.fleet, &lm);
+        self.deployment = Some(Deployment {
+            plan,
+            policy: self.planner.exec_policy(),
+            estimate,
+        });
+        Ok(self.deployment.as_ref().unwrap())
+    }
+
+    /// Execute the current deployment on the simulated hardware.
+    pub fn simulate(&self, runs: usize, seed: u64) -> Option<SimReport> {
+        let dep = self.deployment.as_ref()?;
+        let gt = GroundTruth::with_seed(seed);
+        Some(simulate(
+            &dep.plan,
+            &self.apps,
+            &self.fleet,
+            &gt,
+            SimConfig {
+                runs,
+                warmup: (runs / 6).min(4),
+                policy: dep.policy,
+                record_trace: false,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceId;
+    use crate::model::zoo::{model_by_name, ModelName};
+    use crate::orchestrator::Synergy;
+    use crate::pipeline::{SourceReq, TargetReq};
+    use crate::workload::{fleet4, fleet_n};
+
+    fn app(id: usize, m: ModelName) -> PipelineSpec {
+        PipelineSpec::new(
+            id,
+            m.as_str(),
+            SourceReq::Device(DeviceId(0)),
+            model_by_name(m).clone(),
+            TargetReq::Device(DeviceId(1)),
+        )
+    }
+
+    #[test]
+    fn registration_triggers_orchestration() {
+        let mut m = Moderator::new(fleet4(), Synergy::planner());
+        m.register_app(app(0, ModelName::KWS)).unwrap();
+        assert_eq!(m.orchestrations, 1);
+        assert_eq!(m.deployment().unwrap().plan.plans.len(), 1);
+        m.register_app(app(1, ModelName::SimpleNet)).unwrap();
+        assert_eq!(m.orchestrations, 2);
+        assert_eq!(m.deployment().unwrap().plan.plans.len(), 2);
+    }
+
+    #[test]
+    fn device_change_reorchestrates() {
+        let mut m = Moderator::new(fleet4(), Synergy::planner());
+        m.register_app(app(0, ModelName::UNet)).unwrap();
+        let before = m.deployment().unwrap().estimate.throughput;
+        m.set_fleet(fleet_n(2)).unwrap();
+        assert_eq!(m.orchestrations, 2);
+        let after = m.deployment().unwrap().estimate.throughput;
+        assert!(before > 0.0 && after > 0.0);
+    }
+
+    #[test]
+    fn removal_clears_deployment_when_empty() {
+        let mut m = Moderator::new(fleet4(), Synergy::planner());
+        m.register_app(app(0, ModelName::KWS)).unwrap();
+        m.remove_app(PipelineId(0)).unwrap();
+        assert!(m.deployment().is_none());
+    }
+
+    #[test]
+    fn simulate_executes_deployment() {
+        let mut m = Moderator::new(fleet4(), Synergy::planner());
+        m.register_app(app(0, ModelName::KWS)).unwrap();
+        let rep = m.simulate(12, 7).unwrap();
+        assert_eq!(rep.completions, 12);
+        assert!(rep.throughput > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate pipeline id")]
+    fn duplicate_ids_rejected() {
+        let mut m = Moderator::new(fleet4(), Synergy::planner());
+        m.register_app(app(0, ModelName::KWS)).unwrap();
+        let _ = m.register_app(app(0, ModelName::SimpleNet));
+    }
+}

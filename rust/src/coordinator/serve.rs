@@ -1,0 +1,310 @@
+//! The real serving loop: a deployment executed with actual PJRT inference.
+//!
+//! Topology mirrors §IV-F: one worker thread per wearable device processing
+//! a FIFO work queue, mpsc channels as the radio links between devices, and
+//! inter-run parallelization bounded by a double-buffer window — run `r+1`
+//! of a pipeline enters the system while run `r` is still in flight, so
+//! chunk devices overlap exactly as in Fig. 12c. Numerics are real (HLO
+//! chunks through PJRT); on-body *timing* claims come from the device-model
+//! simulator, since a server CPU cannot impersonate a MAX78000's clock.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::{DeviceId, Fleet};
+use crate::pipeline::PipelineSpec;
+use crate::runtime::{InferHandle, InferenceService, Manifest};
+
+use super::moderator::Deployment;
+
+/// Serving parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Continuous-inference runs per pipeline.
+    pub runs: usize,
+    /// In-flight runs per pipeline (2 = double-buffered inter-run overlap).
+    pub max_inflight: usize,
+    /// Verify run outputs against whole-model execution.
+    pub verify: bool,
+    /// Seed for the synthetic sensor frames.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            runs: 8,
+            max_inflight: 2,
+            verify: true,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-pipeline serving stats.
+#[derive(Clone, Debug)]
+pub struct PipelineStats {
+    pub name: String,
+    pub completions: usize,
+    pub mean_latency_s: f64,
+    pub max_split_err: f64,
+}
+
+/// Serving results.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub wall_s: f64,
+    pub completions: usize,
+    /// Real inferences per second on this testbed (wall clock).
+    pub throughput: f64,
+    pub per_pipeline: Vec<PipelineStats>,
+    pub verified: bool,
+}
+
+/// One hop of a pipeline's chunk chain.
+#[derive(Clone, Debug)]
+struct Stage {
+    device: DeviceId,
+    file: PathBuf,
+    in_shape: Vec<usize>,
+}
+
+enum Msg {
+    Work {
+        pipeline: usize,
+        run: usize,
+        stage: usize,
+        activation: Vec<f32>,
+        started: Instant,
+    },
+    Stop,
+}
+
+struct Done {
+    pipeline: usize,
+    output: Vec<f32>,
+    latency_s: f64,
+}
+
+/// Execute a deployment with real inference. `apps` must be the moderator's
+/// pipeline list; `manifest` must contain chunk artifacts for every split
+/// the plan uses (plan with `EnumerateCfg { max_split_devices: 2 }` for the
+/// models aot.py splits).
+pub fn serve(
+    deployment: &Deployment,
+    apps: &[PipelineSpec],
+    fleet: &Fleet,
+    manifest: &Manifest,
+    cfg: ServeConfig,
+) -> Result<ServeReport> {
+    assert!(cfg.max_inflight >= 1);
+    let service = InferenceService::start()?;
+
+    // Expand plans into stage chains and collect artifacts to preload.
+    let mut stage_chains: Vec<Vec<Stage>> = Vec::new();
+    let mut preload = Vec::new();
+    for ep in &deployment.plan.plans {
+        let spec = apps
+            .iter()
+            .find(|a| a.id == ep.pipeline)
+            .context("plan references unknown app")?;
+        let mm = manifest.model(&spec.name)?;
+        let n = mm.layers.len();
+        let mut chain = Vec::new();
+        for a in &ep.chunks {
+            let (file, in_shape) = if a.range.start == 0 && a.range.end == n {
+                (mm.full.clone(), mm.input)
+            } else {
+                let c = mm.chunk(a.range.start, a.range.end).with_context(|| {
+                    format!(
+                        "{}: no artifact for chunk {} — restrict the planner \
+                         to 2-way splits of the aot split models",
+                        spec.name, a.range
+                    )
+                })?;
+                (c.file.clone(), c.in_shape)
+            };
+            let path = manifest.path(&file);
+            preload.push(path.clone());
+            chain.push(Stage {
+                device: a.device,
+                file: path,
+                in_shape: vec![in_shape.h, in_shape.w, in_shape.c],
+            });
+        }
+        stage_chains.push(chain);
+    }
+    // Deployment step: compile everything before timing starts.
+    service.handle().preload(preload)?;
+
+    // Reference outputs for verification.
+    let inputs: Vec<Vec<f32>> = apps
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let mm = manifest.model(&spec.name).unwrap();
+            let mut rng = crate::util::rng::Rng::new(cfg.seed ^ (i as u64) << 32);
+            (0..mm.input.bytes())
+                .map(|_| rng.next_gaussian() as f32)
+                .collect()
+        })
+        .collect();
+    let reference: Vec<Option<Vec<f32>>> = if cfg.verify {
+        apps.iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let mm = manifest.model(&spec.name).unwrap();
+                service
+                    .handle()
+                    .run(
+                        manifest.path(&mm.full),
+                        inputs[i].clone(),
+                        vec![mm.input.h, mm.input.w, mm.input.c],
+                    )
+                    .ok()
+            })
+            .collect()
+    } else {
+        vec![None; apps.len()]
+    };
+
+    // Per-device worker threads with radio-link channels.
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let mut senders: BTreeMap<DeviceId, mpsc::Sender<Msg>> = BTreeMap::new();
+    let mut workers = Vec::new();
+    let devices: Vec<DeviceId> = fleet.ids().collect();
+    let mut receivers: BTreeMap<DeviceId, mpsc::Receiver<Msg>> = BTreeMap::new();
+    for &d in &devices {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        senders.insert(d, tx);
+        receivers.insert(d, rx);
+    }
+    let chains = std::sync::Arc::new(stage_chains);
+    for &d in &devices {
+        let rx = receivers.remove(&d).unwrap();
+        let handle: InferHandle = service.handle();
+        let chains = chains.clone();
+        let senders = senders.clone();
+        let done_tx = done_tx.clone();
+        workers.push(std::thread::spawn(move || -> Result<()> {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Stop => break,
+                    Msg::Work { pipeline, run, stage, activation, started } => {
+                        let chain = &chains[pipeline];
+                        let st = &chain[stage];
+                        debug_assert_eq!(st.device, d);
+                        let out = handle.run(
+                            st.file.clone(),
+                            activation,
+                            st.in_shape.clone(),
+                        )?;
+                        if stage + 1 < chain.len() {
+                            // "Radio" hop to the next chunk device.
+                            let _ = senders[&chain[stage + 1].device].send(Msg::Work {
+                                pipeline,
+                                run,
+                                stage: stage + 1,
+                                activation: out,
+                                started,
+                            });
+                        } else {
+                            let _ = done_tx.send(Done {
+                                pipeline,
+                                output: out,
+                                latency_s: started.elapsed().as_secs_f64(),
+                            });
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    drop(done_tx);
+
+    // Drive runs with a bounded in-flight window per pipeline.
+    let t0 = Instant::now();
+    let n = apps.len();
+    let mut inflight = vec![0usize; n];
+    let mut emitted = vec![0usize; n];
+    let mut stats: Vec<PipelineStats> = apps
+        .iter()
+        .map(|a| PipelineStats {
+            name: a.name.clone(),
+            completions: 0,
+            mean_latency_s: 0.0,
+            max_split_err: 0.0,
+        })
+        .collect();
+    let emit = |p: usize, emitted: &mut [usize], inflight: &mut [usize]| {
+        let chain = &chains[p];
+        let _ = senders[&chain[0].device].send(Msg::Work {
+            pipeline: p,
+            run: emitted[p],
+            stage: 0,
+            activation: inputs[p].clone(),
+            started: Instant::now(),
+        });
+        emitted[p] += 1;
+        inflight[p] += 1;
+    };
+    for p in 0..n {
+        while emitted[p] < cfg.runs.min(cfg.max_inflight) {
+            emit(p, &mut emitted, &mut inflight);
+        }
+    }
+    let mut total_done = 0;
+    let mut verified = true;
+    while total_done < n * cfg.runs {
+        let done = done_rx.recv().context("serving workers died")?;
+        let p = done.pipeline;
+        stats[p].completions += 1;
+        stats[p].mean_latency_s += done.latency_s;
+        if let Some(reference) = &reference[p] {
+            let err = reference
+                .iter()
+                .zip(&done.output)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0, f64::max);
+            stats[p].max_split_err = stats[p].max_split_err.max(err);
+            let scale = reference.iter().map(|v| v.abs()).fold(0.0f32, f32::max) as f64;
+            if err > 1e-3 * scale.max(1e-3) {
+                verified = false;
+            }
+        }
+        inflight[p] -= 1;
+        total_done += 1;
+        if emitted[p] < cfg.runs {
+            emit(p, &mut emitted, &mut inflight);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    for tx in senders.values() {
+        let _ = tx.send(Msg::Stop);
+    }
+    for w in workers {
+        match w.join() {
+            Ok(res) => res?,
+            Err(_) => bail!("worker thread panicked"),
+        }
+    }
+
+    for s in &mut stats {
+        if s.completions > 0 {
+            s.mean_latency_s /= s.completions as f64;
+        }
+    }
+    Ok(ServeReport {
+        wall_s,
+        completions: total_done,
+        throughput: total_done as f64 / wall_s.max(1e-9),
+        per_pipeline: stats,
+        verified,
+    })
+}

@@ -1,0 +1,59 @@
+//! Sensor and interaction capabilities a wearable advertises and an app's
+//! pipeline requires (§IV-B: requirement types are "designated device or
+//! sensor type" for sensing and "designated device or interface type" for
+//! interaction).
+
+/// Sensing capabilities.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SensorKind {
+    Microphone,
+    Camera,
+    Imu,
+    /// Optical heart-rate (photoplethysmography).
+    Ppg,
+    /// Foot pressure (smart shoes).
+    Pressure,
+}
+
+impl SensorKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SensorKind::Microphone => "microphone",
+            SensorKind::Camera => "camera",
+            SensorKind::Imu => "imu",
+            SensorKind::Ppg => "ppg",
+            SensorKind::Pressure => "pressure",
+        }
+    }
+}
+
+/// Interaction (output) capabilities.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum InteractionKind {
+    Haptic,
+    Audio,
+    Display,
+    Led,
+}
+
+impl InteractionKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            InteractionKind::Haptic => "haptic",
+            InteractionKind::Audio => "audio",
+            InteractionKind::Display => "display",
+            InteractionKind::Led => "led",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(SensorKind::Camera.as_str(), "camera");
+        assert_eq!(InteractionKind::Haptic.as_str(), "haptic");
+    }
+}

@@ -1,0 +1,135 @@
+//! Accelerator memory accounting — the out-of-resource (OOR) rules of
+//! §IV-C: a collaboration plan is *runnable* iff, on every accelerator, the
+//! total weight memory, bias memory, and layer count of all assigned model
+//! chunks stay within capacity.
+
+use super::spec::AccelSpec;
+
+/// Why an assignment does not fit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum OorError {
+    #[error("weight memory exhausted")]
+    WeightMem,
+    #[error("bias memory exhausted")]
+    BiasMem,
+    #[error("layer-count limit exhausted")]
+    Layers,
+}
+
+/// Running usage tally for one accelerator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AccelMemory {
+    pub weight_bytes: u64,
+    pub bias_bytes: u64,
+    pub layers: usize,
+}
+
+impl AccelMemory {
+    /// Check whether adding a chunk with the given footprint fits `spec`.
+    pub fn check(
+        &self,
+        spec: &AccelSpec,
+        weight_bytes: u64,
+        bias_bytes: u64,
+        layers: usize,
+    ) -> Result<(), OorError> {
+        if self.weight_bytes + weight_bytes > spec.weight_mem {
+            return Err(OorError::WeightMem);
+        }
+        if self.bias_bytes + bias_bytes > spec.bias_mem {
+            return Err(OorError::BiasMem);
+        }
+        if self.layers + layers > spec.max_layers {
+            return Err(OorError::Layers);
+        }
+        Ok(())
+    }
+
+    /// Check-and-commit an allocation.
+    pub fn alloc(
+        &mut self,
+        spec: &AccelSpec,
+        weight_bytes: u64,
+        bias_bytes: u64,
+        layers: usize,
+    ) -> Result<(), OorError> {
+        self.check(spec, weight_bytes, bias_bytes, layers)?;
+        self.weight_bytes += weight_bytes;
+        self.bias_bytes += bias_bytes;
+        self.layers += layers;
+        Ok(())
+    }
+
+    /// Release an allocation (used when backtracking during plan search).
+    pub fn free(&mut self, weight_bytes: u64, bias_bytes: u64, layers: usize) {
+        debug_assert!(self.weight_bytes >= weight_bytes);
+        debug_assert!(self.bias_bytes >= bias_bytes);
+        debug_assert!(self.layers >= layers);
+        self.weight_bytes -= weight_bytes;
+        self.bias_bytes -= bias_bytes;
+        self.layers -= layers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::spec::DeviceKind;
+
+    fn max78000() -> AccelSpec {
+        DeviceKind::Max78000.spec().accel.unwrap()
+    }
+
+    #[test]
+    fn fits_until_weight_exhausted() {
+        let spec = max78000();
+        let mut mem = AccelMemory::default();
+        // Two 200 KB chunks fit in 442 KB; a third does not.
+        assert!(mem.alloc(&spec, 200 * 1024, 256, 5).is_ok());
+        assert!(mem.alloc(&spec, 200 * 1024, 256, 5).is_ok());
+        assert_eq!(
+            mem.alloc(&spec, 200 * 1024, 256, 5),
+            Err(OorError::WeightMem)
+        );
+    }
+
+    #[test]
+    fn layer_limit_is_enforced() {
+        let spec = max78000();
+        let mut mem = AccelMemory::default();
+        assert!(mem.alloc(&spec, 1024, 16, 30).is_ok());
+        assert_eq!(mem.alloc(&spec, 1024, 16, 3), Err(OorError::Layers));
+        assert!(mem.alloc(&spec, 1024, 16, 2).is_ok());
+    }
+
+    #[test]
+    fn bias_limit_is_enforced() {
+        let spec = max78000();
+        let mut mem = AccelMemory::default();
+        assert_eq!(
+            mem.alloc(&spec, 1024, 3 * 1024, 1),
+            Err(OorError::BiasMem)
+        );
+    }
+
+    #[test]
+    fn free_backtracks() {
+        let spec = max78000();
+        let mut mem = AccelMemory::default();
+        mem.alloc(&spec, 400 * 1024, 1024, 20).unwrap();
+        assert!(mem.check(&spec, 100 * 1024, 256, 5).is_err());
+        mem.free(400 * 1024, 1024, 20);
+        assert_eq!(mem, AccelMemory::default());
+        assert!(mem.check(&spec, 100 * 1024, 256, 5).is_ok());
+    }
+
+    #[test]
+    fn failed_alloc_leaves_state_unchanged() {
+        let spec = max78000();
+        let mut mem = AccelMemory::default();
+        mem.alloc(&spec, 100, 10, 1).unwrap();
+        let before = mem;
+        let _ = mem.alloc(&spec, u64::MAX / 2, 0, 0);
+        assert_eq!(mem, before);
+    }
+}

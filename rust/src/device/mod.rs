@@ -1,0 +1,21 @@
+//! The hardware substrate: tiny-AI-accelerator device models.
+//!
+//! The paper prototypes on MAX78000/MAX78002 boards with ESP8266 Wi-Fi and
+//! measures power with a Monsoon monitor. None of that hardware exists here,
+//! so this module is the faithful stand-in (see DESIGN.md §2): published
+//! memory capacities and clock rates, a serial-bridged radio model, and a
+//! per-computation-unit power model calibrated to the magnitudes the paper
+//! reports. Everything downstream (planner, estimator, scheduler) consumes
+//! only these specs.
+
+pub mod capability;
+pub mod spec;
+pub mod memory;
+pub mod power;
+pub mod radio;
+
+pub use capability::{InteractionKind, SensorKind};
+pub use memory::{AccelMemory, OorError};
+pub use power::PowerSpec;
+pub use radio::RadioSpec;
+pub use spec::{AccelSpec, Device, DeviceId, DeviceKind, DeviceSpec, Fleet};

@@ -1,0 +1,89 @@
+//! Radio model.
+//!
+//! The prototype bridges the MAX78000 to an ESP8266 Wi-Fi module over a
+//! serial line with round-robin scheduling (§V), so the *effective*
+//! device-to-device rate is UART-bound (~115.2 kbaud ≈ 11.5 kB/s), which is
+//! what makes communication dominate everything else on these platforms
+//! (Fig. 8: comm ≈ 4579× inference latency). The model is
+//! `latency = overhead + bytes / bandwidth`, matching §IV-E2's
+//! size-over-bandwidth estimator; contention is handled by the scheduler's
+//! per-radio queues, not here.
+
+/// Point-to-point radio characteristics of one device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RadioSpec {
+    /// Effective application-level bandwidth in bytes/s.
+    pub bytes_per_s: f64,
+    /// Fixed per-message overhead in seconds (connection + framing).
+    pub overhead_s: f64,
+}
+
+impl RadioSpec {
+    /// ESP8266 behind a UART bridge, as in the paper's prototype.
+    pub fn esp8266_bridged() -> RadioSpec {
+        RadioSpec {
+            bytes_per_s: 11_520.0, // 115.2 kbaud, 8N1 → ~11.5 kB/s
+            overhead_s: 8e-3,
+        }
+    }
+
+    /// A phone's native Wi-Fi — but a d2d transfer is limited by the
+    /// *wearable* end of the link, so this only matters phone→phone.
+    pub fn phone_wifi() -> RadioSpec {
+        RadioSpec {
+            bytes_per_s: 2.0e6,
+            overhead_s: 2e-3,
+        }
+    }
+
+    /// One-way transfer time for `bytes`.
+    pub fn tx_time(&self, bytes: u64) -> f64 {
+        self.overhead_s + bytes as f64 / self.bytes_per_s
+    }
+}
+
+/// Effective link between two devices: bounded by the slower radio.
+pub fn link_time(a: &RadioSpec, b: &RadioSpec, bytes: u64) -> f64 {
+    let bw = a.bytes_per_s.min(b.bytes_per_s);
+    let overhead = a.overhead_s.max(b.overhead_s);
+    overhead + bytes as f64 / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uart_bound_transfer() {
+        let r = RadioSpec::esp8266_bridged();
+        // 110 KB (a UNet boundary tensor) takes ~9.8 s — comm dominates.
+        let t = r.tx_time(110 * 1024);
+        assert!((9.0..11.0).contains(&t), "t = {t}");
+    }
+
+    #[test]
+    fn overhead_dominates_tiny_messages() {
+        let r = RadioSpec::esp8266_bridged();
+        let t = r.tx_time(10);
+        assert!(t < 0.01, "t = {t}");
+        assert!(t > r.overhead_s);
+    }
+
+    #[test]
+    fn link_is_bounded_by_slower_end() {
+        let wearable = RadioSpec::esp8266_bridged();
+        let phone = RadioSpec::phone_wifi();
+        let via_link = link_time(&wearable, &phone, 100_000);
+        let wearable_alone = wearable.tx_time(100_000);
+        assert!((via_link - wearable_alone).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_linear_in_size() {
+        let r = RadioSpec::esp8266_bridged();
+        let t1 = r.tx_time(1000);
+        let t2 = r.tx_time(2000);
+        let t3 = r.tx_time(3000);
+        assert!(((t3 - t2) - (t2 - t1)).abs() < 1e-12);
+    }
+}

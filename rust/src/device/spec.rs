@@ -1,0 +1,314 @@
+//! Device specifications: published MAX78000/MAX78002 capacities and clock
+//! rates, the conventional-MCU comparison points of Fig. 2, and the phone
+//! used by the offloading baseline (§II-B).
+
+use super::capability::{InteractionKind, SensorKind};
+use super::power::PowerSpec;
+use super::radio::RadioSpec;
+
+/// CNN accelerator specification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccelSpec {
+    /// Dedicated weight memory in bytes (MAX78000: 442 KB, MAX78002: 2 MB).
+    pub weight_mem: u64,
+    /// Dedicated bias memory in bytes (MAX78000: 2 KB, MAX78002: 8 KB).
+    pub bias_mem: u64,
+    /// Dedicated data (activation) memory in bytes.
+    pub data_mem: u64,
+    /// Maximum number of layers the accelerator can hold (32 / 128).
+    pub max_layers: usize,
+    /// Parallel convolutional processors, `P` in Eq. 4–5 (64 on both).
+    pub parallel_procs: usize,
+    /// Accelerator clock in Hz (`F` in §IV-E1).
+    pub clock_hz: f64,
+    /// SRAM ↔ accelerator-memory transfer rate in bytes/s, for the
+    /// load/unload tasks ((2)/(4) in Fig. 10); the central-bus rate that
+    /// makes memory-op latency linear in data size.
+    pub bus_bytes_per_s: f64,
+    /// Fixed per-transfer setup cost in seconds.
+    pub bus_overhead_s: f64,
+}
+
+/// Kind of device platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceKind {
+    Max78000,
+    Max78002,
+    /// MAX32650: conventional Cortex-M4 MCU @ 120 MHz (Fig. 2 baseline);
+    /// no CNN accelerator — inference runs sequentially on the core.
+    McuMax32650,
+    /// STM32F7: high-performance Cortex-M7 MCU @ 216 MHz (Fig. 2 baseline).
+    McuStm32F7,
+    /// Smartphone for the offloading comparison (§II-B): effectively
+    /// unconstrained compute/memory; still behind the same radio.
+    Phone,
+}
+
+impl DeviceKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeviceKind::Max78000 => "MAX78000",
+            DeviceKind::Max78002 => "MAX78002",
+            DeviceKind::McuMax32650 => "MAX32650",
+            DeviceKind::McuStm32F7 => "STM32F7",
+            DeviceKind::Phone => "Phone",
+        }
+    }
+
+    /// Full platform specification for this kind.
+    pub fn spec(&self) -> DeviceSpec {
+        match self {
+            DeviceKind::Max78000 => DeviceSpec {
+                kind: *self,
+                cpu_clock_hz: 100e6, // Cortex-M4 @ 100 MHz
+                cycles_per_mac: 8.0,
+                accel: Some(AccelSpec {
+                    weight_mem: 442 * 1024,
+                    bias_mem: 2 * 1024,
+                    data_mem: 512 * 1024,
+                    max_layers: 32,
+                    parallel_procs: 64,
+                    clock_hz: 50e6, // CNN clock
+                    bus_bytes_per_s: 10.0e6,
+                    bus_overhead_s: 120e-6,
+                }),
+                radio: RadioSpec::esp8266_bridged(),
+                power: PowerSpec::max78000(),
+            },
+            DeviceKind::Max78002 => DeviceSpec {
+                kind: *self,
+                cpu_clock_hz: 120e6,
+                cycles_per_mac: 8.0,
+                accel: Some(AccelSpec {
+                    // §II-A: data 1.3 MB, weight 2 MB, bias 8 KB (see
+                    // DESIGN.md §4 on the §IV-C typo), 128 layers.
+                    weight_mem: 2 * 1024 * 1024,
+                    bias_mem: 8 * 1024,
+                    data_mem: 1331 * 1024,
+                    max_layers: 128,
+                    parallel_procs: 64,
+                    clock_hz: 100e6, // MAX78002 CNN clock is 2× faster
+                    bus_bytes_per_s: 16.0e6,
+                    bus_overhead_s: 100e-6,
+                }),
+                radio: RadioSpec::esp8266_bridged(),
+                power: PowerSpec::max78002(),
+            },
+            DeviceKind::McuMax32650 => DeviceSpec {
+                kind: *self,
+                cpu_clock_hz: 120e6,
+                cycles_per_mac: 8.0,
+                accel: None,
+                radio: RadioSpec::esp8266_bridged(),
+                power: PowerSpec::mcu(),
+            },
+            DeviceKind::McuStm32F7 => DeviceSpec {
+                kind: *self,
+                cpu_clock_hz: 216e6,
+                cycles_per_mac: 3.0,
+                accel: None,
+                radio: RadioSpec::esp8266_bridged(),
+                power: PowerSpec::mcu_m7(),
+            },
+            DeviceKind::Phone => DeviceSpec {
+                kind: *self,
+                cpu_clock_hz: 2.0e9,
+                cycles_per_mac: 1.0,
+                accel: Some(AccelSpec {
+                    // Phone NPU: effectively unconstrained for these models.
+                    weight_mem: 1 << 32,
+                    bias_mem: 1 << 24,
+                    data_mem: 1 << 32,
+                    max_layers: 4096,
+                    parallel_procs: 256,
+                    clock_hz: 1.0e9,
+                    bus_bytes_per_s: 1.0e9,
+                    bus_overhead_s: 10e-6,
+                }),
+                radio: RadioSpec::phone_wifi(),
+                power: PowerSpec::phone(),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Full platform spec: core + optional accelerator + radio + power.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub kind: DeviceKind,
+    /// General-purpose core clock (runs sensing glue and memory ops, and
+    /// the whole inference when there is no accelerator).
+    pub cpu_clock_hz: f64,
+    /// Effective core cycles per 8-bit MAC for software inference (CMSIS-NN
+    /// class kernels: ~8 on a Cortex-M4, ~3 on a dual-issue M7 with DSP
+    /// extensions, ~1 on an application-class core). Scales Eq. 2–3 into
+    /// wall-clock on cores without an accelerator.
+    pub cycles_per_mac: f64,
+    pub accel: Option<AccelSpec>,
+    pub radio: RadioSpec,
+    pub power: PowerSpec,
+}
+
+/// Identifier of a device within a fleet (dense index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}
+
+/// A concrete wearable in the fleet: a platform plus its on-body role.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: DeviceId,
+    /// Human-readable role, e.g. "earbud", "glasses", "watch", "ring".
+    pub name: String,
+    pub spec: DeviceSpec,
+    pub sensors: Vec<SensorKind>,
+    pub interactions: Vec<InteractionKind>,
+}
+
+impl Device {
+    pub fn new(
+        id: usize,
+        name: impl Into<String>,
+        kind: DeviceKind,
+        sensors: Vec<SensorKind>,
+        interactions: Vec<InteractionKind>,
+    ) -> Device {
+        Device {
+            id: DeviceId(id),
+            name: name.into(),
+            spec: kind.spec(),
+            sensors,
+            interactions,
+        }
+    }
+
+    pub fn has_accel(&self) -> bool {
+        self.spec.accel.is_some()
+    }
+
+    pub fn has_sensor(&self, s: SensorKind) -> bool {
+        self.sensors.contains(&s)
+    }
+
+    pub fn has_interaction(&self, i: InteractionKind) -> bool {
+        self.interactions.contains(&i)
+    }
+}
+
+/// The set of devices currently on the body.
+#[derive(Clone, Debug, Default)]
+pub struct Fleet {
+    pub devices: Vec<Device>,
+}
+
+impl Fleet {
+    pub fn new(devices: Vec<Device>) -> Fleet {
+        for (i, d) in devices.iter().enumerate() {
+            assert_eq!(d.id.0, i, "device ids must be dense and ordered");
+        }
+        Fleet { devices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn get(&self, id: DeviceId) -> &Device {
+        &self.devices[id.0]
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = DeviceId> + '_ {
+        (0..self.devices.len()).map(DeviceId)
+    }
+
+    /// Devices that have an AI accelerator (candidates for model chunks).
+    pub fn accel_ids(&self) -> Vec<DeviceId> {
+        self.ids()
+            .filter(|&id| self.get(id).has_accel())
+            .collect()
+    }
+
+    /// Devices satisfying a sensing capability.
+    pub fn with_sensor(&self, s: SensorKind) -> Vec<DeviceId> {
+        self.ids()
+            .filter(|&id| self.get(id).has_sensor(s))
+            .collect()
+    }
+
+    /// Devices satisfying an interaction capability.
+    pub fn with_interaction(&self, i: InteractionKind) -> Vec<DeviceId> {
+        self.ids()
+            .filter(|&id| self.get(id).has_interaction(i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_memory_capacities() {
+        let m0 = DeviceKind::Max78000.spec().accel.unwrap();
+        assert_eq!(m0.weight_mem, 452_608);
+        assert_eq!(m0.bias_mem, 2048);
+        assert_eq!(m0.max_layers, 32);
+        assert_eq!(m0.parallel_procs, 64);
+        let m2 = DeviceKind::Max78002.spec().accel.unwrap();
+        assert_eq!(m2.weight_mem, 2 * 1024 * 1024);
+        assert_eq!(m2.bias_mem, 8192);
+        assert_eq!(m2.max_layers, 128);
+    }
+
+    #[test]
+    fn mcus_have_no_accelerator() {
+        assert!(DeviceKind::McuMax32650.spec().accel.is_none());
+        assert!(DeviceKind::McuStm32F7.spec().accel.is_none());
+        assert!(DeviceKind::Phone.spec().accel.is_some());
+    }
+
+    #[test]
+    fn fleet_capability_lookup() {
+        let fleet = Fleet::new(vec![
+            Device::new(0, "earbud", DeviceKind::Max78000,
+                vec![SensorKind::Microphone], vec![InteractionKind::Audio]),
+            Device::new(1, "glasses", DeviceKind::Max78000,
+                vec![SensorKind::Camera], vec![InteractionKind::Display]),
+            Device::new(2, "ring", DeviceKind::Max78000,
+                vec![], vec![InteractionKind::Haptic]),
+        ]);
+        assert_eq!(fleet.with_sensor(SensorKind::Camera), vec![DeviceId(1)]);
+        assert_eq!(
+            fleet.with_interaction(InteractionKind::Haptic),
+            vec![DeviceId(2)]
+        );
+        assert_eq!(fleet.accel_ids().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense and ordered")]
+    fn fleet_rejects_sparse_ids() {
+        Fleet::new(vec![Device::new(
+            1,
+            "x",
+            DeviceKind::Max78000,
+            vec![],
+            vec![],
+        )]);
+    }
+}

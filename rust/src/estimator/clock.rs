@@ -1,0 +1,160 @@
+//! The clock-cycle latency model (§IV-E1, Eq. 2–5).
+//!
+//! Tiny AI accelerators run inference on dedicated hardware, so cycle
+//! counts translate to latency by construction — unlike parameter-count
+//! regressions, which correlate weakly (Fig. 11a vs 11b). The accelerator
+//! has `P` parallel per-channel processors and a convolution engine that
+//! computes a K×K window in a single cycle, hence:
+//!
+//!   sequential core:  Ĉ_MLP = H_in·W_in·C_in·C_out
+//!                     Ĉ_CNN = K²·H_in·W_out·C_in·C_out      (Eq. 2–3)
+//!   accelerator:      C_MLP = H_in·W_in·⌈C_in/P⌉·C_out
+//!                     C_CNN = H_in·W_out·⌈C_in/P⌉·C_out     (Eq. 4–5)
+//!
+//! Spatial dims are the layer's *pooled* input dims (pooling precedes the
+//! convolution on these parts). Latency of a layer range is Σ C_l / F.
+
+use crate::model::{Layer, LayerKind, ModelGraph, Shape, SplitRange};
+
+/// Cycle count of one layer on an accelerator with `p` parallel processors.
+pub fn layer_cycles_accel(layer: &Layer, input: Shape, p: usize) -> u64 {
+    let pin = layer.pooled(input);
+    let out = layer.out_shape(input);
+    let cin_blocks = pin.c.div_ceil(p) as u64;
+    match layer.kind {
+        // Eq. 5 — the K×K window costs a single cycle.
+        LayerKind::Conv2d { .. } => pin.h as u64 * out.w as u64 * cin_blocks * out.c as u64,
+        // Depthwise: each channel is handled by its own processor lane; the
+        // engine still walks H·W positions per channel block.
+        LayerKind::DepthwiseConv2d { .. } => pin.h as u64 * out.w as u64 * cin_blocks,
+        // Transpose conv writes a 2× grid: H_in rows, W_out columns.
+        LayerKind::ConvTranspose2d { .. } => {
+            pin.h as u64 * out.w as u64 * cin_blocks * out.c as u64
+        }
+        // Eq. 4.
+        LayerKind::Linear => pin.h as u64 * pin.w as u64 * cin_blocks * out.c as u64,
+    }
+}
+
+/// Cycle count of one layer on a sequential core (Eq. 2–3): no channel
+/// parallelism and the K×K window is K² MAC iterations.
+pub fn layer_cycles_sequential(layer: &Layer, input: Shape) -> u64 {
+    let pin = layer.pooled(input);
+    let out = layer.out_shape(input);
+    let k2 = (layer.kernel() * layer.kernel()) as u64;
+    match layer.kind {
+        LayerKind::Conv2d { .. } | LayerKind::ConvTranspose2d { .. } => {
+            k2 * pin.h as u64 * out.w as u64 * pin.c as u64 * out.c as u64
+        }
+        LayerKind::DepthwiseConv2d { .. } => k2 * pin.h as u64 * out.w as u64 * pin.c as u64,
+        LayerKind::Linear => pin.h as u64 * pin.w as u64 * pin.c as u64 * out.c as u64,
+    }
+}
+
+/// Total accelerator cycles of a layer range (O(1) for the ubiquitous
+/// P = 64 via the model's prefix cache).
+pub fn range_cycles_accel(model: &ModelGraph, r: SplitRange, p: usize) -> u64 {
+    if p == 64 {
+        return model.cycles_p64(r);
+    }
+    (r.start..r.end)
+        .map(|l| layer_cycles_accel(&model.layers[l], model.in_shape(l), p))
+        .sum()
+}
+
+/// Total sequential-core cycles of a layer range.
+pub fn range_cycles_sequential(model: &ModelGraph, r: SplitRange) -> u64 {
+    (r.start..r.end)
+        .map(|l| layer_cycles_sequential(&model.layers[l], model.in_shape(l)))
+        .sum()
+}
+
+/// `L_inf = Σ_l C_l / F` for a chunk on an accelerator (§IV-E1).
+pub fn infer_latency_accel(model: &ModelGraph, r: SplitRange, p: usize, clock_hz: f64) -> f64 {
+    range_cycles_accel(model, r, p) as f64 / clock_hz
+}
+
+/// Inference latency of a chunk on a plain core (Fig. 2's MCU baselines).
+/// `cycles_per_mac` converts ideal MAC counts into core cycles (software
+/// kernels spend several cycles per 8-bit MAC on loads/stores/requant).
+pub fn infer_latency_sequential(
+    model: &ModelGraph,
+    r: SplitRange,
+    clock_hz: f64,
+    cycles_per_mac: f64,
+) -> f64 {
+    range_cycles_sequential(model, r) as f64 * cycles_per_mac / clock_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{model_by_name, ModelName};
+
+    fn conv(cout: usize, pool: usize) -> Layer {
+        Layer { kind: LayerKind::Conv2d { k: 3 }, pool, cout, residual: false, has_bias: true }
+    }
+
+    #[test]
+    fn eq5_hand_computed() {
+        // 28×28×16 input, 3×3 conv to 32 channels, P=64:
+        // C = 28 · 28 · ⌈16/64⌉ · 32 = 28·28·1·32 = 25 088.
+        let l = conv(32, 1);
+        let c = layer_cycles_accel(&l, Shape::new(28, 28, 16), 64);
+        assert_eq!(c, 28 * 28 * 32);
+    }
+
+    #[test]
+    fn channel_blocks_round_up() {
+        // 100 input channels on P=64 → 2 blocks.
+        let l = conv(8, 1);
+        let c = layer_cycles_accel(&l, Shape::new(10, 10, 100), 64);
+        assert_eq!(c, 10 * 10 * 2 * 8);
+    }
+
+    #[test]
+    fn eq3_sequential_has_k_squared() {
+        let l = conv(32, 1);
+        let shape = Shape::new(28, 28, 16);
+        let seq = layer_cycles_sequential(&l, shape);
+        assert_eq!(seq, 9 * 28 * 28 * 16 * 32);
+        // Accelerator speedup on this layer: K²·C_in/⌈C_in/P⌉ = 9·16 = 144×.
+        let acc = layer_cycles_accel(&l, shape, 64);
+        assert_eq!(seq / acc, 144);
+    }
+
+    #[test]
+    fn pooling_shrinks_cycle_count() {
+        let no_pool = layer_cycles_accel(&conv(8, 1), Shape::new(16, 16, 8), 64);
+        let pooled = layer_cycles_accel(&conv(8, 2), Shape::new(16, 16, 8), 64);
+        assert_eq!(no_pool / pooled, 4);
+    }
+
+    #[test]
+    fn linear_uses_eq4() {
+        let l = Layer { kind: LayerKind::Linear, pool: 1, cout: 10, residual: false, has_bias: true };
+        let c = layer_cycles_accel(&l, Shape::new(4, 4, 128), 64);
+        assert_eq!(c, 4 * 4 * 2 * 10);
+    }
+
+    #[test]
+    fn kws_latency_on_max78000_is_milliseconds() {
+        // Fig. 2: KWS on the MAX78000 takes ~2 ms; on a 120 MHz Cortex-M4
+        // it takes ~350 ms. Check our model lands in those regimes.
+        let kws = model_by_name(ModelName::KWS);
+        let accel_ms = infer_latency_accel(kws, kws.full(), 64, 50e6) * 1e3;
+        let mcu_ms = infer_latency_sequential(kws, kws.full(), 120e6, 8.0) * 1e3;
+        assert!((0.5..20.0).contains(&accel_ms), "accel {accel_ms} ms");
+        assert!((100.0..2000.0).contains(&mcu_ms), "mcu {mcu_ms} ms");
+        assert!(mcu_ms / accel_ms > 50.0, "speedup {}", mcu_ms / accel_ms);
+    }
+
+    #[test]
+    fn range_cycles_are_additive() {
+        let m = model_by_name(ModelName::SimpleNet);
+        let total = range_cycles_accel(m, m.full(), 64);
+        let a = range_cycles_accel(m, SplitRange::new(0, 7), 64);
+        let b = range_cycles_accel(m, SplitRange::new(7, m.num_layers()), 64);
+        assert_eq!(total, a + b);
+    }
+}

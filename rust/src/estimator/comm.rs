@@ -1,0 +1,32 @@
+//! Communication latency estimation (§IV-E2): data size divided by the
+//! wireless channel bandwidth. Fluctuation-adaptive estimators are out of
+//! scope, as in the paper.
+
+use crate::device::{radio::link_time, Device};
+
+/// Estimated one-hop transfer time between two devices.
+pub fn tx_latency(from: &Device, to: &Device, bytes: u64) -> f64 {
+    link_time(&from.spec.radio, &to.spec.radio, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceKind;
+
+    #[test]
+    fn wearable_to_wearable_is_uart_bound() {
+        let a = crate::device::Device::new(0, "a", DeviceKind::Max78000, vec![], vec![]);
+        let b = crate::device::Device::new(1, "b", DeviceKind::Max78000, vec![], vec![]);
+        let t = tx_latency(&a, &b, 11_520);
+        assert!((t - (8e-3 + 1.0)).abs() < 1e-9, "t = {t}");
+    }
+
+    #[test]
+    fn wearable_to_phone_still_uart_bound() {
+        let a = crate::device::Device::new(0, "a", DeviceKind::Max78000, vec![], vec![]);
+        let p = crate::device::Device::new(1, "phone", DeviceKind::Phone, vec![], vec![]);
+        // The wearable's bridge is the bottleneck in both directions.
+        assert!((tx_latency(&a, &p, 11_520) - tx_latency(&p, &a, 11_520)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,92 @@
+//! Memory-operation latency model (§IV-E1, measurement-driven).
+//!
+//! Data moves between SRAM and accelerator memory over the central bus at a
+//! dedicated rate, so latency is linear in data size; the paper profiles a
+//! few sizes and fits a linear regression rather than deriving constants
+//! from datasheets. We do the same: `fit` samples the provided ground-truth
+//! probe (the simulated hardware) at a handful of sizes and regresses.
+
+use crate::util::stats::{linear_fit, LinearFit};
+
+/// Fitted `latency = slope · bytes + intercept` model for load/unload ops.
+#[derive(Clone, Copy, Debug)]
+pub struct MemopModel {
+    fit: LinearFit,
+}
+
+/// Sizes profiled during the fit (bytes). A few samples suffice because the
+/// relationship is linear by construction of the bus.
+pub const PROFILE_SIZES: [u64; 5] = [1 << 10, 8 << 10, 32 << 10, 128 << 10, 512 << 10];
+
+impl MemopModel {
+    /// Fit from a ground-truth probe (measured transfer time per size).
+    pub fn fit(mut probe: impl FnMut(u64) -> f64) -> MemopModel {
+        let xs: Vec<f64> = PROFILE_SIZES.iter().map(|&s| s as f64).collect();
+        let ys: Vec<f64> = PROFILE_SIZES.iter().map(|&s| probe(s)).collect();
+        MemopModel {
+            fit: linear_fit(&xs, &ys),
+        }
+    }
+
+    /// Construct directly from bus parameters (no profiling) — used by the
+    /// estimator when exact constants are given.
+    pub fn from_bus(bytes_per_s: f64, overhead_s: f64) -> MemopModel {
+        MemopModel {
+            fit: LinearFit {
+                slope: 1.0 / bytes_per_s,
+                intercept: overhead_s,
+                r2: 1.0,
+            },
+        }
+    }
+
+    /// Predicted load/unload latency for `bytes`.
+    pub fn latency(&self, bytes: u64) -> f64 {
+        self.fit.predict(bytes as f64).max(0.0)
+    }
+
+    /// Fit quality (diagnostics; the paper's premise is r² ≈ 1).
+    pub fn r2(&self) -> f64 {
+        self.fit.r2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_bus_parameters() {
+        // Ground truth: 10 MB/s bus with 120 µs setup.
+        let m = MemopModel::fit(|bytes| 120e-6 + bytes as f64 / 10.0e6);
+        let expect = 120e-6 + 65_536.0 / 10.0e6;
+        assert!((m.latency(65_536) - expect).abs() < 1e-9);
+        assert!(m.r2() > 0.999_999);
+    }
+
+    #[test]
+    fn fit_tolerates_noise() {
+        // ±2% multiplicative noise on the probe.
+        let mut flip = 1.0f64;
+        let m = MemopModel::fit(|bytes| {
+            flip = -flip;
+            (120e-6 + bytes as f64 / 10.0e6) * (1.0 + 0.02 * flip)
+        });
+        let ideal = 120e-6 + 100_000.0 / 10.0e6;
+        let err = (m.latency(100_000) - ideal).abs() / ideal;
+        assert!(err < 0.05, "err {err}");
+    }
+
+    #[test]
+    fn from_bus_matches_formula() {
+        let m = MemopModel::from_bus(16.0e6, 100e-6);
+        assert!((m.latency(160_000) - (100e-6 + 0.01)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_is_monotone_in_size() {
+        let m = MemopModel::from_bus(10.0e6, 120e-6);
+        assert!(m.latency(1000) < m.latency(2000));
+        assert!(m.latency(0) >= 0.0);
+    }
+}

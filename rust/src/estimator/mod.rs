@@ -1,0 +1,19 @@
+//! §IV-E — latency and throughput estimation for distributed tiny AI
+//! accelerators.
+//!
+//! The planner never measures: it predicts. Inference latency comes from
+//! the clock-cycle model ([`clock`]); memory-op latency from a linear
+//! regression fitted on a handful of profiled samples ([`memops`]);
+//! communication from size-over-bandwidth ([`comm`]); sensing from profiles
+//! ([`sensing`]). [`throughput`] composes per-task estimates into plan-level
+//! latency/throughput/power figures used for holistic plan selection.
+
+pub mod clock;
+pub mod memops;
+pub mod comm;
+pub mod sensing;
+pub mod tasks;
+pub mod throughput;
+
+pub use tasks::LatencyModel;
+pub use throughput::{estimate_plan, EstimateAccum, PlanEstimate};

@@ -1,0 +1,47 @@
+//! Sensing and interaction latency profiles (§IV-E2): measured per sensor
+//! kind and parameters during the profiling phase; the estimator matches an
+//! app's requirements against these profiles. Values model typical capture
+//! latencies of wearable-class parts.
+
+use crate::device::SensorKind;
+
+/// Capture latency of one sensing window/frame.
+pub fn sense_latency(kind: SensorKind) -> f64 {
+    match kind {
+        // One camera frame at ~30 fps.
+        SensorKind::Camera => 33e-3,
+        // One audio feature window.
+        SensorKind::Microphone => 64e-3,
+        // IMU / PPG / pressure windows are short.
+        SensorKind::Imu => 20e-3,
+        SensorKind::Ppg => 25e-3,
+        SensorKind::Pressure => 15e-3,
+    }
+}
+
+/// Sensing latency when only the data size is known (source device chosen
+/// by the planner without a declared sensor kind): bytes at a generic
+/// capture rate, floored at a minimal frame time.
+pub fn sense_latency_bytes(bytes: u64) -> f64 {
+    (bytes as f64 / 2.0e6).max(10e-3)
+}
+
+/// Interaction (actuation) latency: haptic pulse setup, audio cue start,
+/// display update — all a few milliseconds.
+pub const INTERACT_LATENCY_S: f64 = 5e-3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn camera_frame_is_30fps() {
+        assert!((sense_latency(SensorKind::Camera) - 1.0 / 30.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn generic_latency_scales_with_bytes_with_floor() {
+        assert_eq!(sense_latency_bytes(100), 10e-3);
+        assert!((sense_latency_bytes(2_000_000) - 1.0).abs() < 1e-9);
+    }
+}

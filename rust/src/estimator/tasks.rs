@@ -1,0 +1,198 @@
+//! Per-task latency estimation: dispatches each of the seven task types to
+//! its model — clock cycles for inference, fitted regression for memory
+//! ops, size/bandwidth for communication, profiles for sensing/interaction.
+
+use crate::device::{DeviceId, Fleet, SensorKind};
+use crate::model::ModelGraph;
+use crate::pipeline::{PipelineSpec, SourceReq};
+use crate::plan::task::{PlanTask, TaskKind};
+
+use super::clock;
+use super::comm;
+use super::memops::MemopModel;
+use super::sensing;
+
+/// The planner's latency model over a fleet: per-device memory-op
+/// regressions plus the closed-form models for everything else.
+pub struct LatencyModel<'f> {
+    pub fleet: &'f Fleet,
+    memops: Vec<Option<MemopModel>>,
+}
+
+impl<'f> LatencyModel<'f> {
+    /// Build from the devices' bus constants directly (exact regression).
+    pub fn new(fleet: &'f Fleet) -> LatencyModel<'f> {
+        let memops = fleet
+            .devices
+            .iter()
+            .map(|d| {
+                d.spec
+                    .accel
+                    .as_ref()
+                    .map(|a| MemopModel::from_bus(a.bus_bytes_per_s, a.bus_overhead_s))
+            })
+            .collect();
+        LatencyModel { fleet, memops }
+    }
+
+    /// Build by profiling a ground-truth probe per device (the paper's
+    /// measurement-driven path): `probe(device, bytes) -> seconds`.
+    pub fn from_profile(
+        fleet: &'f Fleet,
+        mut probe: impl FnMut(DeviceId, u64) -> f64,
+    ) -> LatencyModel<'f> {
+        let memops = fleet
+            .devices
+            .iter()
+            .map(|d| {
+                d.spec
+                    .accel
+                    .as_ref()
+                    .map(|_| MemopModel::fit(|bytes| probe(d.id, bytes)))
+            })
+            .collect();
+        LatencyModel { fleet, memops }
+    }
+
+    /// Sensor kind declared by the pipeline's source requirement, if any.
+    pub fn source_sensor(pipeline: &PipelineSpec) -> Option<SensorKind> {
+        match pipeline.source {
+            SourceReq::Sensor(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Estimated latency of one plan task.
+    ///
+    /// `model` is the pipeline's model (for inference cycle counts);
+    /// `sensor` the declared sensor kind (for the sensing profile).
+    pub fn task_latency(
+        &self,
+        task: &PlanTask,
+        model: &ModelGraph,
+        sensor: Option<SensorKind>,
+    ) -> f64 {
+        let dev = self.fleet.get(task.device);
+        match task.kind {
+            TaskKind::Sense { bytes } => sensor
+                .map(sensing::sense_latency)
+                .unwrap_or_else(|| sensing::sense_latency_bytes(bytes)),
+            TaskKind::Load { bytes } | TaskKind::Unload { bytes } => self.memops[task.device.0]
+                .as_ref()
+                .map(|m| m.latency(bytes))
+                // Loading into a phone-class runtime or plain MCU memory
+                // still costs a copy; model as the CPU touching each byte.
+                .unwrap_or(bytes as f64 / dev.spec.cpu_clock_hz),
+            TaskKind::Infer { range } => match &dev.spec.accel {
+                Some(a) => {
+                    clock::infer_latency_accel(model, range, a.parallel_procs, a.clock_hz)
+                }
+                None => clock::infer_latency_sequential(
+                    model,
+                    range,
+                    dev.spec.cpu_clock_hz,
+                    dev.spec.cycles_per_mac,
+                ),
+            },
+            TaskKind::Tx { bytes, to } => comm::tx_latency(dev, self.fleet.get(to), bytes),
+            TaskKind::Rx { bytes, from } => comm::tx_latency(self.fleet.get(from), dev, bytes),
+            TaskKind::Interact { .. } => sensing::INTERACT_LATENCY_S,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::SplitRange;
+    use crate::pipeline::{PipelineId, TargetReq};
+
+    fn fleet() -> Fleet {
+        Fleet::new(vec![
+            Device::new(0, "a", DeviceKind::Max78000, vec![SensorKind::Camera], vec![]),
+            Device::new(1, "b", DeviceKind::Max78002, vec![], vec![]),
+        ])
+    }
+
+    fn model() -> ModelGraph {
+        ModelGraph::new(
+            "m",
+            Shape::new(32, 32, 3),
+            vec![
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 16, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 2, cout: 32, residual: false, has_bias: true },
+            ],
+        )
+    }
+
+    fn task(device: usize, kind: TaskKind) -> PlanTask {
+        PlanTask { pipeline: PipelineId(0), seq: 0, device: DeviceId(device), kind }
+    }
+
+    #[test]
+    fn infer_uses_accelerator_clock() {
+        let f = fleet();
+        let lm = LatencyModel::new(&f);
+        let m = model();
+        let r = SplitRange::new(0, 2);
+        let t0 = lm.task_latency(&task(0, TaskKind::Infer { range: r }), &m, None);
+        let t1 = lm.task_latency(&task(1, TaskKind::Infer { range: r }), &m, None);
+        // MAX78002's CNN clock is 2× the MAX78000's.
+        assert!((t0 / t1 - 2.0).abs() < 1e-9, "t0={t0} t1={t1}");
+    }
+
+    #[test]
+    fn memops_match_bus_constants() {
+        let f = fleet();
+        let lm = LatencyModel::new(&f);
+        let t = lm.task_latency(&task(0, TaskKind::Load { bytes: 100_000 }), &model(), None);
+        assert!((t - (120e-6 + 0.01)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_fit_agrees_with_direct() {
+        let f = fleet();
+        let direct = LatencyModel::new(&f);
+        let probed = LatencyModel::from_profile(&f, |dev, bytes| {
+            // Ground truth equals the bus constants here.
+            let a = f.get(dev).spec.accel.as_ref().unwrap();
+            a.bus_overhead_s + bytes as f64 / a.bus_bytes_per_s
+        });
+        let t = task(1, TaskKind::Unload { bytes: 50_000 });
+        let a = direct.task_latency(&t, &model(), None);
+        let b = probed.task_latency(&t, &model(), None);
+        assert!((a - b).abs() / a < 1e-6);
+    }
+
+    #[test]
+    fn sensing_uses_profile_when_kind_known() {
+        let f = fleet();
+        let lm = LatencyModel::new(&f);
+        let t = task(0, TaskKind::Sense { bytes: 3072 });
+        let with_kind = lm.task_latency(&t, &model(), Some(SensorKind::Camera));
+        assert!((with_kind - 33e-3).abs() < 1e-9);
+        let without = lm.task_latency(&t, &model(), None);
+        assert_eq!(without, 10e-3); // generic floor
+    }
+
+    #[test]
+    fn tx_rx_are_symmetric_link_times() {
+        let f = fleet();
+        let lm = LatencyModel::new(&f);
+        let m = model();
+        let tx = lm.task_latency(
+            &task(0, TaskKind::Tx { bytes: 4096, to: DeviceId(1) }),
+            &m,
+            None,
+        );
+        let rx = lm.task_latency(
+            &task(1, TaskKind::Rx { bytes: 4096, from: DeviceId(0) }),
+            &m,
+            None,
+        );
+        assert!((tx - rx).abs() < 1e-12);
+        assert!(tx > 0.3); // 4 KB over ~11.5 kB/s
+    }
+}

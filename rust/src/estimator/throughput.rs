@@ -1,0 +1,350 @@
+//! Online throughput estimation of holistic collaboration plans (§IV-E3).
+//!
+//! A holistic collaboration plan expands into a DAG of tasks: each
+//! pipeline's tasks form a chain, and chains are independent. Two bounds
+//! govern one "unified round" (every pipeline executed once, §III-C):
+//!
+//! - the **critical path** — the longest chain's cumulative latency (the
+//!   paper's "longest path from any source task to any target task"), and
+//! - the **bottleneck unit** — the busiest computation unit's total work;
+//!   with adaptive task parallelization (§IV-F) rounds pipeline through
+//!   units, so steady-state round period approaches this bound.
+//!
+//! Estimated round latency is `max(critical path, bottleneck)`;
+//! steady-state throughput is `#pipelines / bottleneck-period`
+//! (`inverse of end-to-end latency × number of pipelines` for the
+//! non-pipelined reading); power follows from per-unit active energy.
+
+use std::collections::BTreeMap;
+
+use crate::device::{DeviceId, Fleet};
+use crate::pipeline::PipelineSpec;
+use crate::plan::task::{TaskKind, UnitKind};
+use crate::plan::CollabPlan;
+
+use super::tasks::LatencyModel;
+
+/// Estimator output for one holistic collaboration plan.
+#[derive(Clone, Debug)]
+pub struct PlanEstimate {
+    /// Per-pipeline chain latency (sequential execution of its own tasks),
+    /// index-aligned with the plan's pipelines.
+    pub chain_latency: Vec<f64>,
+    /// Longest chain — the DAG critical path.
+    pub critical_path: f64,
+    /// Busiest (device, unit) total work per round.
+    pub bottleneck: f64,
+    /// Estimated latency of one unified round.
+    pub round_latency: f64,
+    /// Steady-state throughput under ATP, in model executions per second.
+    pub throughput: f64,
+    /// Throughput if pipelines run strictly back-to-back (no ATP).
+    pub throughput_sequential: f64,
+    /// Average power in watts (active energy / round period + base).
+    pub power_w: f64,
+    /// Average power under sequential (non-ATP) execution.
+    pub power_sequential_w: f64,
+    /// Active energy per round in joules (excludes base draw).
+    pub active_energy_j: f64,
+}
+
+/// Incremental estimate accumulator for progressive plan accumulation
+/// (§IV-D): holds per-unit busy sums, chain latencies and active energy of
+/// already-selected execution plans, so each candidate for the next
+/// pipeline is evaluated in O(its own task count) with a cheap clone.
+#[derive(Clone, Debug)]
+pub struct EstimateAccum {
+    unit_busy: BTreeMap<(DeviceId, UnitKind), f64>,
+    chains: Vec<f64>,
+    active_energy_j: f64,
+    base_w: f64,
+}
+
+impl EstimateAccum {
+    pub fn new(fleet: &Fleet) -> EstimateAccum {
+        EstimateAccum {
+            unit_busy: BTreeMap::new(),
+            chains: Vec::new(),
+            active_energy_j: 0.0,
+            base_w: fleet.devices.iter().map(|d| d.spec.power.base_w).sum(),
+        }
+    }
+
+    /// Fold one execution plan into the accumulator.
+    pub fn add_plan(
+        &mut self,
+        ep: &crate::plan::exec_plan::ExecutionPlan,
+        spec: &PipelineSpec,
+        fleet: &Fleet,
+        lm: &LatencyModel,
+    ) {
+        let sensor = LatencyModel::source_sensor(spec);
+        let mut chain = 0.0;
+        for task in ep.tasks(&spec.model) {
+            let lat = lm.task_latency(&task, &spec.model, sensor);
+            chain += lat;
+            *self.unit_busy.entry((task.device, task.unit())).or_default() += lat;
+            let p = &fleet.get(task.device).spec.power;
+            self.active_energy_j += lat
+                * match task.kind {
+                    TaskKind::Sense { .. } => p.sensor_active_w,
+                    TaskKind::Load { .. } | TaskKind::Unload { .. } | TaskKind::Interact { .. } => {
+                        p.cpu_active_w
+                    }
+                    TaskKind::Infer { .. } => {
+                        if fleet.get(task.device).has_accel() {
+                            p.accel_active_w
+                        } else {
+                            p.cpu_active_w
+                        }
+                    }
+                    TaskKind::Tx { .. } => p.radio_tx_w,
+                    TaskKind::Rx { .. } => p.radio_rx_w,
+                };
+        }
+        self.chains.push(chain);
+    }
+
+    /// Evaluate the accumulator plus one tentative plan without committing.
+    pub fn peek(
+        &self,
+        ep: &crate::plan::exec_plan::ExecutionPlan,
+        spec: &PipelineSpec,
+        fleet: &Fleet,
+        lm: &LatencyModel,
+    ) -> PlanEstimate {
+        let mut tmp = self.clone();
+        tmp.add_plan(ep, spec, fleet, lm);
+        tmp.finish()
+    }
+
+    /// Allocation- and clone-free candidate evaluation: computes the same
+    /// estimate as [`Self::peek`] (modulo the per-pipeline chain vector,
+    /// which scoring never reads) by tracking only the candidate's own
+    /// per-unit deltas in the caller-provided scratch buffer. Additions are
+    /// monotone, so the new bottleneck is `max(old, touched keys)`. This is
+    /// the progressive search's inner loop (EXPERIMENTS.md §Perf).
+    pub fn peek_fast(
+        &self,
+        ep: &crate::plan::exec_plan::ExecutionPlan,
+        spec: &PipelineSpec,
+        fleet: &Fleet,
+        lm: &LatencyModel,
+        scratch: &mut Vec<((DeviceId, UnitKind), f64)>,
+    ) -> PlanEstimate {
+        let sensor = LatencyModel::source_sensor(spec);
+        scratch.clear();
+        let mut chain = 0.0;
+        let mut energy = 0.0;
+        ep.for_each_task(&spec.model, |task| {
+            let lat = lm.task_latency(&task, &spec.model, sensor);
+            chain += lat;
+            let key = (task.device, task.unit());
+            match scratch.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => *v += lat,
+                None => scratch.push((key, lat)),
+            }
+            let p = &fleet.get(task.device).spec.power;
+            energy += lat
+                * match task.kind {
+                    TaskKind::Sense { .. } => p.sensor_active_w,
+                    TaskKind::Load { .. } | TaskKind::Unload { .. } | TaskKind::Interact { .. } => {
+                        p.cpu_active_w
+                    }
+                    TaskKind::Infer { .. } => {
+                        if fleet.get(task.device).has_accel() {
+                            p.accel_active_w
+                        } else {
+                            p.cpu_active_w
+                        }
+                    }
+                    TaskKind::Tx { .. } => p.radio_tx_w,
+                    TaskKind::Rx { .. } => p.radio_rx_w,
+                };
+        });
+
+        let mut bottleneck = self.unit_busy.values().copied().fold(0.0, f64::max);
+        for (key, delta) in scratch.iter() {
+            let busy = self.unit_busy.get(key).copied().unwrap_or(0.0) + delta;
+            bottleneck = bottleneck.max(busy);
+        }
+        let prior_critical = self.chains.iter().copied().fold(0.0, f64::max);
+        let critical_path = prior_critical.max(chain);
+        let prior_total: f64 = self.chains.iter().sum();
+        let total_chain = prior_total + chain;
+        let round_latency = critical_path.max(bottleneck);
+        let n = (self.chains.len() + 1) as f64;
+        let period = bottleneck.max(critical_path / 2.0).max(1e-12);
+        let active_energy_j = self.active_energy_j + energy;
+        PlanEstimate {
+            chain_latency: Vec::new(), // not used by scoring
+            critical_path,
+            bottleneck,
+            round_latency,
+            throughput: n / period,
+            throughput_sequential: n / total_chain.max(1e-12),
+            power_w: self.base_w + active_energy_j / period,
+            power_sequential_w: self.base_w + active_energy_j / total_chain.max(1e-12),
+            active_energy_j,
+        }
+    }
+
+    /// Produce the plan-level estimate from the accumulated state.
+    pub fn finish(&self) -> PlanEstimate {
+        let chain_latency = self.chains.clone();
+        let critical_path = chain_latency.iter().copied().fold(0.0, f64::max);
+        let bottleneck = self.unit_busy.values().copied().fold(0.0, f64::max);
+        let round_latency = critical_path.max(bottleneck);
+        let n = chain_latency.len() as f64;
+        // ATP steady state: rounds pipeline through the units, so the
+        // period approaches the bottleneck unit's work — bounded by the
+        // critical path over the double-buffer window (max 2 in flight).
+        let period = bottleneck.max(critical_path / 2.0).max(1e-12);
+        let throughput = n / period;
+        let total_chain: f64 = chain_latency.iter().sum();
+        let throughput_sequential = n / total_chain.max(1e-12);
+        // Average power over the steady-state period (same denominator as
+        // throughput, so the estimate matches the measured duty cycle).
+        let power_w = self.base_w + self.active_energy_j / period;
+        let power_sequential_w = self.base_w + self.active_energy_j / total_chain.max(1e-12);
+        PlanEstimate {
+            chain_latency,
+            critical_path,
+            bottleneck,
+            round_latency,
+            throughput,
+            throughput_sequential,
+            power_w,
+            power_sequential_w,
+            active_energy_j: self.active_energy_j,
+        }
+    }
+}
+
+/// Estimate a holistic collaboration plan. `pipelines` must contain every
+/// pipeline referenced by the plan.
+pub fn estimate_plan(
+    plan: &CollabPlan,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+    lm: &LatencyModel,
+) -> PlanEstimate {
+    let mut acc = EstimateAccum::new(fleet);
+    for ep in &plan.plans {
+        let spec = pipelines
+            .iter()
+            .find(|p| p.id == ep.pipeline)
+            .expect("plan for unknown pipeline");
+        acc.add_plan(ep, spec, fleet, lm);
+    }
+    acc.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::ModelGraph;
+    use crate::pipeline::{SourceReq, TargetReq};
+    use crate::plan::exec_plan::ExecutionPlan;
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn model() -> ModelGraph {
+        ModelGraph::new(
+            "m",
+            Shape::new(16, 16, 3),
+            vec![
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 8, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 2, cout: 16, residual: false, has_bias: true },
+            ],
+        )
+    }
+
+    fn pipelines(n: usize) -> Vec<PipelineSpec> {
+        (0..n)
+            .map(|i| PipelineSpec::new(i, format!("p{i}"), SourceReq::Any, model(), TargetReq::Any))
+            .collect()
+    }
+
+    fn local_plan(pid: usize, dev: usize, ps: &[PipelineSpec]) -> ExecutionPlan {
+        ExecutionPlan::monolithic(&ps[pid], DeviceId(dev), DeviceId(dev), DeviceId(dev))
+    }
+
+    #[test]
+    fn single_pipeline_chain_is_critical_path() {
+        let f = fleet(1);
+        let ps = pipelines(1);
+        let lm = LatencyModel::new(&f);
+        let plan = CollabPlan::new(vec![local_plan(0, 0, &ps)]);
+        let est = estimate_plan(&plan, &ps, &f, &lm);
+        assert_eq!(est.chain_latency.len(), 1);
+        assert!((est.critical_path - est.chain_latency[0]).abs() < 1e-12);
+        assert!(est.round_latency >= est.critical_path);
+        assert!(est.throughput > 0.0);
+    }
+
+    #[test]
+    fn spreading_pipelines_beats_stacking() {
+        let f = fleet(2);
+        let ps = pipelines(2);
+        let lm = LatencyModel::new(&f);
+        let stacked = estimate_plan(
+            &CollabPlan::new(vec![local_plan(0, 0, &ps), local_plan(1, 0, &ps)]),
+            &ps, &f, &lm,
+        );
+        let spread = estimate_plan(
+            &CollabPlan::new(vec![local_plan(0, 0, &ps), local_plan(1, 1, &ps)]),
+            &ps, &f, &lm,
+        );
+        // Stacking doubles the bottleneck unit's work.
+        assert!(spread.bottleneck < stacked.bottleneck);
+        assert!(spread.throughput > stacked.throughput);
+    }
+
+    #[test]
+    fn atp_throughput_at_least_sequential() {
+        let f = fleet(2);
+        let ps = pipelines(2);
+        let lm = LatencyModel::new(&f);
+        let plan = CollabPlan::new(vec![local_plan(0, 0, &ps), local_plan(1, 1, &ps)]);
+        let est = estimate_plan(&plan, &ps, &f, &lm);
+        assert!(est.throughput >= est.throughput_sequential - 1e-12);
+    }
+
+    #[test]
+    fn power_includes_base_draw() {
+        let f = fleet(2);
+        let ps = pipelines(1);
+        let lm = LatencyModel::new(&f);
+        let plan = CollabPlan::new(vec![local_plan(0, 0, &ps)]);
+        let est = estimate_plan(&plan, &ps, &f, &lm);
+        let base: f64 = f.devices.iter().map(|d| d.spec.power.base_w).sum();
+        assert!(est.power_w > base);
+    }
+
+    #[test]
+    fn cross_device_plan_pays_radio_time() {
+        let f = fleet(2);
+        let ps = pipelines(1);
+        let lm = LatencyModel::new(&f);
+        let local = estimate_plan(
+            &CollabPlan::new(vec![local_plan(0, 0, &ps)]),
+            &ps, &f, &lm,
+        );
+        let remote = estimate_plan(
+            &CollabPlan::new(vec![ExecutionPlan::monolithic(
+                &ps[0], DeviceId(0), DeviceId(1), DeviceId(0),
+            )]),
+            &ps, &f, &lm,
+        );
+        assert!(remote.critical_path > 2.0 * local.critical_path);
+    }
+}

@@ -1,0 +1,142 @@
+//! Shared experiment infrastructure: the method roster (Synergy + the 7
+//! baselines), and plan-then-simulate evaluation on the DES ground truth.
+
+use crate::baselines::{Cost, IndE2E, IndModel, JointModel, MaxDev, MinDev, PriMaxDev, PriMinDev};
+use crate::device::Fleet;
+use crate::orchestrator::{Objective, PlanError, Planner, Synergy};
+use crate::pipeline::PipelineSpec;
+use crate::scheduler::{simulate, GroundTruth, SimConfig, SimReport};
+use crate::util::cli::Args;
+
+/// Measured metrics of one (method, workload) cell; `None` means OOR.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub method: &'static str,
+    pub result: Option<SimReport>,
+    pub error: Option<PlanError>,
+}
+
+impl Cell {
+    pub fn tput(&self) -> Option<f64> {
+        self.result.as_ref().map(|r| r.throughput)
+    }
+
+    pub fn latency(&self) -> Option<f64> {
+        self.result.as_ref().map(|r| r.avg_latency)
+    }
+
+    pub fn power(&self) -> Option<f64> {
+        self.result.as_ref().map(|r| r.power_w)
+    }
+
+    pub fn fmt_tput(&self) -> String {
+        crate::util::table::fmt_or_oor(self.tput(), "")
+    }
+
+    pub fn fmt_latency(&self) -> String {
+        crate::util::table::fmt_or_oor(self.latency(), "")
+    }
+
+    pub fn fmt_power(&self) -> String {
+        crate::util::table::fmt_or_oor(self.power(), "")
+    }
+}
+
+/// The Fig. 15 method roster: Synergy + 7 baselines, in paper order.
+pub fn method_roster(objective: Objective, cost: Cost) -> Vec<(&'static str, Box<dyn Planner>)> {
+    vec![
+        ("Synergy", Box::new(Synergy::with_objective(objective))),
+        ("MinDev", Box::new(MinDev)),
+        ("MaxDev", Box::new(MaxDev)),
+        ("PriMinDev", Box::new(PriMinDev)),
+        ("PriMaxDev", Box::new(PriMaxDev)),
+        ("IndModel", Box::new(IndModel { cost })),
+        ("JointModel", Box::new(JointModel { cost })),
+        ("IndE2E", Box::new(IndE2E { cost })),
+    ]
+}
+
+/// Simulation length from CLI (`--runs`, `--seed`).
+pub fn sim_cfg_from(args: &Args, policy: crate::scheduler::Policy) -> (SimConfig, u64) {
+    let runs = args.opt_parse("runs", 24usize).max(6);
+    let seed = args.opt_parse("seed", 7u64);
+    (
+        SimConfig {
+            runs,
+            warmup: (runs / 6).min(4),
+            policy,
+            record_trace: false,
+        },
+        seed,
+    )
+}
+
+/// Plan with `planner`, then execute on the DES with the planner's policy.
+pub fn evaluate(
+    planner: &dyn Planner,
+    method: &'static str,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+    args: &Args,
+) -> Cell {
+    match planner.plan(pipelines, fleet) {
+        Ok(plan) => {
+            debug_assert!(plan.check_runnable(pipelines, fleet).is_ok());
+            let (cfg, seed) = sim_cfg_from(args, planner.exec_policy());
+            let gt = GroundTruth::with_seed(seed);
+            let report = simulate(&plan, pipelines, fleet, &gt, cfg);
+            Cell {
+                method,
+                result: Some(report),
+                error: None,
+            }
+        }
+        Err(e) => Cell {
+            method,
+            result: None,
+            error: Some(e),
+        },
+    }
+}
+
+/// Evaluate the whole roster on one workload.
+pub fn evaluate_roster(
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+    objective: Objective,
+    cost: Cost,
+    args: &Args,
+) -> Vec<Cell> {
+    method_roster(objective, cost)
+        .iter()
+        .map(|(name, planner)| evaluate(planner.as_ref(), name, pipelines, fleet, args))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{fleet4, workload};
+
+    #[test]
+    fn roster_has_eight_methods() {
+        assert_eq!(method_roster(Objective::TputMax, Cost::Latency).len(), 8);
+    }
+
+    #[test]
+    fn evaluate_roster_on_workload1() {
+        let args = Args::default();
+        let w = workload(1);
+        let f = fleet4();
+        let cells = evaluate_roster(&w.pipelines, &f, Objective::TputMax, Cost::Latency, &args);
+        assert_eq!(cells.len(), 8);
+        // Synergy must succeed on its own headline workload.
+        assert!(cells[0].result.is_some(), "{:?}", cells[0].error);
+        // Every successful cell has positive throughput.
+        for c in &cells {
+            if let Some(t) = c.tput() {
+                assert!(t > 0.0, "{}", c.method);
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Fig. 15 — overall performance: throughput, latency and power for the
+//! four Table I workloads across Synergy and the seven baselines.
+//! Paper shape: Synergy always best (avg 23.0× TPUT, −73.9% latency,
+//! −15.8% power vs baselines); IndModel OORs on Workloads 1–2; on
+//! Workloads 3–4 Synergy beats the runner-up (IndE2E) by 1.8× / 2.2×.
+
+use crate::baselines::Cost;
+use crate::experiments::common::evaluate_roster;
+use crate::orchestrator::Objective;
+use crate::util::cli::Args;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::workload::{all_workloads, fleet4};
+
+pub fn run(args: &Args) -> String {
+    let fleet = fleet4();
+    let mut out = String::new();
+    let mut tput_gains = Vec::new();
+    let mut lat_reductions = Vec::new();
+    let mut pow_reductions = Vec::new();
+    for w in all_workloads() {
+        let cells = evaluate_roster(&w.pipelines, &fleet, Objective::TputMax, Cost::Latency, args);
+        let mut t = Table::new(["method", "TPUT (inf/s)", "latency (s)", "power (J/s)"]);
+        for c in &cells {
+            t.row([
+                c.method.to_string(),
+                c.fmt_tput(),
+                c.fmt_latency(),
+                c.fmt_power(),
+            ]);
+        }
+        out.push_str(&format!("\n--- {} ---\n{}", w.name, t.render()));
+        let synergy = &cells[0];
+        for c in &cells[1..] {
+            if let (Some(st), Some(bt)) = (synergy.tput(), c.tput()) {
+                tput_gains.push(st / bt);
+            }
+            if let (Some(sl), Some(bl)) = (synergy.latency(), c.latency()) {
+                lat_reductions.push(1.0 - sl / bl);
+            }
+            if let (Some(sp), Some(bp)) = (synergy.power(), c.power()) {
+                pow_reductions.push(1.0 - sp / bp);
+            }
+        }
+    }
+    out.push_str(&format!(
+        "\nsummary vs baselines (geomean gains): TPUT {:.1}× (paper 23.0×), \
+         latency −{:.1}% (paper −73.9%), power {:+.1}% (paper −15.8%)\n",
+        geomean(&tput_gains),
+        100.0 * crate::util::stats::mean(&lat_reductions),
+        -100.0 * crate::util::stats::mean(&pow_reductions),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::workload;
+
+    #[test]
+    fn synergy_wins_every_workload() {
+        let args = Args::parse(["--runs".to_string(), "12".to_string()], &["runs"]);
+        let fleet = fleet4();
+        for wid in 1..=4 {
+            let w = workload(wid);
+            let cells =
+                evaluate_roster(&w.pipelines, &fleet, Objective::TputMax, Cost::Latency, &args);
+            let synergy = cells[0].tput().expect("Synergy must not OOR");
+            for c in &cells[1..] {
+                if let Some(t) = c.tput() {
+                    assert!(
+                        synergy >= t * 0.95,
+                        "{}: Synergy {synergy:.2} vs {} {t:.2}",
+                        w.name,
+                        c.method
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn indmodel_oors_under_contention() {
+        // Workload 2's three mid-size models collide when placed
+        // independently (the paper's IndModel failure).
+        let args = Args::parse(["--runs".to_string(), "8".to_string()], &["runs"]);
+        let w = workload(2);
+        let cells = evaluate_roster(&w.pipelines, &fleet4(), Objective::TputMax, Cost::Latency, &args);
+        let ind = cells.iter().find(|c| c.method == "IndModel").unwrap();
+        assert!(ind.result.is_none(), "IndModel should OOR on W2");
+    }
+}

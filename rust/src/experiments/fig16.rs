@@ -1,0 +1,121 @@
+//! Fig. 16 — runtime environment changes.
+//!
+//! (a) Number of devices 2–5 with four pipelines (ConvNet5, KWS, SimpleNet,
+//!     ResSimpleNet): Synergy's throughput grows with devices and
+//!     saturates around 4; most baselines stay flat.
+//! (b) Number of pipelines 1–6 (UNet, ConvNet5, SimpleNet, KWS,
+//!     ResSimpleNet, WideNet) on four devices: *average* per-pipeline
+//!     throughput declines under contention; Synergy stays on top
+//!     (paper: 1.35 avg at six pipelines, 19.4× the runner-up).
+
+use crate::baselines::Cost;
+use crate::experiments::common::evaluate_roster;
+use crate::model::zoo::ModelName;
+use crate::orchestrator::Objective;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::workload::{fleet_n, pipelines_with_mapping, EndpointMapping};
+
+const FIG16A_MODELS: [ModelName; 4] = [
+    ModelName::ConvNet5,
+    ModelName::KWS,
+    ModelName::SimpleNet,
+    ModelName::ResSimpleNet,
+];
+
+const FIG16B_MODELS: [ModelName; 6] = [
+    ModelName::UNet,
+    ModelName::ConvNet5,
+    ModelName::SimpleNet,
+    ModelName::KWS,
+    ModelName::ResSimpleNet,
+    ModelName::WideNet,
+];
+
+pub fn run_a(args: &Args) -> String {
+    let mut t = Table::new(["method", "2 dev", "3 dev", "4 dev", "5 dev"]);
+    let mut rows: Vec<Vec<String>> = vec![];
+    for ndev in 2..=5 {
+        let fleet = fleet_n(ndev);
+        let pipelines =
+            pipelines_with_mapping(&FIG16A_MODELS, EndpointMapping::Distributed, ndev);
+        let cells = evaluate_roster(&pipelines, &fleet, Objective::TputMax, Cost::Latency, args);
+        for (i, c) in cells.iter().enumerate() {
+            if rows.len() <= i {
+                rows.push(vec![c.method.to_string()]);
+            }
+            rows[i].push(c.fmt_tput());
+        }
+    }
+    for r in rows {
+        t.row(r);
+    }
+    let mut out = t.render();
+    out.push_str("\npaper shape: Synergy grows with devices and saturates at 4; baselines mostly flat\n");
+    out
+}
+
+pub fn run_b(args: &Args) -> String {
+    let mut t = Table::new(["method", "1", "2", "3", "4", "5", "6 pipelines (avg TPUT)"]);
+    let mut rows: Vec<Vec<String>> = vec![];
+    for n in 1..=6 {
+        let fleet = fleet_n(4);
+        let pipelines = pipelines_with_mapping(&FIG16B_MODELS[..n], EndpointMapping::Distributed, 4);
+        let cells = evaluate_roster(&pipelines, &fleet, Objective::TputMax, Cost::Latency, args);
+        for (i, c) in cells.iter().enumerate() {
+            if rows.len() <= i {
+                rows.push(vec![c.method.to_string()]);
+            }
+            // Average throughput across pipelines (§VI-C1).
+            rows[i].push(match c.tput() {
+                Some(tp) => format!("{:.2}", tp / n as f64),
+                None => "OOR".to_string(),
+            });
+        }
+    }
+    for r in rows {
+        t.row(r);
+    }
+    let mut out = t.render();
+    out.push_str("\npaper: average TPUT declines with pipeline count; Synergy 1.35 at 6 (19.4× runner-up)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::evaluate;
+    use crate::orchestrator::Synergy;
+
+    #[test]
+    fn more_devices_do_not_hurt_synergy() {
+        let args = Args::parse(["--runs".to_string(), "10".to_string()], &["runs"]);
+        let mut tputs = Vec::new();
+        for ndev in 2..=5 {
+            let fleet = fleet_n(ndev);
+            let pipelines =
+                pipelines_with_mapping(&FIG16A_MODELS, EndpointMapping::Distributed, ndev);
+            let cell = evaluate(&Synergy::planner(), "Synergy", &pipelines, &fleet, &args);
+            tputs.push(cell.tput().expect("Synergy OOR"));
+        }
+        for w in tputs.windows(2) {
+            assert!(w[1] >= w[0] * 0.8, "device scaling regressed: {tputs:?}");
+        }
+    }
+
+    #[test]
+    fn average_tput_declines_with_pipelines() {
+        let args = Args::parse(["--runs".to_string(), "10".to_string()], &["runs"]);
+        let fleet = fleet_n(4);
+        let one = pipelines_with_mapping(&FIG16B_MODELS[..1], EndpointMapping::Distributed, 4);
+        let six = pipelines_with_mapping(&FIG16B_MODELS[..6], EndpointMapping::Distributed, 4);
+        let t1 = evaluate(&Synergy::planner(), "Synergy", &one, &fleet, &args)
+            .tput()
+            .unwrap();
+        let t6 = evaluate(&Synergy::planner(), "Synergy", &six, &fleet, &args)
+            .tput()
+            .unwrap()
+            / 6.0;
+        assert!(t6 < t1, "contention must reduce average TPUT: {t6} vs {t1}");
+    }
+}

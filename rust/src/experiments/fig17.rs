@@ -1,0 +1,63 @@
+//! Fig. 17 — composing heterogeneous accelerators: three pipelines
+//! (ConvNet5, UNet, EfficientNetV2) on four MAX78000s vs three MAX78000s +
+//! one MAX78002. Paper: Synergy 0.93 → 3.33 TPUT with the 78002;
+//! PriMinDev collapses to 0.06 by stacking everything on the big device;
+//! IndE2E OORs on the homogeneous fleet but recovers with the 78002.
+
+use crate::baselines::Cost;
+use crate::experiments::common::evaluate_roster;
+use crate::model::zoo::ModelName;
+use crate::orchestrator::Objective;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::workload::{fleet4, fleet4_hetero, pipelines_with_mapping, EndpointMapping};
+
+const MODELS: [ModelName; 3] = [
+    ModelName::ConvNet5,
+    ModelName::UNet,
+    ModelName::EfficientNetV2,
+];
+
+pub fn run(args: &Args) -> String {
+    let pipelines = pipelines_with_mapping(&MODELS, EndpointMapping::Distributed, 4);
+    let mut t = Table::new(["method", "4×78000", "3×78000 + 78002"]);
+    let homo = evaluate_roster(&pipelines, &fleet4(), Objective::TputMax, Cost::Latency, args);
+    let hetero =
+        evaluate_roster(&pipelines, &fleet4_hetero(), Objective::TputMax, Cost::Latency, args);
+    for (a, b) in homo.iter().zip(&hetero) {
+        t.row([a.method.to_string(), a.fmt_tput(), b.fmt_tput()]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "\npaper: Synergy 0.93 → 3.33; PriMinDev 0.06 with the 78002 (stacks everything \
+         on it); IndE2E OOR on 4×78000 but second best with the 78002\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upgrade_helps_synergy() {
+        let args = Args::parse(["--runs".to_string(), "10".to_string()], &["runs"]);
+        let pipelines = pipelines_with_mapping(&MODELS, EndpointMapping::Distributed, 4);
+        let homo =
+            evaluate_roster(&pipelines, &fleet4(), Objective::TputMax, Cost::Latency, &args);
+        let hetero =
+            evaluate_roster(&pipelines, &fleet4_hetero(), Objective::TputMax, Cost::Latency, &args);
+        let s_homo = homo[0].tput().expect("Synergy OOR homo");
+        let s_hetero = hetero[0].tput().expect("Synergy OOR hetero");
+        assert!(
+            s_hetero >= s_homo,
+            "78002 should not hurt: {s_homo} → {s_hetero}"
+        );
+        // Synergy must remain the best method on the hetero fleet.
+        for c in &hetero[1..] {
+            if let Some(t) = c.tput() {
+                assert!(s_hetero >= t * 0.95, "{}: {t}", c.method);
+            }
+        }
+    }
+}

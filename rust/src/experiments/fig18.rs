@@ -1,0 +1,93 @@
+//! Fig. 18 — effect of source/target mappings on Synergy's planning:
+//! Any (free endpoint choice), Distributed (spread endpoints, the
+//! Workload 1 default) and Overlapped (one device is both source and
+//! target for every pipeline).
+//!
+//! The paper reports Overlapped < Distributed < Any, *because* in its setup
+//! the overlapped device cannot host the models, so every pipeline's data
+//! funnels through that one radio. Our fitted zoo reproduces Table I's
+//! sizes but is slightly more colocatable (ConvNet5 + UNet + part of
+//! ResSimpleNet squeeze into 442 KB / 32 layers), so the three-pipeline
+//! Overlapped case partially escapes the bottleneck. We therefore report
+//! both the paper's exact triple AND a memory-pressured variant (adding
+//! WideNet, pushing past one device's capacity) where the communication
+//! funnel — and the paper's ordering — emerges. See EXPERIMENTS.md.
+
+use crate::experiments::common::evaluate;
+use crate::model::zoo::ModelName;
+use crate::orchestrator::Synergy;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::workload::{fleet4, pipelines_with_mapping, EndpointMapping};
+
+const W1_MODELS: [ModelName; 3] = [
+    ModelName::ConvNet5,
+    ModelName::ResSimpleNet,
+    ModelName::UNet,
+];
+
+const PRESSURED_MODELS: [ModelName; 4] = [
+    ModelName::ConvNet5,
+    ModelName::ResSimpleNet,
+    ModelName::UNet,
+    ModelName::WideNet,
+];
+
+pub fn tput(models: &[ModelName], mapping: EndpointMapping, args: &Args) -> Option<f64> {
+    let fleet = fleet4();
+    let pipelines = pipelines_with_mapping(models, mapping, 4);
+    evaluate(&Synergy::planner(), "Synergy", &pipelines, &fleet, args).tput()
+}
+
+pub fn run(args: &Args) -> String {
+    let mut out = String::new();
+    for (label, models) in [
+        ("Workload 1 triple", &W1_MODELS[..]),
+        ("memory-pressured (+WideNet)", &PRESSURED_MODELS[..]),
+    ] {
+        let mut t = Table::new(["mapping", "TPUT (inf/s)"]);
+        for (name, mapping) in [
+            ("Any", EndpointMapping::Any),
+            ("Distributed", EndpointMapping::Distributed),
+            ("Overlapped", EndpointMapping::Overlapped),
+        ] {
+            let v = tput(models, mapping, args);
+            t.row([
+                name.to_string(),
+                crate::util::table::fmt_or_oor(v, ""),
+            ]);
+        }
+        out.push_str(&format!("\n--- {label} ---\n{}", t.render()));
+    }
+    out.push_str(
+        "\npaper: Overlapped lowest (communication funnel through the shared endpoint \
+         device), Any highest; the funnel requires the models to exceed one device's \
+         capacity, which the pressured variant enforces\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn any_is_best_mapping() {
+        let args = Args::parse(["--runs".to_string(), "10".to_string()], &["runs"]);
+        let any = tput(&W1_MODELS, EndpointMapping::Any, &args).unwrap();
+        let dist = tput(&W1_MODELS, EndpointMapping::Distributed, &args).unwrap();
+        assert!(any >= dist * 0.95, "Any {any} vs Distributed {dist}");
+    }
+
+    #[test]
+    fn pressured_overlapped_hits_the_communication_funnel() {
+        let args = Args::parse(["--runs".to_string(), "10".to_string()], &["runs"]);
+        let dist = tput(&PRESSURED_MODELS, EndpointMapping::Distributed, &args).unwrap();
+        let over = tput(&PRESSURED_MODELS, EndpointMapping::Overlapped, &args).unwrap();
+        assert!(
+            dist >= over,
+            "under memory pressure the overlapped endpoint funnels traffic: \
+             Distributed {dist} vs Overlapped {over}"
+        );
+    }
+}

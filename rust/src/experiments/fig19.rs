@@ -1,0 +1,51 @@
+//! Fig. 19 — minimizing power as the objective across methods on
+//! Workloads 1–2: every planner selects plans prioritizing minimal power
+//! (the partitioning baselines switch to an energy cost; the structural
+//! heuristics already minimize radio bytes, the dominant consumer).
+//! Paper: Synergy executes both workloads at the lowest power, no OOR.
+
+use crate::baselines::Cost;
+use crate::experiments::common::evaluate_roster;
+use crate::orchestrator::Objective;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::workload::{fleet4, workload};
+
+pub fn run(args: &Args) -> String {
+    let mut out = String::new();
+    for wid in [1usize, 2] {
+        let w = workload(wid);
+        let cells =
+            evaluate_roster(&w.pipelines, &fleet4(), Objective::PowerMin, Cost::Energy, args);
+        let mut t = Table::new(["method", "power (J/s)", "TPUT (inf/s)"]);
+        for c in &cells {
+            t.row([c.method.to_string(), c.fmt_power(), c.fmt_tput()]);
+        }
+        out.push_str(&format!("\n--- {} (Power-min) ---\n{}", w.name, t.render()));
+    }
+    out.push_str("\npaper: Synergy lowest power on both workloads, without OOR\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synergy_power_is_minimal_among_successes() {
+        let args = Args::parse(["--runs".to_string(), "10".to_string()], &["runs"]);
+        let w = workload(1);
+        let cells =
+            evaluate_roster(&w.pipelines, &fleet4(), Objective::PowerMin, Cost::Energy, &args);
+        let synergy = cells[0].power().expect("Synergy must not OOR");
+        for c in &cells[1..] {
+            if let Some(p) = c.power() {
+                assert!(
+                    synergy <= p * 1.02,
+                    "{}: {p:.3} W beats Synergy {synergy:.3} W",
+                    c.method
+                );
+            }
+        }
+    }
+}

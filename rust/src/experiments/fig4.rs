@@ -1,0 +1,69 @@
+//! Fig. 4 — Synergy (accelerator collaboration) vs smartphone offloading on
+//! Workloads 1–2: total throughput and average power. Paper: 57.7× and
+//! 28.8× throughput in favor of Synergy, with less or comparable power.
+
+use crate::baselines::PhoneOffload;
+use crate::experiments::common::{evaluate, sim_cfg_from};
+use crate::orchestrator::Synergy;
+use crate::util::cli::Args;
+use crate::util::table::{fmt_ratio, Table};
+use crate::workload::{fleet4, fleet4_with_phone, workload};
+
+pub fn run(args: &Args) -> String {
+    let mut t = Table::new([
+        "workload",
+        "Synergy TPUT",
+        "Offload TPUT",
+        "ratio",
+        "paper",
+        "Synergy W",
+        "Offload W",
+    ]);
+    let paper_ratio = [57.7, 28.8];
+    for (i, wid) in [1usize, 2].iter().enumerate() {
+        let w = workload(*wid);
+        let synergy = evaluate(&Synergy::planner(), "Synergy", &w.pipelines, &fleet4(), args);
+        let offload = evaluate(
+            &PhoneOffload,
+            "PhoneOffload",
+            &w.pipelines,
+            &fleet4_with_phone(),
+            args,
+        );
+        let (st, ot) = (synergy.tput().unwrap_or(0.0), offload.tput().unwrap_or(0.0));
+        t.row([
+            w.name.clone(),
+            format!("{st:.2}"),
+            format!("{ot:.3}"),
+            fmt_ratio(st / ot.max(1e-9)),
+            fmt_ratio(paper_ratio[i]),
+            format!("{:.2}", synergy.power().unwrap_or(0.0)),
+            format!("{:.2}", offload.power().unwrap_or(0.0)),
+        ]);
+    }
+    let _ = sim_cfg_from(args, crate::scheduler::Policy::atp());
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synergy_beats_offloading_by_an_order_of_magnitude() {
+        let args = Args::default();
+        let w = workload(1);
+        let synergy = evaluate(&Synergy::planner(), "Synergy", &w.pipelines, &fleet4(), &args);
+        let offload = evaluate(
+            &PhoneOffload,
+            "PhoneOffload",
+            &w.pipelines,
+            &fleet4_with_phone(),
+            &args,
+        );
+        let ratio = synergy.tput().unwrap() / offload.tput().unwrap();
+        assert!(ratio > 5.0, "ratio {ratio}");
+        // Offloading's continuous raw-data streaming must not be cheaper.
+        assert!(offload.power().unwrap() > 0.9 * synergy.power().unwrap());
+    }
+}

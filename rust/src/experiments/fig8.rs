@@ -1,0 +1,78 @@
+//! Fig. 8 — layer-wise latency decomposition for UNet on the MAX78000:
+//! inference vs memory (load/unload) vs communication per split boundary,
+//! alongside output sizes. The paper's totals: inference 1.5 ms, memory
+//! 10.6 ms (7×), communication 6 869.1 ms (4 579×); per-boundary comm spans
+//! a 36× range. These ratios are what drive data-intensity prioritization.
+
+use crate::device::DeviceKind;
+use crate::estimator::clock;
+use crate::model::zoo::{model_by_name, ModelName};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn run(_args: &Args) -> String {
+    let m = model_by_name(ModelName::UNet);
+    let spec = DeviceKind::Max78000.spec();
+    let accel = spec.accel.as_ref().unwrap();
+    let radio = &spec.radio;
+
+    let mut t = Table::new(["layer", "out bytes", "infer (ms)", "mem (ms)", "comm (ms)"]);
+    let (mut inf_tot, mut mem_tot, mut comm_tot) = (0.0, 0.0, 0.0);
+    let (mut comm_min, mut comm_max) = (f64::INFINITY, 0.0f64);
+    for l in 0..m.num_layers() {
+        let infer =
+            clock::infer_latency_accel(m, crate::model::SplitRange::new(l, l + 1), accel.parallel_procs, accel.clock_hz);
+        let out_bytes = m.out_bytes(l);
+        // Memory: unloading this layer's output + loading it on the peer.
+        let mem = 2.0 * (accel.bus_overhead_s + out_bytes as f64 / accel.bus_bytes_per_s);
+        let comm = radio.tx_time(out_bytes);
+        inf_tot += infer;
+        mem_tot += mem;
+        comm_tot += comm;
+        comm_min = comm_min.min(comm);
+        comm_max = comm_max.max(comm);
+        t.row([
+            format!("{l}"),
+            format!("{out_bytes}"),
+            format!("{:.3}", infer * 1e3),
+            format!("{:.3}", mem * 1e3),
+            format!("{:.1}", comm * 1e3),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\ntotals: inference {:.1} ms, memory {:.1} ms ({:.1}× inf; paper 7×), \
+         comm {:.0} ms ({:.0}× inf; paper 4579×)\n\
+         per-boundary comm spread: {:.1}× (paper 36×)\n",
+        inf_tot * 1e3,
+        mem_tot * 1e3,
+        mem_tot / inf_tot,
+        comm_tot * 1e3,
+        comm_tot / inf_tot,
+        comm_max / comm_min,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_dominates_memory_dominates_inference() {
+        let report = run(&Args::default());
+        let totals = report
+            .lines()
+            .find(|l| l.starts_with("totals:"))
+            .unwrap()
+            .to_string();
+        // Extract the two ratio figures.
+        let ratios: Vec<f64> = totals
+            .split('(')
+            .skip(1)
+            .filter_map(|s| s.split('×').next()?.trim().parse().ok())
+            .collect();
+        assert!(ratios[0] > 2.0, "memory ≫ inference: {ratios:?}");
+        assert!(ratios[1] > 500.0, "comm ≫ inference: {ratios:?}");
+    }
+}

@@ -1,0 +1,64 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Every experiment regenerates its table/figure's rows on the simulated
+//! hardware substrate and prints them next to the paper's reported values
+//! where the paper gives numbers. Run via `synergy exp <id>` or
+//! `synergy exp all`; results are recorded in EXPERIMENTS.md.
+
+pub mod common;
+pub mod fig2;
+pub mod fig4;
+pub mod fig8;
+pub mod fig9;
+pub mod fig11;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+pub mod fig19;
+pub mod table2;
+pub mod table3;
+
+use crate::util::cli::Args;
+
+/// An experiment: id, one-line description, and the runner.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub runner: fn(&Args) -> String,
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig2", paper_ref: "Fig. 2 — accelerator vs MCU latency/energy", runner: fig2::run },
+        Experiment { id: "fig4", paper_ref: "Fig. 4 — Synergy vs phone offloading", runner: fig4::run },
+        Experiment { id: "fig8", paper_ref: "Fig. 8 — UNet layer-wise latency decomposition", runner: fig8::run },
+        Experiment { id: "fig9", paper_ref: "Fig. 9 — prioritization strategies vs Oracle", runner: fig9::run },
+        Experiment { id: "fig11", paper_ref: "Fig. 11 — params vs clock-cycle latency correlation", runner: fig11::run },
+        Experiment { id: "fig15", paper_ref: "Fig. 15 — overall performance, 4 workloads × 8 methods", runner: fig15::run },
+        Experiment { id: "table2", paper_ref: "Table II — ablation (JRC/STT/PSR/ATP)", runner: table2::run },
+        Experiment { id: "fig16a", paper_ref: "Fig. 16a — number of devices", runner: fig16::run_a },
+        Experiment { id: "fig16b", paper_ref: "Fig. 16b — number of pipelines", runner: fig16::run_b },
+        Experiment { id: "fig17", paper_ref: "Fig. 17 — heterogeneous accelerator composition", runner: fig17::run },
+        Experiment { id: "fig18", paper_ref: "Fig. 18 — source/target mappings", runner: fig18::run },
+        Experiment { id: "table3", paper_ref: "Table III — objectives (TPUT/Latency/Power)", runner: table3::run },
+        Experiment { id: "fig19", paper_ref: "Fig. 19 — Power-min objective across methods", runner: fig19::run },
+    ]
+}
+
+/// Run one experiment by id (or `all`), returning the rendered report.
+pub fn run(id: &str, args: &Args) -> Option<String> {
+    if id == "all" {
+        let mut out = String::new();
+        for e in registry() {
+            out.push_str(&format!("\n===== {} ({}) =====\n", e.id, e.paper_ref));
+            out.push_str(&(e.runner)(args));
+        }
+        return Some(out);
+    }
+    registry()
+        .into_iter()
+        .find(|e| e.id == id)
+        .map(|e| (e.runner)(args))
+}

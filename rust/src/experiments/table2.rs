@@ -1,0 +1,101 @@
+//! Table II — ablation of Synergy's components on Workloads 1–2:
+//!
+//! | row            | planner                                   | execution  |
+//! |----------------|-------------------------------------------|------------|
+//! | (none)         | IndModel                                  | sequential |
+//! | JRC            | JointModel (joint resource consideration) | sequential |
+//! | JRC+STT        | JointE2E (adds source/target awareness)   | sequential |
+//! | JRC+STT+PSR    | progressive accumulation (holistic score) | sequential |
+//! | +ATP (Synergy) | progressive accumulation                  | ATP        |
+//!
+//! Paper: W1 OOR → 0.06 → 0.92 → 2.72 → 4.20 inf/s; W2 OOR → 2.30 → 15.28
+//! → 15.28 → 29.67, with latency falling and power roughly flat.
+
+use crate::baselines::{IndModel, JointE2E, JointModel};
+use crate::experiments::common::{evaluate, Cell};
+use crate::orchestrator::{Objective, Priority, ProgressivePlanner};
+use crate::scheduler::Policy;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::workload::{fleet4, workload};
+
+fn psr_planner(policy: Policy) -> ProgressivePlanner {
+    let mut p = ProgressivePlanner::new(Priority::DataIntensityDesc, Objective::TputMax);
+    p.policy = policy;
+    p
+}
+
+pub fn rows(args: &Args, wid: usize) -> Vec<(&'static str, Cell)> {
+    let w = workload(wid);
+    let f = fleet4();
+    vec![
+        (
+            "IndModel (none)",
+            evaluate(&IndModel::default(), "IndModel", &w.pipelines, &f, args),
+        ),
+        (
+            "JRC",
+            evaluate(&JointModel::default(), "JointModel", &w.pipelines, &f, args),
+        ),
+        (
+            "JRC+STT",
+            evaluate(&JointE2E::default(), "JointE2E", &w.pipelines, &f, args),
+        ),
+        (
+            "JRC+STT+PSR",
+            evaluate(&psr_planner(Policy::Sequential), "PSR", &w.pipelines, &f, args),
+        ),
+        (
+            "JRC+STT+PSR+ATP",
+            evaluate(&psr_planner(Policy::atp()), "Synergy", &w.pipelines, &f, args),
+        ),
+    ]
+}
+
+pub fn run(args: &Args) -> String {
+    let mut out = String::new();
+    for wid in [1usize, 2] {
+        let mut t = Table::new(["components", "TPUT (inf/s)", "latency (s)", "power (J/s)"]);
+        for (label, cell) in rows(args, wid) {
+            t.row([
+                label.to_string(),
+                cell.fmt_tput(),
+                cell.fmt_latency(),
+                cell.fmt_power(),
+            ]);
+        }
+        out.push_str(&format!("\n--- Workload {wid} ---\n{}", t.render()));
+    }
+    out.push_str(
+        "\npaper W1: OOR → 0.06 → 0.92 → 2.72 → 4.20 inf/s; \
+         W2: OOR → 2.30 → 15.28 → 15.28 → 29.67 inf/s\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn each_component_is_monotone_on_workload1() {
+        let args = Args::parse(["--runs".to_string(), "12".to_string()], &["runs"]);
+        let r = rows(&args, 1);
+        // IndModel OORs; after that throughput must be non-decreasing.
+        let tputs: Vec<Option<f64>> = r.iter().map(|(_, c)| c.tput()).collect();
+        let mut prev = 0.0;
+        for (i, t) in tputs.iter().enumerate().skip(1) {
+            let t = t.unwrap_or_else(|| panic!("row {i} OOR"));
+            assert!(
+                t >= prev * 0.9,
+                "row {i} ({}) regressed: {t} < {prev}",
+                r[i].0
+            );
+            prev = prev.max(t);
+        }
+        // ATP must beat the sequential PSR row.
+        let psr = tputs[3].unwrap();
+        let atp = tputs[4].unwrap();
+        assert!(atp > psr, "ATP {atp} vs PSR {psr}");
+    }
+}

@@ -1,0 +1,68 @@
+//! Table III — different objectives on Workloads 1–2: Synergy planning for
+//! TPUT-max (default), Latency-min, and Power-min. Each objective must win
+//! its own metric; TPUT-max should be the balanced choice (paper: 22.1×
+//! the throughput of Power-min at only 1.2× the power on W1).
+
+use crate::experiments::common::evaluate;
+use crate::orchestrator::{Objective, Synergy};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::workload::{fleet4, workload};
+
+pub fn cells(args: &Args, wid: usize) -> Vec<(Objective, crate::experiments::common::Cell)> {
+    let w = workload(wid);
+    let f = fleet4();
+    [Objective::TputMax, Objective::LatencyMin, Objective::PowerMin]
+        .into_iter()
+        .map(|obj| {
+            let planner = Synergy::with_objective(obj);
+            (obj, evaluate(&planner, obj.name(), &w.pipelines, &f, args))
+        })
+        .collect()
+}
+
+pub fn run(args: &Args) -> String {
+    let mut out = String::new();
+    for wid in [1usize, 2] {
+        let mut t = Table::new(["objective", "TPUT (inf/s)", "latency (s)", "power (J/s)"]);
+        for (obj, cell) in cells(args, wid) {
+            t.row([
+                obj.name().to_string(),
+                cell.fmt_tput(),
+                cell.fmt_latency(),
+                cell.fmt_power(),
+            ]);
+        }
+        out.push_str(&format!("\n--- Workload {wid} ---\n{}", t.render()));
+    }
+    out.push_str(
+        "\npaper W1: TPUT-max 4.20/0.86s/1.47W; Latency-min 3.15/0.86/1.42; \
+         Power-min 0.19/27.17/1.22\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn each_objective_wins_its_metric() {
+        let args = Args::parse(["--runs".to_string(), "12".to_string()], &["runs"]);
+        let rows = cells(&args, 1);
+        let get = |o: Objective| {
+            rows.iter()
+                .find(|(obj, _)| *obj == o)
+                .map(|(_, c)| c.result.clone().unwrap())
+                .unwrap()
+        };
+        let tput = get(Objective::TputMax);
+        let lat = get(Objective::LatencyMin);
+        let pow = get(Objective::PowerMin);
+        assert!(tput.throughput >= lat.throughput * 0.95);
+        assert!(tput.throughput >= pow.throughput * 0.95);
+        assert!(lat.avg_latency <= tput.avg_latency * 1.1);
+        assert!(pow.power_w <= tput.power_w * 1.05);
+        assert!(pow.power_w <= lat.power_w * 1.05);
+    }
+}

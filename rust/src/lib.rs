@@ -1,0 +1,54 @@
+//! # Synergy — on-body AI via tiny AI accelerator collaboration
+//!
+//! A full-system reproduction of *Synergy: Towards On-Body AI via Tiny AI
+//! Accelerator Collaboration on Wearables* (Gong et al., Nokia Bell Labs).
+//!
+//! Synergy is a runtime orchestration system for concurrent on-body AI apps
+//! running across wearables equipped with tiny AI accelerators (MAX78000 /
+//! MAX78002 class). Apps are written against a device-agnostic pipeline
+//! interface (sensing → model → interaction); the runtime enumerates
+//! execution plans (including layer-wise model splits across accelerators),
+//! selects a *holistic collaboration plan* for all concurrent apps under
+//! memory constraints, and executes it with an adaptive task parallelization
+//! scheduler over per-computation-unit queues.
+//!
+//! The crate is organized in rough dependency order:
+//!
+//! - [`util`], [`testkit`] — in-repo substrates (JSON, PRNG, CLI, stats,
+//!   property testing); only the `xla` crate's dependency tree is available.
+//! - [`model`] — layer algebra and the paper's 8-model zoo (Table I).
+//! - [`device`] — the hardware substrate: MAX78000/78002 specs, memory
+//!   accounting, radio and power models.
+//! - [`pipeline`] — §IV-B device-agnostic programming interface.
+//! - [`plan`] — §IV-C execution plans + holistic collaboration plans.
+//! - [`estimator`] — §IV-E clock-cycle latency model and throughput
+//!   estimation.
+//! - [`scheduler`] — §IV-F adaptive task parallelization on a
+//!   discrete-event simulator (also the experiments' hardware ground truth).
+//! - [`orchestrator`] — §IV-D progressive search-space reduction,
+//!   prioritization strategies, objectives, and the Oracle complete search.
+//! - [`baselines`] — the paper's 7 comparison methods + phone offloading.
+//! - [`runtime`] — PJRT bridge: load AOT-compiled HLO chunks and run real
+//!   split inference (Python never on the request path).
+//! - [`coordinator`] — the moderator: registration, orchestration,
+//!   deployment, and the threaded serving loop.
+//! - [`workload`] — Table I workloads and synthetic sensor sources.
+//! - [`experiments`] — one harness per paper table/figure.
+
+pub mod util;
+pub mod testkit;
+pub mod model;
+pub mod device;
+pub mod pipeline;
+pub mod plan;
+pub mod estimator;
+pub mod scheduler;
+pub mod orchestrator;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod workload;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,255 @@
+//! `synergy` — the leader entrypoint.
+//!
+//! Subcommands:
+//!   exp <id|all> [--runs N] [--seed S] [--full]   reproduce a paper table/figure
+//!   plan --workload N [--method M]                plan + print a deployment
+//!   serve [--workload demo] [--runs N]            real PJRT serving (needs artifacts)
+//!   zoo                                           print the Table I model zoo
+//!   list                                          list experiments
+
+use synergy::coordinator::{serve, Moderator, ServeConfig};
+use synergy::experiments;
+use synergy::orchestrator::{Planner, Synergy};
+use synergy::plan::EnumerateCfg;
+use synergy::runtime::Manifest;
+use synergy::util::cli::Args;
+use synergy::util::table::Table;
+use synergy::workload;
+
+const VALUE_OPTS: &[&str] = &[
+    "runs", "seed", "workload", "method", "combos", "artifacts", "inflight",
+];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), VALUE_OPTS);
+    let code = match args.cmd() {
+        Some("exp") => cmd_exp(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("zoo") => cmd_zoo(),
+        Some("trace") => cmd_trace(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            eprint!("{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "usage: synergy <exp|plan|serve|zoo|list> [options]\n\
+     \n\
+     exp <id|all>   reproduce a paper experiment (see `synergy list`)\n\
+     \u{20}              --runs N (sim rounds), --seed S, --full (fig9 full sweep)\n\
+     plan           --workload 1..4 [--method synergy], print the selected plan\n\
+     serve          real PJRT serving demo; requires `make artifacts`\n\
+     \u{20}              --runs N, --inflight K, --artifacts DIR\n\
+     zoo            print the Table I model zoo\n\
+     trace          --workload 1..4 [--runs N]: per-unit utilization +\n\
+     \u{20}              task timeline of the deployed plan\n\
+     list           list experiment ids\n"
+        .to_string()
+}
+
+fn cmd_list() -> i32 {
+    let mut t = Table::new(["id", "reproduces"]);
+    for e in experiments::registry() {
+        t.row([e.id.to_string(), e.paper_ref.to_string()]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_exp(args: &Args) -> i32 {
+    let id = args.positionals.get(1).map(|s| s.as_str()).unwrap_or("all");
+    match experiments::run(id, args) {
+        Some(report) => {
+            print!("{report}");
+            0
+        }
+        None => {
+            eprintln!("unknown experiment {id:?}; try `synergy list`");
+            2
+        }
+    }
+}
+
+fn cmd_zoo() -> i32 {
+    let mut t = Table::new([
+        "model", "layers", "size", "input", "avg out", "data intensity",
+    ]);
+    for (name, m) in synergy::model::zoo::zoo() {
+        t.row([
+            name.clone(),
+            format!("{}", m.num_layers()),
+            synergy::util::fmt_bytes(m.size_bytes()),
+            format!("{}", m.input),
+            format!("{:.0} B", m.avg_out_bytes()),
+            format!("{:.0}", m.data_intensity()),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_plan(args: &Args) -> i32 {
+    let wid: usize = args.opt_parse("workload", 1);
+    let w = workload::workload(wid);
+    let fleet = workload::fleet4();
+    let mut moderator = Moderator::new(fleet, Synergy::planner());
+    for p in w.pipelines {
+        if let Err(e) = moderator.register_app(p) {
+            eprintln!("orchestration failed: {e}");
+            return 1;
+        }
+    }
+    let dep = moderator.deployment().unwrap();
+    println!("{} — selected holistic collaboration plan:", w.name);
+    for ep in &dep.plan.plans {
+        println!("  {ep}");
+    }
+    println!(
+        "estimate: {:.2} inf/s, round latency {}, power {:.2} W",
+        dep.estimate.throughput,
+        synergy::util::fmt_secs(dep.estimate.round_latency),
+        dep.estimate.power_w
+    );
+    let runs = args.opt_parse("runs", 24usize);
+    if let Some(rep) = moderator.simulate(runs, args.opt_parse("seed", 7u64)) {
+        println!(
+            "simulated ({} runs): {:.2} inf/s, latency {}, power {:.2} W",
+            runs,
+            rep.throughput,
+            synergy::util::fmt_secs(rep.avg_latency),
+            rep.power_w
+        );
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    // The serving demo uses the three models aot.py emits split chunks
+    // for, restricted to 2-way splits so every chunk has an artifact.
+    let fleet = workload::fleet4();
+    let mut planner = Synergy::planner();
+    planner.cfg = EnumerateCfg { max_split_devices: 2 };
+    let mut moderator = Moderator::new(fleet.clone(), planner);
+    use synergy::model::zoo::ModelName;
+    for (i, m) in [ModelName::ConvNet5, ModelName::KWS, ModelName::SimpleNet]
+        .iter()
+        .enumerate()
+    {
+        let spec = workload::pipeline(i, *m, i % 4, (i + 1) % 4);
+        if let Err(e) = moderator.register_app(spec) {
+            eprintln!("orchestration failed: {e}");
+            return 1;
+        }
+    }
+    let dep = moderator.deployment().unwrap();
+    println!("deployment:");
+    for ep in &dep.plan.plans {
+        println!("  {ep}");
+    }
+    let cfg = ServeConfig {
+        runs: args.opt_parse("runs", 8),
+        max_inflight: args.opt_parse("inflight", 2),
+        verify: true,
+        seed: args.opt_parse("seed", 42),
+    };
+    match serve(dep, moderator.apps(), &fleet, &manifest, cfg) {
+        Ok(rep) => {
+            println!(
+                "served {} runs in {:.2}s — {:.1} inf/s wall-clock, verified={}",
+                rep.completions, rep.wall_s, rep.throughput, rep.verified
+            );
+            for p in &rep.per_pipeline {
+                println!(
+                    "  {}: {} runs, mean latency {:.1} ms, max split err {:.2e}",
+                    p.name,
+                    p.completions,
+                    p.mean_latency_s * 1e3,
+                    p.max_split_err
+                );
+            }
+            if rep.verified {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// Per-unit utilization and a task timeline of a deployed workload — the
+/// diagnostic view of what adaptive task parallelization actually does on
+/// each computation unit (Fig. 12's story, measured).
+fn cmd_trace(args: &Args) -> i32 {
+    use synergy::scheduler::{simulate, GroundTruth, SimConfig};
+    let wid: usize = args.opt_parse("workload", 1);
+    let w = workload::workload(wid);
+    let fleet = workload::fleet4();
+    let planner = Synergy::planner();
+    let plan = match planner.plan(&w.pipelines, &fleet) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("orchestration failed: {e}");
+            return 1;
+        }
+    };
+    let runs = args.opt_parse("runs", 12usize);
+    let rep = simulate(
+        &plan,
+        &w.pipelines,
+        &fleet,
+        &GroundTruth::with_seed(args.opt_parse("seed", 7u64)),
+        SimConfig {
+            runs,
+            warmup: (runs / 6).min(4),
+            policy: planner.exec_policy(),
+            record_trace: true,
+        },
+    );
+    println!(
+        "{} — {:.2} inf/s over {} rounds (makespan {})\n",
+        w.name,
+        rep.throughput,
+        runs,
+        synergy::util::fmt_secs(rep.makespan)
+    );
+    let mut t = Table::new(["device/unit", "busy", "utilization", "timeline"]);
+    let trace = rep.trace.as_ref().unwrap();
+    const COLS: usize = 56;
+    for (&(dev, unit), &busy) in &rep.unit_busy {
+        // Coarse occupancy strip: one cell per makespan/COLS slice.
+        let mut cells = [false; COLS];
+        for s in trace.spans.iter().filter(|s| s.device == dev && s.unit == unit) {
+            let a = ((s.start / rep.makespan) * COLS as f64) as usize;
+            let b = ((s.end / rep.makespan) * COLS as f64).ceil() as usize;
+            for c in cells.iter_mut().take(b.min(COLS)).skip(a.min(COLS - 1)) {
+                *c = true;
+            }
+        }
+        let strip: String = cells.iter().map(|&b| if b { '█' } else { '·' }).collect();
+        t.row([
+            format!("{} {:?}", fleet.get(dev).name, unit),
+            synergy::util::fmt_secs(busy),
+            format!("{:.0}%", 100.0 * busy / rep.makespan),
+            strip,
+        ]);
+    }
+    t.print();
+    0
+}

@@ -1,0 +1,255 @@
+//! Sequential model graphs and split ranges.
+
+use super::layer::{Layer, Shape};
+
+/// A contiguous layer range `[start, end)` — the unit of model splitting
+/// (`Model^{i:j}` in the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SplitRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl SplitRange {
+    pub fn new(start: usize, end: usize) -> SplitRange {
+        assert!(start < end, "empty split range {start}..{end}");
+        SplitRange { start, end }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // construction forbids empty ranges
+    }
+}
+
+impl std::fmt::Display for SplitRange {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.start, self.end)
+    }
+}
+
+/// A model as a sequence of layer units with a fixed input shape.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+    /// Cached per-layer input shapes: `shapes[l]` is the input of layer `l`,
+    /// `shapes[L]` is the final output.
+    shapes: Vec<Shape>,
+    /// Prefix sums for O(1) range queries (the planner evaluates tens of
+    /// thousands of candidate ranges per orchestration — §Perf).
+    prefix_w: Vec<u64>,
+    prefix_b: Vec<u64>,
+    /// Accelerator cycles at P = 64 (the MAX78000/78002 lane count).
+    prefix_cycles_p64: Vec<u64>,
+}
+
+impl ModelGraph {
+    pub fn new(name: impl Into<String>, input: Shape, layers: Vec<Layer>) -> ModelGraph {
+        assert!(!layers.is_empty(), "model must have at least one layer");
+        let mut shapes = Vec::with_capacity(layers.len() + 1);
+        shapes.push(input);
+        for l in &layers {
+            let prev = *shapes.last().unwrap();
+            shapes.push(l.out_shape(prev));
+        }
+        let mut prefix_w = Vec::with_capacity(layers.len() + 1);
+        let mut prefix_b = Vec::with_capacity(layers.len() + 1);
+        let mut prefix_cycles_p64 = Vec::with_capacity(layers.len() + 1);
+        prefix_w.push(0);
+        prefix_b.push(0);
+        prefix_cycles_p64.push(0);
+        for (i, l) in layers.iter().enumerate() {
+            prefix_w.push(prefix_w[i] + l.weight_bytes(shapes[i]));
+            prefix_b.push(prefix_b[i] + l.bias_bytes(shapes[i]));
+            prefix_cycles_p64
+                .push(prefix_cycles_p64[i] + crate::estimator::clock::layer_cycles_accel(l, shapes[i], 64));
+        }
+        ModelGraph {
+            name: name.into(),
+            input,
+            layers,
+            shapes,
+            prefix_w,
+            prefix_b,
+            prefix_cycles_p64,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Input shape of layer `l` (0-based).
+    pub fn in_shape(&self, l: usize) -> Shape {
+        self.shapes[l]
+    }
+
+    /// Output shape of layer `l`.
+    pub fn out_shape(&self, l: usize) -> Shape {
+        self.shapes[l + 1]
+    }
+
+    /// Final output shape of the whole model.
+    pub fn output(&self) -> Shape {
+        *self.shapes.last().unwrap()
+    }
+
+    /// Output bytes of layer `l` (8-bit activations).
+    pub fn out_bytes(&self, l: usize) -> u64 {
+        self.out_shape(l).bytes()
+    }
+
+    /// Input bytes of the model.
+    pub fn in_bytes(&self) -> u64 {
+        self.input.bytes()
+    }
+
+    /// Total weight bytes of a layer range — O(1) via prefix sums.
+    pub fn weight_bytes(&self, r: SplitRange) -> u64 {
+        self.prefix_w[r.end] - self.prefix_w[r.start]
+    }
+
+    /// Total bias bytes of a layer range — O(1) via prefix sums.
+    pub fn bias_bytes(&self, r: SplitRange) -> u64 {
+        self.prefix_b[r.end] - self.prefix_b[r.start]
+    }
+
+    /// Accelerator cycles of a layer range at P = 64 — O(1) (the hot case;
+    /// other lane counts go through `estimator::clock`).
+    pub fn cycles_p64(&self, r: SplitRange) -> u64 {
+        self.prefix_cycles_p64[r.end] - self.prefix_cycles_p64[r.start]
+    }
+
+    /// Full-model range.
+    pub fn full(&self) -> SplitRange {
+        SplitRange::new(0, self.num_layers())
+    }
+
+    /// Total model size (weights + biases), the "Model Size" of Table I.
+    pub fn size_bytes(&self) -> u64 {
+        self.weight_bytes(self.full()) + self.bias_bytes(self.full())
+    }
+
+    /// Total MACs of a layer range.
+    pub fn macs(&self, r: SplitRange) -> u64 {
+        (r.start..r.end)
+            .map(|l| self.layers[l].macs(self.in_shape(l)))
+            .sum()
+    }
+
+    /// Bytes crossing the boundary *after* layer `l` (what a split at `l+1`
+    /// would transmit). `boundary_bytes(L-1)` is the final output size.
+    pub fn boundary_bytes(&self, l: usize) -> u64 {
+        self.out_bytes(l)
+    }
+
+    /// The paper's data intensity metric (§IV-D):
+    /// `(In_size + Σ_l Out_size_l) / (L + 1)` — the average data size a
+    /// transmission would carry across all split positions.
+    pub fn data_intensity(&self) -> f64 {
+        let total: u64 = self.in_bytes() + (0..self.num_layers()).map(|l| self.out_bytes(l)).sum::<u64>();
+        total as f64 / (self.num_layers() + 1) as f64
+    }
+
+    /// Average output size, the "Avg. Out Size" column of Table I:
+    /// mean over layer outputs only.
+    pub fn avg_out_bytes(&self) -> f64 {
+        let total: u64 = (0..self.num_layers()).map(|l| self.out_bytes(l)).sum();
+        total as f64 / self.num_layers() as f64
+    }
+
+    /// All contiguous split points: a d-way split is described by d-1
+    /// boundaries; this returns the valid single boundaries 1..L.
+    pub fn split_points(&self) -> impl Iterator<Item = usize> + '_ {
+        1..self.num_layers()
+    }
+
+    /// Partition the model into `parts` contiguous chunks at the given
+    /// ascending boundaries (each in `1..L`).
+    pub fn split_at(&self, boundaries: &[usize]) -> Vec<SplitRange> {
+        let mut prev = 0;
+        let mut out = Vec::with_capacity(boundaries.len() + 1);
+        for &b in boundaries {
+            assert!(b > prev && b < self.num_layers(), "bad boundary {b}");
+            out.push(SplitRange::new(prev, b));
+            prev = b;
+        }
+        out.push(SplitRange::new(prev, self.num_layers()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    fn toy() -> ModelGraph {
+        // 3-layer toy: conv(1→8) @8×8, conv pool2 (8→16) @4×4, linear → 10.
+        ModelGraph::new(
+            "toy",
+            Shape::new(8, 8, 1),
+            vec![
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 8, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 2, cout: 16, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Linear, pool: 1, cout: 10, residual: false, has_bias: true },
+            ],
+        )
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let m = toy();
+        assert_eq!(m.in_shape(0), Shape::new(8, 8, 1));
+        assert_eq!(m.out_shape(0), Shape::new(8, 8, 8));
+        assert_eq!(m.out_shape(1), Shape::new(4, 4, 16));
+        assert_eq!(m.output(), Shape::new(1, 1, 10));
+    }
+
+    #[test]
+    fn sizes_accumulate() {
+        let m = toy();
+        let w0 = 3 * 3 * 1 * 8;
+        let w1 = 3 * 3 * 8 * 16;
+        let w2 = 4 * 4 * 16 * 10;
+        assert_eq!(m.weight_bytes(m.full()), (w0 + w1 + w2) as u64);
+        assert_eq!(m.bias_bytes(m.full()), 8 + 16 + 10);
+        assert_eq!(m.size_bytes(), (w0 + w1 + w2 + 34) as u64);
+        assert_eq!(
+            m.weight_bytes(SplitRange::new(1, 3)),
+            (w1 + w2) as u64
+        );
+    }
+
+    #[test]
+    fn data_intensity_matches_formula() {
+        let m = toy();
+        let expected =
+            (64.0 + (8 * 8 * 8) as f64 + (4 * 4 * 16) as f64 + 10.0) / 4.0;
+        assert!((m.data_intensity() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_partitions_cover() {
+        let m = toy();
+        let parts = m.split_at(&[1, 2]);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], SplitRange::new(0, 1));
+        assert_eq!(parts[1], SplitRange::new(1, 2));
+        assert_eq!(parts[2], SplitRange::new(2, 3));
+        // Chunk sizes sum to the full model.
+        let total: u64 = parts.iter().map(|&r| m.weight_bytes(r)).sum();
+        assert_eq!(total, m.weight_bytes(m.full()));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad boundary")]
+    fn split_rejects_out_of_range() {
+        toy().split_at(&[3]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Layer unit shape algebra.
+//!
+//! Semantics follow the MAX78000's CNN accelerator conventions:
+//! - pooling (when present) runs *before* the convolution in the same layer
+//!   unit (that is how ai8x layers are synthesized);
+//! - convolutions are 'same'-padded (pad = k/2) with stride 1;
+//! - transpose convolutions upsample 2×;
+//! - weights/activations are 8-bit, so weight bytes = parameter count and
+//!   activation bytes = element count (Table I sizes are byte counts).
+
+use std::fmt;
+
+/// A (height, width, channels) activation shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(h: usize, w: usize, c: usize) -> Shape {
+        Shape { h, w, c }
+    }
+
+    /// Number of elements == number of bytes at 8-bit.
+    pub fn bytes(&self) -> u64 {
+        (self.h * self.w * self.c) as u64
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}×{}×{}", self.h, self.w, self.c)
+    }
+}
+
+/// The kinds of layer units the zoo uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution, kernel `k`, 'same' padding, stride 1.
+    Conv2d { k: usize },
+    /// Depthwise convolution (cout == cin), kernel `k`.
+    DepthwiseConv2d { k: usize },
+    /// Transpose convolution upsampling 2× (UNet decoder).
+    ConvTranspose2d { k: usize },
+    /// Fully connected over the flattened input.
+    Linear,
+}
+
+/// One splittable layer unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layer {
+    pub kind: LayerKind,
+    /// Max-pool factor applied before the op (1 = none).
+    pub pool: usize,
+    /// Output channels (== input channels for depthwise).
+    pub cout: usize,
+    /// Residual add across this unit (documentation/MAC bookkeeping only;
+    /// does not change shapes or split semantics).
+    pub residual: bool,
+    /// Whether the layer carries a bias vector. BN-folded expansion and
+    /// depthwise convs are synthesized without bias (ai8x option) — bias
+    /// memory (2 KB on MAX78000) is the scarcest accelerator resource.
+    pub has_bias: bool,
+}
+
+impl Layer {
+    /// Shape after the pre-op pooling step.
+    pub fn pooled(&self, input: Shape) -> Shape {
+        Shape::new(input.h / self.pool, input.w / self.pool, input.c)
+    }
+
+    /// Output shape given the unit's input shape.
+    pub fn out_shape(&self, input: Shape) -> Shape {
+        let p = self.pooled(input);
+        match self.kind {
+            // 'same' padding, stride 1: spatial dims preserved.
+            LayerKind::Conv2d { .. } => Shape::new(p.h, p.w, self.cout),
+            LayerKind::DepthwiseConv2d { .. } => Shape::new(p.h, p.w, p.c),
+            LayerKind::ConvTranspose2d { .. } => Shape::new(p.h * 2, p.w * 2, self.cout),
+            LayerKind::Linear => Shape::new(1, 1, self.cout),
+        }
+    }
+
+    /// Weight bytes (8-bit): parameter count of the op.
+    pub fn weight_bytes(&self, input: Shape) -> u64 {
+        let p = self.pooled(input);
+        match self.kind {
+            LayerKind::Conv2d { k } => (k * k * p.c * self.cout) as u64,
+            LayerKind::DepthwiseConv2d { k } => (k * k * p.c) as u64,
+            LayerKind::ConvTranspose2d { k } => (k * k * p.c * self.cout) as u64,
+            LayerKind::Linear => (p.h * p.w * p.c * self.cout) as u64,
+        }
+    }
+
+    /// Bias bytes: one per output channel (MAX78000 bias memory is per
+    /// output channel); zero for bias-free layers.
+    pub fn bias_bytes(&self, input: Shape) -> u64 {
+        if self.has_bias {
+            self.out_shape(input).c as u64
+        } else {
+            0
+        }
+    }
+
+    /// Multiply-accumulate count (for roofline/diagnostics; the latency
+    /// model uses clock cycles, not MACs — see `estimator::clock`).
+    pub fn macs(&self, input: Shape) -> u64 {
+        let p = self.pooled(input);
+        let o = self.out_shape(input);
+        match self.kind {
+            LayerKind::Conv2d { k } => (k * k * o.h * o.w * p.c * o.c) as u64,
+            LayerKind::DepthwiseConv2d { k } => (k * k * o.h * o.w * o.c) as u64,
+            LayerKind::ConvTranspose2d { k } => (k * k * o.h * o.w * p.c * o.c) as u64,
+            LayerKind::Linear => (p.h * p.w * p.c * o.c) as u64,
+        }
+    }
+
+    /// Kernel size (1 for Linear).
+    pub fn kernel(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv2d { k }
+            | LayerKind::DepthwiseConv2d { k }
+            | LayerKind::ConvTranspose2d { k } => k,
+            LayerKind::Linear => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const IN: Shape = Shape { h: 28, w: 28, c: 16 };
+
+    #[test]
+    fn conv_same_preserves_spatial() {
+        let l = Layer {
+            kind: LayerKind::Conv2d { k: 3 },
+            pool: 1,
+            cout: 32,
+            residual: false,
+            has_bias: true,
+        };
+        assert_eq!(l.out_shape(IN), Shape::new(28, 28, 32));
+        assert_eq!(l.weight_bytes(IN), 3 * 3 * 16 * 32);
+        assert_eq!(l.bias_bytes(IN), 32);
+        assert_eq!(l.macs(IN), 9 * 28 * 28 * 16 * 32);
+    }
+
+    #[test]
+    fn pool_halves_before_conv() {
+        let l = Layer {
+            kind: LayerKind::Conv2d { k: 3 },
+            pool: 2,
+            cout: 8,
+            residual: false,
+            has_bias: true,
+        };
+        assert_eq!(l.out_shape(IN), Shape::new(14, 14, 8));
+        // Weight count is unaffected by pooling.
+        assert_eq!(l.weight_bytes(IN), 3 * 3 * 16 * 8);
+    }
+
+    #[test]
+    fn depthwise_keeps_channels() {
+        let l = Layer {
+            kind: LayerKind::DepthwiseConv2d { k: 3 },
+            pool: 1,
+            cout: 16, // ignored: depthwise keeps cin
+            residual: false,
+            has_bias: true,
+        };
+        assert_eq!(l.out_shape(IN), Shape::new(28, 28, 16));
+        assert_eq!(l.weight_bytes(IN), 9 * 16);
+        assert_eq!(l.macs(IN), 9 * 28 * 28 * 16);
+    }
+
+    #[test]
+    fn transpose_doubles_spatial() {
+        let l = Layer {
+            kind: LayerKind::ConvTranspose2d { k: 3 },
+            pool: 1,
+            cout: 4,
+            residual: false,
+            has_bias: true,
+        };
+        assert_eq!(l.out_shape(IN), Shape::new(56, 56, 4));
+    }
+
+    #[test]
+    fn linear_flattens() {
+        let l = Layer {
+            kind: LayerKind::Linear,
+            pool: 1,
+            cout: 10,
+            residual: false,
+            has_bias: true,
+        };
+        assert_eq!(l.out_shape(IN), Shape::new(1, 1, 10));
+        assert_eq!(l.weight_bytes(IN), 28 * 28 * 16 * 10);
+        assert_eq!(l.bias_bytes(IN), 10);
+    }
+
+    #[test]
+    fn shape_bytes_are_elements() {
+        assert_eq!(Shape::new(48, 48, 48).bytes(), 110_592);
+    }
+}

@@ -1,0 +1,15 @@
+//! Model descriptions: layer shape algebra and the paper's 8-model zoo
+//! (Table I) plus the FaceID model used by the Fig. 2 microbenchmark.
+//!
+//! A model is a *sequence of layer units* (the paper's splittable unit:
+//! `EfficientNet^{i:j}` means units i..j). A unit may internally carry a
+//! residual connection, but externally has one input and one output tensor,
+//! which keeps layer-wise splitting linear exactly as in §IV-C.
+
+pub mod layer;
+pub mod graph;
+pub mod zoo;
+
+pub use graph::{ModelGraph, SplitRange};
+pub use layer::{Layer, LayerKind, Shape};
+pub use zoo::{model_by_name, zoo, ModelName};

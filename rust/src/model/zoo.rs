@@ -1,0 +1,228 @@
+//! The model zoo: the paper's 8 Table I models plus FaceID (Fig. 2).
+//!
+//! Architectures live in `python/compile/archs.json` — the single source of
+//! truth shared with the Python/JAX build path (`python/compile/archs.py`),
+//! fitted at design time by `design_zoo.py` so that every model matches
+//! Table I's layer count, total size, input shape, and average output size
+//! to within 0.1%. The JSON is compiled into the binary via `include_str!`.
+
+use std::collections::BTreeMap;
+
+use once_cell::sync::Lazy;
+
+use super::graph::ModelGraph;
+use super::layer::{Layer, LayerKind, Shape};
+use crate::util::json::Json;
+
+/// The canonical arch spec, shared with Python.
+pub const ARCHS_JSON: &str = include_str!("../../../python/compile/archs.json");
+
+/// Names of the Table I models, in pipeline order (1..=8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelName {
+    ConvNet5,
+    ResSimpleNet,
+    UNet,
+    KWS,
+    SimpleNet,
+    WideNet,
+    EfficientNetV2,
+    MobileNetV2,
+    /// Not in Table I; used by the Fig. 2 microbenchmark.
+    FaceID,
+}
+
+impl ModelName {
+    pub const TABLE1: [ModelName; 8] = [
+        ModelName::ConvNet5,
+        ModelName::ResSimpleNet,
+        ModelName::UNet,
+        ModelName::KWS,
+        ModelName::SimpleNet,
+        ModelName::WideNet,
+        ModelName::EfficientNetV2,
+        ModelName::MobileNetV2,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelName::ConvNet5 => "ConvNet5",
+            ModelName::ResSimpleNet => "ResSimpleNet",
+            ModelName::UNet => "UNet",
+            ModelName::KWS => "KWS",
+            ModelName::SimpleNet => "SimpleNet",
+            ModelName::WideNet => "WideNet",
+            ModelName::EfficientNetV2 => "EfficientNetV2",
+            ModelName::MobileNetV2 => "MobileNetV2",
+            ModelName::FaceID => "FaceID",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelName> {
+        Self::TABLE1
+            .iter()
+            .chain([&ModelName::FaceID])
+            .copied()
+            .find(|m| m.as_str().eq_ignore_ascii_case(s))
+    }
+}
+
+impl std::fmt::Display for ModelName {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+fn parse_layer(j: &Json) -> Layer {
+    let kind_s = j.get("kind").and_then(Json::as_str).expect("layer.kind");
+    let k = j.get("k").and_then(Json::as_usize).expect("layer.k");
+    let pool = j.get("pool").and_then(Json::as_usize).expect("layer.pool");
+    let cout = j.get("cout").and_then(Json::as_usize).expect("layer.cout");
+    let residual = j
+        .get("residual")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let has_bias = j.get("bias").and_then(Json::as_bool).unwrap_or(true);
+    let kind = match kind_s {
+        "conv" => LayerKind::Conv2d { k },
+        "dw" => LayerKind::DepthwiseConv2d { k },
+        "convt" => LayerKind::ConvTranspose2d { k },
+        "linear" => LayerKind::Linear,
+        other => panic!("unknown layer kind {other:?} in archs.json"),
+    };
+    Layer {
+        kind,
+        pool,
+        cout,
+        residual,
+        has_bias,
+    }
+}
+
+fn parse_archs() -> BTreeMap<String, ModelGraph> {
+    let root = Json::parse(ARCHS_JSON).expect("archs.json must parse");
+    let obj = root.as_obj().expect("archs.json must be an object");
+    obj.iter()
+        .map(|(name, spec)| {
+            let input = spec.get("input").and_then(Json::as_arr).expect("input");
+            let shape = Shape::new(
+                input[0].as_usize().unwrap(),
+                input[1].as_usize().unwrap(),
+                input[2].as_usize().unwrap(),
+            );
+            let layers: Vec<Layer> = spec
+                .get("layers")
+                .and_then(Json::as_arr)
+                .expect("layers")
+                .iter()
+                .map(parse_layer)
+                .collect();
+            (name.clone(), ModelGraph::new(name.clone(), shape, layers))
+        })
+        .collect()
+}
+
+static ZOO: Lazy<BTreeMap<String, ModelGraph>> = Lazy::new(parse_archs);
+
+/// All models in the zoo, keyed by name.
+pub fn zoo() -> &'static BTreeMap<String, ModelGraph> {
+    &ZOO
+}
+
+/// Look up a model by enum name.
+pub fn model_by_name(name: ModelName) -> &'static ModelGraph {
+    ZOO.get(name.as_str())
+        .unwrap_or_else(|| panic!("{name} missing from archs.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I ground truth: (model, layers, size bytes, input, avg out).
+    const TABLE1: [(ModelName, usize, u64, (usize, usize, usize), f64); 8] = [
+        (ModelName::ConvNet5, 5, 71158, (28, 28, 1), 14031.0),
+        (ModelName::ResSimpleNet, 14, 381792, (32, 32, 3), 11217.0),
+        (ModelName::UNet, 19, 279084, (48, 48, 48), 74547.0),
+        (ModelName::KWS, 9, 169472, (128, 128, 1), 7976.0),
+        (ModelName::SimpleNet, 14, 166448, (32, 32, 3), 9237.0),
+        (ModelName::WideNet, 14, 313700, (32, 32, 3), 10091.0),
+        (ModelName::EfficientNetV2, 29, 627220, (32, 32, 3), 66468.0),
+        (ModelName::MobileNetV2, 28, 821164, (32, 32, 3), 296318.0),
+    ];
+
+    #[test]
+    fn zoo_has_all_models() {
+        assert_eq!(zoo().len(), 9); // 8 Table I + FaceID
+        for (name, ..) in TABLE1 {
+            assert!(zoo().contains_key(name.as_str()), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn matches_table1_within_half_percent() {
+        for (name, layers, size, input, avg_out) in TABLE1 {
+            let m = model_by_name(name);
+            assert_eq!(m.num_layers(), layers, "{name} layer count");
+            assert_eq!(
+                (m.input.h, m.input.w, m.input.c),
+                input,
+                "{name} input shape"
+            );
+            let size_err = (m.size_bytes() as f64 - size as f64).abs() / size as f64;
+            assert!(
+                size_err < 0.005,
+                "{name} size {} vs Table I {size} ({:.2}% off)",
+                m.size_bytes(),
+                size_err * 100.0
+            );
+            let out_err = (m.avg_out_bytes() - avg_out).abs() / avg_out;
+            assert!(
+                out_err < 0.005,
+                "{name} avg out {:.0} vs Table I {avg_out} ({:.2}% off)",
+                m.avg_out_bytes(),
+                out_err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn paper_layer_counts_for_named_models() {
+        // §IV-D quotes "a 9-layer KWS, a 14-layer SimpleNet, and a 19-layer
+        // UNet"; §IV-C says EfficientNet has 29 layers.
+        assert_eq!(model_by_name(ModelName::KWS).num_layers(), 9);
+        assert_eq!(model_by_name(ModelName::SimpleNet).num_layers(), 14);
+        assert_eq!(model_by_name(ModelName::UNet).num_layers(), 19);
+        assert_eq!(model_by_name(ModelName::EfficientNetV2).num_layers(), 29);
+    }
+
+    #[test]
+    fn unet_fits_max78000_weight_memory_only_when_split() {
+        // UNet (279 KB) exceeds nothing alone, but MobileNetV2 (821 KB)
+        // exceeds the MAX78000's 442 KB weight memory — the motivating case
+        // for splitting large models (§II-B).
+        let mobilenet = model_by_name(ModelName::MobileNetV2);
+        assert!(mobilenet.weight_bytes(mobilenet.full()) > 442 * 1024);
+        let unet = model_by_name(ModelName::UNet);
+        assert!(unet.weight_bytes(unet.full()) < 442 * 1024);
+    }
+
+    #[test]
+    fn model_name_parse_roundtrip() {
+        for m in ModelName::TABLE1 {
+            assert_eq!(ModelName::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(ModelName::parse("kws"), Some(ModelName::KWS));
+        assert_eq!(ModelName::parse("nope"), None);
+    }
+
+    #[test]
+    fn data_intensity_ordering_unet_highest_of_small() {
+        // UNet moves far more data per boundary than KWS/SimpleNet —
+        // the premise behind data-intensity prioritization (§IV-D).
+        let unet = model_by_name(ModelName::UNet).data_intensity();
+        let kws = model_by_name(ModelName::KWS).data_intensity();
+        let simple = model_by_name(ModelName::SimpleNet).data_intensity();
+        assert!(unet > kws && unet > simple);
+    }
+}

@@ -1,0 +1,49 @@
+//! §IV-D / §III-C — holistic collaboration plan selection.
+//!
+//! [`progressive`] implements Synergy's data-intensity-aware execution-plan
+//! accumulation (exponential → linear search); [`priority`] the pipeline
+//! orderings compared in Fig. 9; [`oracle`] the complete cross-product
+//! search; [`objective`] the selectable system-wide objectives of §VI-C4.
+//! Every plan-selection method (Synergy and the baselines in
+//! [`crate::baselines`]) implements the [`Planner`] trait.
+
+pub mod objective;
+pub mod priority;
+pub mod progressive;
+pub mod oracle;
+
+pub use objective::Objective;
+pub use priority::Priority;
+pub use progressive::{ProgressivePlanner, Synergy};
+
+use crate::device::Fleet;
+use crate::pipeline::PipelineSpec;
+use crate::plan::CollabPlan;
+use crate::scheduler::Policy;
+
+/// Why planning failed.
+#[derive(Clone, Debug, thiserror::Error)]
+pub enum PlanError {
+    /// No runnable execution plan exists for a pipeline given the resources
+    /// already committed — the out-of-resource (OOR) outcome.
+    #[error("OOR: no runnable plan for pipeline {pipeline:?}")]
+    Oor { pipeline: String },
+    /// A pipeline has no source/target candidates in this fleet.
+    #[error("no device satisfies the requirements of pipeline {pipeline:?}")]
+    Unsatisfiable { pipeline: String },
+}
+
+/// A plan-selection method: Synergy or one of the baselines.
+pub trait Planner {
+    fn name(&self) -> &'static str;
+
+    /// Select a holistic collaboration plan for the concurrent pipelines.
+    fn plan(&self, pipelines: &[PipelineSpec], fleet: &Fleet) -> Result<CollabPlan, PlanError>;
+
+    /// The runtime execution policy this method deploys with. Synergy runs
+    /// its adaptive task parallelization; methods adapted from single-shot
+    /// partitioning literature execute sequentially (§VI-A2).
+    fn exec_policy(&self) -> Policy {
+        Policy::Sequential
+    }
+}

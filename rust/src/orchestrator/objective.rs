@@ -1,0 +1,69 @@
+//! System-wide objectives (§III-C, §VI-C4): Synergy defaults to maximizing
+//! the unified round's inference throughput, but the selection metric is
+//! pluggable — Table III evaluates latency- and power-minimizing variants.
+
+use crate::estimator::PlanEstimate;
+
+/// What the orchestrator optimizes when ranking holistic plans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Maximize system-wide inference throughput (the default).
+    #[default]
+    TputMax,
+    /// Minimize end-to-end round latency.
+    LatencyMin,
+    /// Minimize average power consumption.
+    PowerMin,
+}
+
+impl Objective {
+    /// Score an estimate; larger is better for every objective.
+    pub fn score(&self, est: &PlanEstimate) -> f64 {
+        match self {
+            Objective::TputMax => est.throughput,
+            Objective::LatencyMin => -est.round_latency,
+            // Power-min deployments execute sequentially.
+            Objective::PowerMin => -est.power_sequential_w,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::TputMax => "TPUT-max",
+            Objective::LatencyMin => "Latency-min",
+            Objective::PowerMin => "Power-min",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(tput: f64, lat: f64, power: f64) -> PlanEstimate {
+        PlanEstimate {
+            chain_latency: vec![lat],
+            critical_path: lat,
+            bottleneck: lat,
+            round_latency: lat,
+            throughput: tput,
+            throughput_sequential: tput,
+            power_w: power,
+            power_sequential_w: power,
+            active_energy_j: 0.0,
+        }
+    }
+
+    #[test]
+    fn each_objective_prefers_its_metric() {
+        let fast_hungry = est(10.0, 0.1, 2.0);
+        let slow_frugal = est(1.0, 1.0, 0.5);
+        assert!(Objective::TputMax.score(&fast_hungry) > Objective::TputMax.score(&slow_frugal));
+        assert!(
+            Objective::LatencyMin.score(&fast_hungry) > Objective::LatencyMin.score(&slow_frugal)
+        );
+        assert!(
+            Objective::PowerMin.score(&slow_frugal) > Objective::PowerMin.score(&fast_hungry)
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! The complete search ("Oracle" in Fig. 9): scores every combination of
+//! execution plans across pipelines — `O(N_p1 × N_p2 × …)` — with joint
+//! memory backtracking. Tractable only for small instances (Fig. 9 uses
+//! three pipelines over two devices); exists to quantify how close the
+//! progressive selection gets.
+
+use crate::device::Fleet;
+use crate::estimator::{EstimateAccum, LatencyModel};
+use crate::pipeline::PipelineSpec;
+use crate::plan::collab::MemoryLedger;
+use crate::plan::{enumerate_plans, CollabPlan, EnumerateCfg, ExecutionPlan};
+
+use super::objective::Objective;
+
+/// Result of a complete search.
+#[derive(Clone, Debug)]
+pub struct OracleResult {
+    pub plan: Option<CollabPlan>,
+    pub best_score: f64,
+    /// Complete combinations evaluated (runnable leaves of the search tree).
+    pub combinations_evaluated: u64,
+    /// Size of the unpruned cross-product space (Π N_p).
+    pub space_size: u64,
+}
+
+/// Exhaustively search the cross product of execution plans.
+pub fn oracle_search(
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+    objective: Objective,
+    cfg: EnumerateCfg,
+) -> OracleResult {
+    let lm = LatencyModel::new(fleet);
+    let per_pipeline: Vec<Vec<ExecutionPlan>> = pipelines
+        .iter()
+        .map(|p| enumerate_plans(p, fleet, cfg))
+        .collect();
+    let space_size = per_pipeline
+        .iter()
+        .map(|v| v.len() as u64)
+        .product::<u64>();
+
+    let mut best: Option<(f64, Vec<ExecutionPlan>)> = None;
+    let mut evaluated = 0u64;
+    let mut ledger = MemoryLedger::default();
+    let mut chosen: Vec<ExecutionPlan> = Vec::with_capacity(pipelines.len());
+
+    // Depth-first over pipelines with memory pruning; the estimate
+    // accumulator is rebuilt per leaf via incremental peek at each level.
+    fn dfs(
+        level: usize,
+        pipelines: &[PipelineSpec],
+        per_pipeline: &[Vec<ExecutionPlan>],
+        fleet: &Fleet,
+        lm: &LatencyModel,
+        objective: Objective,
+        ledger: &mut MemoryLedger,
+        accum: &EstimateAccum,
+        chosen: &mut Vec<ExecutionPlan>,
+        best: &mut Option<(f64, Vec<ExecutionPlan>)>,
+        evaluated: &mut u64,
+    ) {
+        if level == pipelines.len() {
+            *evaluated += 1;
+            let score = objective.score(&accum.finish());
+            if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                *best = Some((score, chosen.clone()));
+            }
+            return;
+        }
+        let spec = &pipelines[level];
+        for cand in &per_pipeline[level] {
+            if !ledger.fits(cand, &spec.model, fleet) {
+                continue;
+            }
+            let mut next = accum.clone();
+            next.add_plan(cand, spec, fleet, lm);
+            let saved = ledger.clone();
+            ledger.commit(cand, &spec.model);
+            chosen.push(cand.clone());
+            dfs(
+                level + 1, pipelines, per_pipeline, fleet, lm, objective, ledger, &next, chosen,
+                best, evaluated,
+            );
+            chosen.pop();
+            *ledger = saved;
+        }
+    }
+
+    let accum = EstimateAccum::new(fleet);
+    dfs(
+        0, pipelines, &per_pipeline, fleet, &lm, objective, &mut ledger, &accum, &mut chosen,
+        &mut best, &mut evaluated,
+    );
+
+    match best {
+        Some((score, plans)) => OracleResult {
+            plan: Some(CollabPlan::new(plans)),
+            best_score: score,
+            combinations_evaluated: evaluated,
+            space_size,
+        },
+        None => OracleResult {
+            plan: None,
+            best_score: f64::NEG_INFINITY,
+            combinations_evaluated: evaluated,
+            space_size,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::ModelGraph;
+    use crate::orchestrator::{Priority, ProgressivePlanner};
+    use crate::pipeline::{SourceReq, TargetReq};
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn tiny(id: usize, layers: usize) -> PipelineSpec {
+        let model = ModelGraph::new(
+            format!("m{id}"),
+            Shape::new(12, 12, 4),
+            (0..layers)
+                .map(|_| Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 8, residual: false, has_bias: true })
+                .collect(),
+        );
+        PipelineSpec::new(id, format!("p{id}"), SourceReq::Any, model, TargetReq::Any)
+    }
+
+    #[test]
+    fn oracle_at_least_matches_progressive() {
+        let f = fleet(2);
+        let ps = vec![tiny(0, 3), tiny(1, 4)];
+        let oracle = oracle_search(&ps, &f, Objective::TputMax, EnumerateCfg::default());
+        let prog = ProgressivePlanner::new(Priority::DataIntensityDesc, Objective::TputMax)
+            .select(&ps, &f)
+            .unwrap();
+        let lm = LatencyModel::new(&f);
+        let prog_score =
+            Objective::TputMax.score(&crate::estimator::estimate_plan(&prog, &ps, &f, &lm));
+        assert!(oracle.best_score >= prog_score - 1e-9);
+        // And progressive is within a sane band of Oracle on tiny cases.
+        assert!(prog_score >= 0.5 * oracle.best_score);
+    }
+
+    #[test]
+    fn space_size_is_cross_product() {
+        let f = fleet(2);
+        let ps = vec![tiny(0, 3), tiny(1, 4)];
+        let oracle = oracle_search(&ps, &f, Objective::TputMax, EnumerateCfg::default());
+        let n0 = crate::plan::paper_plan_count(2, 3);
+        let n1 = crate::plan::paper_plan_count(2, 4);
+        assert_eq!(oracle.space_size, n0 * n1);
+        assert!(oracle.combinations_evaluated <= oracle.space_size);
+        assert!(oracle.combinations_evaluated > 0);
+    }
+
+    #[test]
+    fn oracle_reports_unsatisfiable_as_none() {
+        // No accelerator devices → no plans at all.
+        let f = Fleet::new(vec![Device::new(0, "mcu", DeviceKind::McuMax32650, vec![], vec![])]);
+        let ps = vec![tiny(0, 2)];
+        let res = oracle_search(&ps, &f, Objective::TputMax, EnumerateCfg::default());
+        assert!(res.plan.is_none());
+        assert_eq!(res.space_size, 0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Pipeline prioritization strategies (§IV-D, Fig. 9).
+//!
+//! Progressive execution-plan accumulation selects one pipeline at a time;
+//! *which* pipeline goes first determines how close the result gets to the
+//! complete search. Synergy sorts by descending data intensity — pipelines
+//! that move the most bytes get first pick of placements, because their
+//! plans are the most sensitive to resource conflicts. Fig. 9 compares this
+//! against ascending data intensity, model size (both directions), layer
+//! count (both directions), and no prioritization.
+
+use crate::pipeline::PipelineSpec;
+
+/// Ordering strategy for progressive plan accumulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Synergy: descending data intensity.
+    #[default]
+    DataIntensityDesc,
+    DataIntensityAsc,
+    ModelSizeDesc,
+    ModelSizeAsc,
+    NumLayersDesc,
+    NumLayersAsc,
+    /// Registration order (no prioritization).
+    Sequential,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 7] = [
+        Priority::DataIntensityDesc,
+        Priority::DataIntensityAsc,
+        Priority::ModelSizeDesc,
+        Priority::ModelSizeAsc,
+        Priority::NumLayersDesc,
+        Priority::NumLayersAsc,
+        Priority::Sequential,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::DataIntensityDesc => "Synergy (DataIntensityDesc)",
+            Priority::DataIntensityAsc => "DataIntensityAsc",
+            Priority::ModelSizeDesc => "ModelSizeDes",
+            Priority::ModelSizeAsc => "ModelSizeAsc",
+            Priority::NumLayersDesc => "NumLayersDes",
+            Priority::NumLayersAsc => "NumLayersAsc",
+            Priority::Sequential => "Sequential",
+        }
+    }
+
+    /// Indices of `pipelines` in selection order.
+    pub fn order(&self, pipelines: &[PipelineSpec]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..pipelines.len()).collect();
+        let key = |i: usize| -> f64 {
+            let p = &pipelines[i];
+            match self {
+                Priority::DataIntensityDesc => -p.data_intensity(),
+                Priority::DataIntensityAsc => p.data_intensity(),
+                Priority::ModelSizeDesc => -(p.model.size_bytes() as f64),
+                Priority::ModelSizeAsc => p.model.size_bytes() as f64,
+                Priority::NumLayersDesc => -(p.model.num_layers() as f64),
+                Priority::NumLayersAsc => p.model.num_layers() as f64,
+                Priority::Sequential => i as f64,
+            }
+        };
+        idx.sort_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap().then(a.cmp(&b)));
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{model_by_name, ModelName};
+    use crate::pipeline::{SourceReq, TargetReq};
+
+    fn pipes() -> Vec<PipelineSpec> {
+        [ModelName::KWS, ModelName::UNet, ModelName::SimpleNet]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                PipelineSpec::new(
+                    i,
+                    m.as_str(),
+                    SourceReq::Any,
+                    model_by_name(m).clone(),
+                    TargetReq::Any,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn data_intensity_puts_unet_first() {
+        let ps = pipes();
+        let order = Priority::DataIntensityDesc.order(&ps);
+        assert_eq!(ps[order[0]].name, "UNet");
+        let asc = Priority::DataIntensityAsc.order(&ps);
+        assert_eq!(ps[asc[2]].name, "UNet");
+    }
+
+    #[test]
+    fn layer_count_ordering() {
+        let ps = pipes();
+        let order = Priority::NumLayersDesc.order(&ps);
+        // UNet 19, SimpleNet 14, KWS 9.
+        assert_eq!(ps[order[0]].name, "UNet");
+        assert_eq!(ps[order[1]].name, "SimpleNet");
+        assert_eq!(ps[order[2]].name, "KWS");
+    }
+
+    #[test]
+    fn sequential_is_identity() {
+        let ps = pipes();
+        assert_eq!(Priority::Sequential.order(&ps), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn orderings_are_permutations() {
+        let ps = pipes();
+        for pr in Priority::ALL {
+            let mut o = pr.order(&ps);
+            o.sort();
+            assert_eq!(o, vec![0, 1, 2], "{pr:?}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! §IV-B — the device-agnostic programming interface.
+//!
+//! On-body AI apps are written as pipelines of logical tasks — *sensing* →
+//! *model* → *interaction* — with requirements instead of device bindings.
+//! The runtime (not the developer) decides which wearable executes what, so
+//! the system gains visibility and control over every concurrent app's
+//! resource use.
+
+pub mod spec;
+
+pub use spec::{PipelineId, PipelineSpec, SourceReq, TargetReq};

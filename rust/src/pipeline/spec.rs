@@ -1,0 +1,181 @@
+//! Pipeline specifications.
+//!
+//! A pipeline is the paper's three-task DAG: `(sensing, model, interaction)`
+//! — e.g. *(microphone, KeywordSpotting, haptic on ring)*. Sensing and
+//! interaction tasks carry *requirements* (a designated device or a
+//! capability kind, §IV-B); the model task names an AI model from the zoo.
+
+use crate::device::{DeviceId, Fleet, InteractionKind, SensorKind};
+use crate::model::ModelGraph;
+
+/// Identifier of a pipeline among the concurrently running apps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PipelineId(pub usize);
+
+impl std::fmt::Display for PipelineId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+
+/// Requirement on the sensing task (§IV-B: designated device or sensor
+/// type).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceReq {
+    /// Must run on this device.
+    Device(DeviceId),
+    /// May run on any device with this sensor.
+    Sensor(SensorKind),
+    /// Unconstrained — any device may act as the source (the paper's `D²`
+    /// source/target mapping space, used e.g. by the Fig. 9/18 setups).
+    Any,
+}
+
+/// Requirement on the interaction task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TargetReq {
+    Device(DeviceId),
+    Interaction(InteractionKind),
+    Any,
+}
+
+/// A device-agnostic app pipeline.
+#[derive(Clone, Debug)]
+pub struct PipelineSpec {
+    pub id: PipelineId,
+    /// Human-readable app name ("memory augmentation", "fitness coach"…).
+    pub name: String,
+    pub source: SourceReq,
+    /// The model to execute (owned copy so tests can synthesize models).
+    pub model: ModelGraph,
+    pub target: TargetReq,
+}
+
+impl PipelineSpec {
+    pub fn new(
+        id: usize,
+        name: impl Into<String>,
+        source: SourceReq,
+        model: ModelGraph,
+        target: TargetReq,
+    ) -> PipelineSpec {
+        PipelineSpec {
+            id: PipelineId(id),
+            name: name.into(),
+            source,
+            model,
+            target,
+        }
+    }
+
+    /// Devices satisfying the source requirement within `fleet`.
+    pub fn source_candidates(&self, fleet: &Fleet) -> Vec<DeviceId> {
+        match self.source {
+            SourceReq::Device(d) => {
+                if d.0 < fleet.len() {
+                    vec![d]
+                } else {
+                    vec![]
+                }
+            }
+            SourceReq::Sensor(s) => fleet.with_sensor(s),
+            SourceReq::Any => fleet.ids().collect(),
+        }
+    }
+
+    /// Devices satisfying the target requirement within `fleet`.
+    pub fn target_candidates(&self, fleet: &Fleet) -> Vec<DeviceId> {
+        match self.target {
+            TargetReq::Device(d) => {
+                if d.0 < fleet.len() {
+                    vec![d]
+                } else {
+                    vec![]
+                }
+            }
+            TargetReq::Interaction(i) => fleet.with_interaction(i),
+            TargetReq::Any => fleet.ids().collect(),
+        }
+    }
+
+    /// The paper's data-intensity metric for pipeline prioritization
+    /// (§IV-D) — delegates to the model since sensing input and layer
+    /// outputs define it.
+    pub fn data_intensity(&self) -> f64 {
+        self.model.data_intensity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+
+    fn tiny_model() -> ModelGraph {
+        ModelGraph::new(
+            "tiny",
+            Shape::new(8, 8, 1),
+            vec![Layer {
+                kind: LayerKind::Conv2d { k: 3 },
+                pool: 1,
+                cout: 4,
+                residual: false, has_bias: true,
+            }],
+        )
+    }
+
+    fn fleet() -> Fleet {
+        Fleet::new(vec![
+            Device::new(0, "earbud", DeviceKind::Max78000,
+                vec![SensorKind::Microphone], vec![InteractionKind::Audio]),
+            Device::new(1, "glasses", DeviceKind::Max78000,
+                vec![SensorKind::Camera], vec![]),
+            Device::new(2, "ring", DeviceKind::Max78000,
+                vec![], vec![InteractionKind::Haptic]),
+        ])
+    }
+
+    #[test]
+    fn designated_device_is_sole_candidate() {
+        let p = PipelineSpec::new(
+            0, "kws",
+            SourceReq::Device(DeviceId(0)),
+            tiny_model(),
+            TargetReq::Device(DeviceId(2)),
+        );
+        assert_eq!(p.source_candidates(&fleet()), vec![DeviceId(0)]);
+        assert_eq!(p.target_candidates(&fleet()), vec![DeviceId(2)]);
+    }
+
+    #[test]
+    fn capability_requirements_filter() {
+        let p = PipelineSpec::new(
+            0, "attention",
+            SourceReq::Sensor(SensorKind::Camera),
+            tiny_model(),
+            TargetReq::Interaction(InteractionKind::Haptic),
+        );
+        assert_eq!(p.source_candidates(&fleet()), vec![DeviceId(1)]);
+        assert_eq!(p.target_candidates(&fleet()), vec![DeviceId(2)]);
+    }
+
+    #[test]
+    fn any_matches_all_devices() {
+        let p = PipelineSpec::new(0, "x", SourceReq::Any, tiny_model(), TargetReq::Any);
+        assert_eq!(p.source_candidates(&fleet()).len(), 3);
+        assert_eq!(p.target_candidates(&fleet()).len(), 3);
+    }
+
+    #[test]
+    fn missing_capability_means_no_candidates() {
+        let p = PipelineSpec::new(
+            0, "x",
+            SourceReq::Sensor(SensorKind::Ppg),
+            tiny_model(),
+            TargetReq::Interaction(InteractionKind::Display),
+        );
+        assert!(p.source_candidates(&fleet()).is_empty());
+        assert!(p.target_candidates(&fleet()).is_empty());
+    }
+}

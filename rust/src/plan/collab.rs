@@ -1,0 +1,257 @@
+//! Holistic collaboration plans (§IV-C): one execution plan per concurrent
+//! pipeline, plus the joint *runnable* check — the total weight memory,
+//! bias memory and layer count of every chunk assigned to each accelerator
+//! must stay within that accelerator's capacity. Checking this jointly
+//! (rather than per pipeline) is exactly what IndModel lacks and what makes
+//! it hit OOR in Workloads 1–2.
+
+use std::collections::BTreeMap;
+
+use crate::device::{AccelMemory, DeviceId, Fleet, OorError};
+use crate::pipeline::PipelineSpec;
+
+use super::exec_plan::ExecutionPlan;
+
+/// Joint-OOR failure: which device ran out of which resource.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("OOR on {device}: {kind}")]
+pub struct RunnableError {
+    pub device: DeviceId,
+    pub kind: OorError,
+}
+
+/// A holistic collaboration plan over all concurrent pipelines.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CollabPlan {
+    /// One execution plan per pipeline, index-aligned with the pipeline
+    /// list the orchestrator was given.
+    pub plans: Vec<ExecutionPlan>,
+}
+
+impl CollabPlan {
+    pub fn new(plans: Vec<ExecutionPlan>) -> CollabPlan {
+        CollabPlan { plans }
+    }
+
+    /// Per-device memory usage of the whole plan.
+    pub fn memory_usage(
+        &self,
+        pipelines: &[PipelineSpec],
+    ) -> BTreeMap<DeviceId, AccelMemory> {
+        let mut usage: BTreeMap<DeviceId, AccelMemory> = BTreeMap::new();
+        for plan in &self.plans {
+            let model = &pipelines
+                .iter()
+                .find(|p| p.id == plan.pipeline)
+                .expect("plan for unknown pipeline")
+                .model;
+            for a in &plan.chunks {
+                let m = usage.entry(a.device).or_default();
+                m.weight_bytes += model.weight_bytes(a.range);
+                m.bias_bytes += model.bias_bytes(a.range);
+                m.layers += a.range.len();
+            }
+        }
+        usage
+    }
+
+    /// §IV-C's runnable check over the joint memory usage.
+    pub fn check_runnable(
+        &self,
+        pipelines: &[PipelineSpec],
+        fleet: &Fleet,
+    ) -> Result<(), RunnableError> {
+        for (dev, used) in self.memory_usage(pipelines) {
+            let spec = fleet
+                .get(dev)
+                .spec
+                .accel
+                .as_ref()
+                .expect("chunk assigned to non-accelerator device");
+            AccelMemory::default()
+                .check(spec, used.weight_bytes, used.bias_bytes, used.layers)
+                .map_err(|kind| RunnableError { device: dev, kind })?;
+        }
+        Ok(())
+    }
+}
+
+/// Incremental joint-memory tracker for progressive plan accumulation
+/// (§IV-D): holds the usage of already-selected execution plans so each
+/// candidate for the next pipeline is checked in O(its own chunks).
+#[derive(Clone, Debug, Default)]
+pub struct MemoryLedger {
+    usage: BTreeMap<DeviceId, AccelMemory>,
+}
+
+impl MemoryLedger {
+    /// Would `plan` fit on top of the current ledger?
+    ///
+    /// Allocation-free (this runs once per enumerated candidate — the
+    /// planner's hot loop): chunks are grouped per device by scanning the
+    /// short chunk list instead of building a map.
+    pub fn fits(&self, plan: &ExecutionPlan, model: &crate::model::ModelGraph, fleet: &Fleet) -> bool {
+        for (i, a) in plan.chunks.iter().enumerate() {
+            // Group at the first chunk per device (a plan may place two
+            // non-adjacent chunks on the same device).
+            if plan.chunks[..i].iter().any(|b| b.device == a.device) {
+                continue;
+            }
+            let spec = match &fleet.get(a.device).spec.accel {
+                Some(s) => s,
+                None => return false,
+            };
+            let (mut w, mut b, mut l) = (0u64, 0u64, 0usize);
+            for c in plan.chunks[i..].iter().filter(|c| c.device == a.device) {
+                w += model.weight_bytes(c.range);
+                b += model.bias_bytes(c.range);
+                l += c.range.len();
+            }
+            let ok = self
+                .usage
+                .get(&a.device)
+                .copied()
+                .unwrap_or_default()
+                .check(spec, w, b, l)
+                .is_ok();
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Commit a selected plan's usage.
+    pub fn commit(&mut self, plan: &ExecutionPlan, model: &crate::model::ModelGraph) {
+        for a in &plan.chunks {
+            let m = self.usage.entry(a.device).or_default();
+            m.weight_bytes += model.weight_bytes(a.range);
+            m.bias_bytes += model.bias_bytes(a.range);
+            m.layers += a.range.len();
+        }
+    }
+
+    pub fn usage(&self) -> &BTreeMap<DeviceId, AccelMemory> {
+        &self.usage
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::{ModelGraph, SplitRange};
+    use crate::pipeline::{PipelineId, SourceReq, TargetReq};
+    use crate::plan::exec_plan::Assignment;
+
+    /// ~239 KB model: two fit on a MAX78002 but not on a MAX78000 (442 KB).
+    fn chunky_model(name: &str) -> ModelGraph {
+        ModelGraph::new(
+            name,
+            Shape::new(16, 16, 64),
+            vec![
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 260, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 40, residual: false, has_bias: true },
+            ],
+        )
+    }
+
+    fn fleet2() -> Fleet {
+        Fleet::new(vec![
+            Device::new(0, "a", DeviceKind::Max78000, vec![], vec![]),
+            Device::new(1, "b", DeviceKind::Max78000, vec![], vec![]),
+        ])
+    }
+
+    fn mono(pid: usize, dev: usize, model: &ModelGraph) -> ExecutionPlan {
+        ExecutionPlan {
+            pipeline: PipelineId(pid),
+            source_dev: DeviceId(dev),
+            target_dev: DeviceId(dev),
+            chunks: vec![Assignment {
+                device: DeviceId(dev),
+                range: model.full(),
+            }],
+        }
+    }
+
+    fn pipelines() -> Vec<PipelineSpec> {
+        vec![
+            PipelineSpec::new(0, "p0", SourceReq::Any, chunky_model("m0"), TargetReq::Any),
+            PipelineSpec::new(1, "p1", SourceReq::Any, chunky_model("m1"), TargetReq::Any),
+        ]
+    }
+
+    #[test]
+    fn joint_check_catches_what_individual_checks_miss() {
+        let ps = pipelines();
+        let f = fleet2();
+        // Each model alone fits d0; both together exceed 442 KB — the
+        // IndModel failure mode (§III-A example, Fig. 5a).
+        let both_on_d0 = CollabPlan::new(vec![
+            mono(0, 0, &ps[0].model),
+            mono(1, 0, &ps[1].model),
+        ]);
+        let err = both_on_d0.check_runnable(&ps, &f).unwrap_err();
+        assert_eq!(err.device, DeviceId(0));
+        assert_eq!(err.kind, OorError::WeightMem);
+
+        let spread = CollabPlan::new(vec![
+            mono(0, 0, &ps[0].model),
+            mono(1, 1, &ps[1].model),
+        ]);
+        assert!(spread.check_runnable(&ps, &f).is_ok());
+    }
+
+    #[test]
+    fn memory_usage_aggregates_per_device() {
+        let ps = pipelines();
+        let plan = CollabPlan::new(vec![
+            mono(0, 0, &ps[0].model),
+            mono(1, 0, &ps[1].model),
+        ]);
+        let usage = plan.memory_usage(&ps);
+        let m0 = &ps[0].model;
+        assert_eq!(
+            usage[&DeviceId(0)].weight_bytes,
+            2 * m0.weight_bytes(m0.full())
+        );
+        assert_eq!(usage[&DeviceId(0)].layers, 4);
+    }
+
+    #[test]
+    fn ledger_fits_then_commits() {
+        let ps = pipelines();
+        let f = fleet2();
+        let mut ledger = MemoryLedger::default();
+        let p0 = mono(0, 0, &ps[0].model);
+        assert!(ledger.fits(&p0, &ps[0].model, &f));
+        ledger.commit(&p0, &ps[0].model);
+        // Second identical-size model no longer fits on d0…
+        let p1 = mono(1, 0, &ps[1].model);
+        assert!(!ledger.fits(&p1, &ps[1].model, &f));
+        // …but fits on d1.
+        let p1b = mono(1, 1, &ps[1].model);
+        assert!(ledger.fits(&p1b, &ps[1].model, &f));
+    }
+
+    #[test]
+    fn ledger_groups_same_device_chunks() {
+        // One plan with two chunks on the same device must count both
+        // against that device (non-adjacent reuse).
+        let m = chunky_model("m");
+        let f = fleet2();
+        let plan = ExecutionPlan {
+            pipeline: PipelineId(0),
+            source_dev: DeviceId(0),
+            target_dev: DeviceId(0),
+            chunks: vec![
+                Assignment { device: DeviceId(0), range: SplitRange::new(0, 1) },
+                Assignment { device: DeviceId(1), range: SplitRange::new(1, 2) },
+            ],
+        };
+        let ledger = MemoryLedger::default();
+        assert!(ledger.fits(&plan, &m, &f));
+    }
+}

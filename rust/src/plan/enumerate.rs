@@ -1,0 +1,359 @@
+//! Execution-plan enumeration (§IV-C/§IV-D).
+//!
+//! For one pipeline the space is
+//!
+//! `N_p = Σ_{d=1..D} P(D,d) · C(L-1, d-1) · |src| · |tgt|`
+//!
+//! — device *orders* (d-permutations of the accelerator fleet), times the
+//! `d-1` split boundaries chosen among `L-1`, times the source/target
+//! mappings (`D²` when requirements leave them free). Enumeration filters
+//! per-chunk single-device fits eagerly (a chunk larger than its device's
+//! whole accelerator can never be part of a runnable holistic plan).
+
+use crate::device::{AccelMemory, DeviceId, Fleet};
+use crate::pipeline::PipelineSpec;
+
+use super::exec_plan::{Assignment, ExecutionPlan};
+
+/// Enumeration limits.
+#[derive(Clone, Copy, Debug)]
+pub struct EnumerateCfg {
+    /// Maximum number of chunks a model may be split into (defaults to the
+    /// whole accelerator fleet, as MaxDev requires).
+    pub max_split_devices: usize,
+}
+
+impl Default for EnumerateCfg {
+    fn default() -> Self {
+        EnumerateCfg {
+            max_split_devices: usize::MAX,
+        }
+    }
+}
+
+/// Closed-form plan count from the paper (uses `D²` source/target options),
+/// for the Fig. 9 search-space comparison: D=3 with the 9-layer KWS gives
+/// 1 971, the 14-layer SimpleNet 4 941, the 19-layer UNet 9 261.
+pub fn paper_plan_count(num_devices: usize, num_layers: usize) -> u64 {
+    let d_max = num_devices.min(num_layers);
+    let mut total: u64 = 0;
+    for d in 1..=d_max {
+        total += permutations(num_devices, d) * combinations(num_layers - 1, d - 1);
+    }
+    total * (num_devices * num_devices) as u64
+}
+
+fn permutations(n: usize, k: usize) -> u64 {
+    ((n - k + 1)..=n).map(|x| x as u64).product()
+}
+
+fn combinations(n: usize, k: usize) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u64 = 1;
+    let mut den: u64 = 1;
+    for i in 0..k {
+        num *= (n - i) as u64;
+        den *= (i + 1) as u64;
+    }
+    num / den
+}
+
+/// Enumerate all execution plans for `pipeline` over `fleet`.
+///
+/// Convenience wrapper over [`enumerate_plans_with`] that materializes the
+/// whole space; the planner's hot path uses the callback form to avoid
+/// allocating tens of thousands of plans (see EXPERIMENTS.md §Perf).
+pub fn enumerate_plans(
+    pipeline: &PipelineSpec,
+    fleet: &Fleet,
+    cfg: EnumerateCfg,
+) -> Vec<ExecutionPlan> {
+    let mut plans = Vec::new();
+    enumerate_plans_with(pipeline, fleet, cfg, |p| plans.push(p.clone()));
+    plans
+}
+
+/// Visit every execution plan for `pipeline` over `fleet` without
+/// materializing the space: the callback receives a reusable plan whose
+/// chunk vector is rewritten in place between calls.
+///
+/// Chunks may only go to accelerator-bearing devices; each chunk must fit
+/// its device's accelerator *alone* (cross-pipeline fit is the holistic
+/// check in [`super::collab`]). Consecutive chunks are on distinct devices
+/// by construction (a d-permutation has no repeats).
+pub fn enumerate_plans_with(
+    pipeline: &PipelineSpec,
+    fleet: &Fleet,
+    cfg: EnumerateCfg,
+    mut visit: impl FnMut(&ExecutionPlan),
+) {
+    let sources = pipeline.source_candidates(fleet);
+    let targets = pipeline.target_candidates(fleet);
+    if sources.is_empty() || targets.is_empty() {
+        return;
+    }
+    let accel_devs = fleet.accel_ids();
+    let model = &pipeline.model;
+    let num_layers = model.num_layers();
+    let d_max = accel_devs
+        .len()
+        .min(num_layers)
+        .min(cfg.max_split_devices);
+
+    // Reusable plan buffer handed to the callback.
+    let mut scratch = ExecutionPlan {
+        pipeline: pipeline.id,
+        source_dev: sources[0],
+        target_dev: targets[0],
+        chunks: Vec::with_capacity(d_max),
+    };
+    // Chunk-fit memo: chunk_fits[dev][start][end] would be L² per device;
+    // compute lazily through a closure over prefix sums instead.
+    let prefix_w: Vec<u64> = {
+        let mut acc = vec![0u64];
+        for l in 0..num_layers {
+            let last = *acc.last().unwrap();
+            acc.push(last + model.layers[l].weight_bytes(model.in_shape(l)));
+        }
+        acc
+    };
+    let prefix_b: Vec<u64> = {
+        let mut acc = vec![0u64];
+        for l in 0..num_layers {
+            let last = *acc.last().unwrap();
+            acc.push(last + model.layers[l].bias_bytes(model.in_shape(l)));
+        }
+        acc
+    };
+    let chunk_fits = |dev: DeviceId, start: usize, end: usize| -> bool {
+        let spec = match &fleet.get(dev).spec.accel {
+            Some(s) => s,
+            None => return false,
+        };
+        AccelMemory::default()
+            .check(
+                spec,
+                prefix_w[end] - prefix_w[start],
+                prefix_b[end] - prefix_b[start],
+                end - start,
+            )
+            .is_ok()
+    };
+
+    // Iterate d = number of chunk devices.
+    for d in 1..=d_max {
+        let mut perm: Vec<DeviceId> = Vec::with_capacity(d);
+        let mut used = vec![false; accel_devs.len()];
+        permute(
+            &accel_devs,
+            d,
+            &mut perm,
+            &mut used,
+            &mut |order: &[DeviceId]| {
+                // Choose d-1 boundaries among 1..num_layers.
+                let mut bounds: Vec<usize> = Vec::with_capacity(d - 1);
+                choose_boundaries(num_layers, d - 1, 1, &mut bounds, &mut |bs: &[usize]| {
+                    // Build chunk ranges in the scratch plan, checking
+                    // per-chunk fit as we go.
+                    scratch.chunks.clear();
+                    let mut prev = 0;
+                    for (i, &dev) in order.iter().enumerate() {
+                        let end = if i + 1 == d { num_layers } else { bs[i] };
+                        if !chunk_fits(dev, prev, end) {
+                            return;
+                        }
+                        scratch.chunks.push(Assignment {
+                            device: dev,
+                            range: crate::model::SplitRange::new(prev, end),
+                        });
+                        prev = end;
+                    }
+                    for &s in &sources {
+                        for &t in &targets {
+                            scratch.source_dev = s;
+                            scratch.target_dev = t;
+                            visit(&scratch);
+                        }
+                    }
+                });
+            },
+        );
+    }
+}
+
+/// Recursively build d-permutations of `devs`.
+fn permute(
+    devs: &[DeviceId],
+    d: usize,
+    cur: &mut Vec<DeviceId>,
+    used: &mut [bool],
+    f: &mut impl FnMut(&[DeviceId]),
+) {
+    if cur.len() == d {
+        f(cur);
+        return;
+    }
+    for i in 0..devs.len() {
+        if used[i] {
+            continue;
+        }
+        used[i] = true;
+        cur.push(devs[i]);
+        permute(devs, d, cur, used, f);
+        cur.pop();
+        used[i] = false;
+    }
+}
+
+/// Recursively choose `k` ascending boundaries in `[from, num_layers)`.
+fn choose_boundaries(
+    num_layers: usize,
+    k: usize,
+    from: usize,
+    cur: &mut Vec<usize>,
+    f: &mut impl FnMut(&[usize]),
+) {
+    if cur.len() == k {
+        f(cur);
+        return;
+    }
+    let remaining = k - cur.len();
+    for b in from..=(num_layers - remaining) {
+        cur.push(b);
+        choose_boundaries(num_layers, k, b + 1, cur, f);
+        cur.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::ModelGraph;
+    use crate::pipeline::{SourceReq, TargetReq};
+
+    fn small_model(layers: usize) -> ModelGraph {
+        ModelGraph::new(
+            format!("m{layers}"),
+            Shape::new(8, 8, 2),
+            (0..layers)
+                .map(|_| Layer {
+                    kind: LayerKind::Conv2d { k: 3 },
+                    pool: 1,
+                    cout: 4,
+                    residual: false, has_bias: true,
+                })
+                .collect(),
+        )
+    }
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn any_pipeline(layers: usize) -> PipelineSpec {
+        PipelineSpec::new(0, "t", SourceReq::Any, small_model(layers), TargetReq::Any)
+    }
+
+    #[test]
+    fn paper_counts_reproduce_section_iv_d() {
+        // §IV-D: three MAX78000s with the 9/14/19-layer models.
+        assert_eq!(paper_plan_count(3, 9), 1_971);
+        assert_eq!(paper_plan_count(3, 14), 4_941);
+        assert_eq!(paper_plan_count(3, 19), 9_261);
+    }
+
+    #[test]
+    fn enumeration_matches_closed_form_when_nothing_filtered() {
+        // Tiny chunks always fit MAX78000 memory, so the enumerated count
+        // must equal the paper's formula exactly.
+        for (d, l) in [(2, 4), (3, 5), (2, 9)] {
+            let p = any_pipeline(l);
+            let plans = enumerate_plans(&p, &fleet(d), EnumerateCfg::default());
+            assert_eq!(
+                plans.len() as u64,
+                paper_plan_count(d, l),
+                "D={d} L={l}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_enumerated_plans_are_valid() {
+        let p = any_pipeline(5);
+        let f = fleet(3);
+        for plan in enumerate_plans(&p, &f, EnumerateCfg::default()) {
+            plan.validate(&p.model).unwrap();
+        }
+    }
+
+    #[test]
+    fn designated_source_target_reduces_space() {
+        let mut p = any_pipeline(5);
+        p.source = SourceReq::Device(DeviceId(0));
+        p.target = TargetReq::Device(DeviceId(1));
+        let f = fleet(3);
+        let plans = enumerate_plans(&p, &f, EnumerateCfg::default());
+        assert_eq!(plans.len() as u64, paper_plan_count(3, 5) / 9);
+        assert!(plans
+            .iter()
+            .all(|pl| pl.source_dev == DeviceId(0) && pl.target_dev == DeviceId(1)));
+    }
+
+    #[test]
+    fn max_split_devices_caps_chunks() {
+        let p = any_pipeline(6);
+        let f = fleet(3);
+        let plans = enumerate_plans(
+            &p,
+            &f,
+            EnumerateCfg { max_split_devices: 1 },
+        );
+        assert!(plans.iter().all(|pl| pl.chunks.len() == 1));
+        // D · 1 · D² plans.
+        assert_eq!(plans.len(), 3 * 9);
+    }
+
+    #[test]
+    fn oversized_chunks_are_filtered() {
+        // A model that cannot fit on one MAX78000 forces splitting: single
+        // 500 KB conv layer per chunk won't fit, so only multi-chunk plans
+        // survive... construct a 2-layer model with each layer ~300 KB.
+        let m = ModelGraph::new(
+            "big",
+            Shape::new(16, 16, 64),
+            vec![
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 520, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 64, residual: false, has_bias: true },
+            ],
+        );
+        // layer0: 9·64·520 = 299 520 B; layer1: 9·520·64 = 299 520 B.
+        // Together 599 040 B > 442 KB, individually fine.
+        let p = PipelineSpec::new(0, "big", SourceReq::Any, m, TargetReq::Any);
+        let f = fleet(2);
+        let plans = enumerate_plans(&p, &f, EnumerateCfg::default());
+        assert!(!plans.is_empty());
+        assert!(plans.iter().all(|pl| pl.chunks.len() == 2), "must all split");
+    }
+
+    #[test]
+    fn no_accel_devices_means_no_plans() {
+        let f = Fleet::new(vec![Device::new(
+            0,
+            "mcu",
+            DeviceKind::McuMax32650,
+            vec![],
+            vec![],
+        )]);
+        let p = any_pipeline(3);
+        assert!(enumerate_plans(&p, &f, EnumerateCfg::default()).is_empty());
+    }
+}

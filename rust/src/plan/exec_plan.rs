@@ -1,0 +1,302 @@
+//! Execution plans: one pipeline's task→device mapping, expanded into the
+//! concrete task sequence of §IV-C. The paper's example for
+//! (camera on glasses, EfficientNet, haptic on ring) with a split at 19:
+//!
+//! glasses: [camera → load → EfficientNet^{0:19} → unload → Tx to ring]
+//! ring:    [Rx from glasses → load → EfficientNet^{19:29} → unload → haptic]
+
+use crate::device::DeviceId;
+use crate::model::{ModelGraph, SplitRange};
+use crate::pipeline::{PipelineId, PipelineSpec};
+
+use super::task::{PlanTask, TaskKind};
+
+/// One model chunk assigned to one accelerator-bearing device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub device: DeviceId,
+    pub range: SplitRange,
+}
+
+/// A pipeline's execution plan: source/target device choice plus the
+/// ordered chunk assignments (ranges partition `0..L`; consecutive chunks
+/// live on distinct devices).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecutionPlan {
+    pub pipeline: PipelineId,
+    pub source_dev: DeviceId,
+    pub target_dev: DeviceId,
+    pub chunks: Vec<Assignment>,
+}
+
+impl ExecutionPlan {
+    /// Validate the structural invariants (used by tests and debug builds).
+    pub fn validate(&self, model: &ModelGraph) -> Result<(), String> {
+        if self.chunks.is_empty() {
+            return Err("no chunks".into());
+        }
+        let mut expect = 0;
+        for (i, a) in self.chunks.iter().enumerate() {
+            if a.range.start != expect {
+                return Err(format!("chunk {i} starts at {} ≠ {expect}", a.range.start));
+            }
+            expect = a.range.end;
+            if i > 0 && self.chunks[i - 1].device == a.device {
+                return Err(format!("consecutive chunks {i} share a device"));
+            }
+        }
+        if expect != model.num_layers() {
+            return Err(format!(
+                "chunks end at {expect} ≠ {} layers",
+                model.num_layers()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Number of distinct devices that hold model chunks.
+    pub fn num_infer_devices(&self) -> usize {
+        let mut devs: Vec<DeviceId> = self.chunks.iter().map(|a| a.device).collect();
+        devs.sort();
+        devs.dedup();
+        devs.len()
+    }
+
+    /// Total bytes this plan sends over the radio per run (sensing hop +
+    /// inter-chunk hops + result hop). The quantity PriMinDev/PriMaxDev
+    /// minimize and a proxy for communication energy.
+    pub fn radio_bytes(&self, model: &ModelGraph) -> u64 {
+        let mut total = 0;
+        if self.source_dev != self.chunks[0].device {
+            total += model.in_bytes();
+        }
+        for w in self.chunks.windows(2) {
+            total += model.boundary_bytes(w[0].range.end - 1);
+        }
+        if self.chunks.last().unwrap().device != self.target_dev {
+            total += model.output().bytes();
+        }
+        total
+    }
+
+    /// Expand into the concrete dependency-ordered task sequence.
+    ///
+    /// Dependencies are linear: task `i+1` consumes task `i`'s output. A Tx
+    /// and its matching Rx are adjacent (`Tx` then `Rx`); the scheduler
+    /// models the radio occupancy of both ends.
+    pub fn tasks(&self, model: &ModelGraph) -> Vec<PlanTask> {
+        let mut out = Vec::new();
+        self.for_each_task(model, |t| out.push(t));
+        out
+    }
+
+    /// Visit the task sequence without allocating — the estimator's hot
+    /// path (candidate scoring runs this tens of thousands of times per
+    /// orchestration; see EXPERIMENTS.md §Perf).
+    pub fn for_each_task(&self, model: &ModelGraph, mut f: impl FnMut(PlanTask)) {
+        let mut seq = 0;
+        let mut push = |device: DeviceId, kind: TaskKind, f: &mut dyn FnMut(PlanTask)| {
+            f(PlanTask {
+                pipeline: self.pipeline,
+                seq,
+                device,
+                kind,
+            });
+            seq += 1;
+        };
+
+        // (i) sensing on the source device.
+        push(self.source_dev, TaskKind::Sense { bytes: model.in_bytes() }, &mut f);
+
+        // Hop to the first chunk's device if needed.
+        let first_dev = self.chunks[0].device;
+        if self.source_dev != first_dev {
+            push(
+                self.source_dev,
+                TaskKind::Tx { bytes: model.in_bytes(), to: first_dev },
+                &mut f,
+            );
+            push(
+                first_dev,
+                TaskKind::Rx { bytes: model.in_bytes(), from: self.source_dev },
+                &mut f,
+            );
+        }
+
+        // Chunks: load → infer → unload, with radio hops between devices.
+        for (i, a) in self.chunks.iter().enumerate() {
+            let in_bytes = if a.range.start == 0 {
+                model.in_bytes()
+            } else {
+                model.boundary_bytes(a.range.start - 1)
+            };
+            let out_bytes = model.boundary_bytes(a.range.end - 1);
+            push(a.device, TaskKind::Load { bytes: in_bytes }, &mut f);
+            push(a.device, TaskKind::Infer { range: a.range }, &mut f);
+            push(a.device, TaskKind::Unload { bytes: out_bytes }, &mut f);
+            if let Some(next) = self.chunks.get(i + 1) {
+                push(
+                    a.device,
+                    TaskKind::Tx { bytes: out_bytes, to: next.device },
+                    &mut f,
+                );
+                push(
+                    next.device,
+                    TaskKind::Rx { bytes: out_bytes, from: a.device },
+                    &mut f,
+                );
+            }
+        }
+
+        // Hop to the target device if needed, then interact.
+        let last = self.chunks.last().unwrap();
+        let result_bytes = model.output().bytes();
+        if last.device != self.target_dev {
+            push(
+                last.device,
+                TaskKind::Tx { bytes: result_bytes, to: self.target_dev },
+                &mut f,
+            );
+            push(
+                self.target_dev,
+                TaskKind::Rx { bytes: result_bytes, from: last.device },
+                &mut f,
+            );
+        }
+        push(self.target_dev, TaskKind::Interact { bytes: result_bytes }, &mut f);
+    }
+
+    /// Build the single-device plan (no splitting) — the IndModel/MinDev
+    /// degenerate case and a convenient test fixture.
+    pub fn monolithic(
+        pipeline: &PipelineSpec,
+        source: DeviceId,
+        infer: DeviceId,
+        target: DeviceId,
+    ) -> ExecutionPlan {
+        ExecutionPlan {
+            pipeline: pipeline.id,
+            source_dev: source,
+            target_dev: target,
+            chunks: vec![Assignment {
+                device: infer,
+                range: pipeline.model.full(),
+            }],
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutionPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {} →", self.pipeline, self.source_dev)?;
+        for a in &self.chunks {
+            write!(f, " [{} on {}]", a.range, a.device)?;
+        }
+        write!(f, " → {}", self.target_dev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::plan::task::UnitKind;
+
+    fn model3() -> ModelGraph {
+        ModelGraph::new(
+            "m3",
+            Shape::new(8, 8, 2),
+            vec![
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 4, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 2, cout: 8, residual: false, has_bias: true },
+                Layer { kind: LayerKind::Linear, pool: 1, cout: 10, residual: false, has_bias: true },
+            ],
+        )
+    }
+
+    fn split_plan() -> ExecutionPlan {
+        ExecutionPlan {
+            pipeline: PipelineId(0),
+            source_dev: DeviceId(0),
+            target_dev: DeviceId(2),
+            chunks: vec![
+                Assignment { device: DeviceId(1), range: SplitRange::new(0, 2) },
+                Assignment { device: DeviceId(2), range: SplitRange::new(2, 3) },
+            ],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_partition() {
+        assert_eq!(split_plan().validate(&model3()), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_gap_and_shared_device() {
+        let m = model3();
+        let mut p = split_plan();
+        p.chunks[1].range = SplitRange::new(1, 3);
+        assert!(p.validate(&m).is_err());
+        let mut q = split_plan();
+        q.chunks[1].device = DeviceId(1);
+        assert!(q.validate(&m).is_err());
+    }
+
+    #[test]
+    fn task_expansion_structure() {
+        let m = model3();
+        let tasks = split_plan().tasks(&m);
+        // sense, tx, rx, (load, infer, unload) ×2 with tx/rx between,
+        // interact on target (already on d2, no final hop).
+        let kinds: Vec<UnitKind> = tasks.iter().map(|t| t.unit()).collect();
+        assert_eq!(tasks.len(), 1 + 2 + 3 + 2 + 3 + 1);
+        assert_eq!(kinds[0], UnitKind::Sensor);
+        assert!(matches!(tasks[1].kind, TaskKind::Tx { to, .. } if to == DeviceId(1)));
+        assert!(matches!(tasks[2].kind, TaskKind::Rx { from, .. } if from == DeviceId(0)));
+        // seq is strictly increasing 0..n.
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.seq, i);
+        }
+        // Last task is interaction on the target.
+        let last = tasks.last().unwrap();
+        assert!(matches!(last.kind, TaskKind::Interact { .. }));
+        assert_eq!(last.device, DeviceId(2));
+    }
+
+    #[test]
+    fn intermediate_bytes_are_boundary_sizes() {
+        let m = model3();
+        let tasks = split_plan().tasks(&m);
+        // The inter-chunk Tx carries layer 1's output (4×4×8 = 128 B).
+        let tx = tasks
+            .iter()
+            .find(|t| matches!(t.kind, TaskKind::Tx { to, .. } if to == DeviceId(2)))
+            .unwrap();
+        assert_eq!(tx.kind.bytes(), 128);
+    }
+
+    #[test]
+    fn radio_bytes_counts_all_hops() {
+        let m = model3();
+        let p = split_plan();
+        // source→chunk0 hop (input 128 B) + chunk boundary (128 B); result
+        // stays on target device (no final hop).
+        assert_eq!(p.radio_bytes(&m), m.in_bytes() + 128);
+    }
+
+    #[test]
+    fn monolithic_same_device_has_no_radio() {
+        let m = model3();
+        let spec = PipelineSpec::new(
+            0, "t",
+            crate::pipeline::SourceReq::Device(DeviceId(0)),
+            m.clone(),
+            crate::pipeline::TargetReq::Device(DeviceId(0)),
+        );
+        let p = ExecutionPlan::monolithic(&spec, DeviceId(0), DeviceId(0), DeviceId(0));
+        assert_eq!(p.radio_bytes(&m), 0);
+        let tasks = p.tasks(&m);
+        assert!(tasks.iter().all(|t| t.device == DeviceId(0)));
+        assert!(!tasks.iter().any(|t| matches!(t.kind, TaskKind::Tx { .. })));
+    }
+}

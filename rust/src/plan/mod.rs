@@ -1,0 +1,18 @@
+//! §IV-C — execution plans and holistic collaboration plans.
+//!
+//! An *execution plan* maps one pipeline's logical tasks to physical devices
+//! (including the model-splitting decision). A *holistic collaboration plan*
+//! integrates one execution plan per concurrent pipeline, which gives the
+//! system visibility over resource competition; it is *runnable* iff every
+//! accelerator's weight memory, bias memory and layer-count capacities hold
+//! all chunks assigned to it.
+
+pub mod task;
+pub mod exec_plan;
+pub mod enumerate;
+pub mod collab;
+
+pub use collab::{CollabPlan, RunnableError};
+pub use enumerate::{enumerate_plans, enumerate_plans_with, paper_plan_count, EnumerateCfg};
+pub use exec_plan::{Assignment, ExecutionPlan};
+pub use task::{PlanTask, TaskKind, UnitKind};

@@ -1,0 +1,116 @@
+//! The seven runtime task types of §IV-C, plus the computation-unit
+//! taxonomy used by the adaptive task parallelization scheduler (§IV-F):
+//! each task runs on exactly one unit kind of one device, which is what
+//! makes per-unit queues meaningful.
+
+use crate::device::DeviceId;
+use crate::model::SplitRange;
+use crate::pipeline::PipelineId;
+
+/// The seven task types: (i) sensing, (ii) data loading, (iii) (partial)
+/// model inference, (iv) data unloading, (v) Tx, (vi) Rx, (vii) interaction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Capture sensor data of `bytes` on the source device.
+    Sense { bytes: u64 },
+    /// Move an activation of `bytes` from SRAM into accelerator data memory.
+    Load { bytes: u64 },
+    /// Run layers `range` of the pipeline's model.
+    Infer { range: SplitRange },
+    /// Move the result of `bytes` out of accelerator data memory.
+    Unload { bytes: u64 },
+    /// Transmit `bytes` to device `to`.
+    Tx { bytes: u64, to: DeviceId },
+    /// Receive `bytes` from device `from`.
+    Rx { bytes: u64, from: DeviceId },
+    /// Deliver the final result (`bytes`) through the device's interface.
+    Interact { bytes: u64 },
+}
+
+/// The computation units a device exposes (§IV-F: "processors, AI
+/// accelerator, and communication module").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum UnitKind {
+    /// Sensor frontend (operates concurrently with the core).
+    Sensor,
+    /// General-purpose core: memory ops, interaction glue, MCU inference.
+    Cpu,
+    /// CNN accelerator.
+    Accel,
+    /// Radio (ESP8266 bridge) — half-duplex: Tx and Rx share it.
+    Radio,
+}
+
+impl TaskKind {
+    /// Which computation unit executes this task.
+    pub fn unit(&self) -> UnitKind {
+        match self {
+            TaskKind::Sense { .. } => UnitKind::Sensor,
+            TaskKind::Load { .. } | TaskKind::Unload { .. } | TaskKind::Interact { .. } => {
+                UnitKind::Cpu
+            }
+            TaskKind::Infer { .. } => UnitKind::Accel,
+            TaskKind::Tx { .. } | TaskKind::Rx { .. } => UnitKind::Radio,
+        }
+    }
+
+    /// Payload size the task moves/produces, for diagnostics.
+    pub fn bytes(&self) -> u64 {
+        match *self {
+            TaskKind::Sense { bytes }
+            | TaskKind::Load { bytes }
+            | TaskKind::Unload { bytes }
+            | TaskKind::Tx { bytes, .. }
+            | TaskKind::Rx { bytes, .. }
+            | TaskKind::Interact { bytes } => bytes,
+            TaskKind::Infer { .. } => 0,
+        }
+    }
+}
+
+/// A task bound to a device within a pipeline's expanded plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanTask {
+    pub pipeline: PipelineId,
+    /// Position within the pipeline's task sequence (dependency order).
+    pub seq: usize,
+    pub device: DeviceId,
+    pub kind: TaskKind,
+}
+
+impl PlanTask {
+    pub fn unit(&self) -> UnitKind {
+        self.kind.unit()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_unit_mapping() {
+        assert_eq!(TaskKind::Sense { bytes: 1 }.unit(), UnitKind::Sensor);
+        assert_eq!(TaskKind::Load { bytes: 1 }.unit(), UnitKind::Cpu);
+        assert_eq!(
+            TaskKind::Infer { range: SplitRange::new(0, 1) }.unit(),
+            UnitKind::Accel
+        );
+        assert_eq!(TaskKind::Unload { bytes: 1 }.unit(), UnitKind::Cpu);
+        assert_eq!(
+            TaskKind::Tx { bytes: 1, to: DeviceId(0) }.unit(),
+            UnitKind::Radio
+        );
+        assert_eq!(
+            TaskKind::Rx { bytes: 1, from: DeviceId(0) }.unit(),
+            UnitKind::Radio
+        );
+        assert_eq!(TaskKind::Interact { bytes: 1 }.unit(), UnitKind::Cpu);
+    }
+
+    #[test]
+    fn bytes_accessor() {
+        assert_eq!(TaskKind::Tx { bytes: 42, to: DeviceId(1) }.bytes(), 42);
+        assert_eq!(TaskKind::Infer { range: SplitRange::new(0, 2) }.bytes(), 0);
+    }
+}

@@ -1,0 +1,280 @@
+//! Artifact manifest: the index of AOT-compiled HLO files plus per-layer
+//! metadata, written by `python/compile/aot.py`. The rust zoo is the
+//! planning ground truth; this manifest is cross-checked against it (see
+//! `rust/tests/integration_runtime.rs`) so L2 and L3 cannot drift.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::model::Shape;
+use crate::util::json::Json;
+
+/// One split-chunk artifact.
+#[derive(Clone, Debug)]
+pub struct ChunkMeta {
+    pub start: usize,
+    pub end: usize,
+    pub file: String,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+}
+
+/// Per-layer metadata as emitted by the Python build path.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub kind: String,
+    pub weight_bytes: u64,
+    pub bias_bytes: u64,
+    pub out_shape: Shape,
+    pub macs: u64,
+    pub cycles_accel_p64: u64,
+}
+
+/// One model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub input: Shape,
+    pub layers: Vec<LayerMeta>,
+    pub full: String,
+    pub chunks: Vec<ChunkMeta>,
+}
+
+impl ModelManifest {
+    /// Find the chunk artifact covering layers [start, end).
+    pub fn chunk(&self, start: usize, end: usize) -> Option<&ChunkMeta> {
+        self.chunks
+            .iter()
+            .find(|c| c.start == start && c.end == end)
+    }
+
+    /// Whether every chunk of a plan's split exists as an artifact.
+    pub fn supports_split(&self, boundaries: &[usize]) -> bool {
+        if boundaries.is_empty() {
+            return true; // monolithic: use `full`
+        }
+        let n = self.layers.len();
+        let mut prev = 0;
+        for &b in boundaries.iter().chain([&n]) {
+            if self.chunk(prev, b).is_none() {
+                return false;
+            }
+            prev = b;
+        }
+        true
+    }
+}
+
+/// The full manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+fn shape3(j: &Json) -> anyhow::Result<Shape> {
+    let a = j.as_arr().context("shape must be an array")?;
+    if a.len() != 3 {
+        bail!("shape must have 3 dims, got {}", a.len());
+    }
+    Ok(Shape::new(
+        a[0].as_usize().context("h")?,
+        a[1].as_usize().context("w")?,
+        a[2].as_usize().context("c")?,
+    ))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let obj = root.as_obj().context("manifest must be an object")?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in obj {
+            let input = shape3(entry.get("input").context("input")?)?;
+            let layers = entry
+                .get("layers")
+                .and_then(Json::as_arr)
+                .context("layers")?
+                .iter()
+                .map(|l| {
+                    Ok(LayerMeta {
+                        kind: l.get("kind").and_then(Json::as_str).context("kind")?.into(),
+                        weight_bytes: l
+                            .get("weight_bytes")
+                            .and_then(Json::as_u64)
+                            .context("weight_bytes")?,
+                        bias_bytes: l
+                            .get("bias_bytes")
+                            .and_then(Json::as_u64)
+                            .context("bias_bytes")?,
+                        out_shape: shape3(l.get("out_shape").context("out_shape")?)?,
+                        macs: l.get("macs").and_then(Json::as_u64).context("macs")?,
+                        cycles_accel_p64: l
+                            .get("cycles_accel_p64")
+                            .and_then(Json::as_u64)
+                            .context("cycles")?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let arts = entry.get("artifacts").context("artifacts")?;
+            let full = arts
+                .get("full")
+                .and_then(Json::as_str)
+                .context("artifacts.full")?
+                .to_string();
+            let chunks = arts
+                .get("chunks")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|c| {
+                    Ok(ChunkMeta {
+                        start: c.get("start").and_then(Json::as_usize).context("start")?,
+                        end: c.get("end").and_then(Json::as_usize).context("end")?,
+                        file: c.get("file").and_then(Json::as_str).context("file")?.into(),
+                        in_shape: shape3(c.get("in_shape").context("in_shape")?)?,
+                        out_shape: shape3(c.get("out_shape").context("out_shape")?)?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    input,
+                    layers,
+                    full,
+                    chunks,
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name} not in manifest"))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Cross-check a manifest model against the rust zoo (sizes, cycles,
+    /// shapes must agree layer by layer).
+    pub fn check_against_zoo(&self, name: &str) -> anyhow::Result<()> {
+        use crate::estimator::clock;
+        let mm = self.model(name)?;
+        let zoo_model = crate::model::zoo::zoo()
+            .get(name)
+            .with_context(|| format!("{name} not in rust zoo"))?;
+        if mm.layers.len() != zoo_model.num_layers() {
+            bail!(
+                "{name}: manifest {} layers vs zoo {}",
+                mm.layers.len(),
+                zoo_model.num_layers()
+            );
+        }
+        if mm.input != zoo_model.input {
+            bail!("{name}: input {} vs zoo {}", mm.input, zoo_model.input);
+        }
+        for (l, meta) in mm.layers.iter().enumerate() {
+            let layer = &zoo_model.layers[l];
+            let input = zoo_model.in_shape(l);
+            if meta.weight_bytes != layer.weight_bytes(input)
+                || meta.bias_bytes != layer.bias_bytes(input)
+                || meta.out_shape != zoo_model.out_shape(l)
+                || meta.macs != layer.macs(input)
+                || meta.cycles_accel_p64 != clock::layer_cycles_accel(layer, input, 64)
+            {
+                bail!("{name} layer {l}: manifest and zoo disagree");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "Toy": {
+        "input": [4, 4, 1],
+        "layers": [
+          {"kind": "conv", "k": 3, "pool": 1, "cout": 2, "bias": true,
+           "weight_bytes": 18, "bias_bytes": 2, "in_shape": [4,4,1],
+           "out_shape": [4, 4, 2], "macs": 288, "cycles_accel_p64": 32}
+        ],
+        "artifacts": {"full": "Toy_full.hlo.txt",
+                      "chunks": [{"start": 0, "end": 1, "file": "Toy_0_1.hlo.txt",
+                                  "in_shape": [4,4,1], "out_shape": [4,4,2]}]},
+        "split_points": []
+      }
+    }"#;
+
+    fn write_sample() -> tempdir::TempDir {
+        let dir = tempdir::TempDir::new();
+        std::fs::write(dir.path().join("manifest.json"), SAMPLE).unwrap();
+        dir
+    }
+
+    // Minimal self-cleaning temp dir (no tempfile crate vendored).
+    mod tempdir {
+        pub struct TempDir(std::path::PathBuf);
+        impl TempDir {
+            pub fn new() -> TempDir {
+                let p = std::env::temp_dir().join(format!(
+                    "synergy-test-{}-{:?}",
+                    std::process::id(),
+                    std::thread::current().id()
+                ));
+                std::fs::create_dir_all(&p).unwrap();
+                TempDir(p)
+            }
+            pub fn path(&self) -> &std::path::Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = write_sample();
+        let m = Manifest::load(dir.path()).unwrap();
+        let toy = m.model("Toy").unwrap();
+        assert_eq!(toy.input, Shape::new(4, 4, 1));
+        assert_eq!(toy.layers.len(), 1);
+        assert_eq!(toy.layers[0].weight_bytes, 18);
+        assert_eq!(toy.full, "Toy_full.hlo.txt");
+        assert!(toy.chunk(0, 1).is_some());
+        assert!(toy.chunk(0, 2).is_none());
+    }
+
+    #[test]
+    fn supports_split_logic() {
+        let dir = write_sample();
+        let m = Manifest::load(dir.path()).unwrap();
+        let toy = m.model("Toy").unwrap();
+        assert!(toy.supports_split(&[])); // monolithic
+        assert!(!toy.supports_split(&[1])); // would need chunk (1,1)… n=1 edge
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Model execution over artifacts: whole models, chunk chains, and the
+//! split==full verification that underwrites model splitting.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::Shape;
+
+use super::artifacts::Manifest;
+use super::pjrt::Engine;
+
+/// High-level executor over a manifest + engine.
+pub struct ModelExecutor<'e> {
+    pub engine: &'e Engine,
+    pub manifest: &'e Manifest,
+}
+
+fn flat(shape: Shape) -> Vec<usize> {
+    vec![shape.h, shape.w, shape.c]
+}
+
+impl<'e> ModelExecutor<'e> {
+    pub fn new(engine: &'e Engine, manifest: &'e Manifest) -> ModelExecutor<'e> {
+        ModelExecutor { engine, manifest }
+    }
+
+    /// Run the full model on an input tensor (flat, HWC order).
+    pub fn run_full(&self, model: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let mm = self.manifest.model(model)?;
+        if input.len() as u64 != mm.input.bytes() {
+            bail!(
+                "{model}: input has {} elems, expected {}",
+                input.len(),
+                mm.input.bytes()
+            );
+        }
+        let exe = self.engine.load(self.manifest.path(&mm.full))?;
+        exe.run(input, &flat(mm.input))
+    }
+
+    /// Run a chain of layer-range chunks, passing activations through —
+    /// exactly what distributed split execution does across devices, here
+    /// composed locally for verification and local serving.
+    pub fn run_chunks(&self, model: &str, boundaries: &[usize], input: &[f32]) -> Result<Vec<f32>> {
+        let mm = self.manifest.model(model)?;
+        let n = mm.layers.len();
+        let mut ranges = Vec::new();
+        let mut prev = 0;
+        for &b in boundaries {
+            ranges.push((prev, b));
+            prev = b;
+        }
+        ranges.push((prev, n));
+
+        let mut act = input.to_vec();
+        let mut shape = mm.input;
+        for &(a, b) in &ranges {
+            if a == 0 && b == n {
+                return self.run_full(model, input);
+            }
+            let chunk = mm.chunk(a, b).with_context(|| {
+                format!("{model}: no artifact for chunk {a}:{b} — re-run `make artifacts`")
+            })?;
+            let exe = self.engine.load(self.manifest.path(&chunk.file))?;
+            act = exe.run(&act, &flat(shape))?;
+            shape = chunk.out_shape;
+        }
+        Ok(act)
+    }
+
+    /// Assert that chunked execution equals full execution (float tol).
+    /// Returns the maximum absolute error.
+    pub fn verify_split(&self, model: &str, boundaries: &[usize], input: &[f32]) -> Result<f64> {
+        let full = self.run_full(model, input)?;
+        let split = self.run_chunks(model, boundaries, input)?;
+        if full.len() != split.len() {
+            bail!(
+                "{model}: output length mismatch {} vs {}",
+                full.len(),
+                split.len()
+            );
+        }
+        let max_err = full
+            .iter()
+            .zip(&split)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max);
+        let scale = full.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-6) as f64;
+        if max_err > 1e-3 * scale + 1e-4 {
+            bail!("{model} split {boundaries:?}: max err {max_err} (scale {scale})");
+        }
+        Ok(max_err)
+    }
+
+    /// Deterministic synthetic input for a model (seeded; the same
+    /// generator the examples use).
+    pub fn synth_input(&self, model: &str, seed: u64) -> Result<Vec<f32>> {
+        let mm = self.manifest.model(model)?;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        Ok((0..mm.input.bytes())
+            .map(|_| rng.next_gaussian() as f32)
+            .collect())
+    }
+}

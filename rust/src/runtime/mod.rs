@@ -1,0 +1,19 @@
+//! The PJRT runtime bridge: load AOT-compiled HLO artifacts and run real
+//! model inference from the rust request path (Python never runs here).
+//!
+//! [`artifacts`] indexes `artifacts/manifest.json` (emitted by
+//! `python/compile/aot.py`); [`pjrt`] wraps the `xla` crate
+//! (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → compile →
+//! execute) with an executable cache; [`executor`] runs whole models or
+//! chunk chains and verifies that split execution composes to the full
+//! model — the property that makes layer-wise splitting semantically free.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod executor;
+pub mod service;
+
+pub use artifacts::{ChunkMeta, Manifest, ModelManifest};
+pub use executor::ModelExecutor;
+pub use pjrt::Engine;
+pub use service::{InferHandle, InferenceService};

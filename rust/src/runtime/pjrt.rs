@@ -1,0 +1,83 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute many
+//! times. Adapted from /opt/xla-example/src/bin/load_hlo.rs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// A compiled model/chunk executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run on one f32 tensor of the given shape; returns the flat output.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the result is a
+    /// 1-tuple that we unwrap here.
+    pub fn run(&self, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The PJRT engine: one CPU client plus a path-keyed executable cache.
+///
+/// Compilation is the expensive step; execution is reentrant. The cache is
+/// behind a mutex so the threaded serving loop can share one engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU-backed engine.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(hit) = self.cache.lock().unwrap().get(&path) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let arc = Arc::new(Executable { exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path, arc.clone());
+        Ok(arc)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// Tests that require artifacts live in rust/tests/integration_runtime.rs;
+// this module is exercised there against real HLO files.

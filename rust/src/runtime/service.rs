@@ -1,0 +1,127 @@
+//! Inference service: a dedicated thread owning the PJRT engine.
+//!
+//! The `xla` crate's handles wrap raw PJRT pointers and are not `Send`, and
+//! the CPU PJRT plugin is a single host device regardless — so all real
+//! inference funnels through one service thread, and the coordinator's
+//! per-device threads talk to it over channels. (On physical hardware each
+//! wearable owns its accelerator; here the *simulated* clock model provides
+//! per-device timing while this service provides the actual numerics.)
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::Manifest;
+use super::pjrt::Engine;
+
+enum Request {
+    Run {
+        file: PathBuf,
+        input: Vec<f32>,
+        shape: Vec<usize>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Preload {
+        files: Vec<PathBuf>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the inference service.
+#[derive(Clone)]
+pub struct InferHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl InferHandle {
+    /// Execute one artifact synchronously.
+    pub fn run(&self, file: PathBuf, input: Vec<f32>, shape: Vec<usize>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run { file, input, shape, reply })
+            .map_err(|_| anyhow!("inference service is down"))?;
+        rx.recv().map_err(|_| anyhow!("inference service dropped reply"))?
+    }
+
+    /// Compile a set of artifacts ahead of serving (the deployment step).
+    pub fn preload(&self, files: Vec<PathBuf>) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Preload { files, reply })
+            .map_err(|_| anyhow!("inference service is down"))?;
+        rx.recv().map_err(|_| anyhow!("inference service dropped reply"))?
+    }
+}
+
+/// The running service; dropping it shuts the thread down.
+pub struct InferenceService {
+    handle: InferHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl InferenceService {
+    /// Spawn the service thread (creates the PJRT client inside it).
+    pub fn start() -> Result<InferenceService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-inference".into())
+            .spawn(move || {
+                let engine = match Engine::cpu() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { file, input, shape, reply } => {
+                            let res = engine
+                                .load(&file)
+                                .and_then(|exe| exe.run(&input, &shape));
+                            let _ = reply.send(res);
+                        }
+                        Request::Preload { files, reply } => {
+                            let res = files.iter().try_for_each(|f| {
+                                engine.load(f).map(|_| ())
+                            });
+                            let _ = reply.send(res);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("inference service died during startup"))??;
+        Ok(InferenceService {
+            handle: InferHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> InferHandle {
+        self.handle.clone()
+    }
+
+    /// Convenience: absolute artifact path for a manifest file name.
+    pub fn artifact_path(manifest: &Manifest, file: &str) -> PathBuf {
+        manifest.path(file)
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

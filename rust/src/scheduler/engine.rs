@@ -1,0 +1,577 @@
+//! The discrete-event engine: executes a holistic collaboration plan over
+//! per-computation-unit FIFO queues (§IV-F) against the ground-truth
+//! hardware model, for a configurable number of continuous-inference runs.
+//!
+//! Each (device, unit) owns a queue and a dedicated scheduler: a task is
+//! enqueued the moment its dependencies complete ("ready"), and the unit
+//! executes its queue in arrival order — later-arriving tasks wait, exactly
+//! as the paper specifies. Policies differ only in the dependency edges
+//! they add across pipelines and runs (see [`super::policy`]).
+
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use crate::device::{DeviceId, Fleet};
+use crate::pipeline::PipelineSpec;
+use crate::plan::task::{PlanTask, TaskKind, UnitKind};
+use crate::plan::CollabPlan;
+
+use super::groundtruth::GroundTruth;
+use super::policy::Policy;
+use super::trace::{TaskSpan, Trace};
+
+/// Simulation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Continuous-inference runs per pipeline.
+    pub runs: usize,
+    /// Rounds excluded from throughput/latency measurement (pipeline fill).
+    pub warmup: usize,
+    pub policy: Policy,
+    /// Record a full task trace (tests, Fig. 8 decompositions).
+    pub record_trace: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            runs: 24,
+            warmup: 4,
+            policy: Policy::atp(),
+            record_trace: false,
+        }
+    }
+}
+
+/// Measured results of one simulation.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Total simulated time until the last task completed.
+    pub makespan: f64,
+    /// Model executions per second over the measured window (§VI-A3).
+    pub throughput: f64,
+    /// Mean end-to-end pipeline latency (sense start → interact end).
+    pub avg_latency: f64,
+    /// Mean power draw over the horizon, watts (≡ J/s as the paper reports).
+    pub power_w: f64,
+    /// Total energy over the horizon, joules.
+    pub energy_j: f64,
+    /// Completed pipeline runs.
+    pub completions: usize,
+    /// Busy seconds per (device, unit).
+    pub unit_busy: BTreeMap<(DeviceId, UnitKind), f64>,
+    /// Full trace when requested.
+    pub trace: Option<Trace>,
+}
+
+/// Min-heap event: (time, kind, task id). `Done` sorts before `Ready` at
+/// equal times so a freed unit can immediately take the arriving task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Event {
+    time: f64,
+    kind: EventKind,
+    id: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    Done,
+    Ready,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed for a min-heap via BinaryHeap<Event>.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.kind.cmp(&self.kind))
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+struct TaskTable {
+    /// Expanded task list per pipeline (one run's worth).
+    per_pipeline: Vec<Vec<PlanTask>>,
+    /// Prefix offsets of pipelines within one run's id block.
+    offset: Vec<usize>,
+    /// Total tasks in one run across pipelines.
+    per_run: usize,
+    runs: usize,
+}
+
+impl TaskTable {
+    fn id(&self, p: usize, s: usize, r: usize) -> usize {
+        r * self.per_run + self.offset[p] + s
+    }
+
+    fn decode(&self, id: usize) -> (usize, usize, usize) {
+        let r = id / self.per_run;
+        let rem = id % self.per_run;
+        // Binary search the pipeline whose offset block contains rem.
+        let p = match self.offset.binary_search(&rem) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        (p, rem - self.offset[p], r)
+    }
+
+    fn num_tasks(&self, p: usize) -> usize {
+        self.per_pipeline[p].len()
+    }
+
+    fn total(&self) -> usize {
+        self.per_run * self.runs
+    }
+}
+
+/// Run the simulation.
+pub fn simulate(
+    plan: &CollabPlan,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+    gt: &GroundTruth,
+    cfg: SimConfig,
+) -> SimReport {
+    assert!(cfg.runs > cfg.warmup, "need runs > warmup");
+    let n = plan.plans.len();
+    assert!(n > 0, "empty plan");
+
+    // Expand tasks and resolve pipeline specs in plan order.
+    let specs: Vec<&PipelineSpec> = plan
+        .plans
+        .iter()
+        .map(|ep| {
+            pipelines
+                .iter()
+                .find(|p| p.id == ep.pipeline)
+                .expect("plan for unknown pipeline")
+        })
+        .collect();
+    let per_pipeline: Vec<Vec<PlanTask>> = plan
+        .plans
+        .iter()
+        .zip(&specs)
+        .map(|(ep, spec)| ep.tasks(&spec.model))
+        .collect();
+    let mut offset = Vec::with_capacity(n);
+    let mut acc = 0;
+    for tl in &per_pipeline {
+        offset.push(acc);
+        acc += tl.len();
+    }
+    let table = TaskTable {
+        per_pipeline,
+        offset,
+        per_run: acc,
+        runs: cfg.runs,
+    };
+
+    // Initial pending-dependency counts per task instance.
+    let mut pending: Vec<u32> = vec![0; table.total()];
+    for r in 0..cfg.runs {
+        for p in 0..n {
+            let last = table.num_tasks(p) - 1;
+            for s in 0..=last {
+                let mut deps = 0u32;
+                if s > 0 {
+                    deps += 1; // predecessor in chain
+                }
+                if s == 0 {
+                    deps += match cfg.policy {
+                        Policy::Sequential => {
+                            // Global chain: previous pipeline this round, or
+                            // last pipeline of the previous round.
+                            if p > 0 || r > 0 {
+                                1
+                            } else {
+                                0
+                            }
+                        }
+                        Policy::InterPipeline => {
+                            // Round barrier: all pipelines of round r-1.
+                            if r > 0 {
+                                n as u32
+                            } else {
+                                0
+                            }
+                        }
+                        Policy::Atp { max_inflight } => {
+                            let mut d = 0;
+                            if r > 0 {
+                                d += 1; // sensor ordering: (p,0,r-1)
+                            }
+                            if r >= max_inflight {
+                                d += 1; // bounded in-flight: (p,last,r-k)
+                            }
+                            d
+                        }
+                    };
+                }
+                pending[table.id(p, s, r)] = deps;
+            }
+        }
+    }
+
+    // Unit states.
+    #[derive(Default)]
+    struct Unit {
+        busy: bool,
+        queue: VecDeque<usize>,
+    }
+    let mut units: BTreeMap<(DeviceId, UnitKind), Unit> = BTreeMap::new();
+
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    // Seed: all zero-dependency tasks ready at t=0.
+    for (id, &p) in pending.iter().enumerate() {
+        if p == 0 {
+            heap.push(Event { time: 0.0, kind: EventKind::Ready, id });
+        }
+    }
+
+    let mut start_time: Vec<f64> = vec![f64::NAN; table.total()];
+    let mut end_time: Vec<f64> = vec![f64::NAN; table.total()];
+    let mut spans: Vec<TaskSpan> = Vec::new();
+    let mut unit_busy: BTreeMap<(DeviceId, UnitKind), f64> = BTreeMap::new();
+    // Per-device active-seconds by power category.
+    let mut busy_by_dev: Vec<crate::device::power::BusyTimes> =
+        vec![Default::default(); fleet.len()];
+    let mut completed = 0usize;
+
+    let task_of = |id: usize| -> (&PlanTask, usize, usize, usize) {
+        let (p, s, r) = table.decode(id);
+        (&table.per_pipeline[p][s], p, s, r)
+    };
+
+    // Start a task on its (idle) unit at time `t`.
+    macro_rules! start_task {
+        ($id:expr, $t:expr, $heap:expr) => {{
+            let (task, p, _s, r) = task_of($id);
+            let sensor = crate::estimator::LatencyModel::source_sensor(specs[p]);
+            let dur = gt.duration(fleet, task, &specs[p].model, sensor, r);
+            start_time[$id] = $t;
+            $heap.push(Event { time: $t + dur, kind: EventKind::Done, id: $id });
+        }};
+    }
+
+    while let Some(ev) = heap.pop() {
+        let (task, p, s, r) = task_of(ev.id);
+        let unit_kind = GroundTruth::unit_of(fleet, task);
+        let key = (task.device, unit_kind);
+        match ev.kind {
+            EventKind::Ready => {
+                let unit = units.entry(key).or_default();
+                unit.queue.push_back(ev.id);
+                if !unit.busy {
+                    unit.busy = true;
+                    let next = unit.queue.pop_front().unwrap();
+                    start_task!(next, ev.time, heap);
+                }
+            }
+            EventKind::Done => {
+                end_time[ev.id] = ev.time;
+                let dur = ev.time - start_time[ev.id];
+                *unit_busy.entry(key).or_insert(0.0) += dur;
+                {
+                    let b = &mut busy_by_dev[task.device.0];
+                    match task.kind {
+                        TaskKind::Sense { .. } => b.sensor_s += dur,
+                        TaskKind::Load { .. }
+                        | TaskKind::Unload { .. }
+                        | TaskKind::Interact { .. } => b.cpu_s += dur,
+                        TaskKind::Infer { .. } => {
+                            if unit_kind == UnitKind::Accel {
+                                b.accel_s += dur;
+                            } else {
+                                b.cpu_s += dur;
+                            }
+                        }
+                        TaskKind::Tx { .. } => b.radio_tx_s += dur,
+                        TaskKind::Rx { .. } => b.radio_rx_s += dur,
+                    }
+                }
+                if cfg.record_trace {
+                    spans.push(TaskSpan {
+                        pipeline: p,
+                        seq: s,
+                        run: r,
+                        device: task.device,
+                        unit: unit_kind,
+                        kind: task.kind,
+                        start: start_time[ev.id],
+                        end: ev.time,
+                    });
+                }
+
+                // Successor bookkeeping.
+                let mut notify = |id: usize, heap: &mut BinaryHeap<Event>| {
+                    pending[id] -= 1;
+                    if pending[id] == 0 {
+                        heap.push(Event { time: ev.time, kind: EventKind::Ready, id });
+                    }
+                };
+                let last = table.num_tasks(p) - 1;
+                if s < last {
+                    notify(table.id(p, s + 1, r), &mut heap);
+                }
+                if s == last {
+                    completed += 1;
+                    match cfg.policy {
+                        Policy::Sequential => {
+                            if p + 1 < n {
+                                notify(table.id(p + 1, 0, r), &mut heap);
+                            } else if r + 1 < cfg.runs {
+                                notify(table.id(0, 0, r + 1), &mut heap);
+                            }
+                        }
+                        Policy::InterPipeline => {
+                            if r + 1 < cfg.runs {
+                                for q in 0..n {
+                                    notify(table.id(q, 0, r + 1), &mut heap);
+                                }
+                            }
+                        }
+                        Policy::Atp { max_inflight } => {
+                            if r + max_inflight < cfg.runs {
+                                notify(table.id(p, 0, r + max_inflight), &mut heap);
+                            }
+                        }
+                    }
+                }
+                if s == 0 {
+                    if let Policy::Atp { .. } = cfg.policy {
+                        if r + 1 < cfg.runs {
+                            notify(table.id(p, 0, r + 1), &mut heap);
+                        }
+                    }
+                }
+
+                // Unit takes its next queued task.
+                let unit = units.get_mut(&key).unwrap();
+                if let Some(next) = unit.queue.pop_front() {
+                    start_task!(next, ev.time, heap);
+                } else {
+                    unit.busy = false;
+                }
+            }
+        }
+    }
+
+    // All tasks must have completed (deadlock would leave NANs).
+    debug_assert!(end_time.iter().all(|t| t.is_finite()), "DES deadlock");
+
+    let makespan = end_time.iter().copied().fold(0.0, f64::max);
+
+    // Round completion times: round r done when all pipelines' run r done.
+    let round_done: Vec<f64> = (0..cfg.runs)
+        .map(|r| {
+            (0..n)
+                .map(|p| end_time[table.id(p, table.num_tasks(p) - 1, r)])
+                .fold(0.0, f64::max)
+        })
+        .collect();
+    let t0 = if cfg.warmup == 0 {
+        0.0
+    } else {
+        round_done[cfg.warmup - 1]
+    };
+    let measured_rounds = cfg.runs - cfg.warmup;
+    let throughput = (n * measured_rounds) as f64 / (round_done[cfg.runs - 1] - t0).max(1e-12);
+
+    // Mean end-to-end latency over measured runs.
+    let mut lat_sum = 0.0;
+    let mut lat_cnt = 0usize;
+    for r in cfg.warmup..cfg.runs {
+        for p in 0..n {
+            let sense_start = start_time[table.id(p, 0, r)];
+            let done = end_time[table.id(p, table.num_tasks(p) - 1, r)];
+            lat_sum += done - sense_start;
+            lat_cnt += 1;
+        }
+    }
+    let avg_latency = lat_sum / lat_cnt as f64;
+
+    // Energy over the whole horizon.
+    let mut energy_j = 0.0;
+    for (i, dev) in fleet.devices.iter().enumerate() {
+        energy_j += busy_by_dev[i].energy_j(&dev.spec.power, makespan);
+    }
+    let power_w = energy_j / makespan.max(1e-12);
+
+    SimReport {
+        makespan,
+        throughput,
+        avg_latency,
+        power_w,
+        energy_j,
+        completions: completed,
+        unit_busy,
+        trace: if cfg.record_trace {
+            Some(Trace { spans })
+        } else {
+            None
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::ModelGraph;
+    use crate::pipeline::{SourceReq, TargetReq};
+    use crate::plan::exec_plan::{Assignment, ExecutionPlan};
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn model(layers: usize) -> ModelGraph {
+        ModelGraph::new(
+            "m",
+            Shape::new(16, 16, 3),
+            (0..layers)
+                .map(|_| Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 8, residual: false, has_bias: true })
+                .collect(),
+        )
+    }
+
+    fn pipes(n: usize) -> Vec<PipelineSpec> {
+        (0..n)
+            .map(|i| {
+                PipelineSpec::new(i, format!("p{i}"), SourceReq::Any, model(2), TargetReq::Any)
+            })
+            .collect()
+    }
+
+    fn plan_spread(ps: &[PipelineSpec], ndev: usize) -> CollabPlan {
+        CollabPlan::new(
+            ps.iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let d = DeviceId(i % ndev);
+                    ExecutionPlan::monolithic(p, d, d, d)
+                })
+                .collect(),
+        )
+    }
+
+    fn cfg(policy: Policy) -> SimConfig {
+        SimConfig { runs: 12, warmup: 2, policy, record_trace: true }
+    }
+
+    #[test]
+    fn all_tasks_complete_and_trace_is_sound() {
+        let f = fleet(2);
+        let ps = pipes(3);
+        let plan = plan_spread(&ps, 2);
+        let gt = GroundTruth::default();
+        for policy in [Policy::Sequential, Policy::InterPipeline, Policy::atp()] {
+            let rep = simulate(&plan, &ps, &f, &gt, cfg(policy));
+            assert_eq!(rep.completions, 3 * 12, "{policy:?}");
+            let trace = rep.trace.unwrap();
+            trace.check_unit_exclusivity().unwrap();
+            trace.check_causality().unwrap();
+            assert!(rep.makespan > 0.0);
+            assert!(rep.throughput > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_policies_dominate_sequential() {
+        let f = fleet(3);
+        let ps = pipes(3);
+        let plan = plan_spread(&ps, 3);
+        let gt = GroundTruth::default();
+        let seq = simulate(&plan, &ps, &f, &gt, cfg(Policy::Sequential));
+        let ipl = simulate(&plan, &ps, &f, &gt, cfg(Policy::InterPipeline));
+        let atp = simulate(&plan, &ps, &f, &gt, cfg(Policy::atp()));
+        // Independent pipelines on separate devices: inter-pipeline overlap
+        // is a ~3× win; ATP at least matches it.
+        assert!(
+            ipl.throughput > 2.0 * seq.throughput,
+            "seq {} ipl {}",
+            seq.throughput,
+            ipl.throughput
+        );
+        assert!(atp.throughput >= ipl.throughput * 0.95);
+        // Sequential's per-run latency is no better (same chain).
+        assert!(ipl.avg_latency <= seq.avg_latency * 1.05);
+    }
+
+    #[test]
+    fn inter_run_overlap_helps_split_pipelines() {
+        // One pipeline split across two devices: inter-run parallelization
+        // keeps both accelerators busy; the barrier policies cannot.
+        let f = fleet(2);
+        let m = model(4);
+        let ps = vec![PipelineSpec::new(0, "p", SourceReq::Any, m.clone(), TargetReq::Any)];
+        let plan = CollabPlan::new(vec![ExecutionPlan {
+            pipeline: ps[0].id,
+            source_dev: DeviceId(0),
+            target_dev: DeviceId(1),
+            chunks: vec![
+                Assignment { device: DeviceId(0), range: crate::model::SplitRange::new(0, 2) },
+                Assignment { device: DeviceId(1), range: crate::model::SplitRange::new(2, 4) },
+            ],
+        }]);
+        let gt = GroundTruth::default();
+        let ipl = simulate(&plan, &ps, &f, &gt, cfg(Policy::InterPipeline));
+        let atp = simulate(&plan, &ps, &f, &gt, cfg(Policy::atp()));
+        assert!(
+            atp.throughput > 1.2 * ipl.throughput,
+            "ipl {} atp {}",
+            ipl.throughput,
+            atp.throughput
+        );
+    }
+
+    #[test]
+    fn sequential_round_latency_matches_chain_sum() {
+        // With one pipeline on one device, throughput ≈ 1 / chain latency
+        // regardless of policy.
+        let f = fleet(1);
+        let ps = pipes(1);
+        let plan = plan_spread(&ps, 1);
+        let gt = GroundTruth::default();
+        let rep = simulate(&plan, &ps, &f, &gt, cfg(Policy::Sequential));
+        let expect = 1.0 / rep.avg_latency;
+        let err = (rep.throughput - expect).abs() / expect;
+        assert!(err < 0.05, "tput {} vs 1/lat {}", rep.throughput, expect);
+    }
+
+    #[test]
+    fn energy_exceeds_base_and_scales_with_makespan() {
+        let f = fleet(2);
+        let ps = pipes(2);
+        let plan = plan_spread(&ps, 2);
+        let gt = GroundTruth::default();
+        let rep = simulate(&plan, &ps, &f, &gt, cfg(Policy::atp()));
+        let base_power: f64 = f.devices.iter().map(|d| d.spec.power.base_w).sum();
+        assert!(rep.power_w > base_power);
+        assert!(rep.energy_j > base_power * rep.makespan * 0.99);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let f = fleet(2);
+        let ps = pipes(2);
+        let plan = plan_spread(&ps, 2);
+        let gt = GroundTruth::default();
+        let a = simulate(&plan, &ps, &f, &gt, cfg(Policy::atp()));
+        let b = simulate(&plan, &ps, &f, &gt, cfg(Policy::atp()));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.throughput, b.throughput);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+}

@@ -1,0 +1,24 @@
+//! §IV-F — adaptive task parallelization on a discrete-event simulator.
+//!
+//! The DES plays two roles (DESIGN.md §4):
+//!
+//! 1. **Hardware ground truth.** [`groundtruth`] produces *actual* task
+//!    durations — the closed-form physics of the device models plus fixed
+//!    per-task overheads and seeded jitter. All reported experiment metrics
+//!    (throughput, latency, power) are measured on this substrate, not
+//!    read off the planner's estimates.
+//! 2. **The ATP scheduler.** [`engine`] executes a deployed holistic
+//!    collaboration plan over per-computation-unit FIFO queues exactly as
+//!    §IV-F describes: each unit has a queue and a dedicated scheduler;
+//!    inter-pipeline parallelization overlaps tasks of different pipelines,
+//!    inter-run parallelization overlaps consecutive runs of one pipeline.
+
+pub mod groundtruth;
+pub mod engine;
+pub mod policy;
+pub mod trace;
+
+pub use engine::{simulate, SimConfig, SimReport};
+pub use groundtruth::GroundTruth;
+pub use policy::Policy;
+pub use trace::{TaskSpan, Trace};

@@ -1,0 +1,48 @@
+//! Execution policies (Fig. 12).
+//!
+//! - [`Policy::Sequential`] — the conventional approach (Fig. 12a): the
+//!   unified round executes pipelines strictly one after another, rounds
+//!   back-to-back. Computation units idle whenever "their" task type is
+//!   not the current one.
+//! - [`Policy::InterPipeline`] — Fig. 12b: tasks of *different pipelines*
+//!   overlap within a round (per-unit queues), with a barrier between
+//!   rounds.
+//! - [`Policy::Atp`] — Fig. 12c: adds *inter-run* parallelization; run
+//!   `r+1` may begin while run `r` is still in flight (bounded by
+//!   `max_inflight` — double-buffering by default), so the steady-state
+//!   round period approaches the bottleneck unit's busy time.
+
+/// Scheduling policy for executing a holistic collaboration plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Sequential,
+    InterPipeline,
+    Atp { max_inflight: usize },
+}
+
+impl Policy {
+    /// The paper's adaptive task parallelization with double-buffered
+    /// inter-run overlap.
+    pub fn atp() -> Policy {
+        Policy::Atp { max_inflight: 2 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Sequential => "sequential",
+            Policy::InterPipeline => "inter-pipeline",
+            Policy::Atp { .. } => "atp",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atp_default_is_double_buffered() {
+        assert_eq!(Policy::atp(), Policy::Atp { max_inflight: 2 });
+        assert_eq!(Policy::atp().name(), "atp");
+    }
+}

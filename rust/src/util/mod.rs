@@ -1,0 +1,50 @@
+//! In-repo substrates: the build is fully offline and only the `xla` crate's
+//! dependency tree is vendored, so serde / rand / clap / prettytable
+//! equivalents live here as small, well-tested modules.
+
+pub mod json;
+pub mod rng;
+pub mod cli;
+pub mod table;
+pub mod stats;
+
+/// Format a byte count human-readably (KB/MB with one decimal).
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1024 * 1024 {
+        format!("{:.1} MB", b as f64 / (1024.0 * 1024.0))
+    } else if b >= 1024 {
+        format!("{:.1} KB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format seconds with an adaptive unit (s / ms / µs).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_secs(0.0125), "12.50 ms");
+        assert_eq!(fmt_secs(42e-6), "42.00 µs");
+    }
+}

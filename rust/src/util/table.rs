@@ -1,0 +1,128 @@
+//! Aligned plain-text table rendering for the experiment harness — every
+//! figure/table reproduction prints paper-vs-measured rows through this.
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain([self.header.len()])
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(display_width(h));
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(display_width(c));
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (i, w) in widths.iter().enumerate() {
+                let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
+                out.push_str(cell);
+                if i + 1 < widths.len() {
+                    out.push_str(&" ".repeat(w - display_width(cell) + 2));
+                }
+            }
+            // Trim trailing spaces.
+            while out.ends_with(' ') {
+                out.pop();
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol.saturating_sub(1));
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(r, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Character count as a stand-in for display width (headers are ASCII plus
+/// the occasional ×/µ, which are one column wide).
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+/// Format a ratio like "23.0×".
+pub fn fmt_ratio(r: f64) -> String {
+    if r >= 100.0 {
+        format!("{r:.0}×")
+    } else {
+        format!("{r:.1}×")
+    }
+}
+
+/// Format an "OOR or value" cell.
+pub fn fmt_or_oor(v: Option<f64>, unit: &str) -> String {
+    match v {
+        Some(x) => format!("{x:.2} {unit}"),
+        None => "OOR".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(["method", "tput"]);
+        t.row(["Synergy", "4.20"]);
+        t.row(["IndModel", "OOR"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("method"));
+        // Columns aligned: "tput" starts at same offset in all rows.
+        let off = lines[0].find("tput").unwrap();
+        assert_eq!(&lines[2][off..off + 4], "4.20");
+    }
+
+    #[test]
+    fn unicode_ratio() {
+        assert_eq!(fmt_ratio(23.04), "23.0×");
+        assert_eq!(fmt_ratio(5576.0), "5576×");
+    }
+
+    #[test]
+    fn oor_cell() {
+        assert_eq!(fmt_or_oor(None, "inf/s"), "OOR");
+        assert_eq!(fmt_or_oor(Some(1.5), "inf/s"), "1.50 inf/s");
+    }
+}

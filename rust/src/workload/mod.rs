@@ -1,0 +1,266 @@
+//! Evaluation workloads (§VI-A, Table I) and device fleets.
+//!
+//! Four workloads over eight pipelines/models on four MAX78000-class
+//! wearables (earbud, glasses, watch, ring): Workloads 1–2 are concurrent
+//! multi-app scenarios (three pipelines each); Workloads 3–4 are single
+//! large-model apps (EfficientNetV2 / MobileNetV2) that exceed a single
+//! accelerator and must be split.
+
+use crate::device::{Device, DeviceId, DeviceKind, Fleet, InteractionKind, SensorKind};
+use crate::model::zoo::{model_by_name, ModelName};
+use crate::pipeline::{PipelineSpec, SourceReq, TargetReq};
+
+/// A named set of concurrent pipelines.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub pipelines: Vec<PipelineSpec>,
+}
+
+/// How source/target devices map onto the fleet (Fig. 18).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EndpointMapping {
+    /// Any device can be source or target (`D²` options per pipeline).
+    Any,
+    /// Endpoints spread evenly across devices — the Workload 1 default.
+    Distributed,
+    /// One device serves as both source and target for all pipelines.
+    Overlapped,
+}
+
+/// The standard four-wearable fleet: earbud, glasses, watch, ring.
+pub fn fleet4() -> Fleet {
+    fleet_of(&[DeviceKind::Max78000; 4])
+}
+
+/// A fleet of `n` MAX78000 wearables (Fig. 16a varies n from 2 to 5).
+pub fn fleet_n(n: usize) -> Fleet {
+    fleet_of(&vec![DeviceKind::Max78000; n])
+}
+
+/// Heterogeneous fleet: the watch upgraded to a MAX78002 (Fig. 17).
+pub fn fleet4_hetero() -> Fleet {
+    fleet_of(&[
+        DeviceKind::Max78000,
+        DeviceKind::Max78000,
+        DeviceKind::Max78002,
+        DeviceKind::Max78000,
+    ])
+}
+
+/// The standard fleet plus a smartphone (the §II-B offloading comparison).
+pub fn fleet4_with_phone() -> Fleet {
+    let mut kinds = vec![DeviceKind::Max78000; 4];
+    kinds.push(DeviceKind::Phone);
+    fleet_of(&kinds)
+}
+
+/// Build a fleet with on-body roles cycling earbud/glasses/watch/ring.
+pub fn fleet_of(kinds: &[DeviceKind]) -> Fleet {
+    let roles: [(&str, Vec<SensorKind>, Vec<InteractionKind>); 4] = [
+        (
+            "earbud",
+            vec![SensorKind::Microphone],
+            vec![InteractionKind::Audio],
+        ),
+        (
+            "glasses",
+            vec![SensorKind::Camera],
+            vec![InteractionKind::Display],
+        ),
+        (
+            "watch",
+            vec![SensorKind::Imu, SensorKind::Ppg, SensorKind::Microphone],
+            vec![InteractionKind::Display, InteractionKind::Haptic],
+        ),
+        (
+            "ring",
+            vec![SensorKind::Ppg],
+            vec![InteractionKind::Haptic, InteractionKind::Led],
+        ),
+    ];
+    Fleet::new(
+        kinds
+            .iter()
+            .enumerate()
+            .map(|(i, &kind)| {
+                if kind == DeviceKind::Phone {
+                    return Device::new(i, "phone", kind, vec![], vec![]);
+                }
+                let (role, sensors, acts) = &roles[i % roles.len()];
+                let name = if i < roles.len() {
+                    role.to_string()
+                } else {
+                    format!("{role}{}", i / roles.len() + 1)
+                };
+                Device::new(i, name, kind, sensors.clone(), acts.clone())
+            })
+            .collect(),
+    )
+}
+
+/// The sensor kind each Table I pipeline reads.
+pub fn sensor_for(model: ModelName) -> SensorKind {
+    match model {
+        ModelName::KWS => SensorKind::Microphone,
+        ModelName::ConvNet5 => SensorKind::Imu,
+        _ => SensorKind::Camera,
+    }
+}
+
+/// Build a pipeline for a Table I model with designated endpoints.
+pub fn pipeline(id: usize, model: ModelName, source: usize, target: usize) -> PipelineSpec {
+    PipelineSpec::new(
+        id,
+        model.as_str(),
+        SourceReq::Device(DeviceId(source)),
+        model_by_name(model).clone(),
+        TargetReq::Device(DeviceId(target)),
+    )
+}
+
+/// Pipelines with a chosen endpoint mapping over `n` devices (Fig. 18).
+pub fn pipelines_with_mapping(
+    models: &[ModelName],
+    mapping: EndpointMapping,
+    n_devices: usize,
+) -> Vec<PipelineSpec> {
+    models
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| match mapping {
+            EndpointMapping::Any => PipelineSpec::new(
+                i,
+                m.as_str(),
+                SourceReq::Any,
+                model_by_name(m).clone(),
+                TargetReq::Any,
+            ),
+            EndpointMapping::Distributed => pipeline(i, m, i % n_devices, (i + 1) % n_devices),
+            EndpointMapping::Overlapped => pipeline(i, m, 0, 0),
+        })
+        .collect()
+}
+
+/// Table I workload definitions (1-based ids, matching the paper).
+pub fn workload(id: usize) -> Workload {
+    // Endpoint assignments follow §VI-A/Fig. 14: Workload 1's endpoints
+    // are the Distributed mapping (per §VI-C3); pipeline 4 (KWS) captures
+    // on the earbud (d0) and alerts the ring (d3); pipeline 8
+    // (MobileNetV2) captures on the glasses (d1) and alerts the ring (d3).
+    match id {
+        1 => Workload {
+            name: "Workload 1".into(),
+            pipelines: vec![
+                pipeline(0, ModelName::ConvNet5, 0, 1),
+                pipeline(1, ModelName::ResSimpleNet, 1, 2),
+                pipeline(2, ModelName::UNet, 2, 3),
+            ],
+        },
+        2 => Workload {
+            name: "Workload 2".into(),
+            pipelines: vec![
+                pipeline(0, ModelName::KWS, 0, 3),
+                pipeline(1, ModelName::SimpleNet, 1, 2),
+                pipeline(2, ModelName::WideNet, 2, 0),
+            ],
+        },
+        3 => Workload {
+            name: "Workload 3".into(),
+            pipelines: vec![pipeline(0, ModelName::EfficientNetV2, 1, 3)],
+        },
+        4 => Workload {
+            name: "Workload 4".into(),
+            pipelines: vec![pipeline(0, ModelName::MobileNetV2, 1, 3)],
+        },
+        other => panic!("no workload {other}"),
+    }
+}
+
+/// All four workloads.
+pub fn all_workloads() -> Vec<Workload> {
+    (1..=4).map(workload).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet4_roles_and_capabilities() {
+        let f = fleet4();
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.get(DeviceId(0)).name, "earbud");
+        assert!(f.get(DeviceId(0)).has_sensor(SensorKind::Microphone));
+        assert!(f.get(DeviceId(1)).has_sensor(SensorKind::Camera));
+        assert!(f.get(DeviceId(3)).has_interaction(InteractionKind::Haptic));
+    }
+
+    #[test]
+    fn hetero_fleet_upgrades_watch() {
+        let f = fleet4_hetero();
+        assert_eq!(f.get(DeviceId(2)).spec.kind, DeviceKind::Max78002);
+        assert_eq!(f.get(DeviceId(0)).spec.kind, DeviceKind::Max78000);
+    }
+
+    #[test]
+    fn workloads_match_table1_assignment() {
+        let w1 = workload(1);
+        assert_eq!(w1.pipelines.len(), 3);
+        assert_eq!(w1.pipelines[0].name, "ConvNet5");
+        let w2 = workload(2);
+        assert_eq!(w2.pipelines[0].name, "KWS");
+        assert_eq!(
+            w2.pipelines[0].source,
+            SourceReq::Device(DeviceId(0)),
+            "KWS captures on the earbud"
+        );
+        assert_eq!(w2.pipelines[0].target, TargetReq::Device(DeviceId(3)));
+        let w4 = workload(4);
+        assert_eq!(w4.pipelines.len(), 1);
+        assert_eq!(w4.pipelines[0].name, "MobileNetV2");
+    }
+
+    #[test]
+    fn phone_fleet_has_five_devices() {
+        let f = fleet4_with_phone();
+        assert_eq!(f.len(), 5);
+        assert_eq!(f.get(DeviceId(4)).spec.kind, DeviceKind::Phone);
+    }
+
+    #[test]
+    fn mapping_variants() {
+        let models = [ModelName::ConvNet5, ModelName::ResSimpleNet, ModelName::UNet];
+        let over = pipelines_with_mapping(&models, EndpointMapping::Overlapped, 4);
+        assert!(over
+            .iter()
+            .all(|p| p.source == SourceReq::Device(DeviceId(0))
+                && p.target == TargetReq::Device(DeviceId(0))));
+        let dist = pipelines_with_mapping(&models, EndpointMapping::Distributed, 4);
+        let sources: Vec<_> = dist.iter().map(|p| p.source).collect();
+        assert_eq!(sources.len(), 3);
+        assert_ne!(sources[0], sources[1]);
+        let any = pipelines_with_mapping(&models, EndpointMapping::Any, 4);
+        assert!(any.iter().all(|p| p.source == SourceReq::Any));
+    }
+
+    #[test]
+    fn larger_fleets_get_numbered_roles() {
+        let f = fleet_n(5);
+        assert_eq!(f.get(DeviceId(4)).name, "earbud2");
+    }
+
+    #[test]
+    fn every_workload_plans_on_its_paper_fleet() {
+        // Each Table I workload must be orchestratable by Synergy on the
+        // four-device setup the paper evaluates it with.
+        use crate::orchestrator::{Planner, Synergy};
+        let f = fleet4();
+        for w in all_workloads() {
+            let plan = Synergy::planner()
+                .plan(&w.pipelines, &f)
+                .unwrap_or_else(|e| panic!("{}: {e:?}", w.name));
+            plan.check_runnable(&w.pipelines, &f).unwrap();
+        }
+    }
+}

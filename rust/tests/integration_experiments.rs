@@ -1,0 +1,77 @@
+//! Experiment-harness integration: every registered experiment runs and
+//! produces a non-trivial report with the structural markers its
+//! table/figure requires. (Shape assertions live in each experiment's own
+//! unit tests; this is the end-to-end smoke over the registry.)
+
+use synergy::experiments;
+use synergy::util::cli::Args;
+
+fn fast_args() -> Args {
+    Args::parse(
+        [
+            "--runs".to_string(),
+            "10".to_string(),
+            "--combos".to_string(),
+            "4".to_string(),
+        ],
+        &["runs", "combos"],
+    )
+}
+
+#[test]
+fn every_experiment_runs() {
+    let args = fast_args();
+    for e in experiments::registry() {
+        let report = (e.runner)(&args);
+        assert!(
+            report.lines().count() >= 4,
+            "{} produced a trivial report:\n{report}",
+            e.id
+        );
+        assert!(
+            report.contains("paper") || report.contains("Paper"),
+            "{}: report must reference the paper's values",
+            e.id
+        );
+    }
+}
+
+#[test]
+fn registry_lookup_and_all() {
+    let args = fast_args();
+    assert!(experiments::run("fig15", &args).is_some());
+    assert!(experiments::run("nope", &args).is_none());
+    let ids: Vec<&str> = experiments::registry().iter().map(|e| e.id).collect();
+    assert_eq!(
+        ids,
+        [
+            "fig2", "fig4", "fig8", "fig9", "fig11", "fig15", "table2", "fig16a", "fig16b",
+            "fig17", "fig18", "table3", "fig19"
+        ]
+    );
+}
+
+#[test]
+fn fig15_reports_all_eight_methods_per_workload() {
+    let args = fast_args();
+    let report = experiments::run("fig15", &args).unwrap();
+    for method in [
+        "Synergy", "MinDev", "MaxDev", "PriMinDev", "PriMaxDev", "IndModel", "JointModel",
+        "IndE2E",
+    ] {
+        assert_eq!(
+            report.matches(&format!("\n{method}")).count(),
+            4,
+            "{method} must appear once per workload"
+        );
+    }
+}
+
+#[test]
+fn table2_shows_oor_then_monotone_components() {
+    let args = fast_args();
+    let report = experiments::run("table2", &args).unwrap();
+    assert!(report.contains("IndModel (none)"));
+    assert!(report.contains("OOR"), "IndModel row should OOR on W1/W2");
+    assert!(report.contains("JRC+STT+PSR+ATP"));
+}

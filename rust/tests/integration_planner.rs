@@ -1,0 +1,138 @@
+//! Planner integration: workloads → plans → invariants, across Synergy and
+//! every baseline, on the paper's fleets.
+
+use synergy::baselines::{IndE2E, IndModel, JointModel, MaxDev, MinDev, PriMaxDev, PriMinDev};
+use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::model::zoo::{model_by_name, ModelName};
+use synergy::orchestrator::{Objective, PlanError, Planner, Priority, ProgressivePlanner, Synergy};
+use synergy::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use synergy::workload::{all_workloads, fleet4, fleet4_hetero, fleet_n, workload};
+
+fn all_planners() -> Vec<Box<dyn Planner>> {
+    vec![
+        Box::new(Synergy::planner()),
+        Box::new(MinDev),
+        Box::new(MaxDev),
+        Box::new(PriMinDev),
+        Box::new(PriMaxDev),
+        Box::new(IndModel::default()),
+        Box::new(JointModel::default()),
+        Box::new(IndE2E::default()),
+    ]
+}
+
+#[test]
+fn every_planner_yields_runnable_or_oor_on_all_workloads() {
+    let fleet = fleet4();
+    for w in all_workloads() {
+        for planner in all_planners() {
+            match planner.plan(&w.pipelines, &fleet) {
+                Ok(plan) => {
+                    plan.check_runnable(&w.pipelines, &fleet)
+                        .unwrap_or_else(|e| panic!("{} on {}: {e}", planner.name(), w.name));
+                    for (i, ep) in plan.plans.iter().enumerate() {
+                        ep.validate(&w.pipelines[i].model).unwrap();
+                        // Endpoint requirements are honored.
+                        assert!(w.pipelines[i]
+                            .source_candidates(&fleet)
+                            .contains(&ep.source_dev));
+                        assert!(w.pipelines[i]
+                            .target_candidates(&fleet)
+                            .contains(&ep.target_dev));
+                    }
+                }
+                Err(PlanError::Oor { .. }) => {} // legitimate outcome
+                Err(e) => panic!("{} on {}: {e}", planner.name(), w.name),
+            }
+        }
+    }
+}
+
+#[test]
+fn synergy_estimate_dominates_every_baseline_estimate() {
+    // Synergy maximizes estimated throughput over a superset of what the
+    // heuristics consider, so its estimate must dominate.
+    let fleet = fleet4();
+    let lm = LatencyModel::new(&fleet);
+    for w in all_workloads() {
+        let synergy_plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let synergy_tput = estimate_plan(&synergy_plan, &w.pipelines, &fleet, &lm).throughput;
+        for planner in all_planners().iter().skip(1) {
+            if let Ok(plan) = planner.plan(&w.pipelines, &fleet) {
+                let tput = estimate_plan(&plan, &w.pipelines, &fleet, &lm).throughput;
+                assert!(
+                    synergy_tput >= tput - 1e-9,
+                    "{} on {}: {tput} > Synergy {synergy_tput}",
+                    planner.name(),
+                    w.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn priorities_agree_on_single_pipeline() {
+    // With one pipeline there is nothing to prioritize: all orderings
+    // select the same plan.
+    let fleet = fleet_n(3);
+    let ps = vec![PipelineSpec::new(
+        0,
+        "solo",
+        SourceReq::Any,
+        model_by_name(ModelName::UNet).clone(),
+        TargetReq::Any,
+    )];
+    let reference = ProgressivePlanner::new(Priority::DataIntensityDesc, Objective::TputMax)
+        .select(&ps, &fleet)
+        .unwrap();
+    for prio in Priority::ALL {
+        let plan = ProgressivePlanner::new(prio, Objective::TputMax)
+            .select(&ps, &fleet)
+            .unwrap();
+        assert_eq!(plan, reference, "{prio:?}");
+    }
+}
+
+#[test]
+fn hetero_fleet_plans_heavy_triple() {
+    let pipelines: Vec<PipelineSpec> =
+        [ModelName::EfficientNetV2, ModelName::MobileNetV2, ModelName::UNet]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                PipelineSpec::new(
+                    i,
+                    m.as_str(),
+                    SourceReq::Any,
+                    model_by_name(m).clone(),
+                    TargetReq::Any,
+                )
+            })
+            .collect();
+    let hetero = fleet4_hetero();
+    let plan = Synergy::planner().plan(&pipelines, &hetero).unwrap();
+    plan.check_runnable(&pipelines, &hetero).unwrap();
+}
+
+#[test]
+fn moderator_lifecycle_end_to_end() {
+    use synergy::coordinator::Moderator;
+    let mut moderator = Moderator::new(fleet4(), Synergy::planner());
+    let w = workload(1);
+    for p in w.pipelines.clone() {
+        moderator.register_app(p).unwrap();
+    }
+    assert_eq!(moderator.deployment().unwrap().plan.plans.len(), 3);
+    // Device churn.
+    moderator.set_fleet(fleet_n(5)).unwrap();
+    let rep5 = moderator.simulate(12, 3).unwrap();
+    moderator.set_fleet(fleet_n(4)).unwrap();
+    let rep4 = moderator.simulate(12, 3).unwrap();
+    assert!(rep5.throughput > 0.0 && rep4.throughput > 0.0);
+    // App removal down to empty.
+    for p in &w.pipelines {
+        moderator.remove_app(p.id).unwrap();
+    }
+    assert!(moderator.deployment().is_none());
+}

@@ -1,0 +1,106 @@
+//! Runtime integration: real PJRT execution of the AOT artifacts.
+//! These tests require `make artifacts`; they are skipped (with a notice)
+//! when the manifest is absent so `cargo test` works on a fresh clone.
+
+use synergy::runtime::{Manifest, ModelExecutor};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping runtime integration test: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_agrees_with_rust_zoo() {
+    let Some(m) = manifest() else { return };
+    for name in m.models.keys() {
+        m.check_against_zoo(name)
+            .unwrap_or_else(|e| panic!("{e:#}"));
+    }
+}
+
+#[test]
+fn full_models_execute_and_produce_finite_outputs() {
+    let Some(m) = manifest() else { return };
+    let engine = synergy::runtime::Engine::cpu().unwrap();
+    let exec = ModelExecutor::new(&engine, &m);
+    for name in ["ConvNet5", "KWS", "SimpleNet"] {
+        let input = exec.synth_input(name, 1).unwrap();
+        let out = exec.run_full(name, &input).unwrap();
+        let mm = m.model(name).unwrap();
+        assert_eq!(out.len() as u64, mm.layers.last().unwrap().out_shape.bytes());
+        assert!(out.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+        assert!(out.iter().any(|v| *v != 0.0), "{name}: all-zero output");
+    }
+}
+
+#[test]
+fn every_two_way_split_composes_to_the_full_model() {
+    // The core correctness property of model splitting (§IV-C): for every
+    // split boundary with artifacts, chunked == full.
+    let Some(m) = manifest() else { return };
+    let engine = synergy::runtime::Engine::cpu().unwrap();
+    let exec = ModelExecutor::new(&engine, &m);
+    // ConvNet5: every boundary; KWS: sampled boundaries (each chunk pair
+    // costs a PJRT compile — the full sweep lives in `make bench`'s e2e).
+    let cases: [(&str, &[usize]); 2] = [("ConvNet5", &[1, 2, 3, 4]), ("KWS", &[1, 4, 8])];
+    for (name, splits) in cases {
+        let mm = m.model(name).unwrap();
+        let input = exec.synth_input(name, 2).unwrap();
+        for &s in splits {
+            assert!(mm.supports_split(&[s]), "{name} missing chunk at {s}");
+            let err = exec.verify_split(name, &[s], &input).unwrap();
+            assert!(err < 1e-2, "{name} split {s}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn executable_cache_deduplicates_compilation() {
+    let Some(m) = manifest() else { return };
+    let engine = synergy::runtime::Engine::cpu().unwrap();
+    let mm = m.model("ConvNet5").unwrap();
+    let p = m.path(&mm.full);
+    let a = engine.load(&p).unwrap();
+    let before = engine.cached();
+    let b = engine.load(&p).unwrap();
+    assert_eq!(engine.cached(), before);
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn serving_loop_runs_and_verifies() {
+    use synergy::coordinator::{serve, Moderator, ServeConfig};
+    use synergy::model::zoo::ModelName;
+    use synergy::orchestrator::Synergy;
+    use synergy::plan::EnumerateCfg;
+    use synergy::workload::{fleet4, pipeline};
+
+    let Some(m) = manifest() else { return };
+    let fleet = fleet4();
+    let mut planner = Synergy::planner();
+    planner.cfg = EnumerateCfg { max_split_devices: 2 };
+    let mut moderator = Moderator::new(fleet.clone(), planner);
+    moderator
+        .register_app(pipeline(0, ModelName::ConvNet5, 0, 1))
+        .unwrap();
+    moderator
+        .register_app(pipeline(1, ModelName::KWS, 1, 2))
+        .unwrap();
+    let dep = moderator.deployment().unwrap();
+    let report = serve(
+        dep,
+        moderator.apps(),
+        &fleet,
+        &m,
+        ServeConfig { runs: 4, max_inflight: 2, verify: true, seed: 5 },
+    )
+    .unwrap();
+    assert_eq!(report.completions, 8);
+    assert!(report.verified, "split/full mismatch in serving");
+    assert!(report.throughput > 0.0);
+}

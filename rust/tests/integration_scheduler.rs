@@ -1,0 +1,115 @@
+//! Scheduler integration: the DES executing real workload deployments —
+//! policy orderings, trace soundness, estimator-vs-simulator agreement.
+
+use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::orchestrator::{Planner, Synergy};
+use synergy::scheduler::{simulate, GroundTruth, Policy, SimConfig};
+use synergy::workload::{all_workloads, fleet4};
+
+fn cfg(policy: Policy) -> SimConfig {
+    SimConfig { runs: 18, warmup: 3, policy, record_trace: true }
+}
+
+#[test]
+fn policy_ordering_holds_on_every_workload() {
+    // Fig. 12 / Table II: sequential ≤ inter-pipeline ≤ ATP throughput.
+    let fleet = fleet4();
+    let gt = GroundTruth::with_seed(11);
+    for w in all_workloads() {
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let seq = simulate(&plan, &w.pipelines, &fleet, &gt, cfg(Policy::Sequential));
+        let ipl = simulate(&plan, &w.pipelines, &fleet, &gt, cfg(Policy::InterPipeline));
+        let atp = simulate(&plan, &w.pipelines, &fleet, &gt, cfg(Policy::atp()));
+        assert!(
+            ipl.throughput >= seq.throughput * 0.98,
+            "{}: ipl {} < seq {}",
+            w.name,
+            ipl.throughput,
+            seq.throughput
+        );
+        assert!(
+            atp.throughput >= ipl.throughput * 0.98,
+            "{}: atp {} < ipl {}",
+            w.name,
+            atp.throughput,
+            ipl.throughput
+        );
+    }
+}
+
+#[test]
+fn traces_are_sound_for_every_workload_and_policy() {
+    let fleet = fleet4();
+    let gt = GroundTruth::with_seed(5);
+    for w in all_workloads() {
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        for policy in [Policy::Sequential, Policy::InterPipeline, Policy::atp()] {
+            let rep = simulate(&plan, &w.pipelines, &fleet, &gt, cfg(policy));
+            let trace = rep.trace.as_ref().unwrap();
+            trace.check_unit_exclusivity().unwrap();
+            trace.check_causality().unwrap();
+            assert_eq!(rep.completions, w.pipelines.len() * 18);
+            // Busy time per unit never exceeds the makespan.
+            for (&(d, u), &busy) in &rep.unit_busy {
+                assert!(
+                    busy <= rep.makespan * (1.0 + 1e-9),
+                    "{}: {d} {u:?} busy {busy} > makespan {}",
+                    w.name,
+                    rep.makespan
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn estimator_predicts_simulated_throughput_within_30_percent() {
+    // The planner's whole value rests on its estimates ranking plans the
+    // way the hardware would; check calibration on the real workloads.
+    let fleet = fleet4();
+    let lm = LatencyModel::new(&fleet);
+    let gt = GroundTruth::with_seed(9);
+    for w in all_workloads() {
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let est = estimate_plan(&plan, &w.pipelines, &fleet, &lm);
+        let rep = simulate(&plan, &w.pipelines, &fleet, &gt, cfg(Policy::atp()));
+        let ratio = rep.throughput / est.throughput;
+        assert!(
+            (0.7..1.3).contains(&ratio),
+            "{}: measured {} vs estimated {} (ratio {ratio})",
+            w.name,
+            rep.throughput,
+            est.throughput
+        );
+    }
+}
+
+#[test]
+fn seeds_change_jitter_but_not_structure() {
+    let fleet = fleet4();
+    let w = &all_workloads()[0];
+    let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+    let a = simulate(&plan, &w.pipelines, &fleet, &GroundTruth::with_seed(1), cfg(Policy::atp()));
+    let b = simulate(&plan, &w.pipelines, &fleet, &GroundTruth::with_seed(2), cfg(Policy::atp()));
+    assert_ne!(a.makespan, b.makespan, "jitter must differ across seeds");
+    let rel = (a.throughput - b.throughput).abs() / a.throughput;
+    assert!(rel < 0.05, "seed changed throughput by {rel}");
+}
+
+#[test]
+fn longer_horizons_converge_on_throughput() {
+    let fleet = fleet4();
+    let w = &all_workloads()[1];
+    let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+    let gt = GroundTruth::with_seed(3);
+    let short = simulate(
+        &plan, &w.pipelines, &fleet, &gt,
+        SimConfig { runs: 12, warmup: 2, policy: Policy::atp(), record_trace: false },
+    );
+    let long = simulate(
+        &plan, &w.pipelines, &fleet, &gt,
+        SimConfig { runs: 60, warmup: 10, policy: Policy::atp(), record_trace: false },
+    );
+    let rel = (short.throughput - long.throughput).abs() / long.throughput;
+    assert!(rel < 0.1, "throughput not converged: {rel}");
+}

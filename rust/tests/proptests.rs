@@ -1,0 +1,246 @@
+//! Property-based tests over randomized fleets, models and pipelines
+//! (testkit harness; see rust/src/testkit). Each property encodes a
+//! system-level invariant that must hold for *any* input, not just the
+//! paper's workloads.
+
+use synergy::device::{Device, DeviceKind, Fleet};
+use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::model::layer::{Layer, LayerKind, Shape};
+use synergy::model::ModelGraph;
+use synergy::orchestrator::{Objective, PlanError, Planner, Priority, ProgressivePlanner, Synergy};
+use synergy::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use synergy::plan::{enumerate_plans, paper_plan_count, EnumerateCfg};
+use synergy::scheduler::{simulate, GroundTruth, Policy, SimConfig};
+use synergy::testkit::{check, small_size, Config};
+use synergy::util::rng::Rng;
+
+/// A random scenario: fleet + concurrent pipelines with random models.
+#[derive(Debug)]
+struct Scenario {
+    fleet: Fleet,
+    pipelines: Vec<PipelineSpec>,
+}
+
+fn gen_model(rng: &mut Rng, id: usize) -> ModelGraph {
+    let layers = small_size(rng, 2, 8);
+    let h = 8 << rng.range(0, 2);
+    let cin = [1usize, 3, 8][rng.range(0, 3)];
+    let mut specs = Vec::new();
+    for i in 0..layers {
+        let last = i + 1 == layers;
+        let kind = if last && rng.chance(0.3) {
+            LayerKind::Linear
+        } else if rng.chance(0.15) {
+            LayerKind::DepthwiseConv2d { k: 3 }
+        } else {
+            LayerKind::Conv2d { k: 3 }
+        };
+        specs.push(Layer {
+            kind,
+            pool: if rng.chance(0.25) && !last { 2 } else { 1 },
+            cout: small_size(rng, 4, 64),
+            residual: false,
+            has_bias: rng.chance(0.8),
+        });
+    }
+    ModelGraph::new(format!("m{id}"), Shape::new(h, h, cin), specs)
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let ndev = small_size(rng, 1, 5);
+    let fleet = Fleet::new(
+        (0..ndev)
+            .map(|i| {
+                let kind = if rng.chance(0.2) {
+                    DeviceKind::Max78002
+                } else {
+                    DeviceKind::Max78000
+                };
+                Device::new(i, format!("d{i}"), kind, vec![], vec![])
+            })
+            .collect(),
+    );
+    let npipes = small_size(rng, 1, 4);
+    let pipelines = (0..npipes)
+        .map(|i| {
+            PipelineSpec::new(i, format!("p{i}"), SourceReq::Any, gen_model(rng, i), TargetReq::Any)
+        })
+        .collect();
+    Scenario { fleet, pipelines }
+}
+
+#[test]
+fn enumeration_count_matches_closed_form_and_all_plans_valid() {
+    check(
+        Config { cases: 60, seed: 0xE17 },
+        gen_scenario,
+        |s| {
+            let p = &s.pipelines[0];
+            let plans = enumerate_plans(p, &s.fleet, EnumerateCfg::default());
+            let upper = paper_plan_count(s.fleet.accel_ids().len(), p.model.num_layers());
+            synergy::prop_assert!(
+                plans.len() as u64 <= upper,
+                "enumerated {} > closed form {upper}",
+                plans.len()
+            );
+            for plan in &plans {
+                if let Err(e) = plan.validate(&p.model) {
+                    return Err(format!("invalid plan {plan}: {e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn progressive_plans_are_always_runnable() {
+    check(
+        Config { cases: 60, seed: 0xA11 },
+        gen_scenario,
+        |s| {
+            match Synergy::planner().plan(&s.pipelines, &s.fleet) {
+                Ok(plan) => plan
+                    .check_runnable(&s.pipelines, &s.fleet)
+                    .map_err(|e| format!("selected plan violates memory: {e}")),
+                Err(PlanError::Oor { .. }) | Err(PlanError::Unsatisfiable { .. }) => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn estimator_critical_path_bounds_hold() {
+    check(
+        Config { cases: 40, seed: 0xBEE },
+        gen_scenario,
+        |s| {
+            let Ok(plan) = Synergy::planner().plan(&s.pipelines, &s.fleet) else {
+                return Ok(());
+            };
+            let lm = LatencyModel::new(&s.fleet);
+            let est = estimate_plan(&plan, &s.pipelines, &s.fleet, &lm);
+            synergy::prop_assert!(est.critical_path > 0.0);
+            synergy::prop_assert!(
+                est.round_latency >= est.critical_path - 1e-12
+                    && est.round_latency >= est.bottleneck - 1e-12,
+                "round latency must cover both bounds"
+            );
+            synergy::prop_assert!(
+                est.throughput + 1e-12 >= est.throughput_sequential,
+                "ATP estimate must dominate sequential"
+            );
+            for &chain in &est.chain_latency {
+                synergy::prop_assert!(chain <= est.critical_path + 1e-12);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simulation_conserves_tasks_and_respects_policies() {
+    check(
+        Config { cases: 30, seed: 0xD15C },
+        gen_scenario,
+        |s| {
+            let Ok(plan) = Synergy::planner().plan(&s.pipelines, &s.fleet) else {
+                return Ok(());
+            };
+            let gt = GroundTruth::with_seed(17);
+            let runs = 8;
+            let mut tputs = Vec::new();
+            for policy in [Policy::Sequential, Policy::InterPipeline, Policy::atp()] {
+                let rep = simulate(
+                    &plan,
+                    &s.pipelines,
+                    &s.fleet,
+                    &gt,
+                    SimConfig { runs, warmup: 2, policy, record_trace: true },
+                );
+                synergy::prop_assert!(
+                    rep.completions == s.pipelines.len() * runs,
+                    "{policy:?}: {} completions",
+                    rep.completions
+                );
+                let trace = rep.trace.as_ref().unwrap();
+                trace.check_unit_exclusivity().map_err(|e| e.to_string())?;
+                trace.check_causality().map_err(|e| e.to_string())?;
+                tputs.push(rep.throughput);
+            }
+            synergy::prop_assert!(
+                tputs[1] >= tputs[0] * 0.95,
+                "inter-pipeline {} < sequential {}",
+                tputs[1],
+                tputs[0]
+            );
+            synergy::prop_assert!(
+                tputs[2] >= tputs[1] * 0.95,
+                "ATP {} < inter-pipeline {}",
+                tputs[2],
+                tputs[1]
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn objectives_rank_their_own_metric_best() {
+    check(
+        Config { cases: 25, seed: 0x0B7 },
+        gen_scenario,
+        |s| {
+            let lm = LatencyModel::new(&s.fleet);
+            let mut results = Vec::new();
+            for obj in [Objective::TputMax, Objective::LatencyMin, Objective::PowerMin] {
+                match ProgressivePlanner::new(Priority::DataIntensityDesc, obj)
+                    .select(&s.pipelines, &s.fleet)
+                {
+                    Ok(plan) => {
+                        results.push((obj, estimate_plan(&plan, &s.pipelines, &s.fleet, &lm)))
+                    }
+                    Err(_) => return Ok(()), // OOR scenario: nothing to rank
+                }
+            }
+            let tput = &results[0].1;
+            let lat = &results[1].1;
+            let pow = &results[2].1;
+            synergy::prop_assert!(
+                tput.throughput + 1e-9 >= lat.throughput && tput.throughput + 1e-9 >= pow.throughput,
+                "TputMax must top throughput"
+            );
+            synergy::prop_assert!(
+                lat.round_latency <= tput.round_latency + 1e-9,
+                "LatencyMin must minimize latency"
+            );
+            synergy::prop_assert!(
+                pow.power_sequential_w <= tput.power_sequential_w + 1e-9,
+                "PowerMin must minimize power"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn memory_ledger_never_overcommits() {
+    check(
+        Config { cases: 50, seed: 0x1ED6 },
+        gen_scenario,
+        |s| {
+            // After planning, recompute usage from scratch and compare
+            // against every accelerator's capacity.
+            let Ok(plan) = Synergy::planner().plan(&s.pipelines, &s.fleet) else {
+                return Ok(());
+            };
+            for (dev, usage) in plan.memory_usage(&s.pipelines) {
+                let spec = s.fleet.get(dev).spec.accel.as_ref().unwrap();
+                synergy::prop_assert!(usage.weight_bytes <= spec.weight_mem);
+                synergy::prop_assert!(usage.bias_bytes <= spec.bias_mem);
+                synergy::prop_assert!(usage.layers <= spec.max_layers);
+            }
+            Ok(())
+        },
+    );
+}
