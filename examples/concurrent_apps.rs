@@ -3,48 +3,57 @@
 //! planning against independent state-of-the-art partitioning — including
 //! the out-of-resource failure IndModel hits when each app plans alone.
 //!
+//! Every method runs behind the same `SynergyRuntime` facade: only the
+//! planner plugged into the builder changes.
+//!
 //! Run: `cargo run --release --example concurrent_apps`
 
+use synergy::api::{RunConfig, SynergyRuntime};
 use synergy::baselines::{IndModel, JointModel};
-use synergy::estimator::{estimate_plan, LatencyModel};
 use synergy::orchestrator::{Planner, Synergy};
-use synergy::scheduler::{simulate, GroundTruth, SimConfig};
 use synergy::workload::{fleet4, workload};
 
 fn main() {
-    let w = workload(2);
-    let fleet = fleet4();
-    let gt = GroundTruth::with_seed(7);
+    let planners: Vec<(&str, Box<dyn Planner + Send>)> = vec![
+        ("Synergy", Box::new(Synergy::planner())),
+        ("IndModel", Box::new(IndModel::default())),
+        ("JointModel", Box::new(JointModel::default())),
+    ];
 
-    for planner in [
-        &Synergy::planner() as &dyn Planner,
-        &IndModel::default(),
-        &JointModel::default(),
-    ] {
-        print!("{:<12}", planner.name());
-        match planner.plan(&w.pipelines, &fleet) {
-            Ok(plan) => {
-                let lm = LatencyModel::new(&fleet);
-                let est = estimate_plan(&plan, &w.pipelines, &fleet, &lm);
-                let rep = simulate(
-                    &plan,
-                    &w.pipelines,
-                    &fleet,
-                    &gt,
-                    SimConfig { policy: planner.exec_policy(), ..Default::default() },
-                );
-                println!(
-                    "estimated {:.2} inf/s → measured {:.2} inf/s, {:.0} ms latency, {:.2} W",
-                    est.throughput,
-                    rep.throughput,
-                    rep.avg_latency * 1e3,
-                    rep.power_w
-                );
-                for ep in &plan.plans {
-                    println!("             {ep}");
-                }
+    for (label, planner) in planners {
+        print!("{label:<12}");
+        let runtime = SynergyRuntime::builder()
+            .fleet(fleet4())
+            .planner_boxed(planner)
+            .build();
+
+        // Register the workload; a planner that cannot fit all three apps
+        // errors on the registration that breaks the camel's back.
+        let mut failed = false;
+        for spec in workload(2).pipelines {
+            if let Err(e) = runtime.register(spec) {
+                println!("{e}");
+                failed = true;
+                break;
             }
-            Err(e) => println!("{e}"),
+        }
+        if failed {
+            continue;
+        }
+
+        let dep = runtime.deployment().expect("workload registered");
+        let rep = runtime
+            .run(&RunConfig { seed: 7, ..RunConfig::default() })
+            .expect("simulation runs");
+        println!(
+            "estimated {:.2} inf/s → measured {:.2} inf/s, {:.0} ms latency, {:.2} W",
+            dep.estimate.throughput,
+            rep.throughput,
+            rep.avg_latency_s * 1e3,
+            rep.power_w.unwrap_or(0.0),
+        );
+        for ep in &dep.plan.plans {
+            println!("             {ep}");
         }
     }
 }

@@ -2,51 +2,53 @@
 //! real workload — three concurrent apps planned by Synergy, deployed over
 //! per-device worker threads, executing *real* AOT-compiled HLO chunks
 //! through PJRT, with split-vs-full numerical verification and measured
-//! wall-clock throughput/latency.
+//! wall-clock throughput/latency. The only difference from a simulated
+//! session is the backend plugged into the `SynergyRuntime` builder.
 //!
 //! Requires `make artifacts` (Python runs once at build time; this binary
-//! never touches Python).
+//! never touches Python) and the `pjrt` cargo feature.
 //!
-//! Run: `cargo run --release --example e2e_serving [-- --runs 16]`
+//! Run: `cargo run --release --features pjrt --example e2e_serving [-- --runs 16]`
 
-use synergy::coordinator::{serve, Moderator, ServeConfig};
+use synergy::api::{PjrtBackend, RunConfig, SynergyRuntime};
 use synergy::model::zoo::ModelName;
 use synergy::orchestrator::Synergy;
 use synergy::plan::EnumerateCfg;
-use synergy::runtime::Manifest;
 use synergy::util::cli::Args;
 use synergy::workload::{fleet4, pipeline};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["runs", "artifacts"]);
-    let manifest = Manifest::load(args.opt("artifacts").unwrap_or("artifacts"))?;
+    let backend = PjrtBackend::load(args.opt("artifacts").unwrap_or("artifacts"))?;
     // Cross-check the Python-emitted manifest against the rust zoo.
     for m in ["ConvNet5", "KWS", "SimpleNet"] {
-        manifest.check_against_zoo(m)?;
+        backend.manifest().check_against_zoo(m)?;
     }
 
-    let fleet = fleet4();
     // Restrict to 2-way splits: aot.py emits chunk artifacts for every
     // 2-way split of the demo models.
     let mut planner = Synergy::planner();
     planner.cfg = EnumerateCfg { max_split_devices: 2 };
-    let mut moderator = Moderator::new(fleet.clone(), planner);
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet4())
+        .planner(planner)
+        .backend(backend)
+        .build();
+
     for (i, m) in [ModelName::ConvNet5, ModelName::KWS, ModelName::SimpleNet]
         .iter()
         .enumerate()
     {
-        moderator
-            .register_app(pipeline(i, *m, i % 4, (i + 1) % 4))
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        runtime.register(pipeline(i, *m, i % 4, (i + 1) % 4))?;
     }
-    let dep = moderator.deployment().unwrap();
+    let dep = runtime.deployment().expect("three apps registered");
     println!("deployment (holistic collaboration plan):");
     for ep in &dep.plan.plans {
         println!("  {ep}");
     }
 
     // Simulated on-body metrics (the MAX78000-class timing).
-    let sim = moderator.simulate(24, 7).unwrap();
+    let sim = runtime.simulate(24, 7).unwrap();
     println!(
         "simulated on-body: {:.2} inf/s, mean latency {:.0} ms, {:.2} W",
         sim.throughput,
@@ -56,30 +58,29 @@ fn main() -> anyhow::Result<()> {
 
     // Real inference through PJRT: batched continuous runs across the
     // device worker threads.
-    let report = serve(
-        dep,
-        moderator.apps(),
-        &fleet,
-        &manifest,
-        ServeConfig {
-            runs: args.opt_parse("runs", 8),
-            ..Default::default()
-        },
-    )?;
+    let report = runtime.run(&RunConfig {
+        runs: args.opt_parse("runs", 8),
+        ..RunConfig::default()
+    })?;
     println!(
         "real serving: {} inferences in {:.2} s — {:.1} inf/s wall-clock (CPU testbed)",
-        report.completions, report.wall_s, report.throughput
+        report.completions,
+        report.wall_s.unwrap_or(0.0),
+        report.throughput
     );
-    for p in &report.per_pipeline {
+    for p in &report.per_app {
         println!(
             "  {:<10} {} runs, mean latency {:.1} ms, max |split − full| = {:.2e}",
             p.name,
             p.completions,
             p.mean_latency_s * 1e3,
-            p.max_split_err
+            p.max_split_err.unwrap_or(0.0)
         );
     }
-    anyhow::ensure!(report.verified, "split execution diverged from full model");
+    anyhow::ensure!(
+        report.verified == Some(true),
+        "split execution diverged from full model"
+    );
     println!("VERIFIED: chunked execution matches whole-model execution");
     Ok(())
 }

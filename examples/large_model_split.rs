@@ -1,17 +1,18 @@
 //! Large-model splitting: MobileNetV2 (821 KB) exceeds any single
 //! MAX78000's 442 KB weight memory — Workload 4 in the paper. Synergy
 //! splits it across the fleet; this example shows how the split adapts as
-//! devices join, and what a heterogeneous upgrade (MAX78002) changes.
+//! devices join, and what a heterogeneous upgrade (MAX78002) changes. OOR
+//! is a typed planning error surfaced through `RuntimeError::Plan`.
 //!
 //! Run: `cargo run --release --example large_model_split`
 
-use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::api::{RuntimeError, SynergyRuntime};
+use synergy::device::DeviceId;
 use synergy::model::zoo::{model_by_name, ModelName};
-use synergy::orchestrator::{PlanError, Planner, Synergy};
-use synergy::workload::{fleet4_hetero, fleet_n, workload};
+use synergy::orchestrator::PlanError;
+use synergy::workload::{fleet4_hetero, fleet_n};
 
 fn main() {
-    let w = workload(4); // MobileNetV2, glasses → ring
     let model = model_by_name(ModelName::MobileNetV2);
     println!(
         "MobileNetV2: {} layers, {} weights — single MAX78000 holds 442 KB\n",
@@ -20,34 +21,39 @@ fn main() {
     );
 
     for n in 1..=5 {
-        let fleet = fleet_n(n);
-        // Keep the endpoints on devices that exist in the shrunken fleet.
-        let pipelines = vec![synergy::workload::pipeline(
-            0,
-            ModelName::MobileNetV2,
-            1 % n,
-            3 % n.max(1),
-        )];
+        let runtime = SynergyRuntime::new(fleet_n(n));
         print!("{n} × MAX78000: ");
-        match Synergy::planner().plan(&pipelines, &fleet) {
-            Ok(plan) => {
-                let lm = LatencyModel::new(&fleet);
-                let est = estimate_plan(&plan, &pipelines, &fleet, &lm);
-                println!("{} — {:.2} inf/s", plan.plans[0], est.throughput);
+        // Keep the endpoints on devices that exist in the shrunken fleet.
+        let registered = runtime
+            .app("mobilenet")
+            .source(DeviceId(1 % n))
+            .model(ModelName::MobileNetV2)
+            .target(DeviceId(3 % n))
+            .register();
+        match registered {
+            Ok(_) => {
+                let dep = runtime.deployment().unwrap();
+                println!("{} — {:.2} inf/s", dep.plan.plans[0], dep.estimate.throughput);
             }
-            Err(PlanError::Oor { .. }) => println!("OOR (cannot hold the model)"),
+            Err(RuntimeError::Plan(PlanError::Oor { .. })) => {
+                println!("OOR (cannot hold the model)")
+            }
             Err(e) => println!("{e}"),
         }
     }
 
-    let fleet = fleet4_hetero();
-    let plan = Synergy::planner()
-        .plan(&w.pipelines, &fleet)
+    // Heterogeneous upgrade: the watch becomes a MAX78002 (Fig. 17).
+    let runtime = SynergyRuntime::new(fleet4_hetero());
+    runtime
+        .app("mobilenet")
+        .source(DeviceId(1))
+        .model(ModelName::MobileNetV2)
+        .target(DeviceId(3))
+        .register()
         .expect("hetero fleet must fit");
-    let lm = LatencyModel::new(&fleet);
-    let est = estimate_plan(&plan, &w.pipelines, &fleet, &lm);
+    let dep = runtime.deployment().unwrap();
     println!(
         "\nwith a MAX78002 in the fleet: {} — {:.2} inf/s",
-        plan.plans[0], est.throughput
+        dep.plan.plans[0], dep.estimate.throughput
     );
 }

@@ -1,42 +1,40 @@
-//! Quickstart: register two on-body AI apps through the device-agnostic
-//! interface, let the moderator orchestrate, and inspect/simulate the
-//! selected holistic collaboration plan.
+//! Quickstart: register two on-body AI apps through the `SynergyRuntime`
+//! session API, watch the runtime orchestrate (events, not polling),
+//! simulate the selected holistic collaboration plan, and shed a device.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use synergy::coordinator::Moderator;
-use synergy::device::{DeviceId, InteractionKind, SensorKind};
-use synergy::model::zoo::{model_by_name, ModelName};
-use synergy::orchestrator::Synergy;
-use synergy::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use synergy::api::{Interaction, Qos, RunConfig, Sensor, SynergyRuntime};
+use synergy::device::DeviceId;
+use synergy::model::zoo::ModelName;
 use synergy::workload::fleet4;
 
 fn main() -> anyhow::Result<()> {
     // Four wearables: earbud (d0), glasses (d1), watch (d2), ring (d3).
-    let fleet = fleet4();
-    let mut moderator = Moderator::new(fleet, Synergy::planner());
+    let runtime = SynergyRuntime::new(fleet4());
+    let events = runtime.subscribe();
 
     // App 1 — keyword spotting: any microphone → KWS → haptic alert.
-    // No devices named: the runtime decides placement (§IV-B).
-    moderator.register_app(PipelineSpec::new(
-        0,
-        "keyword-spotting",
-        SourceReq::Sensor(SensorKind::Microphone),
-        model_by_name(ModelName::KWS).clone(),
-        TargetReq::Interaction(InteractionKind::Haptic),
-    ))?;
+    // No devices named: the runtime decides placement (§IV-B), and the
+    // QoS hint tells it what "good enough" means.
+    let kws = runtime
+        .app("keyword-spotting")
+        .source(Sensor::Microphone)
+        .model(ModelName::KWS)
+        .target(Interaction::Haptic)
+        .qos(Qos { min_rate_hz: 2.0, ..Qos::default() })
+        .register()?;
 
     // App 2 — attention alert: the glasses camera → SimpleNet → display.
     // The source pins a designated device instead of a capability.
-    moderator.register_app(PipelineSpec::new(
-        1,
-        "attention-alert",
-        SourceReq::Device(DeviceId(1)),
-        model_by_name(ModelName::SimpleNet).clone(),
-        TargetReq::Interaction(InteractionKind::Display),
-    ))?;
+    let alert = runtime
+        .app("attention-alert")
+        .source(DeviceId(1))
+        .model(ModelName::SimpleNet)
+        .target(Interaction::Display)
+        .register()?;
 
-    let dep = moderator.deployment().unwrap();
+    let dep = runtime.deployment().expect("two apps registered");
     println!("holistic collaboration plan:");
     for ep in &dep.plan.plans {
         println!("  {ep}");
@@ -48,22 +46,48 @@ fn main() -> anyhow::Result<()> {
         dep.estimate.power_w,
     );
 
-    // Execute on the simulated hardware (cycle-accurate device models).
-    let report = moderator.simulate(32, 7).unwrap();
+    // Execute on the simulated hardware (cycle-accurate device models) —
+    // `run` is the same call that drives real PJRT inference when the
+    // runtime is built with a PjrtBackend.
+    let report = runtime.run(&RunConfig { runs: 32, seed: 7, ..RunConfig::default() })?;
     println!(
         "simulated 32 rounds: {:.2} inf/s, mean latency {:.0} ms, {:.2} W",
         report.throughput,
-        report.avg_latency * 1e3,
-        report.power_w,
+        report.avg_latency_s * 1e3,
+        report.power_w.unwrap_or(0.0),
     );
 
-    // The ring leaves the body — the moderator re-orchestrates (the watch
-    // still offers a haptic interface).
-    moderator.set_fleet(synergy::workload::fleet_n(3))?;
-    let dep = moderator.deployment().unwrap();
-    println!("after shrinking to 3 devices:");
+    // The attention app goes to background: one replan covers KWS alone.
+    alert.pause()?;
+    println!(
+        "paused attention-alert: active plan now has {} pipeline(s)",
+        runtime.deployment().unwrap().plan.plans.len()
+    );
+    alert.resume()?;
+
+    // The ring leaves the body — the runtime replans *incrementally*
+    // (cached plan enumerations survive a suffix departure; the watch
+    // still offers a haptic interface for KWS).
+    runtime.device_left(DeviceId(3))?;
+    let dep = runtime.deployment().unwrap();
+    println!("after the ring left:");
     for ep in &dep.plan.plans {
         println!("  {ep}");
+    }
+
+    // The app-side view: placement, estimated rate/latency, QoS standing.
+    let stats = kws.stats()?;
+    println!(
+        "kws stats: est {:.2} Hz, est latency {:.0} ms, qos_ok={}",
+        stats.est_rate_hz.unwrap_or(0.0),
+        stats.est_latency_s.unwrap_or(0.0) * 1e3,
+        stats.qos_violation.is_none(),
+    );
+
+    // Everything above was also pushed on the event channel.
+    println!("events observed:");
+    for event in events.try_iter() {
+        println!("  {event:?}");
     }
     Ok(())
 }

@@ -1,0 +1,163 @@
+//! App registration and lifecycle: the fluent [`AppBuilder`] and the
+//! [`AppHandle`] it returns.
+//!
+//! ```text
+//! let kws = runtime.app("kws")
+//!     .source(Sensor::Microphone)
+//!     .model(ModelName::KWS)
+//!     .target(Interaction::Haptic)
+//!     .qos(Qos { min_rate_hz: 5.0, ..Qos::default() })
+//!     .register()?;
+//! kws.pause()?;   // drop out of the active plan
+//! kws.resume()?;  // rejoin (one incremental replan each)
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::zoo::{model_by_name, ModelName};
+use crate::model::ModelGraph;
+use crate::pipeline::{PipelineId, PipelineSpec, SourceReq, TargetReq};
+
+use super::core::AppStats;
+use super::error::RuntimeError;
+use super::qos::Qos;
+use super::runtime::Shared;
+
+/// Fluent registration of one on-body AI app (§IV-B: requirements, not
+/// device bindings). Created by [`super::SynergyRuntime::app`].
+pub struct AppBuilder {
+    pub(crate) shared: Arc<Mutex<Shared>>,
+    pub(crate) name: String,
+    pub(crate) id: Option<usize>,
+    pub(crate) source: SourceReq,
+    pub(crate) model: Option<ModelGraph>,
+    pub(crate) target: TargetReq,
+    pub(crate) qos: Qos,
+}
+
+impl AppBuilder {
+    /// Pin the pipeline id (defaults to a fresh, never-reused id).
+    ///
+    /// Pinned ids are caller-managed: re-pinning the id of a previously
+    /// unregistered app is allowed (workload definitions re-register
+    /// fixed ids), but stale handles of the old app will then act on the
+    /// new one — the no-aliasing guarantee covers auto-assigned ids only.
+    pub fn id(mut self, id: usize) -> AppBuilder {
+        self.id = Some(id);
+        self
+    }
+
+    /// Sensing requirement: a sensor kind, a designated `DeviceId`, or a
+    /// `SourceReq` (defaults to `SourceReq::Any`).
+    pub fn source(mut self, source: impl Into<SourceReq>) -> AppBuilder {
+        self.source = source.into();
+        self
+    }
+
+    /// The zoo model to execute.
+    pub fn model(mut self, model: ModelName) -> AppBuilder {
+        self.model = Some(model_by_name(model).clone());
+        self
+    }
+
+    /// A custom model graph (tests, future zoo extensions).
+    pub fn model_graph(mut self, model: ModelGraph) -> AppBuilder {
+        self.model = Some(model);
+        self
+    }
+
+    /// Interaction requirement: an interaction kind, a designated
+    /// `DeviceId`, or a `TargetReq` (defaults to `TargetReq::Any`).
+    pub fn target(mut self, target: impl Into<TargetReq>) -> AppBuilder {
+        self.target = target.into();
+        self
+    }
+
+    /// Quality-of-service hints (defaults to no floor / no budget /
+    /// normal priority).
+    pub fn qos(mut self, qos: Qos) -> AppBuilder {
+        self.qos = qos;
+        self
+    }
+
+    /// Validate, register, and orchestrate. Returns a handle on success;
+    /// on failure nothing is registered and the previous deployment stays
+    /// in place.
+    pub fn register(self) -> Result<AppHandle, RuntimeError> {
+        if self.name.trim().is_empty() {
+            return Err(RuntimeError::InvalidApp {
+                name: self.name,
+                reason: "app name must be non-empty".into(),
+            });
+        }
+        let model = self.model.ok_or_else(|| RuntimeError::InvalidApp {
+            name: self.name.clone(),
+            reason: "no model: call .model(ModelName) or .model_graph(...)".into(),
+        })?;
+        let (name, id, source, target) = (self.name, self.id, self.source, self.target);
+        super::runtime::register_locked(&self.shared, self.qos, move |core| PipelineSpec {
+            id: PipelineId(id.unwrap_or_else(|| core.next_app_id())),
+            name,
+            source,
+            model,
+            target,
+        })
+    }
+}
+
+/// Lifecycle handle for a registered app. Handles are cheap to clone and
+/// stay valid across replans; operations on an unregistered app return
+/// [`RuntimeError::UnknownApp`].
+#[derive(Clone)]
+pub struct AppHandle {
+    pub(crate) shared: Arc<Mutex<Shared>>,
+    pub(crate) id: PipelineId,
+    pub(crate) name: String,
+}
+
+impl AppHandle {
+    pub fn id(&self) -> PipelineId {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Exclude this app from the active plan (one replan over the rest).
+    pub fn pause(&self) -> Result<(), RuntimeError> {
+        let mut guard = self.shared.lock().unwrap();
+        let Shared { core, planner } = &mut *guard;
+        core.set_paused(self.id, true, planner.as_ref())
+    }
+
+    /// Rejoin the active plan (one replan).
+    pub fn resume(&self) -> Result<(), RuntimeError> {
+        let mut guard = self.shared.lock().unwrap();
+        let Shared { core, planner } = &mut *guard;
+        core.set_paused(self.id, false, planner.as_ref())
+    }
+
+    /// Remove the app entirely (one replan; deployment cleared when this
+    /// was the last active app).
+    pub fn unregister(self) -> Result<(), RuntimeError> {
+        let mut guard = self.shared.lock().unwrap();
+        let Shared { core, planner } = &mut *guard;
+        core.remove(self.id, planner.as_ref())
+    }
+
+    /// This app's view of the current deployment: placement, estimated
+    /// rate/latency, and QoS standing.
+    pub fn stats(&self) -> Result<AppStats, RuntimeError> {
+        self.shared.lock().unwrap().core.app_stats(self.id)
+    }
+}
+
+impl std::fmt::Debug for AppHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AppHandle")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .finish()
+    }
+}

@@ -1,0 +1,238 @@
+//! Execution backends: one `run()` entry point for simulated and real
+//! inference.
+//!
+//! The paper's runtime executes a deployment either on the cycle-accurate
+//! device-model simulator (on-body timing claims) or for real through PJRT
+//! (numerics). The seed exposed those as two unrelated call paths
+//! (`scheduler::simulate` vs `coordinator::serve` with hand-carried
+//! state); `ExecutionBackend` unifies them behind
+//! [`crate::api::SynergyRuntime::run`].
+
+use crate::device::Fleet;
+use crate::pipeline::{PipelineId, PipelineSpec};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Manifest;
+
+use super::core::Deployment;
+use super::error::RuntimeError;
+
+/// Parameters for one `run()` call, backend-independent.
+#[derive(Clone, Copy, Debug)]
+pub struct RunConfig {
+    /// Continuous-inference runs per app.
+    pub runs: usize,
+    /// In-flight runs per app (2 = double-buffered inter-run overlap);
+    /// PJRT serving only.
+    pub max_inflight: usize,
+    /// Verify split outputs against whole-model execution; PJRT only.
+    pub verify: bool,
+    /// Seed for synthetic sensor frames / ground-truth jitter.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            runs: 24,
+            max_inflight: 2,
+            verify: true,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-app results of one run (populated by backends that measure
+/// per-pipeline, i.e. PJRT serving).
+#[derive(Clone, Debug)]
+pub struct AppRunStats {
+    pub app: PipelineId,
+    pub name: String,
+    pub completions: usize,
+    pub mean_latency_s: f64,
+    /// Max |split − full| output deviation (verification), PJRT only.
+    pub max_split_err: Option<f64>,
+}
+
+/// Backend-independent run results.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Which backend produced this report.
+    pub backend: &'static str,
+    /// Completed app runs across all apps.
+    pub completions: usize,
+    /// Inferences per second (simulated clock or wall clock, per backend).
+    pub throughput: f64,
+    /// Mean end-to-end latency, seconds.
+    pub avg_latency_s: f64,
+    /// Mean power draw, watts (simulator only — a server CPU cannot
+    /// impersonate a MAX78000's power rails).
+    pub power_w: Option<f64>,
+    /// Total energy, joules (simulator only).
+    pub energy_j: Option<f64>,
+    /// Real elapsed wall-clock seconds (PJRT only).
+    pub wall_s: Option<f64>,
+    /// Whether split execution matched whole-model execution (PJRT with
+    /// `verify` only).
+    pub verified: Option<bool>,
+    /// Per-app breakdown (PJRT only; empty for the simulator).
+    pub per_app: Vec<AppRunStats>,
+}
+
+/// Executes a deployment: the simulator or the real PJRT serving loop.
+pub trait ExecutionBackend {
+    fn name(&self) -> &'static str;
+
+    fn run(
+        &self,
+        deployment: &Deployment,
+        apps: &[PipelineSpec],
+        fleet: &Fleet,
+        cfg: &RunConfig,
+    ) -> Result<RunReport, RuntimeError>;
+}
+
+/// Simulator configuration shared by [`SimBackend`] and
+/// [`crate::api::RuntimeCore::simulate`]: warmup covers pipeline fill,
+/// capped so short runs still measure something.
+pub(crate) fn sim_config(runs: usize, policy: crate::scheduler::Policy) -> crate::scheduler::SimConfig {
+    crate::scheduler::SimConfig {
+        runs,
+        warmup: (runs / 6).min(4),
+        policy,
+        record_trace: false,
+    }
+}
+
+/// Cycle-accurate device-model simulation (§IV-F DES over the ground-truth
+/// hardware model) — the default backend; needs no artifacts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimBackend;
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run(
+        &self,
+        deployment: &Deployment,
+        apps: &[PipelineSpec],
+        fleet: &Fleet,
+        cfg: &RunConfig,
+    ) -> Result<RunReport, RuntimeError> {
+        use crate::scheduler::{simulate, GroundTruth};
+        let gt = GroundTruth::with_seed(cfg.seed);
+        let rep = simulate(
+            &deployment.plan,
+            apps,
+            fleet,
+            &gt,
+            sim_config(cfg.runs, deployment.policy),
+        );
+        Ok(RunReport {
+            backend: self.name(),
+            completions: rep.completions,
+            throughput: rep.throughput,
+            avg_latency_s: rep.avg_latency,
+            power_w: Some(rep.power_w),
+            energy_j: Some(rep.energy_j),
+            wall_s: None,
+            verified: None,
+            per_app: Vec::new(),
+        })
+    }
+}
+
+/// Real inference through the PJRT serving loop (per-device worker
+/// threads, mpsc radio links, AOT-compiled HLO chunks). Requires
+/// `make artifacts` and the `pjrt` cargo feature.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    manifest: Manifest,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new(manifest: Manifest) -> PjrtBackend {
+        PjrtBackend { manifest }
+    }
+
+    /// Load the artifact manifest from a directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<PjrtBackend, RuntimeError> {
+        let manifest = Manifest::load(dir).map_err(|e| RuntimeError::Backend {
+            backend: "pjrt",
+            message: format!("{e:#}"),
+        })?;
+        Ok(PjrtBackend { manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(
+        &self,
+        deployment: &Deployment,
+        apps: &[PipelineSpec],
+        fleet: &Fleet,
+        cfg: &RunConfig,
+    ) -> Result<RunReport, RuntimeError> {
+        use crate::coordinator::serve::{serve, ServeConfig};
+        let rep = serve(
+            deployment,
+            apps,
+            fleet,
+            &self.manifest,
+            ServeConfig {
+                runs: cfg.runs,
+                max_inflight: cfg.max_inflight,
+                verify: cfg.verify,
+                seed: cfg.seed,
+            },
+        )
+        .map_err(|e| RuntimeError::Backend {
+            backend: "pjrt",
+            message: format!("{e:#}"),
+        })?;
+        let per_app: Vec<AppRunStats> = rep
+            .per_pipeline
+            .iter()
+            .zip(apps)
+            .map(|(p, spec)| AppRunStats {
+                app: spec.id,
+                name: p.name.clone(),
+                completions: p.completions,
+                mean_latency_s: p.mean_latency_s,
+                max_split_err: cfg.verify.then_some(p.max_split_err),
+            })
+            .collect();
+        let total: usize = per_app.iter().map(|p| p.completions).sum();
+        let avg_latency_s = if total > 0 {
+            per_app
+                .iter()
+                .map(|p| p.mean_latency_s * p.completions as f64)
+                .sum::<f64>()
+                / total as f64
+        } else {
+            0.0
+        };
+        Ok(RunReport {
+            backend: self.name(),
+            completions: rep.completions,
+            throughput: rep.throughput,
+            avg_latency_s,
+            power_w: None,
+            energy_j: None,
+            wall_s: Some(rep.wall_s),
+            verified: cfg.verify.then_some(rep.verified),
+            per_app,
+        })
+    }
+}

@@ -1,0 +1,364 @@
+//! The runtime core: app registry, fleet, deployment, and event-driven
+//! re-orchestration.
+//!
+//! `RuntimeCore` is the planner-agnostic heart shared by the public
+//! [`crate::api::SynergyRuntime`] facade and the
+//! [`crate::coordinator::Moderator`] compatibility shim. It owns the app
+//! entries (spec + QoS + paused flag), the fleet, the current
+//! [`Deployment`], the incremental plan cache, and the event bus; every
+//! mutation that changes the set of active apps or the fleet triggers
+//! exactly one re-orchestration (§III-C).
+
+use crate::device::Fleet;
+use crate::estimator::{estimate_plan, LatencyModel, PlanEstimate};
+use crate::orchestrator::Planner;
+use crate::pipeline::{PipelineId, PipelineSpec};
+use crate::plan::{CollabPlan, ExecutionPlan};
+use crate::scheduler::{simulate, GroundTruth, Policy, SimReport};
+
+use super::error::RuntimeError;
+use super::events::{EventBus, RuntimeEvent};
+use super::qos::{Qos, QosViolation};
+use super::replan::{select_with_cache, PlanCache, ReplanStats};
+
+/// A selected + checked holistic collaboration plan, ready to deploy.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub plan: CollabPlan,
+    pub policy: Policy,
+    pub estimate: PlanEstimate,
+}
+
+/// Per-app view of the current deployment (see [`super::AppHandle::stats`]).
+#[derive(Clone, Debug)]
+pub struct AppStats {
+    pub app: PipelineId,
+    pub name: String,
+    pub paused: bool,
+    pub qos: Qos,
+    /// The app's execution plan within the active deployment.
+    pub plan: Option<ExecutionPlan>,
+    /// Estimated steady-state per-app inference rate, Hz.
+    pub est_rate_hz: Option<f64>,
+    /// Estimated end-to-end latency (sense start → interact end), seconds.
+    pub est_latency_s: Option<f64>,
+    /// How the current estimate falls short of the QoS hints, if it does.
+    pub qos_violation: Option<QosViolation>,
+}
+
+struct AppEntry {
+    spec: PipelineSpec,
+    qos: Qos,
+    paused: bool,
+}
+
+/// The planner-agnostic runtime core.
+pub struct RuntimeCore {
+    fleet: Fleet,
+    apps: Vec<AppEntry>,
+    /// Specs covered by the current deployment (registration order,
+    /// paused apps excluded); index-aligned with `deployment.plan.plans`.
+    active: Vec<PipelineSpec>,
+    /// High-water mark for auto-assigned ids (never reused, so stale
+    /// cloned handles of unregistered apps cannot alias a new app; a
+    /// caller who pins ids explicitly manages that aliasing themselves).
+    next_id: usize,
+    deployment: Option<Deployment>,
+    cache: PlanCache,
+    events: EventBus,
+    orchestrations: usize,
+    last_replan: Option<ReplanStats>,
+    cache_hits: usize,
+    enumerations: usize,
+}
+
+impl RuntimeCore {
+    pub fn new(fleet: Fleet) -> RuntimeCore {
+        RuntimeCore {
+            fleet,
+            apps: Vec::new(),
+            active: Vec::new(),
+            next_id: 0,
+            deployment: None,
+            cache: PlanCache::new(),
+            events: EventBus::default(),
+            orchestrations: 0,
+            last_replan: None,
+            cache_hits: 0,
+            enumerations: 0,
+        }
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Specs in the current deployment (paused apps excluded).
+    pub fn active_apps(&self) -> &[PipelineSpec] {
+        &self.active
+    }
+
+    pub fn deployment(&self) -> Option<&Deployment> {
+        self.deployment.as_ref()
+    }
+
+    /// Orchestrations performed (every app/fleet change triggers exactly
+    /// one).
+    pub fn orchestrations(&self) -> usize {
+        self.orchestrations
+    }
+
+    /// Enumeration bookkeeping of the most recent replan.
+    pub fn last_replan(&self) -> Option<ReplanStats> {
+        self.last_replan
+    }
+
+    /// Cumulative (cache-hit, enumeration) app counts across all replans.
+    pub fn cache_counters(&self) -> (usize, usize) {
+        (self.cache_hits, self.enumerations)
+    }
+
+    pub fn subscribe(&mut self) -> std::sync::mpsc::Receiver<RuntimeEvent> {
+        self.events.subscribe()
+    }
+
+    /// One past the largest pipeline id ever registered (for builder
+    /// auto-assignment). Auto-assigned ids are never reused, so a stale
+    /// handle of an unregistered auto-id app can never act on a later
+    /// app; explicitly pinned ids ([`super::AppBuilder::id`]) opt out of
+    /// that guarantee.
+    pub fn next_app_id(&self) -> usize {
+        self.next_id
+    }
+
+    fn entry(&self, id: PipelineId) -> Result<usize, RuntimeError> {
+        self.apps
+            .iter()
+            .position(|a| a.spec.id == id)
+            .ok_or(RuntimeError::UnknownApp(id))
+    }
+
+    /// Register an app; triggers one re-orchestration. Registration is
+    /// atomic: on planning failure the app is rolled back and the previous
+    /// deployment stays in place.
+    pub fn register(
+        &mut self,
+        spec: PipelineSpec,
+        qos: Qos,
+        planner: &dyn Planner,
+    ) -> Result<(), RuntimeError> {
+        if self.apps.iter().any(|a| a.spec.id == spec.id) {
+            return Err(RuntimeError::DuplicateApp(spec.id));
+        }
+        let id = spec.id;
+        self.apps.push(AppEntry { spec, qos, paused: false });
+        if let Err(e) = self.orchestrate(planner) {
+            self.apps.pop();
+            self.cache.invalidate_app(id);
+            // `active` still lists the failed app; rebuild it.
+            self.rebuild_active();
+            return Err(e);
+        }
+        self.next_id = self.next_id.max(id.0 + 1);
+        self.events.emit(RuntimeEvent::AppRegistered { app: id });
+        Ok(())
+    }
+
+    /// Remove an app; triggers one re-orchestration (deployment cleared
+    /// when no active apps remain). Unknown ids are a typed error, not a
+    /// silent no-op.
+    pub fn remove(&mut self, id: PipelineId, planner: &dyn Planner) -> Result<(), RuntimeError> {
+        let idx = self.entry(id)?;
+        self.apps.remove(idx);
+        self.cache.invalidate_app(id);
+        self.events.emit(RuntimeEvent::AppUnregistered { app: id });
+        if let Err(e) = self.orchestrate(planner) {
+            // The stale deployment still covers the removed app — drop it.
+            self.deployment = None;
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Pause or resume an app; triggers one re-orchestration over the new
+    /// active set. Reverted on planning failure.
+    pub fn set_paused(
+        &mut self,
+        id: PipelineId,
+        paused: bool,
+        planner: &dyn Planner,
+    ) -> Result<(), RuntimeError> {
+        let idx = self.entry(id)?;
+        if self.apps[idx].paused == paused {
+            return Ok(());
+        }
+        self.apps[idx].paused = paused;
+        if let Err(e) = self.orchestrate(planner) {
+            self.apps[idx].paused = !paused;
+            self.rebuild_active();
+            return Err(e);
+        }
+        self.events.emit(if paused {
+            RuntimeEvent::AppPaused { app: id }
+        } else {
+            RuntimeEvent::AppResumed { app: id }
+        });
+        Ok(())
+    }
+
+    /// Replace the fleet (device churn); emits join/leave events and
+    /// triggers one re-orchestration. On planning failure the stale
+    /// deployment is cleared (it may reference departed devices). An id
+    /// whose platform changed in place (e.g. a MAX78002 upgrade) emits a
+    /// leave followed by a join for that id.
+    pub fn set_fleet(&mut self, fleet: Fleet, planner: &dyn Planner) -> Result<(), RuntimeError> {
+        let (old, new) = (self.fleet.len(), fleet.len());
+        for i in new..old {
+            self.events.emit(RuntimeEvent::DeviceLeft {
+                device: crate::device::DeviceId(i),
+            });
+        }
+        for i in 0..old.min(new) {
+            let (a, b) = (&self.fleet.devices[i], &fleet.devices[i]);
+            if a.spec != b.spec || a.sensors != b.sensors || a.interactions != b.interactions {
+                self.events.emit(RuntimeEvent::DeviceLeft {
+                    device: crate::device::DeviceId(i),
+                });
+                self.events.emit(RuntimeEvent::DeviceJoined {
+                    device: crate::device::DeviceId(i),
+                });
+            }
+        }
+        for i in old..new {
+            self.events.emit(RuntimeEvent::DeviceJoined {
+                device: crate::device::DeviceId(i),
+            });
+        }
+        self.fleet = fleet;
+        if let Err(e) = self.orchestrate(planner) {
+            self.deployment = None;
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn rebuild_active(&mut self) {
+        self.active = self
+            .apps
+            .iter()
+            .filter(|a| !a.paused)
+            .map(|a| a.spec.clone())
+            .collect();
+    }
+
+    /// Run holistic orchestration over the active apps + fleet. Uses the
+    /// incremental path when the planner exposes a progressive
+    /// configuration; leaves the previous deployment untouched on failure.
+    pub fn orchestrate(&mut self, planner: &dyn Planner) -> Result<(), RuntimeError> {
+        self.rebuild_active();
+        if self.active.is_empty() {
+            self.deployment = None;
+            return Ok(());
+        }
+        self.orchestrations += 1;
+
+        let (plan, stats) = if let Some(pp) = planner.as_progressive() {
+            self.cache.sync_fleet(&self.fleet, pp.cfg);
+            let prios: Vec<_> = self
+                .apps
+                .iter()
+                .filter(|a| !a.paused)
+                .map(|a| a.qos.priority)
+                .collect();
+            let (res, stats) =
+                select_with_cache(pp, &self.active, &prios, &self.fleet, &mut self.cache);
+            (res?, stats)
+        } else {
+            let plan = planner.plan(&self.active, &self.fleet)?;
+            let stats = ReplanStats {
+                enumerated_apps: self.active.len(),
+                ..ReplanStats::default()
+            };
+            (plan, stats)
+        };
+        debug_assert!(plan.check_runnable(&self.active, &self.fleet).is_ok());
+
+        let lm = LatencyModel::new(&self.fleet);
+        let estimate = estimate_plan(&plan, &self.active, &self.fleet, &lm);
+        self.cache_hits += stats.reused_apps;
+        self.enumerations += stats.enumerated_apps;
+        self.last_replan = Some(stats);
+
+        // QoS degradation notifications: each app completes once per
+        // unified round, so per-app rate = system throughput / #apps.
+        let per_app_rate = estimate.throughput / self.active.len() as f64;
+        for (i, spec) in self.active.iter().enumerate() {
+            let qos = self
+                .apps
+                .iter()
+                .find(|a| a.spec.id == spec.id)
+                .map(|a| a.qos)
+                .unwrap_or_default();
+            if let Some(violation) = qos.check(per_app_rate, estimate.chain_latency[i]) {
+                self.events.emit(RuntimeEvent::PlanDegraded {
+                    app: spec.id,
+                    violation,
+                });
+            }
+        }
+
+        self.events.emit(RuntimeEvent::Replanned {
+            orchestration: self.orchestrations,
+            apps: self.active.len(),
+            incremental: stats.incremental(),
+            throughput: estimate.throughput,
+        });
+        self.deployment = Some(Deployment {
+            plan,
+            policy: planner.exec_policy(),
+            estimate,
+        });
+        Ok(())
+    }
+
+    /// Per-app deployment view.
+    pub fn app_stats(&self, id: PipelineId) -> Result<AppStats, RuntimeError> {
+        let entry = &self.apps[self.entry(id)?];
+        let active_idx = self.active.iter().position(|s| s.id == id);
+        let (plan, est_rate, est_latency) = match (&self.deployment, active_idx) {
+            (Some(dep), Some(i)) => (
+                dep.plan.plans.iter().find(|p| p.pipeline == id).cloned(),
+                Some(dep.estimate.throughput / self.active.len() as f64),
+                Some(dep.estimate.chain_latency[i]),
+            ),
+            _ => (None, None, None),
+        };
+        let qos_violation = match (est_rate, est_latency) {
+            (Some(r), Some(l)) => entry.qos.check(r, l),
+            _ => None,
+        };
+        Ok(AppStats {
+            app: id,
+            name: entry.spec.name.clone(),
+            paused: entry.paused,
+            qos: entry.qos,
+            plan,
+            est_rate_hz: est_rate,
+            est_latency_s: est_latency,
+            qos_violation,
+        })
+    }
+
+    /// Execute the current deployment on the simulated hardware.
+    pub fn simulate(&self, runs: usize, seed: u64) -> Option<SimReport> {
+        let dep = self.deployment.as_ref()?;
+        let gt = GroundTruth::with_seed(seed);
+        Some(simulate(
+            &dep.plan,
+            &self.active,
+            &self.fleet,
+            &gt,
+            super::backend::sim_config(runs, dep.policy),
+        ))
+    }
+}

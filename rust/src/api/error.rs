@@ -1,0 +1,65 @@
+//! Typed runtime errors.
+//!
+//! Every fallible operation on [`crate::api::SynergyRuntime`] (and on the
+//! [`crate::coordinator::Moderator`] shim) returns `RuntimeError` — the
+//! seed's `assert!`-on-duplicate and silent no-op-on-unknown-app paths are
+//! gone. `PlanError` (OOR / unsatisfiable requirements, §IV-D) converts
+//! transparently so callers can still match on planning outcomes.
+
+use crate::orchestrator::PlanError;
+use crate::pipeline::PipelineId;
+
+/// Why a runtime operation failed.
+#[derive(Clone, Debug, thiserror::Error)]
+pub enum RuntimeError {
+    /// An app with this pipeline id is already registered.
+    #[error("duplicate app id {0}: an app with this pipeline id is already registered")]
+    DuplicateApp(PipelineId),
+
+    /// No registered app has this pipeline id.
+    #[error("unknown app id {0}: no such app is registered")]
+    UnknownApp(PipelineId),
+
+    /// The app specification is incomplete or inconsistent.
+    #[error("invalid app {name:?}: {reason}")]
+    InvalidApp { name: String, reason: String },
+
+    /// Holistic orchestration failed (OOR or unsatisfiable requirements).
+    #[error(transparent)]
+    Plan(#[from] PlanError),
+
+    /// The requested fleet change cannot be expressed on this fleet.
+    #[error("unsupported fleet change: {0}")]
+    FleetChange(String),
+
+    /// No deployment is active (no apps registered, or all paused).
+    #[error("no active deployment: register (or resume) at least one app first")]
+    NoDeployment,
+
+    /// The execution backend failed.
+    #[error("backend {backend}: {message}")]
+    Backend {
+        backend: &'static str,
+        message: String,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_errors_convert_transparently() {
+        let e: RuntimeError = PlanError::Oor { pipeline: "kws".into() }.into();
+        assert!(matches!(e, RuntimeError::Plan(PlanError::Oor { .. })));
+        assert!(format!("{e}").contains("OOR"));
+    }
+
+    #[test]
+    fn display_names_the_offending_app() {
+        let e = RuntimeError::DuplicateApp(PipelineId(3));
+        assert!(format!("{e}").contains("p3"));
+        let e = RuntimeError::UnknownApp(PipelineId(7));
+        assert!(format!("{e}").contains("p7"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Runtime events: apps observe orchestration instead of polling.
+//!
+//! Every structural change the moderator reacts to (§III-C: app
+//! registration, device churn) produces events on a broadcast channel.
+//! Subscribers get an `mpsc::Receiver`; dropped receivers are pruned on the
+//! next emit, so subscriptions need no explicit teardown.
+
+use std::sync::mpsc;
+
+use crate::device::DeviceId;
+use crate::pipeline::PipelineId;
+
+use super::qos::QosViolation;
+
+/// What happened inside the runtime.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RuntimeEvent {
+    /// A device joined the on-body fleet.
+    DeviceJoined { device: DeviceId },
+    /// A device left the on-body fleet.
+    DeviceLeft { device: DeviceId },
+    /// An app was registered.
+    AppRegistered { app: PipelineId },
+    /// An app was unregistered.
+    AppUnregistered { app: PipelineId },
+    /// An app was paused (excluded from the active plan).
+    AppPaused { app: PipelineId },
+    /// A paused app was resumed.
+    AppResumed { app: PipelineId },
+    /// Holistic orchestration selected a new deployment.
+    Replanned {
+        /// Orchestration counter (monotonically increasing).
+        orchestration: usize,
+        /// Apps covered by the new plan.
+        apps: usize,
+        /// Whether every app's plan enumeration came from the incremental
+        /// cache (no re-enumeration was needed).
+        incremental: bool,
+        /// The new plan's estimated system throughput, inf/s.
+        throughput: f64,
+    },
+    /// The newly selected plan's estimate violates an app's QoS hints.
+    PlanDegraded {
+        app: PipelineId,
+        violation: QosViolation,
+    },
+}
+
+/// Broadcast fan-out of [`RuntimeEvent`]s to any number of subscribers.
+#[derive(Default)]
+pub(crate) struct EventBus {
+    subscribers: Vec<mpsc::Sender<RuntimeEvent>>,
+}
+
+impl EventBus {
+    /// Open a new subscription.
+    pub fn subscribe(&mut self) -> mpsc::Receiver<RuntimeEvent> {
+        let (tx, rx) = mpsc::channel();
+        self.subscribers.push(tx);
+        rx
+    }
+
+    /// Deliver an event to all live subscribers, pruning dead ones.
+    pub fn emit(&mut self, event: RuntimeEvent) {
+        self.subscribers.retain(|s| s.send(event.clone()).is_ok());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subscribers_receive_events() {
+        let mut bus = EventBus::default();
+        let rx = bus.subscribe();
+        bus.emit(RuntimeEvent::DeviceJoined { device: DeviceId(2) });
+        assert_eq!(
+            rx.try_recv().unwrap(),
+            RuntimeEvent::DeviceJoined { device: DeviceId(2) }
+        );
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn dropped_subscribers_are_pruned() {
+        let mut bus = EventBus::default();
+        let rx = bus.subscribe();
+        drop(rx);
+        let rx2 = bus.subscribe();
+        bus.emit(RuntimeEvent::AppRegistered { app: PipelineId(0) });
+        assert!(rx2.try_recv().is_ok());
+    }
+}

@@ -1,0 +1,46 @@
+//! The unified runtime API: a [`SynergyRuntime`] session facade over the
+//! device-agnostic programming interface (§IV-B).
+//!
+//! The paper's core interface promise is that apps describe *what* they
+//! need (a sensor, a model, an interaction, a quality floor) and the
+//! system decides *where* everything runs. This module is that surface:
+//!
+//! - [`SynergyRuntime`] owns the fleet, the planner, and the execution
+//!   backend; [`RuntimeBuilder`] configures all three.
+//! - [`AppBuilder`] registers apps fluently
+//!   (`runtime.app("kws").source(Sensor::Microphone).model(ModelName::KWS)
+//!   .target(Interaction::Haptic).qos(...).register()?`) and returns an
+//!   [`AppHandle`] with lifecycle methods (`pause`, `resume`,
+//!   `unregister`, `stats`).
+//! - [`RuntimeError`] types every failure (no panics, no silent no-ops).
+//! - [`RuntimeEvent`] streams orchestration to subscribers — device churn,
+//!   replans, QoS degradations — instead of making apps poll.
+//! - Re-orchestration is *incremental*: per-app plan enumerations are
+//!   cached and reused across app and fleet changes ([`replan`]).
+//! - [`ExecutionBackend`] unifies simulated ([`SimBackend`]) and real
+//!   PJRT ([`PjrtBackend`]) inference behind [`SynergyRuntime::run`].
+
+pub mod app;
+pub mod backend;
+pub mod core;
+pub mod error;
+pub mod events;
+pub mod qos;
+pub mod replan;
+
+mod runtime;
+
+pub use self::app::{AppBuilder, AppHandle};
+#[cfg(feature = "pjrt")]
+pub use self::backend::PjrtBackend;
+pub use self::backend::{AppRunStats, ExecutionBackend, RunConfig, RunReport, SimBackend};
+pub use self::core::{AppStats, Deployment, RuntimeCore};
+pub use self::error::RuntimeError;
+pub use self::events::RuntimeEvent;
+pub use self::qos::{AppPriority, Qos, QosViolation};
+pub use self::replan::ReplanStats;
+pub use self::runtime::{RuntimeBuilder, RuntimeStats, SynergyRuntime};
+
+// Capability vocabulary under the names the app interface reads best with:
+// `.source(Sensor::Microphone)`, `.target(Interaction::Haptic)`.
+pub use crate::device::{InteractionKind as Interaction, SensorKind as Sensor};

@@ -1,0 +1,117 @@
+//! Per-app quality-of-service hints.
+//!
+//! The device-agnostic interface (§IV-B) gives the system visibility over
+//! each app's resource use; QoS hints close the loop in the other
+//! direction, letting apps tell the runtime what "good enough" means.
+//! Hints influence planning order (higher-priority apps pick placements
+//! first, the progressive accumulation's strongest lever) and drive
+//! [`crate::api::RuntimeEvent::PlanDegraded`] notifications whenever a
+//! replan's estimate falls below an app's floor.
+
+/// Planning priority class. Within the progressive accumulation, apps are
+/// grouped by descending priority; the planner's data-intensity ordering
+/// applies within each class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AppPriority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+/// Quality-of-service hints for one app.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Qos {
+    /// Minimum acceptable steady-state inference rate in Hz
+    /// (0.0 = no floor).
+    pub min_rate_hz: f64,
+    /// End-to-end latency budget in milliseconds, sensing start to
+    /// interaction end (`f64::INFINITY` = unbounded).
+    pub latency_budget_ms: f64,
+    /// Planning priority relative to other apps.
+    pub priority: AppPriority,
+}
+
+impl Default for Qos {
+    fn default() -> Qos {
+        Qos {
+            min_rate_hz: 0.0,
+            latency_budget_ms: f64::INFINITY,
+            priority: AppPriority::Normal,
+        }
+    }
+}
+
+/// How a deployed plan's estimate falls short of an app's QoS hints.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QosViolation {
+    /// Estimated steady-state rate is below the requested floor.
+    RateBelowFloor { est_hz: f64, min_hz: f64 },
+    /// Estimated end-to-end latency exceeds the budget.
+    LatencyOverBudget { est_ms: f64, budget_ms: f64 },
+}
+
+impl std::fmt::Display for QosViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QosViolation::RateBelowFloor { est_hz, min_hz } => {
+                write!(f, "estimated {est_hz:.2} Hz < requested {min_hz:.2} Hz")
+            }
+            QosViolation::LatencyOverBudget { est_ms, budget_ms } => {
+                write!(f, "estimated {est_ms:.1} ms > budget {budget_ms:.1} ms")
+            }
+        }
+    }
+}
+
+impl Qos {
+    /// Check an estimated (rate, latency) pair against the hints. Rate
+    /// violations outrank latency violations when both hold.
+    pub fn check(&self, est_rate_hz: f64, est_latency_s: f64) -> Option<QosViolation> {
+        if self.min_rate_hz > 0.0 && est_rate_hz < self.min_rate_hz {
+            return Some(QosViolation::RateBelowFloor {
+                est_hz: est_rate_hz,
+                min_hz: self.min_rate_hz,
+            });
+        }
+        let est_ms = est_latency_s * 1e3;
+        if est_ms > self.latency_budget_ms {
+            return Some(QosViolation::LatencyOverBudget {
+                est_ms,
+                budget_ms: self.latency_budget_ms,
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_qos_is_never_violated() {
+        let q = Qos::default();
+        assert_eq!(q.check(1e-9, 1e9), None);
+    }
+
+    #[test]
+    fn rate_floor_and_latency_budget() {
+        let q = Qos { min_rate_hz: 10.0, latency_budget_ms: 50.0, ..Qos::default() };
+        assert!(matches!(
+            q.check(5.0, 0.01),
+            Some(QosViolation::RateBelowFloor { .. })
+        ));
+        assert!(matches!(
+            q.check(20.0, 0.2),
+            Some(QosViolation::LatencyOverBudget { .. })
+        ));
+        assert_eq!(q.check(20.0, 0.01), None);
+    }
+
+    #[test]
+    fn priority_orders_low_normal_high() {
+        assert!(AppPriority::Low < AppPriority::Normal);
+        assert!(AppPriority::Normal < AppPriority::High);
+    }
+}

@@ -1,0 +1,337 @@
+//! Incremental re-orchestration: per-app plan-enumeration caching.
+//!
+//! The seed moderator re-enumerated every pipeline's execution-plan space
+//! on every change. But the expensive, endpoint-independent part of that
+//! space — the *split skeletons* (device permutations × split boundaries,
+//! chunk-fit filtered; see [`crate::plan::enumerate_splits_with`]) —
+//! depends only on the app's model and the fleet's accelerator lineup, so
+//! it can be cached per app and reused:
+//!
+//! - **App change** (register / remove / pause / resume): the fleet is
+//!   untouched, so every other app's skeletons are reused verbatim; only a
+//!   newly registered app is enumerated.
+//! - **Device left** (suffix shrink — surviving ids and kinds unchanged):
+//!   each cached skeleton list is *filtered* to the surviving devices.
+//!   Because the small fleet's permutations are a subsequence of the large
+//!   fleet's, the filtered list is exactly what fresh enumeration would
+//!   produce, in the same order — selection results are bit-identical.
+//! - **Device joined** (or any other reshape): cached skeletons are
+//!   incomplete (plans through the new device are missing), so the cache
+//!   is invalidated and rebuilt on the next replan.
+//!
+//! Selection itself ([`select_with_cache`]) mirrors the progressive
+//! accumulation of [`ProgressivePlanner::select`] — same ordering, same
+//! scoring, same first-fit-decreasing OOR retry — over the cached
+//! skeletons composed with the (cheaply recomputed) endpoint candidates.
+
+use std::collections::BTreeMap;
+
+use crate::device::{DeviceSpec, Fleet};
+use crate::estimator::{EstimateAccum, LatencyModel};
+use crate::orchestrator::{PlanError, Priority, ProgressivePlanner};
+use crate::pipeline::{PipelineId, PipelineSpec};
+use crate::plan::collab::MemoryLedger;
+use crate::plan::{enumerate_splits_with, Assignment, CollabPlan, EnumerateCfg, ExecutionPlan};
+
+use super::qos::AppPriority;
+
+/// Per-replan bookkeeping: how much enumeration work the cache saved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplanStats {
+    /// Apps whose plan enumeration was served from the cache.
+    pub reused_apps: usize,
+    /// Apps whose plan space had to be (re-)enumerated.
+    pub enumerated_apps: usize,
+    /// Candidate plans scored during selection.
+    pub candidates_scored: u64,
+}
+
+impl ReplanStats {
+    /// An *incremental* replan reused every app's enumeration — typical
+    /// for pause/resume and suffix device departures.
+    pub fn incremental(&self) -> bool {
+        self.reused_apps > 0 && self.enumerated_apps == 0
+    }
+}
+
+/// The per-app skeleton cache plus the fleet signature it is valid for.
+pub(crate) struct PlanCache {
+    /// Full platform spec per dense id the skeletons were enumerated
+    /// against. The whole spec (not just the kind) is compared: `Device`
+    /// fields are public, so a caller can hand-build a device whose kind
+    /// matches a stock platform but whose accelerator capacities differ —
+    /// chunk-fit filtering baked into the skeletons must not survive that.
+    sig: Vec<DeviceSpec>,
+    /// Enumeration limits the skeletons were produced under.
+    cfg: EnumerateCfg,
+    per_app: BTreeMap<PipelineId, Vec<Vec<Assignment>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache {
+            sig: Vec::new(),
+            cfg: EnumerateCfg::default(),
+            per_app: BTreeMap::new(),
+        }
+    }
+
+    /// Reconcile the cache with the current fleet + enumeration config.
+    /// Suffix shrinks filter in place (cache survives); anything else
+    /// invalidates.
+    pub fn sync_fleet(&mut self, fleet: &Fleet, cfg: EnumerateCfg) {
+        let sig: Vec<DeviceSpec> = fleet.devices.iter().map(|d| d.spec.clone()).collect();
+        if cfg != self.cfg {
+            self.per_app.clear();
+            self.cfg = cfg;
+        } else if sig == self.sig {
+            return;
+        } else if sig.len() < self.sig.len() && self.sig[..sig.len()] == sig[..] {
+            // Suffix departure: drop skeletons touching departed devices.
+            let n = sig.len();
+            for skels in self.per_app.values_mut() {
+                skels.retain(|s| s.iter().all(|a| a.device.0 < n));
+            }
+        } else {
+            self.per_app.clear();
+        }
+        self.sig = sig;
+    }
+
+    /// Ensure an entry exists for `spec`; returns whether it was a cache
+    /// hit. Call [`Self::sync_fleet`] first.
+    pub fn ensure(&mut self, spec: &PipelineSpec, fleet: &Fleet) -> bool {
+        if self.per_app.contains_key(&spec.id) {
+            return true;
+        }
+        let mut skels = Vec::new();
+        enumerate_splits_with(spec, fleet, self.cfg, |chunks| skels.push(chunks.to_vec()));
+        self.per_app.insert(spec.id, skels);
+        false
+    }
+
+    pub fn get(&self, id: PipelineId) -> Option<&[Vec<Assignment>]> {
+        self.per_app.get(&id).map(Vec::as_slice)
+    }
+
+    /// Drop one app's entry (unregistration, failed registration).
+    pub fn invalidate_app(&mut self, id: PipelineId) {
+        self.per_app.remove(&id);
+    }
+}
+
+/// Selection order: the planner's priority ordering, stably regrouped so
+/// higher-QoS-priority apps pick placements first.
+fn selection_order(
+    priority: Priority,
+    specs: &[PipelineSpec],
+    prios: &[AppPriority],
+) -> Vec<usize> {
+    let mut order = priority.order(specs);
+    order.sort_by_key(|&i| std::cmp::Reverse(prios[i]));
+    order
+}
+
+/// Progressive selection over cached skeletons. Equivalent to
+/// [`ProgressivePlanner::select`] (same outputs on identical inputs), but
+/// the enumeration work is amortized across replans, and apps carry QoS
+/// priority classes.
+pub(crate) fn select_with_cache(
+    pp: &ProgressivePlanner,
+    specs: &[PipelineSpec],
+    prios: &[AppPriority],
+    fleet: &Fleet,
+    cache: &mut PlanCache,
+) -> (Result<CollabPlan, PlanError>, ReplanStats) {
+    let mut stats = ReplanStats::default();
+    for spec in specs {
+        if cache.ensure(spec, fleet) {
+            stats.reused_apps += 1;
+        } else {
+            stats.enumerated_apps += 1;
+        }
+    }
+
+    let mut result = select_ordered(pp, specs, fleet, cache, &mut stats, {
+        selection_order(pp.priority, specs, prios)
+    });
+    // Greedy accumulation can dead-end; retry once first-fit-decreasing
+    // (mirrors ProgressivePlanner::select).
+    if matches!(result, Err(PlanError::Oor { .. })) && pp.priority != Priority::ModelSizeDesc {
+        result = select_ordered(pp, specs, fleet, cache, &mut stats, {
+            selection_order(Priority::ModelSizeDesc, specs, prios)
+        });
+    }
+    // Keep the planner's own search-effort diagnostic in sync.
+    pp.candidates_scored.set(stats.candidates_scored);
+    (result, stats)
+}
+
+// KEEP IN SYNC with `ProgressivePlanner::select_with_order`
+// (orchestrator/progressive.rs): same Unsatisfiable check, same ledger/
+// accumulator updates, same objective scoring with strict-`>` tie-break.
+// The streaming path must stay allocation-free, so the loop exists twice;
+// `tests::cached_selection_matches_streaming_selection` pins the parity —
+// extend that test when touching either copy.
+fn select_ordered(
+    pp: &ProgressivePlanner,
+    specs: &[PipelineSpec],
+    fleet: &Fleet,
+    cache: &PlanCache,
+    stats: &mut ReplanStats,
+    order: Vec<usize>,
+) -> Result<CollabPlan, PlanError> {
+    let lm = LatencyModel::new(fleet);
+    let mut ledger = MemoryLedger::default();
+    let mut accum = EstimateAccum::new(fleet);
+    let mut selected: Vec<Option<ExecutionPlan>> = vec![None; specs.len()];
+    // Scratch buffers reused across all candidate evaluations.
+    let mut unit_scratch = Vec::with_capacity(16);
+
+    for &i in &order {
+        let spec = &specs[i];
+        let sources = spec.source_candidates(fleet);
+        let targets = spec.target_candidates(fleet);
+        if sources.is_empty() || targets.is_empty() {
+            return Err(PlanError::Unsatisfiable {
+                pipeline: spec.name.clone(),
+            });
+        }
+        let skeletons = cache.get(spec.id).expect("cache entry ensured above");
+        let mut cand = ExecutionPlan {
+            pipeline: spec.id,
+            source_dev: sources[0],
+            target_dev: targets[0],
+            chunks: Vec::new(),
+        };
+        let mut best: Option<(f64, ExecutionPlan)> = None;
+        for skel in skeletons {
+            cand.chunks.clear();
+            cand.chunks.extend_from_slice(skel);
+            // Joint-memory fit is endpoint-independent: check once per
+            // skeleton instead of once per enumerated plan.
+            if !ledger.fits(&cand, &spec.model, fleet) {
+                continue;
+            }
+            for &s in &sources {
+                for &t in &targets {
+                    cand.source_dev = s;
+                    cand.target_dev = t;
+                    stats.candidates_scored += 1;
+                    let est = accum.peek_fast(&cand, spec, fleet, &lm, &mut unit_scratch);
+                    let score = pp.objective.score(&est);
+                    if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+                        best = Some((score, cand.clone()));
+                    }
+                }
+            }
+        }
+        let (_, chosen) = best.ok_or_else(|| PlanError::Oor {
+            pipeline: spec.name.clone(),
+        })?;
+        ledger.commit(&chosen, &spec.model);
+        accum.add_plan(&chosen, spec, fleet, &lm);
+        selected[i] = Some(chosen);
+    }
+
+    Ok(CollabPlan::new(
+        selected.into_iter().map(Option::unwrap).collect(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{model_by_name, ModelName};
+    use crate::orchestrator::Synergy;
+    use crate::pipeline::{SourceReq, TargetReq};
+    use crate::workload::{fleet_n, workload};
+
+    fn any_pipes(models: &[ModelName]) -> Vec<PipelineSpec> {
+        models
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                PipelineSpec::new(
+                    i,
+                    m.as_str(),
+                    SourceReq::Any,
+                    model_by_name(m).clone(),
+                    TargetReq::Any,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cached_selection_matches_streaming_selection() {
+        let pp = Synergy::planner();
+        for fleet in [fleet_n(2), fleet_n(3)] {
+            let ps = any_pipes(&[ModelName::KWS, ModelName::SimpleNet, ModelName::UNet]);
+            let prios = vec![AppPriority::Normal; ps.len()];
+            let mut cache = PlanCache::new();
+            cache.sync_fleet(&fleet, pp.cfg);
+            let (res, stats) = select_with_cache(&pp, &ps, &prios, &fleet, &mut cache);
+            let cached = res.unwrap();
+            let streamed = pp.select(&ps, &fleet).unwrap();
+            assert_eq!(cached, streamed);
+            assert_eq!(stats.enumerated_apps, 3);
+            assert_eq!(stats.reused_apps, 0);
+        }
+    }
+
+    #[test]
+    fn suffix_shrink_keeps_cache_and_matches_fresh_enumeration() {
+        let pp = Synergy::planner();
+        let w = workload(1);
+        let prios = vec![AppPriority::Normal; w.pipelines.len()];
+        let mut cache = PlanCache::new();
+
+        let big = fleet_n(5);
+        cache.sync_fleet(&big, pp.cfg);
+        let (res, _) = select_with_cache(&pp, &w.pipelines, &prios, &big, &mut cache);
+        res.unwrap();
+
+        // Device 4 leaves: the cache filters in place, no re-enumeration…
+        let small = fleet_n(4);
+        cache.sync_fleet(&small, pp.cfg);
+        let (res, stats) = select_with_cache(&pp, &w.pipelines, &prios, &small, &mut cache);
+        let incremental = res.unwrap();
+        assert!(stats.incremental(), "{stats:?}");
+        // …and the selected plan is identical to planning from scratch.
+        assert_eq!(incremental, pp.select(&w.pipelines, &small).unwrap());
+    }
+
+    #[test]
+    fn fleet_growth_invalidates_cache() {
+        let pp = Synergy::planner();
+        let ps = any_pipes(&[ModelName::KWS]);
+        let prios = vec![AppPriority::Normal];
+        let mut cache = PlanCache::new();
+        cache.sync_fleet(&fleet_n(2), pp.cfg);
+        select_with_cache(&pp, &ps, &prios, &fleet_n(2), &mut cache).0.unwrap();
+        cache.sync_fleet(&fleet_n(3), pp.cfg);
+        let (res, stats) = select_with_cache(&pp, &ps, &prios, &fleet_n(3), &mut cache);
+        res.unwrap();
+        assert_eq!(stats.enumerated_apps, 1, "growth must re-enumerate");
+    }
+
+    #[test]
+    fn high_priority_app_plans_first() {
+        // KWS (low data intensity) normally plans after UNet; High priority
+        // regroups it to the front of the selection order.
+        let ps = any_pipes(&[ModelName::KWS, ModelName::UNet]);
+        let normal = selection_order(
+            Priority::DataIntensityDesc,
+            &ps,
+            &[AppPriority::Normal, AppPriority::Normal],
+        );
+        assert_eq!(normal, vec![1, 0]);
+        let boosted = selection_order(
+            Priority::DataIntensityDesc,
+            &ps,
+            &[AppPriority::High, AppPriority::Normal],
+        );
+        assert_eq!(boosted, vec![0, 1]);
+    }
+}

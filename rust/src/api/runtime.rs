@@ -1,0 +1,277 @@
+//! The [`SynergyRuntime`] facade: one object owning fleet, planner, and
+//! execution backend.
+//!
+//! Apps register through the fluent [`super::AppBuilder`]; device churn
+//! goes through [`SynergyRuntime::device_joined`] /
+//! [`SynergyRuntime::device_left`] / [`SynergyRuntime::set_fleet`];
+//! [`SynergyRuntime::run`] executes the current deployment on whichever
+//! [`ExecutionBackend`] the runtime was built with (simulator by default,
+//! PJRT for real inference). Everything observable is also pushed on the
+//! event channel ([`SynergyRuntime::subscribe`]).
+
+use std::sync::{Arc, Mutex};
+
+use crate::device::{Device, DeviceId, Fleet};
+use crate::orchestrator::{Planner, Synergy};
+use crate::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use crate::scheduler::SimReport;
+
+use super::app::{AppBuilder, AppHandle};
+use super::backend::{ExecutionBackend, RunConfig, RunReport, SimBackend};
+use super::core::{Deployment, RuntimeCore};
+use super::error::RuntimeError;
+use super::events::RuntimeEvent;
+use super::qos::Qos;
+use super::replan::ReplanStats;
+
+/// Core + planner behind one lock, shared with [`AppHandle`]s.
+pub(crate) struct Shared {
+    pub(crate) core: RuntimeCore,
+    pub(crate) planner: Box<dyn Planner + Send>,
+}
+
+/// The one registration path (fluent builder and spec-based registration
+/// both land here): lock, build the spec with the core visible (auto-id
+/// assignment needs it), register, hand back a handle.
+pub(crate) fn register_locked(
+    shared: &Arc<Mutex<Shared>>,
+    qos: Qos,
+    make_spec: impl FnOnce(&RuntimeCore) -> PipelineSpec,
+) -> Result<AppHandle, RuntimeError> {
+    let mut guard = shared.lock().unwrap();
+    let Shared { core, planner } = &mut *guard;
+    let spec = make_spec(core);
+    let id = spec.id;
+    let name = spec.name.clone();
+    core.register(spec, qos, planner.as_ref())?;
+    drop(guard);
+    Ok(AppHandle {
+        shared: shared.clone(),
+        id,
+        name,
+    })
+}
+
+/// Aggregate runtime counters (see [`SynergyRuntime::stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeStats {
+    /// Holistic orchestrations performed so far.
+    pub orchestrations: usize,
+    /// Apps served from the plan-enumeration cache, cumulative.
+    pub cache_hits: usize,
+    /// Apps whose plan space was enumerated, cumulative.
+    pub enumerations: usize,
+    /// Enumeration bookkeeping of the most recent replan.
+    pub last_replan: Option<ReplanStats>,
+    /// Apps currently in the active plan.
+    pub active_apps: usize,
+    /// Devices currently on the body.
+    pub devices: usize,
+}
+
+/// The on-body runtime: fleet + planner + execution backend behind the
+/// device-agnostic app interface.
+pub struct SynergyRuntime {
+    shared: Arc<Mutex<Shared>>,
+    backend: Box<dyn ExecutionBackend>,
+}
+
+impl SynergyRuntime {
+    /// A runtime with Synergy's default planner and the simulator backend.
+    pub fn new(fleet: Fleet) -> SynergyRuntime {
+        SynergyRuntime::builder().fleet(fleet).build()
+    }
+
+    pub fn builder() -> RuntimeBuilder {
+        RuntimeBuilder::default()
+    }
+
+    /// Start registering an app (fluent; finish with `.register()`).
+    pub fn app(&self, name: impl Into<String>) -> AppBuilder {
+        AppBuilder {
+            shared: self.shared.clone(),
+            name: name.into(),
+            id: None,
+            source: SourceReq::Any,
+            model: None,
+            target: TargetReq::Any,
+            qos: Qos::default(),
+        }
+    }
+
+    /// Register a pre-built pipeline spec (workload definitions, tests).
+    pub fn register(&self, spec: PipelineSpec) -> Result<AppHandle, RuntimeError> {
+        self.register_with_qos(spec, Qos::default())
+    }
+
+    /// Register a pre-built pipeline spec with QoS hints.
+    pub fn register_with_qos(
+        &self,
+        spec: PipelineSpec,
+        qos: Qos,
+    ) -> Result<AppHandle, RuntimeError> {
+        register_locked(&self.shared, qos, move |_| spec)
+    }
+
+    /// Subscribe to runtime events (device churn, replans, degradations).
+    pub fn subscribe(&self) -> std::sync::mpsc::Receiver<RuntimeEvent> {
+        self.shared.lock().unwrap().core.subscribe()
+    }
+
+    /// The current on-body fleet.
+    pub fn fleet(&self) -> Fleet {
+        self.shared.lock().unwrap().core.fleet().clone()
+    }
+
+    /// Specs covered by the current deployment (paused apps excluded).
+    pub fn apps(&self) -> Vec<PipelineSpec> {
+        self.shared.lock().unwrap().core.active_apps().to_vec()
+    }
+
+    /// The current deployment, if any app is active.
+    pub fn deployment(&self) -> Option<Deployment> {
+        self.shared.lock().unwrap().core.deployment().cloned()
+    }
+
+    /// Aggregate counters: orchestrations, cache effectiveness, sizes.
+    pub fn stats(&self) -> RuntimeStats {
+        let guard = self.shared.lock().unwrap();
+        let (cache_hits, enumerations) = guard.core.cache_counters();
+        RuntimeStats {
+            orchestrations: guard.core.orchestrations(),
+            cache_hits,
+            enumerations,
+            last_replan: guard.core.last_replan(),
+            active_apps: guard.core.active_apps().len(),
+            devices: guard.core.fleet().len(),
+        }
+    }
+
+    /// A device joined the body. Its id must extend the fleet densely
+    /// (`id == fleet.len()`).
+    pub fn device_joined(&self, device: Device) -> Result<(), RuntimeError> {
+        let mut guard = self.shared.lock().unwrap();
+        let Shared { core, planner } = &mut *guard;
+        if device.id.0 != core.fleet().len() {
+            return Err(RuntimeError::FleetChange(format!(
+                "joined device id {} must extend the dense fleet (expected d{})",
+                device.id,
+                core.fleet().len()
+            )));
+        }
+        let mut devices = core.fleet().devices.clone();
+        devices.push(device);
+        core.set_fleet(Fleet::new(devices), planner.as_ref())
+    }
+
+    /// A device left the body. Device ids are dense, so only the
+    /// highest-id device can depart without renumbering; replan over an
+    /// arbitrarily reshaped fleet via [`Self::set_fleet`]. Departure of a
+    /// suffix device keeps the plan-enumeration cache warm — the replan is
+    /// incremental.
+    pub fn device_left(&self, id: DeviceId) -> Result<(), RuntimeError> {
+        let mut guard = self.shared.lock().unwrap();
+        let Shared { core, planner } = &mut *guard;
+        let n = core.fleet().len();
+        if n == 0 || id.0 != n - 1 {
+            return Err(RuntimeError::FleetChange(format!(
+                "device ids are dense: only the last device (d{}) can leave; \
+                 use set_fleet for arbitrary reshapes",
+                n.saturating_sub(1)
+            )));
+        }
+        let mut devices = core.fleet().devices.clone();
+        devices.pop();
+        core.set_fleet(Fleet::new(devices), planner.as_ref())
+    }
+
+    /// Replace the whole fleet (arbitrary churn); triggers one replan.
+    pub fn set_fleet(&self, fleet: Fleet) -> Result<(), RuntimeError> {
+        let mut guard = self.shared.lock().unwrap();
+        let Shared { core, planner } = &mut *guard;
+        core.set_fleet(fleet, planner.as_ref())
+    }
+
+    /// Execute the current deployment on the configured backend — the
+    /// single entry point for simulated and real inference.
+    pub fn run(&self, cfg: &RunConfig) -> Result<RunReport, RuntimeError> {
+        // Snapshot under the lock, execute outside it (PJRT runs can take
+        // a while; handles stay usable meanwhile).
+        let (deployment, apps, fleet) = {
+            let guard = self.shared.lock().unwrap();
+            let dep = guard
+                .core
+                .deployment()
+                .cloned()
+                .ok_or(RuntimeError::NoDeployment)?;
+            (
+                dep,
+                guard.core.active_apps().to_vec(),
+                guard.core.fleet().clone(),
+            )
+        };
+        self.backend.run(&deployment, &apps, &fleet, cfg)
+    }
+
+    /// Execute the current deployment on the device-model simulator,
+    /// regardless of the configured backend (on-body timing estimates
+    /// alongside a PJRT numerics run).
+    pub fn simulate(&self, runs: usize, seed: u64) -> Option<SimReport> {
+        self.shared.lock().unwrap().core.simulate(runs, seed)
+    }
+}
+
+/// Configures and builds a [`SynergyRuntime`].
+pub struct RuntimeBuilder {
+    fleet: Fleet,
+    planner: Box<dyn Planner + Send>,
+    backend: Box<dyn ExecutionBackend>,
+}
+
+impl Default for RuntimeBuilder {
+    fn default() -> RuntimeBuilder {
+        RuntimeBuilder {
+            fleet: Fleet::default(),
+            planner: Box::new(Synergy::planner()),
+            backend: Box::new(SimBackend),
+        }
+    }
+}
+
+impl RuntimeBuilder {
+    /// The on-body device fleet (defaults to empty; apps cannot plan until
+    /// devices join).
+    pub fn fleet(mut self, fleet: Fleet) -> RuntimeBuilder {
+        self.fleet = fleet;
+        self
+    }
+
+    /// The plan-selection method (defaults to Synergy's progressive
+    /// planner, which replans incrementally; baselines replan fully).
+    pub fn planner(mut self, planner: impl Planner + Send + 'static) -> RuntimeBuilder {
+        self.planner = Box::new(planner);
+        self
+    }
+
+    /// Like [`Self::planner`], for already-boxed planners.
+    pub fn planner_boxed(mut self, planner: Box<dyn Planner + Send>) -> RuntimeBuilder {
+        self.planner = planner;
+        self
+    }
+
+    /// The execution backend (defaults to the device-model simulator).
+    pub fn backend(mut self, backend: impl ExecutionBackend + 'static) -> RuntimeBuilder {
+        self.backend = Box::new(backend);
+        self
+    }
+
+    pub fn build(self) -> SynergyRuntime {
+        SynergyRuntime {
+            shared: Arc::new(Mutex::new(Shared {
+                core: RuntimeCore::new(self.fleet),
+                planner: self.planner,
+            })),
+            backend: self.backend,
+        }
+    }
+}

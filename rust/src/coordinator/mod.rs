@@ -1,15 +1,19 @@
-//! §V — the moderator and the real serving loop.
+//! §V — the moderator shim and the real serving loop.
 //!
-//! The [`moderator`] owns the device registry and the registered apps,
-//! re-orchestrates whenever either changes (the only time Python-side work
-//! would ever matter is `make artifacts`, long before this), and records
-//! the deployment. [`serve`] executes a deployment for real: per-device
-//! threads with per-unit work queues, mpsc channels as radio links, and
-//! PJRT inference through the runtime service — the paper's runtime made
-//! concrete on this testbed.
+//! Orchestration state (apps, fleet, deployment, incremental replanning)
+//! lives in [`crate::api::RuntimeCore`]; the [`moderator`] here is a thin
+//! direct-ownership shim over it, kept for callers that don't need
+//! handles, events, or backends. [`serve`] executes a deployment for
+//! real: per-device threads with per-unit work queues, mpsc channels as
+//! radio links, and PJRT inference through the runtime service — the
+//! paper's runtime made concrete on this testbed. New code reaches both
+//! through [`crate::api::SynergyRuntime`] (`run()` with a
+//! [`crate::api::PjrtBackend`]) rather than calling `serve` directly.
 
 pub mod moderator;
+#[cfg(feature = "pjrt")]
 pub mod serve;
 
 pub use moderator::{Deployment, Moderator};
+#[cfg(feature = "pjrt")]
 pub use serve::{serve, ServeConfig, ServeReport};

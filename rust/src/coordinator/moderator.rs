@@ -1,119 +1,85 @@
-//! The moderator (§III-C "moderator-initiated orchestration"): discovers
-//! and manages devices, accepts app registrations through the
-//! device-agnostic interface, and triggers holistic orchestration whenever
-//! apps or device availability change. Once deployed, runtime inference
-//! proceeds without it.
+//! The moderator (§III-C "moderator-initiated orchestration") — now a thin
+//! compatibility shim over [`crate::api::RuntimeCore`].
+//!
+//! The moderator predates the [`crate::api::SynergyRuntime`] facade; it
+//! remains for callers that want a single-owner, generic-planner view
+//! without handles, events, or backends. All orchestration behavior
+//! (incremental re-orchestration included, when the planner is
+//! progressive) lives in the core; the shim adds nothing but the borrow
+//! discipline of `&mut self`. New code should prefer the runtime facade.
 
+use crate::api::{RuntimeCore, RuntimeError};
 use crate::device::Fleet;
-use crate::estimator::{estimate_plan, LatencyModel, PlanEstimate};
-use crate::orchestrator::{PlanError, Planner};
+use crate::orchestrator::Planner;
 use crate::pipeline::{PipelineId, PipelineSpec};
-use crate::plan::CollabPlan;
-use crate::scheduler::{simulate, GroundTruth, Policy, SimConfig, SimReport};
+use crate::scheduler::SimReport;
 
-/// A selected + checked holistic collaboration plan, ready to deploy.
-#[derive(Clone, Debug)]
-pub struct Deployment {
-    pub plan: CollabPlan,
-    pub policy: Policy,
-    pub estimate: PlanEstimate,
-}
+pub use crate::api::Deployment;
 
-/// The orchestration moderator.
+/// The orchestration moderator: a direct-ownership shim over the runtime
+/// core.
 pub struct Moderator<P: Planner> {
-    fleet: Fleet,
+    core: RuntimeCore,
     planner: P,
-    apps: Vec<PipelineSpec>,
-    deployment: Option<Deployment>,
-    /// Orchestrations performed (diagnostics; †every app/fleet change
-    /// triggers exactly one).
-    pub orchestrations: usize,
 }
 
 impl<P: Planner> Moderator<P> {
     pub fn new(fleet: Fleet, planner: P) -> Moderator<P> {
         Moderator {
-            fleet,
+            core: RuntimeCore::new(fleet),
             planner,
-            apps: Vec::new(),
-            deployment: None,
-            orchestrations: 0,
         }
     }
 
     pub fn fleet(&self) -> &Fleet {
-        &self.fleet
+        self.core.fleet()
     }
 
     pub fn apps(&self) -> &[PipelineSpec] {
-        &self.apps
+        self.core.active_apps()
     }
 
     pub fn deployment(&self) -> Option<&Deployment> {
-        self.deployment.as_ref()
+        self.core.deployment()
     }
 
-    /// Register an app pipeline; triggers re-orchestration.
-    pub fn register_app(&mut self, spec: PipelineSpec) -> Result<&Deployment, PlanError> {
-        assert!(
-            self.apps.iter().all(|a| a.id != spec.id),
-            "duplicate pipeline id {:?}",
-            spec.id
-        );
-        self.apps.push(spec);
-        self.orchestrate()
+    /// Orchestrations performed (diagnostics; †every app/fleet change
+    /// triggers exactly one).
+    pub fn orchestrations(&self) -> usize {
+        self.core.orchestrations()
+    }
+
+    /// Register an app pipeline; triggers re-orchestration. Duplicate ids
+    /// are a typed error ([`RuntimeError::DuplicateApp`]), not a panic.
+    pub fn register_app(&mut self, spec: PipelineSpec) -> Result<&Deployment, RuntimeError> {
+        self.core
+            .register(spec, crate::api::Qos::default(), &self.planner)?;
+        Ok(self.core.deployment().expect("deployment after register"))
     }
 
     /// Remove an app; triggers re-orchestration (no-op plan when empty).
-    pub fn remove_app(&mut self, id: PipelineId) -> Result<Option<&Deployment>, PlanError> {
-        self.apps.retain(|a| a.id != id);
-        if self.apps.is_empty() {
-            self.deployment = None;
-            return Ok(None);
-        }
-        self.orchestrate().map(Some)
+    /// Unknown ids are a typed error ([`RuntimeError::UnknownApp`]), not a
+    /// silent no-op.
+    pub fn remove_app(&mut self, id: PipelineId) -> Result<Option<&Deployment>, RuntimeError> {
+        self.core.remove(id, &self.planner)?;
+        Ok(self.core.deployment())
     }
 
     /// Replace the fleet (device joined/left); triggers re-orchestration.
-    pub fn set_fleet(&mut self, fleet: Fleet) -> Result<Option<&Deployment>, PlanError> {
-        self.fleet = fleet;
-        if self.apps.is_empty() {
-            return Ok(None);
-        }
-        self.orchestrate().map(Some)
+    pub fn set_fleet(&mut self, fleet: Fleet) -> Result<Option<&Deployment>, RuntimeError> {
+        self.core.set_fleet(fleet, &self.planner)?;
+        Ok(self.core.deployment())
     }
 
     /// Run holistic orchestration over the current apps + fleet.
-    pub fn orchestrate(&mut self) -> Result<&Deployment, PlanError> {
-        self.orchestrations += 1;
-        let plan = self.planner.plan(&self.apps, &self.fleet)?;
-        debug_assert!(plan.check_runnable(&self.apps, &self.fleet).is_ok());
-        let lm = LatencyModel::new(&self.fleet);
-        let estimate = estimate_plan(&plan, &self.apps, &self.fleet, &lm);
-        self.deployment = Some(Deployment {
-            plan,
-            policy: self.planner.exec_policy(),
-            estimate,
-        });
-        Ok(self.deployment.as_ref().unwrap())
+    pub fn orchestrate(&mut self) -> Result<&Deployment, RuntimeError> {
+        self.core.orchestrate(&self.planner)?;
+        self.core.deployment().ok_or(RuntimeError::NoDeployment)
     }
 
     /// Execute the current deployment on the simulated hardware.
     pub fn simulate(&self, runs: usize, seed: u64) -> Option<SimReport> {
-        let dep = self.deployment.as_ref()?;
-        let gt = GroundTruth::with_seed(seed);
-        Some(simulate(
-            &dep.plan,
-            &self.apps,
-            &self.fleet,
-            &gt,
-            SimConfig {
-                runs,
-                warmup: (runs / 6).min(4),
-                policy: dep.policy,
-                record_trace: false,
-            },
-        ))
+        self.core.simulate(runs, seed)
     }
 }
 
@@ -140,10 +106,10 @@ mod tests {
     fn registration_triggers_orchestration() {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
         m.register_app(app(0, ModelName::KWS)).unwrap();
-        assert_eq!(m.orchestrations, 1);
+        assert_eq!(m.orchestrations(), 1);
         assert_eq!(m.deployment().unwrap().plan.plans.len(), 1);
         m.register_app(app(1, ModelName::SimpleNet)).unwrap();
-        assert_eq!(m.orchestrations, 2);
+        assert_eq!(m.orchestrations(), 2);
         assert_eq!(m.deployment().unwrap().plan.plans.len(), 2);
     }
 
@@ -153,7 +119,7 @@ mod tests {
         m.register_app(app(0, ModelName::UNet)).unwrap();
         let before = m.deployment().unwrap().estimate.throughput;
         m.set_fleet(fleet_n(2)).unwrap();
-        assert_eq!(m.orchestrations, 2);
+        assert_eq!(m.orchestrations(), 2);
         let after = m.deployment().unwrap().estimate.throughput;
         assert!(before > 0.0 && after > 0.0);
     }
@@ -176,10 +142,24 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "duplicate pipeline id")]
-    fn duplicate_ids_rejected() {
+    fn duplicate_ids_are_typed_errors() {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
         m.register_app(app(0, ModelName::KWS)).unwrap();
-        let _ = m.register_app(app(0, ModelName::SimpleNet));
+        let err = m.register_app(app(0, ModelName::SimpleNet)).unwrap_err();
+        assert!(matches!(err, RuntimeError::DuplicateApp(PipelineId(0))));
+        // The failed registration did not disturb the deployment.
+        assert_eq!(m.deployment().unwrap().plan.plans.len(), 1);
+        assert_eq!(m.apps().len(), 1);
+    }
+
+    #[test]
+    fn removing_unknown_app_is_typed_error() {
+        let mut m = Moderator::new(fleet4(), Synergy::planner());
+        m.register_app(app(0, ModelName::KWS)).unwrap();
+        let err = m.remove_app(PipelineId(9)).unwrap_err();
+        assert!(matches!(err, RuntimeError::UnknownApp(PipelineId(9))));
+        // Still registered, still deployed.
+        assert_eq!(m.apps().len(), 1);
+        assert!(m.deployment().is_some());
     }
 }

@@ -16,10 +16,25 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::device::{DeviceId, Fleet};
+use crate::model::Shape;
 use crate::pipeline::PipelineSpec;
 use crate::runtime::{InferHandle, InferenceService, Manifest};
 
 use super::moderator::Deployment;
+
+/// Deterministic synthetic sensor frame: one f32 per tensor *element*.
+///
+/// Sizing audit: `Shape::bytes()` is the on-accelerator 8-bit byte count
+/// and only coincidentally equals the element count; an f32 frame sized in
+/// bytes would be 4× too large the moment dtype widths diverge. Buffers on
+/// the PJRT path are therefore sized with [`Shape::elements`] exclusively
+/// (`run_full` rejects anything else).
+fn synth_frame(shape: Shape, seed: u64) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..shape.elements())
+        .map(|_| rng.next_gaussian() as f32)
+        .collect()
+}
 
 /// Serving parameters.
 #[derive(Clone, Copy, Debug)]
@@ -141,16 +156,13 @@ pub fn serve(
     // Deployment step: compile everything before timing starts.
     service.handle().preload(preload)?;
 
-    // Reference outputs for verification.
+    // Synthetic sensor frames (element-count sized; see `synth_frame`).
     let inputs: Vec<Vec<f32>> = apps
         .iter()
         .enumerate()
         .map(|(i, spec)| {
             let mm = manifest.model(&spec.name).unwrap();
-            let mut rng = crate::util::rng::Rng::new(cfg.seed ^ (i as u64) << 32);
-            (0..mm.input.bytes())
-                .map(|_| rng.next_gaussian() as f32)
-                .collect()
+            synth_frame(mm.input, cfg.seed ^ ((i as u64) << 32))
         })
         .collect();
     let reference: Vec<Option<Vec<f32>>> = if cfg.verify {
@@ -307,4 +319,33 @@ pub fn serve(
         per_pipeline: stats,
         verified,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_inputs_are_sized_by_element_count() {
+        // Regression: frames must have exactly h·w·c f32 entries — sizing
+        // them off a *byte* count would 4×-overallocate the moment any
+        // dtype wider than 8 bits enters the path, and `run_full` rejects
+        // length mismatches outright.
+        let shape = Shape::new(64, 64, 3);
+        let frame = synth_frame(shape, 42);
+        assert_eq!(frame.len(), 64 * 64 * 3);
+        assert_eq!(frame.len() as u64, shape.elements());
+        assert_ne!(frame.len(), 4 * 64 * 64 * 3, "f32-byte-count confusion");
+    }
+
+    #[test]
+    fn synthetic_inputs_are_seeded_and_nontrivial() {
+        let shape = Shape::new(8, 8, 2);
+        let a = synth_frame(shape, 7);
+        let b = synth_frame(shape, 7);
+        let c = synth_frame(shape, 8);
+        assert_eq!(a, b, "same seed must reproduce the frame");
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(a.iter().any(|v| *v != 0.0));
+    }
 }

@@ -12,15 +12,57 @@
 //! memory constraints, and executes it with an adaptive task parallelization
 //! scheduler over per-computation-unit queues.
 //!
-//! The crate is organized in rough dependency order:
+//! ## Quickstart
+//!
+//! Everything goes through the [`api::SynergyRuntime`] session facade —
+//! apps say *what* they need; the runtime decides *where* it runs:
+//!
+//! ```no_run
+//! use synergy::api::{Interaction, Qos, RunConfig, Sensor, SynergyRuntime};
+//! use synergy::model::zoo::ModelName;
+//!
+//! # fn main() -> Result<(), synergy::api::RuntimeError> {
+//! let runtime = SynergyRuntime::new(synergy::workload::fleet4());
+//! let events = runtime.subscribe();
+//!
+//! let kws = runtime
+//!     .app("keyword-spotting")
+//!     .source(Sensor::Microphone)
+//!     .model(ModelName::KWS)
+//!     .target(Interaction::Haptic)
+//!     .qos(Qos { min_rate_hz: 5.0, ..Qos::default() })
+//!     .register()?;
+//!
+//! let report = runtime.run(&RunConfig::default())?; // simulator backend
+//! println!("{:.2} inf/s", report.throughput);
+//!
+//! runtime.device_left(synergy::device::DeviceId(3))?; // incremental replan
+//! for event in events.try_iter() {
+//!     println!("{event:?}"); // DeviceLeft, Replanned { incremental: true, .. }
+//! }
+//! kws.unregister()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Swap the backend to run the same deployment for real:
+//! `SynergyRuntime::builder().fleet(...).backend(PjrtBackend::load("artifacts")?).build()`
+//! (needs the `pjrt` cargo feature, which pulls the vendored `xla`
+//! dependency tree).
+//!
+//! ## Module map
+//!
+//! In rough dependency order:
 //!
 //! - [`util`], [`testkit`] — in-repo substrates (JSON, PRNG, CLI, stats,
 //!   property testing); only the `xla` crate's dependency tree is available.
 //! - [`model`] — layer algebra and the paper's 8-model zoo (Table I).
 //! - [`device`] — the hardware substrate: MAX78000/78002 specs, memory
 //!   accounting, radio and power models.
-//! - [`pipeline`] — §IV-B device-agnostic programming interface.
-//! - [`plan`] — §IV-C execution plans + holistic collaboration plans.
+//! - [`pipeline`] — §IV-B device-agnostic pipeline specs (requirements,
+//!   not device bindings).
+//! - [`plan`] — §IV-C execution plans, split-skeleton/plan enumeration,
+//!   holistic collaboration plans.
 //! - [`estimator`] — §IV-E clock-cycle latency model and throughput
 //!   estimation.
 //! - [`scheduler`] — §IV-F adaptive task parallelization on a
@@ -30,8 +72,14 @@
 //! - [`baselines`] — the paper's 7 comparison methods + phone offloading.
 //! - [`runtime`] — PJRT bridge: load AOT-compiled HLO chunks and run real
 //!   split inference (Python never on the request path).
-//! - [`coordinator`] — the moderator: registration, orchestration,
-//!   deployment, and the threaded serving loop.
+//! - [`coordinator`] — the moderator compatibility shim and the threaded
+//!   PJRT serving loop.
+//! - [`api`] — **the public surface**: the [`api::SynergyRuntime`] session
+//!   facade — fluent app registration with QoS hints, typed
+//!   [`api::RuntimeError`]s, [`api::RuntimeEvent`] subscriptions,
+//!   incremental re-orchestration with per-app plan-enumeration caching,
+//!   and the [`api::ExecutionBackend`] abstraction unifying simulated and
+//!   real inference.
 //! - [`workload`] — Table I workloads and synthetic sensor sources.
 //! - [`experiments`] — one harness per paper table/figure.
 
@@ -47,6 +95,7 @@ pub mod orchestrator;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
+pub mod api;
 pub mod workload;
 pub mod experiments;
 

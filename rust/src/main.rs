@@ -7,11 +7,9 @@
 //!   zoo                                           print the Table I model zoo
 //!   list                                          list experiments
 
-use synergy::coordinator::{serve, Moderator, ServeConfig};
+use synergy::api::{RunConfig, SynergyRuntime};
 use synergy::experiments;
 use synergy::orchestrator::{Planner, Synergy};
-use synergy::plan::EnumerateCfg;
-use synergy::runtime::Manifest;
 use synergy::util::cli::Args;
 use synergy::util::table::Table;
 use synergy::workload;
@@ -96,15 +94,14 @@ fn cmd_zoo() -> i32 {
 fn cmd_plan(args: &Args) -> i32 {
     let wid: usize = args.opt_parse("workload", 1);
     let w = workload::workload(wid);
-    let fleet = workload::fleet4();
-    let mut moderator = Moderator::new(fleet, Synergy::planner());
+    let runtime = SynergyRuntime::new(workload::fleet4());
     for p in w.pipelines {
-        if let Err(e) = moderator.register_app(p) {
+        if let Err(e) = runtime.register(p) {
             eprintln!("orchestration failed: {e}");
             return 1;
         }
     }
-    let dep = moderator.deployment().unwrap();
+    let dep = runtime.deployment().unwrap();
     println!("{} — selected holistic collaboration plan:", w.name);
     for ep in &dep.plan.plans {
         println!("  {ep}");
@@ -116,78 +113,106 @@ fn cmd_plan(args: &Args) -> i32 {
         dep.estimate.power_w
     );
     let runs = args.opt_parse("runs", 24usize);
-    if let Some(rep) = moderator.simulate(runs, args.opt_parse("seed", 7u64)) {
-        println!(
-            "simulated ({} runs): {:.2} inf/s, latency {}, power {:.2} W",
-            runs,
-            rep.throughput,
-            synergy::util::fmt_secs(rep.avg_latency),
-            rep.power_w
-        );
+    match runtime.run(&RunConfig {
+        runs,
+        seed: args.opt_parse("seed", 7u64),
+        ..RunConfig::default()
+    }) {
+        Ok(rep) => {
+            println!(
+                "simulated ({} runs): {:.2} inf/s, latency {}, power {:.2} W",
+                runs,
+                rep.throughput,
+                synergy::util::fmt_secs(rep.avg_latency_s),
+                rep.power_w.unwrap_or(0.0)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("simulation failed: {e}");
+            1
+        }
     }
-    0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> i32 {
+    eprintln!(
+        "the serve subcommand needs real PJRT inference — rebuild with \
+         `cargo run --release --features pjrt -- serve`"
+    );
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> i32 {
-    let dir = args.opt("artifacts").unwrap_or("artifacts");
-    let manifest = match Manifest::load(dir) {
-        Ok(m) => m,
+    use synergy::api::PjrtBackend;
+    use synergy::plan::EnumerateCfg;
+    let backend = match PjrtBackend::load(args.opt("artifacts").unwrap_or("artifacts")) {
+        Ok(b) => b,
         Err(e) => {
-            eprintln!("{e:#}");
+            eprintln!("{e}");
             return 1;
         }
     };
     // The serving demo uses the three models aot.py emits split chunks
     // for, restricted to 2-way splits so every chunk has an artifact.
-    let fleet = workload::fleet4();
     let mut planner = Synergy::planner();
     planner.cfg = EnumerateCfg { max_split_devices: 2 };
-    let mut moderator = Moderator::new(fleet.clone(), planner);
+    let runtime = SynergyRuntime::builder()
+        .fleet(workload::fleet4())
+        .planner(planner)
+        .backend(backend)
+        .build();
     use synergy::model::zoo::ModelName;
     for (i, m) in [ModelName::ConvNet5, ModelName::KWS, ModelName::SimpleNet]
         .iter()
         .enumerate()
     {
         let spec = workload::pipeline(i, *m, i % 4, (i + 1) % 4);
-        if let Err(e) = moderator.register_app(spec) {
+        if let Err(e) = runtime.register(spec) {
             eprintln!("orchestration failed: {e}");
             return 1;
         }
     }
-    let dep = moderator.deployment().unwrap();
+    let dep = runtime.deployment().unwrap();
     println!("deployment:");
     for ep in &dep.plan.plans {
         println!("  {ep}");
     }
-    let cfg = ServeConfig {
+    let cfg = RunConfig {
         runs: args.opt_parse("runs", 8),
         max_inflight: args.opt_parse("inflight", 2),
         verify: true,
         seed: args.opt_parse("seed", 42),
     };
-    match serve(dep, moderator.apps(), &fleet, &manifest, cfg) {
+    match runtime.run(&cfg) {
         Ok(rep) => {
+            let verified = rep.verified == Some(true);
             println!(
                 "served {} runs in {:.2}s — {:.1} inf/s wall-clock, verified={}",
-                rep.completions, rep.wall_s, rep.throughput, rep.verified
+                rep.completions,
+                rep.wall_s.unwrap_or(0.0),
+                rep.throughput,
+                verified
             );
-            for p in &rep.per_pipeline {
+            for p in &rep.per_app {
                 println!(
                     "  {}: {} runs, mean latency {:.1} ms, max split err {:.2e}",
                     p.name,
                     p.completions,
                     p.mean_latency_s * 1e3,
-                    p.max_split_err
+                    p.max_split_err.unwrap_or(0.0)
                 );
             }
-            if rep.verified {
+            if verified {
                 0
             } else {
                 1
             }
         }
         Err(e) => {
-            eprintln!("serving failed: {e:#}");
+            eprintln!("serving failed: {e}");
             1
         }
     }

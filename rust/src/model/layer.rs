@@ -23,9 +23,20 @@ impl Shape {
         Shape { h, w, c }
     }
 
-    /// Number of elements == number of bytes at 8-bit.
-    pub fn bytes(&self) -> u64 {
+    /// Number of elements in the activation tensor, independent of dtype
+    /// width. Use this to size element buffers (e.g. the f32 tensors the
+    /// PJRT path moves around); use [`Shape::bytes`] for on-accelerator
+    /// memory accounting.
+    pub fn elements(&self) -> u64 {
         (self.h * self.w * self.c) as u64
+    }
+
+    /// On-accelerator byte count. Weights/activations are 8-bit on the
+    /// MAX78000 class, so this equals [`Shape::elements`] — but the two are
+    /// distinct quantities and must not be interchanged (an f32 buffer has
+    /// `elements()` entries and `4 × elements()` bytes).
+    pub fn bytes(&self) -> u64 {
+        self.elements()
     }
 }
 
@@ -206,5 +217,17 @@ mod tests {
     #[test]
     fn shape_bytes_are_elements() {
         assert_eq!(Shape::new(48, 48, 48).bytes(), 110_592);
+    }
+
+    #[test]
+    fn elements_count_entries_not_f32_bytes() {
+        // Regression for the serve/executor input-sizing audit: element
+        // buffers (f32 tensors on the PJRT path) are sized with
+        // `elements()`, which must equal h·w·c — never the 4× figure an
+        // f32 *byte* count would give.
+        let s = Shape::new(64, 64, 3);
+        assert_eq!(s.elements(), 64 * 64 * 3);
+        assert_eq!(s.elements(), s.bytes(), "8-bit accounting coincides");
+        assert_ne!(s.elements(), 4 * 64 * 64 * 3);
     }
 }

@@ -46,4 +46,13 @@ pub trait Planner {
     fn exec_policy(&self) -> Policy {
         Policy::Sequential
     }
+
+    /// Downcast hook for the progressive planner. When a planner exposes
+    /// its progressive configuration here, [`crate::api::SynergyRuntime`]
+    /// replans *incrementally* — reusing cached per-app plan enumerations
+    /// across app and fleet changes instead of re-enumerating everything.
+    /// Baselines return `None` and are replanned from scratch every time.
+    fn as_progressive(&self) -> Option<&ProgressivePlanner> {
+        None
+    }
 }

@@ -81,24 +81,41 @@ impl ProgressivePlanner {
         pipelines: &[PipelineSpec],
         fleet: &Fleet,
     ) -> Result<CollabPlan, PlanError> {
+        self.candidates_scored.set(0);
         match self.select_with_order(pipelines, fleet, self.priority) {
             Err(PlanError::Oor { .. }) if self.priority != Priority::ModelSizeDesc => {
-                let scored = self.candidates_scored.get();
-                let retry = self.select_with_order(pipelines, fleet, Priority::ModelSizeDesc);
-                self.candidates_scored
-                    .set(scored + self.candidates_scored.get());
-                retry
+                self.select_with_order(pipelines, fleet, Priority::ModelSizeDesc)
             }
             other => other,
         }
     }
 
+    // KEEP IN SYNC with `api::replan::select_ordered`: the incremental
+    // re-orchestration path replays this exact selection over cached
+    // skeletons and must stay bit-identical (same scoring, same strict-`>`
+    // tie-break, same ledger/accumulator updates). The parity is pinned by
+    // `api::replan::tests::cached_selection_matches_streaming_selection`.
     fn select_with_order(
         &self,
         pipelines: &[PipelineSpec],
         fleet: &Fleet,
         priority: Priority,
     ) -> Result<CollabPlan, PlanError> {
+        let (result, scored) = self.run_selection(pipelines, fleet, priority);
+        // Accumulate on every exit path — an aborted attempt did real
+        // scoring work, and `select` zeroes the counter per call, so the
+        // OOR retry sums attempts instead of reading a stale total.
+        self.candidates_scored
+            .set(self.candidates_scored.get() + scored);
+        result
+    }
+
+    fn run_selection(
+        &self,
+        pipelines: &[PipelineSpec],
+        fleet: &Fleet,
+        priority: Priority,
+    ) -> (Result<CollabPlan, PlanError>, u64) {
         let lm = LatencyModel::new(fleet);
         let order = priority.order(pipelines);
         let mut ledger = MemoryLedger::default();
@@ -113,9 +130,10 @@ impl ProgressivePlanner {
             if spec.source_candidates(fleet).is_empty()
                 || spec.target_candidates(fleet).is_empty()
             {
-                return Err(PlanError::Unsatisfiable {
+                let err = PlanError::Unsatisfiable {
                     pipeline: spec.name.clone(),
-                });
+                };
+                return (Err(err), scored);
             }
             // Stream candidates (no materialization) and score each with
             // the clone-free fast path — the orchestration hot loop.
@@ -131,18 +149,19 @@ impl ProgressivePlanner {
                     best = Some((score, cand.clone()));
                 }
             });
-            let (_, chosen) = best.ok_or_else(|| PlanError::Oor {
-                pipeline: spec.name.clone(),
-            })?;
+            let Some((_, chosen)) = best else {
+                let err = PlanError::Oor {
+                    pipeline: spec.name.clone(),
+                };
+                return (Err(err), scored);
+            };
             ledger.commit(&chosen, &spec.model);
             accum.add_plan(&chosen, spec, fleet, &lm);
             selected[i] = Some(chosen);
         }
 
-        self.candidates_scored.set(scored);
-        Ok(CollabPlan::new(
-            selected.into_iter().map(Option::unwrap).collect(),
-        ))
+        let plan = CollabPlan::new(selected.into_iter().map(Option::unwrap).collect());
+        (Ok(plan), scored)
     }
 }
 
@@ -157,6 +176,10 @@ impl Planner for ProgressivePlanner {
 
     fn exec_policy(&self) -> Policy {
         self.policy
+    }
+
+    fn as_progressive(&self) -> Option<&ProgressivePlanner> {
+        Some(self)
     }
 }
 

@@ -39,6 +39,32 @@ pub enum TargetReq {
     Any,
 }
 
+// Ergonomic conversions for the fluent `api::AppBuilder`: a sensor kind, an
+// interaction kind, or a designated device each *is* a requirement.
+impl From<SensorKind> for SourceReq {
+    fn from(s: SensorKind) -> SourceReq {
+        SourceReq::Sensor(s)
+    }
+}
+
+impl From<DeviceId> for SourceReq {
+    fn from(d: DeviceId) -> SourceReq {
+        SourceReq::Device(d)
+    }
+}
+
+impl From<InteractionKind> for TargetReq {
+    fn from(i: InteractionKind) -> TargetReq {
+        TargetReq::Interaction(i)
+    }
+}
+
+impl From<DeviceId> for TargetReq {
+    fn from(d: DeviceId) -> TargetReq {
+        TargetReq::Device(d)
+    }
+}
+
 /// A device-agnostic app pipeline.
 #[derive(Clone, Debug)]
 pub struct PipelineSpec {

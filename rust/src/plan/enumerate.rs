@@ -16,7 +16,7 @@ use crate::pipeline::PipelineSpec;
 use super::exec_plan::{Assignment, ExecutionPlan};
 
 /// Enumeration limits.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EnumerateCfg {
     /// Maximum number of chunks a model may be split into (defaults to the
     /// whole accelerator fleet, as MaxDev requires).
@@ -95,6 +95,41 @@ pub fn enumerate_plans_with(
     if sources.is_empty() || targets.is_empty() {
         return;
     }
+    // Reusable plan buffer handed to the callback.
+    let mut scratch = ExecutionPlan {
+        pipeline: pipeline.id,
+        source_dev: sources[0],
+        target_dev: targets[0],
+        chunks: Vec::new(),
+    };
+    enumerate_splits_with(pipeline, fleet, cfg, |chunks| {
+        scratch.chunks.clear();
+        scratch.chunks.extend_from_slice(chunks);
+        for &s in &sources {
+            for &t in &targets {
+                scratch.source_dev = s;
+                scratch.target_dev = t;
+                visit(&scratch);
+            }
+        }
+    });
+}
+
+/// Visit every *split skeleton* — the ordered chunk→device assignment
+/// without the source/target endpoint choice — for `pipeline` over `fleet`.
+///
+/// This is the expensive, endpoint-independent part of plan enumeration
+/// (device permutations × split boundaries, with eager per-chunk fit
+/// filtering). The incremental re-orchestration cache in [`crate::api`]
+/// materializes these skeletons per app and reuses them across fleet and
+/// app-set changes; [`enumerate_plans_with`] composes them with the
+/// endpoint cross product to recover the full plan space.
+pub fn enumerate_splits_with(
+    pipeline: &PipelineSpec,
+    fleet: &Fleet,
+    cfg: EnumerateCfg,
+    mut visit: impl FnMut(&[Assignment]),
+) {
     let accel_devs = fleet.accel_ids();
     let model = &pipeline.model;
     let num_layers = model.num_layers();
@@ -103,13 +138,6 @@ pub fn enumerate_plans_with(
         .min(num_layers)
         .min(cfg.max_split_devices);
 
-    // Reusable plan buffer handed to the callback.
-    let mut scratch = ExecutionPlan {
-        pipeline: pipeline.id,
-        source_dev: sources[0],
-        target_dev: targets[0],
-        chunks: Vec::with_capacity(d_max),
-    };
     // Chunk-fit memo: chunk_fits[dev][start][end] would be L² per device;
     // compute lazily through a closure over prefix sums instead.
     let prefix_w: Vec<u64> = {
@@ -143,6 +171,8 @@ pub fn enumerate_plans_with(
             .is_ok()
     };
 
+    // Reusable chunk buffer handed to the callback.
+    let mut chunks: Vec<Assignment> = Vec::with_capacity(d_max);
     // Iterate d = number of chunk devices.
     for d in 1..=d_max {
         let mut perm: Vec<DeviceId> = Vec::with_capacity(d);
@@ -156,28 +186,21 @@ pub fn enumerate_plans_with(
                 // Choose d-1 boundaries among 1..num_layers.
                 let mut bounds: Vec<usize> = Vec::with_capacity(d - 1);
                 choose_boundaries(num_layers, d - 1, 1, &mut bounds, &mut |bs: &[usize]| {
-                    // Build chunk ranges in the scratch plan, checking
-                    // per-chunk fit as we go.
-                    scratch.chunks.clear();
+                    // Build chunk ranges, checking per-chunk fit as we go.
+                    chunks.clear();
                     let mut prev = 0;
                     for (i, &dev) in order.iter().enumerate() {
                         let end = if i + 1 == d { num_layers } else { bs[i] };
                         if !chunk_fits(dev, prev, end) {
                             return;
                         }
-                        scratch.chunks.push(Assignment {
+                        chunks.push(Assignment {
                             device: dev,
                             range: crate::model::SplitRange::new(prev, end),
                         });
                         prev = end;
                     }
-                    for &s in &sources {
-                        for &t in &targets {
-                            scratch.source_dev = s;
-                            scratch.target_dev = t;
-                            visit(&scratch);
-                        }
-                    }
+                    visit(&chunks);
                 });
             },
         );
@@ -342,6 +365,21 @@ mod tests {
         let plans = enumerate_plans(&p, &f, EnumerateCfg::default());
         assert!(!plans.is_empty());
         assert!(plans.iter().all(|pl| pl.chunks.len() == 2), "must all split");
+    }
+
+    #[test]
+    fn skeletons_times_endpoints_equals_plans() {
+        // The skeleton space composed with the D² endpoint cross product
+        // must reproduce the full enumeration exactly (order included).
+        let p = any_pipeline(5);
+        let f = fleet(3);
+        let mut skeletons: Vec<Vec<Assignment>> = Vec::new();
+        enumerate_splits_with(&p, &f, EnumerateCfg::default(), |c| skeletons.push(c.to_vec()));
+        let plans = enumerate_plans(&p, &f, EnumerateCfg::default());
+        assert_eq!(plans.len(), skeletons.len() * 9);
+        for (i, plan) in plans.iter().enumerate() {
+            assert_eq!(plan.chunks, skeletons[i / 9], "plan {i}");
+        }
     }
 
     #[test]

@@ -13,6 +13,8 @@ pub mod enumerate;
 pub mod collab;
 
 pub use collab::{CollabPlan, RunnableError};
-pub use enumerate::{enumerate_plans, enumerate_plans_with, paper_plan_count, EnumerateCfg};
+pub use enumerate::{
+    enumerate_plans, enumerate_plans_with, enumerate_splits_with, paper_plan_count, EnumerateCfg,
+};
 pub use exec_plan::{Assignment, ExecutionPlan};
 pub use task::{PlanTask, TaskKind, UnitKind};

@@ -26,11 +26,11 @@ impl<'e> ModelExecutor<'e> {
     /// Run the full model on an input tensor (flat, HWC order).
     pub fn run_full(&self, model: &str, input: &[f32]) -> Result<Vec<f32>> {
         let mm = self.manifest.model(model)?;
-        if input.len() as u64 != mm.input.bytes() {
+        if input.len() as u64 != mm.input.elements() {
             bail!(
                 "{model}: input has {} elems, expected {}",
                 input.len(),
-                mm.input.bytes()
+                mm.input.elements()
             );
         }
         let exe = self.engine.load(self.manifest.path(&mm.full))?;
@@ -96,7 +96,7 @@ impl<'e> ModelExecutor<'e> {
     pub fn synth_input(&self, model: &str, seed: u64) -> Result<Vec<f32>> {
         let mm = self.manifest.model(model)?;
         let mut rng = crate::util::rng::Rng::new(seed);
-        Ok((0..mm.input.bytes())
+        Ok((0..mm.input.elements())
             .map(|_| rng.next_gaussian() as f32)
             .collect())
     }

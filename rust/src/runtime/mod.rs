@@ -9,11 +9,17 @@
 //! model — the property that makes layer-wise splitting semantically free.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(feature = "pjrt")]
 pub mod service;
 
 pub use artifacts::{ChunkMeta, Manifest, ModelManifest};
+#[cfg(feature = "pjrt")]
 pub use executor::ModelExecutor;
+#[cfg(feature = "pjrt")]
 pub use pjrt::Engine;
+#[cfg(feature = "pjrt")]
 pub use service::{InferHandle, InferenceService};

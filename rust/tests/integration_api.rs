@@ -1,0 +1,368 @@
+//! SynergyRuntime API integration: builder validation, lifecycle, events,
+//! and incremental re-orchestration semantics.
+
+use synergy::api::{
+    AppPriority, Interaction, Qos, RunConfig, RuntimeError, RuntimeEvent, Sensor, SynergyRuntime,
+};
+use synergy::device::{Device, DeviceId, DeviceKind};
+use synergy::model::zoo::ModelName;
+use synergy::orchestrator::{PlanError, Synergy};
+use synergy::workload::{fleet4, fleet4_hetero, fleet_n, pipeline, workload};
+
+#[test]
+fn builder_rejects_missing_model() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let err = runtime
+        .app("no-model")
+        .source(Sensor::Microphone)
+        .register()
+        .unwrap_err();
+    assert!(matches!(err, RuntimeError::InvalidApp { .. }), "{err:?}");
+    assert!(format!("{err}").contains("no model"));
+    assert!(runtime.deployment().is_none());
+}
+
+#[test]
+fn builder_rejects_empty_name() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let err = runtime
+        .app("  ")
+        .model(ModelName::KWS)
+        .register()
+        .unwrap_err();
+    assert!(matches!(err, RuntimeError::InvalidApp { .. }), "{err:?}");
+}
+
+#[test]
+fn duplicate_id_is_rejected_and_rolled_back() {
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime
+        .app("a")
+        .id(0)
+        .model(ModelName::KWS)
+        .register()
+        .unwrap();
+    let err = runtime
+        .app("b")
+        .id(0)
+        .model(ModelName::SimpleNet)
+        .register()
+        .unwrap_err();
+    assert!(
+        matches!(err, RuntimeError::DuplicateApp(id) if id.0 == 0),
+        "{err:?}"
+    );
+    // First app's deployment is undisturbed.
+    assert_eq!(runtime.deployment().unwrap().plan.plans.len(), 1);
+    assert_eq!(runtime.stats().active_apps, 1);
+}
+
+#[test]
+fn unsatisfiable_registration_is_atomic() {
+    // A source pinned to a device beyond the fleet has no candidates.
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime.app("ok").model(ModelName::KWS).register().unwrap();
+    let err = runtime
+        .app("bad")
+        .source(DeviceId(17)) // beyond the fleet
+        .model(ModelName::SimpleNet)
+        .register()
+        .unwrap_err();
+    assert!(
+        matches!(err, RuntimeError::Plan(PlanError::Unsatisfiable { .. })),
+        "{err:?}"
+    );
+    // The failed app is fully rolled back; the survivor still runs.
+    assert_eq!(runtime.stats().active_apps, 1);
+    assert_eq!(runtime.deployment().unwrap().plan.plans.len(), 1);
+}
+
+#[test]
+fn auto_ids_do_not_collide() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let a = runtime.app("a").model(ModelName::KWS).register().unwrap();
+    let b = runtime
+        .app("b")
+        .model(ModelName::SimpleNet)
+        .register()
+        .unwrap();
+    assert_ne!(a.id(), b.id());
+    assert_eq!(runtime.deployment().unwrap().plan.plans.len(), 2);
+}
+
+#[test]
+fn auto_ids_are_never_reused_after_unregister() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let a = runtime.app("a").model(ModelName::KWS).register().unwrap();
+    let stale = a.clone();
+    let a_id = a.id();
+    a.unregister().unwrap();
+    let b = runtime
+        .app("b")
+        .model(ModelName::SimpleNet)
+        .register()
+        .unwrap();
+    assert_ne!(b.id(), a_id, "ids of unregistered apps must not be reused");
+    // A stale clone of the old handle errors instead of acting on app b.
+    assert!(matches!(
+        stale.pause().unwrap_err(),
+        RuntimeError::UnknownApp(_)
+    ));
+    assert!(!b.stats().unwrap().paused);
+}
+
+#[test]
+fn pause_and_resume_affect_the_active_plan() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let _a = runtime.app("a").model(ModelName::KWS).register().unwrap();
+    let b = runtime
+        .app("b")
+        .model(ModelName::SimpleNet)
+        .register()
+        .unwrap();
+    assert_eq!(runtime.deployment().unwrap().plan.plans.len(), 2);
+
+    b.pause().unwrap();
+    let dep = runtime.deployment().unwrap();
+    assert_eq!(dep.plan.plans.len(), 1, "paused app left the active plan");
+    assert!(dep.plan.plans.iter().all(|p| p.pipeline != b.id()));
+    assert!(b.stats().unwrap().paused);
+    assert!(b.stats().unwrap().plan.is_none());
+
+    b.resume().unwrap();
+    let dep = runtime.deployment().unwrap();
+    assert_eq!(dep.plan.plans.len(), 2);
+    assert!(b.stats().unwrap().plan.is_some());
+}
+
+#[test]
+fn pausing_every_app_clears_the_deployment() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let a = runtime.app("a").model(ModelName::KWS).register().unwrap();
+    a.pause().unwrap();
+    assert!(runtime.deployment().is_none());
+    let err = runtime.run(&RunConfig::default()).unwrap_err();
+    assert!(matches!(err, RuntimeError::NoDeployment), "{err:?}");
+    a.resume().unwrap();
+    assert!(runtime.deployment().is_some());
+}
+
+#[test]
+fn unregister_removes_the_app() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let a = runtime.app("a").model(ModelName::KWS).register().unwrap();
+    let b = runtime
+        .app("b")
+        .model(ModelName::SimpleNet)
+        .register()
+        .unwrap();
+    a.unregister().unwrap();
+    assert_eq!(runtime.deployment().unwrap().plan.plans.len(), 1);
+    b.unregister().unwrap();
+    assert!(runtime.deployment().is_none());
+}
+
+#[test]
+fn device_left_triggers_exactly_one_incremental_replan() {
+    // Start on five devices so d4 can depart (suffix shrink keeps ids
+    // dense and the enumeration cache warm).
+    let runtime = SynergyRuntime::new(fleet_n(5));
+    for spec in workload(1).pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let before = runtime.stats();
+    assert_eq!(before.orchestrations, 3, "one per registration");
+    let events = runtime.subscribe();
+
+    runtime.device_left(DeviceId(4)).unwrap();
+
+    let after = runtime.stats();
+    assert_eq!(
+        after.orchestrations,
+        before.orchestrations + 1,
+        "exactly one replan for the departure"
+    );
+    let replan = after.last_replan.unwrap();
+    assert!(replan.incremental(), "{replan:?}");
+    assert_eq!(replan.reused_apps, 3);
+    assert_eq!(replan.enumerated_apps, 0);
+
+    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    assert!(evs.contains(&RuntimeEvent::DeviceLeft { device: DeviceId(4) }));
+    let replans: Vec<_> = evs
+        .iter()
+        .filter_map(|e| match e {
+            RuntimeEvent::Replanned { incremental, .. } => Some(*incremental),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(replans, vec![true], "one Replanned event, incremental");
+}
+
+#[test]
+fn incremental_replan_matches_planning_from_scratch() {
+    let runtime = SynergyRuntime::new(fleet_n(5));
+    for spec in workload(1).pipelines {
+        runtime.register(spec).unwrap();
+    }
+    runtime.device_left(DeviceId(4)).unwrap();
+    let incremental = runtime.deployment().unwrap();
+
+    // A cold runtime planning directly on the shrunken fleet must select
+    // the identical holistic plan.
+    let cold = SynergyRuntime::new(fleet_n(4));
+    for spec in workload(1).pipelines {
+        cold.register(spec).unwrap();
+    }
+    assert_eq!(incremental.plan, cold.deployment().unwrap().plan);
+}
+
+#[test]
+fn device_joined_re_enumerates_and_emits() {
+    let runtime = SynergyRuntime::new(fleet_n(3));
+    for (i, m) in [ModelName::KWS, ModelName::SimpleNet, ModelName::ConvNet5]
+        .into_iter()
+        .enumerate()
+    {
+        runtime.register(pipeline(i, m, i % 3, (i + 1) % 3)).unwrap();
+    }
+    let events = runtime.subscribe();
+    let joined = Device::new(3, "ring", DeviceKind::Max78000, vec![], vec![]);
+    runtime.device_joined(joined).unwrap();
+    assert_eq!(runtime.fleet().len(), 4);
+    let replan = runtime.stats().last_replan.unwrap();
+    assert_eq!(
+        replan.enumerated_apps, 3,
+        "a new device invalidates every cached enumeration"
+    );
+    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    assert!(evs.contains(&RuntimeEvent::DeviceJoined { device: DeviceId(3) }));
+}
+
+#[test]
+fn in_place_platform_swap_emits_leave_then_join_and_invalidates() {
+    // fleet4 → fleet4_hetero keeps the length but upgrades the watch (d2)
+    // to a MAX78002: subscribers must see the churn, and the enumeration
+    // cache must not survive a capacity change.
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    let events = runtime.subscribe();
+    runtime.set_fleet(fleet4_hetero()).unwrap();
+    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    assert!(evs.contains(&RuntimeEvent::DeviceLeft { device: DeviceId(2) }));
+    assert!(evs.contains(&RuntimeEvent::DeviceJoined { device: DeviceId(2) }));
+    assert_eq!(
+        runtime.stats().last_replan.unwrap().enumerated_apps,
+        1,
+        "a platform change must re-enumerate, not reuse stale chunk fits"
+    );
+}
+
+#[test]
+fn dense_id_violations_are_typed_errors() {
+    let runtime = SynergyRuntime::new(fleet_n(3));
+    let err = runtime
+        .device_joined(Device::new(7, "x", DeviceKind::Max78000, vec![], vec![]))
+        .unwrap_err();
+    assert!(matches!(err, RuntimeError::FleetChange(_)), "{err:?}");
+    let err = runtime.device_left(DeviceId(0)).unwrap_err();
+    assert!(matches!(err, RuntimeError::FleetChange(_)), "{err:?}");
+}
+
+#[test]
+fn app_registration_reuses_other_apps_enumerations() {
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    runtime
+        .register(pipeline(1, ModelName::SimpleNet, 1, 2))
+        .unwrap();
+    let replan = runtime.stats().last_replan.unwrap();
+    assert_eq!(replan.reused_apps, 1, "first app's enumeration reused");
+    assert_eq!(replan.enumerated_apps, 1, "only the new app enumerated");
+}
+
+#[test]
+fn qos_degradation_emits_plan_degraded() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let events = runtime.subscribe();
+    let app = runtime
+        .app("greedy")
+        .source(Sensor::Microphone)
+        .model(ModelName::KWS)
+        .target(Interaction::Haptic)
+        .qos(Qos {
+            min_rate_hz: 1e9, // unachievable on any wearable
+            priority: AppPriority::High,
+            ..Qos::default()
+        })
+        .register()
+        .unwrap();
+    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, RuntimeEvent::PlanDegraded { app: a, .. } if *a == app.id())),
+        "{evs:?}"
+    );
+    let stats = app.stats().unwrap();
+    assert!(stats.qos_violation.is_some());
+    assert!(stats.est_rate_hz.unwrap() > 0.0);
+}
+
+#[test]
+fn run_executes_on_the_sim_backend() {
+    let runtime = SynergyRuntime::new(fleet4());
+    for spec in workload(2).pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let report = runtime
+        .run(&RunConfig { runs: 12, seed: 7, ..RunConfig::default() })
+        .unwrap();
+    assert_eq!(report.backend, "sim");
+    assert_eq!(report.completions, 12 * 3);
+    assert!(report.throughput > 0.0);
+    assert!(report.power_w.unwrap() > 0.0);
+    assert!(report.verified.is_none());
+}
+
+#[test]
+fn custom_planner_still_replans_without_caching() {
+    use synergy::baselines::JointModel;
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet4())
+        .planner(JointModel::default())
+        .build();
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    let replan = runtime.stats().last_replan.unwrap();
+    assert_eq!(replan.reused_apps, 0);
+    assert!(!replan.incremental());
+    assert!(runtime.deployment().is_some());
+}
+
+#[test]
+fn handles_work_across_threads() {
+    // AppHandle is Send: lifecycle calls from another thread must land.
+    let runtime = SynergyRuntime::new(fleet4());
+    let app = runtime.app("kws").model(ModelName::KWS).register().unwrap();
+    let t = std::thread::spawn(move || {
+        app.pause().unwrap();
+        app.stats().unwrap().paused
+    });
+    assert!(t.join().unwrap());
+    assert!(runtime.deployment().is_none());
+}
+
+#[test]
+fn moderator_parity_with_runtime_facade() {
+    // The shim and the facade must select identical deployments.
+    use synergy::coordinator::Moderator;
+    let mut moderator = Moderator::new(fleet4(), Synergy::planner());
+    let runtime = SynergyRuntime::new(fleet4());
+    for spec in workload(2).pipelines {
+        moderator.register_app(spec.clone()).unwrap();
+        runtime.register(spec).unwrap();
+    }
+    assert_eq!(
+        moderator.deployment().unwrap().plan,
+        runtime.deployment().unwrap().plan
+    );
+}

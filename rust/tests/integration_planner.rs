@@ -136,3 +136,31 @@ fn moderator_lifecycle_end_to_end() {
     }
     assert!(moderator.deployment().is_none());
 }
+
+#[test]
+fn runtime_facade_lifecycle_end_to_end() {
+    // The same lifecycle through the SynergyRuntime session API: fluent
+    // registration, device churn with incremental replans, run(), teardown.
+    use synergy::api::{RunConfig, SynergyRuntime};
+    let runtime = SynergyRuntime::new(fleet4());
+    let mut handles = Vec::new();
+    for p in workload(1).pipelines {
+        handles.push(runtime.register(p).unwrap());
+    }
+    assert_eq!(runtime.deployment().unwrap().plan.plans.len(), 3);
+    runtime.set_fleet(fleet_n(5)).unwrap();
+    let rep5 = runtime
+        .run(&RunConfig { runs: 12, seed: 3, ..RunConfig::default() })
+        .unwrap();
+    runtime.set_fleet(fleet_n(4)).unwrap();
+    // 5 → 4 is a suffix departure: the replan must be incremental.
+    assert!(runtime.stats().last_replan.unwrap().incremental());
+    let rep4 = runtime
+        .run(&RunConfig { runs: 12, seed: 3, ..RunConfig::default() })
+        .unwrap();
+    assert!(rep5.throughput > 0.0 && rep4.throughput > 0.0);
+    for h in handles {
+        h.unregister().unwrap();
+    }
+    assert!(runtime.deployment().is_none());
+}

@@ -1,6 +1,8 @@
 //! Runtime integration: real PJRT execution of the AOT artifacts.
-//! These tests require `make artifacts`; they are skipped (with a notice)
-//! when the manifest is absent so `cargo test` works on a fresh clone.
+//! These tests require the `pjrt` cargo feature (`cargo test --features
+//! pjrt`) and `make artifacts`; they are skipped (with a notice) when the
+//! manifest is absent so the suite works on a fresh clone.
+#![cfg(feature = "pjrt")]
 
 use synergy::runtime::{Manifest, ModelExecutor};
 
@@ -32,7 +34,7 @@ fn full_models_execute_and_produce_finite_outputs() {
         let input = exec.synth_input(name, 1).unwrap();
         let out = exec.run_full(name, &input).unwrap();
         let mm = m.model(name).unwrap();
-        assert_eq!(out.len() as u64, mm.layers.last().unwrap().out_shape.bytes());
+        assert_eq!(out.len() as u64, mm.layers.last().unwrap().out_shape.elements());
         assert!(out.iter().all(|v| v.is_finite()), "{name}: non-finite output");
         assert!(out.iter().any(|v| *v != 0.0), "{name}: all-zero output");
     }
@@ -74,33 +76,33 @@ fn executable_cache_deduplicates_compilation() {
 
 #[test]
 fn serving_loop_runs_and_verifies() {
-    use synergy::coordinator::{serve, Moderator, ServeConfig};
+    use synergy::api::{PjrtBackend, RunConfig, SynergyRuntime};
     use synergy::model::zoo::ModelName;
     use synergy::orchestrator::Synergy;
     use synergy::plan::EnumerateCfg;
     use synergy::workload::{fleet4, pipeline};
 
     let Some(m) = manifest() else { return };
-    let fleet = fleet4();
     let mut planner = Synergy::planner();
     planner.cfg = EnumerateCfg { max_split_devices: 2 };
-    let mut moderator = Moderator::new(fleet.clone(), planner);
-    moderator
-        .register_app(pipeline(0, ModelName::ConvNet5, 0, 1))
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet4())
+        .planner(planner)
+        .backend(PjrtBackend::new(m))
+        .build();
+    runtime
+        .register(pipeline(0, ModelName::ConvNet5, 0, 1))
         .unwrap();
-    moderator
-        .register_app(pipeline(1, ModelName::KWS, 1, 2))
+    runtime
+        .register(pipeline(1, ModelName::KWS, 1, 2))
         .unwrap();
-    let dep = moderator.deployment().unwrap();
-    let report = serve(
-        dep,
-        moderator.apps(),
-        &fleet,
-        &m,
-        ServeConfig { runs: 4, max_inflight: 2, verify: true, seed: 5 },
-    )
-    .unwrap();
+    let report = runtime
+        .run(&RunConfig { runs: 4, max_inflight: 2, verify: true, seed: 5 })
+        .unwrap();
+    assert_eq!(report.backend, "pjrt");
     assert_eq!(report.completions, 8);
-    assert!(report.verified, "split/full mismatch in serving");
+    assert_eq!(report.verified, Some(true), "split/full mismatch in serving");
     assert!(report.throughput > 0.0);
+    assert_eq!(report.per_app.len(), 2);
+    assert!(report.per_app.iter().all(|p| p.completions == 4));
 }
