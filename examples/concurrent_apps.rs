@@ -30,7 +30,7 @@ fn main() {
         // Register the workload; a planner that cannot fit all three apps
         // errors on the registration that breaks the camel's back.
         let mut failed = false;
-        for spec in workload(2).pipelines {
+        for spec in workload(2).unwrap().pipelines {
             if let Err(e) = runtime.register(spec) {
                 println!("{e}");
                 failed = true;

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     // Restrict to 2-way splits: aot.py emits chunk artifacts for every
     // 2-way split of the demo models.
     let mut planner = Synergy::planner();
-    planner.cfg = EnumerateCfg { max_split_devices: 2 };
+    planner.cfg.enumerate = EnumerateCfg { max_split_devices: 2 };
     let runtime = SynergyRuntime::builder()
         .fleet(fleet4())
         .planner(planner)

@@ -32,7 +32,7 @@ fn main() {
 
     // Single-candidate estimation (the progressive search's inner call).
     {
-        let w = workload(1);
+        let w = workload(1).unwrap();
         let lm = LatencyModel::new(&fleet);
         let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
         let mut accum = EstimateAccum::new(&fleet);
@@ -47,7 +47,7 @@ fn main() {
 
     // Holistic orchestration per workload (the moderator-visible latency).
     for wid in 1..=4 {
-        let w = workload(wid);
+        let w = workload(wid).unwrap();
         bench(&format!("orchestrate/workload{wid}"), 5, || {
             Synergy::planner().plan(&w.pipelines, &fleet).unwrap()
         });
@@ -70,7 +70,7 @@ fn main() {
 
     // DES throughput (events/s) on the heaviest workload.
     {
-        let w = workload(1);
+        let w = workload(1).unwrap();
         let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
         let gt = GroundTruth::with_seed(7);
         bench("simulate/workload1-48rounds", 5, || {

@@ -1,0 +1,126 @@
+//! Planner-scaling benchmark: bounded (beam + branch-and-bound) vs
+//! exhaustive plan search beyond the paper's 4-device fleets.
+//!
+//! Four sections, with hard gates (run by CI):
+//!
+//! 1. print the closed-form skeleton space per Table I model on `fleet8`
+//!    — the mixed workload's combined space saturates `u64`, which is the
+//!    demonstration that exhaustive enumeration is intractable there;
+//! 2. time exhaustive vs bounded selection on the one fleet8 pipeline
+//!    whose exhaustive space is still finite enough to enumerate (KWS,
+//!    ~3.15M skeletons) and assert the bounded search is ≥ 50× faster;
+//! 3. time bounded selection of the full 8-model mixed workload on
+//!    `fleet8` and assert it selects a runnable plan in < 1 s;
+//! 4. report the bounded/exhaustive plan-quality ratio on the paper fleet
+//!    (Table I workloads) and assert it stays ≥ 0.99.
+
+mod bench_harness;
+
+use bench_harness::time_once;
+use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::model::zoo::ModelName;
+use synergy::orchestrator::{Planner, Synergy};
+use synergy::plan::{skeleton_space, DEFAULT_BEAM_WIDTH};
+use synergy::workload::{all_workloads, fleet4, fleet8, pipeline, workload_mixed8};
+
+fn fmt(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3} s")
+    } else if t >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else {
+        format!("{:.1} µs", t * 1e6)
+    }
+}
+
+fn main() {
+    // --- 1. The wall: per-pipeline skeleton spaces on fleet8 ----------
+    let w8 = workload_mixed8(8);
+    println!("skeleton space per pipeline on fleet8 (exhaustive search visits each):");
+    for p in &w8.pipelines {
+        let space = skeleton_space(8, p.model.num_layers(), usize::MAX);
+        let shown = if space == u64::MAX {
+            "> u64::MAX (saturated)".to_string()
+        } else {
+            format!("{space}")
+        };
+        println!(
+            "  {:<16} L={:<3} skeletons {}",
+            p.name,
+            p.model.num_layers(),
+            shown
+        );
+    }
+
+    // --- 2. Exhaustive vs bounded on the tractable fleet8 slice -------
+    let f8 = fleet8();
+    let kws = vec![pipeline(0, ModelName::KWS, 0, 1)];
+    let exhaustive = Synergy::planner();
+    let t_ex = time_once(&mut || exhaustive.plan(&kws, &f8).unwrap());
+    let bounded = Synergy::planner_bounded(DEFAULT_BEAM_WIDTH);
+    let mut t_bo = f64::INFINITY;
+    for _ in 0..5 {
+        t_bo = t_bo.min(time_once(&mut || bounded.plan(&kws, &f8).unwrap()));
+    }
+    let ratio = t_ex / t_bo.max(1e-9);
+    println!(
+        "bench planner-scaling/kws-fleet8/exhaustive   wall {:>10}  ({} candidates)",
+        fmt(t_ex),
+        exhaustive.candidates_scored.get()
+    );
+    println!(
+        "bench planner-scaling/kws-fleet8/bounded      wall {:>10}  ({} candidates)",
+        fmt(t_bo),
+        bounded.candidates_scored.get()
+    );
+    println!("planner-scaling/kws-fleet8 bounded speedup {ratio:.0}x");
+    assert!(
+        ratio >= 50.0,
+        "bounded search must be >= 50x faster on fleet8/KWS (got {ratio:.1}x)"
+    );
+
+    // --- 3. Bounded mixed-8 workload on fleet8 in < 1 s ----------------
+    let planner = Synergy::planner_bounded(DEFAULT_BEAM_WIDTH);
+    let mut best = f64::INFINITY;
+    let mut plan = None;
+    for _ in 0..3 {
+        best = best.min(time_once(&mut || {
+            plan = Some(planner.plan(&w8.pipelines, &f8).unwrap());
+        }));
+    }
+    let plan = plan.unwrap();
+    plan.check_runnable(&w8.pipelines, &f8).unwrap();
+    println!(
+        "bench planner-scaling/mixed8-fleet8/bounded   wall {:>10}  ({} candidates)",
+        fmt(best),
+        planner.candidates_scored.get()
+    );
+    assert!(
+        best < 1.0,
+        "bounded mixed-8 selection must finish in < 1 s (took {})",
+        fmt(best)
+    );
+
+    // --- 4. Plan-quality ratio on the paper fleet ----------------------
+    let f4 = fleet4();
+    let lm = LatencyModel::new(&f4);
+    for w in all_workloads() {
+        let ex = Synergy::planner().plan(&w.pipelines, &f4).unwrap();
+        let bo = Synergy::planner_bounded(DEFAULT_BEAM_WIDTH)
+            .plan(&w.pipelines, &f4)
+            .unwrap();
+        let te = estimate_plan(&ex, &w.pipelines, &f4, &lm).throughput;
+        let tb = estimate_plan(&bo, &w.pipelines, &f4, &lm).throughput;
+        println!(
+            "planner-scaling/quality {:<12} bounded/exhaustive {:.4}",
+            w.name,
+            tb / te
+        );
+        assert!(
+            tb >= 0.99 * te,
+            "{}: bounded {tb} below 0.99x exhaustive {te}",
+            w.name
+        );
+    }
+    println!("OK: bounded search scales to fleet8 with exhaustive-quality paper-fleet plans");
+}

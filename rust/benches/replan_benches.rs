@@ -78,7 +78,7 @@ fn fourth_app() -> PipelineSpec {
 }
 
 fn main() {
-    let w = workload(1);
+    let w = workload(1).unwrap();
     let iters = 20;
 
     // --- Event 1: device-left (5 → 4 suffix shrink) ------------------

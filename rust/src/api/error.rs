@@ -32,6 +32,10 @@ pub enum RuntimeError {
     #[error("unsupported fleet change: {0}")]
     FleetChange(String),
 
+    /// No benchmark workload has this id (see `synergy list`).
+    #[error("no workload {id}: valid workloads are {valid}")]
+    UnknownWorkload { id: usize, valid: String },
+
     /// No deployment is active (no apps registered, or all paused).
     #[error("no active deployment: register (or resume) at least one app first")]
     NoDeployment,

@@ -19,19 +19,21 @@
 //!   incomplete (plans through the new device are missing), so the cache
 //!   is invalidated and rebuilt on the next replan.
 //!
-//! Selection itself ([`select_with_cache`]) mirrors the progressive
-//! accumulation of [`ProgressivePlanner::select`] — same ordering, same
-//! scoring, same first-fit-decreasing OOR retry — over the cached
-//! skeletons composed with the (cheaply recomputed) endpoint candidates.
+//! Selection itself ([`select_with_cache`]) delegates to the shared
+//! skeleton-selection core (`ProgressivePlanner::select_over_skeletons`) —
+//! same ordering, same scoring, same first-fit-decreasing OOR retry — over
+//! the cached skeletons composed with the (cheaply recomputed) endpoint
+//! candidates. Cached entries carry each skeleton's chain-latency bound,
+//! so replans under bounded search also reuse the pruning work, and cache
+//! misses for several apps are enumerated in parallel
+//! ([`crate::plan::enumerate_skeletons_for`]).
 
 use std::collections::BTreeMap;
 
 use crate::device::{DeviceSpec, Fleet};
-use crate::estimator::{EstimateAccum, LatencyModel};
 use crate::orchestrator::{PlanError, Priority, ProgressivePlanner};
 use crate::pipeline::{PipelineId, PipelineSpec};
-use crate::plan::collab::MemoryLedger;
-use crate::plan::{enumerate_splits_with, Assignment, CollabPlan, EnumerateCfg, ExecutionPlan};
+use crate::plan::{enumerate_skeletons_for, CollabPlan, PlannerCfg, SearchMode, Skeleton};
 
 use super::qos::AppPriority;
 
@@ -62,24 +64,32 @@ pub(crate) struct PlanCache {
     /// matches a stock platform but whose accelerator capacities differ —
     /// chunk-fit filtering baked into the skeletons must not survive that.
     sig: Vec<DeviceSpec>,
-    /// Enumeration limits the skeletons were produced under.
-    cfg: EnumerateCfg,
-    per_app: BTreeMap<PipelineId, Vec<Vec<Assignment>>>,
+    /// Search configuration the skeletons were produced under (a search-
+    /// mode or limit change invalidates everything: bounded and exhaustive
+    /// candidate lists are not interchangeable).
+    cfg: PlannerCfg,
+    per_app: BTreeMap<PipelineId, Vec<Skeleton>>,
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache {
             sig: Vec::new(),
-            cfg: EnumerateCfg::default(),
+            cfg: PlannerCfg::default(),
             per_app: BTreeMap::new(),
         }
     }
 
-    /// Reconcile the cache with the current fleet + enumeration config.
+    /// Reconcile the cache with the current fleet + search config.
     /// Suffix shrinks filter in place (cache survives); anything else
     /// invalidates.
-    pub fn sync_fleet(&mut self, fleet: &Fleet, cfg: EnumerateCfg) {
+    ///
+    /// Filtering keeps each surviving skeleton's chain bound (it depends
+    /// only on its own devices, whose specs are unchanged). Exhaustive
+    /// lists stay an order-preserved subsequence — exactly what fresh
+    /// enumeration would produce; bounded lists stay bound-sorted, they
+    /// merely lose the candidates that named the departed device.
+    pub fn sync_fleet(&mut self, fleet: &Fleet, cfg: PlannerCfg) {
         let sig: Vec<DeviceSpec> = fleet.devices.iter().map(|d| d.spec.clone()).collect();
         if cfg != self.cfg {
             self.per_app.clear();
@@ -90,7 +100,7 @@ impl PlanCache {
             // Suffix departure: drop skeletons touching departed devices.
             let n = sig.len();
             for skels in self.per_app.values_mut() {
-                skels.retain(|s| s.iter().all(|a| a.device.0 < n));
+                skels.retain(|s| s.chunks.iter().all(|a| a.device.0 < n));
             }
         } else {
             self.per_app.clear();
@@ -98,20 +108,18 @@ impl PlanCache {
         self.sig = sig;
     }
 
-    /// Ensure an entry exists for `spec`; returns whether it was a cache
-    /// hit. Call [`Self::sync_fleet`] first.
-    pub fn ensure(&mut self, spec: &PipelineSpec, fleet: &Fleet) -> bool {
-        if self.per_app.contains_key(&spec.id) {
-            return true;
-        }
-        let mut skels = Vec::new();
-        enumerate_splits_with(spec, fleet, self.cfg, |chunks| skels.push(chunks.to_vec()));
-        self.per_app.insert(spec.id, skels);
-        false
+    pub fn contains(&self, id: PipelineId) -> bool {
+        self.per_app.contains_key(&id)
     }
 
-    pub fn get(&self, id: PipelineId) -> Option<&[Vec<Assignment>]> {
-        self.per_app.get(&id).map(Vec::as_slice)
+    pub fn insert(&mut self, id: PipelineId, skels: Vec<Skeleton>) {
+        self.per_app.insert(id, skels);
+    }
+
+    /// The cached candidate lists (selection input). Call
+    /// [`Self::sync_fleet`] and fill misses first.
+    pub fn entries(&self) -> &BTreeMap<PipelineId, Vec<Skeleton>> {
+        &self.per_app
     }
 
     /// Drop one app's entry (unregistration, failed registration).
@@ -134,8 +142,9 @@ fn selection_order(
 
 /// Progressive selection over cached skeletons. Equivalent to
 /// [`ProgressivePlanner::select`] (same outputs on identical inputs), but
-/// the enumeration work is amortized across replans, and apps carry QoS
-/// priority classes.
+/// the enumeration work is amortized across replans — and cache misses
+/// for several apps (cold start, fleet growth) are enumerated in parallel
+/// — and apps carry QoS priority classes.
 pub(crate) fn select_with_cache(
     pp: &ProgressivePlanner,
     specs: &[PipelineSpec],
@@ -144,99 +153,69 @@ pub(crate) fn select_with_cache(
     cache: &mut PlanCache,
 ) -> (Result<CollabPlan, PlanError>, ReplanStats) {
     let mut stats = ReplanStats::default();
-    for spec in specs {
-        if cache.ensure(spec, fleet) {
-            stats.reused_apps += 1;
-        } else {
-            stats.enumerated_apps += 1;
-        }
+    let missing: Vec<&PipelineSpec> = specs.iter().filter(|s| !cache.contains(s.id)).collect();
+    stats.enumerated_apps = missing.len();
+    stats.reused_apps = specs.len() - missing.len();
+    for (id, skels) in enumerate_skeletons_for(&missing, fleet, pp.cfg) {
+        cache.insert(id, skels);
     }
 
-    let mut result = select_ordered(pp, specs, fleet, cache, &mut stats, {
-        selection_order(pp.priority, specs, prios)
-    });
-    // Greedy accumulation can dead-end; retry once first-fit-decreasing
-    // (mirrors ProgressivePlanner::select).
-    if matches!(result, Err(PlanError::Oor { .. })) && pp.priority != Priority::ModelSizeDesc {
-        result = select_ordered(pp, specs, fleet, cache, &mut stats, {
-            selection_order(Priority::ModelSizeDesc, specs, prios)
-        });
+    let mut result = run_orders(pp, specs, prios, fleet, cache, &mut stats.candidates_scored);
+    // A suffix shrink filters bounded-mode candidate lists down to the
+    // survivors of a beam that targeted the *old* fleet — that subset can
+    // dead-end (even empty out) where fresh enumeration on the shrunken
+    // fleet would succeed, so an OOR from reused bounded entries is not a
+    // real verdict. Rebuild every candidate list and retry once before
+    // reporting it. (Exhaustive lists are immune: a filtered subsequence
+    // equals fresh enumeration exactly.)
+    if matches!(result, Err(PlanError::Oor { .. }))
+        && matches!(pp.cfg.search, SearchMode::Bounded { .. })
+        && stats.reused_apps > 0
+    {
+        for spec in specs {
+            cache.invalidate_app(spec.id);
+        }
+        let all: Vec<&PipelineSpec> = specs.iter().collect();
+        for (id, skels) in enumerate_skeletons_for(&all, fleet, pp.cfg) {
+            cache.insert(id, skels);
+        }
+        stats.reused_apps = 0;
+        stats.enumerated_apps = specs.len();
+        result = run_orders(pp, specs, prios, fleet, cache, &mut stats.candidates_scored);
     }
     // Keep the planner's own search-effort diagnostic in sync.
     pp.candidates_scored.set(stats.candidates_scored);
     (result, stats)
 }
 
-// KEEP IN SYNC with `ProgressivePlanner::select_with_order`
-// (orchestrator/progressive.rs): same Unsatisfiable check, same ledger/
-// accumulator updates, same objective scoring with strict-`>` tie-break.
-// The streaming path must stay allocation-free, so the loop exists twice;
-// `tests::cached_selection_matches_streaming_selection` pins the parity —
-// extend that test when touching either copy.
-fn select_ordered(
+/// Primary priority order, then the first-fit-decreasing OOR retry
+/// (mirrors `ProgressivePlanner::select`).
+fn run_orders(
     pp: &ProgressivePlanner,
     specs: &[PipelineSpec],
+    prios: &[AppPriority],
     fleet: &Fleet,
     cache: &PlanCache,
-    stats: &mut ReplanStats,
-    order: Vec<usize>,
+    scored: &mut u64,
 ) -> Result<CollabPlan, PlanError> {
-    let lm = LatencyModel::new(fleet);
-    let mut ledger = MemoryLedger::default();
-    let mut accum = EstimateAccum::new(fleet);
-    let mut selected: Vec<Option<ExecutionPlan>> = vec![None; specs.len()];
-    // Scratch buffers reused across all candidate evaluations.
-    let mut unit_scratch = Vec::with_capacity(16);
-
-    for &i in &order {
-        let spec = &specs[i];
-        let sources = spec.source_candidates(fleet);
-        let targets = spec.target_candidates(fleet);
-        if sources.is_empty() || targets.is_empty() {
-            return Err(PlanError::Unsatisfiable {
-                pipeline: spec.name.clone(),
-            });
-        }
-        let skeletons = cache.get(spec.id).expect("cache entry ensured above");
-        let mut cand = ExecutionPlan {
-            pipeline: spec.id,
-            source_dev: sources[0],
-            target_dev: targets[0],
-            chunks: Vec::new(),
-        };
-        let mut best: Option<(f64, ExecutionPlan)> = None;
-        for skel in skeletons {
-            cand.chunks.clear();
-            cand.chunks.extend_from_slice(skel);
-            // Joint-memory fit is endpoint-independent: check once per
-            // skeleton instead of once per enumerated plan.
-            if !ledger.fits(&cand, &spec.model, fleet) {
-                continue;
-            }
-            for &s in &sources {
-                for &t in &targets {
-                    cand.source_dev = s;
-                    cand.target_dev = t;
-                    stats.candidates_scored += 1;
-                    let est = accum.peek_fast(&cand, spec, fleet, &lm, &mut unit_scratch);
-                    let score = pp.objective.score(&est);
-                    if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
-                        best = Some((score, cand.clone()));
-                    }
-                }
-            }
-        }
-        let (_, chosen) = best.ok_or_else(|| PlanError::Oor {
-            pipeline: spec.name.clone(),
-        })?;
-        ledger.commit(&chosen, &spec.model);
-        accum.add_plan(&chosen, spec, fleet, &lm);
-        selected[i] = Some(chosen);
+    let result = pp.select_over_skeletons(
+        specs,
+        fleet,
+        &selection_order(pp.priority, specs, prios),
+        cache.entries(),
+        scored,
+    );
+    match result {
+        Err(PlanError::Oor { .. }) if pp.priority != Priority::ModelSizeDesc => pp
+            .select_over_skeletons(
+                specs,
+                fleet,
+                &selection_order(Priority::ModelSizeDesc, specs, prios),
+                cache.entries(),
+                scored,
+            ),
+        other => other,
     }
-
-    Ok(CollabPlan::new(
-        selected.into_iter().map(Option::unwrap).collect(),
-    ))
 }
 
 #[cfg(test)]
@@ -281,9 +260,24 @@ mod tests {
     }
 
     #[test]
+    fn cached_bounded_selection_matches_direct_bounded_selection() {
+        // The replan cache and the planner's own bounded path must agree:
+        // both run select_over_skeletons on identical candidate lists.
+        let pp = Synergy::planner_bounded(8);
+        let fleet = fleet_n(3);
+        let ps = any_pipes(&[ModelName::KWS, ModelName::SimpleNet]);
+        let prios = vec![AppPriority::Normal; ps.len()];
+        let mut cache = PlanCache::new();
+        cache.sync_fleet(&fleet, pp.cfg);
+        let (res, stats) = select_with_cache(&pp, &ps, &prios, &fleet, &mut cache);
+        assert_eq!(res.unwrap(), pp.select(&ps, &fleet).unwrap());
+        assert_eq!(stats.enumerated_apps, 2);
+    }
+
+    #[test]
     fn suffix_shrink_keeps_cache_and_matches_fresh_enumeration() {
         let pp = Synergy::planner();
-        let w = workload(1);
+        let w = workload(1).unwrap();
         let prios = vec![AppPriority::Normal; w.pipelines.len()];
         let mut cache = PlanCache::new();
 
@@ -300,6 +294,41 @@ mod tests {
         assert!(stats.incremental(), "{stats:?}");
         // …and the selected plan is identical to planning from scratch.
         assert_eq!(incremental, pp.select(&w.pipelines, &small).unwrap());
+    }
+
+    #[test]
+    fn bounded_suffix_shrink_reenumerates_when_filtered_candidates_dead_end() {
+        // beam_width = 1 makes every UNet candidate's first chunk land on
+        // the fastest device (the MAX78002 at d4); when that device
+        // departs, the suffix filter empties the cached list. The replan
+        // must rebuild candidates on the shrunken fleet instead of
+        // reporting a spurious OOR.
+        use crate::device::DeviceKind;
+        use crate::workload::fleet_of;
+        let pp = Synergy::planner_bounded(1);
+        let big = fleet_of(&[
+            DeviceKind::Max78000,
+            DeviceKind::Max78000,
+            DeviceKind::Max78000,
+            DeviceKind::Max78000,
+            DeviceKind::Max78002,
+        ]);
+        let ps = any_pipes(&[ModelName::UNet]);
+        let prios = vec![AppPriority::Normal];
+        let mut cache = PlanCache::new();
+        cache.sync_fleet(&big, pp.cfg);
+        let (res, _) = select_with_cache(&pp, &ps, &prios, &big, &mut cache);
+        res.unwrap();
+
+        let small = fleet_of(&[DeviceKind::Max78000; 4]);
+        cache.sync_fleet(&small, pp.cfg);
+        let (res, stats) = select_with_cache(&pp, &ps, &prios, &small, &mut cache);
+        let plan = res.unwrap();
+        plan.check_runnable(&ps, &small).unwrap();
+        assert_eq!(
+            stats.enumerated_apps, 1,
+            "dead-ended filtered cache must be rebuilt: {stats:?}"
+        );
     }
 
     #[test]

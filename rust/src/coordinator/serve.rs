@@ -36,6 +36,21 @@ fn synth_frame(shape: Shape, seed: u64) -> Vec<f32> {
         .collect()
 }
 
+/// One synthetic sensor frame per app, sized from the manifest's input
+/// shapes. Fallible: an app whose model is absent from the manifest is an
+/// error naming the app, not a panic mid-deployment.
+fn synth_inputs(apps: &[PipelineSpec], manifest: &Manifest, seed: u64) -> Result<Vec<Vec<f32>>> {
+    apps.iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let mm = manifest
+                .model(&spec.name)
+                .with_context(|| format!("sensor frame for app {:?}", spec.name))?;
+            Ok(synth_frame(mm.input, seed ^ ((i as u64) << 32)))
+        })
+        .collect()
+}
+
 /// Serving parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
@@ -157,19 +172,17 @@ pub fn serve(
     service.handle().preload(preload)?;
 
     // Synthetic sensor frames (element-count sized; see `synth_frame`).
-    let inputs: Vec<Vec<f32>> = apps
-        .iter()
-        .enumerate()
-        .map(|(i, spec)| {
-            let mm = manifest.model(&spec.name).unwrap();
-            synth_frame(mm.input, cfg.seed ^ ((i as u64) << 32))
-        })
-        .collect();
+    // A missing manifest entry is a typed error surfaced to the caller —
+    // these lookups were `.unwrap()`s that took the whole serving process
+    // down when an app's model had no AOT artifacts.
+    let inputs = synth_inputs(apps, manifest, cfg.seed)?;
     let reference: Vec<Option<Vec<f32>>> = if cfg.verify {
-        apps.iter()
-            .enumerate()
-            .map(|(i, spec)| {
-                let mm = manifest.model(&spec.name).unwrap();
+        let mut refs = Vec::with_capacity(apps.len());
+        for (i, spec) in apps.iter().enumerate() {
+            let mm = manifest
+                .model(&spec.name)
+                .with_context(|| format!("verification reference for app {:?}", spec.name))?;
+            refs.push(
                 service
                     .handle()
                     .run(
@@ -177,9 +190,10 @@ pub fn serve(
                         inputs[i].clone(),
                         vec![mm.input.h, mm.input.w, mm.input.c],
                     )
-                    .ok()
-            })
-            .collect()
+                    .ok(),
+            );
+        }
+        refs
     } else {
         vec![None; apps.len()]
     };
@@ -336,6 +350,28 @@ mod tests {
         assert_eq!(frame.len(), 64 * 64 * 3);
         assert_eq!(frame.len() as u64, shape.elements());
         assert_ne!(frame.len(), 4 * 64 * 64 * 3, "f32-byte-count confusion");
+    }
+
+    #[test]
+    fn missing_manifest_model_is_an_error_not_a_panic() {
+        // Regression: `manifest.model(..).unwrap()` panicked mid-serving
+        // when an app's model had no AOT artifacts; the lookup must
+        // propagate a typed error naming the app instead.
+        use crate::model::zoo::{model_by_name, ModelName};
+        use crate::pipeline::{SourceReq, TargetReq};
+        let spec = PipelineSpec::new(
+            0,
+            "ghost",
+            SourceReq::Any,
+            model_by_name(ModelName::KWS).clone(),
+            TargetReq::Any,
+        );
+        let err = synth_inputs(&[spec], &Manifest::default(), 42).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("ghost") && msg.contains("not in manifest"),
+            "{msg}"
+        );
     }
 
     #[test]

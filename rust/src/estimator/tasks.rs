@@ -2,6 +2,9 @@
 //! its model — clock cycles for inference, fitted regression for memory
 //! ops, size/bandwidth for communication, profiles for sensing/interaction.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+
 use crate::device::{DeviceId, Fleet, SensorKind};
 use crate::model::ModelGraph;
 use crate::pipeline::{PipelineSpec, SourceReq};
@@ -14,9 +17,34 @@ use super::sensing;
 
 /// The planner's latency model over a fleet: per-device memory-op
 /// regressions plus the closed-form models for everything else.
+///
+/// Inference latencies off the P = 64 prefix-cache fast path (phone-class
+/// accelerators, plain cores) are O(range length) to compute, so they are
+/// memoized per `(device platform, model instance, layer range)` — the
+/// progressive search re-evaluates the same chunk on the same platform
+/// thousands of times per orchestration. The memo is interior-mutable so
+/// `task_latency` stays `&self` on the hot path (which makes the model
+/// `!Sync`; per-thread models are cheap to build).
 pub struct LatencyModel<'f> {
     pub fleet: &'f Fleet,
     memops: Vec<Option<MemopModel>>,
+    /// Dense device index → index of the first device with an identical
+    /// platform spec (identical spec ⇒ identical latency for every task).
+    slot_of: Vec<usize>,
+    /// `(slot, model uid, range start, range end)` → inference seconds.
+    infer_memo: RefCell<HashMap<(usize, u64, usize, usize), f64>>,
+}
+
+/// Dense device index → first device index with an identical spec.
+fn slots_of(fleet: &Fleet) -> Vec<usize> {
+    (0..fleet.len())
+        .map(|i| {
+            let spec = &fleet.devices[i].spec;
+            (0..i)
+                .find(|&j| fleet.devices[j].spec == *spec)
+                .unwrap_or(i)
+        })
+        .collect()
 }
 
 impl<'f> LatencyModel<'f> {
@@ -32,7 +60,12 @@ impl<'f> LatencyModel<'f> {
                     .map(|a| MemopModel::from_bus(a.bus_bytes_per_s, a.bus_overhead_s))
             })
             .collect();
-        LatencyModel { fleet, memops }
+        LatencyModel {
+            fleet,
+            memops,
+            slot_of: slots_of(fleet),
+            infer_memo: RefCell::new(HashMap::new()),
+        }
     }
 
     /// Build by profiling a ground-truth probe per device (the paper's
@@ -51,7 +84,12 @@ impl<'f> LatencyModel<'f> {
                     .map(|_| MemopModel::fit(|bytes| probe(d.id, bytes)))
             })
             .collect();
-        LatencyModel { fleet, memops }
+        LatencyModel {
+            fleet,
+            memops,
+            slot_of: slots_of(fleet),
+            infer_memo: RefCell::new(HashMap::new()),
+        }
     }
 
     /// Sensor kind declared by the pipeline's source requirement, if any.
@@ -84,20 +122,52 @@ impl<'f> LatencyModel<'f> {
                 // still costs a copy; model as the CPU touching each byte.
                 .unwrap_or(bytes as f64 / dev.spec.cpu_clock_hz),
             TaskKind::Infer { range } => match &dev.spec.accel {
-                Some(a) => {
+                // P = 64 accelerators are O(1) via the model's prefix
+                // cache — no memo needed on the ubiquitous case.
+                Some(a) if a.parallel_procs == 64 => {
                     clock::infer_latency_accel(model, range, a.parallel_procs, a.clock_hz)
                 }
-                None => clock::infer_latency_sequential(
-                    model,
-                    range,
-                    dev.spec.cpu_clock_hz,
-                    dev.spec.cycles_per_mac,
-                ),
+                _ => {
+                    let key = (
+                        self.slot_of[task.device.0],
+                        model.uid(),
+                        range.start,
+                        range.end,
+                    );
+                    let cached = self.infer_memo.borrow().get(&key).copied();
+                    match cached {
+                        Some(v) => v,
+                        None => {
+                            let v = match &dev.spec.accel {
+                                Some(a) => clock::infer_latency_accel(
+                                    model,
+                                    range,
+                                    a.parallel_procs,
+                                    a.clock_hz,
+                                ),
+                                None => clock::infer_latency_sequential(
+                                    model,
+                                    range,
+                                    dev.spec.cpu_clock_hz,
+                                    dev.spec.cycles_per_mac,
+                                ),
+                            };
+                            self.infer_memo.borrow_mut().insert(key, v);
+                            v
+                        }
+                    }
+                }
             },
             TaskKind::Tx { bytes, to } => comm::tx_latency(dev, self.fleet.get(to), bytes),
             TaskKind::Rx { bytes, from } => comm::tx_latency(self.fleet.get(from), dev, bytes),
             TaskKind::Interact { .. } => sensing::INTERACT_LATENCY_S,
         }
+    }
+
+    /// Number of memoized inference entries (test instrumentation).
+    #[cfg(test)]
+    pub(crate) fn infer_memo_entries(&self) -> usize {
+        self.infer_memo.borrow().len()
     }
 }
 
@@ -175,6 +245,43 @@ mod tests {
         assert!((with_kind - 33e-3).abs() < 1e-9);
         let without = lm.task_latency(&t, &model(), None);
         assert_eq!(without, 10e-3); // generic floor
+    }
+
+    #[test]
+    fn infer_latency_is_memoized_off_the_fast_path() {
+        use crate::model::SplitRange;
+        // A phone accelerator has 256 lanes, so it misses the P = 64
+        // prefix cache and takes the memoized path.
+        let f = Fleet::new(vec![Device::new(0, "phone", DeviceKind::Phone, vec![], vec![])]);
+        let lm = LatencyModel::new(&f);
+        let m = model();
+        let t = task(0, TaskKind::Infer { range: SplitRange::new(0, 2) });
+        let a = lm.task_latency(&t, &m, None);
+        assert_eq!(lm.infer_memo_entries(), 1);
+        let b = lm.task_latency(&t, &m, None);
+        assert_eq!(lm.infer_memo_entries(), 1, "repeat query must hit the memo");
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn infer_memo_shares_platforms_but_not_model_instances() {
+        use crate::model::SplitRange;
+        // Two identical MCUs share one platform slot; two independently
+        // built models (even with the same name) never collide (uid key).
+        let f = Fleet::new(vec![
+            Device::new(0, "a", DeviceKind::McuMax32650, vec![], vec![]),
+            Device::new(1, "b", DeviceKind::McuMax32650, vec![], vec![]),
+        ]);
+        let lm = LatencyModel::new(&f);
+        let m1 = model();
+        let m2 = model();
+        let r = SplitRange::new(0, 2);
+        let a0 = lm.task_latency(&task(0, TaskKind::Infer { range: r }), &m1, None);
+        let a1 = lm.task_latency(&task(1, TaskKind::Infer { range: r }), &m1, None);
+        assert_eq!(lm.infer_memo_entries(), 1, "identical platforms share a slot");
+        assert_eq!(a0.to_bits(), a1.to_bits());
+        let _ = lm.task_latency(&task(0, TaskKind::Infer { range: r }), &m2, None);
+        assert_eq!(lm.infer_memo_entries(), 2, "distinct model instances do not");
     }
 
     #[test]

@@ -70,6 +70,23 @@ impl EstimateAccum {
         }
     }
 
+    /// Busiest unit's committed work — adding a plan can only raise it, so
+    /// it lower-bounds every reachable period (used by the bounded search's
+    /// optimistic-score pruning, `Objective::score_upper_bound`).
+    pub fn bottleneck(&self) -> f64 {
+        self.unit_busy.values().copied().fold(0.0, f64::max)
+    }
+
+    /// Longest committed chain (same monotonicity as [`Self::bottleneck`]).
+    pub fn critical_path(&self) -> f64 {
+        self.chains.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Number of committed pipelines.
+    pub fn num_pipelines(&self) -> usize {
+        self.chains.len()
+    }
+
     /// Fold one execution plan into the accumulator.
     pub fn add_plan(
         &mut self,

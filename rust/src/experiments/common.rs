@@ -126,7 +126,7 @@ mod tests {
     #[test]
     fn evaluate_roster_on_workload1() {
         let args = Args::default();
-        let w = workload(1);
+        let w = workload(1).unwrap();
         let f = fleet4();
         let cells = evaluate_roster(&w.pipelines, &f, Objective::TputMax, Cost::Latency, &args);
         assert_eq!(cells.len(), 8);

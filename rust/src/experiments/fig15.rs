@@ -63,7 +63,7 @@ mod tests {
         let args = Args::parse(["--runs".to_string(), "12".to_string()], &["runs"]);
         let fleet = fleet4();
         for wid in 1..=4 {
-            let w = workload(wid);
+            let w = workload(wid).expect("Table I workload");
             let cells =
                 evaluate_roster(&w.pipelines, &fleet, Objective::TputMax, Cost::Latency, &args);
             let synergy = cells[0].tput().expect("Synergy must not OOR");
@@ -85,7 +85,7 @@ mod tests {
         // Workload 2's three mid-size models collide when placed
         // independently (the paper's IndModel failure).
         let args = Args::parse(["--runs".to_string(), "8".to_string()], &["runs"]);
-        let w = workload(2);
+        let w = workload(2).unwrap();
         let cells = evaluate_roster(&w.pipelines, &fleet4(), Objective::TputMax, Cost::Latency, &args);
         let ind = cells.iter().find(|c| c.method == "IndModel").unwrap();
         assert!(ind.result.is_none(), "IndModel should OOR on W2");

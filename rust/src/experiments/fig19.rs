@@ -14,7 +14,7 @@ use crate::workload::{fleet4, workload};
 pub fn run(args: &Args) -> String {
     let mut out = String::new();
     for wid in [1usize, 2] {
-        let w = workload(wid);
+        let w = workload(wid).expect("Table I workload");
         let cells =
             evaluate_roster(&w.pipelines, &fleet4(), Objective::PowerMin, Cost::Energy, args);
         let mut t = Table::new(["method", "power (J/s)", "TPUT (inf/s)"]);
@@ -34,7 +34,7 @@ mod tests {
     #[test]
     fn synergy_power_is_minimal_among_successes() {
         let args = Args::parse(["--runs".to_string(), "10".to_string()], &["runs"]);
-        let w = workload(1);
+        let w = workload(1).unwrap();
         let cells =
             evaluate_roster(&w.pipelines, &fleet4(), Objective::PowerMin, Cost::Energy, &args);
         let synergy = cells[0].power().expect("Synergy must not OOR");

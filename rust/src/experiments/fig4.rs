@@ -21,7 +21,7 @@ pub fn run(args: &Args) -> String {
     ]);
     let paper_ratio = [57.7, 28.8];
     for (i, wid) in [1usize, 2].iter().enumerate() {
-        let w = workload(*wid);
+        let w = workload(*wid).expect("Table I workload");
         let synergy = evaluate(&Synergy::planner(), "Synergy", &w.pipelines, &fleet4(), args);
         let offload = evaluate(
             &PhoneOffload,
@@ -52,7 +52,7 @@ mod tests {
     #[test]
     fn synergy_beats_offloading_by_an_order_of_magnitude() {
         let args = Args::default();
-        let w = workload(1);
+        let w = workload(1).unwrap();
         let synergy = evaluate(&Synergy::planner(), "Synergy", &w.pipelines, &fleet4(), &args);
         let offload = evaluate(
             &PhoneOffload,

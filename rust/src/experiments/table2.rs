@@ -26,7 +26,7 @@ fn psr_planner(policy: Policy) -> ProgressivePlanner {
 }
 
 pub fn rows(args: &Args, wid: usize) -> Vec<(&'static str, Cell)> {
-    let w = workload(wid);
+    let w = workload(wid).expect("Table I workload");
     let f = fleet4();
     vec![
         (

@@ -10,7 +10,7 @@ use crate::util::table::Table;
 use crate::workload::{fleet4, workload};
 
 pub fn cells(args: &Args, wid: usize) -> Vec<(Objective, crate::experiments::common::Cell)> {
-    let w = workload(wid);
+    let w = workload(wid).expect("Table I workload");
     let f = fleet4();
     [Objective::TputMax, Objective::LatencyMin, Objective::PowerMin]
         .into_iter()

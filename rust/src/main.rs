@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   exp <id|all> [--runs N] [--seed S] [--full]   reproduce a paper table/figure
-//!   plan --workload N [--method M]                plan + print a deployment
+//!   plan --workload N [--fleet F] [--beam W]      plan + print a deployment
 //!   serve [--workload demo] [--runs N]            real PJRT serving (needs artifacts)
 //!   zoo                                           print the Table I model zoo
 //!   list                                          list experiments
@@ -15,7 +15,7 @@ use synergy::util::table::Table;
 use synergy::workload;
 
 const VALUE_OPTS: &[&str] = &[
-    "runs", "seed", "workload", "method", "combos", "artifacts", "inflight",
+    "runs", "seed", "workload", "combos", "artifacts", "inflight", "fleet", "beam",
 ];
 
 fn main() {
@@ -40,7 +40,9 @@ fn usage() -> String {
      \n\
      exp <id|all>   reproduce a paper experiment (see `synergy list`)\n\
      \u{20}              --runs N (sim rounds), --seed S, --full (fig9 full sweep)\n\
-     plan           --workload 1..4 [--method synergy], print the selected plan\n\
+     plan           --workload 1..4|mixed8, print the selected plan\n\
+     \u{20}              --fleet 4|4h|8|12h, --beam W (bounded plan search;\n\
+     \u{20}              default exhaustive — required beyond ~5 devices)\n\
      serve          real PJRT serving demo; requires `make artifacts`\n\
      \u{20}              --runs N, --inflight K, --artifacts DIR\n\
      zoo            print the Table I model zoo\n\
@@ -92,9 +94,56 @@ fn cmd_zoo() -> i32 {
 }
 
 fn cmd_plan(args: &Args) -> i32 {
-    let wid: usize = args.opt_parse("workload", 1);
-    let w = workload::workload(wid);
-    let runtime = SynergyRuntime::new(workload::fleet4());
+    let fleet = match args.opt("fleet").unwrap_or("4") {
+        "4" => workload::fleet4(),
+        "4h" => workload::fleet4_hetero(),
+        "8" => workload::fleet8(),
+        "12h" => workload::fleet12_hetero(),
+        other => {
+            eprintln!("unknown fleet {other:?}: valid fleets are 4, 4h, 8, 12h");
+            return 2;
+        }
+    };
+    let w = match args.opt("workload") {
+        None => workload::workload(1).expect("Table I workload"),
+        Some("mixed8") => workload::workload_mixed8(fleet.len()),
+        // A non-numeric, non-"mixed8" value must error, not silently fall
+        // back to Workload 1.
+        Some(s) => match s.parse::<usize>() {
+            Ok(id) => match workload::workload(id) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("{e} (or mixed8)");
+                    return 2;
+                }
+            },
+            Err(_) => {
+                eprintln!(
+                    "unknown workload {s:?}: valid workloads are {}, mixed8",
+                    workload::workload_names()
+                );
+                return 2;
+            }
+        },
+    };
+    let mut planner = Synergy::planner();
+    if let Some(beam) = args.opt("beam") {
+        let Ok(width) = beam.parse::<usize>() else {
+            eprintln!("--beam takes a positive integer, got {beam:?}");
+            return 2;
+        };
+        planner = Synergy::planner_bounded(width.max(1));
+    } else if fleet.len() > 5 {
+        // Exhaustive enumeration is intractable past ~5 devices; default
+        // to bounded search rather than hanging the CLI.
+        eprintln!(
+            "note: {}-device fleet — using bounded plan search (--beam {})",
+            fleet.len(),
+            synergy::plan::DEFAULT_BEAM_WIDTH
+        );
+        planner = Synergy::planner_bounded(synergy::plan::DEFAULT_BEAM_WIDTH);
+    }
+    let runtime = SynergyRuntime::builder().fleet(fleet).planner(planner).build();
     for p in w.pipelines {
         if let Err(e) = runtime.register(p) {
             eprintln!("orchestration failed: {e}");
@@ -158,7 +207,7 @@ fn cmd_serve(args: &Args) -> i32 {
     // The serving demo uses the three models aot.py emits split chunks
     // for, restricted to 2-way splits so every chunk has an artifact.
     let mut planner = Synergy::planner();
-    planner.cfg = EnumerateCfg { max_split_devices: 2 };
+    planner.cfg.enumerate = EnumerateCfg { max_split_devices: 2 };
     let runtime = SynergyRuntime::builder()
         .fleet(workload::fleet4())
         .planner(planner)
@@ -223,8 +272,24 @@ fn cmd_serve(args: &Args) -> i32 {
 /// each computation unit (Fig. 12's story, measured).
 fn cmd_trace(args: &Args) -> i32 {
     use synergy::scheduler::{simulate, GroundTruth, SimConfig};
-    let wid: usize = args.opt_parse("workload", 1);
-    let w = workload::workload(wid);
+    // Strict parse: a typo must error, not silently trace Workload 1.
+    let w = match args.opt("workload") {
+        None => workload::workload(1).expect("Table I workload"),
+        Some(s) => match s.parse::<usize>().map(workload::workload) {
+            Ok(Ok(w)) => w,
+            Ok(Err(e)) => {
+                eprintln!("{e}");
+                return 2;
+            }
+            Err(_) => {
+                eprintln!(
+                    "unknown workload {s:?}: valid workloads are {}",
+                    workload::workload_names()
+                );
+                return 2;
+            }
+        },
+    };
     let fleet = workload::fleet4();
     let planner = Synergy::planner();
     let plan = match planner.plan(&w.pipelines, &fleet) {

@@ -32,11 +32,23 @@ impl std::fmt::Display for SplitRange {
 }
 
 /// A model as a sequence of layer units with a fixed input shape.
+///
+/// Treat a constructed `ModelGraph` as immutable: the shape cache, the
+/// prefix sums, and the `uid` that keys the estimator's latency memo are
+/// all computed once in [`ModelGraph::new`]. Mutating the public fields of
+/// an existing instance (rather than building a new one) leaves every one
+/// of those derived values stale. Build variants with `ModelGraph::new`.
 #[derive(Clone, Debug)]
 pub struct ModelGraph {
     pub name: String,
     pub input: Shape,
     pub layers: Vec<Layer>,
+    /// Process-unique id assigned at construction, used as a memoization
+    /// key by the estimator (clones keep the id: a clone's content — and
+    /// therefore every latency derived from it — is identical, so sharing
+    /// cache entries is sound; two *independently built* models never
+    /// collide, even when they share a name).
+    uid: u64,
     /// Cached per-layer input shapes: `shapes[l]` is the input of layer `l`,
     /// `shapes[L]` is the final output.
     shapes: Vec<Shape>,
@@ -47,6 +59,8 @@ pub struct ModelGraph {
     /// Accelerator cycles at P = 64 (the MAX78000/78002 lane count).
     prefix_cycles_p64: Vec<u64>,
 }
+
+static NEXT_MODEL_UID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 impl ModelGraph {
     pub fn new(name: impl Into<String>, input: Shape, layers: Vec<Layer>) -> ModelGraph {
@@ -73,11 +87,17 @@ impl ModelGraph {
             name: name.into(),
             input,
             layers,
+            uid: NEXT_MODEL_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             shapes,
             prefix_w,
             prefix_b,
             prefix_cycles_p64,
         }
+    }
+
+    /// Process-unique id for estimator memoization (see the field docs).
+    pub fn uid(&self) -> u64 {
+        self.uid
     }
 
     pub fn num_layers(&self) -> usize {
@@ -251,5 +271,13 @@ mod tests {
     #[should_panic(expected = "bad boundary")]
     fn split_rejects_out_of_range() {
         toy().split_at(&[3]);
+    }
+
+    #[test]
+    fn uids_distinguish_instances_but_not_clones() {
+        let a = toy();
+        let b = toy(); // same name + content, independently built
+        assert_ne!(a.uid(), b.uid(), "independent builds must not collide");
+        assert_eq!(a.uid(), a.clone().uid(), "clones share content and uid");
     }
 }

@@ -2,7 +2,7 @@
 //! the unified round's inference throughput, but the selection metric is
 //! pluggable — Table III evaluates latency- and power-minimizing variants.
 
-use crate::estimator::PlanEstimate;
+use crate::estimator::{EstimateAccum, PlanEstimate};
 
 /// What the orchestrator optimizes when ranking holistic plans.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -24,6 +24,36 @@ impl Objective {
             Objective::LatencyMin => -est.round_latency,
             // Power-min deployments execute sequentially.
             Objective::PowerMin => -est.power_sequential_w,
+        }
+    }
+
+    /// Optimistic (admissible) score bound for any candidate whose chain
+    /// latency is at least `chain_lb` seconds, evaluated on top of
+    /// `accum`'s committed state: no such candidate's real [`Self::score`]
+    /// can exceed this value, because additions to the accumulator are
+    /// monotone — the period never drops below the committed bottleneck,
+    /// half the committed critical path, or half the candidate's own chain
+    /// (and the round latency never below any of those chains whole).
+    ///
+    /// The bounded planner sorts skeleton candidates by `chain_lb` and
+    /// stops scoring a pipeline once this bound cannot beat the incumbent.
+    /// Power-min admits no cheap monotone bound (average power can fall as
+    /// chains lengthen), so it returns `+∞` — never prune.
+    pub fn score_upper_bound(&self, accum: &EstimateAccum, chain_lb: f64) -> f64 {
+        let n = (accum.num_pipelines() + 1) as f64;
+        match self {
+            Objective::TputMax => {
+                let period_lb = accum
+                    .bottleneck()
+                    .max(accum.critical_path() / 2.0)
+                    .max(chain_lb / 2.0)
+                    .max(1e-12);
+                n / period_lb
+            }
+            Objective::LatencyMin => {
+                -accum.bottleneck().max(accum.critical_path()).max(chain_lb)
+            }
+            Objective::PowerMin => f64::INFINITY,
         }
     }
 
@@ -51,6 +81,62 @@ mod tests {
             power_w: power,
             power_sequential_w: power,
             active_energy_j: 0.0,
+        }
+    }
+
+    #[test]
+    fn upper_bound_dominates_real_scores() {
+        use crate::device::{Device, DeviceId, DeviceKind, Fleet};
+        use crate::estimator::LatencyModel;
+        use crate::model::zoo::{model_by_name, ModelName};
+        use crate::pipeline::{PipelineSpec, SourceReq, TargetReq};
+        use crate::plan::ExecutionPlan;
+        let fleet = Fleet::new(
+            (0..2)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        );
+        let ps: Vec<PipelineSpec> = [ModelName::KWS, ModelName::SimpleNet]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                PipelineSpec::new(
+                    i,
+                    m.as_str(),
+                    SourceReq::Any,
+                    model_by_name(m).clone(),
+                    TargetReq::Any,
+                )
+            })
+            .collect();
+        let lm = LatencyModel::new(&fleet);
+        let mut accum = EstimateAccum::new(&fleet);
+        let d0 = DeviceId(0);
+        accum.add_plan(
+            &ExecutionPlan::monolithic(&ps[0], d0, d0, d0),
+            &ps[0],
+            &fleet,
+            &lm,
+        );
+        let mut scratch = Vec::new();
+        for dev in 0..2 {
+            let d = DeviceId(dev);
+            let cand = ExecutionPlan::monolithic(&ps[1], d, d, d);
+            let est = accum.peek_fast(&cand, &ps[1], &fleet, &lm, &mut scratch);
+            for obj in [Objective::TputMax, Objective::LatencyMin, Objective::PowerMin] {
+                let real = obj.score(&est);
+                assert!(
+                    real <= obj.score_upper_bound(&accum, 0.0) + 1e-12,
+                    "{obj:?}: real {real} above bound"
+                );
+            }
+        }
+        // The bound tightens (never rises) as the chain lower bound grows.
+        for obj in [Objective::TputMax, Objective::LatencyMin] {
+            assert!(
+                obj.score_upper_bound(&accum, 10.0) <= obj.score_upper_bound(&accum, 0.0),
+                "{obj:?}"
+            );
         }
     }
 

@@ -50,7 +50,6 @@ impl Priority {
 
     /// Indices of `pipelines` in selection order.
     pub fn order(&self, pipelines: &[PipelineSpec]) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..pipelines.len()).collect();
         let key = |i: usize| -> f64 {
             let p = &pipelines[i];
             match self {
@@ -63,9 +62,18 @@ impl Priority {
                 Priority::Sequential => i as f64,
             }
         };
-        idx.sort_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap().then(a.cmp(&b)));
-        idx
+        sort_indices_by_f64(pipelines.len(), key)
     }
+}
+
+/// NaN-safe stable index ordering by a float key: `f64::total_cmp` gives a
+/// total order (NaN sorts after +∞ instead of panicking the way
+/// `partial_cmp().unwrap()` did on any degenerate key), ties fall back to
+/// index order.
+fn sort_indices_by_f64(n: usize, key: impl Fn(usize) -> f64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+    idx
 }
 
 #[cfg(test)]
@@ -122,6 +130,53 @@ mod tests {
             let mut o = pr.order(&ps);
             o.sort();
             assert_eq!(o, vec![0, 1, 2], "{pr:?}");
+        }
+    }
+
+    #[test]
+    fn nan_keys_sort_without_panicking() {
+        // Regression: the comparator was `partial_cmp(..).unwrap()`, which
+        // panics the moment any priority key degenerates to NaN (e.g. an
+        // inf/inf ratio from a zero-duration estimate). `total_cmp` must
+        // order NaN deterministically after every finite key instead.
+        let keys = [1.0, f64::NAN, 0.5, f64::INFINITY, f64::NAN];
+        let order = sort_indices_by_f64(keys.len(), |i| keys[i]);
+        assert_eq!(order, vec![2, 0, 3, 1, 4]);
+        let mut perm = order;
+        perm.sort();
+        assert_eq!(perm, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn degenerate_models_still_order_deterministically() {
+        // A pipeline whose layer is synthesized with zero output channels
+        // produces zero-byte keys on every metric — ordering must stay a
+        // stable permutation, never panic.
+        use crate::model::layer::{Layer, LayerKind, Shape};
+        use crate::model::ModelGraph;
+        let degenerate = ModelGraph::new(
+            "degenerate",
+            Shape::new(1, 1, 1),
+            vec![Layer {
+                kind: LayerKind::Conv2d { k: 1 },
+                pool: 1,
+                cout: 0,
+                residual: false,
+                has_bias: false,
+            }],
+        );
+        let mut ps = pipes();
+        ps.push(PipelineSpec::new(
+            3,
+            "degenerate",
+            SourceReq::Any,
+            degenerate,
+            TargetReq::Any,
+        ));
+        for pr in Priority::ALL {
+            let mut o = pr.order(&ps);
+            o.sort();
+            assert_eq!(o, vec![0, 1, 2, 3], "{pr:?}");
         }
     }
 }

@@ -7,11 +7,16 @@
 //! *on top of* the plans already selected (joint memory + holistic
 //! estimate), reducing the search to `O(N_p1 + N_p2 + …)`.
 
+use std::collections::BTreeMap;
+
 use crate::device::Fleet;
 use crate::estimator::{EstimateAccum, LatencyModel};
-use crate::pipeline::PipelineSpec;
+use crate::pipeline::{PipelineId, PipelineSpec};
 use crate::plan::collab::MemoryLedger;
-use crate::plan::{enumerate_plans_with, CollabPlan, EnumerateCfg, ExecutionPlan};
+use crate::plan::{
+    enumerate_plans_with, enumerate_skeletons_all, CollabPlan, ExecutionPlan, PlannerCfg,
+    SearchMode, Skeleton,
+};
 use crate::scheduler::Policy;
 
 use super::objective::Objective;
@@ -21,12 +26,14 @@ use super::{PlanError, Planner};
 /// The configurable progressive planner. [`Synergy`] is the default
 /// configuration (data-intensity-descending, TPUT-max, ATP execution);
 /// Fig. 9's prioritization alternatives and Table III's objectives are the
-/// other configurations.
+/// other configurations. `cfg.search` switches between the exhaustive
+/// paper-scale search and the bounded (beam + branch-and-bound) search
+/// that scales to 8–16-device fleets.
 #[derive(Clone, Debug)]
 pub struct ProgressivePlanner {
     pub priority: Priority,
     pub objective: Objective,
-    pub cfg: EnumerateCfg,
+    pub cfg: PlannerCfg,
     /// Execution policy deployed with the selected plan.
     pub policy: Policy,
     /// Number of candidate plans scored in the last `plan` call (search
@@ -41,6 +48,17 @@ pub struct Synergy;
 impl Synergy {
     pub fn planner() -> ProgressivePlanner {
         ProgressivePlanner::new(Priority::DataIntensityDesc, Objective::TputMax)
+    }
+
+    /// Synergy with bounded plan search (beam + branch-and-bound) — the
+    /// large-fleet configuration. Identical selection quality on
+    /// paper-scale fleets (the search is exact below
+    /// [`crate::plan::BOUNDED_EXACT_THRESHOLD`]), tractable far beyond
+    /// them.
+    pub fn planner_bounded(beam_width: usize) -> ProgressivePlanner {
+        let mut p = ProgressivePlanner::new(Priority::DataIntensityDesc, Objective::TputMax);
+        p.cfg = PlannerCfg::bounded(beam_width);
+        p
     }
 
     /// Synergy with a non-default objective (Table III). Power-min
@@ -62,7 +80,7 @@ impl ProgressivePlanner {
         ProgressivePlanner {
             priority,
             objective,
-            cfg: EnumerateCfg::default(),
+            cfg: PlannerCfg::default(),
             policy: Policy::atp(),
             candidates_scored: std::cell::Cell::new(0),
         }
@@ -82,6 +100,27 @@ impl ProgressivePlanner {
         fleet: &Fleet,
     ) -> Result<CollabPlan, PlanError> {
         self.candidates_scored.set(0);
+        if matches!(self.cfg.search, SearchMode::Bounded { .. }) {
+            // Bounded search: enumerate pruned candidate lists once (in
+            // parallel across pipelines), then select over them — the OOR
+            // retry reuses the enumeration.
+            let skels = enumerate_skeletons_all(pipelines, fleet, self.cfg);
+            let mut run = |priority: Priority| {
+                let order = priority.order(pipelines);
+                let mut scored = 0;
+                let result =
+                    self.select_over_skeletons(pipelines, fleet, &order, &skels, &mut scored);
+                self.candidates_scored
+                    .set(self.candidates_scored.get() + scored);
+                result
+            };
+            return match run(self.priority) {
+                Err(PlanError::Oor { .. }) if self.priority != Priority::ModelSizeDesc => {
+                    run(Priority::ModelSizeDesc)
+                }
+                other => other,
+            };
+        }
         match self.select_with_order(pipelines, fleet, self.priority) {
             Err(PlanError::Oor { .. }) if self.priority != Priority::ModelSizeDesc => {
                 self.select_with_order(pipelines, fleet, Priority::ModelSizeDesc)
@@ -90,7 +129,100 @@ impl ProgressivePlanner {
         }
     }
 
-    // KEEP IN SYNC with `api::replan::select_ordered`: the incremental
+    /// Progressive selection over pre-enumerated skeleton candidates — the
+    /// engine behind both bounded search and the incremental replan cache
+    /// ([`crate::api`]).
+    ///
+    /// KEEP IN SYNC with `run_selection` below: same Unsatisfiable check,
+    /// same ledger/accumulator updates, same objective scoring with
+    /// strict-`>` tie-break. With exhaustive-mode skeleton lists (which
+    /// preserve enumeration order) the selected plan is bit-identical to
+    /// the streaming loop — `api::replan::tests::
+    /// cached_selection_matches_streaming_selection` pins that parity.
+    /// Under bounded search the candidate lists are sorted by ascending
+    /// chain bound, which makes the optimistic-score early-`break` safe:
+    /// every later skeleton has an even weaker bound.
+    pub(crate) fn select_over_skeletons(
+        &self,
+        specs: &[PipelineSpec],
+        fleet: &Fleet,
+        order: &[usize],
+        skels: &BTreeMap<PipelineId, Vec<Skeleton>>,
+        scored: &mut u64,
+    ) -> Result<CollabPlan, PlanError> {
+        let lm = LatencyModel::new(fleet);
+        let mut ledger = MemoryLedger::default();
+        let mut accum = EstimateAccum::new(fleet);
+        let mut selected: Vec<Option<ExecutionPlan>> = vec![None; specs.len()];
+        // Scratch buffer reused across all candidate evaluations.
+        let mut unit_scratch = Vec::with_capacity(16);
+        let bounded = matches!(self.cfg.search, SearchMode::Bounded { .. });
+
+        for &i in order {
+            let spec = &specs[i];
+            let sources = spec.source_candidates(fleet);
+            let targets = spec.target_candidates(fleet);
+            if sources.is_empty() || targets.is_empty() {
+                return Err(PlanError::Unsatisfiable {
+                    pipeline: spec.name.clone(),
+                });
+            }
+            let skeletons = skels
+                .get(&spec.id)
+                .expect("skeletons enumerated for every pipeline");
+            let mut cand = ExecutionPlan {
+                pipeline: spec.id,
+                source_dev: sources[0],
+                target_dev: targets[0],
+                chunks: Vec::new(),
+            };
+            let mut best: Option<(f64, ExecutionPlan)> = None;
+            for skel in skeletons {
+                if bounded {
+                    if let Some((best_score, _)) = &best {
+                        if self.objective.score_upper_bound(&accum, skel.chain_bound)
+                            <= *best_score
+                        {
+                            break;
+                        }
+                    }
+                }
+                cand.chunks.clear();
+                cand.chunks.extend_from_slice(&skel.chunks);
+                // Joint-memory fit is endpoint-independent: check once per
+                // skeleton instead of once per enumerated plan.
+                if !ledger.fits(&cand, &spec.model, fleet) {
+                    continue;
+                }
+                for &s in &sources {
+                    for &t in &targets {
+                        cand.source_dev = s;
+                        cand.target_dev = t;
+                        *scored += 1;
+                        let est = accum.peek_fast(&cand, spec, fleet, &lm, &mut unit_scratch);
+                        let score = self.objective.score(&est);
+                        if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+                            best = Some((score, cand.clone()));
+                        }
+                    }
+                }
+            }
+            let Some((_, chosen)) = best else {
+                return Err(PlanError::Oor {
+                    pipeline: spec.name.clone(),
+                });
+            };
+            ledger.commit(&chosen, &spec.model);
+            accum.add_plan(&chosen, spec, fleet, &lm);
+            selected[i] = Some(chosen);
+        }
+
+        Ok(CollabPlan::new(
+            selected.into_iter().map(Option::unwrap).collect(),
+        ))
+    }
+
+    // KEEP IN SYNC with `select_over_skeletons` above: the incremental
     // re-orchestration path replays this exact selection over cached
     // skeletons and must stay bit-identical (same scoring, same strict-`>`
     // tie-break, same ledger/accumulator updates). The parity is pinned by
@@ -138,7 +270,7 @@ impl ProgressivePlanner {
             // Stream candidates (no materialization) and score each with
             // the clone-free fast path — the orchestration hot loop.
             let mut best: Option<(f64, ExecutionPlan)> = None;
-            enumerate_plans_with(spec, fleet, self.cfg, |cand| {
+            enumerate_plans_with(spec, fleet, self.cfg.enumerate, |cand| {
                 if !ledger.fits(cand, &spec.model, fleet) {
                     return;
                 }
@@ -284,6 +416,43 @@ mod tests {
         assert!(scored <= n_kws + n_simple);
         // Far below the cross product even at just two pipelines.
         assert!((scored as f64) < (n_kws * n_simple) as f64 * 0.1);
+    }
+
+    #[test]
+    fn bounded_matches_exhaustive_on_small_fleets() {
+        // Below the exact-search threshold the bounded planner enumerates
+        // the complete space, so selected quality is identical.
+        let f = fleet(2);
+        let ps = pipes(&[ModelName::KWS, ModelName::SimpleNet]);
+        let lm = LatencyModel::new(&f);
+        let ex = Synergy::planner().select(&ps, &f).unwrap();
+        let bo = Synergy::planner_bounded(8).select(&ps, &f).unwrap();
+        let te = crate::estimator::estimate_plan(&ex, &ps, &f, &lm).throughput;
+        let tb = crate::estimator::estimate_plan(&bo, &ps, &f, &lm).throughput;
+        assert!(
+            (te - tb).abs() <= 1e-9 * te.max(1.0),
+            "exhaustive {te} vs bounded {tb}"
+        );
+    }
+
+    #[test]
+    fn bounded_scales_where_exhaustive_space_explodes() {
+        // 8 devices: KWS alone has >3M skeletons, UNet/SimpleNet far more.
+        let f = fleet(8);
+        let ps = pipes(&[ModelName::KWS, ModelName::UNet, ModelName::SimpleNet]);
+        let planner = Synergy::planner_bounded(8);
+        let plan = planner.select(&ps, &f).unwrap();
+        plan.check_runnable(&ps, &f).unwrap();
+        assert_eq!(plan.plans.len(), 3);
+        let space: u64 = ps
+            .iter()
+            .map(|p| crate::plan::skeleton_space(8, p.model.num_layers(), usize::MAX))
+            .fold(0, u64::saturating_add);
+        let scored = planner.candidates_scored.get();
+        assert!(
+            scored < space / 100,
+            "bounded search must prune: scored {scored} of {space}"
+        );
     }
 
     #[test]

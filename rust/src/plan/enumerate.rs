@@ -10,10 +10,15 @@
 //! per-chunk single-device fits eagerly (a chunk larger than its device's
 //! whole accelerator can never be part of a runnable holistic plan).
 
+use std::collections::BTreeMap;
+
 use crate::device::{AccelMemory, DeviceId, Fleet};
-use crate::pipeline::PipelineSpec;
+use crate::estimator::{comm, LatencyModel};
+use crate::model::{ModelGraph, SplitRange};
+use crate::pipeline::{PipelineId, PipelineSpec};
 
 use super::exec_plan::{Assignment, ExecutionPlan};
+use super::task::{PlanTask, TaskKind};
 
 /// Enumeration limits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,6 +34,104 @@ impl Default for EnumerateCfg {
             max_split_devices: usize::MAX,
         }
     }
+}
+
+/// Default beam width of [`SearchMode::Bounded`].
+pub const DEFAULT_BEAM_WIDTH: usize = 8;
+
+/// Bounded search falls back to complete enumeration whenever a pipeline's
+/// skeleton space ([`skeleton_space`]) is at most this many skeletons —
+/// paper-scale fleets (D ≤ 4, Table I models) all fall below it, so bounded
+/// selections there keep exhaustive quality exactly; the beam only takes
+/// over where exhaustive search stops being tractable.
+pub const BOUNDED_EXACT_THRESHOLD: u64 = 100_000;
+
+/// How the planner searches a pipeline's split-skeleton space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SearchMode {
+    /// Enumerate the complete space — exact, but factorial in
+    /// devices × layers (`skeleton_space`), so tractable on paper-scale
+    /// fleets only.
+    #[default]
+    Exhaustive,
+    /// Beam search over split skeletons plus branch-and-bound candidate
+    /// pruning during selection: partial skeletons are ranked by an
+    /// admissible cost (cheapest chunk placement + best-case radio hops +
+    /// a suffix completion heuristic), `beam_width` states survive per
+    /// depth, and selection stops scoring a pipeline's (bound-sorted)
+    /// candidates once even an optimistic estimate cannot beat the current
+    /// best. Falls back to complete enumeration below
+    /// [`BOUNDED_EXACT_THRESHOLD`].
+    Bounded {
+        /// States kept per beam depth; also bounds the boundary sets kept
+        /// per chunk count and the device-rotation diversity per set.
+        beam_width: usize,
+    },
+}
+
+/// Planner-level search configuration, threaded from
+/// [`crate::orchestrator::ProgressivePlanner`] through the incremental
+/// replan cache in [`crate::api`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct PlannerCfg {
+    /// Structural enumeration limits (shared by both search modes).
+    pub enumerate: EnumerateCfg,
+    /// Exhaustive or bounded skeleton search.
+    pub search: SearchMode,
+}
+
+impl PlannerCfg {
+    /// Bounded search with the given beam width and default limits.
+    pub fn bounded(beam_width: usize) -> PlannerCfg {
+        PlannerCfg {
+            enumerate: EnumerateCfg::default(),
+            search: SearchMode::Bounded { beam_width },
+        }
+    }
+}
+
+/// A split skeleton plus its pruning metadata: the chunk→device assignment
+/// (without the endpoint choice) and an endpoint-independent lower bound on
+/// the chain latency its tasks add (load + infer + unload per chunk, plus
+/// the Tx+Rx of every inter-chunk hop). Any full plan built from the
+/// skeleton has a chain at least this long, which makes the bound valid for
+/// optimistic-score pruning (see `Objective::score_upper_bound`). The
+/// incremental replan cache stores these so replans reuse both the
+/// enumeration and the pruning work.
+///
+/// Exhaustive-mode lists carry `chain_bound = 0.0` — a trivially admissible
+/// bound that selection never reads (pruning is bounded-mode only), so the
+/// default replan path skips the per-skeleton bound computation entirely.
+#[derive(Clone, Debug)]
+pub struct Skeleton {
+    pub chunks: Vec<Assignment>,
+    pub chain_bound: f64,
+}
+
+/// The single-device chunk-fit rule shared by every enumeration path
+/// (exhaustive streaming, bounded beam, rotation assignment): a chunk may
+/// only go to an accelerator-bearing device whose weight/bias/layer
+/// capacities hold it alone. Joint cross-pipeline fit is the ledger's job.
+fn chunk_fits_device(
+    fleet: &Fleet,
+    model: &ModelGraph,
+    dev: DeviceId,
+    start: usize,
+    end: usize,
+) -> bool {
+    let spec = match &fleet.get(dev).spec.accel {
+        Some(s) => s,
+        None => return false,
+    };
+    let r = SplitRange::new(start, end);
+    AccelMemory::default()
+        .check(
+            spec,
+            model.weight_bytes(r),
+            model.bias_bytes(r),
+            end - start,
+        )
+        .is_ok()
 }
 
 /// Closed-form plan count from the paper (uses `D²` source/target options),
@@ -138,38 +241,10 @@ pub fn enumerate_splits_with(
         .min(num_layers)
         .min(cfg.max_split_devices);
 
-    // Chunk-fit memo: chunk_fits[dev][start][end] would be L² per device;
-    // compute lazily through a closure over prefix sums instead.
-    let prefix_w: Vec<u64> = {
-        let mut acc = vec![0u64];
-        for l in 0..num_layers {
-            let last = *acc.last().unwrap();
-            acc.push(last + model.layers[l].weight_bytes(model.in_shape(l)));
-        }
-        acc
-    };
-    let prefix_b: Vec<u64> = {
-        let mut acc = vec![0u64];
-        for l in 0..num_layers {
-            let last = *acc.last().unwrap();
-            acc.push(last + model.layers[l].bias_bytes(model.in_shape(l)));
-        }
-        acc
-    };
-    let chunk_fits = |dev: DeviceId, start: usize, end: usize| -> bool {
-        let spec = match &fleet.get(dev).spec.accel {
-            Some(s) => s,
-            None => return false,
-        };
-        AccelMemory::default()
-            .check(
-                spec,
-                prefix_w[end] - prefix_w[start],
-                prefix_b[end] - prefix_b[start],
-                end - start,
-            )
-            .is_ok()
-    };
+    // Per-chunk fit is O(1) via the model's prefix sums; the rule is the
+    // one shared with the bounded search (`chunk_fits_device`).
+    let chunk_fits =
+        |dev: DeviceId, start: usize, end: usize| chunk_fits_device(fleet, model, dev, start, end);
 
     // Reusable chunk buffer handed to the callback.
     let mut chunks: Vec<Assignment> = Vec::with_capacity(d_max);
@@ -205,6 +280,464 @@ pub fn enumerate_splits_with(
             },
         );
     }
+}
+
+/// Closed-form size of the split-skeleton space (the endpoint-independent
+/// part of [`paper_plan_count`]): `Σ_{d=1..D} P(D,d) · C(L-1, d-1)`,
+/// saturating at `u64::MAX` — at 8–16 devices the true count overflows
+/// quickly, which is exactly the scaling problem bounded search solves.
+pub fn skeleton_space(
+    num_accel_devices: usize,
+    num_layers: usize,
+    max_split_devices: usize,
+) -> u64 {
+    let d_max = num_accel_devices.min(num_layers).min(max_split_devices);
+    let mut total: u128 = 0;
+    for d in 1..=d_max {
+        let perm: u128 = ((num_accel_devices - d + 1)..=num_accel_devices)
+            .map(|x| x as u128)
+            .product();
+        let comb = combinations_u128(num_layers - 1, d - 1);
+        total = total.saturating_add(perm.saturating_mul(comb));
+        if total >= u64::MAX as u128 {
+            return u64::MAX;
+        }
+    }
+    total as u64
+}
+
+fn combinations_u128(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut out: u128 = 1;
+    for i in 0..k {
+        out = out.saturating_mul((n - i) as u128) / (i + 1) as u128;
+    }
+    out
+}
+
+/// Endpoint-independent chunk-cost model shared by skeleton bounds and the
+/// bounded beam.
+///
+/// Every latency comes from the same [`LatencyModel`] the selection scorer
+/// (`EstimateAccum::peek_fast`) uses — chunk tasks are costed by literally
+/// calling `task_latency` on the Load/Infer/Unload/Tx/Rx tasks a plan built
+/// from the skeleton would contain. That makes `chain_bound ≤ chain` hold
+/// by construction (a full plan only ever *adds* sense/endpoint tasks), so
+/// the branch-and-bound prune cannot drift out of sync with the estimator,
+/// and the estimator's per-platform inference memo is reused as-is.
+struct ChunkCost<'a> {
+    fleet: &'a Fleet,
+    model: &'a ModelGraph,
+    lm: LatencyModel<'a>,
+    /// Accelerator-bearing device ids.
+    devs: Vec<DeviceId>,
+    /// One representative device per distinct platform spec.
+    slots: Vec<DeviceId>,
+    /// `h(k)` = Σ_{l ≥ k} of layer `l`'s cheapest inference latency across
+    /// slots: an admissible completion heuristic for partial skeletons.
+    suffix_min_infer: Vec<f64>,
+    /// Component-wise lower bound over every accel device pair: the
+    /// cheapest pair overhead and the fastest pair bandwidth (the two
+    /// need not come from the same pair — bounding them independently
+    /// keeps the hop estimate a true lower bound on any actual
+    /// `link_time`, including on heterogeneous-radio fleets). `None` when
+    /// the fleet has fewer than two accel devices.
+    link_lb: Option<(f64, f64)>,
+}
+
+impl<'a> ChunkCost<'a> {
+    fn new(model: &'a ModelGraph, fleet: &'a Fleet) -> ChunkCost<'a> {
+        let lm = LatencyModel::new(fleet);
+        let devs = fleet.accel_ids();
+        let mut slots: Vec<DeviceId> = Vec::new();
+        for &d in &devs {
+            let spec = &fleet.get(d).spec;
+            if !slots.iter().any(|&s| fleet.get(s).spec == *spec) {
+                slots.push(d);
+            }
+        }
+        let infer = |dev: DeviceId, r: SplitRange| {
+            lm.task_latency(&infer_task(dev, r), model, None)
+        };
+        let l = model.num_layers();
+        let mut suffix_min_infer = vec![0.0; l + 1];
+        for layer in (0..l).rev() {
+            let r = SplitRange::new(layer, layer + 1);
+            let best = slots
+                .iter()
+                .map(|&s| infer(s, r))
+                .fold(f64::INFINITY, f64::min);
+            suffix_min_infer[layer] =
+                suffix_min_infer[layer + 1] + if best.is_finite() { best } else { 0.0 };
+        }
+        let mut link_lb = None;
+        for (i, &a) in devs.iter().enumerate() {
+            for &b in devs.iter().skip(i + 1) {
+                let (ra, rb) = (&fleet.get(a).spec.radio, &fleet.get(b).spec.radio);
+                let overhead = ra.overhead_s.max(rb.overhead_s);
+                let bandwidth = ra.bytes_per_s.min(rb.bytes_per_s);
+                link_lb = Some(match link_lb {
+                    None => (overhead, bandwidth),
+                    Some((o, bw)) => (overhead.min(o), bandwidth.max(bw)),
+                });
+            }
+        }
+        ChunkCost {
+            fleet,
+            model,
+            lm,
+            devs,
+            slots,
+            suffix_min_infer,
+            link_lb,
+        }
+    }
+
+    /// Activation bytes entering a chunk that starts at layer `start`.
+    fn in_bytes(&self, start: usize) -> u64 {
+        if start == 0 {
+            self.model.in_bytes()
+        } else {
+            self.model.boundary_bytes(start - 1)
+        }
+    }
+
+    fn chunk_fits(&self, dev: DeviceId, start: usize, end: usize) -> bool {
+        chunk_fits_device(self.fleet, self.model, dev, start, end)
+    }
+
+    /// Load + infer + unload latency of `start..end` on `dev` — the exact
+    /// per-task values `peek_fast` will compute for this chunk.
+    fn chunk_cost(&self, dev: DeviceId, start: usize, end: usize) -> f64 {
+        let task = |kind: TaskKind| PlanTask {
+            pipeline: PipelineId(0),
+            seq: 0,
+            device: dev,
+            kind,
+        };
+        self.lm.task_latency(
+            &task(TaskKind::Load { bytes: self.in_bytes(start) }),
+            self.model,
+            None,
+        ) + self.lm.task_latency(
+            &task(TaskKind::Infer { range: SplitRange::new(start, end) }),
+            self.model,
+            None,
+        ) + self.lm.task_latency(
+            &task(TaskKind::Unload { bytes: self.model.boundary_bytes(end - 1) }),
+            self.model,
+            None,
+        )
+    }
+
+    /// Cheapest chunk cost across platforms that fit `start..end`, if any —
+    /// `None` reproduces the exhaustive path's eager fit filtering.
+    fn min_chunk_cost(&self, start: usize, end: usize) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for &rep in &self.slots {
+            if !self.chunk_fits(rep, start, end) {
+                continue;
+            }
+            let c = self.chunk_cost(rep, start, end);
+            best = Some(best.map_or(c, |b: f64| b.min(c)));
+        }
+        best
+    }
+
+    /// Best-case Tx+Rx chain contribution of one inter-chunk radio hop
+    /// (a lower bound on `2 × link_time` for every device pair).
+    fn min_link2(&self, bytes: u64) -> f64 {
+        match self.link_lb {
+            Some((overhead, bandwidth)) => 2.0 * (overhead + bytes as f64 / bandwidth),
+            None => 0.0,
+        }
+    }
+
+    /// Exact chain bound of a fully assigned skeleton (its chunk tasks plus
+    /// the actual inter-chunk hops; endpoint tasks only ever add to this).
+    fn skeleton_bound(&self, chunks: &[Assignment]) -> f64 {
+        let mut total = 0.0;
+        for (i, a) in chunks.iter().enumerate() {
+            total += self.chunk_cost(a.device, a.range.start, a.range.end);
+            if i > 0 {
+                let bytes = self.in_bytes(a.range.start);
+                total += 2.0
+                    * comm::tx_latency(
+                        self.fleet.get(chunks[i - 1].device),
+                        self.fleet.get(a.device),
+                        bytes,
+                    );
+            }
+        }
+        total
+    }
+}
+
+fn infer_task(dev: DeviceId, r: SplitRange) -> PlanTask {
+    PlanTask {
+        pipeline: PipelineId(0),
+        seq: 0,
+        device: dev,
+        kind: TaskKind::Infer { range: r },
+    }
+}
+
+/// Beam search over split skeletons — the [`SearchMode::Bounded`] engine.
+///
+/// Stage 1 beams over split *boundaries* (device-agnostic): a partial state
+/// covering layers `0..k` with its chunks costed at their cheapest feasible
+/// platform is ranked by `g + h(k)` where `h` is the admissible
+/// remaining-inference heuristic; `beam` states survive per depth and the
+/// `beam` best completed boundary sets are kept per chunk count (diversity
+/// across split arities matters more than depth within one).
+///
+/// Stage 2 assigns devices per boundary set: devices ranked fastest-first,
+/// first-fit with `min(beam, D)` strided rotation offsets so the candidate
+/// list covers diverse device subsets — selection then scores candidates
+/// in context (joint memory + accumulated load) and picks placements that
+/// avoid busy devices.
+fn bounded_skeletons(
+    pipeline: &PipelineSpec,
+    fleet: &Fleet,
+    cfg: EnumerateCfg,
+    beam_width: usize,
+) -> Vec<Skeleton> {
+    let beam = beam_width.max(1);
+    let model = &pipeline.model;
+    let num_layers = model.num_layers();
+    let costs = ChunkCost::new(model, fleet);
+    let d_max = costs.devs.len().min(num_layers).min(cfg.max_split_devices);
+    if d_max == 0 {
+        return Vec::new();
+    }
+
+    #[derive(Clone)]
+    struct BState {
+        /// Chunk end boundaries chosen so far (last one = layers covered).
+        ends: Vec<usize>,
+        /// Admissible cost of the chunks so far.
+        g: f64,
+    }
+    let mut frontier: Vec<BState> = vec![BState { ends: Vec::new(), g: 0.0 }];
+    let mut complete: Vec<Vec<BState>> = vec![Vec::new(); d_max + 1];
+    for depth in 0..d_max {
+        let mut next: Vec<BState> = Vec::new();
+        for state in &frontier {
+            let start = state.ends.last().copied().unwrap_or(0);
+            let hop = if start == 0 {
+                0.0
+            } else {
+                costs.min_link2(costs.in_bytes(start))
+            };
+            for end in (start + 1)..=num_layers {
+                // Intermediate chunks only exist while depth remains.
+                if end != num_layers && depth + 1 >= d_max {
+                    continue;
+                }
+                let Some(c) = costs.min_chunk_cost(start, end) else {
+                    continue;
+                };
+                let mut ends = state.ends.clone();
+                ends.push(end);
+                let st = BState { ends, g: state.g + hop + c };
+                if end == num_layers {
+                    complete[depth + 1].push(st);
+                } else {
+                    next.push(st);
+                }
+            }
+        }
+        next.sort_by(|a, b| {
+            let fa = a.g + costs.suffix_min_infer[*a.ends.last().unwrap()];
+            let fb = b.g + costs.suffix_min_infer[*b.ends.last().unwrap()];
+            fa.total_cmp(&fb).then_with(|| a.ends.cmp(&b.ends))
+        });
+        next.truncate(beam);
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+
+    // Stage 2: device assignment with strided rotations.
+    let mut ranked: Vec<DeviceId> = costs.devs.clone();
+    let speed = |d: DeviceId| {
+        fleet
+            .get(d)
+            .spec
+            .accel
+            .as_ref()
+            .map(|a| a.clock_hz * a.parallel_procs as f64)
+            .unwrap_or(0.0)
+    };
+    ranked.sort_by(|&a, &b| speed(b).total_cmp(&speed(a)).then(a.0.cmp(&b.0)));
+    let rotations = ranked.len().min(beam);
+    let mut skeletons: Vec<Skeleton> = Vec::new();
+    for per_d in &mut complete {
+        per_d.sort_by(|a, b| a.g.total_cmp(&b.g).then_with(|| a.ends.cmp(&b.ends)));
+        per_d.truncate(beam);
+        for st in per_d.iter() {
+            let mut seen: Vec<Vec<DeviceId>> = Vec::new();
+            for j in 0..rotations {
+                let offset = j * ranked.len() / rotations;
+                let order: Vec<DeviceId> = ranked[offset..]
+                    .iter()
+                    .chain(ranked[..offset].iter())
+                    .copied()
+                    .collect();
+                let mut chunks: Vec<Assignment> = Vec::with_capacity(st.ends.len());
+                let mut used = vec![false; fleet.len()];
+                let mut prev = 0;
+                let mut ok = true;
+                for &end in &st.ends {
+                    match order
+                        .iter()
+                        .find(|&&d| !used[d.0] && costs.chunk_fits(d, prev, end))
+                    {
+                        Some(&d) => {
+                            used[d.0] = true;
+                            chunks.push(Assignment {
+                                device: d,
+                                range: SplitRange::new(prev, end),
+                            });
+                            prev = end;
+                        }
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                let picked: Vec<DeviceId> = chunks.iter().map(|a| a.device).collect();
+                if seen.contains(&picked) {
+                    continue;
+                }
+                seen.push(picked);
+                let chain_bound = costs.skeleton_bound(&chunks);
+                skeletons.push(Skeleton { chunks, chain_bound });
+            }
+        }
+    }
+    sort_skeletons_by_bound(&mut skeletons);
+    skeletons
+}
+
+/// Ascending chain-bound order with a deterministic, allocation-free
+/// structural tie-break (these lists reach 100k entries in bounded-exact
+/// mode, so the comparator must not allocate).
+fn sort_skeletons_by_bound(skeletons: &mut [Skeleton]) {
+    let key = |s: &Skeleton| {
+        s.chunks
+            .iter()
+            .map(|a| (a.device.0, a.range.start, a.range.end))
+    };
+    skeletons.sort_by(|a, b| {
+        a.chain_bound
+            .total_cmp(&b.chain_bound)
+            .then_with(|| key(a).cmp(key(b)))
+    });
+}
+
+/// Enumerate one pipeline's skeleton candidates under `cfg`.
+///
+/// Exhaustive mode materializes [`enumerate_splits_with`]'s space in
+/// enumeration order (the incremental cache's suffix-shrink filtering and
+/// the cached-vs-streaming parity rely on that order). Bounded mode
+/// returns a candidate list sorted by ascending [`Skeleton::chain_bound`]
+/// — complete below [`BOUNDED_EXACT_THRESHOLD`], beam-pruned above it.
+pub fn enumerate_skeletons(
+    pipeline: &PipelineSpec,
+    fleet: &Fleet,
+    cfg: PlannerCfg,
+) -> Vec<Skeleton> {
+    // Bounds are only consulted by bounded-mode pruning; the exhaustive
+    // path skips computing them (chain_bound = 0.0 is still a valid lower
+    // bound) so the default replan cache fill stays as cheap as before.
+    let exhaustive = |with_bounds: bool| {
+        let costs = with_bounds.then(|| ChunkCost::new(&pipeline.model, fleet));
+        let mut out = Vec::new();
+        enumerate_splits_with(pipeline, fleet, cfg.enumerate, |chunks| {
+            let chain_bound = costs.as_ref().map_or(0.0, |c| c.skeleton_bound(chunks));
+            out.push(Skeleton {
+                chunks: chunks.to_vec(),
+                chain_bound,
+            });
+        });
+        if with_bounds {
+            sort_skeletons_by_bound(&mut out);
+        }
+        out
+    };
+    match cfg.search {
+        SearchMode::Exhaustive => exhaustive(false),
+        SearchMode::Bounded { beam_width } => {
+            let space = skeleton_space(
+                fleet.accel_ids().len(),
+                pipeline.model.num_layers(),
+                cfg.enumerate.max_split_devices,
+            );
+            if space <= BOUNDED_EXACT_THRESHOLD {
+                exhaustive(true)
+            } else {
+                bounded_skeletons(pipeline, fleet, cfg.enumerate, beam_width)
+            }
+        }
+    }
+}
+
+/// Enumerate skeletons for many pipelines in parallel — one thread per
+/// pipeline. Enumeration dominates orchestration cost at fleet scale and
+/// pipelines are independent, so this scales the replan path across cores
+/// with no behavioral change (results are keyed, order-independent).
+pub fn enumerate_skeletons_for(
+    specs: &[&PipelineSpec],
+    fleet: &Fleet,
+    cfg: PlannerCfg,
+) -> Vec<(PipelineId, Vec<Skeleton>)> {
+    if specs.len() <= 1 {
+        return specs
+            .iter()
+            .map(|s| (s.id, enumerate_skeletons(s, fleet, cfg)))
+            .collect();
+    }
+    // Concurrency is capped at the core count: each enumeration can
+    // materialize up to BOUNDED_EXACT_THRESHOLD skeletons, so an
+    // unbounded spawn over a large app set would oversubscribe cores and
+    // spike memory in lockstep.
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let mut out = Vec::with_capacity(specs.len());
+    for batch in specs.chunks(max_threads) {
+        out.extend(std::thread::scope(|scope| {
+            let handles: Vec<_> = batch
+                .iter()
+                .map(|&spec| scope.spawn(move || (spec.id, enumerate_skeletons(spec, fleet, cfg))))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("skeleton enumeration thread panicked"))
+                .collect::<Vec<_>>()
+        }));
+    }
+    out
+}
+
+/// Map form of [`enumerate_skeletons_for`] over a pipeline slice (the
+/// progressive planner's bounded-search entry).
+pub fn enumerate_skeletons_all(
+    specs: &[PipelineSpec],
+    fleet: &Fleet,
+    cfg: PlannerCfg,
+) -> BTreeMap<PipelineId, Vec<Skeleton>> {
+    let refs: Vec<&PipelineSpec> = specs.iter().collect();
+    enumerate_skeletons_for(&refs, fleet, cfg).into_iter().collect()
 }
 
 /// Recursively build d-permutations of `devs`.
@@ -393,5 +926,124 @@ mod tests {
         )]);
         let p = any_pipeline(3);
         assert!(enumerate_plans(&p, &f, EnumerateCfg::default()).is_empty());
+        assert!(enumerate_skeletons(&p, &f, PlannerCfg::bounded(4)).is_empty());
+    }
+
+    #[test]
+    fn skeleton_space_matches_enumeration_when_nothing_filtered() {
+        for (d, l) in [(2, 4), (3, 5)] {
+            let p = any_pipeline(l);
+            let mut n = 0u64;
+            enumerate_splits_with(&p, &fleet(d), EnumerateCfg::default(), |_| n += 1);
+            assert_eq!(n, skeleton_space(d, l, usize::MAX), "D={d} L={l}");
+        }
+    }
+
+    #[test]
+    fn skeleton_space_saturates_at_fleet_scale() {
+        // 16 devices × a 28-layer model overflows u64 — the bounded mode's
+        // raison d'être.
+        assert_eq!(skeleton_space(16, 28, usize::MAX), u64::MAX);
+        // 8 devices × 9 layers is finite but already in the millions.
+        let s = skeleton_space(8, 9, usize::MAX);
+        assert!(s > 1_000_000 && s < u64::MAX, "{s}");
+        // Capping the split arity shrinks the space.
+        assert!(skeleton_space(8, 9, 2) < s);
+    }
+
+    #[test]
+    fn exhaustive_skeletons_preserve_enumeration_order() {
+        let p = any_pipeline(5);
+        let f = fleet(3);
+        let skels = enumerate_skeletons(&p, &f, PlannerCfg::default());
+        let mut raw: Vec<Vec<Assignment>> = Vec::new();
+        enumerate_splits_with(&p, &f, EnumerateCfg::default(), |c| raw.push(c.to_vec()));
+        assert_eq!(skels.len(), raw.len());
+        for (s, r) in skels.iter().zip(&raw) {
+            assert_eq!(&s.chunks, r, "order must match the streaming enumeration");
+            // Exhaustive entries skip the bound (selection never reads it).
+            assert_eq!(s.chain_bound, 0.0);
+        }
+    }
+
+    #[test]
+    fn bounded_below_threshold_is_complete_and_sorted() {
+        let p = any_pipeline(5);
+        let f = fleet(3);
+        assert!(skeleton_space(3, 5, usize::MAX) <= BOUNDED_EXACT_THRESHOLD);
+        let b = enumerate_skeletons(&p, &f, PlannerCfg::bounded(4));
+        let e = enumerate_skeletons(&p, &f, PlannerCfg::default());
+        assert_eq!(b.len(), e.len(), "below threshold bounded must be complete");
+        assert!(b.windows(2).all(|w| w[0].chain_bound <= w[1].chain_bound));
+        assert!(
+            b.iter().all(|s| s.chain_bound > 0.0 && s.chain_bound.is_finite()),
+            "bounded-mode entries carry real bounds"
+        );
+    }
+
+    #[test]
+    fn beam_prunes_large_spaces_but_keeps_valid_diverse_candidates() {
+        // 8 devices × a 9-layer model is past the exact threshold.
+        let p = any_pipeline(9);
+        let f = fleet(8);
+        let space = skeleton_space(8, 9, usize::MAX);
+        assert!(space > BOUNDED_EXACT_THRESHOLD);
+        let skels = enumerate_skeletons(&p, &f, PlannerCfg::bounded(DEFAULT_BEAM_WIDTH));
+        assert!(!skels.is_empty());
+        assert!(
+            (skels.len() as u64) < space / 1000,
+            "beam must prune: {} of {space}",
+            skels.len()
+        );
+        for s in &skels {
+            let mut prev = 0;
+            for (i, a) in s.chunks.iter().enumerate() {
+                assert_eq!(a.range.start, prev, "chunks must partition 0..L");
+                prev = a.range.end;
+                if i > 0 {
+                    assert_ne!(s.chunks[i - 1].device, a.device);
+                }
+            }
+            assert_eq!(prev, 9);
+            assert!(s.chain_bound.is_finite());
+        }
+        // Rotation diversity: single-chunk candidates cover every device,
+        // so context-aware selection can route around busy accelerators.
+        let monos: std::collections::BTreeSet<DeviceId> = skels
+            .iter()
+            .filter(|s| s.chunks.len() == 1)
+            .map(|s| s.chunks[0].device)
+            .collect();
+        assert_eq!(monos.len(), 8, "monolithic candidates must cover the fleet");
+        assert!(skels.windows(2).all(|w| w[0].chain_bound <= w[1].chain_bound));
+    }
+
+    #[test]
+    fn parallel_enumeration_matches_sequential() {
+        let f = fleet(3);
+        let ps: Vec<PipelineSpec> = (0..3)
+            .map(|i| {
+                PipelineSpec::new(
+                    i,
+                    format!("p{i}"),
+                    SourceReq::Any,
+                    small_model(4 + i),
+                    TargetReq::Any,
+                )
+            })
+            .collect();
+        for cfg in [PlannerCfg::default(), PlannerCfg::bounded(4)] {
+            let all = enumerate_skeletons_all(&ps, &f, cfg);
+            assert_eq!(all.len(), 3);
+            for p in &ps {
+                let solo = enumerate_skeletons(p, &f, cfg);
+                let par = &all[&p.id];
+                assert_eq!(par.len(), solo.len(), "{cfg:?}");
+                for (a, b) in par.iter().zip(&solo) {
+                    assert_eq!(a.chunks, b.chunks);
+                    assert_eq!(a.chain_bound.to_bits(), b.chain_bound.to_bits());
+                }
+            }
+        }
     }
 }

@@ -14,7 +14,9 @@ pub mod collab;
 
 pub use collab::{CollabPlan, RunnableError};
 pub use enumerate::{
-    enumerate_plans, enumerate_plans_with, enumerate_splits_with, paper_plan_count, EnumerateCfg,
+    enumerate_plans, enumerate_plans_with, enumerate_skeletons, enumerate_skeletons_all,
+    enumerate_skeletons_for, enumerate_splits_with, paper_plan_count, skeleton_space,
+    EnumerateCfg, PlannerCfg, SearchMode, Skeleton, BOUNDED_EXACT_THRESHOLD, DEFAULT_BEAM_WIDTH,
 };
 pub use exec_plan::{Assignment, ExecutionPlan};
 pub use task::{PlanTask, TaskKind, UnitKind};

@@ -362,8 +362,24 @@ pub fn simulate(
         }
     }
 
-    // All tasks must have completed (deadlock would leave NANs).
-    debug_assert!(end_time.iter().all(|t| t.is_finite()), "DES deadlock");
+    // All tasks must have completed — checked in every build profile. This
+    // was a `debug_assert!`, so a release build with a cyclic or missing
+    // dependency (e.g. a policy wired with a zero in-flight window)
+    // silently returned NaN-poisoned makespan/throughput/latency figures
+    // instead of failing. Fail loudly with a diagnostic instead.
+    let expected = n * cfg.runs;
+    if completed != expected {
+        let unfinished = end_time.iter().filter(|t| !t.is_finite()).count();
+        let never_ready = pending.iter().filter(|&&d| d > 0).count();
+        panic!(
+            "DES deadlock: {completed}/{expected} pipeline runs completed \
+             ({unfinished} of {} tasks never finished, {never_ready} still \
+             have unmet dependencies) — cyclic or missing dependency under \
+             policy {:?}",
+            table.total(),
+            cfg.policy,
+        );
+    }
 
     let makespan = end_time.iter().copied().fold(0.0, f64::max);
 
@@ -573,5 +589,30 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.throughput, b.throughput);
         assert_eq!(a.energy_j, b.energy_j);
+    }
+
+    #[test]
+    #[should_panic(expected = "DES deadlock")]
+    fn deadlock_panics_in_every_profile_instead_of_returning_nans() {
+        // A zero in-flight window wires each run's first task to wait on
+        // its own run's last task — a dependency cycle, so nothing ever
+        // becomes ready. Regression: this check was a `debug_assert!`, so
+        // release builds returned NaN-poisoned makespan/throughput instead
+        // of failing; it must now panic with a diagnostic in all profiles.
+        let f = fleet(1);
+        let ps = pipes(1);
+        let plan = plan_spread(&ps, 1);
+        simulate(
+            &plan,
+            &ps,
+            &f,
+            &GroundTruth::default(),
+            SimConfig {
+                runs: 4,
+                warmup: 1,
+                policy: Policy::Atp { max_inflight: 0 },
+                record_trace: false,
+            },
+        );
     }
 }

@@ -6,6 +6,7 @@
 //! large-model apps (EfficientNetV2 / MobileNetV2) that exceed a single
 //! accelerator and must be split.
 
+use crate::api::RuntimeError;
 use crate::device::{Device, DeviceId, DeviceKind, Fleet, InteractionKind, SensorKind};
 use crate::model::zoo::{model_by_name, ModelName};
 use crate::pipeline::{PipelineSpec, SourceReq, TargetReq};
@@ -46,6 +47,31 @@ pub fn fleet4_hetero() -> Fleet {
         DeviceKind::Max78002,
         DeviceKind::Max78000,
     ])
+}
+
+/// An eight-wearable fleet (two full earbud/glasses/watch/ring bands) —
+/// the smallest fleet on which exhaustive plan enumeration stops being
+/// tractable (KWS alone has >3M split skeletons; see
+/// [`crate::plan::skeleton_space`]). Pair with
+/// [`crate::plan::SearchMode::Bounded`].
+pub fn fleet8() -> Fleet {
+    fleet_of(&[DeviceKind::Max78000; 8])
+}
+
+/// A twelve-device heterogeneous fleet: three on-body bands where every
+/// third wearable is upgraded to a MAX78002 — the large-fleet stress
+/// scenario for bounded planning over mixed platforms.
+pub fn fleet12_hetero() -> Fleet {
+    let kinds: Vec<DeviceKind> = (0..12)
+        .map(|i| {
+            if i % 3 == 2 {
+                DeviceKind::Max78002
+            } else {
+                DeviceKind::Max78000
+            }
+        })
+        .collect();
+    fleet_of(&kinds)
 }
 
 /// The standard fleet plus a smartphone (the §II-B offloading comparison).
@@ -142,44 +168,79 @@ pub fn pipelines_with_mapping(
         .collect()
 }
 
+/// Ids of the Table I workloads.
+pub const WORKLOAD_IDS: std::ops::RangeInclusive<usize> = 1..=4;
+
+/// Human-readable list of valid workload ids/names (error messages, CLI).
+pub fn workload_names() -> String {
+    WORKLOAD_IDS
+        .map(|id| format!("{id} (Workload {id})"))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
 /// Table I workload definitions (1-based ids, matching the paper).
-pub fn workload(id: usize) -> Workload {
+///
+/// An unknown id is a typed [`RuntimeError::UnknownWorkload`] naming the
+/// valid workloads — the seed's hard `panic!` took the whole CLI down on a
+/// `--workload 9` typo.
+pub fn workload(id: usize) -> Result<Workload, RuntimeError> {
     // Endpoint assignments follow §VI-A/Fig. 14: Workload 1's endpoints
     // are the Distributed mapping (per §VI-C3); pipeline 4 (KWS) captures
     // on the earbud (d0) and alerts the ring (d3); pipeline 8
     // (MobileNetV2) captures on the glasses (d1) and alerts the ring (d3).
     match id {
-        1 => Workload {
+        1 => Ok(Workload {
             name: "Workload 1".into(),
             pipelines: vec![
                 pipeline(0, ModelName::ConvNet5, 0, 1),
                 pipeline(1, ModelName::ResSimpleNet, 1, 2),
                 pipeline(2, ModelName::UNet, 2, 3),
             ],
-        },
-        2 => Workload {
+        }),
+        2 => Ok(Workload {
             name: "Workload 2".into(),
             pipelines: vec![
                 pipeline(0, ModelName::KWS, 0, 3),
                 pipeline(1, ModelName::SimpleNet, 1, 2),
                 pipeline(2, ModelName::WideNet, 2, 0),
             ],
-        },
-        3 => Workload {
+        }),
+        3 => Ok(Workload {
             name: "Workload 3".into(),
             pipelines: vec![pipeline(0, ModelName::EfficientNetV2, 1, 3)],
-        },
-        4 => Workload {
+        }),
+        4 => Ok(Workload {
             name: "Workload 4".into(),
             pipelines: vec![pipeline(0, ModelName::MobileNetV2, 1, 3)],
-        },
-        other => panic!("no workload {other}"),
+        }),
+        other => Err(RuntimeError::UnknownWorkload {
+            id: other,
+            valid: workload_names(),
+        }),
     }
 }
 
 /// All four workloads.
 pub fn all_workloads() -> Vec<Workload> {
-    (1..=4).map(workload).collect()
+    WORKLOAD_IDS
+        .map(|id| workload(id).expect("Table I workload"))
+        .collect()
+}
+
+/// The mixed workload: all eight Table I models running concurrently,
+/// endpoints distributed across `n_devices` — the large-fleet stress
+/// scenario (run it on [`fleet8`] / [`fleet12_hetero`] with bounded
+/// search).
+pub fn workload_mixed8(n_devices: usize) -> Workload {
+    Workload {
+        name: "Mixed-8".into(),
+        pipelines: pipelines_with_mapping(
+            &ModelName::TABLE1,
+            EndpointMapping::Distributed,
+            n_devices,
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -205,10 +266,10 @@ mod tests {
 
     #[test]
     fn workloads_match_table1_assignment() {
-        let w1 = workload(1);
+        let w1 = workload(1).unwrap();
         assert_eq!(w1.pipelines.len(), 3);
         assert_eq!(w1.pipelines[0].name, "ConvNet5");
-        let w2 = workload(2);
+        let w2 = workload(2).unwrap();
         assert_eq!(w2.pipelines[0].name, "KWS");
         assert_eq!(
             w2.pipelines[0].source,
@@ -216,9 +277,60 @@ mod tests {
             "KWS captures on the earbud"
         );
         assert_eq!(w2.pipelines[0].target, TargetReq::Device(DeviceId(3)));
-        let w4 = workload(4);
+        let w4 = workload(4).unwrap();
         assert_eq!(w4.pipelines.len(), 1);
         assert_eq!(w4.pipelines[0].name, "MobileNetV2");
+    }
+
+    #[test]
+    fn unknown_workload_is_a_typed_error_listing_valid_ids() {
+        // Regression: the seed panicked with `no workload 9` instead of
+        // returning a typed error the CLI can surface.
+        let err = workload(9).unwrap_err();
+        assert!(
+            matches!(err, RuntimeError::UnknownWorkload { id: 9, .. }),
+            "{err:?}"
+        );
+        let msg = format!("{err}");
+        for id in WORKLOAD_IDS {
+            assert!(msg.contains(&format!("Workload {id}")), "{msg}");
+        }
+        assert!(workload(0).is_err());
+    }
+
+    #[test]
+    fn large_fleets_have_the_advertised_shapes() {
+        let f8 = fleet8();
+        assert_eq!(f8.len(), 8);
+        assert!(f8
+            .devices
+            .iter()
+            .all(|d| d.spec.kind == DeviceKind::Max78000));
+        assert_eq!(f8.get(DeviceId(4)).name, "earbud2");
+        let f12 = fleet12_hetero();
+        assert_eq!(f12.len(), 12);
+        let fast = f12
+            .devices
+            .iter()
+            .filter(|d| d.spec.kind == DeviceKind::Max78002)
+            .count();
+        assert_eq!(fast, 4, "every third wearable is upgraded");
+        assert_eq!(f12.accel_ids().len(), 12);
+    }
+
+    #[test]
+    fn mixed8_covers_all_table1_models_with_valid_endpoints() {
+        let w = workload_mixed8(8);
+        assert_eq!(w.pipelines.len(), 8);
+        for (p, m) in w.pipelines.iter().zip(ModelName::TABLE1) {
+            assert_eq!(p.name, m.as_str());
+            match (p.source, p.target) {
+                (SourceReq::Device(s), TargetReq::Device(t)) => {
+                    assert!(s.0 < 8 && t.0 < 8);
+                }
+                other => panic!("distributed endpoints expected, got {other:?}"),
+            }
+        }
     }
 
     #[test]

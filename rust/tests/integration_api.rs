@@ -167,7 +167,7 @@ fn device_left_triggers_exactly_one_incremental_replan() {
     // Start on five devices so d4 can depart (suffix shrink keeps ids
     // dense and the enumeration cache warm).
     let runtime = SynergyRuntime::new(fleet_n(5));
-    for spec in workload(1).pipelines {
+    for spec in workload(1).unwrap().pipelines {
         runtime.register(spec).unwrap();
     }
     let before = runtime.stats();
@@ -200,9 +200,41 @@ fn device_left_triggers_exactly_one_incremental_replan() {
 }
 
 #[test]
+fn bounded_search_keeps_the_single_incremental_replan_on_device_left() {
+    // The DeviceLeft guarantee must hold under bounded search too: one
+    // replan, served entirely from the (suffix-filtered) skeleton cache.
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet_n(5))
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    for spec in workload(1).unwrap().pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let before = runtime.stats();
+    runtime.device_left(DeviceId(4)).unwrap();
+    let after = runtime.stats();
+    assert_eq!(
+        after.orchestrations,
+        before.orchestrations + 1,
+        "exactly one replan for the departure"
+    );
+    let replan = after.last_replan.unwrap();
+    assert!(replan.incremental(), "{replan:?}");
+    assert_eq!(replan.reused_apps, 3);
+    assert_eq!(replan.enumerated_apps, 0);
+    let dep = runtime.deployment().expect("replanned deployment");
+    assert_eq!(dep.plan.plans.len(), 3);
+    assert!(dep
+        .plan
+        .plans
+        .iter()
+        .all(|p| p.chunks.iter().all(|a| a.device.0 < 4)));
+}
+
+#[test]
 fn incremental_replan_matches_planning_from_scratch() {
     let runtime = SynergyRuntime::new(fleet_n(5));
-    for spec in workload(1).pipelines {
+    for spec in workload(1).unwrap().pipelines {
         runtime.register(spec).unwrap();
     }
     runtime.device_left(DeviceId(4)).unwrap();
@@ -211,7 +243,7 @@ fn incremental_replan_matches_planning_from_scratch() {
     // A cold runtime planning directly on the shrunken fleet must select
     // the identical holistic plan.
     let cold = SynergyRuntime::new(fleet_n(4));
-    for spec in workload(1).pipelines {
+    for spec in workload(1).unwrap().pipelines {
         cold.register(spec).unwrap();
     }
     assert_eq!(incremental.plan, cold.deployment().unwrap().plan);
@@ -311,7 +343,7 @@ fn qos_degradation_emits_plan_degraded() {
 #[test]
 fn run_executes_on_the_sim_backend() {
     let runtime = SynergyRuntime::new(fleet4());
-    for spec in workload(2).pipelines {
+    for spec in workload(2).unwrap().pipelines {
         runtime.register(spec).unwrap();
     }
     let report = runtime
@@ -357,7 +389,7 @@ fn moderator_parity_with_runtime_facade() {
     use synergy::coordinator::Moderator;
     let mut moderator = Moderator::new(fleet4(), Synergy::planner());
     let runtime = SynergyRuntime::new(fleet4());
-    for spec in workload(2).pipelines {
+    for spec in workload(2).unwrap().pipelines {
         moderator.register_app(spec.clone()).unwrap();
         runtime.register(spec).unwrap();
     }

@@ -6,7 +6,11 @@ use synergy::estimator::{estimate_plan, LatencyModel};
 use synergy::model::zoo::{model_by_name, ModelName};
 use synergy::orchestrator::{Objective, PlanError, Planner, Priority, ProgressivePlanner, Synergy};
 use synergy::pipeline::{PipelineSpec, SourceReq, TargetReq};
-use synergy::workload::{all_workloads, fleet4, fleet4_hetero, fleet_n, workload};
+use synergy::plan::{skeleton_space, DEFAULT_BEAM_WIDTH};
+use synergy::workload::{
+    all_workloads, fleet12_hetero, fleet4, fleet4_hetero, fleet8, fleet_n, workload,
+    workload_mixed8,
+};
 
 fn all_planners() -> Vec<Box<dyn Planner>> {
     vec![
@@ -116,10 +120,65 @@ fn hetero_fleet_plans_heavy_triple() {
 }
 
 #[test]
+fn bounded_search_keeps_exhaustive_quality_on_paper_fleets() {
+    // Acceptance: on the paper fleets the bounded planner's selected plan
+    // must reach ≥ 0.99× the exhaustive planner's estimated throughput on
+    // every Table I workload (it is exact there — the skeleton spaces sit
+    // below the bounded-exact threshold — so the ratio is 1.0).
+    for fleet in [fleet4(), fleet4_hetero()] {
+        let lm = LatencyModel::new(&fleet);
+        for w in all_workloads() {
+            let exhaustive = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+            let bounded_planner = Synergy::planner_bounded(DEFAULT_BEAM_WIDTH);
+            let bounded = bounded_planner.plan(&w.pipelines, &fleet).unwrap();
+            bounded.check_runnable(&w.pipelines, &fleet).unwrap();
+            let t_ex = estimate_plan(&exhaustive, &w.pipelines, &fleet, &lm).throughput;
+            let t_bo = estimate_plan(&bounded, &w.pipelines, &fleet, &lm).throughput;
+            assert!(
+                t_bo >= 0.99 * t_ex,
+                "{}: bounded {t_bo} below 0.99× exhaustive {t_ex}",
+                w.name
+            );
+        }
+    }
+}
+
+#[test]
+fn bounded_search_plans_the_mixed_workload_on_large_fleets() {
+    // The large-fleet scenario exhaustive search cannot touch: all eight
+    // Table I models concurrently on 8 homogeneous / 12 heterogeneous
+    // devices. MobileNetV2's skeleton space alone is ~4.9×10¹⁰ on eight
+    // devices and ~1.2×10¹⁶ on twelve; bounded search must still select a
+    // runnable plan while scoring a vanishing fraction of it.
+    for fleet in [fleet8(), fleet12_hetero()] {
+        let w = workload_mixed8(fleet.len());
+        let planner = Synergy::planner_bounded(DEFAULT_BEAM_WIDTH);
+        let plan = planner
+            .plan(&w.pipelines, &fleet)
+            .unwrap_or_else(|e| panic!("{} devices: {e:?}", fleet.len()));
+        plan.check_runnable(&w.pipelines, &fleet).unwrap();
+        assert_eq!(plan.plans.len(), 8);
+        for (i, ep) in plan.plans.iter().enumerate() {
+            ep.validate(&w.pipelines[i].model).unwrap();
+        }
+        let mobilenet_space = skeleton_space(fleet.len(), 28, usize::MAX);
+        assert!(
+            mobilenet_space > 10_000_000_000,
+            "MobileNetV2's space must dwarf exhaustive reach (got {mobilenet_space})"
+        );
+        assert!(
+            planner.candidates_scored.get() < 2_000_000,
+            "scored {} candidates — pruning is not working",
+            planner.candidates_scored.get()
+        );
+    }
+}
+
+#[test]
 fn moderator_lifecycle_end_to_end() {
     use synergy::coordinator::Moderator;
     let mut moderator = Moderator::new(fleet4(), Synergy::planner());
-    let w = workload(1);
+    let w = workload(1).unwrap();
     for p in w.pipelines.clone() {
         moderator.register_app(p).unwrap();
     }
@@ -144,7 +203,7 @@ fn runtime_facade_lifecycle_end_to_end() {
     use synergy::api::{RunConfig, SynergyRuntime};
     let runtime = SynergyRuntime::new(fleet4());
     let mut handles = Vec::new();
-    for p in workload(1).pipelines {
+    for p in workload(1).unwrap().pipelines {
         handles.push(runtime.register(p).unwrap());
     }
     assert_eq!(runtime.deployment().unwrap().plan.plans.len(), 3);

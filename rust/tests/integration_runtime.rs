@@ -84,7 +84,7 @@ fn serving_loop_runs_and_verifies() {
 
     let Some(m) = manifest() else { return };
     let mut planner = Synergy::planner();
-    planner.cfg = EnumerateCfg { max_split_devices: 2 };
+    planner.cfg.enumerate = EnumerateCfg { max_split_devices: 2 };
     let runtime = SynergyRuntime::builder()
         .fleet(fleet4())
         .planner(planner)
