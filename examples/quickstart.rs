@@ -84,10 +84,12 @@ fn main() -> anyhow::Result<()> {
         stats.qos_violation.is_none(),
     );
 
-    // Everything above was also pushed on the event channel.
+    // Everything above was also pushed on the event channel, stamped
+    // with a sequence number (and, inside a live `Session`, the simulated
+    // time — see the `live_session` example for scenario-driven runs).
     println!("events observed:");
-    for event in events.try_iter() {
-        println!("  {event:?}");
+    for stamped in events.try_iter() {
+        println!("  #{:<3} {:?}", stamped.seq, stamped.event);
     }
     Ok(())
 }

@@ -4,6 +4,11 @@
 //!
 //!   bench <name>  median <t>  min <t>  iters <n>
 
+// Each bench target compiles this module independently and uses a
+// different subset of it; unused helpers in one target are not dead code
+// in the suite.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time `f`, returning seconds.
@@ -15,7 +20,9 @@ pub fn time_once<T>(f: &mut impl FnMut() -> T) -> f64 {
     dt
 }
 
-fn fmt(t: f64) -> String {
+/// Human-readable duration (shared across bench targets so their output
+/// stays grep-compatible).
+pub fn fmt_duration(t: f64) -> String {
     if t >= 1.0 {
         format!("{t:.3} s")
     } else if t >= 1e-3 {
@@ -25,16 +32,25 @@ fn fmt(t: f64) -> String {
     }
 }
 
-/// Run a benchmark: 1 warmup + `iters` timed runs; prints median and min.
-pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
-    let _ = time_once(&mut f); // warmup
-    let mut samples: Vec<f64> = (0..iters.max(1)).map(|_| time_once(&mut f)).collect();
+/// Sort pre-collected samples, print the standard bench line, and return
+/// the median (for callers that collect samples with per-iteration setup
+/// outside the timed section).
+pub fn report(name: &str, samples: &mut [f64]) -> f64 {
+    assert!(!samples.is_empty(), "no samples for {name}");
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median = samples[samples.len() / 2];
     println!(
         "bench {name:<44} median {:>10}  min {:>10}  iters {}",
-        fmt(median),
-        fmt(samples[0]),
+        fmt_duration(median),
+        fmt_duration(samples[0]),
         samples.len()
     );
+    median
+}
+
+/// Run a benchmark: 1 warmup + `iters` timed runs; prints median and min.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
+    let _ = time_once(&mut f); // warmup
+    let mut samples: Vec<f64> = (0..iters.max(1)).map(|_| time_once(&mut f)).collect();
+    report(name, &mut samples);
 }

@@ -1,0 +1,81 @@
+//! Session benchmarks: what does a *mid-run* plan switch cost, compared
+//! to tearing the session down and starting a fresh full run?
+//!
+//! The acceptance criterion of the live-session PR: handling a
+//! `device_left` inside the timeline (incremental replan off the warm
+//! cache + swapping the plan into the resumable DES) must be cheaper
+//! than the restart alternative (fresh runtime, re-registering every app
+//! with full plan enumeration, rebuilding the engine).
+
+mod bench_harness;
+
+use bench_harness::{fmt_duration, report, time_once};
+use synergy::api::{Scenario, ScenarioAction, SynergyRuntime};
+use synergy::device::DeviceId;
+use synergy::workload::{fleet_n, workload};
+
+fn main() {
+    let w = workload(1).unwrap();
+    let iters = 15;
+
+    // --- Mid-run plan switch: device_left inside a live session --------
+    let mut switch_samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let runtime = SynergyRuntime::new(fleet_n(5));
+        for spec in w.pipelines.clone() {
+            runtime.register(spec).unwrap();
+        }
+        let mut session = runtime.session(Scenario::new().until(6.0)).unwrap();
+        session.run_until(3.0).unwrap();
+        // Timed: the whole mid-run switch — incremental replan + plan
+        // swap into the running engine, clock and state carried over.
+        switch_samples.push(time_once(&mut || {
+            session
+                .inject(ScenarioAction::DeviceLeft(DeviceId(4)))
+                .unwrap();
+        }));
+        assert_eq!(session.switches().len(), 1);
+        assert!(
+            session.switches()[0].incremental,
+            "mid-run device_left must replan off the warm cache"
+        );
+        let rep = session.finish().unwrap();
+        assert!(rep.completions > 0);
+    }
+    let switch = report("session/mid-run-switch/device-left", &mut switch_samples);
+
+    // --- The restart alternative: fresh runtime + full run setup -------
+    let mut fresh_samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let pipelines = w.pipelines.clone();
+        fresh_samples.push(time_once(&mut || {
+            // Everything a restart pays before inference can resume on
+            // the shrunken fleet: full enumeration of every app and a new
+            // session/engine from scratch.
+            let runtime = SynergyRuntime::new(fleet_n(4));
+            for spec in pipelines.clone() {
+                runtime.register(spec).unwrap();
+            }
+            let session = runtime.session(Scenario::new().until(3.0)).unwrap();
+            std::hint::black_box(session);
+        }));
+    }
+    let fresh = report("session/fresh-full-run/setup", &mut fresh_samples);
+
+    // --- Verdict --------------------------------------------------------
+    let speedup = fresh / switch.max(1e-12);
+    println!(
+        "session/mid-run-switch is {speedup:.2}× cheaper than a fresh run \
+         (switch {} vs fresh {})",
+        fmt_duration(switch),
+        fmt_duration(fresh)
+    );
+    assert!(
+        switch < fresh,
+        "a mid-run plan switch must be cheaper than a fresh full run \
+         (switch {} vs fresh {})",
+        fmt_duration(switch),
+        fmt_duration(fresh)
+    );
+    println!("OK: mid-run plan switches beat session restarts");
+}

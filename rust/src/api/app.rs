@@ -138,6 +138,15 @@ impl AppHandle {
         core.set_paused(self.id, false, planner.as_ref())
     }
 
+    /// Update the app's QoS hints mid-session (one replan: priority
+    /// classes reorder progressive selection, and degradation events
+    /// re-check against the new floors).
+    pub fn set_qos(&self, qos: Qos) -> Result<(), RuntimeError> {
+        let mut guard = self.shared.lock().unwrap();
+        let Shared { core, planner } = &mut *guard;
+        core.set_qos(self.id, qos, planner.as_ref())
+    }
+
     /// Remove the app entirely (one replan; deployment cleared when this
     /// was the last active app).
     pub fn unregister(self) -> Result<(), RuntimeError> {

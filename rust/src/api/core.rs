@@ -9,7 +9,7 @@
 //! mutation that changes the set of active apps or the fleet triggers
 //! exactly one re-orchestration (§III-C).
 
-use crate::device::Fleet;
+use crate::device::{Device, DeviceId, Fleet};
 use crate::estimator::{estimate_plan, LatencyModel, PlanEstimate};
 use crate::orchestrator::Planner;
 use crate::pipeline::{PipelineId, PipelineSpec};
@@ -17,7 +17,7 @@ use crate::plan::{CollabPlan, ExecutionPlan};
 use crate::scheduler::{simulate, GroundTruth, Policy, SimReport};
 
 use super::error::RuntimeError;
-use super::events::{EventBus, RuntimeEvent};
+use super::events::{EventBus, EventSubscription, RuntimeEvent};
 use super::qos::{Qos, QosViolation};
 use super::replan::{select_with_cache, PlanCache, ReplanStats};
 
@@ -98,6 +98,21 @@ impl RuntimeCore {
         &self.active
     }
 
+    /// QoS hints index-aligned with [`Self::active_apps`] (session QoS
+    /// span tracking).
+    pub(crate) fn active_qos(&self) -> Vec<Qos> {
+        self.active
+            .iter()
+            .map(|spec| {
+                self.apps
+                    .iter()
+                    .find(|a| a.spec.id == spec.id)
+                    .map(|a| a.qos)
+                    .unwrap_or_default()
+            })
+            .collect()
+    }
+
     pub fn deployment(&self) -> Option<&Deployment> {
         self.deployment.as_ref()
     }
@@ -118,8 +133,14 @@ impl RuntimeCore {
         (self.cache_hits, self.enumerations)
     }
 
-    pub fn subscribe(&mut self) -> std::sync::mpsc::Receiver<RuntimeEvent> {
+    pub fn subscribe(&mut self) -> EventSubscription {
         self.events.subscribe()
+    }
+
+    /// Stamp subsequent events with a simulated-timeline time (sessions
+    /// set this around scenario-event application, and clear it after).
+    pub(crate) fn set_event_clock(&mut self, t: Option<f64>) {
+        self.events.set_clock(t);
     }
 
     /// One past the largest pipeline id ever registered (for builder
@@ -204,6 +225,71 @@ impl RuntimeCore {
             RuntimeEvent::AppResumed { app: id }
         });
         Ok(())
+    }
+
+    /// Update an app's QoS hints; triggers one re-orchestration (priority
+    /// classes reorder progressive selection). Reverted on planning
+    /// failure.
+    pub fn set_qos(
+        &mut self,
+        id: PipelineId,
+        qos: Qos,
+        planner: &dyn Planner,
+    ) -> Result<(), RuntimeError> {
+        let idx = self.entry(id)?;
+        let old = self.apps[idx].qos;
+        if old == qos {
+            return Ok(());
+        }
+        self.apps[idx].qos = qos;
+        if let Err(e) = self.orchestrate(planner) {
+            self.apps[idx].qos = old;
+            return Err(e);
+        }
+        self.events.emit(RuntimeEvent::QosUpdated { app: id });
+        Ok(())
+    }
+
+    /// A device joined the body. Its id must extend the fleet densely
+    /// (`id == fleet.len()`); triggers one re-orchestration.
+    pub fn device_joined(
+        &mut self,
+        device: Device,
+        planner: &dyn Planner,
+    ) -> Result<(), RuntimeError> {
+        if device.id.0 != self.fleet.len() {
+            return Err(RuntimeError::FleetChange(format!(
+                "joined device id {} must extend the dense fleet (expected d{})",
+                device.id,
+                self.fleet.len()
+            )));
+        }
+        let mut devices = self.fleet.devices.clone();
+        devices.push(device);
+        self.set_fleet(Fleet::new(devices), planner)
+    }
+
+    /// A device left the body. Device ids are dense, so only the
+    /// highest-id device can depart without renumbering; replan over an
+    /// arbitrarily reshaped fleet via [`Self::set_fleet`]. Departure of a
+    /// suffix device keeps the plan-enumeration cache warm — the replan is
+    /// incremental.
+    pub fn device_left(
+        &mut self,
+        id: DeviceId,
+        planner: &dyn Planner,
+    ) -> Result<(), RuntimeError> {
+        let n = self.fleet.len();
+        if n == 0 || id.0 != n - 1 {
+            return Err(RuntimeError::FleetChange(format!(
+                "device ids are dense: only the last device (d{}) can leave; \
+                 use set_fleet for arbitrary reshapes",
+                n.saturating_sub(1)
+            )));
+        }
+        let mut devices = self.fleet.devices.clone();
+        devices.pop();
+        self.set_fleet(Fleet::new(devices), planner)
     }
 
     /// Replace the fleet (device churn); emits join/leave events and
@@ -292,14 +378,9 @@ impl RuntimeCore {
         // QoS degradation notifications: each app completes once per
         // unified round, so per-app rate = system throughput / #apps.
         let per_app_rate = estimate.throughput / self.active.len() as f64;
+        let qos_list = self.active_qos();
         for (i, spec) in self.active.iter().enumerate() {
-            let qos = self
-                .apps
-                .iter()
-                .find(|a| a.spec.id == spec.id)
-                .map(|a| a.qos)
-                .unwrap_or_default();
-            if let Some(violation) = qos.check(per_app_rate, estimate.chain_latency[i]) {
+            if let Some(violation) = qos_list[i].check(per_app_rate, estimate.chain_latency[i]) {
                 self.events.emit(RuntimeEvent::PlanDegraded {
                     app: spec.id,
                     violation,

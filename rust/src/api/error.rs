@@ -40,6 +40,11 @@ pub enum RuntimeError {
     #[error("no active deployment: register (or resume) at least one app first")]
     NoDeployment,
 
+    /// A scenario script is malformed (non-finite times, non-positive
+    /// battery capacity, zero duration).
+    #[error("invalid scenario: {0}")]
+    InvalidScenario(String),
+
     /// The execution backend failed.
     #[error("backend {backend}: {message}")]
     Backend {

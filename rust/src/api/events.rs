@@ -2,10 +2,19 @@
 //!
 //! Every structural change the moderator reacts to (§III-C: app
 //! registration, device churn) produces events on a broadcast channel.
-//! Subscribers get an `mpsc::Receiver`; dropped receivers are pruned on the
-//! next emit, so subscriptions need no explicit teardown.
+//! Events arrive wrapped in a [`StampedEvent`]: a bus-wide sequence number
+//! (total order across subscribers) plus, inside a live
+//! [`crate::api::Session`], the simulated-timeline timestamp of the
+//! scenario event that caused it — so subscribers can correlate replans
+//! with the session time series.
+//!
+//! Subscribers get an [`EventSubscription`] (deref's to an
+//! `mpsc::Receiver`); dropped subscriptions are pruned on the next emit
+//! *and* on the next subscribe, so subscriptions need no explicit teardown
+//! and a subscribe/drop churn loop cannot grow the sender list between
+//! emits.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Weak};
 
 use crate::device::DeviceId;
 use crate::pipeline::PipelineId;
@@ -27,6 +36,8 @@ pub enum RuntimeEvent {
     AppPaused { app: PipelineId },
     /// A paused app was resumed.
     AppResumed { app: PipelineId },
+    /// An app's QoS hints were updated.
+    QosUpdated { app: PipelineId },
     /// Holistic orchestration selected a new deployment.
     Replanned {
         /// Orchestration counter (monotonically increasing).
@@ -46,23 +57,78 @@ pub enum RuntimeEvent {
     },
 }
 
+/// A [`RuntimeEvent`] plus correlation metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StampedEvent {
+    /// Bus-wide sequence number, strictly increasing in emission order.
+    pub seq: u64,
+    /// Simulated-timeline timestamp when the event was caused by a
+    /// [`crate::api::Session`] scenario; `None` for out-of-session calls.
+    pub sim_time: Option<f64>,
+    pub event: RuntimeEvent,
+}
+
+/// A live subscription to the event bus. Dereferences to the underlying
+/// `mpsc::Receiver<StampedEvent>`, so `try_iter`/`try_recv`/`recv` work
+/// directly. Dropping it unsubscribes (lazily pruned by the bus).
+pub struct EventSubscription {
+    rx: mpsc::Receiver<StampedEvent>,
+    /// Liveness token: the bus holds the matching `Weak` and prunes
+    /// senders whose token dropped.
+    _alive: Arc<()>,
+}
+
+impl std::ops::Deref for EventSubscription {
+    type Target = mpsc::Receiver<StampedEvent>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.rx
+    }
+}
+
+struct BusSender {
+    tx: mpsc::Sender<StampedEvent>,
+    alive: Weak<()>,
+}
+
 /// Broadcast fan-out of [`RuntimeEvent`]s to any number of subscribers.
 #[derive(Default)]
 pub(crate) struct EventBus {
-    subscribers: Vec<mpsc::Sender<RuntimeEvent>>,
+    subscribers: Vec<BusSender>,
+    next_seq: u64,
+    /// Simulated clock stamped onto emitted events (sessions set this
+    /// around scenario-event application).
+    clock: Option<f64>,
 }
 
 impl EventBus {
-    /// Open a new subscription.
-    pub fn subscribe(&mut self) -> mpsc::Receiver<RuntimeEvent> {
+    /// Open a new subscription, pruning dropped ones first.
+    pub fn subscribe(&mut self) -> EventSubscription {
+        self.subscribers.retain(|s| s.alive.strong_count() > 0);
         let (tx, rx) = mpsc::channel();
-        self.subscribers.push(tx);
-        rx
+        let alive = Arc::new(());
+        self.subscribers.push(BusSender {
+            tx,
+            alive: Arc::downgrade(&alive),
+        });
+        EventSubscription { rx, _alive: alive }
+    }
+
+    /// Set (or clear) the simulated-time stamp for subsequent emits.
+    pub fn set_clock(&mut self, t: Option<f64>) {
+        self.clock = t;
     }
 
     /// Deliver an event to all live subscribers, pruning dead ones.
     pub fn emit(&mut self, event: RuntimeEvent) {
-        self.subscribers.retain(|s| s.send(event.clone()).is_ok());
+        let stamped = StampedEvent {
+            seq: self.next_seq,
+            sim_time: self.clock,
+            event,
+        };
+        self.next_seq += 1;
+        self.subscribers
+            .retain(|s| s.alive.strong_count() > 0 && s.tx.send(stamped.clone()).is_ok());
     }
 }
 
@@ -71,24 +137,70 @@ mod tests {
     use super::*;
 
     #[test]
-    fn subscribers_receive_events() {
+    fn subscribers_receive_events_in_order_with_increasing_seq() {
         let mut bus = EventBus::default();
         let rx = bus.subscribe();
         bus.emit(RuntimeEvent::DeviceJoined { device: DeviceId(2) });
+        bus.emit(RuntimeEvent::AppRegistered { app: PipelineId(0) });
+        bus.emit(RuntimeEvent::DeviceLeft { device: DeviceId(2) });
+        let got: Vec<StampedEvent> = rx.try_iter().collect();
         assert_eq!(
-            rx.try_recv().unwrap(),
-            RuntimeEvent::DeviceJoined { device: DeviceId(2) }
+            got.iter().map(|s| s.event.clone()).collect::<Vec<_>>(),
+            vec![
+                RuntimeEvent::DeviceJoined { device: DeviceId(2) },
+                RuntimeEvent::AppRegistered { app: PipelineId(0) },
+                RuntimeEvent::DeviceLeft { device: DeviceId(2) },
+            ],
+            "delivery must preserve emission order"
+        );
+        assert!(
+            got.windows(2).all(|w| w[0].seq < w[1].seq),
+            "sequence numbers must strictly increase: {got:?}"
         );
         assert!(rx.try_recv().is_err());
     }
 
     #[test]
-    fn dropped_subscribers_are_pruned() {
+    fn dropped_subscribers_are_pruned_on_emit() {
         let mut bus = EventBus::default();
         let rx = bus.subscribe();
         drop(rx);
         let rx2 = bus.subscribe();
         bus.emit(RuntimeEvent::AppRegistered { app: PipelineId(0) });
         assert!(rx2.try_recv().is_ok());
+        assert_eq!(bus.subscribers.len(), 1);
+    }
+
+    #[test]
+    fn dropped_subscribers_are_pruned_on_subscribe_too() {
+        // Regression: the sender list used to grow without bound under a
+        // subscribe/drop churn loop with no emits in between.
+        let mut bus = EventBus::default();
+        for _ in 0..64 {
+            drop(bus.subscribe());
+        }
+        let live = bus.subscribe();
+        assert_eq!(
+            bus.subscribers.len(),
+            1,
+            "subscribe() must prune dropped subscribers"
+        );
+        bus.emit(RuntimeEvent::AppPaused { app: PipelineId(1) });
+        assert_eq!(live.try_recv().unwrap().event, RuntimeEvent::AppPaused { app: PipelineId(1) });
+    }
+
+    #[test]
+    fn session_clock_stamps_sim_time() {
+        let mut bus = EventBus::default();
+        let rx = bus.subscribe();
+        bus.emit(RuntimeEvent::AppRegistered { app: PipelineId(0) });
+        bus.set_clock(Some(2.5));
+        bus.emit(RuntimeEvent::DeviceLeft { device: DeviceId(3) });
+        bus.set_clock(None);
+        bus.emit(RuntimeEvent::AppPaused { app: PipelineId(0) });
+        let got: Vec<StampedEvent> = rx.try_iter().collect();
+        assert_eq!(got[0].sim_time, None);
+        assert_eq!(got[1].sim_time, Some(2.5));
+        assert_eq!(got[2].sim_time, None);
     }
 }

@@ -14,11 +14,20 @@
 //!   `unregister`, `stats`).
 //! - [`RuntimeError`] types every failure (no panics, no silent no-ops).
 //! - [`RuntimeEvent`] streams orchestration to subscribers — device churn,
-//!   replans, QoS degradations — instead of making apps poll.
+//!   replans, QoS degradations — instead of making apps poll. Events are
+//!   [`StampedEvent`]s: sequence-numbered, and timestamped on the
+//!   simulated timeline inside a session.
 //! - Re-orchestration is *incremental*: per-app plan enumerations are
 //!   cached and reused across app and fleet changes ([`replan`]).
 //! - [`ExecutionBackend`] unifies simulated ([`SimBackend`]) and real
 //!   PJRT ([`PjrtBackend`]) inference behind [`SynergyRuntime::run`].
+//! - **Live sessions** ([`session`], [`scenario`]): a [`Scenario`] scripts
+//!   timed churn (device departures, app arrivals, QoS changes, battery
+//!   drains); [`SynergyRuntime::session`] replays it on the resumable DES
+//!   with mid-run incremental replanning — [`Session::run_until`] /
+//!   [`Session::inject`] / [`Session::finish`] — and reports a time
+//!   series ([`SessionReport`]): per-interval throughput/latency/power
+//!   per app, a plan-switch timeline, and QoS-violation spans.
 
 pub mod app;
 pub mod backend;
@@ -27,6 +36,8 @@ pub mod error;
 pub mod events;
 pub mod qos;
 pub mod replan;
+pub mod scenario;
+pub mod session;
 
 mod runtime;
 
@@ -36,10 +47,14 @@ pub use self::backend::PjrtBackend;
 pub use self::backend::{AppRunStats, ExecutionBackend, RunConfig, RunReport, SimBackend};
 pub use self::core::{AppStats, Deployment, RuntimeCore};
 pub use self::error::RuntimeError;
-pub use self::events::RuntimeEvent;
+pub use self::events::{EventSubscription, RuntimeEvent, StampedEvent};
 pub use self::qos::{AppPriority, Qos, QosViolation};
 pub use self::replan::ReplanStats;
 pub use self::runtime::{RuntimeBuilder, RuntimeStats, SynergyRuntime};
+pub use self::scenario::{Scenario, ScenarioAction, TimedAction};
+pub use self::session::{
+    AppInterval, Interval, PlanSwitch, QosSpan, Session, SessionCfg, SessionReport,
+};
 
 // Capability vocabulary under the names the app interface reads best with:
 // `.source(Sensor::Microphone)`, `.target(Interaction::Haptic)`.

@@ -20,9 +20,11 @@ use super::app::{AppBuilder, AppHandle};
 use super::backend::{ExecutionBackend, RunConfig, RunReport, SimBackend};
 use super::core::{Deployment, RuntimeCore};
 use super::error::RuntimeError;
-use super::events::RuntimeEvent;
+use super::events::EventSubscription;
 use super::qos::Qos;
 use super::replan::ReplanStats;
+use super::scenario::Scenario;
+use super::session::{Session, SessionCfg};
 
 /// Core + planner behind one lock, shared with [`AppHandle`]s.
 pub(crate) struct Shared {
@@ -114,8 +116,30 @@ impl SynergyRuntime {
     }
 
     /// Subscribe to runtime events (device churn, replans, degradations).
-    pub fn subscribe(&self) -> std::sync::mpsc::Receiver<RuntimeEvent> {
+    /// Events arrive stamped with a sequence number — and, inside a live
+    /// [`Session`], the simulated time of the scenario event that caused
+    /// them.
+    pub fn subscribe(&self) -> EventSubscription {
         self.shared.lock().unwrap().core.subscribe()
+    }
+
+    /// Open a live session driving the discrete-event timeline through a
+    /// [`Scenario`] of timed churn events (see [`Session`]). The session
+    /// executes on the device-model simulator; the runtime's registered
+    /// apps and fleet are its starting state, and scenario events mutate
+    /// the same underlying core (handles observe the churn).
+    pub fn session(&self, scenario: Scenario) -> Result<Session, RuntimeError> {
+        Session::start(self.shared.clone(), scenario, SessionCfg::default())
+    }
+
+    /// Like [`Self::session`], with explicit session configuration
+    /// (seed, trace recording, battery-poll granularity).
+    pub fn session_with(
+        &self,
+        scenario: Scenario,
+        cfg: SessionCfg,
+    ) -> Result<Session, RuntimeError> {
+        Session::start(self.shared.clone(), scenario, cfg)
     }
 
     /// The current on-body fleet.
@@ -152,16 +176,7 @@ impl SynergyRuntime {
     pub fn device_joined(&self, device: Device) -> Result<(), RuntimeError> {
         let mut guard = self.shared.lock().unwrap();
         let Shared { core, planner } = &mut *guard;
-        if device.id.0 != core.fleet().len() {
-            return Err(RuntimeError::FleetChange(format!(
-                "joined device id {} must extend the dense fleet (expected d{})",
-                device.id,
-                core.fleet().len()
-            )));
-        }
-        let mut devices = core.fleet().devices.clone();
-        devices.push(device);
-        core.set_fleet(Fleet::new(devices), planner.as_ref())
+        core.device_joined(device, planner.as_ref())
     }
 
     /// A device left the body. Device ids are dense, so only the
@@ -172,17 +187,7 @@ impl SynergyRuntime {
     pub fn device_left(&self, id: DeviceId) -> Result<(), RuntimeError> {
         let mut guard = self.shared.lock().unwrap();
         let Shared { core, planner } = &mut *guard;
-        let n = core.fleet().len();
-        if n == 0 || id.0 != n - 1 {
-            return Err(RuntimeError::FleetChange(format!(
-                "device ids are dense: only the last device (d{}) can leave; \
-                 use set_fleet for arbitrary reshapes",
-                n.saturating_sub(1)
-            )));
-        }
-        let mut devices = core.fleet().devices.clone();
-        devices.pop();
-        core.set_fleet(Fleet::new(devices), planner.as_ref())
+        core.device_left(id, planner.as_ref())
     }
 
     /// Replace the whole fleet (arbitrary churn); triggers one replan.
@@ -194,6 +199,11 @@ impl SynergyRuntime {
 
     /// Execute the current deployment on the configured backend — the
     /// single entry point for simulated and real inference.
+    ///
+    /// On the simulator backend this is the one-shot wrapper over the
+    /// same resumable DES a [`Session`] drives: one plan, one bounded
+    /// epoch, no timeline events. Scenarios with mid-run churn go through
+    /// [`Self::session`].
     pub fn run(&self, cfg: &RunConfig) -> Result<RunReport, RuntimeError> {
         // Snapshot under the lock, execute outside it (PJRT runs can take
         // a while; handles stay usable meanwhile).

@@ -1,0 +1,288 @@
+//! Scenario scripts: timed churn events for a live [`super::Session`].
+//!
+//! A [`Scenario`] is a declarative timeline of the things Synergy's
+//! dynamism story is about — apps arriving and leaving, devices dropping
+//! off the body and rejoining, QoS hints tightening mid-run, batteries
+//! draining — expressed with a fluent builder:
+//!
+//! ```text
+//! let scenario = Scenario::new()
+//!     .at(0.0).register(kws_spec)
+//!     .at(2.5).device_left(3)
+//!     .at(4.0).register(activity_spec)
+//!     .at(6.0).qos(PipelineId(0), Qos { min_rate_hz: 10.0, ..Qos::default() })
+//!     .battery(DeviceId(2), 1.5)   // joules until depletion → departure
+//!     .until(10.0);
+//! ```
+//!
+//! The session replays the script against the discrete-event timeline,
+//! replanning incrementally *inside* the run at each event. Ties are
+//! applied in insertion order. Device ids are dense (see
+//! [`super::SynergyRuntime::device_left`]): scripted departures and
+//! battery depletions must name the current highest-id device.
+
+use crate::device::{Device, DeviceId};
+use crate::pipeline::{PipelineId, PipelineSpec};
+
+use super::error::RuntimeError;
+use super::qos::Qos;
+
+/// One scripted (or injected) runtime mutation.
+#[derive(Clone, Debug)]
+pub enum ScenarioAction {
+    /// The named device leaves the body (must be the current last id).
+    DeviceLeft(DeviceId),
+    /// A device joins the body (its id must extend the fleet densely).
+    DeviceJoined(Device),
+    /// Register an app with QoS hints.
+    Register { spec: PipelineSpec, qos: Qos },
+    /// Unregister an app.
+    Unregister(PipelineId),
+    /// Pause an app (drops out of the active plan).
+    Pause(PipelineId),
+    /// Resume a paused app.
+    Resume(PipelineId),
+    /// Update an app's QoS hints.
+    SetQos { app: PipelineId, qos: Qos },
+}
+
+impl ScenarioAction {
+    /// Short label used as the plan-switch cause in session reports —
+    /// deterministic, so replayed sessions compare equal.
+    pub fn describe(&self) -> String {
+        match self {
+            ScenarioAction::DeviceLeft(d) => format!("device-left({d})"),
+            ScenarioAction::DeviceJoined(dev) => format!("device-joined({})", dev.id),
+            ScenarioAction::Register { spec, .. } => {
+                format!("register({}:{})", spec.id, spec.name)
+            }
+            ScenarioAction::Unregister(id) => format!("unregister({id})"),
+            ScenarioAction::Pause(id) => format!("pause({id})"),
+            ScenarioAction::Resume(id) => format!("resume({id})"),
+            ScenarioAction::SetQos { app, .. } => format!("qos({app})"),
+        }
+    }
+}
+
+/// A timestamped scenario action.
+#[derive(Clone, Debug)]
+pub struct TimedAction {
+    /// Simulated time the action fires, seconds from session start.
+    pub t: f64,
+    pub action: ScenarioAction,
+}
+
+/// A declarative timeline of runtime churn (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    events: Vec<TimedAction>,
+    /// Explicit session end; defaults to the last event time.
+    until: Option<f64>,
+    /// Battery capacities: the device departs when its simulated energy
+    /// use crosses the capacity (checked at the session's battery-poll
+    /// granularity).
+    batteries: Vec<(DeviceId, f64)>,
+}
+
+impl Scenario {
+    pub fn new() -> Scenario {
+        Scenario::default()
+    }
+
+    /// Start scripting an event at time `t` (seconds from session start).
+    pub fn at(self, t: f64) -> ScenarioAt {
+        ScenarioAt { scenario: self, t }
+    }
+
+    /// Set the session end time. Without it the session ends at the last
+    /// event. Events scripted after `t` never fire.
+    pub fn until(mut self, t: f64) -> Scenario {
+        self.until = Some(t);
+        self
+    }
+
+    /// Declare a battery for `device`: once its simulated energy use
+    /// (base draw + active draws) crosses `capacity_j` joules, the device
+    /// leaves the body. The drain ramp is the DES's own energy
+    /// integration, so busier plans deplete faster. Device ids are dense,
+    /// so depletion fires only while the device is the fleet's highest id
+    /// — a depleted non-suffix device defers until scripted departures
+    /// free the suffix (and a device that leaves by script takes its
+    /// battery with it).
+    pub fn battery(mut self, device: DeviceId, capacity_j: f64) -> Scenario {
+        self.batteries.push((device, capacity_j));
+        self
+    }
+
+    /// The scripted events, in firing order (time, then insertion order).
+    pub fn events(&self) -> &[TimedAction] {
+        &self.events
+    }
+
+    /// Declared battery capacities.
+    pub fn batteries(&self) -> &[(DeviceId, f64)] {
+        &self.batteries
+    }
+
+    /// The session end time: the explicit [`Self::until`] horizon, or the
+    /// last event time.
+    pub fn duration(&self) -> f64 {
+        self.until
+            .unwrap_or_else(|| self.events.iter().map(|e| e.t).fold(0.0, f64::max))
+    }
+
+    /// Events sorted by time (stable: ties keep insertion order).
+    pub(crate) fn sorted_events(&self) -> Vec<TimedAction> {
+        let mut evs = self.events.clone();
+        evs.sort_by(|a, b| a.t.total_cmp(&b.t));
+        evs
+    }
+
+    /// Validate the script: finite, non-negative times; positive battery
+    /// capacities; a positive duration.
+    pub(crate) fn validate(&self) -> Result<(), RuntimeError> {
+        for ev in &self.events {
+            if !ev.t.is_finite() || ev.t < 0.0 {
+                return Err(RuntimeError::InvalidScenario(format!(
+                    "event time {} is not a finite non-negative second offset ({})",
+                    ev.t,
+                    ev.action.describe()
+                )));
+            }
+        }
+        for &(d, cap) in &self.batteries {
+            if !cap.is_finite() || cap <= 0.0 {
+                return Err(RuntimeError::InvalidScenario(format!(
+                    "battery capacity for {d} must be a positive joule amount, got {cap}"
+                )));
+            }
+        }
+        let dur = self.duration();
+        if !dur.is_finite() || dur <= 0.0 {
+            return Err(RuntimeError::InvalidScenario(format!(
+                "session duration must be positive: set .until(t) or script \
+                 at least one event (got {dur})"
+            )));
+        }
+        Ok(())
+    }
+
+    fn push(mut self, t: f64, action: ScenarioAction) -> Scenario {
+        self.events.push(TimedAction { t, action });
+        self
+    }
+}
+
+/// Builder stage returned by [`Scenario::at`]; each method scripts one
+/// action at the pending time and hands the scenario back.
+pub struct ScenarioAt {
+    scenario: Scenario,
+    t: f64,
+}
+
+impl ScenarioAt {
+    /// The device with this id leaves the body.
+    pub fn device_left(self, id: impl Into<DeviceId>) -> Scenario {
+        let id = id.into();
+        self.scenario.push(self.t, ScenarioAction::DeviceLeft(id))
+    }
+
+    /// A device joins the body.
+    pub fn device_joined(self, device: Device) -> Scenario {
+        self.scenario
+            .push(self.t, ScenarioAction::DeviceJoined(device))
+    }
+
+    /// Register an app (default QoS).
+    pub fn register(self, spec: PipelineSpec) -> Scenario {
+        self.scenario.push(
+            self.t,
+            ScenarioAction::Register { spec, qos: Qos::default() },
+        )
+    }
+
+    /// Register an app with QoS hints.
+    pub fn register_with_qos(self, spec: PipelineSpec, qos: Qos) -> Scenario {
+        self.scenario
+            .push(self.t, ScenarioAction::Register { spec, qos })
+    }
+
+    /// Unregister an app.
+    pub fn unregister(self, id: PipelineId) -> Scenario {
+        self.scenario.push(self.t, ScenarioAction::Unregister(id))
+    }
+
+    /// Pause an app.
+    pub fn pause(self, id: PipelineId) -> Scenario {
+        self.scenario.push(self.t, ScenarioAction::Pause(id))
+    }
+
+    /// Resume a paused app.
+    pub fn resume(self, id: PipelineId) -> Scenario {
+        self.scenario.push(self.t, ScenarioAction::Resume(id))
+    }
+
+    /// Update an app's QoS hints.
+    pub fn qos(self, app: PipelineId, qos: Qos) -> Scenario {
+        self.scenario
+            .push(self.t, ScenarioAction::SetQos { app, qos })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_scripts_sorted_timeline() {
+        let s = Scenario::new()
+            .at(4.0).unregister(PipelineId(1))
+            .at(2.5).device_left(3)
+            .at(2.5).pause(PipelineId(0))
+            .until(10.0);
+        assert_eq!(s.duration(), 10.0);
+        let evs = s.sorted_events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].t, 2.5);
+        assert!(matches!(evs[0].action, ScenarioAction::DeviceLeft(DeviceId(3))));
+        // Ties keep insertion order.
+        assert!(matches!(evs[1].action, ScenarioAction::Pause(PipelineId(0))));
+        assert!(matches!(evs[2].action, ScenarioAction::Unregister(PipelineId(1))));
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn duration_defaults_to_last_event() {
+        let s = Scenario::new().at(3.25).device_left(2);
+        assert_eq!(s.duration(), 3.25);
+    }
+
+    #[test]
+    fn invalid_scripts_are_typed_errors() {
+        let s = Scenario::new().at(-1.0).device_left(0).until(5.0);
+        assert!(matches!(
+            s.validate().unwrap_err(),
+            RuntimeError::InvalidScenario(_)
+        ));
+        let s = Scenario::new().at(f64::NAN).device_left(0).until(5.0);
+        assert!(s.validate().is_err());
+        let s = Scenario::new()
+            .battery(DeviceId(1), 0.0)
+            .until(5.0);
+        assert!(s.validate().is_err());
+        let s = Scenario::new(); // no events, no horizon
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn causes_are_deterministic_labels() {
+        assert_eq!(
+            ScenarioAction::DeviceLeft(DeviceId(3)).describe(),
+            "device-left(d3)"
+        );
+        assert_eq!(
+            ScenarioAction::Pause(PipelineId(2)).describe(),
+            "pause(p2)"
+        );
+    }
+}

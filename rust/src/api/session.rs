@@ -1,0 +1,628 @@
+//! Live sessions: scenario-driven execution with mid-run replanning and
+//! time-series reports.
+//!
+//! A [`Session`] drives the resumable discrete-event engine
+//! ([`crate::scheduler::SimEngine`]) through a [`super::Scenario`] of
+//! timed churn events. At each event the session mutates the shared
+//! runtime core (the same registry/fleet/deployment the
+//! [`super::SynergyRuntime`] handles see), replans incrementally using the
+//! cached per-app enumerations, and swaps the new plan into the engine —
+//! *inside* the timeline, carrying the clock, unit queues, in-flight
+//! tasks, and energy accounting across the switch. The one-shot
+//! [`super::SynergyRuntime::run`] is the degenerate case: one plan, no
+//! events.
+//!
+//! ```text
+//! let scenario = Scenario::new().at(3.0).device_left(4).until(8.0);
+//! let mut session = runtime.session(scenario)?;
+//! session.run_until(5.0)?;                 // drive in segments…
+//! session.inject(ScenarioAction::Pause(app))?;  // …or improvise
+//! let report = session.finish()?;          // time-series report
+//! ```
+//!
+//! Reports are time series: one [`Interval`] per inter-event segment with
+//! per-app throughput/latency and power, a [`PlanSwitch`] timeline with
+//! measured replan latencies, and [`QosSpan`]s marking when an app's
+//! deployed estimate violated its hints. Replayed scenarios are
+//! deterministic: everything except the wall-clock `replan_wall_s` field
+//! compares equal across runs.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::device::{DeviceId, Fleet};
+use crate::pipeline::{PipelineId, PipelineSpec};
+use crate::plan::CollabPlan;
+use crate::scheduler::{GroundTruth, RoundRecord, SimEngine, Trace};
+
+use super::error::RuntimeError;
+use super::qos::{Qos, QosViolation};
+use super::replan::ReplanStats;
+use super::runtime::Shared;
+use super::scenario::{Scenario, ScenarioAction, TimedAction};
+
+/// Session configuration (see [`super::SynergyRuntime::session_with`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionCfg {
+    /// Seed for the ground-truth jitter stream.
+    pub seed: u64,
+    /// Record a full task trace into the report.
+    pub record_trace: bool,
+    /// Battery-drain check granularity, seconds of simulated time. Only
+    /// consulted when the scenario declares batteries.
+    pub battery_poll_s: f64,
+}
+
+impl Default for SessionCfg {
+    fn default() -> SessionCfg {
+        SessionCfg {
+            seed: 42,
+            record_trace: false,
+            battery_poll_s: 0.25,
+        }
+    }
+}
+
+/// One plan switch on the session timeline.
+#[derive(Clone, Debug)]
+pub struct PlanSwitch {
+    /// Simulated time the causing event fired.
+    pub t: f64,
+    /// Deterministic cause label (see
+    /// [`super::ScenarioAction::describe`]); battery depletions report
+    /// `battery-depleted(dN)`.
+    pub cause: String,
+    /// Apps in the new active plan (0 = deployment cleared).
+    pub apps: usize,
+    /// Whether the replan was served entirely from the enumeration cache.
+    pub incremental: bool,
+    /// Apps served from the cache / re-enumerated by this replan.
+    pub reused_apps: usize,
+    pub enumerated_apps: usize,
+    /// The new plan's estimated system throughput, inf/s (0 when the
+    /// deployment cleared).
+    pub est_throughput: f64,
+    /// Measured wall-clock replan latency, seconds. The one
+    /// non-deterministic field — excluded from replay comparisons.
+    pub replan_wall_s: f64,
+}
+
+/// A span of the timeline during which an app's deployed estimate
+/// violated its QoS hints.
+#[derive(Clone, Debug)]
+pub struct QosSpan {
+    pub app: PipelineId,
+    pub name: String,
+    pub violation: QosViolation,
+    pub start: f64,
+    /// Span end (the session end if still violating at finish).
+    pub end: f64,
+}
+
+/// Per-app slice of one report interval.
+#[derive(Clone, Debug)]
+pub struct AppInterval {
+    pub app: PipelineId,
+    pub name: String,
+    /// Rounds completed within the interval.
+    pub completions: usize,
+    /// Completions per second of interval time.
+    pub throughput: f64,
+    /// Mean end-to-end latency of the interval's rounds, seconds.
+    pub mean_latency_s: f64,
+}
+
+/// Measured behavior between two timeline boundaries (session start,
+/// scenario events, session end).
+#[derive(Clone, Debug)]
+pub struct Interval {
+    pub start: f64,
+    pub end: f64,
+    /// Rounds completed in the interval, all apps.
+    pub completions: usize,
+    /// System throughput over the interval, inf/s.
+    pub throughput: f64,
+    /// Mean end-to-end latency over the interval's rounds, seconds
+    /// (0 when nothing completed).
+    pub avg_latency_s: f64,
+    /// Mean power draw over the interval, watts.
+    pub power_w: f64,
+    pub per_app: Vec<AppInterval>,
+}
+
+/// The session's time-series report.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    /// Session horizon, simulated seconds.
+    pub duration: f64,
+    /// Rounds completed across the whole session.
+    pub completions: usize,
+    /// Whole-session throughput, inf/s.
+    pub throughput: f64,
+    /// Total energy over the horizon, joules.
+    pub energy_j: f64,
+    /// Mean power over the horizon, watts.
+    pub power_w: f64,
+    /// Per-segment time series (one entry per inter-event interval).
+    pub intervals: Vec<Interval>,
+    /// Plan-switch timeline with replan latencies.
+    pub switches: Vec<PlanSwitch>,
+    /// QoS-violation spans.
+    pub qos_spans: Vec<QosSpan>,
+    /// Full task trace when requested via [`SessionCfg::record_trace`].
+    pub trace: Option<Trace>,
+}
+
+/// Core state cloned out of the lock after applying a scenario event —
+/// the session does its engine/bookkeeping work outside the mutex.
+struct CoreSnapshot {
+    fleet: Fleet,
+    active: Vec<PipelineSpec>,
+    qos: Vec<Qos>,
+    deployment_plan: Option<(CollabPlan, f64, Vec<f64>)>,
+    /// Replan stats for THIS event — `None` when the event cleared the
+    /// deployment without orchestrating (pausing/unregistering the last
+    /// app), where `core.last_replan()` would be a stale earlier replan.
+    replan: Option<ReplanStats>,
+}
+
+/// A live, scenario-driven execution session (see the module docs).
+pub struct Session {
+    shared: Arc<Mutex<Shared>>,
+    engine: SimEngine,
+    queue: VecDeque<TimedAction>,
+    duration: f64,
+    /// Remaining (not yet depleted) batteries.
+    batteries: Vec<(DeviceId, f64)>,
+    poll: f64,
+    /// Interval boundaries, ascending, starting at 0.0.
+    boundaries: Vec<f64>,
+    /// Cumulative energy at each boundary.
+    energy_marks: Vec<f64>,
+    switches: Vec<PlanSwitch>,
+    open_qos: BTreeMap<PipelineId, (QosViolation, f64)>,
+    qos_spans: Vec<QosSpan>,
+    /// App names seen so far (kept after unregistration for spans).
+    names: BTreeMap<PipelineId, String>,
+}
+
+impl Session {
+    /// Open a session: snapshot the runtime's fleet/deployment as the
+    /// starting state and queue the scenario script.
+    pub(crate) fn start(
+        shared: Arc<Mutex<Shared>>,
+        scenario: Scenario,
+        cfg: SessionCfg,
+    ) -> Result<Session, RuntimeError> {
+        scenario.validate()?;
+        let duration = scenario.duration();
+        let queue: VecDeque<TimedAction> = scenario.sorted_events().into();
+        let batteries = scenario.batteries().to_vec();
+
+        // A battery for a device that never exists would silently never
+        // deplete (its energy reads 0) — reject the typo up front.
+        let fleet_len = shared.lock().unwrap().core.fleet().len();
+        for &(d, _) in &batteries {
+            let joins_later = scenario.events().iter().any(|e| {
+                matches!(&e.action, ScenarioAction::DeviceJoined(dev) if dev.id == d)
+            });
+            if d.0 >= fleet_len && !joins_later {
+                return Err(RuntimeError::InvalidScenario(format!(
+                    "battery declared for {d}, which is neither in the \
+                     {fleet_len}-device starting fleet nor scripted to join"
+                )));
+            }
+        }
+
+        let (engine, names, active, qos, est) = {
+            let guard = shared.lock().unwrap();
+            let core = &guard.core;
+            let policy = guard.planner.exec_policy();
+            let mut engine = SimEngine::new(
+                core.fleet().clone(),
+                GroundTruth::with_seed(cfg.seed),
+                policy,
+                cfg.record_trace,
+            );
+            let mut est = None;
+            if let Some(dep) = core.deployment() {
+                engine.set_plan(&dep.plan, core.active_apps(), None);
+                est = Some((dep.estimate.throughput, dep.estimate.chain_latency.clone()));
+            }
+            let names: BTreeMap<PipelineId, String> = core
+                .active_apps()
+                .iter()
+                .map(|s| (s.id, s.name.clone()))
+                .collect();
+            (
+                engine,
+                names,
+                core.active_apps().to_vec(),
+                core.active_qos(),
+                est,
+            )
+        };
+
+        let mut session = Session {
+            shared,
+            engine,
+            queue,
+            duration,
+            batteries,
+            poll: cfg.battery_poll_s.max(1e-3),
+            boundaries: vec![0.0],
+            energy_marks: vec![0.0],
+            switches: Vec::new(),
+            open_qos: BTreeMap::new(),
+            qos_spans: Vec::new(),
+            names,
+        };
+        // QoS standing of the pre-registered deployment opens at t=0.
+        if let Some((throughput, chain_latency)) = est {
+            session.refresh_qos(0.0, &active, &qos, Some((throughput, chain_latency.as_slice())));
+        }
+        Ok(session)
+    }
+
+    /// The current simulated time.
+    pub fn now(&self) -> f64 {
+        self.engine.now()
+    }
+
+    /// Plan switches so far (mid-run observability).
+    pub fn switches(&self) -> &[PlanSwitch] {
+        &self.switches
+    }
+
+    /// Advance the timeline to `t` (clamped to the scenario horizon),
+    /// applying every scripted event on the way.
+    pub fn run_until(&mut self, t: f64) -> Result<(), RuntimeError> {
+        let target = t.min(self.duration);
+        loop {
+            let next = self
+                .queue
+                .front()
+                .map(|e| e.t)
+                .filter(|&et| et <= target);
+            match next {
+                Some(et) => {
+                    self.advance(et)?;
+                    let ev = self.queue.pop_front().expect("peeked event");
+                    let cause = ev.action.describe();
+                    self.apply(ev.t.max(self.engine.now()), cause, ev.action)?;
+                }
+                None => {
+                    self.advance(target)?;
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Apply an unscripted action at the current simulated time — the
+    /// imperative escape hatch for driving a session interactively.
+    pub fn inject(&mut self, action: ScenarioAction) -> Result<(), RuntimeError> {
+        let t = self.engine.now();
+        let cause = action.describe();
+        self.apply(t, cause, action)
+    }
+
+    /// Run the remaining scenario to its horizon and produce the
+    /// time-series report.
+    pub fn finish(mut self) -> Result<SessionReport, RuntimeError> {
+        self.run_until(self.duration)?;
+        self.close_interval(self.duration);
+        // Close still-open QoS spans at the horizon.
+        let open: Vec<(PipelineId, (QosViolation, f64))> =
+            std::mem::take(&mut self.open_qos).into_iter().collect();
+        for (app, (violation, start)) in open {
+            self.push_qos_span(app, violation, start, self.duration);
+        }
+
+        let records: Vec<RoundRecord> = self.engine.records().to_vec();
+        let mut intervals = Vec::new();
+        for (i, w) in self.boundaries.windows(2).enumerate() {
+            let (a, b) = (w[0], w[1]);
+            let is_last = i + 2 == self.boundaries.len();
+            let in_window = |r: &&RoundRecord| {
+                if is_last {
+                    r.end >= a && r.end <= b
+                } else {
+                    r.end >= a && r.end < b
+                }
+            };
+            let recs: Vec<&RoundRecord> = records.iter().filter(in_window).collect();
+            let span = (b - a).max(1e-12);
+            let mut per_app_map: BTreeMap<PipelineId, (usize, f64)> = BTreeMap::new();
+            for r in &recs {
+                let e = per_app_map.entry(r.pipeline).or_insert((0, 0.0));
+                e.0 += 1;
+                e.1 += r.end - r.start;
+            }
+            let per_app: Vec<AppInterval> = per_app_map
+                .into_iter()
+                .map(|(app, (c, lat_sum))| AppInterval {
+                    app,
+                    name: self.names.get(&app).cloned().unwrap_or_default(),
+                    completions: c,
+                    throughput: c as f64 / span,
+                    mean_latency_s: lat_sum / c as f64,
+                })
+                .collect();
+            let completions = recs.len();
+            let lat_sum: f64 = recs.iter().map(|r| r.end - r.start).sum();
+            let power_w = (self.energy_marks[i + 1] - self.energy_marks[i]) / span;
+            intervals.push(Interval {
+                start: a,
+                end: b,
+                completions,
+                throughput: completions as f64 / span,
+                avg_latency_s: if completions > 0 {
+                    lat_sum / completions as f64
+                } else {
+                    0.0
+                },
+                power_w,
+                per_app,
+            });
+        }
+
+        let energy_j = self.engine.energy_total_j(self.duration);
+        let completions = records.len();
+        let duration = self.duration;
+        Ok(SessionReport {
+            duration,
+            completions,
+            throughput: completions as f64 / duration.max(1e-12),
+            energy_j,
+            power_w: energy_j / duration.max(1e-12),
+            intervals,
+            switches: self.switches,
+            qos_spans: self.qos_spans,
+            trace: self.engine.into_trace(),
+        })
+    }
+
+    /// Advance the engine to `to`, polling batteries on the way.
+    /// Same-instant targets are a no-op, so a burst of events sharing one
+    /// timestamp applies atomically — the intermediate plans never start
+    /// tasks (their seeds are dropped on retirement).
+    fn advance(&mut self, to: f64) -> Result<(), RuntimeError> {
+        if to <= self.engine.now() {
+            return Ok(());
+        }
+        if self.batteries.is_empty() {
+            self.engine.run_until(to);
+            return Ok(());
+        }
+        while self.engine.now() < to {
+            let step = (self.engine.now() + self.poll).min(to);
+            self.engine.run_until(step);
+            self.check_batteries()?;
+        }
+        Ok(())
+    }
+
+    fn check_batteries(&mut self) -> Result<(), RuntimeError> {
+        let now = self.engine.now();
+        // Devices that already left (scripted departure) take their
+        // battery with them; batteries for devices that have yet to join
+        // stay armed.
+        {
+            let engine = &self.engine;
+            self.batteries.retain(|&(d, _)| !engine.device_departed(d));
+        }
+        let depleted: Vec<DeviceId> = self
+            .batteries
+            .iter()
+            .filter(|&&(d, cap)| self.engine.device_energy_j(d, now) >= cap)
+            .map(|&(d, _)| d)
+            .collect();
+        for d in depleted {
+            // Dense ids: only the current suffix device can depart. A
+            // depleted non-suffix device defers to a later poll — a
+            // scripted departure may free the suffix — instead of
+            // aborting the session mid-run.
+            if d.0 + 1 == self.engine.fleet().len() {
+                self.batteries.retain(|&(b, _)| b != d);
+                self.apply(
+                    now,
+                    format!("battery-depleted({d})"),
+                    ScenarioAction::DeviceLeft(d),
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one action at time `t`: mutate the core (one incremental
+    /// replan), swap the new deployment into the engine, and record the
+    /// interval boundary, plan switch, and QoS standing.
+    fn apply(&mut self, t: f64, cause: String, action: ScenarioAction) -> Result<(), RuntimeError> {
+        let fleet_changes = matches!(
+            action,
+            ScenarioAction::DeviceLeft(_) | ScenarioAction::DeviceJoined(_)
+        );
+        let (snapshot, wall) = {
+            let mut guard = self.shared.lock().unwrap();
+            let Shared { core, planner } = &mut *guard;
+            let orchestrations_before = core.orchestrations();
+            let had_deployment = core.deployment().is_some();
+            let fleet_len_before = core.fleet().len();
+            core.set_event_clock(Some(t));
+            let t0 = Instant::now();
+            let result = match action {
+                ScenarioAction::DeviceLeft(d) => core.device_left(d, planner.as_ref()),
+                ScenarioAction::DeviceJoined(dev) => core.device_joined(dev, planner.as_ref()),
+                ScenarioAction::Register { spec, qos } => {
+                    core.register(spec, qos, planner.as_ref())
+                }
+                ScenarioAction::Unregister(id) => core.remove(id, planner.as_ref()),
+                ScenarioAction::Pause(id) => core.set_paused(id, true, planner.as_ref()),
+                ScenarioAction::Resume(id) => core.set_paused(id, false, planner.as_ref()),
+                ScenarioAction::SetQos { app, qos } => core.set_qos(app, qos, planner.as_ref()),
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            core.set_event_clock(None);
+            if let Err(e) = result {
+                // Keep the engine — and the report — consistent with
+                // however the core failed: a fleet change lands even when
+                // the replan errors, and a failed replan clears the
+                // deployment. Otherwise a caller that catches the error
+                // and keeps driving the session would run the old plan on
+                // devices the core no longer has, with the transition
+                // missing from the timeline.
+                let fleet_changed = core.fleet().len() != fleet_len_before;
+                let cleared = had_deployment && core.deployment().is_none();
+                let fleet = core.fleet().clone();
+                drop(guard);
+                if fleet_changed || cleared {
+                    self.close_interval(t);
+                    if fleet_changed {
+                        self.engine.set_fleet(fleet);
+                    }
+                    if cleared {
+                        self.engine.clear_plan();
+                    }
+                    self.switches.push(PlanSwitch {
+                        t,
+                        cause: format!("{cause} (replan failed)"),
+                        apps: 0,
+                        incremental: false,
+                        reused_apps: 0,
+                        enumerated_apps: 0,
+                        est_throughput: 0.0,
+                        replan_wall_s: wall,
+                    });
+                    self.refresh_qos(t, &[], &[], None);
+                }
+                return Err(e);
+            }
+            if !fleet_changes
+                && core.orchestrations() == orchestrations_before
+                && core.deployment().is_some() == had_deployment
+            {
+                // The event was a no-op (e.g. identical QoS hints): no
+                // replan happened, so the running epoch stays untouched.
+                return Ok(());
+            }
+            let snapshot = CoreSnapshot {
+                fleet: core.fleet().clone(),
+                active: core.active_apps().to_vec(),
+                qos: core.active_qos(),
+                deployment_plan: core.deployment().map(|d| {
+                    (
+                        d.plan.clone(),
+                        d.estimate.throughput,
+                        d.estimate.chain_latency.clone(),
+                    )
+                }),
+                replan: if core.orchestrations() != orchestrations_before {
+                    core.last_replan()
+                } else {
+                    None
+                },
+            };
+            (snapshot, wall)
+        };
+
+        // The event replanned: close the interval at the pre-switch
+        // energy state (the core mutation above did not touch the
+        // engine), then sync the engine — fleet first (presence/energy),
+        // then the plan.
+        self.close_interval(t);
+        if fleet_changes {
+            self.engine.set_fleet(snapshot.fleet.clone());
+        }
+        let est_throughput = match &snapshot.deployment_plan {
+            Some((plan, throughput, _)) => {
+                self.engine.set_plan(plan, &snapshot.active, None);
+                *throughput
+            }
+            None => {
+                self.engine.clear_plan();
+                0.0
+            }
+        };
+        for spec in &snapshot.active {
+            self.names.insert(spec.id, spec.name.clone());
+        }
+
+        let stats = snapshot.replan.unwrap_or_default();
+        self.switches.push(PlanSwitch {
+            t,
+            cause,
+            apps: snapshot.active.len(),
+            incremental: stats.incremental(),
+            reused_apps: stats.reused_apps,
+            enumerated_apps: stats.enumerated_apps,
+            est_throughput,
+            replan_wall_s: wall,
+        });
+
+        let est = snapshot
+            .deployment_plan
+            .as_ref()
+            .map(|(_, tp, lat)| (*tp, lat.as_slice()));
+        self.refresh_qos(t, &snapshot.active, &snapshot.qos, est);
+        Ok(())
+    }
+
+    /// Reconcile open QoS-violation spans against the new deployment's
+    /// estimate (the same per-app rate model the core's `PlanDegraded`
+    /// events use).
+    fn refresh_qos(
+        &mut self,
+        t: f64,
+        active: &[PipelineSpec],
+        qos: &[Qos],
+        est: Option<(f64, &[f64])>,
+    ) {
+        let mut current: BTreeMap<PipelineId, QosViolation> = BTreeMap::new();
+        if let Some((throughput, chain_latency)) = est {
+            if !active.is_empty() {
+                let per_app_rate = throughput / active.len() as f64;
+                for (i, spec) in active.iter().enumerate() {
+                    if let Some(v) = qos[i].check(per_app_rate, chain_latency[i]) {
+                        current.insert(spec.id, v);
+                    }
+                }
+            }
+        }
+        // Close spans that ended or changed shape.
+        let open_apps: Vec<PipelineId> = self.open_qos.keys().copied().collect();
+        for app in open_apps {
+            let still = current.get(&app);
+            let (violation, start) = self.open_qos[&app];
+            if still != Some(&violation) {
+                self.open_qos.remove(&app);
+                self.push_qos_span(app, violation, start, t);
+            }
+        }
+        // Open new spans.
+        for (app, violation) in current {
+            self.open_qos.entry(app).or_insert((violation, t));
+        }
+    }
+
+    fn push_qos_span(&mut self, app: PipelineId, violation: QosViolation, start: f64, end: f64) {
+        let name = self.names.get(&app).cloned().unwrap_or_default();
+        self.qos_spans.push(QosSpan {
+            app,
+            name,
+            violation,
+            start,
+            end,
+        });
+    }
+
+    /// Record an interval boundary (energy snapshot) at time `t`.
+    fn close_interval(&mut self, t: f64) {
+        let last = *self.boundaries.last().expect("initial boundary");
+        if t > last {
+            self.boundaries.push(t);
+            self.energy_marks.push(self.engine.energy_total_j(t));
+        }
+    }
+}

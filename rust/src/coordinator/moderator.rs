@@ -50,11 +50,14 @@ impl<P: Planner> Moderator<P> {
     }
 
     /// Register an app pipeline; triggers re-orchestration. Duplicate ids
-    /// are a typed error ([`RuntimeError::DuplicateApp`]), not a panic.
+    /// are a typed error ([`RuntimeError::DuplicateApp`]), not a panic —
+    /// and a registration that somehow leaves no deployment is a typed
+    /// [`RuntimeError::NoDeployment`], not an `expect` crash (the shim
+    /// must never take down a live session).
     pub fn register_app(&mut self, spec: PipelineSpec) -> Result<&Deployment, RuntimeError> {
         self.core
             .register(spec, crate::api::Qos::default(), &self.planner)?;
-        Ok(self.core.deployment().expect("deployment after register"))
+        self.core.deployment().ok_or(RuntimeError::NoDeployment)
     }
 
     /// Remove an app; triggers re-orchestration (no-op plan when empty).
@@ -103,63 +106,95 @@ mod tests {
     }
 
     #[test]
-    fn registration_triggers_orchestration() {
+    fn registration_triggers_orchestration() -> Result<(), RuntimeError> {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
-        m.register_app(app(0, ModelName::KWS)).unwrap();
+        m.register_app(app(0, ModelName::KWS))?;
         assert_eq!(m.orchestrations(), 1);
-        assert_eq!(m.deployment().unwrap().plan.plans.len(), 1);
-        m.register_app(app(1, ModelName::SimpleNet)).unwrap();
+        assert_eq!(m.deployment().ok_or(RuntimeError::NoDeployment)?.plan.plans.len(), 1);
+        m.register_app(app(1, ModelName::SimpleNet))?;
         assert_eq!(m.orchestrations(), 2);
-        assert_eq!(m.deployment().unwrap().plan.plans.len(), 2);
+        assert_eq!(m.deployment().ok_or(RuntimeError::NoDeployment)?.plan.plans.len(), 2);
+        Ok(())
     }
 
     #[test]
-    fn device_change_reorchestrates() {
+    fn device_change_reorchestrates() -> Result<(), RuntimeError> {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
-        m.register_app(app(0, ModelName::UNet)).unwrap();
-        let before = m.deployment().unwrap().estimate.throughput;
-        m.set_fleet(fleet_n(2)).unwrap();
+        let before = m.register_app(app(0, ModelName::UNet))?.estimate.throughput;
+        let after = m
+            .set_fleet(fleet_n(2))?
+            .ok_or(RuntimeError::NoDeployment)?
+            .estimate
+            .throughput;
         assert_eq!(m.orchestrations(), 2);
-        let after = m.deployment().unwrap().estimate.throughput;
         assert!(before > 0.0 && after > 0.0);
+        Ok(())
     }
 
     #[test]
-    fn removal_clears_deployment_when_empty() {
+    fn removal_clears_deployment_when_empty() -> Result<(), RuntimeError> {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
-        m.register_app(app(0, ModelName::KWS)).unwrap();
-        m.remove_app(PipelineId(0)).unwrap();
+        m.register_app(app(0, ModelName::KWS))?;
+        m.remove_app(PipelineId(0))?;
         assert!(m.deployment().is_none());
+        Ok(())
     }
 
     #[test]
-    fn simulate_executes_deployment() {
+    fn simulate_executes_deployment() -> Result<(), RuntimeError> {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
-        m.register_app(app(0, ModelName::KWS)).unwrap();
-        let rep = m.simulate(12, 7).unwrap();
+        m.register_app(app(0, ModelName::KWS))?;
+        let rep = m.simulate(12, 7).ok_or(RuntimeError::NoDeployment)?;
         assert_eq!(rep.completions, 12);
         assert!(rep.throughput > 0.0);
+        Ok(())
     }
 
     #[test]
-    fn duplicate_ids_are_typed_errors() {
+    fn duplicate_ids_are_typed_errors() -> Result<(), RuntimeError> {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
-        m.register_app(app(0, ModelName::KWS)).unwrap();
+        m.register_app(app(0, ModelName::KWS))?;
         let err = m.register_app(app(0, ModelName::SimpleNet)).unwrap_err();
         assert!(matches!(err, RuntimeError::DuplicateApp(PipelineId(0))));
         // The failed registration did not disturb the deployment.
-        assert_eq!(m.deployment().unwrap().plan.plans.len(), 1);
+        assert_eq!(m.deployment().ok_or(RuntimeError::NoDeployment)?.plan.plans.len(), 1);
         assert_eq!(m.apps().len(), 1);
+        Ok(())
     }
 
     #[test]
-    fn removing_unknown_app_is_typed_error() {
+    fn removing_unknown_app_is_typed_error() -> Result<(), RuntimeError> {
         let mut m = Moderator::new(fleet4(), Synergy::planner());
-        m.register_app(app(0, ModelName::KWS)).unwrap();
+        m.register_app(app(0, ModelName::KWS))?;
         let err = m.remove_app(PipelineId(9)).unwrap_err();
         assert!(matches!(err, RuntimeError::UnknownApp(PipelineId(9))));
         // Still registered, still deployed.
         assert_eq!(m.apps().len(), 1);
+        assert!(m.deployment().is_some());
+        Ok(())
+    }
+
+    #[test]
+    fn unplannable_registration_is_a_typed_error_not_a_crash() {
+        // Regression for the legacy shim's `expect` path: a registration
+        // the planner cannot satisfy (source pinned beyond the fleet)
+        // must come back as a typed RuntimeError and leave the moderator
+        // usable — a panic here would take down a live session driving
+        // the shim.
+        let mut m = Moderator::new(fleet4(), Synergy::planner());
+        let bad = PipelineSpec::new(
+            0,
+            "bad",
+            SourceReq::Device(DeviceId(17)),
+            model_by_name(ModelName::KWS).clone(),
+            TargetReq::Any,
+        );
+        let err = m.register_app(bad).unwrap_err();
+        assert!(matches!(err, RuntimeError::Plan(_)), "{err:?}");
+        assert!(m.deployment().is_none());
+        assert!(m.apps().is_empty());
+        // Recovery: the same moderator still accepts a plannable app.
+        m.register_app(app(0, ModelName::KWS)).unwrap();
         assert!(m.deployment().is_some());
     }
 }

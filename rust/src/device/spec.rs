@@ -165,6 +165,13 @@ impl std::fmt::Display for DeviceId {
     }
 }
 
+// Ergonomic conversion for scenario scripts (`.at(2.5).device_left(3)`).
+impl From<usize> for DeviceId {
+    fn from(i: usize) -> DeviceId {
+        DeviceId(i)
+    }
+}
+
 /// A concrete wearable in the fleet: a platform plus its on-body role.
 #[derive(Clone, Debug)]
 pub struct Device {

@@ -76,10 +76,12 @@
 //!   PJRT serving loop.
 //! - [`api`] — **the public surface**: the [`api::SynergyRuntime`] session
 //!   facade — fluent app registration with QoS hints, typed
-//!   [`api::RuntimeError`]s, [`api::RuntimeEvent`] subscriptions,
+//!   [`api::RuntimeError`]s, stamped [`api::RuntimeEvent`] subscriptions,
 //!   incremental re-orchestration with per-app plan-enumeration caching,
-//!   and the [`api::ExecutionBackend`] abstraction unifying simulated and
-//!   real inference.
+//!   the [`api::ExecutionBackend`] abstraction unifying simulated and
+//!   real inference, and scenario-driven live sessions
+//!   ([`api::Scenario`] / [`api::Session`]) that replan mid-timeline and
+//!   report time series.
 //! - [`workload`] — Table I workloads and synthetic sensor sources.
 //! - [`experiments`] — one harness per paper table/figure.
 

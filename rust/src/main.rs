@@ -3,11 +3,12 @@
 //! Subcommands:
 //!   exp <id|all> [--runs N] [--seed S] [--full]   reproduce a paper table/figure
 //!   plan --workload N [--fleet F] [--beam W]      plan + print a deployment
+//!   scenario [--name jog|churn8] [--until T]      live session with mid-run churn
 //!   serve [--workload demo] [--runs N]            real PJRT serving (needs artifacts)
 //!   zoo                                           print the Table I model zoo
 //!   list                                          list experiments
 
-use synergy::api::{RunConfig, SynergyRuntime};
+use synergy::api::{RunConfig, SessionCfg, SynergyRuntime};
 use synergy::experiments;
 use synergy::orchestrator::{Planner, Synergy};
 use synergy::util::cli::Args;
@@ -15,7 +16,8 @@ use synergy::util::table::Table;
 use synergy::workload;
 
 const VALUE_OPTS: &[&str] = &[
-    "runs", "seed", "workload", "combos", "artifacts", "inflight", "fleet", "beam",
+    "runs", "seed", "workload", "combos", "artifacts", "inflight", "fleet", "beam", "name",
+    "until",
 ];
 
 fn main() {
@@ -23,6 +25,7 @@ fn main() {
     let code = match args.cmd() {
         Some("exp") => cmd_exp(&args),
         Some("plan") => cmd_plan(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
         Some("zoo") => cmd_zoo(),
         Some("trace") => cmd_trace(&args),
@@ -36,13 +39,16 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: synergy <exp|plan|serve|zoo|list> [options]\n\
+    "usage: synergy <exp|plan|scenario|serve|zoo|list> [options]\n\
      \n\
      exp <id|all>   reproduce a paper experiment (see `synergy list`)\n\
      \u{20}              --runs N (sim rounds), --seed S, --full (fig9 full sweep)\n\
      plan           --workload 1..4|mixed8, print the selected plan\n\
      \u{20}              --fleet 4|4h|8|12h, --beam W (bounded plan search;\n\
      \u{20}              default exhaustive — required beyond ~5 devices)\n\
+     scenario       live session with mid-run churn: time-series report,\n\
+     \u{20}              plan-switch timeline, QoS spans\n\
+     \u{20}              --name jog|churn8, --seed S, --until T (shorten)\n\
      serve          real PJRT serving demo; requires `make artifacts`\n\
      \u{20}              --runs N, --inflight K, --artifacts DIR\n\
      zoo            print the Table I model zoo\n\
@@ -50,6 +56,122 @@ fn usage() -> String {
      \u{20}              task timeline of the deployed plan\n\
      list           list experiment ids\n"
         .to_string()
+}
+
+/// Replay a canned churn scenario through the live-session API and print
+/// its time series: the headline demonstration of mid-run replanning.
+fn cmd_scenario(args: &Args) -> i32 {
+    let name = args.opt("name").unwrap_or("jog");
+    let Some(canned) = workload::canned_scenario(name) else {
+        eprintln!(
+            "unknown scenario {name:?}: valid scenarios are {}",
+            workload::canned_scenario_names()
+        );
+        return 2;
+    };
+    let mut scenario = canned.scenario;
+    if let Some(until) = args.opt("until") {
+        match until.parse::<f64>() {
+            Ok(t) => scenario = scenario.until(t),
+            Err(_) => {
+                eprintln!("--until takes seconds, got {until:?}");
+                return 2;
+            }
+        }
+    }
+    let fleet = canned.fleet;
+    let builder = SynergyRuntime::builder();
+    let builder = if fleet.len() > 5 {
+        // Exhaustive enumeration is intractable past ~5 devices; replans
+        // inside the timeline need bounded search to stay interactive.
+        eprintln!(
+            "note: {}-device fleet — using bounded plan search (--beam {})",
+            fleet.len(),
+            synergy::plan::DEFAULT_BEAM_WIDTH
+        );
+        builder.planner(Synergy::planner_bounded(synergy::plan::DEFAULT_BEAM_WIDTH))
+    } else {
+        builder
+    };
+    let runtime = builder.fleet(fleet).build();
+    let cfg = SessionCfg { seed: args.opt_parse("seed", 42u64), ..SessionCfg::default() };
+    let session = match runtime.session_with(scenario, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("scenario failed to start: {e}");
+            return 1;
+        }
+    };
+    let report = match session.finish() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("scenario failed: {e}");
+            return 1;
+        }
+    };
+
+    println!(
+        "scenario {name:?} — {:.1} s timeline, {} rounds, {:.2} inf/s overall, {:.2} W\n",
+        report.duration, report.completions, report.throughput, report.power_w
+    );
+
+    println!("plan-switch timeline:");
+    let mut t = Table::new(["t", "event", "apps", "incremental", "replan", "est inf/s"]);
+    for sw in &report.switches {
+        t.row([
+            format!("{:.2}s", sw.t),
+            sw.cause.clone(),
+            sw.apps.to_string(),
+            if sw.incremental {
+                "yes".to_string()
+            } else {
+                format!("{} enum", sw.enumerated_apps)
+            },
+            synergy::util::fmt_secs(sw.replan_wall_s),
+            format!("{:.2}", sw.est_throughput),
+        ]);
+    }
+    t.print();
+
+    println!("\ntime series (per interval, per app):");
+    let mut t = Table::new(["interval", "app", "runs", "inf/s", "latency", "power"]);
+    for iv in &report.intervals {
+        t.row([
+            format!("{:.2}–{:.2}s", iv.start, iv.end),
+            "(all)".to_string(),
+            iv.completions.to_string(),
+            format!("{:.2}", iv.throughput),
+            synergy::util::fmt_secs(iv.avg_latency_s),
+            format!("{:.2} W", iv.power_w),
+        ]);
+        for app in &iv.per_app {
+            t.row([
+                String::new(),
+                app.name.clone(),
+                app.completions.to_string(),
+                format!("{:.2}", app.throughput),
+                synergy::util::fmt_secs(app.mean_latency_s),
+                String::new(),
+            ]);
+        }
+    }
+    t.print();
+
+    if report.qos_spans.is_empty() {
+        println!("\nno QoS violations");
+    } else {
+        println!("\nQoS-violation spans:");
+        let mut t = Table::new(["app", "span", "violation"]);
+        for span in &report.qos_spans {
+            t.row([
+                span.name.clone(),
+                format!("{:.2}–{:.2}s", span.start, span.end),
+                format!("{}", span.violation),
+            ]);
+        }
+        t.print();
+    }
+    0
 }
 
 fn cmd_list() -> i32 {
@@ -105,7 +227,15 @@ fn cmd_plan(args: &Args) -> i32 {
         }
     };
     let w = match args.opt("workload") {
-        None => workload::workload(1).expect("Table I workload"),
+        // Workload 1 is a fixed Table I definition; surface the error
+        // instead of panicking if it ever regresses.
+        None => match workload::workload(1) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
         Some("mixed8") => workload::workload_mixed8(fleet.len()),
         // A non-numeric, non-"mixed8" value must error, not silently fall
         // back to Workload 1.
@@ -150,7 +280,10 @@ fn cmd_plan(args: &Args) -> i32 {
             return 1;
         }
     }
-    let dep = runtime.deployment().unwrap();
+    let Some(dep) = runtime.deployment() else {
+        eprintln!("orchestration selected no deployment (no apps registered)");
+        return 1;
+    };
     println!("{} — selected holistic collaboration plan:", w.name);
     for ep in &dep.plan.plans {
         println!("  {ep}");
@@ -224,7 +357,10 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     }
-    let dep = runtime.deployment().unwrap();
+    let Some(dep) = runtime.deployment() else {
+        eprintln!("orchestration selected no deployment (no apps registered)");
+        return 1;
+    };
     println!("deployment:");
     for ep in &dep.plan.plans {
         println!("  {ep}");
@@ -274,7 +410,13 @@ fn cmd_trace(args: &Args) -> i32 {
     use synergy::scheduler::{simulate, GroundTruth, SimConfig};
     // Strict parse: a typo must error, not silently trace Workload 1.
     let w = match args.opt("workload") {
-        None => workload::workload(1).expect("Table I workload"),
+        None => match workload::workload(1) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
         Some(s) => match s.parse::<usize>().map(workload::workload) {
             Ok(Ok(w)) => w,
             Ok(Err(e)) => {
@@ -320,7 +462,10 @@ fn cmd_trace(args: &Args) -> i32 {
         synergy::util::fmt_secs(rep.makespan)
     );
     let mut t = Table::new(["device/unit", "busy", "utilization", "timeline"]);
-    let trace = rep.trace.as_ref().unwrap();
+    let Some(trace) = rep.trace.as_ref() else {
+        eprintln!("simulation recorded no trace despite record_trace");
+        return 1;
+    };
     const COLS: usize = 56;
     for (&(dev, unit), &busy) in &rep.unit_busy {
         // Coarse occupancy strip: one cell per makespan/COLS slice.

@@ -12,13 +12,18 @@
 //!    §IV-F describes: each unit has a queue and a dedicated scheduler;
 //!    inter-pipeline parallelization overlaps tasks of different pipelines,
 //!    inter-run parallelization overlaps consecutive runs of one pipeline.
+//!
+//! The engine is interruptible and resumable ([`SimEngine`]): live
+//! sessions ([`crate::api::Session`]) drive it in segments with
+//! `run_until` horizons and swap plans mid-timeline without restarting
+//! the clock; [`simulate`] is the one-shot batch wrapper.
 
 pub mod groundtruth;
 pub mod engine;
 pub mod policy;
 pub mod trace;
 
-pub use engine::{simulate, SimConfig, SimReport};
+pub use engine::{simulate, RoundRecord, SimConfig, SimEngine, SimReport};
 pub use groundtruth::GroundTruth;
 pub use policy::Policy;
 pub use trace::{TaskSpan, Trace};

@@ -8,11 +8,13 @@ use crate::plan::task::{TaskKind, UnitKind};
 /// One executed task instance.
 #[derive(Clone, Copy, Debug)]
 pub struct TaskSpan {
-    /// Index of the pipeline within the collaboration plan.
+    /// The pipeline's id (stable across plan switches in a live session;
+    /// equal to the plan index for the Table I workloads).
     pub pipeline: usize,
     /// Task sequence position within the pipeline.
     pub seq: usize,
-    /// Run (continuous-inference iteration) index.
+    /// Run (continuous-inference iteration) index — global per pipeline,
+    /// continuing across plan switches.
     pub run: usize,
     pub device: DeviceId,
     pub unit: UnitKind,

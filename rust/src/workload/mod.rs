@@ -6,10 +6,10 @@
 //! large-model apps (EfficientNetV2 / MobileNetV2) that exceed a single
 //! accelerator and must be split.
 
-use crate::api::RuntimeError;
+use crate::api::{Qos, RuntimeError, Scenario};
 use crate::device::{Device, DeviceId, DeviceKind, Fleet, InteractionKind, SensorKind};
 use crate::model::zoo::{model_by_name, ModelName};
-use crate::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use crate::pipeline::{PipelineId, PipelineSpec, SourceReq, TargetReq};
 
 /// A named set of concurrent pipelines.
 #[derive(Clone, Debug)]
@@ -243,6 +243,136 @@ pub fn workload_mixed8(n_devices: usize) -> Workload {
     }
 }
 
+/// A named fleet + scenario pair for the live-session API (the
+/// `synergy scenario` subcommand, examples, benches).
+#[derive(Clone, Debug)]
+pub struct CannedScenario {
+    pub name: &'static str,
+    pub fleet: Fleet,
+    pub scenario: Scenario,
+}
+
+/// The jog fleet: the standard four wearables with the *watch last*
+/// (device ids are dense, so only the highest id can drop off mid-run —
+/// and in the jog story it is the watch that dismounts).
+pub fn fleet4_jog() -> Fleet {
+    Fleet::new(vec![
+        Device::new(
+            0,
+            "earbud",
+            DeviceKind::Max78000,
+            vec![SensorKind::Microphone],
+            vec![InteractionKind::Audio],
+        ),
+        Device::new(
+            1,
+            "glasses",
+            DeviceKind::Max78000,
+            vec![SensorKind::Camera],
+            vec![InteractionKind::Display],
+        ),
+        Device::new(
+            2,
+            "ring",
+            DeviceKind::Max78000,
+            vec![SensorKind::Ppg],
+            vec![InteractionKind::Haptic, InteractionKind::Led],
+        ),
+        Device::new(
+            3,
+            "watch",
+            DeviceKind::Max78000,
+            vec![SensorKind::Imu, SensorKind::Ppg, SensorKind::Microphone],
+            vec![InteractionKind::Display, InteractionKind::Haptic],
+        ),
+    ])
+}
+
+/// The jog scenario: keyword spotting and scene understanding run
+/// throughout; a jog-tracker app (IMU on the watch) arrives mid-run, the
+/// user docks the watch at t=6 s (the tracker closes just before), and
+/// the watch rejoins at t=10 s with the tracker restarting — four
+/// incremental replans inside one continuous timeline.
+pub fn scenario_jog4() -> CannedScenario {
+    let fleet = fleet4_jog();
+    let watch = fleet.get(DeviceId(3)).clone();
+    let kws = PipelineSpec::new(
+        0,
+        "keyword-spotting",
+        SourceReq::Sensor(SensorKind::Microphone),
+        model_by_name(ModelName::KWS).clone(),
+        TargetReq::Interaction(InteractionKind::Haptic),
+    );
+    let scene = PipelineSpec::new(
+        1,
+        "scene-understanding",
+        SourceReq::Sensor(SensorKind::Camera),
+        model_by_name(ModelName::UNet).clone(),
+        TargetReq::Interaction(InteractionKind::Display),
+    );
+    let jog_tracker = |id: usize| {
+        PipelineSpec::new(
+            id,
+            "jog-tracker",
+            SourceReq::Sensor(SensorKind::Imu),
+            model_by_name(ModelName::ConvNet5).clone(),
+            TargetReq::Interaction(InteractionKind::Haptic),
+        )
+    };
+    let scenario = Scenario::new()
+        .at(0.0)
+        .register_with_qos(kws, Qos { min_rate_hz: 2.0, ..Qos::default() })
+        .at(0.0)
+        .register(scene)
+        .at(1.5)
+        .register(jog_tracker(2))
+        .at(5.5)
+        .unregister(PipelineId(2))
+        .at(6.0)
+        .device_left(3)
+        .at(10.0)
+        .device_joined(watch)
+        .at(10.5)
+        .register(jog_tracker(3))
+        .until(14.0);
+    CannedScenario { name: "jog", fleet, scenario }
+}
+
+/// The large-fleet churn scenario: all eight Table I apps arrive
+/// staggered on an eight-wearable fleet (endpoints distributed across the
+/// first seven devices so the suffix device is free to churn), the
+/// highest-id wearable drops off mid-run and later rejoins. Pair with
+/// bounded plan search ([`crate::orchestrator::Synergy::planner_bounded`]).
+pub fn scenario_churn8() -> CannedScenario {
+    let fleet = fleet8();
+    let rejoin = fleet.get(DeviceId(7)).clone();
+    let mut scenario = Scenario::new();
+    for (i, spec) in workload_mixed8(7).pipelines.into_iter().enumerate() {
+        scenario = scenario.at(0.25 * i as f64).register(spec);
+    }
+    let scenario = scenario
+        .at(5.0)
+        .device_left(7)
+        .at(8.0)
+        .device_joined(rejoin)
+        .until(11.0);
+    CannedScenario { name: "churn8", fleet, scenario }
+}
+
+/// Look up a canned scenario by name (see [`canned_scenario_names`]).
+pub fn canned_scenario(name: &str) -> Option<CannedScenario> {
+    match name {
+        "jog" | "jog4" => Some(scenario_jog4()),
+        "churn8" => Some(scenario_churn8()),
+        _ => None,
+    }
+}
+
+/// Valid canned-scenario names (CLI help and error messages).
+pub fn canned_scenario_names() -> &'static str {
+    "jog, churn8"
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,6 +490,21 @@ mod tests {
     fn larger_fleets_get_numbered_roles() {
         let f = fleet_n(5);
         assert_eq!(f.get(DeviceId(4)).name, "earbud2");
+    }
+
+    #[test]
+    fn canned_scenarios_are_well_formed() {
+        for name in ["jog", "churn8"] {
+            let c = canned_scenario(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(c.scenario.duration() > 0.0, "{name}");
+            assert!(!c.scenario.events().is_empty(), "{name}");
+            assert!(c.fleet.len() >= 4, "{name}");
+        }
+        assert!(canned_scenario("nope").is_none());
+        // The jog fleet puts the watch last so it can dismount mid-run.
+        let jog = scenario_jog4();
+        assert_eq!(jog.fleet.get(DeviceId(3)).name, "watch");
+        assert!(jog.fleet.get(DeviceId(3)).has_sensor(SensorKind::Imu));
     }
 
     #[test]

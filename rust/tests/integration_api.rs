@@ -187,7 +187,7 @@ fn device_left_triggers_exactly_one_incremental_replan() {
     assert_eq!(replan.reused_apps, 3);
     assert_eq!(replan.enumerated_apps, 0);
 
-    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    let evs: Vec<RuntimeEvent> = events.try_iter().map(|s| s.event).collect();
     assert!(evs.contains(&RuntimeEvent::DeviceLeft { device: DeviceId(4) }));
     let replans: Vec<_> = evs
         .iter()
@@ -267,7 +267,7 @@ fn device_joined_re_enumerates_and_emits() {
         replan.enumerated_apps, 3,
         "a new device invalidates every cached enumeration"
     );
-    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    let evs: Vec<RuntimeEvent> = events.try_iter().map(|s| s.event).collect();
     assert!(evs.contains(&RuntimeEvent::DeviceJoined { device: DeviceId(3) }));
 }
 
@@ -280,7 +280,7 @@ fn in_place_platform_swap_emits_leave_then_join_and_invalidates() {
     runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
     let events = runtime.subscribe();
     runtime.set_fleet(fleet4_hetero()).unwrap();
-    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    let evs: Vec<RuntimeEvent> = events.try_iter().map(|s| s.event).collect();
     assert!(evs.contains(&RuntimeEvent::DeviceLeft { device: DeviceId(2) }));
     assert!(evs.contains(&RuntimeEvent::DeviceJoined { device: DeviceId(2) }));
     assert_eq!(
@@ -329,7 +329,7 @@ fn qos_degradation_emits_plan_degraded() {
         })
         .register()
         .unwrap();
-    let evs: Vec<RuntimeEvent> = events.try_iter().collect();
+    let evs: Vec<RuntimeEvent> = events.try_iter().map(|s| s.event).collect();
     assert!(
         evs.iter()
             .any(|e| matches!(e, RuntimeEvent::PlanDegraded { app: a, .. } if *a == app.id())),
@@ -338,6 +338,45 @@ fn qos_degradation_emits_plan_degraded() {
     let stats = app.stats().unwrap();
     assert!(stats.qos_violation.is_some());
     assert!(stats.est_rate_hz.unwrap() > 0.0);
+}
+
+#[test]
+fn qos_update_replans_and_emits() {
+    let runtime = SynergyRuntime::new(fleet4());
+    let app = runtime.app("kws").model(ModelName::KWS).register().unwrap();
+    let events = runtime.subscribe();
+    let before = runtime.stats().orchestrations;
+    let greedy = Qos { min_rate_hz: 1e9, ..Qos::default() };
+    app.set_qos(greedy).unwrap();
+    assert_eq!(runtime.stats().orchestrations, before + 1, "one replan");
+    let evs: Vec<RuntimeEvent> = events.try_iter().map(|s| s.event).collect();
+    assert!(evs.contains(&RuntimeEvent::QosUpdated { app: app.id() }));
+    assert!(
+        evs.iter().any(|e| matches!(e, RuntimeEvent::PlanDegraded { .. })),
+        "unachievable floor must degrade: {evs:?}"
+    );
+    assert!(app.stats().unwrap().qos_violation.is_some());
+    // Setting identical hints is a no-op (no extra replan).
+    app.set_qos(greedy).unwrap();
+    assert_eq!(runtime.stats().orchestrations, before + 1);
+}
+
+#[test]
+fn subscriptions_are_stamped_with_increasing_seq() {
+    let runtime = SynergyRuntime::new(fleet_n(5));
+    let events = runtime.subscribe();
+    for spec in workload(1).unwrap().pipelines {
+        runtime.register(spec).unwrap();
+    }
+    runtime.device_left(DeviceId(4)).unwrap();
+    let evs: Vec<synergy::api::StampedEvent> = events.try_iter().collect();
+    assert!(!evs.is_empty());
+    assert!(
+        evs.windows(2).all(|w| w[0].seq < w[1].seq),
+        "sequence numbers must strictly increase: {evs:?}"
+    );
+    // Outside a session there is no simulated clock.
+    assert!(evs.iter().all(|e| e.sim_time.is_none()));
 }
 
 #[test]

@@ -1,0 +1,369 @@
+//! Live-session integration: scenario-driven execution with mid-run
+//! replanning, time-series reports, deterministic replay, and battery
+//! ramps.
+
+use synergy::api::{
+    Qos, RuntimeEvent, Scenario, ScenarioAction, SessionCfg, StampedEvent, SynergyRuntime,
+};
+use synergy::device::DeviceId;
+use synergy::model::zoo::ModelName;
+use synergy::orchestrator::Synergy;
+use synergy::pipeline::PipelineId;
+use synergy::workload::{fleet4, fleet8, fleet_n, pipeline, scenario_jog4, workload};
+
+/// The acceptance scenario: a mid-run `device_left` completes without
+/// restarting the DES — one timestamped incremental replan inside the
+/// timeline, distinct pre/post-churn intervals, contiguous clock.
+#[test]
+fn mid_run_device_left_replans_inside_the_timeline() {
+    let runtime = SynergyRuntime::new(fleet_n(5));
+    for spec in workload(1).unwrap().pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let events = runtime.subscribe();
+    let scenario = Scenario::new().at(3.0).device_left(4).until(8.0);
+    let report = runtime.session(scenario).unwrap().finish().unwrap();
+
+    // One plan switch, incremental, at the scripted time.
+    assert_eq!(report.switches.len(), 1);
+    let sw = &report.switches[0];
+    assert_eq!(sw.t, 3.0);
+    assert_eq!(sw.cause, "device-left(d4)");
+    assert!(sw.incremental, "{sw:?}");
+    assert_eq!(sw.reused_apps, 3);
+    assert_eq!(sw.enumerated_apps, 0);
+    assert!(sw.est_throughput > 0.0);
+
+    // Distinct pre- and post-churn intervals, both with completed rounds,
+    // sharing the switch boundary — the timeline never restarted.
+    assert_eq!(report.intervals.len(), 2);
+    let (pre, post) = (&report.intervals[0], &report.intervals[1]);
+    assert_eq!((pre.start, pre.end), (0.0, 3.0));
+    assert_eq!((post.start, post.end), (3.0, 8.0));
+    assert!(pre.completions > 0, "{report:?}");
+    assert!(post.completions > 0, "{report:?}");
+    assert!(pre.throughput > 0.0 && post.throughput > 0.0);
+    assert!(pre.power_w > 0.0 && post.power_w > 0.0);
+    // All three apps completed rounds in both intervals.
+    assert_eq!(pre.per_app.len(), 3);
+    assert_eq!(post.per_app.len(), 3);
+    assert_eq!(
+        report.completions,
+        pre.completions + post.completions,
+        "every round falls in exactly one interval"
+    );
+    // Five devices draw more base power than four.
+    assert!(pre.power_w > post.power_w, "{report:?}");
+
+    // The Replanned event is stamped with the simulated switch time.
+    let evs: Vec<StampedEvent> = events.try_iter().collect();
+    assert!(
+        evs.iter().any(|e| matches!(e.event, RuntimeEvent::Replanned { .. })
+            && e.sim_time == Some(3.0)),
+        "{evs:?}"
+    );
+    assert!(
+        evs.iter().any(|e| e.event == RuntimeEvent::DeviceLeft { device: DeviceId(4) }
+            && e.sim_time == Some(3.0)),
+        "{evs:?}"
+    );
+}
+
+/// Pausing an app mid-run produces visibly distinct per-app time series:
+/// the paused app's completions drop to zero in the second interval.
+#[test]
+fn pause_event_shows_up_in_the_per_app_time_series() {
+    let runtime = SynergyRuntime::new(fleet4());
+    for spec in workload(2).unwrap().pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let scenario = Scenario::new().at(2.0).pause(PipelineId(1)).until(4.0);
+    let report = runtime.session(scenario).unwrap().finish().unwrap();
+    assert_eq!(report.intervals.len(), 2);
+    let pre = &report.intervals[0];
+    let post = &report.intervals[1];
+    let completions_of = |iv: &synergy::api::Interval, id: PipelineId| {
+        iv.per_app
+            .iter()
+            .find(|a| a.app == id)
+            .map_or(0, |a| a.completions)
+    };
+    let pre_p1 = completions_of(pre, PipelineId(1));
+    let post_p1 = completions_of(post, PipelineId(1));
+    assert!(pre_p1 > 1, "{pre:?}");
+    // Plan switches drain gracefully: at most the one in-flight round can
+    // still complete after the pause; nothing new starts.
+    assert!(
+        post_p1 <= 1,
+        "paused app must stop completing rounds (got {post_p1}): {post:?}"
+    );
+    assert!(post_p1 < pre_p1);
+    // The survivors keep completing.
+    assert!(post.completions > 0);
+}
+
+/// Satellite: the same `Scenario` replayed on a fresh runtime yields an
+/// identical plan-switch timeline and identical time-series numbers
+/// (everything except the wall-clock replan latency).
+#[test]
+fn deterministic_session_replay() {
+    let run = || {
+        let canned = scenario_jog4();
+        let runtime = SynergyRuntime::new(canned.fleet.clone());
+        runtime
+            .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+
+    assert_eq!(a.duration, b.duration);
+    assert_eq!(a.completions, b.completions);
+    assert_eq!(a.throughput, b.throughput);
+    assert_eq!(a.energy_j, b.energy_j);
+
+    assert_eq!(a.switches.len(), b.switches.len());
+    for (x, y) in a.switches.iter().zip(&b.switches) {
+        assert_eq!(x.t, y.t);
+        assert_eq!(x.cause, y.cause);
+        assert_eq!(x.apps, y.apps);
+        assert_eq!(x.incremental, y.incremental);
+        assert_eq!(x.reused_apps, y.reused_apps);
+        assert_eq!(x.enumerated_apps, y.enumerated_apps);
+        assert_eq!(x.est_throughput, y.est_throughput);
+        // replan_wall_s is wall clock — the one nondeterministic field.
+    }
+
+    assert_eq!(a.intervals.len(), b.intervals.len());
+    for (x, y) in a.intervals.iter().zip(&b.intervals) {
+        assert_eq!((x.start, x.end), (y.start, y.end));
+        assert_eq!(x.completions, y.completions);
+        assert_eq!(x.throughput, y.throughput);
+        assert_eq!(x.avg_latency_s, y.avg_latency_s);
+        assert_eq!(x.power_w, y.power_w);
+        assert_eq!(x.per_app.len(), y.per_app.len());
+        for (p, q) in x.per_app.iter().zip(&y.per_app) {
+            assert_eq!(p.app, q.app);
+            assert_eq!(p.completions, q.completions);
+            assert_eq!(p.mean_latency_s, q.mean_latency_s);
+        }
+    }
+
+    assert_eq!(a.qos_spans.len(), b.qos_spans.len());
+    for (x, y) in a.qos_spans.iter().zip(&b.qos_spans) {
+        assert_eq!(x.app, y.app);
+        assert_eq!((x.start, x.end), (y.start, y.end));
+        assert_eq!(x.violation, y.violation);
+    }
+}
+
+/// The canned jog scenario exercises register/unregister/leave/join on
+/// one continuous timeline and stays sound end to end.
+#[test]
+fn jog_scenario_runs_clean_with_a_sound_trace() {
+    let canned = scenario_jog4();
+    let runtime = SynergyRuntime::new(canned.fleet.clone());
+    let session = runtime
+        .session_with(
+            canned.scenario,
+            SessionCfg { record_trace: true, ..SessionCfg::default() },
+        )
+        .unwrap();
+    let report = session.finish().unwrap();
+    // Seven scripted events → seven plan switches.
+    assert_eq!(report.switches.len(), 7);
+    // The watch departure at t=6 rides the warm cache (both surviving
+    // apps reuse their enumerations).
+    let leave = report
+        .switches
+        .iter()
+        .find(|s| s.cause == "device-left(d3)")
+        .unwrap();
+    assert!(leave.incremental, "{leave:?}");
+    assert_eq!(leave.apps, 2);
+    // The rejoin at t=10 re-enumerates (fleet growth invalidates).
+    let join = report
+        .switches
+        .iter()
+        .find(|s| s.cause == "device-joined(d3)")
+        .unwrap();
+    assert!(!join.incremental, "{join:?}");
+    assert!(report.completions > 0);
+    let trace = report.trace.expect("record_trace");
+    trace.check_unit_exclusivity().unwrap();
+    trace.check_causality().unwrap();
+}
+
+/// Battery ramps: a declared capacity depletes from the DES's own energy
+/// integration and triggers an automatic departure.
+#[test]
+fn battery_depletion_triggers_departure() {
+    let runtime = SynergyRuntime::new(fleet_n(3));
+    runtime
+        .register(synergy::workload::pipeline(
+            0,
+            synergy::model::zoo::ModelName::KWS,
+            0,
+            1,
+        ))
+        .unwrap();
+    // d2 idles at ~0.25 W base draw → ~0.125 J by t=0.5.
+    let scenario = Scenario::new()
+        .battery(DeviceId(2), 0.1)
+        .until(2.0);
+    let report = runtime.session(scenario).unwrap().finish().unwrap();
+    let depletion = report
+        .switches
+        .iter()
+        .find(|s| s.cause == "battery-depleted(d2)")
+        .unwrap_or_else(|| panic!("no depletion switch: {:?}", report.switches));
+    assert!(
+        depletion.t > 0.0 && depletion.t < 1.0,
+        "expected depletion within the first second, got {}",
+        depletion.t
+    );
+    assert_eq!(runtime.fleet().len(), 2, "the depleted device left the core");
+    // The app keeps running on the survivors after the switch.
+    assert!(report.intervals.last().unwrap().completions > 0);
+}
+
+/// Mid-run QoS tightening opens a violation span that closes when the
+/// hints relax again.
+#[test]
+fn qos_events_produce_violation_spans() {
+    let runtime = SynergyRuntime::new(fleet4());
+    for spec in workload(1).unwrap().pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let greedy = Qos { min_rate_hz: 1e9, ..Qos::default() };
+    let scenario = Scenario::new()
+        .at(1.0).qos(PipelineId(0), greedy)
+        .at(3.0).qos(PipelineId(0), Qos::default())
+        .until(5.0);
+    let report = runtime.session(scenario).unwrap().finish().unwrap();
+    assert_eq!(report.qos_spans.len(), 1, "{:?}", report.qos_spans);
+    let span = &report.qos_spans[0];
+    assert_eq!(span.app, PipelineId(0));
+    assert_eq!((span.start, span.end), (1.0, 3.0));
+}
+
+/// `inject` applies an unscripted action at the current simulated time.
+#[test]
+fn inject_drives_a_session_interactively() {
+    let runtime = SynergyRuntime::new(fleet_n(5));
+    for spec in workload(1).unwrap().pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let scenario = Scenario::new().until(6.0);
+    let mut session = runtime.session(scenario).unwrap();
+    session.run_until(2.5).unwrap();
+    assert_eq!(session.now(), 2.5);
+    session.inject(ScenarioAction::DeviceLeft(DeviceId(4))).unwrap();
+    assert_eq!(session.switches().len(), 1);
+    assert_eq!(session.switches()[0].t, 2.5);
+    let report = session.finish().unwrap();
+    assert_eq!(report.intervals.len(), 2);
+    assert_eq!(runtime.fleet().len(), 4);
+}
+
+/// Sessions on large fleets replan mid-timeline under bounded search —
+/// the `scenario_churn8` code path (Session × `planner_bounded` ×
+/// `fleet8`), exercised with small models so the test stays fast in
+/// debug builds.
+#[test]
+fn bounded_search_sessions_replan_on_large_fleets() {
+    let fleet = fleet8();
+    let rejoin = fleet.get(DeviceId(7)).clone();
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    // Endpoints stay within d0..d6 so the suffix device is free to churn.
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    runtime.register(pipeline(1, ModelName::SimpleNet, 1, 2)).unwrap();
+    runtime.register(pipeline(2, ModelName::ConvNet5, 4, 5)).unwrap();
+    let scenario = Scenario::new()
+        .at(1.0).device_left(7)
+        .at(2.0).device_joined(rejoin)
+        .until(3.0);
+    let report = runtime.session(scenario).unwrap().finish().unwrap();
+    assert_eq!(report.switches.len(), 2);
+    assert_eq!(report.intervals.len(), 3);
+    assert!(
+        report.intervals.iter().all(|iv| iv.completions > 0),
+        "{report:?}"
+    );
+    assert!(report
+        .switches
+        .iter()
+        .all(|sw| sw.apps == 3 && sw.est_throughput > 0.0));
+    assert_eq!(runtime.fleet().len(), 8);
+}
+
+/// Events sharing one timestamp apply atomically: the intermediate plans
+/// never execute, so only the final same-instant deployment produces
+/// rounds (batteries declared or not — the paths must agree).
+#[test]
+fn same_instant_events_apply_atomically() {
+    let run = |with_battery: bool| {
+        let runtime = SynergyRuntime::new(fleet4());
+        let mut scenario = Scenario::new()
+            .at(0.0).register(pipeline(0, ModelName::KWS, 0, 3))
+            .at(0.0).register(pipeline(1, ModelName::SimpleNet, 1, 2))
+            .until(2.0);
+        if with_battery {
+            // A huge capacity: declared (changing the advance path) but
+            // never depleted.
+            scenario = scenario.battery(DeviceId(3), 1e12);
+        }
+        runtime
+            .session_with(scenario, SessionCfg { seed: 9, ..SessionCfg::default() })
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+    let plain = run(false);
+    let battery = run(true);
+    assert_eq!(plain.completions, battery.completions);
+    assert_eq!(plain.energy_j, battery.energy_j);
+    assert_eq!(plain.switches.len(), 2);
+    // Both apps complete rounds; the one-instant-lived single-app plan
+    // contributed nothing.
+    let total: usize = plain.intervals.iter().map(|iv| iv.completions).sum();
+    assert_eq!(total, plain.completions);
+    assert!(plain.completions > 0);
+}
+
+/// A battery for a device that never exists is a typed error, not a
+/// silently inert declaration.
+#[test]
+fn battery_for_unknown_device_is_rejected() {
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    let err = runtime
+        .session(Scenario::new().battery(DeviceId(9), 0.5).until(2.0))
+        .unwrap_err();
+    assert!(
+        matches!(err, synergy::api::RuntimeError::InvalidScenario(_)),
+        "{err:?}"
+    );
+}
+
+/// Scenario scripting errors surface as typed errors, not panics.
+#[test]
+fn invalid_scenarios_and_events_are_typed_errors() {
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime.register(workload(1).unwrap().pipelines.remove(0)).unwrap();
+    // Invalid script: rejected at session start.
+    let err = runtime
+        .session(Scenario::new().at(-1.0).device_left(3).until(2.0))
+        .unwrap_err();
+    assert!(matches!(err, synergy::api::RuntimeError::InvalidScenario(_)));
+    // A mid-timeline event that violates dense ids fails with the same
+    // typed error the imperative API gives.
+    let scenario = Scenario::new().at(1.0).device_left(0).until(3.0);
+    let err = runtime.session(scenario).unwrap().finish().unwrap_err();
+    assert!(matches!(err, synergy::api::RuntimeError::FleetChange(_)), "{err:?}");
+}
