@@ -1,0 +1,98 @@
+//! Serving benchmarks: what does a *live* plan switch cost on the
+//! streaming engine, compared to tearing it down and starting fresh?
+//!
+//! The acceptance criterion of the serving subsystem: handling a
+//! `device_left` inside a served session (incremental replan off the warm
+//! cache + retiring the old epoch + rebinding the worker threads to the
+//! new deployment, in-flight rounds draining gracefully) must be cheaper
+//! than the restart alternative (fresh runtime, full re-enumeration, and
+//! a cold engine start with its thread spawns and channel setup).
+
+mod bench_harness;
+
+use bench_harness::{fmt_duration, report, time_once};
+use synergy::api::{Scenario, ScenarioAction, SynergyRuntime};
+use synergy::device::DeviceId;
+use synergy::serving::ServeCfg;
+use synergy::workload::{fleet_n, workload};
+
+fn main() {
+    let w = workload(1).unwrap();
+    let iters = 15;
+
+    // --- Live plan switch inside a served session ----------------------
+    let mut switch_samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let runtime = SynergyRuntime::new(fleet_n(5));
+        for spec in w.pipelines.clone() {
+            runtime.register(spec).unwrap();
+        }
+        let mut session = runtime
+            .session(Scenario::new().until(6.0))
+            .unwrap()
+            .serve(ServeCfg::default())
+            .unwrap();
+        session.run_until(3.0).unwrap();
+        // Timed: the whole live switch — incremental replan + epoch
+        // retirement + rebinding the workers, threads kept warm.
+        switch_samples.push(time_once(&mut || {
+            session
+                .inject(ScenarioAction::DeviceLeft(DeviceId(4)))
+                .unwrap();
+        }));
+        assert_eq!(session.switches().len(), 1);
+        assert!(
+            session.switches()[0].incremental,
+            "live device_left must replan off the warm cache"
+        );
+        let rep = session.finish().unwrap();
+        let served = rep.served.expect("served session summary");
+        assert_eq!(
+            served.admitted_rounds, served.completed_rounds,
+            "the live switch dropped in-flight rounds"
+        );
+        assert!(rep.completions > 0);
+    }
+    let switch = report("serving/live-plan-switch/device-left", &mut switch_samples);
+
+    // --- The restart alternative: fresh streaming engine ----------------
+    let mut fresh_samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let pipelines = w.pipelines.clone();
+        fresh_samples.push(time_once(&mut || {
+            // Everything a restart pays before streaming resumes on the
+            // shrunken fleet: full enumeration of every app, a new
+            // session, and a cold engine (thread spawns, channels, chain
+            // binding).
+            let runtime = SynergyRuntime::new(fleet_n(4));
+            for spec in pipelines.clone() {
+                runtime.register(spec).unwrap();
+            }
+            let session = runtime
+                .session(Scenario::new().until(3.0))
+                .unwrap()
+                .serve(ServeCfg::default())
+                .unwrap();
+            std::hint::black_box(&session);
+            drop(session);
+        }));
+    }
+    let fresh = report("serving/fresh-engine/start", &mut fresh_samples);
+
+    // --- Verdict --------------------------------------------------------
+    let speedup = fresh / switch.max(1e-12);
+    println!(
+        "serving/live-plan-switch is {speedup:.2}× cheaper than a fresh \
+         engine start (switch {} vs fresh {})",
+        fmt_duration(switch),
+        fmt_duration(fresh)
+    );
+    assert!(
+        switch < fresh,
+        "a live plan switch must be cheaper than a fresh engine start \
+         (switch {} vs fresh {})",
+        fmt_duration(switch),
+        fmt_duration(fresh)
+    );
+    println!("OK: live plan switches beat fresh engine starts");
+}

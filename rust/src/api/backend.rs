@@ -6,7 +6,9 @@
 //! (numerics). The seed exposed those as two unrelated call paths
 //! (`scheduler::simulate` vs `coordinator::serve` with hand-carried
 //! state); `ExecutionBackend` unifies them behind
-//! [`crate::api::SynergyRuntime::run`].
+//! [`crate::api::SynergyRuntime::run`]. A third implementation,
+//! [`crate::serving::ServeBackend`], streams the deployment on real
+//! worker threads (virtual-time or PJRT chunk execution).
 
 use crate::device::Fleet;
 use crate::pipeline::{PipelineId, PipelineSpec};
@@ -184,7 +186,7 @@ impl ExecutionBackend for PjrtBackend {
         fleet: &Fleet,
         cfg: &RunConfig,
     ) -> Result<RunReport, RuntimeError> {
-        use crate::coordinator::serve::{serve, ServeConfig};
+        use crate::serving::pjrt::{serve, ServeConfig};
         let rep = serve(
             deployment,
             apps,

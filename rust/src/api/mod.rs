@@ -22,12 +22,18 @@
 //! - [`ExecutionBackend`] unifies simulated ([`SimBackend`]) and real
 //!   PJRT ([`PjrtBackend`]) inference behind [`SynergyRuntime::run`].
 //! - **Live sessions** ([`session`], [`scenario`]): a [`Scenario`] scripts
-//!   timed churn (device departures, app arrivals, QoS changes, battery
-//!   drains); [`SynergyRuntime::session`] replays it on the resumable DES
-//!   with mid-run incremental replanning — [`Session::run_until`] /
-//!   [`Session::inject`] / [`Session::finish`] — and reports a time
-//!   series ([`SessionReport`]): per-interval throughput/latency/power
-//!   per app, a plan-switch timeline, and QoS-violation spans.
+//!   timed churn (device departures, app arrivals, fleet reshapes, QoS
+//!   changes, battery drains); [`SynergyRuntime::session`] replays it on
+//!   the resumable DES with mid-run incremental replanning —
+//!   [`Session::run_until`] / [`Session::inject`] / [`Session::finish`] —
+//!   and reports a time series ([`SessionReport`]): per-interval
+//!   throughput/latency/power per app, a plan-switch timeline, and
+//!   QoS-violation spans.
+//! - **Streaming serving** ([`Session::serve`], [`crate::serving`]): the
+//!   same session re-seated on the multi-threaded streaming engine —
+//!   worker threads rebind live at every plan switch, with the measured
+//!   pause in the switch timeline and a conservation summary
+//!   ([`ServeSummary`]) in the report.
 
 pub mod app;
 pub mod backend;
@@ -53,7 +59,7 @@ pub use self::replan::ReplanStats;
 pub use self::runtime::{RuntimeBuilder, RuntimeStats, SynergyRuntime};
 pub use self::scenario::{Scenario, ScenarioAction, TimedAction};
 pub use self::session::{
-    AppInterval, Interval, PlanSwitch, QosSpan, Session, SessionCfg, SessionReport,
+    AppInterval, Interval, PlanSwitch, QosSpan, ServeSummary, Session, SessionCfg, SessionReport,
 };
 
 // Capability vocabulary under the names the app interface reads best with:

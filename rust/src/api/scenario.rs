@@ -21,7 +21,7 @@
 //! [`super::SynergyRuntime::device_left`]): scripted departures and
 //! battery depletions must name the current highest-id device.
 
-use crate::device::{Device, DeviceId};
+use crate::device::{Device, DeviceId, Fleet};
 use crate::pipeline::{PipelineId, PipelineSpec};
 
 use super::error::RuntimeError;
@@ -34,6 +34,12 @@ pub enum ScenarioAction {
     DeviceLeft(DeviceId),
     /// A device joins the body (its id must extend the fleet densely).
     DeviceJoined(Device),
+    /// Replace the whole fleet at once — the escape hatch for arbitrary
+    /// reshapes (dense device ids restrict scripted departures to the
+    /// highest id; a `SetFleet` can drop, renumber, or re-platform any
+    /// of them). Invalidates the plan-enumeration cache unless the change
+    /// is a pure suffix shrink.
+    SetFleet(Fleet),
     /// Register an app with QoS hints.
     Register { spec: PipelineSpec, qos: Qos },
     /// Unregister an app.
@@ -53,6 +59,7 @@ impl ScenarioAction {
         match self {
             ScenarioAction::DeviceLeft(d) => format!("device-left({d})"),
             ScenarioAction::DeviceJoined(dev) => format!("device-joined({})", dev.id),
+            ScenarioAction::SetFleet(fleet) => format!("set-fleet({})", fleet.len()),
             ScenarioAction::Register { spec, .. } => {
                 format!("register({}:{})", spec.id, spec.name)
             }
@@ -193,6 +200,12 @@ impl ScenarioAt {
             .push(self.t, ScenarioAction::DeviceJoined(device))
     }
 
+    /// Replace the whole fleet (arbitrary reshape; see
+    /// [`ScenarioAction::SetFleet`]).
+    pub fn set_fleet(self, fleet: Fleet) -> Scenario {
+        self.scenario.push(self.t, ScenarioAction::SetFleet(fleet))
+    }
+
     /// Register an app (default QoS).
     pub fn register(self, spec: PipelineSpec) -> Scenario {
         self.scenario.push(
@@ -272,6 +285,19 @@ mod tests {
         assert!(s.validate().is_err());
         let s = Scenario::new(); // no events, no horizon
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn set_fleet_scripts_an_arbitrary_reshape() {
+        let s = Scenario::new()
+            .at(1.5)
+            .set_fleet(crate::workload::fleet4())
+            .until(3.0);
+        let evs = s.sorted_events();
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(&evs[0].action, ScenarioAction::SetFleet(f) if f.len() == 4));
+        assert_eq!(evs[0].action.describe(), "set-fleet(4)");
+        s.validate().unwrap();
     }
 
     #[test]

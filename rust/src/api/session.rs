@@ -1,31 +1,44 @@
 //! Live sessions: scenario-driven execution with mid-run replanning and
 //! time-series reports.
 //!
-//! A [`Session`] drives the resumable discrete-event engine
-//! ([`crate::scheduler::SimEngine`]) through a [`super::Scenario`] of
-//! timed churn events. At each event the session mutates the shared
+//! A [`Session`] drives an execution engine through a [`super::Scenario`]
+//! of timed churn events. At each event the session mutates the shared
 //! runtime core (the same registry/fleet/deployment the
 //! [`super::SynergyRuntime`] handles see), replans incrementally using the
 //! cached per-app enumerations, and swaps the new plan into the engine —
-//! *inside* the timeline, carrying the clock, unit queues, in-flight
-//! tasks, and energy accounting across the switch. The one-shot
+//! *inside* the timeline, carrying the clock, in-flight work, and (on the
+//! simulator) energy accounting across the switch. The one-shot
 //! [`super::SynergyRuntime::run`] is the degenerate case: one plan, no
 //! events.
 //!
+//! Two engines can sit under a session:
+//!
+//! - the resumable discrete-event simulator
+//!   ([`crate::scheduler::SimEngine`]) — the default; and
+//! - the multi-threaded streaming engine
+//!   ([`crate::serving::ServeEngine`]) via [`Session::serve`] — real
+//!   worker threads, bounded queues, per-app sensor tickers, and live
+//!   plan rebinding with a measured switch pause. On the virtual-time
+//!   executor its per-app throughput tracks the simulator within a few
+//!   percent on the same plans, which is what makes the two paths
+//!   directly comparable.
+//!
 //! ```text
 //! let scenario = Scenario::new().at(3.0).device_left(4).until(8.0);
-//! let mut session = runtime.session(scenario)?;
+//! let mut session = runtime.session(scenario)?;      // DES…
+//! // …or: let mut session = runtime.session(scenario)?.serve(ServeCfg::default())?;
 //! session.run_until(5.0)?;                 // drive in segments…
 //! session.inject(ScenarioAction::Pause(app))?;  // …or improvise
 //! let report = session.finish()?;          // time-series report
 //! ```
 //!
-//! Reports are time series: one [`Interval`] per inter-event segment with
-//! per-app throughput/latency and power, a [`PlanSwitch`] timeline with
-//! measured replan latencies, and [`QosSpan`]s marking when an app's
+//! Reports are time series either way: one [`Interval`] per inter-event
+//! segment with per-app throughput/latency (and power, on the simulator),
+//! a [`PlanSwitch`] timeline with measured replan latencies (plus worker
+//! rebind pauses when serving), and [`QosSpan`]s marking when an app's
 //! deployed estimate violated its hints. Replayed scenarios are
-//! deterministic: everything except the wall-clock `replan_wall_s` field
-//! compares equal across runs.
+//! deterministic on the simulator: everything except the wall-clock
+//! `replan_wall_s`/`rebind_wall_s` fields compares equal.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -35,6 +48,7 @@ use crate::device::{DeviceId, Fleet};
 use crate::pipeline::{PipelineId, PipelineSpec};
 use crate::plan::CollabPlan;
 use crate::scheduler::{GroundTruth, RoundRecord, SimEngine, Trace};
+use crate::serving::{ChunkExecutor, ServeCfg, ServeEngine, VirtualExecutor};
 
 use super::error::RuntimeError;
 use super::qos::{Qos, QosViolation};
@@ -47,11 +61,17 @@ use super::scenario::{Scenario, ScenarioAction, TimedAction};
 pub struct SessionCfg {
     /// Seed for the ground-truth jitter stream.
     pub seed: u64,
-    /// Record a full task trace into the report.
+    /// Record a full task trace into the report (simulator sessions).
     pub record_trace: bool,
     /// Battery-drain check granularity, seconds of simulated time. Only
     /// consulted when the scenario declares batteries.
     pub battery_poll_s: f64,
+    /// Ring window over retained round records (and trace spans): keep
+    /// only the most recent `n`, so hour-scale sessions stay bounded in
+    /// memory. Totals ([`SessionReport::completions`]) keep counting
+    /// evicted rounds; intervals report only what the window retains.
+    /// `None` (default) retains everything.
+    pub trace_window: Option<usize>,
 }
 
 impl Default for SessionCfg {
@@ -60,6 +80,7 @@ impl Default for SessionCfg {
             seed: 42,
             record_trace: false,
             battery_poll_s: 0.25,
+            trace_window: None,
         }
     }
 }
@@ -83,9 +104,13 @@ pub struct PlanSwitch {
     /// The new plan's estimated system throughput, inf/s (0 when the
     /// deployment cleared).
     pub est_throughput: f64,
-    /// Measured wall-clock replan latency, seconds. The one
-    /// non-deterministic field — excluded from replay comparisons.
+    /// Measured wall-clock replan latency, seconds. Wall clock — excluded
+    /// from replay comparisons.
     pub replan_wall_s: f64,
+    /// Measured wall-clock pause to rebind the streaming engine's workers
+    /// to the new deployment (0 on simulator sessions). Wall clock —
+    /// excluded from replay comparisons.
+    pub rebind_wall_s: f64,
 }
 
 /// A span of the timeline during which an app's deployed estimate
@@ -126,9 +151,28 @@ pub struct Interval {
     /// Mean end-to-end latency over the interval's rounds, seconds
     /// (0 when nothing completed).
     pub avg_latency_s: f64,
-    /// Mean power draw over the interval, watts.
+    /// Mean power draw over the interval, watts (0 when serving — a
+    /// thread pool has no power rails).
     pub power_w: f64,
     pub per_app: Vec<AppInterval>,
+}
+
+/// Streaming-engine summary attached to served sessions
+/// ([`Session::serve`]); `None` on simulator sessions.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSummary {
+    /// Executor that ran the chunks (`"virtual"`, `"pjrt"`).
+    pub executor: &'static str,
+    /// Rounds admitted by the per-app tickers across all epochs.
+    pub admitted_rounds: usize,
+    /// Rounds completed, including those that drained past the session
+    /// horizon. Equal to `admitted_rounds` — the conservation invariant
+    /// across plan switches — unless an executor fault cut the run short.
+    pub completed_rounds: usize,
+    /// Plan rebinds performed (including the initial binding).
+    pub rebinds: usize,
+    /// Worker threads the engine ran.
+    pub workers: usize,
 }
 
 /// The session's time-series report.
@@ -136,13 +180,13 @@ pub struct Interval {
 pub struct SessionReport {
     /// Session horizon, simulated seconds.
     pub duration: f64,
-    /// Rounds completed across the whole session.
+    /// Rounds completed across the whole session (within the horizon).
     pub completions: usize,
     /// Whole-session throughput, inf/s.
     pub throughput: f64,
-    /// Total energy over the horizon, joules.
+    /// Total energy over the horizon, joules (0 when serving).
     pub energy_j: f64,
-    /// Mean power over the horizon, watts.
+    /// Mean power over the horizon, watts (0 when serving).
     pub power_w: f64,
     /// Per-segment time series (one entry per inter-event interval).
     pub intervals: Vec<Interval>,
@@ -150,8 +194,12 @@ pub struct SessionReport {
     pub switches: Vec<PlanSwitch>,
     /// QoS-violation spans.
     pub qos_spans: Vec<QosSpan>,
-    /// Full task trace when requested via [`SessionCfg::record_trace`].
+    /// Full task trace when requested via [`SessionCfg::record_trace`]
+    /// (simulator sessions only).
     pub trace: Option<Trace>,
+    /// Streaming-engine summary when the session ran on
+    /// [`Session::serve`].
+    pub served: Option<ServeSummary>,
 }
 
 /// Core state cloned out of the lock after applying a scenario event —
@@ -167,12 +215,104 @@ struct CoreSnapshot {
     replan: Option<ReplanStats>,
 }
 
+/// The engine a session drives: the resumable DES, or the streaming
+/// serving engine after [`Session::serve`].
+enum SessionEngine {
+    Sim(SimEngine),
+    Serve(ServeEngine),
+}
+
+impl SessionEngine {
+    fn now(&self) -> f64 {
+        match self {
+            SessionEngine::Sim(e) => e.now(),
+            SessionEngine::Serve(e) => e.now(),
+        }
+    }
+
+    fn run_until(&mut self, t: f64) {
+        match self {
+            SessionEngine::Sim(e) => e.run_until(t),
+            SessionEngine::Serve(e) => e.run_until(t),
+        }
+    }
+
+    fn set_fleet(&mut self, fleet: Fleet) {
+        match self {
+            SessionEngine::Sim(e) => e.set_fleet(fleet),
+            SessionEngine::Serve(e) => e.set_fleet(fleet),
+        }
+    }
+
+    fn set_plan(&mut self, plan: &CollabPlan, pipelines: &[PipelineSpec]) {
+        match self {
+            SessionEngine::Sim(e) => e.set_plan(plan, pipelines, None),
+            SessionEngine::Serve(e) => e.set_plan(plan, pipelines, None),
+        }
+    }
+
+    fn clear_plan(&mut self) {
+        match self {
+            SessionEngine::Sim(e) => e.clear_plan(),
+            SessionEngine::Serve(e) => e.clear_plan(),
+        }
+    }
+
+    /// Total energy at `horizon` (0 when serving: no power model).
+    fn energy_total_j(&self, horizon: f64) -> f64 {
+        match self {
+            SessionEngine::Sim(e) => e.energy_total_j(horizon),
+            SessionEngine::Serve(_) => 0.0,
+        }
+    }
+
+    fn device_energy_j(&self, device: DeviceId, horizon: f64) -> f64 {
+        match self {
+            SessionEngine::Sim(e) => e.device_energy_j(device, horizon),
+            SessionEngine::Serve(_) => 0.0,
+        }
+    }
+
+    fn device_departed(&self, device: DeviceId) -> bool {
+        match self {
+            SessionEngine::Sim(e) => e.device_departed(device),
+            SessionEngine::Serve(_) => false,
+        }
+    }
+
+    fn fleet_len(&self) -> usize {
+        match self {
+            SessionEngine::Sim(e) => e.fleet().len(),
+            SessionEngine::Serve(_) => 0,
+        }
+    }
+
+    /// Wall pause of the most recent worker rebind (0 on the DES).
+    fn last_rebind_wall_s(&self) -> f64 {
+        match self {
+            SessionEngine::Sim(_) => 0.0,
+            SessionEngine::Serve(e) => e.last_rebind_wall_s(),
+        }
+    }
+
+    /// Rebinds performed so far (0 on the DES) — lets a switch attribute
+    /// a rebind pause only when this event actually rebound workers.
+    fn rebind_count(&self) -> usize {
+        match self {
+            SessionEngine::Sim(_) => 0,
+            SessionEngine::Serve(e) => e.rebind_count(),
+        }
+    }
+}
+
 /// A live, scenario-driven execution session (see the module docs).
 pub struct Session {
     shared: Arc<Mutex<Shared>>,
-    engine: SimEngine,
+    engine: SessionEngine,
     queue: VecDeque<TimedAction>,
     duration: f64,
+    seed: u64,
+    trace_window: Option<usize>,
     /// Remaining (not yet depleted) batteries.
     batteries: Vec<(DeviceId, f64)>,
     poll: f64,
@@ -225,6 +365,7 @@ impl Session {
                 policy,
                 cfg.record_trace,
             );
+            engine.set_record_cap(cfg.trace_window);
             let mut est = None;
             if let Some(dep) = core.deployment() {
                 engine.set_plan(&dep.plan, core.active_apps(), None);
@@ -246,9 +387,11 @@ impl Session {
 
         let mut session = Session {
             shared,
-            engine,
+            engine: SessionEngine::Sim(engine),
             queue,
             duration,
+            seed: cfg.seed,
+            trace_window: cfg.trace_window,
             batteries,
             poll: cfg.battery_poll_s.max(1e-3),
             boundaries: vec![0.0],
@@ -263,6 +406,61 @@ impl Session {
             session.refresh_qos(0.0, &active, &qos, Some((throughput, chain_latency.as_slice())));
         }
         Ok(session)
+    }
+
+    /// Re-seat this session on the streaming serving engine with the
+    /// deterministic virtual-time executor (same jitter seed as the
+    /// session, so it is directly comparable to the simulator path). Must
+    /// be called before any time elapses; scenarios with battery ramps
+    /// stay on the simulator (the streaming engine has no power model).
+    pub fn serve(self, cfg: ServeCfg) -> Result<Session, RuntimeError> {
+        let seed = self.seed;
+        self.serve_with(Arc::new(VirtualExecutor::with_seed(seed)), cfg)
+    }
+
+    /// Like [`Self::serve`], streaming through a caller-provided executor
+    /// (e.g. the PJRT chunk executor behind the `pjrt` feature).
+    pub fn serve_with(
+        mut self,
+        executor: Arc<dyn ChunkExecutor>,
+        cfg: ServeCfg,
+    ) -> Result<Session, RuntimeError> {
+        if matches!(self.engine, SessionEngine::Serve(_)) {
+            return Err(RuntimeError::InvalidScenario(
+                "session is already serving".into(),
+            ));
+        }
+        if self.engine.now() > 0.0 || !self.switches.is_empty() {
+            return Err(RuntimeError::InvalidScenario(
+                "serve() must re-seat the session before its timeline starts \
+                 (call it right after runtime.session(..))"
+                    .into(),
+            ));
+        }
+        if !self.batteries.is_empty() {
+            return Err(RuntimeError::InvalidScenario(
+                "battery ramps integrate the DES energy model; the streaming \
+                 engine has no power rails — drop .battery(..) or stay on the \
+                 simulator session"
+                    .into(),
+            ));
+        }
+        let (fleet, active, dep_plan) = {
+            let guard = self.shared.lock().unwrap();
+            let core = &guard.core;
+            (
+                core.fleet().clone(),
+                core.active_apps().to_vec(),
+                core.deployment().map(|d| d.plan.clone()),
+            )
+        };
+        let mut engine = ServeEngine::new(executor, cfg, fleet);
+        engine.set_record_cap(self.trace_window);
+        if let Some(plan) = dep_plan {
+            engine.set_plan(&plan, &active, None);
+        }
+        self.engine = SessionEngine::Serve(engine);
+        Ok(self)
     }
 
     /// The current simulated time.
@@ -320,7 +518,45 @@ impl Session {
             self.push_qos_span(app, violation, start, self.duration);
         }
 
-        let records: Vec<RoundRecord> = self.engine.records().to_vec();
+        let duration = self.duration;
+        let (records, completions, energy_j, trace, served) = match self.engine {
+            SessionEngine::Sim(engine) => {
+                let records: Vec<RoundRecord> = engine.records().iter().copied().collect();
+                let completions = engine.completions();
+                let energy_j = engine.energy_total_j(duration);
+                (records, completions, energy_j, engine.into_trace(), None)
+            }
+            SessionEngine::Serve(engine) => {
+                let outcome = engine.finish()?;
+                let served = ServeSummary {
+                    executor: outcome.executor,
+                    admitted_rounds: outcome.admitted,
+                    completed_rounds: outcome.completed,
+                    rebinds: outcome.rebinds.len(),
+                    workers: outcome.workers,
+                };
+                // Rounds that drained past the horizon stay in the
+                // conservation totals but out of the report window, the
+                // same cut the DES makes by never processing events past
+                // the horizon. Drained rounds are the newest, so even
+                // under a trace window (which evicts oldest-first) they
+                // are all among the retained records — the subtraction
+                // stays exact.
+                let past_horizon = outcome
+                    .records
+                    .iter()
+                    .filter(|r| r.end > duration + 1e-9)
+                    .count();
+                let records: Vec<RoundRecord> = outcome
+                    .records
+                    .into_iter()
+                    .filter(|r| r.end <= duration + 1e-9)
+                    .collect();
+                let completions = outcome.completed - past_horizon;
+                (records, completions, 0.0, None, Some(served))
+            }
+        };
+
         let mut intervals = Vec::new();
         for (i, w) in self.boundaries.windows(2).enumerate() {
             let (a, b) = (w[0], w[1]);
@@ -368,9 +604,6 @@ impl Session {
             });
         }
 
-        let energy_j = self.engine.energy_total_j(self.duration);
-        let completions = records.len();
-        let duration = self.duration;
         Ok(SessionReport {
             duration,
             completions,
@@ -380,7 +613,8 @@ impl Session {
             intervals,
             switches: self.switches,
             qos_spans: self.qos_spans,
-            trace: self.engine.into_trace(),
+            trace,
+            served,
         })
     }
 
@@ -424,7 +658,7 @@ impl Session {
             // depleted non-suffix device defers to a later poll — a
             // scripted departure may free the suffix — instead of
             // aborting the session mid-run.
-            if d.0 + 1 == self.engine.fleet().len() {
+            if d.0 + 1 == self.engine.fleet_len() {
                 self.batteries.retain(|&(b, _)| b != d);
                 self.apply(
                     now,
@@ -442,19 +676,22 @@ impl Session {
     fn apply(&mut self, t: f64, cause: String, action: ScenarioAction) -> Result<(), RuntimeError> {
         let fleet_changes = matches!(
             action,
-            ScenarioAction::DeviceLeft(_) | ScenarioAction::DeviceJoined(_)
+            ScenarioAction::DeviceLeft(_)
+                | ScenarioAction::DeviceJoined(_)
+                | ScenarioAction::SetFleet(_)
         );
         let (snapshot, wall) = {
             let mut guard = self.shared.lock().unwrap();
             let Shared { core, planner } = &mut *guard;
             let orchestrations_before = core.orchestrations();
             let had_deployment = core.deployment().is_some();
-            let fleet_len_before = core.fleet().len();
+            let fleet_before = core.fleet().clone();
             core.set_event_clock(Some(t));
             let t0 = Instant::now();
             let result = match action {
                 ScenarioAction::DeviceLeft(d) => core.device_left(d, planner.as_ref()),
                 ScenarioAction::DeviceJoined(dev) => core.device_joined(dev, planner.as_ref()),
+                ScenarioAction::SetFleet(fleet) => core.set_fleet(fleet, planner.as_ref()),
                 ScenarioAction::Register { spec, qos } => {
                     core.register(spec, qos, planner.as_ref())
                 }
@@ -473,11 +710,18 @@ impl Session {
                 // and keeps driving the session would run the old plan on
                 // devices the core no longer has, with the transition
                 // missing from the timeline.
-                let fleet_changed = core.fleet().len() != fleet_len_before;
+                let fleet_changed = core.fleet().devices.len() != fleet_before.devices.len()
+                    || core
+                        .fleet()
+                        .devices
+                        .iter()
+                        .zip(&fleet_before.devices)
+                        .any(|(a, b)| a.spec != b.spec);
                 let cleared = had_deployment && core.deployment().is_none();
                 let fleet = core.fleet().clone();
                 drop(guard);
                 if fleet_changed || cleared {
+                    let rebinds_before = self.engine.rebind_count();
                     self.close_interval(t);
                     if fleet_changed {
                         self.engine.set_fleet(fleet);
@@ -494,6 +738,11 @@ impl Session {
                         enumerated_apps: 0,
                         est_throughput: 0.0,
                         replan_wall_s: wall,
+                        rebind_wall_s: if self.engine.rebind_count() > rebinds_before {
+                            self.engine.last_rebind_wall_s()
+                        } else {
+                            0.0
+                        },
                     });
                     self.refresh_qos(t, &[], &[], None);
                 }
@@ -531,13 +780,14 @@ impl Session {
         // energy state (the core mutation above did not touch the
         // engine), then sync the engine — fleet first (presence/energy),
         // then the plan.
+        let rebinds_before = self.engine.rebind_count();
         self.close_interval(t);
         if fleet_changes {
             self.engine.set_fleet(snapshot.fleet.clone());
         }
         let est_throughput = match &snapshot.deployment_plan {
             Some((plan, throughput, _)) => {
-                self.engine.set_plan(plan, &snapshot.active, None);
+                self.engine.set_plan(plan, &snapshot.active);
                 *throughput
             }
             None => {
@@ -559,6 +809,11 @@ impl Session {
             enumerated_apps: stats.enumerated_apps,
             est_throughput,
             replan_wall_s: wall,
+            rebind_wall_s: if self.engine.rebind_count() > rebinds_before {
+                self.engine.last_rebind_wall_s()
+            } else {
+                0.0
+            },
         });
 
         let est = snapshot

@@ -1,19 +1,15 @@
-//! §V — the moderator shim and the real serving loop.
+//! §V — the moderator compatibility shim.
 //!
 //! Orchestration state (apps, fleet, deployment, incremental replanning)
 //! lives in [`crate::api::RuntimeCore`]; the [`moderator`] here is a thin
 //! direct-ownership shim over it, kept for callers that don't need
-//! handles, events, or backends. [`serve`] executes a deployment for
-//! real: per-device threads with per-unit work queues, mpsc channels as
-//! radio links, and PJRT inference through the runtime service — the
-//! paper's runtime made concrete on this testbed. New code reaches both
-//! through [`crate::api::SynergyRuntime`] (`run()` with a
-//! [`crate::api::PjrtBackend`]) rather than calling `serve` directly.
+//! handles, events, or backends. The threaded serving loop that used to
+//! live here was absorbed into the [`crate::serving`] subsystem — the
+//! streaming engine with live plan rebinding; the one-shot PJRT loop is
+//! `crate::serving::pjrt::serve` behind the `pjrt` feature. New code
+//! reaches execution through [`crate::api::SynergyRuntime`] backends
+//! rather than calling serving loops directly.
 
 pub mod moderator;
-#[cfg(feature = "pjrt")]
-pub mod serve;
 
 pub use moderator::{Deployment, Moderator};
-#[cfg(feature = "pjrt")]
-pub use serve::{serve, ServeConfig, ServeReport};

@@ -72,8 +72,11 @@
 //! - [`baselines`] — the paper's 7 comparison methods + phone offloading.
 //! - [`runtime`] — PJRT bridge: load AOT-compiled HLO chunks and run real
 //!   split inference (Python never on the request path).
-//! - [`coordinator`] — the moderator compatibility shim and the threaded
-//!   PJRT serving loop.
+//! - [`coordinator`] — the moderator compatibility shim.
+//! - [`serving`] — the live streaming engine: worker threads per
+//!   (device, unit), a [`serving::ChunkExecutor`] abstraction (virtual
+//!   time on stock toolchains, PJRT behind the feature), and mid-stream
+//!   plan rebinding with graceful drain.
 //! - [`api`] — **the public surface**: the [`api::SynergyRuntime`] session
 //!   facade — fluent app registration with QoS hints, typed
 //!   [`api::RuntimeError`]s, stamped [`api::RuntimeEvent`] subscriptions,
@@ -97,6 +100,7 @@ pub mod orchestrator;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
+pub mod serving;
 pub mod api;
 pub mod workload;
 pub mod experiments;

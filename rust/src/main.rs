@@ -3,12 +3,14 @@
 //! Subcommands:
 //!   exp <id|all> [--runs N] [--seed S] [--full]   reproduce a paper table/figure
 //!   plan --workload N [--fleet F] [--beam W]      plan + print a deployment
-//!   scenario [--name jog|churn8] [--until T]      live session with mid-run churn
-//!   serve [--workload demo] [--runs N]            real PJRT serving (needs artifacts)
+//!   scenario [--name jog|churn8|bursty8]          live session with mid-run churn
+//!   serve [--scenario jog]                        streaming serving (worker threads,
+//!                                                 live plan rebinds; PJRT without
+//!                                                 --scenario, needs artifacts)
 //!   zoo                                           print the Table I model zoo
 //!   list                                          list experiments
 
-use synergy::api::{RunConfig, SessionCfg, SynergyRuntime};
+use synergy::api::{RunConfig, SessionCfg, SessionReport, SynergyRuntime};
 use synergy::experiments;
 use synergy::orchestrator::{Planner, Synergy};
 use synergy::util::cli::Args;
@@ -17,7 +19,7 @@ use synergy::workload;
 
 const VALUE_OPTS: &[&str] = &[
     "runs", "seed", "workload", "combos", "artifacts", "inflight", "fleet", "beam", "name",
-    "until",
+    "until", "scenario",
 ];
 
 fn main() {
@@ -48,9 +50,14 @@ fn usage() -> String {
      \u{20}              default exhaustive — required beyond ~5 devices)\n\
      scenario       live session with mid-run churn: time-series report,\n\
      \u{20}              plan-switch timeline, QoS spans\n\
-     \u{20}              --name jog|churn8, --seed S, --until T (shorten)\n\
-     serve          real PJRT serving demo; requires `make artifacts`\n\
-     \u{20}              --runs N, --inflight K, --artifacts DIR\n\
+     \u{20}              --name jog|churn8|bursty8, --seed S, --until T\n\
+     serve          streaming serving on real worker threads\n\
+     \u{20}              --scenario jog|churn8|bursty8: live session on the\n\
+     \u{20}              virtual-time engine (stock toolchain) with mid-run\n\
+     \u{20}              plan switches rebinding the workers; without\n\
+     \u{20}              --scenario: PJRT demo (needs `make artifacts` and\n\
+     \u{20}              the pjrt feature), --runs N, --inflight K,\n\
+     \u{20}              --artifacts DIR\n\
      zoo            print the Table I model zoo\n\
      trace          --workload 1..4 [--runs N]: per-unit utilization +\n\
      \u{20}              task timeline of the deployed plan\n\
@@ -58,16 +65,20 @@ fn usage() -> String {
         .to_string()
 }
 
-/// Replay a canned churn scenario through the live-session API and print
-/// its time series: the headline demonstration of mid-run replanning.
-fn cmd_scenario(args: &Args) -> i32 {
-    let name = args.opt("name").unwrap_or("jog");
+/// Build the runtime + scenario for a canned name (bounded plan search
+/// past ~5 devices, where exhaustive enumeration is intractable and
+/// replans inside the timeline need to stay interactive), applying the
+/// `--until`/`--seed` overrides. `Err` carries the exit code.
+fn canned_runtime(
+    name: &str,
+    args: &Args,
+) -> Result<(SynergyRuntime, synergy::api::Scenario, SessionCfg), i32> {
     let Some(canned) = workload::canned_scenario(name) else {
         eprintln!(
             "unknown scenario {name:?}: valid scenarios are {}",
             workload::canned_scenario_names()
         );
-        return 2;
+        return Err(2);
     };
     let mut scenario = canned.scenario;
     if let Some(until) = args.opt("until") {
@@ -75,15 +86,13 @@ fn cmd_scenario(args: &Args) -> i32 {
             Ok(t) => scenario = scenario.until(t),
             Err(_) => {
                 eprintln!("--until takes seconds, got {until:?}");
-                return 2;
+                return Err(2);
             }
         }
     }
     let fleet = canned.fleet;
     let builder = SynergyRuntime::builder();
     let builder = if fleet.len() > 5 {
-        // Exhaustive enumeration is intractable past ~5 devices; replans
-        // inside the timeline need bounded search to stay interactive.
         eprintln!(
             "note: {}-device fleet — using bounded plan search (--beam {})",
             fleet.len(),
@@ -95,30 +104,26 @@ fn cmd_scenario(args: &Args) -> i32 {
     };
     let runtime = builder.fleet(fleet).build();
     let cfg = SessionCfg { seed: args.opt_parse("seed", 42u64), ..SessionCfg::default() };
-    let session = match runtime.session_with(scenario, cfg) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("scenario failed to start: {e}");
-            return 1;
-        }
-    };
-    let report = match session.finish() {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("scenario failed: {e}");
-            return 1;
-        }
-    };
+    Ok((runtime, scenario, cfg))
+}
 
+/// Print a session's time series, plan-switch timeline, QoS spans, and —
+/// for served sessions — the streaming-engine summary.
+fn print_session_report(header: &str, report: &SessionReport) {
     println!(
-        "scenario {name:?} — {:.1} s timeline, {} rounds, {:.2} inf/s overall, {:.2} W\n",
+        "{header} — {:.1} s timeline, {} rounds, {:.2} inf/s overall, {:.2} W\n",
         report.duration, report.completions, report.throughput, report.power_w
     );
 
+    let serving = report.served.is_some();
     println!("plan-switch timeline:");
-    let mut t = Table::new(["t", "event", "apps", "incremental", "replan", "est inf/s"]);
+    let mut t = if serving {
+        Table::new(["t", "event", "apps", "incremental", "replan", "rebind", "est inf/s"])
+    } else {
+        Table::new(["t", "event", "apps", "incremental", "replan", "est inf/s"])
+    };
     for sw in &report.switches {
-        t.row([
+        let mut row = vec![
             format!("{:.2}s", sw.t),
             sw.cause.clone(),
             sw.apps.to_string(),
@@ -128,8 +133,12 @@ fn cmd_scenario(args: &Args) -> i32 {
                 format!("{} enum", sw.enumerated_apps)
             },
             synergy::util::fmt_secs(sw.replan_wall_s),
-            format!("{:.2}", sw.est_throughput),
-        ]);
+        ];
+        if serving {
+            row.push(synergy::util::fmt_secs(sw.rebind_wall_s));
+        }
+        row.push(format!("{:.2}", sw.est_throughput));
+        t.row(row);
     }
     t.print();
 
@@ -171,7 +180,83 @@ fn cmd_scenario(args: &Args) -> i32 {
         }
         t.print();
     }
+
+    if let Some(s) = &report.served {
+        println!(
+            "\nstreaming engine ({}): {} rounds admitted, {} completed \
+             (conserved: {}), {} rebinds over {} workers",
+            s.executor,
+            s.admitted_rounds,
+            s.completed_rounds,
+            s.admitted_rounds == s.completed_rounds,
+            s.rebinds,
+            s.workers,
+        );
+    }
+}
+
+/// Replay a canned churn scenario through the live-session API and print
+/// its time series: the headline demonstration of mid-run replanning.
+fn cmd_scenario(args: &Args) -> i32 {
+    let name = args.opt("name").unwrap_or("jog");
+    let (runtime, scenario, cfg) = match canned_runtime(name, args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let session = match runtime.session_with(scenario, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("scenario failed to start: {e}");
+            return 1;
+        }
+    };
+    let report = match session.finish() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("scenario failed: {e}");
+            return 1;
+        }
+    };
+    print_session_report(&format!("scenario {name:?}"), &report);
     0
+}
+
+/// Serve a canned scenario on the streaming engine: the same session API,
+/// but every plan switch rebinds live worker threads mid-stream. Runs on
+/// the deterministic virtual-time executor, so it needs no artifacts and
+/// no vendored toolchain.
+fn cmd_serve_scenario(name: &str, args: &Args) -> i32 {
+    let (runtime, scenario, cfg) = match canned_runtime(name, args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let session = match runtime
+        .session_with(scenario, cfg)
+        .and_then(|s| s.serve(synergy::serving::ServeCfg::default()))
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve failed to start: {e}");
+            return 1;
+        }
+    };
+    let report = match session.finish() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            return 1;
+        }
+    };
+    print_session_report(&format!("served scenario {name:?}"), &report);
+    if report
+        .served
+        .as_ref()
+        .is_some_and(|s| s.admitted_rounds == s.completed_rounds)
+    {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_list() -> i32 {
@@ -317,17 +402,28 @@ fn cmd_plan(args: &Args) -> i32 {
     }
 }
 
+/// `serve --scenario NAME` streams a live session on the virtual-time
+/// engine (stock toolchain); plain `serve` is the real-PJRT demo.
+fn cmd_serve(args: &Args) -> i32 {
+    if let Some(name) = args.opt("scenario") {
+        return cmd_serve_scenario(name, args);
+    }
+    cmd_serve_pjrt(args)
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_args: &Args) -> i32 {
+fn cmd_serve_pjrt(_args: &Args) -> i32 {
     eprintln!(
-        "the serve subcommand needs real PJRT inference — rebuild with \
-         `cargo run --release --features pjrt -- serve`"
+        "the plain serve subcommand needs real PJRT inference — rebuild \
+         with `cargo run --release --features pjrt -- serve`, or stream a \
+         live scenario on the virtual-time engine with \
+         `synergy serve --scenario jog`"
     );
     2
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_serve(args: &Args) -> i32 {
+fn cmd_serve_pjrt(args: &Args) -> i32 {
     use synergy::api::PjrtBackend;
     use synergy::plan::EnumerateCfg;
     let backend = match PjrtBackend::load(args.opt("artifacts").unwrap_or("artifacts")) {

@@ -32,6 +32,7 @@ use crate::pipeline::{PipelineId, PipelineSpec};
 use crate::plan::task::{PlanTask, TaskKind, UnitKind};
 use crate::plan::CollabPlan;
 
+use super::epoch::EpochLedger;
 use super::groundtruth::GroundTruth;
 use super::policy::Policy;
 use super::trace::{TaskSpan, Trace};
@@ -318,10 +319,17 @@ pub struct SimEngine {
     /// must complete on the unit it started on even if the fleet changed
     /// while it was in flight.
     in_flight: BTreeMap<(usize, usize), UnitKind>,
-    /// Next global round index per pipeline id (continuity across epochs).
-    next_round: BTreeMap<PipelineId, usize>,
-    records: Vec<RoundRecord>,
-    spans: Vec<TaskSpan>,
+    /// Global round-index continuity across epochs (shared bookkeeping
+    /// with the streaming serving engine).
+    ledger: EpochLedger,
+    records: VecDeque<RoundRecord>,
+    spans: VecDeque<TaskSpan>,
+    /// Rounds completed over the engine's lifetime — keeps counting when
+    /// `record_cap` evicts old records.
+    completions_total: usize,
+    /// Ring window over retained records/spans (long-session memory
+    /// bound); `None` retains everything.
+    record_cap: Option<usize>,
 }
 
 impl SimEngine {
@@ -352,10 +360,19 @@ impl SimEngine {
             unit_busy: BTreeMap::new(),
             epochs: Vec::new(),
             in_flight: BTreeMap::new(),
-            next_round: BTreeMap::new(),
-            records: Vec::new(),
-            spans: Vec::new(),
+            ledger: EpochLedger::new(),
+            records: VecDeque::new(),
+            spans: VecDeque::new(),
+            completions_total: 0,
+            record_cap: None,
         }
+    }
+
+    /// Cap retained [`Self::records`] and trace spans to the most recent
+    /// `cap` entries each ([`Self::completions`] keeps counting evicted
+    /// rounds). `None` (the default) retains everything.
+    pub fn set_record_cap(&mut self, cap: Option<usize>) {
+        self.record_cap = cap;
     }
 
     /// The current simulated time.
@@ -368,13 +385,15 @@ impl SimEngine {
         self.max_end
     }
 
-    /// Completed pipeline rounds across all epochs.
+    /// Completed pipeline rounds across all epochs (including any evicted
+    /// by [`Self::set_record_cap`]).
     pub fn completions(&self) -> usize {
-        self.records.len()
+        self.completions_total
     }
 
-    /// Completed rounds, in completion order.
-    pub fn records(&self) -> &[RoundRecord] {
+    /// Retained completed rounds, in completion order (all of them unless
+    /// a record cap is set).
+    pub fn records(&self) -> &VecDeque<RoundRecord> {
         &self.records
     }
 
@@ -417,7 +436,9 @@ impl SimEngine {
     /// The recorded trace so far (when constructed with `record_trace`).
     pub fn into_trace(self) -> Option<Trace> {
         if self.record_trace {
-            Some(Trace { spans: self.spans })
+            Some(Trace {
+                spans: self.spans.into_iter().collect(),
+            })
         } else {
             None
         }
@@ -485,8 +506,7 @@ impl SimEngine {
         let ep = &self.epochs[retiring];
         for (p, started) in ep.max_started_round.iter().enumerate() {
             if let Some(r) = *started {
-                let next = self.next_round.entry(ep.specs[p].id).or_insert(0);
-                *next = (*next).max(ep.base_round[p] + r + 1);
+                self.ledger.note_round(ep.specs[p].id, ep.base_round[p] + r);
             }
         }
         for unit in self.units.values_mut() {
@@ -532,10 +552,7 @@ impl SimEngine {
             offset.push(acc);
             acc += tl.len();
         }
-        let base_round: Vec<usize> = specs
-            .iter()
-            .map(|s| self.next_round.get(&s.id).copied().unwrap_or(0))
-            .collect();
+        let base_round: Vec<usize> = specs.iter().map(|s| self.ledger.base_round(s.id)).collect();
         let n = specs.len();
         let mut epoch = Epoch {
             specs,
@@ -688,7 +705,7 @@ impl SimEngine {
         }
         let global_run = self.epochs[ev.epoch].base_round[p] + r;
         if self.record_trace {
-            self.spans.push(TaskSpan {
+            self.spans.push_back(TaskSpan {
                 pipeline: self.epochs[ev.epoch].specs[p].id.0,
                 seq: s,
                 run: global_run,
@@ -698,6 +715,11 @@ impl SimEngine {
                 start,
                 end: ev.time,
             });
+            if let Some(cap) = self.record_cap {
+                while self.spans.len() > cap {
+                    self.spans.pop_front();
+                }
+            }
         }
 
         let ep = &mut self.epochs[ev.epoch];
@@ -708,14 +730,19 @@ impl SimEngine {
             ep.rounds_done += 1;
             let round_start = ep.start_time[ep.id(p, 0, r)];
             let pipeline = ep.specs[p].id;
-            self.records.push(RoundRecord {
+            self.records.push_back(RoundRecord {
                 pipeline,
                 run: global_run,
                 start: round_start,
                 end: ev.time,
             });
-            let next = self.next_round.entry(pipeline).or_insert(0);
-            *next = (*next).max(global_run + 1);
+            self.completions_total += 1;
+            if let Some(cap) = self.record_cap {
+                while self.records.len() > cap {
+                    self.records.pop_front();
+                }
+            }
+            self.ledger.note_round(pipeline, global_run);
         }
 
         // Successor bookkeeping — retired epochs spawn nothing new.
@@ -1115,7 +1142,7 @@ mod tests {
         let solo = CollabPlan::new(vec![plan.plans[0].clone()]);
         eng.set_plan(&solo, &ps[..1], None);
         eng.run_until(1.0);
-        let records = eng.records().to_vec();
+        let records: Vec<RoundRecord> = eng.records().iter().copied().collect();
         assert!(eng.completions() > pre, "no rounds after the switch");
         // Only pipeline 0 completes rounds after the switch settles, and
         // its global run index never repeats.
@@ -1135,6 +1162,23 @@ mod tests {
         let trace = eng.into_trace().unwrap();
         trace.check_unit_exclusivity().unwrap();
         trace.check_causality().unwrap();
+    }
+
+    #[test]
+    fn record_cap_bounds_retained_records_but_not_the_count() {
+        let f = fleet(1);
+        let ps = pipes(1);
+        let plan = plan_spread(&ps, 1);
+        let gt = GroundTruth::default();
+        let mut eng = SimEngine::new(f, gt, Policy::atp(), true);
+        eng.set_record_cap(Some(5));
+        eng.set_plan(&plan, &ps, Some(20));
+        eng.run_until(f64::INFINITY);
+        assert_eq!(eng.completions(), 20, "the counter must see every round");
+        assert_eq!(eng.records().len(), 5, "the ring must evict old records");
+        assert!(eng.records().iter().all(|r| r.run >= 15));
+        let trace = eng.into_trace().unwrap();
+        assert!(trace.spans.len() <= 5, "spans ride the same window");
     }
 
     #[test]

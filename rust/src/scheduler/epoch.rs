@@ -1,0 +1,63 @@
+//! Cross-epoch round-index continuity, shared by the execution engines.
+//!
+//! Both engines that can swap plans mid-run — the discrete-event
+//! [`super::SimEngine`] and the streaming [`crate::serving::ServeEngine`] —
+//! deploy plans as *epochs*: the old epoch retires with a graceful
+//! in-flight drain while the new one starts. Global per-pipeline round
+//! indices must keep counting across that switch (the ground-truth jitter
+//! stream, trace keys, and session time series are all keyed by them), and
+//! a round that *started* under the retiring epoch may still complete and
+//! record its index during the drain, so the next epoch must base itself
+//! past every started round — completed-round tracking alone would let a
+//! draining round collide with the new epoch's round 0.
+//!
+//! [`EpochLedger`] is that bookkeeping: a per-pipeline high-water mark of
+//! started rounds, advanced by whichever engine starts them.
+
+use std::collections::BTreeMap;
+
+use crate::pipeline::PipelineId;
+
+/// Per-pipeline global round-index ledger (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct EpochLedger {
+    next_round: BTreeMap<PipelineId, usize>,
+}
+
+impl EpochLedger {
+    pub fn new() -> EpochLedger {
+        EpochLedger::default()
+    }
+
+    /// The global index the pipeline's next epoch must start rounds at.
+    pub fn base_round(&self, pipeline: PipelineId) -> usize {
+        self.next_round.get(&pipeline).copied().unwrap_or(0)
+    }
+
+    /// Record that global round `round` of `pipeline` started (or
+    /// completed): the next epoch's base moves past it.
+    pub fn note_round(&mut self, pipeline: PipelineId, round: usize) {
+        let next = self.next_round.entry(pipeline).or_insert(0);
+        *next = (*next).max(round + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_advances_past_noted_rounds_and_never_regresses() {
+        let mut ledger = EpochLedger::new();
+        let p = PipelineId(3);
+        assert_eq!(ledger.base_round(p), 0);
+        ledger.note_round(p, 0);
+        ledger.note_round(p, 4);
+        assert_eq!(ledger.base_round(p), 5);
+        // Late completions from a draining epoch must not move it back.
+        ledger.note_round(p, 2);
+        assert_eq!(ledger.base_round(p), 5);
+        // Other pipelines are independent.
+        assert_eq!(ledger.base_round(PipelineId(0)), 0);
+    }
+}

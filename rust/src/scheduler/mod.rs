@@ -18,12 +18,14 @@
 //! `run_until` horizons and swap plans mid-timeline without restarting
 //! the clock; [`simulate`] is the one-shot batch wrapper.
 
+pub mod epoch;
 pub mod groundtruth;
 pub mod engine;
 pub mod policy;
 pub mod trace;
 
 pub use engine::{simulate, RoundRecord, SimConfig, SimEngine, SimReport};
+pub use epoch::EpochLedger;
 pub use groundtruth::GroundTruth;
 pub use policy::Policy;
 pub use trace::{TaskSpan, Trace};

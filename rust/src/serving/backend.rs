@@ -1,0 +1,249 @@
+//! [`ServeBackend`]: the streaming engine as an execution backend, next to
+//! [`crate::api::SimBackend`] and the PJRT backend.
+//!
+//! `runtime.run(cfg)` on a `ServeBackend` executes the current deployment
+//! as one bounded streaming epoch — `cfg.runs` rounds per app on real
+//! worker threads — and measures it with the *same* warmup/round
+//! conventions as the simulator backend, so the two reports are directly
+//! comparable: a virtual-time serve is expected to land within a few
+//! percent of [`crate::scheduler::simulate`] on the same plan.
+
+use std::sync::Arc;
+
+use crate::api::backend::sim_config;
+use crate::api::core::Deployment;
+use crate::api::{AppRunStats, ExecutionBackend, RunConfig, RunReport, RuntimeError};
+use crate::device::Fleet;
+use crate::pipeline::PipelineSpec;
+use crate::scheduler::Policy;
+
+use super::engine::{ServeCfg, ServeEngine};
+use super::executor::{ChunkExecutor, VirtualExecutor};
+
+/// Streaming execution behind [`crate::api::SynergyRuntime::run`] (see the
+/// module docs).
+pub struct ServeBackend {
+    /// `None` builds a fresh [`VirtualExecutor`] per run, seeded from the
+    /// [`RunConfig`] (matching the simulator's jitter stream); `Some`
+    /// serves every run on the given executor.
+    executor: Option<Arc<dyn ChunkExecutor>>,
+    cfg: ServeCfg,
+}
+
+impl ServeBackend {
+    /// Virtual-time streaming on the device-model executor — runs on a
+    /// stock toolchain, no artifacts needed.
+    pub fn virtual_time() -> ServeBackend {
+        ServeBackend {
+            executor: None,
+            cfg: ServeCfg::default(),
+        }
+    }
+
+    /// Stream through a specific executor (e.g. the PJRT chunk executor).
+    pub fn with_executor(executor: Arc<dyn ChunkExecutor>) -> ServeBackend {
+        ServeBackend {
+            executor: Some(executor),
+            cfg: ServeCfg::default(),
+        }
+    }
+
+    /// Override the engine configuration (in-flight window, queue depth,
+    /// wall-time pacing).
+    pub fn cfg(mut self, cfg: ServeCfg) -> ServeBackend {
+        self.cfg = cfg;
+        self
+    }
+}
+
+impl ExecutionBackend for ServeBackend {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn run(
+        &self,
+        deployment: &Deployment,
+        apps: &[PipelineSpec],
+        fleet: &Fleet,
+        cfg: &RunConfig,
+    ) -> Result<RunReport, RuntimeError> {
+        assert!(cfg.runs > 0, "need at least one run");
+        let executor = self
+            .executor
+            .clone()
+            .unwrap_or_else(|| Arc::new(VirtualExecutor::with_seed(cfg.seed)));
+        let mut serve_cfg = self.cfg;
+        // Match the deployed policy's inter-run window so virtual-time
+        // serving paces rounds exactly like the DES would (the streaming
+        // engine always runs the paper's per-app ATP admission; barrier
+        // policies degrade to a single-round window).
+        serve_cfg.max_inflight = match deployment.policy {
+            Policy::Atp { max_inflight } => max_inflight.max(1),
+            Policy::Sequential | Policy::InterPipeline => 1,
+        };
+        let wall = std::time::Instant::now();
+        let mut engine = ServeEngine::new(executor, serve_cfg, fleet.clone());
+        engine.set_plan(&deployment.plan, apps, Some(cfg.runs));
+        engine.run_until(f64::INFINITY);
+        let outcome = engine.finish()?;
+        let wall_s = wall.elapsed().as_secs_f64();
+
+        // Measure with the simulator's conventions (unified rounds, warmup
+        // excluded) so serve and sim reports compare apples to apples.
+        let n = deployment.plan.plans.len();
+        let runs = cfg.runs;
+        let warmup = sim_config(runs, deployment.policy).warmup;
+        let mut start_of = vec![vec![f64::NAN; runs]; n];
+        let mut end_of = vec![vec![f64::NAN; runs]; n];
+        for rec in &outcome.records {
+            let Some(p) = deployment
+                .plan
+                .plans
+                .iter()
+                .position(|ep| ep.pipeline == rec.pipeline)
+            else {
+                continue;
+            };
+            if rec.run < runs {
+                start_of[p][rec.run] = rec.start;
+                end_of[p][rec.run] = rec.end;
+            }
+        }
+        let round_done: Vec<f64> = (0..runs)
+            .map(|r| (0..n).map(|p| end_of[p][r]).fold(0.0, f64::max))
+            .collect();
+        let t0 = if warmup == 0 {
+            0.0
+        } else {
+            round_done[warmup - 1]
+        };
+        let measured = runs - warmup;
+        let throughput = (n * measured) as f64 / (round_done[runs - 1] - t0).max(1e-12);
+        let mut lat_sum = 0.0;
+        let mut lat_cnt = 0usize;
+        for r in warmup..runs {
+            for p in 0..n {
+                lat_sum += end_of[p][r] - start_of[p][r];
+                lat_cnt += 1;
+            }
+        }
+        let avg_latency_s = lat_sum / lat_cnt.max(1) as f64;
+
+        let per_app: Vec<AppRunStats> = deployment
+            .plan
+            .plans
+            .iter()
+            .enumerate()
+            .map(|(p, ep)| {
+                let name = apps
+                    .iter()
+                    .find(|a| a.id == ep.pipeline)
+                    .map(|a| a.name.clone())
+                    .unwrap_or_default();
+                let lat: f64 = (0..runs).map(|r| end_of[p][r] - start_of[p][r]).sum();
+                AppRunStats {
+                    app: ep.pipeline,
+                    name,
+                    completions: runs,
+                    mean_latency_s: lat / runs.max(1) as f64,
+                    max_split_err: None,
+                }
+            })
+            .collect();
+
+        Ok(RunReport {
+            backend: self.name(),
+            completions: outcome.completed,
+            throughput,
+            avg_latency_s,
+            power_w: None,
+            energy_j: None,
+            wall_s: Some(wall_s),
+            verified: None,
+            per_app,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{SimBackend, SynergyRuntime};
+    use crate::workload::{fleet4, workload};
+
+    #[test]
+    fn serve_backend_reports_virtual_time_throughput() {
+        let runtime = SynergyRuntime::builder()
+            .fleet(fleet4())
+            .backend(ServeBackend::virtual_time())
+            .build();
+        for spec in workload(2).unwrap().pipelines {
+            runtime.register(spec).unwrap();
+        }
+        let cfg = RunConfig {
+            runs: 12,
+            seed: 7,
+            ..RunConfig::default()
+        };
+        let rep = runtime.run(&cfg).unwrap();
+        assert_eq!(rep.backend, "serve");
+        assert_eq!(rep.completions, 3 * 12);
+        assert!(rep.throughput > 0.0);
+        assert!(rep.avg_latency_s > 0.0);
+        assert_eq!(rep.per_app.len(), 3);
+        assert!(rep.per_app.iter().all(|a| a.completions == 12));
+        assert!(rep.wall_s.is_some());
+        assert!(rep.power_w.is_none(), "a thread pool has no power rails");
+    }
+
+    #[test]
+    fn virtual_serve_tracks_the_simulator_closely() {
+        // The acceptance bar: one-shot virtual-time serving lands within
+        // 10% of the DES on the same deployment and seed.
+        let cfg = RunConfig {
+            runs: 24,
+            seed: 7,
+            ..RunConfig::default()
+        };
+        let serve = {
+            let runtime = SynergyRuntime::builder()
+                .fleet(fleet4())
+                .backend(ServeBackend::virtual_time())
+                .build();
+            for spec in workload(1).unwrap().pipelines {
+                runtime.register(spec).unwrap();
+            }
+            runtime.run(&cfg).unwrap()
+        };
+        let sim = {
+            let runtime = SynergyRuntime::builder()
+                .fleet(fleet4())
+                .backend(SimBackend)
+                .build();
+            for spec in workload(1).unwrap().pipelines {
+                runtime.register(spec).unwrap();
+            }
+            runtime.run(&cfg).unwrap()
+        };
+        assert_eq!(serve.completions, sim.completions);
+        let tput_gap = (serve.throughput - sim.throughput).abs() / sim.throughput;
+        assert!(
+            tput_gap < 0.10,
+            "serve {} vs sim {} inf/s (gap {tput_gap:.3})",
+            serve.throughput,
+            sim.throughput
+        );
+        // Latency gets a slightly wider bar: when two pipelines share a
+        // computation unit, worker arrival order (OS scheduling) can queue
+        // a round behind a different neighbor than the DES's ready-time
+        // order did, shifting individual round latencies by a task.
+        let lat_gap = (serve.avg_latency_s - sim.avg_latency_s).abs() / sim.avg_latency_s;
+        assert!(
+            lat_gap < 0.15,
+            "serve {} vs sim {} s latency (gap {lat_gap:.3})",
+            serve.avg_latency_s,
+            sim.avg_latency_s
+        );
+    }
+}

@@ -1,0 +1,886 @@
+//! The streaming execution engine: a deployment run on real worker
+//! threads, surviving plan switches.
+//!
+//! Topology mirrors §IV-F on actual threads: one worker per
+//! (device, computation unit) processing a bounded FIFO queue, channels as
+//! the links between a pipeline's chunk stages, and a sensor-rate ticker
+//! per app that admits rounds with the paper's adaptive-task-parallelization
+//! pacing (round `r+1` enters when round `r`'s sensing completed and at
+//! most `max_inflight` rounds are outstanding). What "run this task" means
+//! is delegated to a [`ChunkExecutor`]: the deterministic virtual-time
+//! device model on stock toolchains, real PJRT inference behind the `pjrt`
+//! feature (see [`super::executor`]).
+//!
+//! Time is *engine seconds* carried on the messages themselves: each
+//! worker keeps a per-unit clock, starts a task at
+//! `max(ready, unit_clock)`, and stamps completions — so unit exclusivity
+//! and round latency accounting hold in virtual time regardless of how the
+//! OS schedules the threads, and a served session is directly comparable
+//! to the discrete-event simulator on the same plans.
+//!
+//! **Live plan switches** are the headline: [`ServeEngine::set_plan`]
+//! retires the current binding epoch (its tickers stop admitting rounds;
+//! everything already admitted drains gracefully through the workers),
+//! rebinds the chunk chains of the new deployment onto the *same* worker
+//! threads, and records the measured rebind pause — mirroring the
+//! discrete-event engine's epoch semantics
+//! ([`crate::scheduler::SimEngine::set_plan`]), with round-index
+//! continuity shared through [`crate::scheduler::EpochLedger`]. No
+//! admitted round is ever dropped: at [`ServeEngine::finish`] the engine
+//! reports admitted vs. completed rounds so callers can assert
+//! conservation across switches.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::device::{DeviceId, Fleet, SensorKind};
+use crate::estimator::LatencyModel;
+use crate::pipeline::PipelineSpec;
+use crate::plan::task::{PlanTask, UnitKind};
+use crate::plan::CollabPlan;
+use crate::scheduler::{EpochLedger, GroundTruth, RoundRecord};
+
+use crate::api::RuntimeError;
+
+use super::executor::{ChunkExecutor, TaskCtx};
+
+/// Streaming-engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCfg {
+    /// Rounds a pipeline may have in flight at once (2 = the paper's
+    /// double-buffered inter-run overlap).
+    pub max_inflight: usize,
+    /// Capacity of each worker's bounded input queue. Sized comfortably
+    /// above the total in-flight round count so stage-to-stage sends never
+    /// block in steady state (backpressure is applied at round admission).
+    pub channel_depth: usize,
+    /// Wall seconds each worker sleeps per engine second of task time.
+    /// `0.0` (default) free-runs — virtual time advances as fast as the
+    /// threads can carry it; `1.0` paces serving to real time.
+    pub time_scale: f64,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            max_inflight: 2,
+            channel_depth: 64,
+            time_scale: 0.0,
+        }
+    }
+}
+
+/// One measured plan rebind (see [`ServeEngine::set_plan`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Rebind {
+    /// Engine time the switch landed.
+    pub t: f64,
+    /// Measured wall-clock pause: retiring the old epoch's tickers plus
+    /// binding the new chains onto the workers.
+    pub wall_s: f64,
+    /// Apps in the new binding (0 = deployment cleared).
+    pub apps: usize,
+}
+
+/// What the engine produced over its lifetime (see [`ServeEngine::finish`]).
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// The executor that ran the chunks (`"virtual"`, `"pjrt"`).
+    pub executor: &'static str,
+    /// Retained completed rounds, ordered by completion time. Includes
+    /// rounds that drained past the last horizon; a record cap
+    /// ([`ServeEngine::set_record_cap`]) retains only the most recent.
+    pub records: Vec<RoundRecord>,
+    /// Rounds admitted by the tickers across all epochs. Equal to
+    /// [`Self::completed`] when no executor fault occurred — the
+    /// conservation invariant across plan switches.
+    pub admitted: usize,
+    /// Rounds completed across all epochs — the full count, independent
+    /// of the record cap.
+    pub completed: usize,
+    /// Plan-rebind timeline with measured pauses.
+    pub rebinds: Vec<Rebind>,
+    /// Worker threads spawned over the engine's lifetime.
+    pub workers: usize,
+}
+
+/// A round's activation flowing between chunk stages (real executors
+/// only; the virtual executor carries `None`).
+type Payload = Option<Vec<f32>>;
+
+/// One pipeline's chunk chain bound to workers for one epoch.
+struct ChainBinding {
+    spec: PipelineSpec,
+    tasks: Vec<PlanTask>,
+    /// Worker input per task position, index-aligned with `tasks`.
+    txs: Vec<mpsc::SyncSender<WorkItem>>,
+    /// Back to this chain's ticker (pacing feedback).
+    feedback: mpsc::Sender<Feedback>,
+    /// To the engine's completion collector.
+    done: mpsc::Sender<DoneMsg>,
+    /// The fleet this epoch was bound against (device specs for costing).
+    fleet: Arc<Fleet>,
+    sensor: Option<SensorKind>,
+}
+
+/// One task instance traveling a chain.
+struct WorkItem {
+    chain: Arc<ChainBinding>,
+    seq: usize,
+    /// Global round index (continuous across epochs).
+    round: usize,
+    /// Engine time the item became ready for its unit.
+    ready: f64,
+    /// Start time of the round's sensing task (filled at seq 0).
+    round_start: f64,
+    payload: Payload,
+}
+
+enum Feedback {
+    SenseDone { round: usize, end: f64 },
+    RoundDone { round: usize, end: f64 },
+}
+
+enum DoneMsg {
+    Round(RoundRecord),
+    Fault(String),
+}
+
+/// Ticker ⇄ driver rendezvous: the admission horizon, retirement, and the
+/// parked/finished state the driver waits on.
+struct GateSt {
+    horizon: f64,
+    retired: bool,
+    parked: bool,
+    next_ready: f64,
+    done: bool,
+}
+
+struct Gate {
+    st: Mutex<GateSt>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(horizon: f64) -> Gate {
+        Gate {
+            st: Mutex::new(GateSt {
+                horizon,
+                retired: false,
+                parked: false,
+                next_ready: 0.0,
+                done: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Ticker side: block until `ready` falls inside the horizon; `false`
+    /// means the epoch retired instead.
+    fn admit(&self, ready: f64) -> bool {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.retired {
+                return false;
+            }
+            if ready < st.horizon {
+                st.parked = false;
+                return true;
+            }
+            st.parked = true;
+            st.next_ready = ready;
+            self.cv.notify_all();
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn finish(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.done = true;
+        self.cv.notify_all();
+    }
+
+    fn set_horizon(&self, t: f64) {
+        let mut st = self.st.lock().unwrap();
+        if t > st.horizon {
+            st.horizon = t;
+        }
+        self.cv.notify_all();
+    }
+
+    fn retire(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.retired = true;
+        self.cv.notify_all();
+    }
+
+    /// Driver side: wait until the ticker can admit nothing more before
+    /// `t` — parked at or past it, finished its round budget, or retired.
+    fn wait_idle(&self, t: f64) {
+        let mut st = self.st.lock().unwrap();
+        while !(st.done || st.retired || (st.parked && st.next_ready >= t)) {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+struct Worker {
+    tx: mpsc::SyncSender<WorkItem>,
+    join: JoinHandle<()>,
+}
+
+struct TickerHandle {
+    gate: Arc<Gate>,
+    join: JoinHandle<usize>,
+}
+
+/// Everything one ticker thread needs.
+struct TickerTask {
+    chain: Arc<ChainBinding>,
+    feedback: mpsc::Receiver<Feedback>,
+    gate: Arc<Gate>,
+    /// Engine time the epoch started (earliest possible admission).
+    start_t: f64,
+    base_round: usize,
+    max_inflight: usize,
+    /// Round budget (`None` = run against horizons).
+    max_rounds: Option<usize>,
+    ledger: Arc<Mutex<EpochLedger>>,
+}
+
+/// Pull feedback until the wanted entry arrives; `None` = channel closed.
+fn recv_until(
+    feedback: &mpsc::Receiver<Feedback>,
+    sense_ends: &mut BTreeMap<usize, f64>,
+    round_ends: &mut BTreeMap<usize, f64>,
+    want_sense: bool,
+    round: usize,
+) -> Option<f64> {
+    loop {
+        let map = if want_sense {
+            &mut *sense_ends
+        } else {
+            &mut *round_ends
+        };
+        if let Some(end) = map.remove(&round) {
+            return Some(end);
+        }
+        match feedback.recv() {
+            Ok(Feedback::SenseDone { round, end }) => {
+                sense_ends.insert(round, end);
+            }
+            Ok(Feedback::RoundDone { round, end }) => {
+                round_ends.insert(round, end);
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+/// The per-app sensor-rate ticker: admits round `r` once round `r-1`'s
+/// sensing completed (the sensor cadence) and at most `max_inflight`
+/// rounds are outstanding — the ATP pacing the DES expresses as
+/// dependency edges, here as blocking feedback reads.
+fn ticker_loop(t: TickerTask) -> usize {
+    let TickerTask {
+        chain,
+        feedback,
+        gate,
+        start_t,
+        base_round,
+        max_inflight,
+        max_rounds,
+        ledger,
+    } = t;
+    let mut sense_ends: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut round_ends: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut admitted = 0usize;
+    loop {
+        if let Some(m) = max_rounds {
+            if admitted >= m {
+                break;
+            }
+        }
+        let local = admitted;
+        let mut ready = start_t;
+        if local > 0 {
+            match recv_until(
+                &feedback,
+                &mut sense_ends,
+                &mut round_ends,
+                true,
+                base_round + local - 1,
+            ) {
+                Some(end) => ready = ready.max(end),
+                None => break,
+            }
+        }
+        if local >= max_inflight {
+            match recv_until(
+                &feedback,
+                &mut sense_ends,
+                &mut round_ends,
+                false,
+                base_round + local - max_inflight,
+            ) {
+                Some(end) => ready = ready.max(end),
+                None => break,
+            }
+        }
+        if !gate.admit(ready) {
+            break;
+        }
+        let round = base_round + local;
+        ledger.lock().unwrap().note_round(chain.spec.id, round);
+        let item = WorkItem {
+            chain: chain.clone(),
+            seq: 0,
+            round,
+            ready,
+            round_start: 0.0,
+            payload: None,
+        };
+        if chain.txs[0].send(item).is_err() {
+            break;
+        }
+        admitted += 1;
+    }
+    gate.finish();
+    admitted
+}
+
+/// One (device, unit) worker: execute in arrival order against a per-unit
+/// engine clock, forward along the chain, report completions.
+fn worker_loop(rx: mpsc::Receiver<WorkItem>, executor: Arc<dyn ChunkExecutor>, time_scale: f64) {
+    let mut clock = 0.0f64;
+    while let Ok(mut item) = rx.recv() {
+        let chain = item.chain.clone();
+        let task = chain.tasks[item.seq];
+        let start = clock.max(item.ready);
+        let ctx = TaskCtx {
+            fleet: &chain.fleet,
+            spec: &chain.spec,
+            task: &task,
+            sensor: chain.sensor,
+            round: item.round,
+        };
+        let dur = match executor.execute(&ctx, &mut item.payload) {
+            Ok(d) => d.max(0.0),
+            Err(e) => {
+                let _ = chain.done.send(DoneMsg::Fault(e.to_string()));
+                // Unblock the ticker: fabricate the pacing feedback the
+                // lost round will never produce, then drop the item (the
+                // fault surfaces as an error from `finish`).
+                if item.seq == 0 {
+                    let _ = chain
+                        .feedback
+                        .send(Feedback::SenseDone { round: item.round, end: start });
+                }
+                let _ = chain
+                    .feedback
+                    .send(Feedback::RoundDone { round: item.round, end: start });
+                continue;
+            }
+        };
+        let end = start + dur;
+        clock = end;
+        if time_scale > 0.0 && dur > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(dur * time_scale));
+        }
+        if item.seq == 0 {
+            item.round_start = start;
+            let _ = chain
+                .feedback
+                .send(Feedback::SenseDone { round: item.round, end });
+        }
+        if item.seq + 1 < chain.tasks.len() {
+            item.seq += 1;
+            item.ready = end;
+            let tx = chain.txs[item.seq].clone();
+            let _ = tx.send(item);
+        } else {
+            let _ = chain.done.send(DoneMsg::Round(RoundRecord {
+                pipeline: chain.spec.id,
+                run: item.round,
+                start: item.round_start,
+                end,
+            }));
+            let _ = chain
+                .feedback
+                .send(Feedback::RoundDone { round: item.round, end });
+        }
+    }
+}
+
+/// The multi-threaded streaming engine (see the module docs). Driven like
+/// the DES: `set_plan` / `set_fleet` / `run_until(t)` / `finish()`.
+pub struct ServeEngine {
+    executor: Arc<dyn ChunkExecutor>,
+    cfg: ServeCfg,
+    fleet: Arc<Fleet>,
+    now: f64,
+    workers: BTreeMap<(DeviceId, UnitKind), Worker>,
+    /// The live epoch's tickers.
+    active: Vec<TickerHandle>,
+    /// Retired epochs' tickers, joined (for admitted counts) at finish.
+    drained: Vec<TickerHandle>,
+    ledger: Arc<Mutex<EpochLedger>>,
+    /// `Some` until [`Self::finish`] drops it to close the collector.
+    done_tx: Option<mpsc::Sender<DoneMsg>>,
+    done_rx: mpsc::Receiver<DoneMsg>,
+    rebinds: Vec<Rebind>,
+    record_cap: Option<usize>,
+}
+
+impl Drop for ServeEngine {
+    /// Dropping an engine without [`Self::finish`] must not strand its
+    /// threads: retire every ticker (they exit once their in-flight
+    /// feedback drains); the workers follow when the last chain sender
+    /// drops with the engine's fields.
+    fn drop(&mut self) {
+        for h in self.active.iter().chain(&self.drained) {
+            h.gate.retire();
+        }
+    }
+}
+
+impl ServeEngine {
+    pub fn new(executor: Arc<dyn ChunkExecutor>, cfg: ServeCfg, fleet: Fleet) -> ServeEngine {
+        let (done_tx, done_rx) = mpsc::channel();
+        ServeEngine {
+            executor,
+            cfg,
+            fleet: Arc::new(fleet),
+            now: 0.0,
+            workers: BTreeMap::new(),
+            active: Vec::new(),
+            drained: Vec::new(),
+            ledger: Arc::new(Mutex::new(EpochLedger::new())),
+            done_tx: Some(done_tx),
+            done_rx,
+            rebinds: Vec::new(),
+            record_cap: None,
+        }
+    }
+
+    /// The engine time reached by [`Self::run_until`].
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// The plan-rebind timeline so far.
+    pub fn rebinds(&self) -> &[Rebind] {
+        &self.rebinds
+    }
+
+    /// Measured wall pause of the most recent rebind (0 before any).
+    pub fn last_rebind_wall_s(&self) -> f64 {
+        self.rebinds.last().map_or(0.0, |r| r.wall_s)
+    }
+
+    /// Cap the records retained by [`Self::finish`] to the most recent
+    /// `cap` (long-session memory bound; admitted/completed totals keep
+    /// counting everything).
+    pub fn set_record_cap(&mut self, cap: Option<usize>) {
+        self.record_cap = cap;
+    }
+
+    /// Replace the fleet new epochs bind against. Workers of departed
+    /// devices stay up (in-flight work drains through them); workers for
+    /// new devices spawn at the next [`Self::set_plan`].
+    pub fn set_fleet(&mut self, fleet: Fleet) {
+        self.fleet = Arc::new(fleet);
+    }
+
+    fn worker_tx(&mut self, device: DeviceId, unit: UnitKind) -> mpsc::SyncSender<WorkItem> {
+        if let Some(w) = self.workers.get(&(device, unit)) {
+            return w.tx.clone();
+        }
+        let (tx, rx) = mpsc::sync_channel(self.cfg.channel_depth.max(4));
+        let executor = self.executor.clone();
+        let scale = self.cfg.time_scale;
+        let join = std::thread::Builder::new()
+            .name(format!("serve-{device}-{unit:?}"))
+            .spawn(move || worker_loop(rx, executor, scale))
+            .expect("spawn serve worker");
+        self.workers.insert((device, unit), Worker { tx: tx.clone(), join });
+        tx
+    }
+
+    fn retire_active(&mut self) {
+        for h in &self.active {
+            h.gate.retire();
+        }
+        self.drained.append(&mut self.active);
+    }
+
+    /// Retire the current epoch: tickers stop admitting rounds; everything
+    /// already admitted drains gracefully through the workers.
+    pub fn clear_plan(&mut self) {
+        if self.active.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        self.retire_active();
+        self.rebinds.push(Rebind {
+            t: self.now,
+            wall_s: t0.elapsed().as_secs_f64(),
+            apps: 0,
+        });
+    }
+
+    /// Bind a deployment as a new epoch at the current engine time,
+    /// retiring any current one — worker threads are reused, only the
+    /// chain bindings and tickers change. With `max_rounds = Some(m)` each
+    /// pipeline executes exactly `m` rounds (one-shot mode); with `None`
+    /// admission is bounded by [`Self::run_until`] horizons.
+    pub fn set_plan(
+        &mut self,
+        plan: &CollabPlan,
+        pipelines: &[PipelineSpec],
+        max_rounds: Option<usize>,
+    ) {
+        let t0 = Instant::now();
+        self.retire_active();
+        let mut apps = 0usize;
+        for ep in &plan.plans {
+            let spec = pipelines
+                .iter()
+                .find(|p| p.id == ep.pipeline)
+                .expect("plan for unknown pipeline")
+                .clone();
+            let tasks = ep.tasks(&spec.model);
+            let txs: Vec<mpsc::SyncSender<WorkItem>> = tasks
+                .iter()
+                .map(|t| {
+                    let unit = GroundTruth::unit_of(&self.fleet, t);
+                    self.worker_tx(t.device, unit)
+                })
+                .collect();
+            let sensor = LatencyModel::source_sensor(&spec);
+            let base_round = self.ledger.lock().unwrap().base_round(spec.id);
+            let ticker_name = format!("serve-ticker-{}", spec.id);
+            let (feedback_tx, feedback_rx) = mpsc::channel();
+            let done = self
+                .done_tx
+                .as_ref()
+                .expect("serving engine already finished")
+                .clone();
+            let chain = Arc::new(ChainBinding {
+                spec,
+                tasks,
+                txs,
+                feedback: feedback_tx,
+                done,
+                fleet: self.fleet.clone(),
+                sensor,
+            });
+            let gate = Arc::new(Gate::new(self.now));
+            let task = TickerTask {
+                chain,
+                feedback: feedback_rx,
+                gate: gate.clone(),
+                start_t: self.now,
+                base_round,
+                max_inflight: self.cfg.max_inflight.max(1),
+                max_rounds,
+                ledger: self.ledger.clone(),
+            };
+            let join = std::thread::Builder::new()
+                .name(ticker_name)
+                .spawn(move || ticker_loop(task))
+                .expect("spawn serve ticker");
+            self.active.push(TickerHandle { gate, join });
+            apps += 1;
+        }
+        self.rebinds.push(Rebind {
+            t: self.now,
+            wall_s: t0.elapsed().as_secs_f64(),
+            apps,
+        });
+    }
+
+    /// Raise the admission horizon to `t` and wait until every live ticker
+    /// has admitted all rounds that become ready before it. In-flight
+    /// rounds keep draining asynchronously — completion records are
+    /// collected at [`Self::finish`].
+    ///
+    /// `f64::INFINITY` is only meaningful for bounded epochs
+    /// (`max_rounds = Some(..)`): it waits for every ticker to exhaust its
+    /// round budget.
+    pub fn run_until(&mut self, horizon: f64) {
+        for h in &self.active {
+            h.gate.set_horizon(horizon);
+        }
+        for h in &self.active {
+            h.gate.wait_idle(horizon);
+        }
+        if horizon.is_finite() && horizon > self.now {
+            self.now = horizon;
+        }
+    }
+
+    /// Shut down: retire the live epoch, drain every in-flight round, join
+    /// all threads, and return the collected records plus the conservation
+    /// totals.
+    pub fn finish(mut self) -> Result<ServeOutcome, RuntimeError> {
+        let backend = self.executor.name();
+        self.retire_active();
+        let mut admitted = 0usize;
+        for h in self.drained.drain(..) {
+            admitted += h.join.join().map_err(|_| RuntimeError::Backend {
+                backend,
+                message: "serving ticker thread panicked".into(),
+            })?;
+        }
+        // Drop all our senders: once the in-flight items drain, the worker
+        // inputs and the collector channel close in turn.
+        self.done_tx.take();
+        let workers = std::mem::take(&mut self.workers);
+        let worker_count = workers.len();
+        let mut joins = Vec::with_capacity(worker_count);
+        for (_, w) in workers {
+            drop(w.tx);
+            joins.push(w.join);
+        }
+        let mut records: Vec<RoundRecord> = Vec::new();
+        let mut completed = 0usize;
+        let mut fault: Option<String> = None;
+        while let Ok(msg) = self.done_rx.recv() {
+            match msg {
+                DoneMsg::Round(r) => {
+                    completed += 1;
+                    records.push(r);
+                }
+                DoneMsg::Fault(m) => fault = Some(m),
+            }
+        }
+        for j in joins {
+            j.join().map_err(|_| RuntimeError::Backend {
+                backend,
+                message: "serving worker thread panicked".into(),
+            })?;
+        }
+        if let Some(message) = fault {
+            return Err(RuntimeError::Backend { backend, message });
+        }
+        records.sort_by(|a, b| {
+            a.end
+                .total_cmp(&b.end)
+                .then_with(|| a.pipeline.cmp(&b.pipeline))
+                .then_with(|| a.run.cmp(&b.run))
+        });
+        if let Some(cap) = self.record_cap {
+            if records.len() > cap {
+                let overflow = records.len() - cap;
+                records.drain(..overflow);
+            }
+        }
+        Ok(ServeOutcome {
+            executor: backend,
+            records,
+            admitted,
+            completed,
+            rebinds: self.rebinds.clone(),
+            workers: worker_count,
+        })
+    }
+
+    /// Rebinds performed so far (the rebind timeline's length).
+    pub fn rebind_count(&self) -> usize {
+        self.rebinds.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::ModelGraph;
+    use crate::pipeline::{PipelineId, SourceReq, TargetReq};
+    use crate::plan::exec_plan::ExecutionPlan;
+    use crate::serving::VirtualExecutor;
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn model(layers: usize) -> ModelGraph {
+        ModelGraph::new(
+            "m",
+            Shape::new(16, 16, 3),
+            (0..layers)
+                .map(|_| Layer {
+                    kind: LayerKind::Conv2d { k: 3 },
+                    pool: 1,
+                    cout: 8,
+                    residual: false,
+                    has_bias: true,
+                })
+                .collect(),
+        )
+    }
+
+    fn pipes(n: usize) -> Vec<PipelineSpec> {
+        (0..n)
+            .map(|i| {
+                PipelineSpec::new(i, format!("p{i}"), SourceReq::Any, model(2), TargetReq::Any)
+            })
+            .collect()
+    }
+
+    fn plan_spread(ps: &[PipelineSpec], ndev: usize) -> CollabPlan {
+        CollabPlan::new(
+            ps.iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let d = DeviceId(i % ndev);
+                    ExecutionPlan::monolithic(p, d, d, d)
+                })
+                .collect(),
+        )
+    }
+
+    fn engine(n: usize) -> ServeEngine {
+        ServeEngine::new(
+            Arc::new(VirtualExecutor::with_seed(7)),
+            ServeCfg::default(),
+            fleet(n),
+        )
+    }
+
+    #[test]
+    fn bounded_run_completes_every_admitted_round() {
+        let ps = pipes(3);
+        let plan = plan_spread(&ps, 2);
+        let mut eng = engine(2);
+        eng.set_plan(&plan, &ps, Some(12));
+        eng.run_until(f64::INFINITY);
+        let out = eng.finish().unwrap();
+        assert_eq!(out.admitted, 3 * 12);
+        assert_eq!(out.records.len(), 3 * 12);
+        // Per pipeline: rounds 0..12, each exactly once, causally ordered.
+        for p in 0..3 {
+            let mut runs: Vec<usize> = out
+                .records
+                .iter()
+                .filter(|r| r.pipeline == PipelineId(p))
+                .map(|r| r.run)
+                .collect();
+            runs.sort_unstable();
+            assert_eq!(runs, (0..12).collect::<Vec<_>>());
+        }
+        assert!(out.records.iter().all(|r| r.end > r.start && r.start >= 0.0));
+        assert_eq!(out.rebinds.len(), 1);
+        assert!(out.workers > 0);
+    }
+
+    #[test]
+    fn horizon_gates_round_admission() {
+        let ps = pipes(1);
+        let plan = plan_spread(&ps, 1);
+        let mut eng = engine(1);
+        eng.set_plan(&plan, &ps, None);
+        eng.run_until(0.5);
+        let short = eng.finish().unwrap();
+
+        let mut eng = engine(1);
+        eng.set_plan(&plan_spread(&pipes(1), 1), &pipes(1), None);
+        eng.run_until(2.0);
+        let long = eng.finish().unwrap();
+
+        assert!(short.admitted > 0, "{short:?}");
+        assert!(
+            long.admitted > 2 * short.admitted,
+            "longer horizon must admit more rounds: {} vs {}",
+            short.admitted,
+            long.admitted
+        );
+        // Every admitted round completed (conservation).
+        assert_eq!(short.admitted, short.records.len());
+        assert_eq!(long.admitted, long.records.len());
+    }
+
+    #[test]
+    fn plan_switch_rebinds_without_dropping_rounds() {
+        let ps = pipes(2);
+        let plan = plan_spread(&ps, 2);
+        let mut eng = engine(2);
+        eng.set_plan(&plan, &ps, None);
+        eng.run_until(0.5);
+        // Switch to a solo plan mid-stream; the old epoch drains.
+        let solo = CollabPlan::new(vec![plan.plans[0].clone()]);
+        eng.set_plan(&solo, &ps[..1], None);
+        eng.run_until(1.0);
+        let out = eng.finish().unwrap();
+        assert_eq!(out.rebinds.len(), 2);
+        assert_eq!(
+            out.admitted,
+            out.records.len(),
+            "a switch must not drop in-flight rounds: {out:?}"
+        );
+        // Pipeline 0 spans both epochs with strictly unique global rounds.
+        let mut p0: Vec<usize> = out
+            .records
+            .iter()
+            .filter(|r| r.pipeline == PipelineId(0))
+            .map(|r| r.run)
+            .collect();
+        let n = p0.len();
+        p0.sort_unstable();
+        p0.dedup();
+        assert_eq!(p0.len(), n, "global round indices must not repeat");
+        // Pipeline 1 stops producing once its epoch retires and drains.
+        let p1_last = out
+            .records
+            .iter()
+            .filter(|r| r.pipeline == PipelineId(1))
+            .map(|r| r.start)
+            .fold(0.0, f64::max);
+        assert!(p1_last < 1.0, "retired pipeline kept starting rounds");
+    }
+
+    #[test]
+    fn virtual_time_is_deterministic_across_runs() {
+        let run = || {
+            let ps = pipes(2);
+            let plan = plan_spread(&ps, 2);
+            let mut eng = engine(2);
+            eng.set_plan(&plan, &ps, Some(8));
+            eng.run_until(f64::INFINITY);
+            eng.finish().unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.pipeline, y.pipeline);
+            assert_eq!(x.run, y.run);
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+        }
+    }
+
+    #[test]
+    fn record_cap_bounds_retained_records() {
+        let ps = pipes(1);
+        let plan = plan_spread(&ps, 1);
+        let mut eng = engine(1);
+        eng.set_record_cap(Some(5));
+        eng.set_plan(&plan, &ps, Some(20));
+        eng.run_until(f64::INFINITY);
+        let out = eng.finish().unwrap();
+        assert_eq!(out.admitted, 20);
+        assert_eq!(out.completed, 20, "the window must not eat the totals");
+        assert_eq!(out.records.len(), 5, "ring window must cap records");
+        // The retained records are the most recent ones.
+        assert!(out.records.iter().all(|r| r.run >= 15));
+    }
+}

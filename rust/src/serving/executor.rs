@@ -1,0 +1,138 @@
+//! The chunk-execution abstraction: what "run this task" means.
+//!
+//! The streaming engine ([`super::ServeEngine`]) is execution-agnostic: it
+//! owns threads, queues, pacing, and plan rebinding, and delegates the
+//! actual work of each task instance to a [`ChunkExecutor`]. Two
+//! executors exist:
+//!
+//! - [`VirtualExecutor`] (always available): the device-model cost
+//!   estimator doubles as a deterministic *virtual-time* executor — each
+//!   task "runs" for exactly the duration the ground-truth hardware model
+//!   assigns it ([`crate::scheduler::GroundTruth`]), including the
+//!   deterministic per-round jitter stream, so a served session is
+//!   directly comparable to the same plans under the discrete-event
+//!   simulator.
+//! - `PjrtChunkExecutor` (behind the `pjrt` cargo feature, in the gated
+//!   `serving::pjrt` submodule): real AOT-compiled HLO chunk inference
+//!   through the PJRT runtime bridge; durations are measured wall-clock
+//!   seconds and activations flow through the [`TaskCtx`] payload.
+
+use crate::device::{Fleet, SensorKind};
+use crate::pipeline::PipelineSpec;
+use crate::plan::task::PlanTask;
+use crate::scheduler::GroundTruth;
+
+use crate::api::RuntimeError;
+
+/// Everything an executor can know about one task instance.
+pub struct TaskCtx<'a> {
+    /// The fleet the task's epoch was bound against.
+    pub fleet: &'a Fleet,
+    /// The app the task belongs to (model, endpoints, name).
+    pub spec: &'a PipelineSpec,
+    /// The bound task (device, kind, sequence position).
+    pub task: &'a PlanTask,
+    /// The app's declared source sensor, if any.
+    pub sensor: Option<SensorKind>,
+    /// Global round index (continuous across plan switches; keys the
+    /// deterministic jitter stream).
+    pub round: usize,
+}
+
+/// Executes one task instance and reports how long it took, in engine
+/// seconds (virtual time for model-driven executors, measured wall time
+/// for real ones).
+///
+/// `payload` is the activation flowing along the pipeline's chunk chain:
+/// real executors fill it at the sensing task and transform it at each
+/// inference chunk; virtual-time executors ignore it.
+pub trait ChunkExecutor: Send + Sync {
+    /// Short backend label for reports (`"virtual"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Run the task; returns its duration in engine seconds.
+    fn execute(
+        &self,
+        ctx: &TaskCtx<'_>,
+        payload: &mut Option<Vec<f32>>,
+    ) -> Result<f64, RuntimeError>;
+}
+
+/// Deterministic virtual-time execution on the ground-truth device model
+/// (see the module docs). Needs no artifacts and no vendored toolchain.
+#[derive(Clone, Debug)]
+pub struct VirtualExecutor {
+    gt: GroundTruth,
+}
+
+impl VirtualExecutor {
+    pub fn new(gt: GroundTruth) -> VirtualExecutor {
+        VirtualExecutor { gt }
+    }
+
+    /// A virtual-time executor over the default hardware model with the
+    /// given jitter seed (matches [`crate::scheduler::GroundTruth::with_seed`],
+    /// so served and simulated sessions share one jitter stream).
+    pub fn with_seed(seed: u64) -> VirtualExecutor {
+        VirtualExecutor {
+            gt: GroundTruth::with_seed(seed),
+        }
+    }
+}
+
+impl ChunkExecutor for VirtualExecutor {
+    fn name(&self) -> &'static str {
+        "virtual"
+    }
+
+    fn execute(
+        &self,
+        ctx: &TaskCtx<'_>,
+        _payload: &mut Option<Vec<f32>>,
+    ) -> Result<f64, RuntimeError> {
+        Ok(self
+            .gt
+            .duration(ctx.fleet, ctx.task, &ctx.spec.model, ctx.sensor, ctx.round))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceId;
+    use crate::model::zoo::{model_by_name, ModelName};
+    use crate::pipeline::{PipelineId, SourceReq, TargetReq};
+    use crate::plan::task::TaskKind;
+
+    #[test]
+    fn virtual_executor_matches_ground_truth_durations() {
+        let fleet = crate::workload::fleet4();
+        let spec = PipelineSpec::new(
+            0,
+            "kws",
+            SourceReq::Any,
+            model_by_name(ModelName::KWS).clone(),
+            TargetReq::Any,
+        );
+        let task = PlanTask {
+            pipeline: PipelineId(0),
+            seq: 1,
+            device: DeviceId(0),
+            kind: TaskKind::Infer { range: spec.model.full() },
+        };
+        let exec = VirtualExecutor::with_seed(7);
+        let ctx = TaskCtx { fleet: &fleet, spec: &spec, task: &task, sensor: None, round: 3 };
+        let mut payload = None;
+        let d = exec.execute(&ctx, &mut payload).unwrap();
+        let expect = GroundTruth::with_seed(7).duration(&fleet, &task, &spec.model, None, 3);
+        assert_eq!(d, expect);
+        assert!(payload.is_none(), "virtual execution carries no data");
+        // Deterministic per (task, round); different rounds jitter apart.
+        let again = exec.execute(&ctx, &mut payload).unwrap();
+        assert_eq!(d, again);
+        let other = exec
+            .execute(&TaskCtx { round: 4, ..ctx }, &mut payload)
+            .unwrap();
+        assert_ne!(d, other);
+    }
+}

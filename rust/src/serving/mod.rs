@@ -1,0 +1,41 @@
+//! The live streaming serving subsystem: execute deployments on real
+//! worker threads and survive plan switches.
+//!
+//! The planner and the discrete-event simulator answer *which* plan is
+//! best and *what* it would do on the modeled hardware; this module is the
+//! execution path that actually runs one — multi-threaded, streaming, and
+//! rebindable while rounds are in flight:
+//!
+//! - [`ServeEngine`]: one worker thread per (device, computation unit)
+//!   with bounded queues for backpressure, a sensor-rate ticker per app
+//!   pacing round admission, and *live plan switches* — a replanned
+//!   deployment rebinds onto the same threads while the old epoch's
+//!   in-flight rounds drain gracefully, with the measured rebind pause
+//!   reported and no admitted round ever dropped.
+//! - [`ChunkExecutor`] / [`VirtualExecutor`]: what "run this chunk" means.
+//!   The device-model cost estimator doubles as a deterministic
+//!   virtual-time executor on stock toolchains; real AOT-compiled HLO
+//!   inference plugs in behind the `pjrt` cargo feature (the
+//!   feature-gated `pjrt` submodule).
+//! - [`ServeBackend`]: the streaming engine as a third execution backend
+//!   next to [`crate::api::SimBackend`] and the PJRT backend, measured
+//!   with the simulator's conventions so the reports compare directly.
+//!
+//! Live sessions drive the same engine through scenarios:
+//! [`crate::api::Session::serve`] swaps a session onto the streaming
+//! engine, so scripted churn replans incrementally and every switch
+//! rebinds the workers mid-stream (`synergy serve --scenario jog` on the
+//! CLI). Round-index continuity across switches is shared with the DES
+//! through [`crate::scheduler::EpochLedger`].
+
+pub mod backend;
+pub mod engine;
+pub mod executor;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use backend::ServeBackend;
+pub use engine::{Rebind, ServeCfg, ServeEngine, ServeOutcome};
+pub use executor::{ChunkExecutor, TaskCtx, VirtualExecutor};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtChunkExecutor;

@@ -1,26 +1,37 @@
-//! The real serving loop: a deployment executed with actual PJRT inference.
+//! Real PJRT execution for the serving subsystem (requires the `pjrt`
+//! cargo feature and `make artifacts`).
 //!
-//! Topology mirrors §IV-F: one worker thread per wearable device processing
-//! a FIFO work queue, mpsc channels as the radio links between devices, and
-//! inter-run parallelization bounded by a double-buffer window — run `r+1`
-//! of a pipeline enters the system while run `r` is still in flight, so
-//! chunk devices overlap exactly as in Fig. 12c. Numerics are real (HLO
-//! chunks through PJRT); on-body *timing* claims come from the device-model
-//! simulator, since a server CPU cannot impersonate a MAX78000's clock.
+//! Two entry points:
+//!
+//! - [`serve`]: the one-shot serving loop behind
+//!   [`crate::api::PjrtBackend`] — per-device worker threads, mpsc radio
+//!   links, double-buffered inter-run overlap, and split-vs-full
+//!   verification. (Formerly `coordinator::serve`; absorbed here so all
+//!   serving lives in one subsystem.)
+//! - [`PjrtChunkExecutor`]: the [`ChunkExecutor`] adapter that plugs real
+//!   AOT-compiled HLO chunk inference into the streaming
+//!   [`super::ServeEngine`] — sensing tasks synthesize the input frame,
+//!   inference tasks run the mapped artifact and pass the activation
+//!   along, and every task reports its measured wall duration, so a
+//!   served session streams real numerics while plan switches rebind the
+//!   workers live.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::api::core::Deployment;
+use crate::api::RuntimeError;
 use crate::device::{DeviceId, Fleet};
 use crate::model::Shape;
 use crate::pipeline::PipelineSpec;
+use crate::plan::task::TaskKind;
 use crate::runtime::{InferHandle, InferenceService, Manifest};
 
-use super::moderator::Deployment;
+use super::executor::{ChunkExecutor, TaskCtx};
 
 /// Deterministic synthetic sensor frame: one f32 per tensor *element*.
 ///
@@ -51,7 +62,103 @@ fn synth_inputs(apps: &[PipelineSpec], manifest: &Manifest, seed: u64) -> Result
         .collect()
 }
 
-/// Serving parameters.
+/// Streaming chunk execution through PJRT (see the module docs). Timing
+/// is measured wall time on this testbed; on-body *timing* claims still
+/// come from the device model, numerics from here.
+pub struct PjrtChunkExecutor {
+    /// The service thread owning the PJRT client; kept alive for the
+    /// executor's lifetime.
+    _service: InferenceService,
+    /// `InferHandle` wraps an mpsc sender (not `Sync`); the lock
+    /// serializes access, which the single-client service does anyway.
+    handle: Mutex<InferHandle>,
+    manifest: Manifest,
+    seed: u64,
+}
+
+impl PjrtChunkExecutor {
+    /// Start the inference service and wrap it for streaming execution.
+    pub fn new(manifest: Manifest, seed: u64) -> Result<PjrtChunkExecutor> {
+        let service = InferenceService::start()?;
+        let handle = Mutex::new(service.handle());
+        Ok(PjrtChunkExecutor {
+            _service: service,
+            handle,
+            manifest,
+            seed,
+        })
+    }
+
+    fn backend_err(&self, message: String) -> RuntimeError {
+        RuntimeError::Backend {
+            backend: "pjrt",
+            message,
+        }
+    }
+}
+
+impl ChunkExecutor for PjrtChunkExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(
+        &self,
+        ctx: &TaskCtx<'_>,
+        payload: &mut Option<Vec<f32>>,
+    ) -> Result<f64, RuntimeError> {
+        let t0 = Instant::now();
+        match ctx.task.kind {
+            TaskKind::Sense { .. } => {
+                let mm = self
+                    .manifest
+                    .model(&ctx.spec.name)
+                    .map_err(|e| self.backend_err(format!("{e:#}")))?;
+                let seed = self.seed ^ ((ctx.spec.id.0 as u64) << 32) ^ ctx.round as u64;
+                *payload = Some(synth_frame(mm.input, seed));
+            }
+            TaskKind::Infer { range } => {
+                let mm = self
+                    .manifest
+                    .model(&ctx.spec.name)
+                    .map_err(|e| self.backend_err(format!("{e:#}")))?;
+                let n = mm.layers.len();
+                let (file, in_shape) = if range.start == 0 && range.end == n {
+                    (mm.full.clone(), mm.input)
+                } else {
+                    let c = mm
+                        .chunk(range.start, range.end)
+                        .map_err(|e| self.backend_err(format!("{e:#}")))?;
+                    (c.file.clone(), c.in_shape)
+                };
+                let activation = payload
+                    .take()
+                    .ok_or_else(|| self.backend_err("inference reached before sensing".into()))?;
+                let out = self
+                    .handle
+                    .lock()
+                    .unwrap()
+                    .run(
+                        self.manifest.path(&file),
+                        activation,
+                        vec![in_shape.h, in_shape.w, in_shape.c],
+                    )
+                    .map_err(|e| self.backend_err(format!("{e:#}")))?;
+                *payload = Some(out);
+            }
+            // Memory ops, radio hops, and interaction are timing-only on
+            // this testbed; the activation just rides along.
+            TaskKind::Load { .. }
+            | TaskKind::Unload { .. }
+            | TaskKind::Tx { .. }
+            | TaskKind::Rx { .. }
+            | TaskKind::Interact { .. } => {}
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Serving parameters for the one-shot [`serve`] loop.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// Continuous-inference runs per pipeline.
@@ -120,10 +227,10 @@ struct Done {
     latency_s: f64,
 }
 
-/// Execute a deployment with real inference. `apps` must be the moderator's
-/// pipeline list; `manifest` must contain chunk artifacts for every split
-/// the plan uses (plan with `EnumerateCfg { max_split_devices: 2 }` for the
-/// models aot.py splits).
+/// Execute a deployment with real inference. `apps` must be the runtime's
+/// active pipeline list; `manifest` must contain chunk artifacts for every
+/// split the plan uses (plan with `EnumerateCfg { max_split_devices: 2 }`
+/// for the models aot.py splits).
 pub fn serve(
     deployment: &Deployment,
     apps: &[PipelineSpec],

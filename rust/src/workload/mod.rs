@@ -359,18 +359,61 @@ pub fn scenario_churn8() -> CannedScenario {
     CannedScenario { name: "churn8", fleet, scenario }
 }
 
+/// The bursty contextual-AI scenario: short-lived app bursts arriving and
+/// departing in waves on the eight-wearable fleet — two always-on apps,
+/// then a three-app burst (a context window opening), a quiet valley, a
+/// second two-app burst, and a wind-down. Every id is used once, so
+/// replays are deterministic; endpoints stay within d0..d6. Pair with
+/// bounded plan search ([`crate::orchestrator::Synergy::planner_bounded`]).
+pub fn scenario_bursty8() -> CannedScenario {
+    let fleet = fleet8();
+    let scenario = Scenario::new()
+        // Always-on base load.
+        .at(0.0)
+        .register(pipeline(0, ModelName::KWS, 0, 3))
+        .at(0.5)
+        .register(pipeline(1, ModelName::SimpleNet, 1, 2))
+        // Burst one: a context window opens, three apps pile on.
+        .at(2.0)
+        .register(pipeline(2, ModelName::ConvNet5, 4, 5))
+        .at(2.25)
+        .register(pipeline(3, ModelName::ResSimpleNet, 5, 6))
+        .at(2.5)
+        .register(pipeline(4, ModelName::WideNet, 2, 0))
+        // The burst drains almost as fast as it arrived.
+        .at(4.0)
+        .unregister(PipelineId(2))
+        .at(4.25)
+        .unregister(PipelineId(3))
+        .at(4.5)
+        .unregister(PipelineId(4))
+        // Burst two, different mix.
+        .at(6.0)
+        .register(pipeline(5, ModelName::ConvNet5, 6, 4))
+        .at(6.5)
+        .register(pipeline(6, ModelName::SimpleNet, 3, 1))
+        // Wind-down.
+        .at(8.0)
+        .unregister(PipelineId(5))
+        .at(8.5)
+        .unregister(PipelineId(6))
+        .until(10.0);
+    CannedScenario { name: "bursty8", fleet, scenario }
+}
+
 /// Look up a canned scenario by name (see [`canned_scenario_names`]).
 pub fn canned_scenario(name: &str) -> Option<CannedScenario> {
     match name {
         "jog" | "jog4" => Some(scenario_jog4()),
         "churn8" => Some(scenario_churn8()),
+        "bursty8" => Some(scenario_bursty8()),
         _ => None,
     }
 }
 
 /// Valid canned-scenario names (CLI help and error messages).
 pub fn canned_scenario_names() -> &'static str {
-    "jog, churn8"
+    "jog, churn8, bursty8"
 }
 
 #[cfg(test)]
@@ -494,7 +537,7 @@ mod tests {
 
     #[test]
     fn canned_scenarios_are_well_formed() {
-        for name in ["jog", "churn8"] {
+        for name in ["jog", "churn8", "bursty8"] {
             let c = canned_scenario(name).unwrap_or_else(|| panic!("missing {name}"));
             assert!(c.scenario.duration() > 0.0, "{name}");
             assert!(!c.scenario.events().is_empty(), "{name}");
@@ -505,6 +548,35 @@ mod tests {
         let jog = scenario_jog4();
         assert_eq!(jog.fleet.get(DeviceId(3)).name, "watch");
         assert!(jog.fleet.get(DeviceId(3)).has_sensor(SensorKind::Imu));
+    }
+
+    #[test]
+    fn bursty8_bursts_arrive_and_depart_in_waves() {
+        use crate::api::ScenarioAction;
+        let c = scenario_bursty8();
+        assert_eq!(c.fleet.len(), 8);
+        let evs = c.scenario.events().to_vec();
+        let registers = evs
+            .iter()
+            .filter(|e| matches!(e.action, ScenarioAction::Register { .. }))
+            .count();
+        let unregisters = evs
+            .iter()
+            .filter(|e| matches!(e.action, ScenarioAction::Unregister(_)))
+            .count();
+        assert_eq!(registers, 7);
+        assert_eq!(unregisters, 5, "both bursts fully drain");
+        // Ids are single-use, so replays never alias apps.
+        let mut ids: Vec<usize> = evs
+            .iter()
+            .filter_map(|e| match &e.action {
+                ScenarioAction::Register { spec, .. } => Some(spec.id.0),
+                _ => None,
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), registers);
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Streaming-serving integration: virtual-time serving parity with the
+//! discrete-event simulator, conservation across live plan switches,
+//! scripted fleet reshapes, and long-session memory bounds.
+
+use std::collections::BTreeMap;
+
+use synergy::api::{RuntimeError, Scenario, SessionCfg, SessionReport, SynergyRuntime};
+use synergy::device::DeviceId;
+use synergy::model::zoo::ModelName;
+use synergy::orchestrator::Synergy;
+use synergy::pipeline::PipelineId;
+use synergy::serving::ServeCfg;
+use synergy::workload::{fleet12_hetero, fleet4, fleet_n, pipeline, scenario_bursty8, workload};
+
+/// Per-app round totals across a report's intervals.
+fn per_app_totals(report: &SessionReport) -> BTreeMap<PipelineId, usize> {
+    let mut totals = BTreeMap::new();
+    for iv in &report.intervals {
+        for app in &iv.per_app {
+            *totals.entry(app.app).or_insert(0) += app.completions;
+        }
+    }
+    totals
+}
+
+/// The acceptance scenario: the same churn script on the DES and on the
+/// virtual-time streaming engine lands within 10% per app, and the
+/// mid-stream plan switch drops no in-flight round.
+#[test]
+fn served_session_tracks_des_session_within_tolerance() {
+    let scenario = || Scenario::new().at(3.0).device_left(4).until(8.0);
+    let cfg = SessionCfg { seed: 7, ..SessionCfg::default() };
+
+    let des = {
+        let runtime = SynergyRuntime::new(fleet_n(5));
+        for spec in workload(1).unwrap().pipelines {
+            runtime.register(spec).unwrap();
+        }
+        runtime
+            .session_with(scenario(), cfg)
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+    let served = {
+        let runtime = SynergyRuntime::new(fleet_n(5));
+        for spec in workload(1).unwrap().pipelines {
+            runtime.register(spec).unwrap();
+        }
+        runtime
+            .session_with(scenario(), cfg)
+            .unwrap()
+            .serve(ServeCfg::default())
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+
+    // Same switch timeline shape.
+    assert_eq!(des.switches.len(), 1);
+    assert_eq!(served.switches.len(), 1);
+    assert_eq!(served.switches[0].cause, "device-left(d4)");
+    assert!(served.switches[0].incremental, "{:?}", served.switches[0]);
+
+    // Conservation: the live rebind dropped nothing.
+    let summary = served.served.expect("served summary");
+    assert_eq!(
+        summary.admitted_rounds, summary.completed_rounds,
+        "plan switch dropped in-flight rounds: {summary:?}"
+    );
+    assert!(summary.rebinds >= 2, "initial bind + switch: {summary:?}");
+    assert!(summary.workers > 0);
+
+    // Whole-session throughput within 10% of the DES.
+    assert!(des.completions > 0 && served.completions > 0);
+    let tput_gap = (served.throughput - des.throughput).abs() / des.throughput;
+    assert!(
+        tput_gap < 0.10,
+        "served {} vs DES {} inf/s (gap {tput_gap:.3})",
+        served.throughput,
+        des.throughput
+    );
+
+    // Per-app round counts within 10% (± the in-flight window straddling
+    // the horizon boundaries).
+    let des_totals = per_app_totals(&des);
+    let served_totals = per_app_totals(&served);
+    assert_eq!(des_totals.len(), 3);
+    for (app, &d) in &des_totals {
+        let s = served_totals.get(app).copied().unwrap_or(0);
+        let diff = d.abs_diff(s);
+        let rel = diff as f64 / d.max(1) as f64;
+        assert!(
+            rel <= 0.10 || diff <= 2,
+            "{app}: served {s} vs DES {d} rounds (rel {rel:.3})"
+        );
+    }
+
+    // Serving has no power model; the DES does.
+    assert_eq!(served.energy_j, 0.0);
+    assert!(des.energy_j > 0.0);
+}
+
+/// The bursty canned scenario end to end on the streaming engine: five
+/// bursts of registrations/unregistrations, every switch a live rebind,
+/// nothing dropped (bounded plan search — eight-device fleet).
+#[test]
+fn served_bursty8_conserves_rounds_across_every_switch() {
+    let canned = scenario_bursty8();
+    let runtime = SynergyRuntime::builder()
+        .fleet(canned.fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    let report = runtime
+        .session_with(canned.scenario, SessionCfg { seed: 11, ..SessionCfg::default() })
+        .unwrap()
+        .serve(ServeCfg::default())
+        .unwrap()
+        .finish()
+        .unwrap();
+    // 12 scripted events → 12 plan switches on one continuous timeline.
+    assert_eq!(report.switches.len(), 12, "{:?}", report.switches);
+    let summary = report.served.expect("served summary");
+    assert_eq!(
+        summary.admitted_rounds, summary.completed_rounds,
+        "bursty churn dropped rounds: {summary:?}"
+    );
+    assert!(report.completions > 0);
+    // The burst apps complete rounds while registered…
+    let totals = per_app_totals(&report);
+    for burst_app in [2, 3, 4, 5, 6] {
+        assert!(
+            totals.get(&PipelineId(burst_app)).copied().unwrap_or(0) > 0,
+            "burst app p{burst_app} never completed a round: {totals:?}"
+        );
+    }
+    // …and the first burst (gone since t≈4.5, drain included) contributes
+    // nothing to the final interval.
+    let last = report.intervals.last().unwrap();
+    assert!(
+        last.per_app
+            .iter()
+            .all(|a| ![PipelineId(2), PipelineId(3), PipelineId(4)].contains(&a.app)),
+        "first-burst apps must be fully drained by the end: {last:?}"
+    );
+}
+
+/// Satellite: `ScenarioAction::SetFleet` reshapes the fleet arbitrarily
+/// mid-run — growth to the twelve-device heterogeneous fleet replans
+/// (cache invalidated) without panicking, and a later shrink back works
+/// in the same timeline.
+#[test]
+fn scripted_set_fleet_reshape_replans_without_panicking() {
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet4())
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    runtime
+        .register(pipeline(1, ModelName::SimpleNet, 1, 2))
+        .unwrap();
+    let scenario = Scenario::new()
+        .at(2.0)
+        .set_fleet(fleet12_hetero())
+        .at(4.0)
+        .set_fleet(fleet4())
+        .until(6.0);
+    let report = runtime.session(scenario).unwrap().finish().unwrap();
+    assert_eq!(report.switches.len(), 2, "{:?}", report.switches);
+    assert_eq!(report.switches[0].cause, "set-fleet(12)");
+    assert_eq!(report.switches[1].cause, "set-fleet(4)");
+    // A reshape is not a suffix shrink: the plan cache must re-enumerate.
+    assert!(!report.switches[0].incremental, "{:?}", report.switches[0]);
+    assert!(report.switches.iter().all(|s| s.apps == 2));
+    // Rounds complete in all three intervals and the fleet ends reshaped.
+    assert_eq!(report.intervals.len(), 3);
+    assert!(report.intervals.iter().all(|iv| iv.completions > 0));
+    assert_eq!(runtime.fleet().len(), 4);
+}
+
+/// Satellite: `SessionCfg::trace_window` bounds the memory proxy (retained
+/// record count) in long sessions while totals keep counting.
+#[test]
+fn trace_window_bounds_long_session_records() {
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    let cfg = SessionCfg {
+        seed: 5,
+        record_trace: true,
+        trace_window: Some(25),
+        ..SessionCfg::default()
+    };
+    let report = runtime
+        .session_with(Scenario::new().until(60.0), cfg)
+        .unwrap()
+        .finish()
+        .unwrap();
+    assert!(
+        report.completions > 25,
+        "session too short to exercise the window: {}",
+        report.completions
+    );
+    let retained: usize = report.intervals.iter().map(|iv| iv.completions).sum();
+    assert!(
+        retained <= 25,
+        "ring window must bound retained records, got {retained}"
+    );
+    let trace = report.trace.expect("record_trace");
+    assert!(
+        trace.spans.len() <= 25,
+        "trace spans ride the same window, got {}",
+        trace.spans.len()
+    );
+}
+
+/// Battery ramps integrate the DES energy model; the streaming engine has
+/// none, so serving such a scenario is a typed error, not a silent no-op.
+#[test]
+fn serve_session_rejects_battery_scenarios() {
+    let runtime = SynergyRuntime::new(fleet4());
+    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    let session = runtime
+        .session(Scenario::new().battery(DeviceId(3), 5.0).until(2.0))
+        .unwrap();
+    let err = session.serve(ServeCfg::default()).unwrap_err();
+    assert!(
+        matches!(err, RuntimeError::InvalidScenario(_)),
+        "{err:?}"
+    );
+}
+
+/// A served session can be driven in segments and injected into, exactly
+/// like a DES session; the rebind pause is measured on every switch.
+#[test]
+fn served_session_supports_segmented_driving_and_inject() {
+    use synergy::api::ScenarioAction;
+    let runtime = SynergyRuntime::new(fleet_n(5));
+    for spec in workload(1).unwrap().pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let mut session = runtime
+        .session(Scenario::new().until(6.0))
+        .unwrap()
+        .serve(ServeCfg::default())
+        .unwrap();
+    session.run_until(2.5).unwrap();
+    assert_eq!(session.now(), 2.5);
+    session
+        .inject(ScenarioAction::DeviceLeft(DeviceId(4)))
+        .unwrap();
+    assert_eq!(session.switches().len(), 1);
+    assert_eq!(session.switches()[0].t, 2.5);
+    assert!(session.switches()[0].rebind_wall_s >= 0.0);
+    let report = session.finish().unwrap();
+    assert_eq!(report.intervals.len(), 2);
+    assert!(report.intervals.iter().all(|iv| iv.completions > 0));
+    let summary = report.served.unwrap();
+    assert_eq!(summary.admitted_rounds, summary.completed_rounds);
+    assert_eq!(runtime.fleet().len(), 4);
+}

@@ -159,6 +159,45 @@ fn deterministic_session_replay() {
     }
 }
 
+/// Satellite: the bursty canned scenario (app bursts arriving and
+/// departing in waves on the eight-device fleet, bounded plan search)
+/// replays deterministically — identical switch timeline and time-series
+/// numbers, wall-clock fields aside.
+#[test]
+fn deterministic_bursty8_replay() {
+    let run = || {
+        let canned = synergy::workload::scenario_bursty8();
+        let runtime = SynergyRuntime::builder()
+            .fleet(canned.fleet)
+            .planner(Synergy::planner_bounded(8))
+            .build();
+        runtime
+            .session_with(canned.scenario, SessionCfg { seed: 13, ..SessionCfg::default() })
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.completions, b.completions);
+    assert_eq!(a.throughput, b.throughput);
+    assert_eq!(a.energy_j, b.energy_j);
+    assert_eq!(a.switches.len(), 12);
+    assert_eq!(a.switches.len(), b.switches.len());
+    for (x, y) in a.switches.iter().zip(&b.switches) {
+        assert_eq!(x.t, y.t);
+        assert_eq!(x.cause, y.cause);
+        assert_eq!(x.apps, y.apps);
+        assert_eq!(x.est_throughput, y.est_throughput);
+    }
+    assert_eq!(a.intervals.len(), b.intervals.len());
+    for (x, y) in a.intervals.iter().zip(&b.intervals) {
+        assert_eq!(x.completions, y.completions);
+        assert_eq!(x.avg_latency_s, y.avg_latency_s);
+        assert_eq!(x.power_w, y.power_w);
+    }
+}
+
 /// The canned jog scenario exercises register/unregister/leave/join on
 /// one continuous timeline and stays sound end to end.
 #[test]
