@@ -1,0 +1,110 @@
+//! Power-subsystem benchmarks: event-driven battery accounting must ride
+//! along with the DES essentially for free.
+//!
+//! The old battery model stepped the engine at a poll granularity, so
+//! arming a battery made every session segment more expensive. The
+//! event-driven `power::BatteryManager` only does closed-form rate math
+//! at timeline events — the gate asserts a battery-armed session stays
+//! within 5% of the identical battery-free session (plus a small
+//! absolute epsilon so the gate measures overhead, not timer noise).
+//!
+//! Also reported (ungated): the full `cascade8` battery-driven departure
+//! cascade on both engines.
+
+mod bench_harness;
+
+use bench_harness::{fmt_duration, report, time_once};
+use synergy::api::{Scenario, SessionCfg, SynergyRuntime};
+use synergy::device::DeviceId;
+use synergy::orchestrator::Synergy;
+use synergy::serving::ServeCfg;
+use synergy::workload::{fleet4, scenario_cascade8, workload};
+
+fn session_wall(with_batteries: bool) -> f64 {
+    let w = workload(1).unwrap();
+    let runtime = SynergyRuntime::new(fleet4());
+    for spec in w.pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let mut scenario = Scenario::new().until(40.0);
+    if with_batteries {
+        // Armed on every device, never depleting: measures pure battery
+        // bookkeeping, not depletion churn.
+        for d in 0..4 {
+            scenario = scenario.battery(DeviceId(d), 1e9);
+        }
+    }
+    let session = runtime
+        .session_with(scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+        .unwrap();
+    // `time_once` takes an `FnMut`; the one-shot consume rides an Option.
+    let mut session = Some(session);
+    time_once(&mut || session.take().expect("timed once").finish().unwrap().completions)
+}
+
+fn main() {
+    let iters = 9;
+
+    let mut plain: Vec<f64> = (0..iters).map(|_| session_wall(false)).collect();
+    let plain_median = report("power/session-40s/no-batteries", &mut plain);
+
+    let mut armed: Vec<f64> = (0..iters).map(|_| session_wall(true)).collect();
+    let armed_median = report("power/session-40s/4-armed-batteries", &mut armed);
+
+    // --- Cascade (ungated, informational) ------------------------------
+    let mut cascade = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        cascade.push(time_once(&mut || {
+            let canned = scenario_cascade8();
+            let runtime = SynergyRuntime::builder()
+                .fleet(canned.fleet)
+                .planner(Synergy::planner_bounded(8))
+                .build();
+            let report = runtime
+                .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+                .unwrap()
+                .finish()
+                .unwrap();
+            assert!(report.completions > 0);
+            report.completions
+        }));
+    }
+    report("power/cascade8/sim", &mut cascade);
+
+    let mut cascade_serve = Vec::with_capacity(iters.min(5));
+    for _ in 0..iters.min(5) {
+        cascade_serve.push(time_once(&mut || {
+            let canned = scenario_cascade8();
+            let runtime = SynergyRuntime::builder()
+                .fleet(canned.fleet)
+                .planner(Synergy::planner_bounded(8))
+                .build();
+            let report = runtime
+                .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+                .unwrap()
+                .serve(ServeCfg::default())
+                .unwrap()
+                .finish()
+                .unwrap();
+            assert!(report.completions > 0);
+            report.completions
+        }));
+    }
+    report("power/cascade8/serve", &mut cascade_serve);
+
+    // --- Verdict --------------------------------------------------------
+    let overhead = armed_median / plain_median.max(1e-12) - 1.0;
+    println!(
+        "power/battery-overhead: {:+.2}% (armed {} vs plain {})",
+        overhead * 100.0,
+        fmt_duration(armed_median),
+        fmt_duration(plain_median)
+    );
+    assert!(
+        armed_median <= plain_median * 1.05 + 0.002,
+        "event-driven batteries must add <5% DES overhead: armed {} vs plain {}",
+        fmt_duration(armed_median),
+        fmt_duration(plain_median)
+    );
+    println!("OK: event-driven battery accounting is effectively free");
+}

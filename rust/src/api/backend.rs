@@ -66,10 +66,11 @@ pub struct RunReport {
     pub throughput: f64,
     /// Mean end-to-end latency, seconds.
     pub avg_latency_s: f64,
-    /// Mean power draw, watts (simulator only — a server CPU cannot
-    /// impersonate a MAX78000's power rails).
+    /// Mean power draw, watts (simulator and virtual-time serving — both
+    /// integrate the modeled device power rails; `None` on PJRT, where a
+    /// server CPU cannot impersonate a MAX78000).
     pub power_w: Option<f64>,
-    /// Total energy, joules (simulator only).
+    /// Total energy, joules (same availability as [`Self::power_w`]).
     pub energy_j: Option<f64>,
     /// Real elapsed wall-clock seconds (PJRT only).
     pub wall_s: Option<f64>,

@@ -65,3 +65,7 @@ pub use self::session::{
 // Capability vocabulary under the names the app interface reads best with:
 // `.source(Sensor::Microphone)`, `.target(Interaction::Haptic)`.
 pub use crate::device::{InteractionKind as Interaction, SensorKind as Sensor};
+
+// Battery model config for `Scenario::battery_with` (the full subsystem
+// lives in [`crate::power`]).
+pub use crate::power::BatteryCfg;

@@ -133,7 +133,7 @@ impl SynergyRuntime {
     }
 
     /// Like [`Self::session`], with explicit session configuration
-    /// (seed, trace recording, battery-poll granularity).
+    /// (seed, trace recording, trace window).
     pub fn session_with(
         &self,
         scenario: Scenario,

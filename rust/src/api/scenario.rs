@@ -23,6 +23,7 @@
 
 use crate::device::{Device, DeviceId, Fleet};
 use crate::pipeline::{PipelineId, PipelineSpec};
+use crate::power::BatteryCfg;
 
 use super::error::RuntimeError;
 use super::qos::Qos;
@@ -50,6 +51,11 @@ pub enum ScenarioAction {
     Resume(PipelineId),
     /// Update an app's QoS hints.
     SetQos { app: PipelineId, qos: Qos },
+    /// Top up a declared battery by `joules` (clamped at its capacity) —
+    /// the user docking a wearable mid-run. A no-op for devices without a
+    /// declared battery; never replans, but moves the scheduled depletion
+    /// instant.
+    Recharge { device: DeviceId, joules: f64 },
 }
 
 impl ScenarioAction {
@@ -67,6 +73,7 @@ impl ScenarioAction {
             ScenarioAction::Pause(id) => format!("pause({id})"),
             ScenarioAction::Resume(id) => format!("resume({id})"),
             ScenarioAction::SetQos { app, .. } => format!("qos({app})"),
+            ScenarioAction::Recharge { device, .. } => format!("recharge({device})"),
         }
     }
 }
@@ -85,10 +92,10 @@ pub struct Scenario {
     events: Vec<TimedAction>,
     /// Explicit session end; defaults to the last event time.
     until: Option<f64>,
-    /// Battery capacities: the device departs when its simulated energy
-    /// use crosses the capacity (checked at the session's battery-poll
-    /// granularity).
-    batteries: Vec<(DeviceId, f64)>,
+    /// Battery declarations: (device, capacity in joules, model config).
+    /// The device departs at the exact instant its modeled drain exhausts
+    /// the capacity (event-driven — see [`crate::power::BatteryManager`]).
+    batteries: Vec<(DeviceId, f64, BatteryCfg)>,
 }
 
 impl Scenario {
@@ -108,16 +115,24 @@ impl Scenario {
         self
     }
 
-    /// Declare a battery for `device`: once its simulated energy use
-    /// (base draw + active draws) crosses `capacity_j` joules, the device
-    /// leaves the body. The drain ramp is the DES's own energy
-    /// integration, so busier plans deplete faster. Device ids are dense,
-    /// so depletion fires only while the device is the fleet's highest id
-    /// — a depleted non-suffix device defers until scripted departures
-    /// free the suffix (and a device that leaves by script takes its
-    /// battery with it).
-    pub fn battery(mut self, device: DeviceId, capacity_j: f64) -> Scenario {
-        self.batteries.push((device, capacity_j));
+    /// Declare a battery for `device`: once the plan's modeled per-device
+    /// drain (base draw + the deployed plan's active draws, see
+    /// [`crate::power::plan_device_draw`]) exhausts `capacity_j` joules,
+    /// the device leaves the body — at an *exact*, event-driven instant,
+    /// recomputed at every plan switch, so busier plans deplete sooner
+    /// and depletion timing is identical on the simulator and the
+    /// serving engine. Device ids are dense, so depletion fires only
+    /// while the device is the fleet's highest id — a depleted non-suffix
+    /// device defers until scripted departures free the suffix (and a
+    /// device that leaves by script takes its battery with it).
+    pub fn battery(self, device: DeviceId, capacity_j: f64) -> Scenario {
+        self.battery_with(device, capacity_j, BatteryCfg::default())
+    }
+
+    /// [`Self::battery`] with an explicit battery model — e.g. a Peukert
+    /// exponent above 1 for load-dependent capacity derating.
+    pub fn battery_with(mut self, device: DeviceId, capacity_j: f64, cfg: BatteryCfg) -> Scenario {
+        self.batteries.push((device, capacity_j, cfg));
         self
     }
 
@@ -126,8 +141,8 @@ impl Scenario {
         &self.events
     }
 
-    /// Declared battery capacities.
-    pub fn batteries(&self) -> &[(DeviceId, f64)] {
+    /// Declared batteries: (device, capacity in joules, model config).
+    pub fn batteries(&self) -> &[(DeviceId, f64, BatteryCfg)] {
         &self.batteries
     }
 
@@ -157,11 +172,31 @@ impl Scenario {
                 )));
             }
         }
-        for &(d, cap) in &self.batteries {
+        for (i, &(d, cap, cfg)) in self.batteries.iter().enumerate() {
             if !cap.is_finite() || cap <= 0.0 {
                 return Err(RuntimeError::InvalidScenario(format!(
                     "battery capacity for {d} must be a positive joule amount, got {cap}"
                 )));
+            }
+            if !cfg.peukert.is_finite() || cfg.peukert < 1.0 {
+                return Err(RuntimeError::InvalidScenario(format!(
+                    "battery Peukert exponent for {d} must be finite and ≥ 1, got {}",
+                    cfg.peukert
+                )));
+            }
+            if self.batteries[..i].iter().any(|&(prev, _, _)| prev == d) {
+                return Err(RuntimeError::InvalidScenario(format!(
+                    "duplicate battery declared for {d} — one battery per device"
+                )));
+            }
+        }
+        for ev in &self.events {
+            if let ScenarioAction::Recharge { device, joules } = &ev.action {
+                if !joules.is_finite() || *joules <= 0.0 {
+                    return Err(RuntimeError::InvalidScenario(format!(
+                        "recharge for {device} must add a positive joule amount, got {joules}"
+                    )));
+                }
             }
         }
         let dur = self.duration();
@@ -240,6 +275,13 @@ impl ScenarioAt {
         self.scenario
             .push(self.t, ScenarioAction::SetQos { app, qos })
     }
+
+    /// Top up a declared battery by `joules` (clamped at capacity).
+    pub fn recharge(self, device: impl Into<DeviceId>, joules: f64) -> Scenario {
+        let device = device.into();
+        self.scenario
+            .push(self.t, ScenarioAction::Recharge { device, joules })
+    }
 }
 
 #[cfg(test)]
@@ -285,6 +327,32 @@ mod tests {
         assert!(s.validate().is_err());
         let s = Scenario::new(); // no events, no horizon
         assert!(s.validate().is_err());
+        // Sub-ideal Peukert exponents and non-positive recharges are typos.
+        let s = Scenario::new()
+            .battery_with(DeviceId(0), 1.0, BatteryCfg { peukert: 0.5 })
+            .until(5.0);
+        assert!(s.validate().is_err());
+        let s = Scenario::new().at(1.0).recharge(0, -2.0).until(5.0);
+        assert!(s.validate().is_err());
+        // Two batteries on one device would silently race — rejected.
+        let s = Scenario::new()
+            .battery(DeviceId(2), 10.0)
+            .battery(DeviceId(2), 1.0)
+            .until(5.0);
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn recharge_scripts_a_deterministic_label() {
+        let s = Scenario::new()
+            .battery(DeviceId(2), 1.5)
+            .at(3.0)
+            .recharge(2, 1.0)
+            .until(6.0);
+        s.validate().unwrap();
+        assert_eq!(s.events()[0].action.describe(), "recharge(d2)");
+        assert_eq!(s.batteries().len(), 1);
+        assert_eq!(s.batteries()[0].2, BatteryCfg::default());
     }
 
     #[test]

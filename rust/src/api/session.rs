@@ -6,8 +6,8 @@
 //! runtime core (the same registry/fleet/deployment the
 //! [`super::SynergyRuntime`] handles see), replans incrementally using the
 //! cached per-app enumerations, and swaps the new plan into the engine —
-//! *inside* the timeline, carrying the clock, in-flight work, and (on the
-//! simulator) energy accounting across the switch. The one-shot
+//! *inside* the timeline, carrying the clock, in-flight work, and energy
+//! accounting across the switch. The one-shot
 //! [`super::SynergyRuntime::run`] is the degenerate case: one plan, no
 //! events.
 //!
@@ -17,8 +17,8 @@
 //!   ([`crate::scheduler::SimEngine`]) — the default; and
 //! - the multi-threaded streaming engine
 //!   ([`crate::serving::ServeEngine`]) via [`Session::serve`] — real
-//!   worker threads, bounded queues, per-app sensor tickers, and live
-//!   plan rebinding with a measured switch pause. On the virtual-time
+//!   worker threads, deterministic per-unit merges, and live plan
+//!   rebinding with a measured switch pause. On the virtual-time
 //!   executor its per-app throughput tracks the simulator within a few
 //!   percent on the same plans, which is what makes the two paths
 //!   directly comparable.
@@ -32,13 +32,27 @@
 //! let report = session.finish()?;          // time-series report
 //! ```
 //!
-//! Reports are time series either way: one [`Interval`] per inter-event
-//! segment with per-app throughput/latency (and power, on the simulator),
-//! a [`PlanSwitch`] timeline with measured replan latencies (plus worker
-//! rebind pauses when serving), and [`QosSpan`]s marking when an app's
-//! deployed estimate violated its hints. Replayed scenarios are
-//! deterministic on the simulator: everything except the wall-clock
-//! `replan_wall_s`/`rebind_wall_s` fields compares equal.
+//! **Energy and batteries** ride the shared [`crate::power`] subsystem on
+//! *both* engines: the simulator integrates as it executes; the streaming
+//! engine replays its workers' busy spans at finish — so served sessions
+//! report real `power_w`/`energy_j`, and sim-vs-serve energy agrees on
+//! identical plans. Battery ramps ([`super::Scenario::battery`]) are
+//! *event-driven*: each battery drains at the deployed plan's modeled
+//! per-device draw, the exact depletion instant is scheduled as a
+//! timeline event (recomputed at every switch, churn, or
+//! [`super::ScenarioAction::Recharge`]), and depletion triggers a
+//! `battery-depleted(dN)` plan switch — with instants independent of any
+//! poll granularity and identical across the two engines.
+//!
+//! Reports are time series: one [`Interval`] per inter-event segment with
+//! per-app throughput/latency and power, a [`PlanSwitch`] timeline with
+//! measured replan latencies (plus worker rebind pauses when serving),
+//! and [`QosSpan`]s marking when an app's deployed estimate violated its
+//! hints. Interval statistics aggregate *streamingly* as rounds complete,
+//! so [`SessionCfg::trace_window`] bounds retained memory without
+//! corrupting intervals older than the window. Replayed scenarios are
+//! deterministic on both engines: everything except the wall-clock
+//! `replan_wall_s`/`rebind_wall_s` compares equal.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -47,6 +61,7 @@ use std::time::Instant;
 use crate::device::{DeviceId, Fleet};
 use crate::pipeline::{PipelineId, PipelineSpec};
 use crate::plan::CollabPlan;
+use crate::power::{plan_device_draw, BatteryManager, EnergyReplay};
 use crate::scheduler::{GroundTruth, RoundRecord, SimEngine, Trace};
 use crate::serving::{ChunkExecutor, ServeCfg, ServeEngine, VirtualExecutor};
 
@@ -63,14 +78,11 @@ pub struct SessionCfg {
     pub seed: u64,
     /// Record a full task trace into the report (simulator sessions).
     pub record_trace: bool,
-    /// Battery-drain check granularity, seconds of simulated time. Only
-    /// consulted when the scenario declares batteries.
-    pub battery_poll_s: f64,
-    /// Ring window over retained round records (and trace spans): keep
-    /// only the most recent `n`, so hour-scale sessions stay bounded in
-    /// memory. Totals ([`SessionReport::completions`]) keep counting
-    /// evicted rounds; intervals report only what the window retains.
-    /// `None` (default) retains everything.
+    /// Ring window over retained trace spans: keep only the most recent
+    /// `n`, so hour-scale traced sessions stay bounded in memory.
+    /// Interval statistics aggregate streamingly and are *not* affected
+    /// by the window; totals ([`SessionReport::completions`]) keep
+    /// counting too. `None` (default) retains everything.
     pub trace_window: Option<usize>,
 }
 
@@ -79,7 +91,6 @@ impl Default for SessionCfg {
         SessionCfg {
             seed: 42,
             record_trace: false,
-            battery_poll_s: 0.25,
             trace_window: None,
         }
     }
@@ -151,8 +162,9 @@ pub struct Interval {
     /// Mean end-to-end latency over the interval's rounds, seconds
     /// (0 when nothing completed).
     pub avg_latency_s: f64,
-    /// Mean power draw over the interval, watts (0 when serving — a
-    /// thread pool has no power rails).
+    /// Mean power draw over the interval, watts — on both engines (the
+    /// streaming engine integrates its workers' busy spans through the
+    /// same accountant the DES uses).
     pub power_w: f64,
     pub per_app: Vec<AppInterval>,
 }
@@ -184,9 +196,10 @@ pub struct SessionReport {
     pub completions: usize,
     /// Whole-session throughput, inf/s.
     pub throughput: f64,
-    /// Total energy over the horizon, joules (0 when serving).
+    /// Total energy over the horizon, joules (simulated and served
+    /// sessions alike).
     pub energy_j: f64,
-    /// Mean power over the horizon, watts (0 when serving).
+    /// Mean power over the horizon, watts.
     pub power_w: f64,
     /// Per-segment time series (one entry per inter-event interval).
     pub intervals: Vec<Interval>,
@@ -213,6 +226,36 @@ struct CoreSnapshot {
     /// deployment without orchestrating (pausing/unregistering the last
     /// app), where `core.last_replan()` would be a stale earlier replan.
     replan: Option<ReplanStats>,
+}
+
+/// Running aggregates of one report interval (streaming — rounds are
+/// folded in as they complete, so retention windows never corrupt them).
+#[derive(Clone, Debug, Default)]
+struct IntervalScratch {
+    completions: usize,
+    lat_sum: f64,
+    per_app: BTreeMap<PipelineId, (usize, f64)>,
+}
+
+impl IntervalScratch {
+    fn add(&mut self, rec: &RoundRecord) {
+        let lat = rec.end - rec.start;
+        self.completions += 1;
+        self.lat_sum += lat;
+        let e = self.per_app.entry(rec.pipeline).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += lat;
+    }
+
+    fn merge(&mut self, other: IntervalScratch) {
+        self.completions += other.completions;
+        self.lat_sum += other.lat_sum;
+        for (app, (c, lat)) in other.per_app {
+            let e = self.per_app.entry(app).or_insert((0, 0.0));
+            e.0 += c;
+            e.1 += lat;
+        }
+    }
 }
 
 /// The engine a session drives: the resumable DES, or the streaming
@@ -258,32 +301,14 @@ impl SessionEngine {
         }
     }
 
-    /// Total energy at `horizon` (0 when serving: no power model).
-    fn energy_total_j(&self, horizon: f64) -> f64 {
+    /// Live total energy at `horizon`. The streaming engine integrates
+    /// post-hoc (busy spans drain asynchronously), so its mid-run probe
+    /// is a placeholder; the session recomputes served energy marks at
+    /// finish.
+    fn energy_probe_j(&self, horizon: f64) -> f64 {
         match self {
             SessionEngine::Sim(e) => e.energy_total_j(horizon),
             SessionEngine::Serve(_) => 0.0,
-        }
-    }
-
-    fn device_energy_j(&self, device: DeviceId, horizon: f64) -> f64 {
-        match self {
-            SessionEngine::Sim(e) => e.device_energy_j(device, horizon),
-            SessionEngine::Serve(_) => 0.0,
-        }
-    }
-
-    fn device_departed(&self, device: DeviceId) -> bool {
-        match self {
-            SessionEngine::Sim(e) => e.device_departed(device),
-            SessionEngine::Serve(_) => false,
-        }
-    }
-
-    fn fleet_len(&self) -> usize {
-        match self {
-            SessionEngine::Sim(e) => e.fleet().len(),
-            SessionEngine::Serve(_) => 0,
         }
     }
 
@@ -313,13 +338,29 @@ pub struct Session {
     duration: f64,
     seed: u64,
     trace_window: Option<usize>,
-    /// Remaining (not yet depleted) batteries.
-    batteries: Vec<(DeviceId, f64)>,
-    poll: f64,
-    /// Interval boundaries, ascending, starting at 0.0.
-    boundaries: Vec<f64>,
-    /// Cumulative energy at each boundary.
+    /// The event-driven battery timeline (empty manager when the scenario
+    /// declares none).
+    batteries: BatteryManager,
+    /// Current fleet size (dense ids) — battery suffix eligibility.
+    fleet_len: usize,
+    /// Interval boundaries, ascending, starting at 0.0. While running,
+    /// `scratch` has one more entry than closed boundaries: the open
+    /// interval.
+    bounds: Vec<f64>,
+    /// Cumulative energy at each boundary (simulator sessions; served
+    /// sessions rebuild the marks at finish from the busy-span replay).
     energy_marks: Vec<f64>,
+    /// Streaming per-interval aggregates; `scratch[i]` covers
+    /// `bounds[i]..bounds[i+1]`.
+    scratch: Vec<IntervalScratch>,
+    /// Rounds that completed exactly at the latest drain horizon
+    /// (`carry_t`). If that instant becomes an interval boundary they
+    /// belong to the interval that *starts* there (the DES's half-open
+    /// interval rule, matching the serve path's assignment); if the
+    /// timeline moves past it first, they were interior after all and
+    /// fold into the open interval.
+    carry: Vec<RoundRecord>,
+    carry_t: f64,
     switches: Vec<PlanSwitch>,
     open_qos: BTreeMap<PipelineId, (QosViolation, f64)>,
     qos_spans: Vec<QosSpan>,
@@ -338,14 +379,17 @@ impl Session {
         scenario.validate()?;
         let duration = scenario.duration();
         let queue: VecDeque<TimedAction> = scenario.sorted_events().into();
-        let batteries = scenario.batteries().to_vec();
+        let declared = scenario.batteries().to_vec();
 
         // A battery for a device that never exists would silently never
-        // deplete (its energy reads 0) — reject the typo up front.
+        // deplete — reject the typo up front.
         let fleet_len = shared.lock().unwrap().core.fleet().len();
-        for &(d, _) in &batteries {
-            let joins_later = scenario.events().iter().any(|e| {
-                matches!(&e.action, ScenarioAction::DeviceJoined(dev) if dev.id == d)
+        for &(d, _, _) in &declared {
+            let joins_later = scenario.events().iter().any(|e| match &e.action {
+                ScenarioAction::DeviceJoined(dev) => dev.id == d,
+                // A scripted reshape that grows past the id also arms it.
+                ScenarioAction::SetFleet(f) => d.0 < f.len(),
+                _ => false,
             });
             if d.0 >= fleet_len && !joins_later {
                 return Err(RuntimeError::InvalidScenario(format!(
@@ -355,7 +399,7 @@ impl Session {
             }
         }
 
-        let (engine, names, active, qos, est) = {
+        let (engine, names, active, qos, est, plan, fleet) = {
             let guard = shared.lock().unwrap();
             let core = &guard.core;
             let policy = guard.planner.exec_policy();
@@ -365,11 +409,13 @@ impl Session {
                 policy,
                 cfg.record_trace,
             );
-            engine.set_record_cap(cfg.trace_window);
+            engine.set_span_cap(cfg.trace_window);
             let mut est = None;
+            let mut plan = None;
             if let Some(dep) = core.deployment() {
                 engine.set_plan(&dep.plan, core.active_apps(), None);
                 est = Some((dep.estimate.throughput, dep.estimate.chain_latency.clone()));
+                plan = Some(dep.plan.clone());
             }
             let names: BTreeMap<PipelineId, String> = core
                 .active_apps()
@@ -382,8 +428,18 @@ impl Session {
                 core.active_apps().to_vec(),
                 core.active_qos(),
                 est,
+                plan,
+                core.fleet().clone(),
             )
         };
+
+        let mut batteries = BatteryManager::new(&declared);
+        batteries.sync_presence(fleet.len());
+        let draws = plan_device_draw(plan.as_ref(), &active, &fleet);
+        batteries.set_loads(
+            |d| draws.get(d.0).copied().unwrap_or(0.0),
+            |d| fleet.devices.get(d.0).map_or(0.0, |dev| dev.spec.power.base_w),
+        );
 
         let mut session = Session {
             shared,
@@ -393,9 +449,12 @@ impl Session {
             seed: cfg.seed,
             trace_window: cfg.trace_window,
             batteries,
-            poll: cfg.battery_poll_s.max(1e-3),
-            boundaries: vec![0.0],
+            fleet_len: fleet.len(),
+            bounds: vec![0.0],
             energy_marks: vec![0.0],
+            scratch: vec![IntervalScratch::default()],
+            carry: Vec::new(),
+            carry_t: 0.0,
             switches: Vec::new(),
             open_qos: BTreeMap::new(),
             qos_spans: Vec::new(),
@@ -411,8 +470,9 @@ impl Session {
     /// Re-seat this session on the streaming serving engine with the
     /// deterministic virtual-time executor (same jitter seed as the
     /// session, so it is directly comparable to the simulator path). Must
-    /// be called before any time elapses; scenarios with battery ramps
-    /// stay on the simulator (the streaming engine has no power model).
+    /// be called before any time elapses. Battery ramps ride along: the
+    /// drain model is engine-independent, so depletion instants match the
+    /// simulator session exactly.
     pub fn serve(self, cfg: ServeCfg) -> Result<Session, RuntimeError> {
         let seed = self.seed;
         self.serve_with(Arc::new(VirtualExecutor::with_seed(seed)), cfg)
@@ -437,14 +497,6 @@ impl Session {
                     .into(),
             ));
         }
-        if !self.batteries.is_empty() {
-            return Err(RuntimeError::InvalidScenario(
-                "battery ramps integrate the DES energy model; the streaming \
-                 engine has no power rails — drop .battery(..) or stay on the \
-                 simulator session"
-                    .into(),
-            ));
-        }
         let (fleet, active, dep_plan) = {
             let guard = self.shared.lock().unwrap();
             let core = &guard.core;
@@ -455,7 +507,6 @@ impl Session {
             )
         };
         let mut engine = ServeEngine::new(executor, cfg, fleet);
-        engine.set_record_cap(self.trace_window);
         if let Some(plan) = dep_plan {
             engine.set_plan(&plan, &active, None);
         }
@@ -473,8 +524,15 @@ impl Session {
         &self.switches
     }
 
+    /// Remaining charge of a device's declared battery, if one is armed
+    /// (mid-run observability for battery scenarios).
+    pub fn battery_remaining_j(&self, device: DeviceId) -> Option<f64> {
+        self.batteries.remaining_j(device)
+    }
+
     /// Advance the timeline to `t` (clamped to the scenario horizon),
-    /// applying every scripted event on the way.
+    /// applying every scripted event — and every exact battery-depletion
+    /// instant — on the way.
     pub fn run_until(&mut self, t: f64) -> Result<(), RuntimeError> {
         let target = t.min(self.duration);
         loop {
@@ -510,7 +568,7 @@ impl Session {
     /// time-series report.
     pub fn finish(mut self) -> Result<SessionReport, RuntimeError> {
         self.run_until(self.duration)?;
-        self.close_interval(self.duration);
+        self.close_final(self.duration);
         // Close still-open QoS spans at the horizon.
         let open: Vec<(PipelineId, (QosViolation, f64))> =
             std::mem::take(&mut self.open_qos).into_iter().collect();
@@ -519,12 +577,16 @@ impl Session {
         }
 
         let duration = self.duration;
-        let (records, completions, energy_j, trace, served) = match self.engine {
+        let bounds = std::mem::take(&mut self.bounds);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let sim_marks = std::mem::take(&mut self.energy_marks);
+        let names = std::mem::take(&mut self.names);
+
+        let (completions, energy_j, trace, served, marks) = match self.engine {
             SessionEngine::Sim(engine) => {
-                let records: Vec<RoundRecord> = engine.records().iter().copied().collect();
                 let completions = engine.completions();
                 let energy_j = engine.energy_total_j(duration);
-                (records, completions, energy_j, engine.into_trace(), None)
+                (completions, energy_j, engine.into_trace(), None, sim_marks)
             }
             SessionEngine::Serve(engine) => {
                 let outcome = engine.finish()?;
@@ -536,70 +598,80 @@ impl Session {
                     workers: outcome.workers,
                 };
                 // Rounds that drained past the horizon stay in the
-                // conservation totals but out of the report window, the
+                // conservation totals but out of the report window — the
                 // same cut the DES makes by never processing events past
-                // the horizon. Drained rounds are the newest, so even
-                // under a trace window (which evicts oldest-first) they
-                // are all among the retained records — the subtraction
-                // stays exact.
-                let past_horizon = outcome
-                    .records
-                    .iter()
-                    .filter(|r| r.end > duration + 1e-9)
-                    .count();
-                let records: Vec<RoundRecord> = outcome
-                    .records
-                    .into_iter()
-                    .filter(|r| r.end <= duration + 1e-9)
-                    .collect();
+                // the horizon.
+                let mut past_horizon = 0usize;
+                for rec in &outcome.records {
+                    if rec.end > duration + 1e-9 {
+                        past_horizon += 1;
+                    } else {
+                        scratch[Self::interval_index(&bounds, rec.end)].add(rec);
+                    }
+                }
                 let completions = outcome.completed - past_horizon;
-                (records, completions, 0.0, None, Some(served))
+                // Energy marks: chronological replay of the workers' busy
+                // spans interleaved with the fleet-change history —
+                // completions before churn at equal instants, exactly the
+                // DES event order.
+                let mut replay = EnergyReplay::new(
+                    outcome
+                        .fleet_history
+                        .first()
+                        .map(|(_, f)| f.clone())
+                        .unwrap_or_else(|| Fleet::new(Vec::new())),
+                );
+                let mut spans = outcome.busy.iter().peekable();
+                let mut changes = outcome.fleet_history.iter().skip(1).peekable();
+                let mut marks = Vec::with_capacity(bounds.len());
+                for &b in &bounds {
+                    loop {
+                        let next_span = spans.peek().map(|s| s.end);
+                        let next_change = changes.peek().map(|(t, _)| *t);
+                        match (next_span, next_change) {
+                            (Some(e), c) if e <= b && !c.is_some_and(|t| e > t) => {
+                                replay.record(spans.next().expect("peeked span"));
+                            }
+                            (_, Some(t)) if t <= b => {
+                                let (tc, f) = changes.next().expect("peeked change");
+                                replay.set_fleet(f.clone(), *tc);
+                            }
+                            _ => break,
+                        }
+                    }
+                    marks.push(replay.energy_at(b));
+                }
+                let energy_j = marks.last().copied().unwrap_or(0.0);
+                (completions, energy_j, None, Some(served), marks)
             }
         };
 
-        let mut intervals = Vec::new();
-        for (i, w) in self.boundaries.windows(2).enumerate() {
-            let (a, b) = (w[0], w[1]);
-            let is_last = i + 2 == self.boundaries.len();
-            let in_window = |r: &&RoundRecord| {
-                if is_last {
-                    r.end >= a && r.end <= b
-                } else {
-                    r.end >= a && r.end < b
-                }
-            };
-            let recs: Vec<&RoundRecord> = records.iter().filter(in_window).collect();
+        let mut intervals = Vec::with_capacity(scratch.len());
+        for (i, s) in scratch.iter().enumerate() {
+            let (a, b) = (bounds[i], bounds[i + 1]);
             let span = (b - a).max(1e-12);
-            let mut per_app_map: BTreeMap<PipelineId, (usize, f64)> = BTreeMap::new();
-            for r in &recs {
-                let e = per_app_map.entry(r.pipeline).or_insert((0, 0.0));
-                e.0 += 1;
-                e.1 += r.end - r.start;
-            }
-            let per_app: Vec<AppInterval> = per_app_map
-                .into_iter()
-                .map(|(app, (c, lat_sum))| AppInterval {
+            let per_app: Vec<AppInterval> = s
+                .per_app
+                .iter()
+                .map(|(&app, &(c, lat_sum))| AppInterval {
                     app,
-                    name: self.names.get(&app).cloned().unwrap_or_default(),
+                    name: names.get(&app).cloned().unwrap_or_default(),
                     completions: c,
                     throughput: c as f64 / span,
                     mean_latency_s: lat_sum / c as f64,
                 })
                 .collect();
-            let completions = recs.len();
-            let lat_sum: f64 = recs.iter().map(|r| r.end - r.start).sum();
-            let power_w = (self.energy_marks[i + 1] - self.energy_marks[i]) / span;
             intervals.push(Interval {
                 start: a,
                 end: b,
-                completions,
-                throughput: completions as f64 / span,
-                avg_latency_s: if completions > 0 {
-                    lat_sum / completions as f64
+                completions: s.completions,
+                throughput: s.completions as f64 / span,
+                avg_latency_s: if s.completions > 0 {
+                    s.lat_sum / s.completions as f64
                 } else {
                     0.0
                 },
-                power_w,
+                power_w: (marks[i + 1] - marks[i]) / span,
                 per_app,
             });
         }
@@ -618,62 +690,114 @@ impl Session {
         })
     }
 
-    /// Advance the engine to `to`, polling batteries on the way.
-    /// Same-instant targets are a no-op, so a burst of events sharing one
-    /// timestamp applies atomically — the intermediate plans never start
-    /// tasks (their seeds are dropped on retirement).
-    fn advance(&mut self, to: f64) -> Result<(), RuntimeError> {
-        if to <= self.engine.now() {
-            return Ok(());
+    /// The interval a completed round belongs to, given the final
+    /// boundary list: `[bounds[i], bounds[i+1])`, last interval
+    /// inclusive of the horizon.
+    fn interval_index(bounds: &[f64], end: f64) -> usize {
+        let m = bounds.len() - 1;
+        if end >= bounds[m] {
+            return m - 1;
         }
-        if self.batteries.is_empty() {
-            self.engine.run_until(to);
-            return Ok(());
-        }
-        while self.engine.now() < to {
-            let step = (self.engine.now() + self.poll).min(to);
-            self.engine.run_until(step);
-            self.check_batteries()?;
-        }
-        Ok(())
+        let i = bounds.partition_point(|&x| x <= end);
+        (i.max(1) - 1).min(m - 1)
     }
 
-    fn check_batteries(&mut self) -> Result<(), RuntimeError> {
-        let now = self.engine.now();
-        // Devices that already left (scripted departure) take their
-        // battery with them; batteries for devices that have yet to join
-        // stay armed.
-        {
-            let engine = &self.engine;
-            self.batteries.retain(|&(d, _)| !engine.device_departed(d));
-        }
-        let depleted: Vec<DeviceId> = self
-            .batteries
-            .iter()
-            .filter(|&&(d, cap)| self.engine.device_energy_j(d, now) >= cap)
-            .map(|&(d, _)| d)
-            .collect();
-        for d in depleted {
-            // Dense ids: only the current suffix device can depart. A
-            // depleted non-suffix device defers to a later poll — a
-            // scripted departure may free the suffix — instead of
-            // aborting the session mid-run.
-            if d.0 + 1 == self.engine.fleet_len() {
-                self.batteries.retain(|&(b, _)| b != d);
-                self.apply(
-                    now,
-                    format!("battery-depleted({d})"),
-                    ScenarioAction::DeviceLeft(d),
-                )?;
+    /// Advance the engine to `to`, firing exact battery-depletion events
+    /// on the way. Same-instant targets are a no-op, so a burst of events
+    /// sharing one timestamp applies atomically — the intermediate plans
+    /// never start tasks (their seeds are dropped on retirement).
+    fn advance(&mut self, to: f64) -> Result<(), RuntimeError> {
+        while self.engine.now() < to {
+            match self.batteries.next_depletion(self.fleet_len) {
+                Some((d, t_dep)) if t_dep <= to => {
+                    let t_dep = t_dep.max(self.engine.now());
+                    self.step_engine(t_dep);
+                    self.batteries.advance(t_dep);
+                    self.apply(
+                        t_dep,
+                        format!("battery-depleted({d})"),
+                        ScenarioAction::DeviceLeft(d),
+                    )?;
+                }
+                _ => {
+                    self.step_engine(to);
+                    self.batteries.advance(to);
+                }
             }
         }
         Ok(())
     }
 
+    /// Run the engine to `to`, draining completed rounds into the open
+    /// interval. With a trace window set, the DES is stepped in short
+    /// chunks so the drain keeps retained records bounded even across
+    /// long uneventful stretches.
+    fn step_engine(&mut self, to: f64) {
+        let chunked = self.trace_window.is_some() && matches!(self.engine, SessionEngine::Sim(_));
+        if chunked {
+            let mut t = self.engine.now();
+            while t < to {
+                t = (t + 1.0).min(to);
+                self.engine.run_until(t);
+                self.drain_records(t);
+            }
+        } else {
+            self.engine.run_until(to);
+            self.drain_records(to);
+        }
+    }
+
+    /// Fold newly completed rounds into the open interval (simulator
+    /// engines; the streaming engine's records are collected at finish).
+    /// Rounds completing exactly at `horizon` are held back in the carry:
+    /// if `horizon` turns out to be an interval boundary they belong to
+    /// the interval that starts there; once the timeline moves past it,
+    /// they flush into the open interval.
+    fn drain_records(&mut self, horizon: f64) {
+        if matches!(self.engine, SessionEngine::Serve(_)) {
+            return;
+        }
+        if !self.carry.is_empty() && self.carry_t < horizon {
+            // The stashed instant never became a boundary — interior.
+            let carry = std::mem::take(&mut self.carry);
+            let open = self.scratch.last_mut().expect("open interval");
+            for rec in carry {
+                open.add(&rec);
+            }
+        }
+        let recs = match &mut self.engine {
+            SessionEngine::Sim(e) => e.take_records(),
+            SessionEngine::Serve(_) => return,
+        };
+        if recs.is_empty() {
+            return;
+        }
+        let mut carry = std::mem::take(&mut self.carry);
+        {
+            let open = self.scratch.last_mut().expect("open interval");
+            for rec in recs {
+                if rec.end >= horizon {
+                    carry.push(rec);
+                } else {
+                    open.add(&rec);
+                }
+            }
+        }
+        self.carry = carry;
+        self.carry_t = horizon;
+    }
+
     /// Apply one action at time `t`: mutate the core (one incremental
     /// replan), swap the new deployment into the engine, and record the
-    /// interval boundary, plan switch, and QoS standing.
+    /// interval boundary, plan switch, battery loads, and QoS standing.
     fn apply(&mut self, t: f64, cause: String, action: ScenarioAction) -> Result<(), RuntimeError> {
+        self.batteries.advance(t);
+        if let ScenarioAction::Recharge { device, joules } = &action {
+            // A recharge never replans — it only moves the scheduled
+            // depletion instant.
+            self.batteries.recharge(*device, *joules);
+            return Ok(());
+        }
         let fleet_changes = matches!(
             action,
             ScenarioAction::DeviceLeft(_)
@@ -699,6 +823,7 @@ impl Session {
                 ScenarioAction::Pause(id) => core.set_paused(id, true, planner.as_ref()),
                 ScenarioAction::Resume(id) => core.set_paused(id, false, planner.as_ref()),
                 ScenarioAction::SetQos { app, qos } => core.set_qos(app, qos, planner.as_ref()),
+                ScenarioAction::Recharge { .. } => unreachable!("handled above"),
             };
             let wall = t0.elapsed().as_secs_f64();
             core.set_event_clock(None);
@@ -719,12 +844,14 @@ impl Session {
                         .any(|(a, b)| a.spec != b.spec);
                 let cleared = had_deployment && core.deployment().is_none();
                 let fleet = core.fleet().clone();
+                let active = core.active_apps().to_vec();
+                let plan = core.deployment().map(|d| d.plan.clone());
                 drop(guard);
                 if fleet_changed || cleared {
                     let rebinds_before = self.engine.rebind_count();
                     self.close_interval(t);
                     if fleet_changed {
-                        self.engine.set_fleet(fleet);
+                        self.engine.set_fleet(fleet.clone());
                     }
                     if cleared {
                         self.engine.clear_plan();
@@ -744,6 +871,7 @@ impl Session {
                             0.0
                         },
                     });
+                    self.sync_batteries(&fleet, &active, plan.as_ref());
                     self.refresh_qos(t, &[], &[], None);
                 }
                 return Err(e);
@@ -798,6 +926,11 @@ impl Session {
         for spec in &snapshot.active {
             self.names.insert(spec.id, spec.name.clone());
         }
+        self.sync_batteries(
+            &snapshot.fleet,
+            &snapshot.active,
+            snapshot.deployment_plan.as_ref().map(|(p, _, _)| p),
+        );
 
         let stats = snapshot.replan.unwrap_or_default();
         self.switches.push(PlanSwitch {
@@ -822,6 +955,26 @@ impl Session {
             .map(|(_, tp, lat)| (*tp, lat.as_slice()));
         self.refresh_qos(t, &snapshot.active, &snapshot.qos, est);
         Ok(())
+    }
+
+    /// Reconcile batteries with the post-event world: presence (dense
+    /// ids), then the new plan's modeled per-device draws.
+    fn sync_batteries(
+        &mut self,
+        fleet: &Fleet,
+        active: &[PipelineSpec],
+        plan: Option<&CollabPlan>,
+    ) {
+        self.fleet_len = fleet.len();
+        if self.batteries.is_empty() {
+            return;
+        }
+        self.batteries.sync_presence(fleet.len());
+        let draws = plan_device_draw(plan, active, fleet);
+        self.batteries.set_loads(
+            |d| draws.get(d.0).copied().unwrap_or(0.0),
+            |d| fleet.devices.get(d.0).map_or(0.0, |dev| dev.spec.power.base_w),
+        );
     }
 
     /// Reconcile open QoS-violation spans against the new deployment's
@@ -872,12 +1025,48 @@ impl Session {
         });
     }
 
-    /// Record an interval boundary (energy snapshot) at time `t`.
+    /// Record an interval boundary at time `t`: drain and assign the
+    /// completed rounds, snapshot the energy state, open the next
+    /// interval.
     fn close_interval(&mut self, t: f64) {
-        let last = *self.boundaries.last().expect("initial boundary");
-        if t > last {
-            self.boundaries.push(t);
-            self.energy_marks.push(self.engine.energy_total_j(t));
+        let last = *self.bounds.last().expect("initial boundary");
+        if t <= last {
+            // Same-instant event bursts share one boundary.
+            return;
+        }
+        self.drain_records(t);
+        self.bounds.push(t);
+        self.energy_marks.push(self.engine.energy_probe_j(t));
+        self.scratch.push(IntervalScratch::default());
+        // Rounds that completed exactly at `t` open the new interval.
+        let carry = std::mem::take(&mut self.carry);
+        let open = self.scratch.last_mut().expect("new interval");
+        for rec in carry {
+            open.add(&rec);
+        }
+    }
+
+    /// Close the report at the horizon. Unlike mid-run boundaries, the
+    /// final interval is inclusive: rounds completing exactly at the
+    /// horizon belong to it.
+    fn close_final(&mut self, duration: f64) {
+        self.drain_records(duration);
+        let carry = std::mem::take(&mut self.carry);
+        {
+            let open = self.scratch.last_mut().expect("open interval");
+            for rec in carry {
+                open.add(&rec);
+            }
+        }
+        let last = *self.bounds.last().expect("initial boundary");
+        if last < duration {
+            self.bounds.push(duration);
+            self.energy_marks.push(self.engine.energy_probe_j(duration));
+        } else if self.scratch.len() == self.bounds.len() && self.scratch.len() >= 2 {
+            // A terminal event landed exactly on the horizon: fold its
+            // empty trailing interval into the final one.
+            let extra = self.scratch.pop().expect("trailing interval");
+            self.scratch.last_mut().expect("final interval").merge(extra);
         }
     }
 }

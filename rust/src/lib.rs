@@ -59,6 +59,11 @@
 //! - [`model`] — layer algebra and the paper's 8-model zoo (Table I).
 //! - [`device`] — the hardware substrate: MAX78000/78002 specs, memory
 //!   accounting, radio and power models.
+//! - [`power`] — the unified energy & battery subsystem: per-device
+//!   energy integration with presence banking ([`power::Accountant`],
+//!   shared by the DES and the streaming engine), modeled per-device plan
+//!   draws, and event-driven battery depletion
+//!   ([`power::BatteryManager`]) with recharge and Peukert derating.
 //! - [`pipeline`] — §IV-B device-agnostic pipeline specs (requirements,
 //!   not device bindings).
 //! - [`plan`] — §IV-C execution plans, split-skeleton/plan enumeration,
@@ -92,6 +97,7 @@ pub mod util;
 pub mod testkit;
 pub mod model;
 pub mod device;
+pub mod power;
 pub mod pipeline;
 pub mod plan;
 pub mod estimator;

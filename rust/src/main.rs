@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   exp <id|all> [--runs N] [--seed S] [--full]   reproduce a paper table/figure
 //!   plan --workload N [--fleet F] [--beam W]      plan + print a deployment
-//!   scenario [--name jog|churn8|bursty8]          live session with mid-run churn
+//!   scenario [--name jog|churn8|bursty8|cascade8] live session with mid-run churn
 //!   serve [--scenario jog]                        streaming serving (worker threads,
 //!                                                 live plan rebinds; PJRT without
 //!                                                 --scenario, needs artifacts)
@@ -49,10 +49,11 @@ fn usage() -> String {
      \u{20}              --fleet 4|4h|8|12h, --beam W (bounded plan search;\n\
      \u{20}              default exhaustive — required beyond ~5 devices)\n\
      scenario       live session with mid-run churn: time-series report,\n\
-     \u{20}              plan-switch timeline, QoS spans\n\
-     \u{20}              --name jog|churn8|bursty8, --seed S, --until T\n\
+     \u{20}              plan-switch timeline, QoS spans (cascade8 = battery-\n\
+     \u{20}              driven departure cascade with event-driven depletion)\n\
+     \u{20}              --name jog|churn8|bursty8|cascade8, --seed S, --until T\n\
      serve          streaming serving on real worker threads\n\
-     \u{20}              --scenario jog|churn8|bursty8: live session on the\n\
+     \u{20}              --scenario jog|churn8|bursty8|cascade8: live session on the\n\
      \u{20}              virtual-time engine (stock toolchain) with mid-run\n\
      \u{20}              plan switches rebinding the workers; without\n\
      \u{20}              --scenario: PJRT demo (needs `make artifacts` and\n\

@@ -1,0 +1,375 @@
+//! Per-device energy integration with presence banking — the accounting
+//! core shared by the DES and the streaming engine.
+//!
+//! The arithmetic is the paper's monitor model: every computation unit
+//! accumulates busy seconds, and a device's energy over a horizon `T` is
+//! `P_base · T_present + Σ_unit P_active · t_busy`. Devices that leave the
+//! body *bank* their accumulated energy (base draw stops; active energy of
+//! still-draining in-flight tasks keeps counting), and devices that swap
+//! platforms bank-and-restart under the new power spec. Slots never
+//! shrink: a departed device keeps its history.
+//!
+//! Unchurned slots use the legacy single-expression energy formula so the
+//! refactored accounting stays *bit-identical* to the pre-`power/` DES
+//! numbers (pinned by `energy_accounting_matches_closed_form` in the
+//! scheduler tests).
+
+use crate::device::power::{BusyTimes, PowerSpec};
+use crate::device::{DeviceId, Fleet};
+use crate::plan::task::{TaskKind, UnitKind};
+
+/// The energy category a completed busy interval charges. This is the
+/// same mapping the DES always applied to [`TaskKind`]s, factored out so
+/// the streaming engine's workers charge identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BusyKind {
+    /// Sensor frontend sampling.
+    Sensor,
+    /// Core busy: memory ops, interaction glue, MCU inference.
+    Cpu,
+    /// CNN accelerator inferring.
+    Accel,
+    /// Radio transmitting.
+    RadioTx,
+    /// Radio receiving.
+    RadioRx,
+}
+
+/// The energy category of one task, given the unit it actually ran on
+/// (inference on an accelerator-less device runs — and is charged — on
+/// the core).
+pub fn busy_kind(kind: TaskKind, unit: UnitKind) -> BusyKind {
+    match kind {
+        TaskKind::Sense { .. } => BusyKind::Sensor,
+        TaskKind::Load { .. } | TaskKind::Unload { .. } | TaskKind::Interact { .. } => {
+            BusyKind::Cpu
+        }
+        TaskKind::Infer { .. } => {
+            if unit == UnitKind::Accel {
+                BusyKind::Accel
+            } else {
+                BusyKind::Cpu
+            }
+        }
+        TaskKind::Tx { .. } => BusyKind::RadioTx,
+        TaskKind::Rx { .. } => BusyKind::RadioRx,
+    }
+}
+
+/// One completed busy interval on a device, as the streaming engine's
+/// workers report them (virtual-time stamped, collected asynchronously
+/// and replayed chronologically through [`EnergyReplay`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BusySpan {
+    /// The device whose unit was busy.
+    pub device: DeviceId,
+    /// Which active draw the interval charges.
+    pub kind: BusyKind,
+    /// Busy seconds.
+    pub dur: f64,
+    /// Engine time the interval completed (the DES charges a task's full
+    /// duration at its completion event; spans replay in `end` order).
+    pub end: f64,
+}
+
+/// Per-device energy accounting slot. Indexed by dense device id and
+/// never shrinking: a departed device keeps its accumulated energy, and
+/// keeps accruing *active* energy while its last in-flight tasks drain.
+struct Slot {
+    power: PowerSpec,
+    present: bool,
+    /// When the current presence interval began.
+    present_since: f64,
+    /// Base (idle) energy banked from closed presence intervals.
+    base_banked_j: f64,
+    /// Active energy banked when the device departed or changed platform.
+    active_banked_j: f64,
+    /// Busy time accumulated since the last banking point.
+    busy: BusyTimes,
+    /// Whether this slot was ever banked (fleet churn). Unchurned slots
+    /// use the legacy single-expression energy formula for bit-parity
+    /// with the pre-session batch engine.
+    churned: bool,
+}
+
+impl Slot {
+    fn energy_j(&self, horizon: f64) -> f64 {
+        if !self.churned && self.present {
+            // No churn: identical arithmetic to the batch engine.
+            self.busy.energy_j(&self.power, horizon - self.present_since)
+        } else {
+            let active = self.busy.energy_j(&self.power, 0.0);
+            let mut e = self.base_banked_j + self.active_banked_j + active;
+            if self.present && horizon > self.present_since {
+                e += self.power.base_w * (horizon - self.present_since);
+            }
+            e
+        }
+    }
+
+    /// Close the running accumulation at time `t` (departure or platform
+    /// change).
+    fn bank(&mut self, t: f64) {
+        if self.present {
+            self.base_banked_j += self.power.base_w * (t - self.present_since);
+        }
+        self.active_banked_j += self.busy.energy_j(&self.power, 0.0);
+        self.busy = BusyTimes::default();
+        self.present_since = t;
+        self.churned = true;
+    }
+}
+
+/// Per-device energy integration with presence banking (see the module
+/// docs). One accountant serves one engine run.
+pub struct Accountant {
+    slots: Vec<Slot>,
+}
+
+impl Accountant {
+    /// Open accounting for a fleet whose devices are all present at t=0.
+    pub fn new(fleet: &Fleet) -> Accountant {
+        Accountant {
+            slots: fleet
+                .devices
+                .iter()
+                .map(|d| Slot {
+                    power: d.spec.power,
+                    present: true,
+                    present_since: 0.0,
+                    base_banked_j: 0.0,
+                    active_banked_j: 0.0,
+                    busy: BusyTimes::default(),
+                    churned: false,
+                })
+                .collect(),
+        }
+    }
+
+    /// Reconcile the slots with a fleet change at time `t`: presence
+    /// intervals close for departed devices (they stop accruing base
+    /// power; in-flight tasks still drain and their active energy still
+    /// counts) and open for new or platform-swapped ones.
+    pub fn apply_fleet(&mut self, old: &Fleet, new: &Fleet, t: f64) {
+        let (o, n) = (old.len(), new.len());
+        for slot in self.slots.iter_mut().take(o).skip(n) {
+            if slot.present {
+                slot.bank(t);
+                slot.present = false;
+            }
+        }
+        for i in 0..o.min(n) {
+            let (a, b) = (&old.devices[i], &new.devices[i]);
+            if a.spec != b.spec {
+                self.slots[i].bank(t);
+                self.slots[i].power = b.spec.power;
+            }
+        }
+        for i in o..n {
+            if i < self.slots.len() {
+                // A previously departed slot rejoined.
+                let slot = &mut self.slots[i];
+                slot.power = new.devices[i].spec.power;
+                slot.present = true;
+                slot.present_since = t;
+                slot.churned = true;
+            } else {
+                self.slots.push(Slot {
+                    power: new.devices[i].spec.power,
+                    present: true,
+                    present_since: t,
+                    base_banked_j: 0.0,
+                    active_banked_j: 0.0,
+                    busy: BusyTimes::default(),
+                    churned: true,
+                });
+            }
+        }
+    }
+
+    /// Charge `dur` busy seconds of `kind` to `device`. Unknown devices
+    /// (never part of any fleet this accountant saw) are ignored.
+    pub fn record(&mut self, device: DeviceId, kind: BusyKind, dur: f64) {
+        debug_assert!(device.0 < self.slots.len(), "busy on unknown {device}");
+        let Some(slot) = self.slots.get_mut(device.0) else {
+            return;
+        };
+        let b = &mut slot.busy;
+        match kind {
+            BusyKind::Sensor => b.sensor_s += dur,
+            BusyKind::Cpu => b.cpu_s += dur,
+            BusyKind::Accel => b.accel_s += dur,
+            BusyKind::RadioTx => b.radio_tx_s += dur,
+            BusyKind::RadioRx => b.radio_rx_s += dur,
+        }
+    }
+
+    /// Total energy in joules if the horizon ended at `horizon` seconds.
+    pub fn energy_total_j(&self, horizon: f64) -> f64 {
+        let mut e = 0.0;
+        for slot in &self.slots {
+            e += slot.energy_j(horizon);
+        }
+        e
+    }
+
+    /// One device's energy in joules up to `horizon`.
+    pub fn device_energy_j(&self, device: DeviceId, horizon: f64) -> f64 {
+        self.slots.get(device.0).map_or(0.0, |s| s.energy_j(horizon))
+    }
+
+    /// Whether the device is currently on the body (its slot is accruing
+    /// base power).
+    pub fn present(&self, device: DeviceId) -> bool {
+        self.slots.get(device.0).is_some_and(|s| s.present)
+    }
+
+    /// Whether the device was on the body at some point and has since
+    /// left (distinct from a device no fleet has ever contained).
+    pub fn departed(&self, device: DeviceId) -> bool {
+        self.slots.get(device.0).is_some_and(|s| !s.present)
+    }
+}
+
+/// Chronological replay of busy spans and fleet changes into an
+/// [`Accountant`] — how the streaming serve path integrates energy after
+/// the fact. Feed events in nondecreasing time order (spans by `end`,
+/// spans before a fleet change at the same instant, matching the DES's
+/// completions-before-churn event order) and query [`Self::energy_at`]
+/// between them.
+pub struct EnergyReplay {
+    accountant: Accountant,
+    fleet: Fleet,
+}
+
+impl EnergyReplay {
+    /// Start a replay from the fleet that was present at t=0.
+    pub fn new(fleet: Fleet) -> EnergyReplay {
+        EnergyReplay {
+            accountant: Accountant::new(&fleet),
+            fleet,
+        }
+    }
+
+    /// Apply a fleet change at time `t`.
+    pub fn set_fleet(&mut self, new: Fleet, t: f64) {
+        self.accountant.apply_fleet(&self.fleet, &new, t);
+        self.fleet = new;
+    }
+
+    /// Charge one completed busy span.
+    pub fn record(&mut self, span: &BusySpan) {
+        self.accountant.record(span.device, span.kind, span.dur);
+    }
+
+    /// Total energy at `t`, given everything replayed so far.
+    pub fn energy_at(&self, t: f64) -> f64 {
+        self.accountant.energy_total_j(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn idle_fleet_accrues_base_power_only() {
+        let f = fleet(2);
+        let acct = Accountant::new(&f);
+        let base: f64 = f.devices.iter().map(|d| d.spec.power.base_w).sum();
+        let e = acct.energy_total_j(10.0);
+        assert!((e - base * 10.0).abs() < 1e-12, "{e}");
+    }
+
+    #[test]
+    fn busy_charges_land_on_the_right_draw() {
+        let f = fleet(1);
+        let mut acct = Accountant::new(&f);
+        acct.record(DeviceId(0), BusyKind::RadioTx, 2.0);
+        let p = f.get(DeviceId(0)).spec.power;
+        let expect = p.base_w * 5.0 + p.radio_tx_w * 2.0;
+        assert_eq!(acct.energy_total_j(5.0), expect);
+        // The closed-form matches BusyTimes exactly (bit parity with the
+        // legacy unchurned slot formula).
+        let busy = BusyTimes { radio_tx_s: 2.0, ..Default::default() };
+        assert_eq!(acct.device_energy_j(DeviceId(0), 5.0), busy.energy_j(&p, 5.0));
+    }
+
+    #[test]
+    fn departure_banks_base_power_but_not_active_drain() {
+        let (f2, f1) = (fleet(2), fleet(1));
+        let mut acct = Accountant::new(&f2);
+        acct.apply_fleet(&f2, &f1, 1.0);
+        assert!(acct.departed(DeviceId(1)));
+        let at_leave = acct.device_energy_j(DeviceId(1), 1.0);
+        // Base stays frozen after departure…
+        assert_eq!(acct.device_energy_j(DeviceId(1), 3.0), at_leave);
+        // …but a draining in-flight task still charges active energy.
+        acct.record(DeviceId(1), BusyKind::Accel, 0.5);
+        assert!(acct.device_energy_j(DeviceId(1), 3.0) > at_leave);
+        // The survivor keeps accruing.
+        assert!(acct.device_energy_j(DeviceId(0), 3.0) > acct.device_energy_j(DeviceId(0), 1.0));
+    }
+
+    #[test]
+    fn rejoin_reopens_presence_at_the_rejoin_instant() {
+        let (f2, f1) = (fleet(2), fleet(1));
+        let mut acct = Accountant::new(&f2);
+        acct.apply_fleet(&f2, &f1, 1.0);
+        acct.apply_fleet(&f1, &f2, 3.0);
+        assert!(acct.present(DeviceId(1)));
+        let base = f2.get(DeviceId(1)).spec.power.base_w;
+        // 1 s before departure + 1 s after rejoin; the 2 s gap is free.
+        let e = acct.device_energy_j(DeviceId(1), 4.0);
+        assert!((e - base * 2.0).abs() < 1e-12, "{e}");
+    }
+
+    #[test]
+    fn replay_matches_direct_accounting() {
+        let f2 = fleet(2);
+        let f1 = fleet(1);
+        let mut direct = Accountant::new(&f2);
+        direct.record(DeviceId(0), BusyKind::Cpu, 0.25);
+        direct.apply_fleet(&f2, &f1, 2.0);
+        direct.record(DeviceId(0), BusyKind::RadioTx, 0.5);
+
+        let mut replay = EnergyReplay::new(f2.clone());
+        replay.record(&BusySpan { device: DeviceId(0), kind: BusyKind::Cpu, dur: 0.25, end: 1.0 });
+        replay.set_fleet(f1, 2.0);
+        replay.record(&BusySpan {
+            device: DeviceId(0),
+            kind: BusyKind::RadioTx,
+            dur: 0.5,
+            end: 3.0,
+        });
+        assert_eq!(replay.energy_at(4.0), direct.energy_total_j(4.0));
+    }
+
+    #[test]
+    fn busy_kind_matches_task_units() {
+        use crate::model::SplitRange;
+        let infer = TaskKind::Infer { range: SplitRange::new(0, 1) };
+        assert_eq!(busy_kind(infer, UnitKind::Accel), BusyKind::Accel);
+        // MCU inference charges the core.
+        assert_eq!(busy_kind(infer, UnitKind::Cpu), BusyKind::Cpu);
+        assert_eq!(busy_kind(TaskKind::Sense { bytes: 1 }, UnitKind::Sensor), BusyKind::Sensor);
+        assert_eq!(
+            busy_kind(TaskKind::Tx { bytes: 1, to: DeviceId(0) }, UnitKind::Radio),
+            BusyKind::RadioTx
+        );
+        assert_eq!(
+            busy_kind(TaskKind::Rx { bytes: 1, from: DeviceId(0) }, UnitKind::Radio),
+            BusyKind::RadioRx
+        );
+        assert_eq!(busy_kind(TaskKind::Interact { bytes: 1 }, UnitKind::Cpu), BusyKind::Cpu);
+    }
+}

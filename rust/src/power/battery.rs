@@ -1,0 +1,272 @@
+//! Event-driven battery depletion.
+//!
+//! The session's old battery model polled the DES energy integral at a
+//! fixed granularity, so depletion timing quantized to the poll step and
+//! the streaming engine (with no mid-run energy probe) could not support
+//! batteries at all. [`BatteryManager`] replaces the poll with a closed
+//! form: each battery drains at the *modeled* per-device draw of the
+//! currently deployed plan ([`super::plan_device_draw`]), a
+//! piecewise-constant rate that changes only at timeline events (plan
+//! switches, churn, recharges). Between events the depletion instant is
+//! exact — `t_now + remaining / drain` — so the session schedules it as a
+//! timeline event of its own, independent of any poll granularity and
+//! identical across the simulator and the serving engine.
+//!
+//! [`BatteryCfg::peukert`] adds load-dependent capacity scaling: with
+//! exponent `k > 1`, drawing above the device's reference (base) draw
+//! depletes super-linearly (`drain = draw · (draw / ref)^(k−1)`), the
+//! classic Peukert capacity derating. `k = 1` (the default) is the ideal
+//! battery.
+
+use crate::device::DeviceId;
+
+/// Per-battery model configuration (see [`crate::api::Scenario::battery_with`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatteryCfg {
+    /// Peukert load exponent: effective drain is
+    /// `draw · (draw / ref)^(peukert − 1)` with `ref` the device's base
+    /// draw. `1.0` (default) disables the derating.
+    pub peukert: f64,
+}
+
+impl Default for BatteryCfg {
+    fn default() -> BatteryCfg {
+        BatteryCfg { peukert: 1.0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Battery {
+    device: DeviceId,
+    capacity_j: f64,
+    remaining_j: f64,
+    cfg: BatteryCfg,
+    /// Reference draw for the Peukert derating (device base watts).
+    ref_w: f64,
+    /// Modeled draw under the current plan, watts.
+    draw_w: f64,
+    /// Whether the device has ever been on the body (a battery declared
+    /// for a device scripted to join later stays armed, drain-free).
+    started: bool,
+    /// Whether the device is on the body right now (draining).
+    active: bool,
+}
+
+impl Battery {
+    fn drain_w(&self) -> f64 {
+        if !self.active || self.draw_w <= 0.0 {
+            return 0.0;
+        }
+        if self.cfg.peukert == 1.0 || self.ref_w <= 0.0 {
+            return self.draw_w;
+        }
+        self.draw_w * (self.draw_w / self.ref_w).powf(self.cfg.peukert - 1.0)
+    }
+}
+
+/// The session's battery timeline: piecewise-constant drains, exact
+/// depletion instants (see the module docs). Drive it with
+/// [`Self::advance`] to the current engine time before changing loads.
+#[derive(Clone, Debug, Default)]
+pub struct BatteryManager {
+    batteries: Vec<Battery>,
+    now: f64,
+}
+
+impl BatteryManager {
+    /// Build from scenario declarations `(device, capacity_j, cfg)`.
+    pub fn new(declared: &[(DeviceId, f64, BatteryCfg)]) -> BatteryManager {
+        BatteryManager {
+            batteries: declared
+                .iter()
+                .map(|&(device, capacity_j, cfg)| Battery {
+                    device,
+                    capacity_j,
+                    remaining_j: capacity_j,
+                    cfg,
+                    ref_w: 0.0,
+                    draw_w: 0.0,
+                    started: false,
+                    active: false,
+                })
+                .collect(),
+            now: 0.0,
+        }
+    }
+
+    /// Whether any battery is (still) armed.
+    pub fn is_empty(&self) -> bool {
+        self.batteries.is_empty()
+    }
+
+    /// Integrate the drains up to time `to` (clamped at empty).
+    pub fn advance(&mut self, to: f64) {
+        let dt = to - self.now;
+        if dt > 0.0 {
+            for b in &mut self.batteries {
+                b.remaining_j = (b.remaining_j - b.drain_w() * dt).max(0.0);
+            }
+            self.now = to;
+        }
+    }
+
+    /// Reconcile with the (dense-id) fleet size after a churn event: a
+    /// battery whose device is on the body starts/keeps draining; one
+    /// whose device has *left* the body departs with it; one whose device
+    /// has yet to join stays armed but drain-free. Call at the current
+    /// timeline position (after [`Self::advance`]).
+    pub fn sync_presence(&mut self, fleet_len: usize) {
+        self.batteries.retain_mut(|b| {
+            if b.device.0 < fleet_len {
+                b.started = true;
+                b.active = true;
+                true
+            } else if b.started {
+                // Scripted departures take their battery with them.
+                false
+            } else {
+                b.active = false;
+                true
+            }
+        });
+    }
+
+    /// Install the modeled per-device draw of the new deployment
+    /// (`draw_w(d)` full watts including base, `ref_w(d)` the Peukert
+    /// reference). Call at the current timeline position.
+    pub fn set_loads(&mut self, draw_w: impl Fn(DeviceId) -> f64, ref_w: impl Fn(DeviceId) -> f64) {
+        for b in &mut self.batteries {
+            if b.active {
+                b.draw_w = draw_w(b.device);
+                b.ref_w = ref_w(b.device);
+            }
+        }
+    }
+
+    /// Script a recharge: add `joules`, clamped to the declared capacity.
+    pub fn recharge(&mut self, device: DeviceId, joules: f64) {
+        for b in &mut self.batteries {
+            if b.device == device {
+                b.remaining_j = (b.remaining_j + joules.max(0.0)).min(b.capacity_j);
+            }
+        }
+    }
+
+    /// Drop a battery (its device depleted and departed).
+    pub fn remove(&mut self, device: DeviceId) {
+        self.batteries.retain(|b| b.device != device);
+    }
+
+    /// Remaining charge of a device's battery, if one is armed.
+    pub fn remaining_j(&self, device: DeviceId) -> Option<f64> {
+        self.batteries.iter().find(|b| b.device == device).map(|b| b.remaining_j)
+    }
+
+    /// The exact next depletion instant, if any. Device ids are dense, so
+    /// only the fleet's current highest id can depart: a depleted
+    /// non-suffix battery defers until churn frees the suffix (this is
+    /// re-evaluated at every event).
+    pub fn next_depletion(&self, fleet_len: usize) -> Option<(DeviceId, f64)> {
+        let b = self
+            .batteries
+            .iter()
+            .find(|b| b.active && b.device.0 + 1 == fleet_len)?;
+        if b.remaining_j <= 0.0 {
+            return Some((b.device, self.now));
+        }
+        let drain = b.drain_w();
+        if drain <= 0.0 {
+            return None;
+        }
+        Some((b.device, self.now + b.remaining_j / drain))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manager(caps: &[(usize, f64)]) -> BatteryManager {
+        let decls: Vec<(DeviceId, f64, BatteryCfg)> = caps
+            .iter()
+            .map(|&(d, c)| (DeviceId(d), c, BatteryCfg::default()))
+            .collect();
+        BatteryManager::new(&decls)
+    }
+
+    #[test]
+    fn depletion_instant_is_exact_and_poll_free() {
+        let mut m = manager(&[(2, 1.0)]);
+        m.sync_presence(3);
+        m.set_loads(|_| 0.25, |_| 0.25);
+        // 1 J at 0.25 W → exactly t = 4.
+        assert_eq!(m.next_depletion(3), Some((DeviceId(2), 4.0)));
+        // Advancing halfway leaves half the charge and the same instant.
+        m.advance(2.0);
+        assert_eq!(m.remaining_j(DeviceId(2)), Some(0.5));
+        assert_eq!(m.next_depletion(3), Some((DeviceId(2), 4.0)));
+    }
+
+    #[test]
+    fn load_changes_move_the_depletion_instant() {
+        let mut m = manager(&[(1, 1.0)]);
+        m.sync_presence(2);
+        m.set_loads(|_| 0.25, |_| 0.25);
+        m.advance(2.0); // 0.5 J left
+        m.set_loads(|_| 0.5, |_| 0.25); // plan switch doubles the draw
+        assert_eq!(m.next_depletion(2), Some((DeviceId(1), 3.0)));
+    }
+
+    #[test]
+    fn non_suffix_batteries_defer_until_the_suffix_frees() {
+        let mut m = manager(&[(1, 0.1)]);
+        m.sync_presence(3);
+        m.set_loads(|_| 1.0, |_| 1.0);
+        // d1 is not the suffix of a 3-device fleet: nothing fires…
+        assert_eq!(m.next_depletion(3), None);
+        m.advance(5.0); // …even though the charge is long gone…
+        assert_eq!(m.remaining_j(DeviceId(1)), Some(0.0));
+        // …until churn makes it the suffix, then it fires immediately.
+        assert_eq!(m.next_depletion(2), Some((DeviceId(1), 5.0)));
+    }
+
+    #[test]
+    fn recharge_extends_the_timeline_and_clamps_at_capacity() {
+        let mut m = manager(&[(0, 2.0)]);
+        m.sync_presence(1);
+        m.set_loads(|_| 1.0, |_| 1.0);
+        m.advance(1.5);
+        m.recharge(DeviceId(0), 10.0);
+        assert_eq!(m.remaining_j(DeviceId(0)), Some(2.0), "clamped at capacity");
+        assert_eq!(m.next_depletion(1), Some((DeviceId(0), 3.5)));
+    }
+
+    #[test]
+    fn peukert_derating_depletes_super_linearly_above_reference() {
+        let decls = [(DeviceId(0), 1.0, BatteryCfg { peukert: 1.2 })];
+        let mut m = BatteryManager::new(&decls);
+        m.sync_presence(1);
+        // At the reference draw the derating is neutral.
+        m.set_loads(|_| 0.25, |_| 0.25);
+        let at_ref = m.next_depletion(1).unwrap().1;
+        assert!((at_ref - 4.0).abs() < 1e-12);
+        // At 4× the reference, depletion comes sooner than the ideal 1 s.
+        m.set_loads(|_| 1.0, |_| 0.25);
+        let derated = m.next_depletion(1).unwrap().1;
+        assert!(derated < 1.0, "{derated}");
+    }
+
+    #[test]
+    fn scripted_departure_takes_the_battery_and_late_joiners_stay_armed() {
+        let mut m = manager(&[(3, 1.0), (5, 1.0)]);
+        m.sync_presence(4); // d5 not on the body yet: armed, not draining
+        m.set_loads(|_| 1.0, |_| 1.0);
+        m.advance(0.5);
+        assert_eq!(m.remaining_j(DeviceId(5)), Some(1.0), "not draining before join");
+        m.sync_presence(3); // d3 left by script: battery gone
+        assert_eq!(m.remaining_j(DeviceId(3)), None);
+        m.sync_presence(6); // d5 joined: now draining
+        m.set_loads(|_| 1.0, |_| 1.0);
+        assert_eq!(m.next_depletion(6), Some((DeviceId(5), 1.5)));
+    }
+}

@@ -1,0 +1,170 @@
+//! Modeled per-device power draw of a deployed plan — the battery
+//! subsystem's drain rates.
+//!
+//! Uses the same latency model and steady-state period as the planner's
+//! estimator ([`crate::estimator::estimate_plan`]): per round, each
+//! device's active energy is `Σ_task lat · P_active(task)` over the tasks
+//! assigned to it, the round period is
+//! `max(bottleneck, critical_path / 2)` (the ATP double-buffer window),
+//! and a device's draw is `base + active_energy / period`. Devices with
+//! no assigned tasks draw base power only. The drain is therefore
+//! deterministic and engine-independent, which is what makes battery
+//! depletion instants identical on the simulator and the serving engine.
+
+use std::collections::BTreeMap;
+
+use crate::device::{DeviceId, Fleet};
+use crate::estimator::LatencyModel;
+use crate::pipeline::PipelineSpec;
+use crate::plan::task::UnitKind;
+use crate::plan::CollabPlan;
+
+use super::accountant::{busy_kind, BusyKind};
+
+/// Modeled full draw (base + plan-induced active) per device, in watts,
+/// indexed by dense device id. `plan = None` (deployment cleared) is base
+/// draw everywhere. `pipelines` must contain every pipeline the plan
+/// references (extra entries are ignored).
+pub fn plan_device_draw(
+    plan: Option<&CollabPlan>,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+) -> Vec<f64> {
+    let mut draw: Vec<f64> = fleet.devices.iter().map(|d| d.spec.power.base_w).collect();
+    let Some(plan) = plan else {
+        return draw;
+    };
+    if plan.plans.is_empty() {
+        return draw;
+    }
+
+    let lm = LatencyModel::new(fleet);
+    let mut unit_busy: BTreeMap<(DeviceId, UnitKind), f64> = BTreeMap::new();
+    let mut active: Vec<f64> = vec![0.0; fleet.len()];
+    let mut critical = 0.0f64;
+    for ep in &plan.plans {
+        let Some(spec) = pipelines.iter().find(|p| p.id == ep.pipeline) else {
+            continue;
+        };
+        let sensor = LatencyModel::source_sensor(spec);
+        let mut chain = 0.0;
+        for task in ep.tasks(&spec.model) {
+            if task.device.0 >= fleet.len() {
+                continue; // retiring plan may reference departed devices
+            }
+            let lat = lm.task_latency(&task, &spec.model, sensor);
+            chain += lat;
+            *unit_busy.entry((task.device, task.unit())).or_default() += lat;
+            let p = &fleet.get(task.device).spec.power;
+            let unit = if fleet.get(task.device).has_accel() {
+                UnitKind::Accel
+            } else {
+                UnitKind::Cpu
+            };
+            active[task.device.0] += lat
+                * match busy_kind(task.kind, unit) {
+                    BusyKind::Sensor => p.sensor_active_w,
+                    BusyKind::Cpu => p.cpu_active_w,
+                    BusyKind::Accel => p.accel_active_w,
+                    BusyKind::RadioTx => p.radio_tx_w,
+                    BusyKind::RadioRx => p.radio_rx_w,
+                };
+        }
+        critical = critical.max(chain);
+    }
+    let bottleneck = unit_busy.values().copied().fold(0.0, f64::max);
+    let period = bottleneck.max(critical / 2.0).max(1e-12);
+    for (d, a) in draw.iter_mut().zip(&active) {
+        *d += a / period;
+    }
+    draw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::device::DeviceKind;
+    use crate::estimator::estimate_plan;
+    use crate::model::layer::{Layer, LayerKind, Shape};
+    use crate::model::ModelGraph;
+    use crate::pipeline::{SourceReq, TargetReq};
+    use crate::plan::exec_plan::ExecutionPlan;
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| Device::new(i, format!("d{i}"), DeviceKind::Max78000, vec![], vec![]))
+                .collect(),
+        )
+    }
+
+    fn pipes(n: usize) -> Vec<PipelineSpec> {
+        let layer =
+            Layer { kind: LayerKind::Conv2d { k: 3 }, pool: 1, cout: 8, residual: false, has_bias: true };
+        let model = ModelGraph::new("m", Shape::new(16, 16, 3), vec![layer]);
+        (0..n)
+            .map(|i| {
+                PipelineSpec::new(i, format!("p{i}"), SourceReq::Any, model.clone(), TargetReq::Any)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn no_plan_draws_base_everywhere() {
+        let f = fleet(3);
+        let draw = plan_device_draw(None, &[], &f);
+        for (d, dev) in draw.iter().zip(&f.devices) {
+            assert_eq!(*d, dev.spec.power.base_w);
+        }
+    }
+
+    #[test]
+    fn loaded_devices_draw_above_base_and_sum_matches_the_estimator() {
+        let f = fleet(2);
+        let ps = pipes(1);
+        let plan = CollabPlan::new(vec![ExecutionPlan::monolithic(
+            &ps[0],
+            DeviceId(0),
+            DeviceId(0),
+            DeviceId(0),
+        )]);
+        let draw = plan_device_draw(Some(&plan), &ps, &f);
+        assert!(draw[0] > f.get(DeviceId(0)).spec.power.base_w);
+        assert_eq!(draw[1], f.get(DeviceId(1)).spec.power.base_w, "idle device draws base");
+        // Summing per-device draws reproduces the estimator's system power.
+        let lm = LatencyModel::new(&f);
+        let est = estimate_plan(&plan, &ps, &f, &lm);
+        let total: f64 = draw.iter().sum();
+        assert!((total - est.power_w).abs() < 1e-9, "{total} vs {}", est.power_w);
+    }
+
+    #[test]
+    fn cross_device_plans_charge_the_radio_on_both_ends() {
+        let f = fleet(2);
+        let ps = pipes(1);
+        let local = plan_device_draw(
+            Some(&CollabPlan::new(vec![ExecutionPlan::monolithic(
+                &ps[0],
+                DeviceId(0),
+                DeviceId(0),
+                DeviceId(0),
+            )])),
+            &ps,
+            &f,
+        );
+        let remote = plan_device_draw(
+            Some(&CollabPlan::new(vec![ExecutionPlan::monolithic(
+                &ps[0],
+                DeviceId(0),
+                DeviceId(1),
+                DeviceId(0),
+            )])),
+            &ps,
+            &f,
+        );
+        // The compute host now also receives/transmits; the second device
+        // stops idling.
+        assert!(remote[1] > local[1]);
+    }
+}

@@ -1,0 +1,41 @@
+//! The unified energy & battery subsystem shared by every execution path.
+//!
+//! Power is a headline metric of the paper (§VII: Synergy cuts system
+//! power 15.8% against the baselines precisely *because* maximizing
+//! throughput minimizes radio time), so energy accounting cannot be a
+//! private detail of one engine. This module owns it for all of them:
+//!
+//! - [`Accountant`] — per-device energy integration (`E = Σ_unit
+//!   P_active · t_busy + P_base · T`) with presence banking across fleet
+//!   churn. Extracted from the discrete-event engine's per-device slots
+//!   and bit-identical to them: the DES ([`crate::scheduler::SimEngine`])
+//!   feeds it completed busy intervals as events retire, and the
+//!   streaming engine ([`crate::serving::ServeEngine`]) feeds it the same
+//!   integration through [`BusySpan`]s reported by its workers — which is
+//!   what makes served sessions report real `power_w`/`energy_j` and
+//!   lets sim-vs-serve energy be compared on identical plans.
+//! - [`EnergyReplay`] — post-hoc chronological replay of busy spans and
+//!   fleet changes into an [`Accountant`], for engines (the streaming
+//!   path) whose completions surface asynchronously.
+//! - [`BatteryManager`] — *event-driven* battery depletion. Each battery
+//!   drains at the current plan's modeled per-device draw
+//!   ([`plan_device_draw`]); the exact depletion instant is solved in
+//!   closed form and scheduled as a timeline event, recomputed on every
+//!   plan switch, churn event, or recharge — no poll-step quantization,
+//!   and identical instants on the simulator and the serving engine.
+//!   [`BatteryCfg`] adds Peukert-style load-dependent capacity scaling;
+//!   [`crate::api::ScenarioAction::Recharge`] scripts mid-run top-ups.
+//!
+//! Live sessions ([`crate::api::Session`]) tie it together: battery ramps
+//! run on both engines, `scenario_cascade8` scripts a battery-driven
+//! departure cascade, and `benches/power_benches.rs` gates that the
+//! event-driven machinery stays within a few percent of a battery-free
+//! session.
+
+pub mod accountant;
+pub mod battery;
+pub mod drain;
+
+pub use accountant::{busy_kind, Accountant, BusyKind, BusySpan, EnergyReplay};
+pub use battery::{BatteryCfg, BatteryManager};
+pub use drain::plan_device_draw;

@@ -26,11 +26,11 @@
 
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
-use crate::device::power::{BusyTimes, PowerSpec};
 use crate::device::{DeviceId, Fleet};
 use crate::pipeline::{PipelineId, PipelineSpec};
-use crate::plan::task::{PlanTask, TaskKind, UnitKind};
+use crate::plan::task::{PlanTask, UnitKind};
 use crate::plan::CollabPlan;
+use crate::power::{busy_kind, Accountant};
 
 use super::epoch::EpochLedger;
 use super::groundtruth::GroundTruth;
@@ -243,55 +243,6 @@ impl Epoch {
     }
 }
 
-/// Per-device energy accounting slot. Slots are indexed by dense device
-/// id and never shrink: a departed device keeps its accumulated energy,
-/// and keeps accruing *active* energy while its last in-flight tasks
-/// drain.
-struct Slot {
-    power: PowerSpec,
-    present: bool,
-    /// When the current presence interval began.
-    present_since: f64,
-    /// Base (idle) energy banked from closed presence intervals.
-    base_banked_j: f64,
-    /// Active energy banked when the device departed or changed platform.
-    active_banked_j: f64,
-    /// Busy time accumulated since the last banking point.
-    busy: BusyTimes,
-    /// Whether this slot was ever banked (fleet churn). Unchurned slots
-    /// use the legacy single-expression energy formula for bit-parity
-    /// with the batch engine.
-    churned: bool,
-}
-
-impl Slot {
-    fn energy_j(&self, horizon: f64) -> f64 {
-        if !self.churned && self.present {
-            // No churn: identical arithmetic to the batch engine.
-            self.busy.energy_j(&self.power, horizon - self.present_since)
-        } else {
-            let active = self.busy.energy_j(&self.power, 0.0);
-            let mut e = self.base_banked_j + self.active_banked_j + active;
-            if self.present && horizon > self.present_since {
-                e += self.power.base_w * (horizon - self.present_since);
-            }
-            e
-        }
-    }
-
-    /// Close the running accumulation at time `t` (departure or platform
-    /// change).
-    fn bank(&mut self, t: f64) {
-        if self.present {
-            self.base_banked_j += self.power.base_w * (t - self.present_since);
-        }
-        self.active_banked_j += self.busy.energy_j(&self.power, 0.0);
-        self.busy = BusyTimes::default();
-        self.present_since = t;
-        self.churned = true;
-    }
-}
-
 #[derive(Default)]
 struct Unit {
     busy: bool,
@@ -312,7 +263,8 @@ pub struct SimEngine {
     max_end: f64,
     heap: BinaryHeap<Event>,
     units: BTreeMap<(DeviceId, UnitKind), Unit>,
-    slots: Vec<Slot>,
+    /// Energy integration (shared subsystem with the serving engine).
+    power: Accountant,
     unit_busy: BTreeMap<(DeviceId, UnitKind), f64>,
     epochs: Vec<Epoch>,
     /// Resolved unit kind per started task, keyed by (epoch, id). A task
@@ -327,26 +279,16 @@ pub struct SimEngine {
     /// Rounds completed over the engine's lifetime — keeps counting when
     /// `record_cap` evicts old records.
     completions_total: usize,
-    /// Ring window over retained records/spans (long-session memory
-    /// bound); `None` retains everything.
+    /// Ring window over retained records (long-session memory bound);
+    /// `None` retains everything.
     record_cap: Option<usize>,
+    /// Ring window over retained trace spans; `None` retains everything.
+    span_cap: Option<usize>,
 }
 
 impl SimEngine {
     pub fn new(fleet: Fleet, gt: GroundTruth, policy: Policy, record_trace: bool) -> SimEngine {
-        let slots = fleet
-            .devices
-            .iter()
-            .map(|d| Slot {
-                power: d.spec.power,
-                present: true,
-                present_since: 0.0,
-                base_banked_j: 0.0,
-                active_banked_j: 0.0,
-                busy: BusyTimes::default(),
-                churned: false,
-            })
-            .collect();
+        let power = Accountant::new(&fleet);
         SimEngine {
             fleet,
             gt,
@@ -356,7 +298,7 @@ impl SimEngine {
             max_end: 0.0,
             heap: BinaryHeap::new(),
             units: BTreeMap::new(),
-            slots,
+            power,
             unit_busy: BTreeMap::new(),
             epochs: Vec::new(),
             in_flight: BTreeMap::new(),
@@ -365,6 +307,7 @@ impl SimEngine {
             spans: VecDeque::new(),
             completions_total: 0,
             record_cap: None,
+            span_cap: None,
         }
     }
 
@@ -373,6 +316,14 @@ impl SimEngine {
     /// rounds). `None` (the default) retains everything.
     pub fn set_record_cap(&mut self, cap: Option<usize>) {
         self.record_cap = cap;
+        self.span_cap = cap;
+    }
+
+    /// Cap retained trace spans only, leaving [`Self::records`] unbounded
+    /// — for drivers (live sessions) that drain records incrementally via
+    /// [`Self::take_records`] and aggregate them streamingly.
+    pub fn set_span_cap(&mut self, cap: Option<usize>) {
+        self.span_cap = cap;
     }
 
     /// The current simulated time.
@@ -397,6 +348,13 @@ impl SimEngine {
         &self.records
     }
 
+    /// Drain the retained completed rounds, leaving the engine's buffer
+    /// empty — the streaming-aggregation hook for live sessions
+    /// ([`Self::completions`] keeps counting).
+    pub fn take_records(&mut self) -> VecDeque<RoundRecord> {
+        std::mem::take(&mut self.records)
+    }
+
     /// Busy seconds per (device, unit), cumulative.
     pub fn unit_busy(&self) -> &BTreeMap<(DeviceId, UnitKind), f64> {
         &self.unit_busy
@@ -404,28 +362,24 @@ impl SimEngine {
 
     /// Total energy in joules if the horizon ended at `horizon` seconds.
     pub fn energy_total_j(&self, horizon: f64) -> f64 {
-        let mut e = 0.0;
-        for slot in &self.slots {
-            e += slot.energy_j(horizon);
-        }
-        e
+        self.power.energy_total_j(horizon)
     }
 
     /// One device's energy in joules up to `horizon` (battery ramps).
     pub fn device_energy_j(&self, device: DeviceId, horizon: f64) -> f64 {
-        self.slots.get(device.0).map_or(0.0, |s| s.energy_j(horizon))
+        self.power.device_energy_j(device, horizon)
     }
 
     /// Whether the device is currently on the body (its energy slot is
     /// accruing base power).
     pub fn device_present(&self, device: DeviceId) -> bool {
-        self.slots.get(device.0).is_some_and(|s| s.present)
+        self.power.present(device)
     }
 
     /// Whether the device was on the body at some point and has since
     /// left (distinct from a device the fleet has never contained).
     pub fn device_departed(&self, device: DeviceId) -> bool {
-        self.slots.get(device.0).is_some_and(|s| !s.present)
+        self.power.departed(device)
     }
 
     /// The fleet the engine is currently executing against.
@@ -450,41 +404,7 @@ impl SimEngine {
     /// or platform-swapped ones. Callers swap the plan right after — the
     /// retiring plan may reference departed devices.
     pub fn set_fleet(&mut self, fleet: Fleet) {
-        let t = self.now;
-        let (old, new) = (self.fleet.len(), fleet.len());
-        for slot in self.slots.iter_mut().take(old).skip(new) {
-            if slot.present {
-                slot.bank(t);
-                slot.present = false;
-            }
-        }
-        for i in 0..old.min(new) {
-            let (a, b) = (&self.fleet.devices[i], &fleet.devices[i]);
-            if a.spec != b.spec {
-                self.slots[i].bank(t);
-                self.slots[i].power = b.spec.power;
-            }
-        }
-        for i in old..new {
-            if i < self.slots.len() {
-                // A previously departed slot rejoined.
-                let slot = &mut self.slots[i];
-                slot.power = fleet.devices[i].spec.power;
-                slot.present = true;
-                slot.present_since = t;
-                slot.churned = true;
-            } else {
-                self.slots.push(Slot {
-                    power: fleet.devices[i].spec.power,
-                    present: true,
-                    present_since: t,
-                    base_banked_j: 0.0,
-                    active_banked_j: 0.0,
-                    busy: BusyTimes::default(),
-                    churned: true,
-                });
-            }
-        }
+        self.power.apply_fleet(&self.fleet, &fleet, self.now);
         self.fleet = fleet;
     }
 
@@ -685,24 +605,8 @@ impl SimEngine {
         let dur = ev.time - start;
         self.max_end = self.max_end.max(ev.time);
         *self.unit_busy.entry(key).or_insert(0.0) += dur;
-        {
-            let b = &mut self.slots[task.device.0].busy;
-            match task.kind {
-                TaskKind::Sense { .. } => b.sensor_s += dur,
-                TaskKind::Load { .. } | TaskKind::Unload { .. } | TaskKind::Interact { .. } => {
-                    b.cpu_s += dur
-                }
-                TaskKind::Infer { .. } => {
-                    if unit_kind == UnitKind::Accel {
-                        b.accel_s += dur;
-                    } else {
-                        b.cpu_s += dur;
-                    }
-                }
-                TaskKind::Tx { .. } => b.radio_tx_s += dur,
-                TaskKind::Rx { .. } => b.radio_rx_s += dur,
-            }
-        }
+        self.power
+            .record(task.device, busy_kind(task.kind, unit_kind), dur);
         let global_run = self.epochs[ev.epoch].base_round[p] + r;
         if self.record_trace {
             self.spans.push_back(TaskSpan {
@@ -715,7 +619,7 @@ impl SimEngine {
                 start,
                 end: ev.time,
             });
-            if let Some(cap) = self.record_cap {
+            if let Some(cap) = self.span_cap {
                 while self.spans.len() > cap {
                     self.spans.pop_front();
                 }
@@ -1179,6 +1083,60 @@ mod tests {
         assert!(eng.records().iter().all(|r| r.run >= 15));
         let trace = eng.into_trace().unwrap();
         assert!(trace.spans.len() <= 5, "spans ride the same window");
+    }
+
+    /// Bit-parity pin for the `power::Accountant` extraction: on every
+    /// canned Table I workload, `simulate()`'s `energy_j` must equal —
+    /// to the last bit — the legacy closed-form
+    /// `Σ_d BusyTimes_d.energy_j(power_d, makespan)` with the busy times
+    /// re-accumulated from the trace in completion order (the exact
+    /// arithmetic the pre-`power/` per-device slots performed).
+    #[test]
+    fn energy_accounting_matches_closed_form_on_all_canned_workloads() {
+        use crate::device::power::BusyTimes;
+        use crate::orchestrator::{Planner, Synergy};
+        let fleet = crate::workload::fleet4();
+        let planner = Synergy::planner();
+        for w in crate::workload::all_workloads() {
+            let plan = planner.plan(&w.pipelines, &fleet).unwrap();
+            let rep = simulate(
+                &plan,
+                &w.pipelines,
+                &fleet,
+                &GroundTruth::with_seed(7),
+                SimConfig {
+                    runs: 12,
+                    warmup: 2,
+                    policy: planner.exec_policy(),
+                    record_trace: true,
+                },
+            );
+            let trace = rep.trace.as_ref().unwrap();
+            let mut busy = vec![BusyTimes::default(); fleet.len()];
+            for s in &trace.spans {
+                let b = &mut busy[s.device.0];
+                let dur = s.end - s.start;
+                match busy_kind(s.kind, s.unit) {
+                    crate::power::BusyKind::Sensor => b.sensor_s += dur,
+                    crate::power::BusyKind::Cpu => b.cpu_s += dur,
+                    crate::power::BusyKind::Accel => b.accel_s += dur,
+                    crate::power::BusyKind::RadioTx => b.radio_tx_s += dur,
+                    crate::power::BusyKind::RadioRx => b.radio_rx_s += dur,
+                }
+            }
+            let mut expect = 0.0;
+            for (b, d) in busy.iter().zip(&fleet.devices) {
+                expect += b.energy_j(&d.spec.power, rep.makespan);
+            }
+            assert_eq!(
+                rep.energy_j.to_bits(),
+                expect.to_bits(),
+                "{}: {} vs {expect}",
+                w.name,
+                rep.energy_j
+            );
+            assert!(rep.energy_j > 0.0);
+        }
     }
 
     #[test]

@@ -130,6 +130,17 @@ impl ExecutionBackend for ServeBackend {
         }
         let avg_latency_s = lat_sum / lat_cnt.max(1) as f64;
 
+        // Energy over the horizon: replay the workers' busy spans through
+        // the shared power accountant — the same integration the DES
+        // performs (base draw over the makespan + active draws per busy
+        // second).
+        let makespan = outcome.records.iter().map(|r| r.end).fold(0.0, f64::max);
+        let mut replay = crate::power::EnergyReplay::new(fleet.clone());
+        for span in outcome.busy.iter().filter(|s| s.end <= makespan + 1e-9) {
+            replay.record(span);
+        }
+        let energy_j = replay.energy_at(makespan);
+
         let per_app: Vec<AppRunStats> = deployment
             .plan
             .plans
@@ -157,8 +168,8 @@ impl ExecutionBackend for ServeBackend {
             completions: outcome.completed,
             throughput,
             avg_latency_s,
-            power_w: None,
-            energy_j: None,
+            power_w: Some(energy_j / makespan.max(1e-12)),
+            energy_j: Some(energy_j),
             wall_s: Some(wall_s),
             verified: None,
             per_app,
@@ -194,7 +205,9 @@ mod tests {
         assert_eq!(rep.per_app.len(), 3);
         assert!(rep.per_app.iter().all(|a| a.completions == 12));
         assert!(rep.wall_s.is_some());
-        assert!(rep.power_w.is_none(), "a thread pool has no power rails");
+        let power = rep.power_w.expect("virtual-time serving integrates energy");
+        let base: f64 = fleet4().devices.iter().map(|d| d.spec.power.base_w).sum();
+        assert!(power > base, "active work must draw above base: {power}");
     }
 
     #[test]

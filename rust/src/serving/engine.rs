@@ -2,14 +2,15 @@
 //! threads, surviving plan switches.
 //!
 //! Topology mirrors §IV-F on actual threads: one worker per
-//! (device, computation unit) processing a bounded FIFO queue, channels as
-//! the links between a pipeline's chunk stages, and a sensor-rate ticker
-//! per app that admits rounds with the paper's adaptive-task-parallelization
-//! pacing (round `r+1` enters when round `r`'s sensing completed and at
-//! most `max_inflight` rounds are outstanding). What "run this task" means
-//! is delegated to a [`ChunkExecutor`]: the deterministic virtual-time
-//! device model on stock toolchains, real PJRT inference behind the `pjrt`
-//! feature (see [`super::executor`]).
+//! (device, computation unit) processing a per-unit admission queue,
+//! chunk chains as the links between a pipeline's stages, and a
+//! sensor-rate ticker per app that admits rounds with the paper's
+//! adaptive-task-parallelization pacing (round `r+1` enters when round
+//! `r`'s sensing completed and at most `max_inflight` rounds are
+//! outstanding). What "run this task" means is delegated to a
+//! [`ChunkExecutor`]: the deterministic virtual-time device model on
+//! stock toolchains, real PJRT inference behind the `pjrt` feature (see
+//! [`super::executor`]).
 //!
 //! Time is *engine seconds* carried on the messages themselves: each
 //! worker keeps a per-unit clock, starts a task at
@@ -17,6 +18,30 @@
 //! and round latency accounting hold in virtual time regardless of how the
 //! OS schedules the threads, and a served session is directly comparable
 //! to the discrete-event simulator on the same plans.
+//!
+//! **Deterministic merge.** Each worker admits work through a
+//! conservative ready-time-ordered merge, not arrival order: every
+//! (chain, stage) bound to a unit is a *source* carrying a monotone
+//! stream of items plus a lower bound on its next delivery (tickers
+//! publish the next admission's ready time, and every enqueued item
+//! propagates its ready time to all later stages of its chain as a
+//! bound). A worker executes the (ready, source)-minimal queued item only
+//! once every other open source provably cannot deliver anything
+//! smaller — the classic conservative-simulation admission rule — so two
+//! pipelines sharing a computation unit produce *bit-comparable* served
+//! replays, independent of OS scheduling. A generous wait timeout
+//! (`MERGE_WAIT_VALVE`, 5 s) acts as a liveness valve: under continuous
+//! driving the bounds never stall, but a session parked mid-run for
+//! longer than the valve (or a wall-time executor chunk outlasting it)
+//! falls back to the minimal *available* item — degraded ordering, never
+//! a hang or a dropped round.
+//!
+//! **Energy.** Workers report every completed busy interval as a
+//! [`BusySpan`] (the same task→draw mapping the DES charges); the engine
+//! returns them, chronologically replayable through
+//! [`crate::power::EnergyReplay`], alongside a fleet-change history — so
+//! served sessions integrate real `power_w`/`energy_j` and battery ramps
+//! run on the serve path too.
 //!
 //! **Live plan switches** are the headline: [`ServeEngine::set_plan`]
 //! retires the current binding epoch (its tickers stop admitting rounds;
@@ -30,17 +55,18 @@
 //! reports admitted vs. completed rounds so callers can assert
 //! conservation across switches.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::device::{DeviceId, Fleet, SensorKind};
 use crate::estimator::LatencyModel;
 use crate::pipeline::PipelineSpec;
 use crate::plan::task::{PlanTask, UnitKind};
 use crate::plan::CollabPlan;
+use crate::power::{busy_kind, BusySpan};
 use crate::scheduler::{EpochLedger, GroundTruth, RoundRecord};
 
 use crate::api::RuntimeError;
@@ -53,9 +79,10 @@ pub struct ServeCfg {
     /// Rounds a pipeline may have in flight at once (2 = the paper's
     /// double-buffered inter-run overlap).
     pub max_inflight: usize,
-    /// Capacity of each worker's bounded input queue. Sized comfortably
-    /// above the total in-flight round count so stage-to-stage sends never
-    /// block in steady state (backpressure is applied at round admission).
+    /// Legacy queue-depth knob. Admission is bounded by the per-app
+    /// pacing window (`max_inflight`), so the per-unit merge queues never
+    /// grow past a few items per bound chain; the field is kept for
+    /// configuration compatibility.
     pub channel_depth: usize,
     /// Wall seconds each worker sleeps per engine second of task time.
     /// `0.0` (default) free-runs — virtual time advances as fast as the
@@ -105,18 +132,34 @@ pub struct ServeOutcome {
     pub rebinds: Vec<Rebind>,
     /// Worker threads spawned over the engine's lifetime.
     pub workers: usize,
+    /// Every completed busy interval, sorted by completion time — replay
+    /// through [`crate::power::EnergyReplay`] (with [`Self::fleet_history`])
+    /// to integrate energy exactly as the DES does.
+    pub busy: Vec<BusySpan>,
+    /// The fleet over time: the starting fleet at `t = 0.0` plus one
+    /// entry per [`ServeEngine::set_fleet`], in order.
+    pub fleet_history: Vec<(f64, Fleet)>,
 }
 
 /// A round's activation flowing between chunk stages (real executors
 /// only; the virtual executor carries `None`).
 type Payload = Option<Vec<f32>>;
 
+/// Identifies one stream of items into a unit: (pipeline id, stage
+/// position, binding epoch). The tuple order doubles as the
+/// deterministic tie-break for equal ready times — earlier stages of
+/// lower-numbered pipelines win, matching causal order.
+type SourceKey = (usize, usize, usize);
+
+/// A (merger, source) address of one chain stage.
+type Stage = (Arc<Merger>, SourceKey);
+
 /// One pipeline's chunk chain bound to workers for one epoch.
 struct ChainBinding {
     spec: PipelineSpec,
     tasks: Vec<PlanTask>,
-    /// Worker input per task position, index-aligned with `tasks`.
-    txs: Vec<mpsc::SyncSender<WorkItem>>,
+    /// Per-stage admission address, index-aligned with `tasks`.
+    stages: Vec<Stage>,
     /// Back to this chain's ticker (pacing feedback).
     feedback: mpsc::Sender<Feedback>,
     /// To the engine's completion collector.
@@ -124,6 +167,21 @@ struct ChainBinding {
     /// The fleet this epoch was bound against (device specs for costing).
     fleet: Arc<Fleet>,
     sensor: Option<SensorKind>,
+}
+
+impl ChainBinding {
+    /// Deliver `item` to its stage's merge queue, first propagating its
+    /// ready time to every later stage of the chain as a delivery lower
+    /// bound (the conservative-merge invariant: a queued item is always
+    /// visible downstream as a bound before it is poppable).
+    fn deliver(&self, item: WorkItem) {
+        let ready = item.ready;
+        for (merger, key) in self.stages.iter().skip(item.seq + 1) {
+            merger.bound(*key, ready);
+        }
+        let (merger, key) = &self.stages[item.seq];
+        merger.push(*key, item);
+    }
 }
 
 /// One task instance traveling a chain.
@@ -137,6 +195,10 @@ struct WorkItem {
     /// Start time of the round's sensing task (filled at seq 0).
     round_start: f64,
     payload: Payload,
+    /// An executor fault upstream: the item still traverses the chain
+    /// (zero-duration) so pacing, closure, and conservation bookkeeping
+    /// stay sound, but executes nothing and records no round.
+    poisoned: bool,
 }
 
 enum Feedback {
@@ -147,6 +209,180 @@ enum Feedback {
 enum DoneMsg {
     Round(RoundRecord),
     Fault(String),
+}
+
+/// One upstream stream into a unit's merge queue.
+struct Source {
+    /// Delivered, not-yet-executed items (FIFO in global round order;
+    /// their ready times are nondecreasing).
+    items: VecDeque<WorkItem>,
+    /// Lower bound on the ready time of the next item *beyond* those
+    /// queued — raised by ticker pre-announcements and by upstream
+    /// enqueues propagating down the chain.
+    lb: f64,
+    /// One past the last global round this source will carry, set when
+    /// its epoch's ticker exits.
+    close_at: Option<usize>,
+    /// Global round index of the next item expected from upstream.
+    next_round: usize,
+}
+
+/// A unit's admission state: every source bound to it across epochs.
+struct MergerSt {
+    sources: BTreeMap<SourceKey, Source>,
+    shutdown: bool,
+}
+
+/// The per-unit conservative ready-time-ordered merge queue (see the
+/// module docs).
+struct Merger {
+    st: Mutex<MergerSt>,
+    cv: Condvar,
+}
+
+/// The liveness valve: how long a worker waits on admission bounds before
+/// falling back to the minimal available item, degrading merge order
+/// instead of hanging. With the engine actively driven, correct bound
+/// propagation never trips this. It *can* trip — by design — when a
+/// driver parks a session mid-run for longer than the valve with work
+/// queued behind a horizon-parked ticker, or when a real (PJRT) executor
+/// runs one chunk longer than the valve: conservation still holds, but
+/// the replay is no longer bit-comparable to an unpaused run.
+const MERGE_WAIT_VALVE: Duration = Duration::from_secs(5);
+
+impl Merger {
+    fn new() -> Merger {
+        Merger {
+            st: Mutex::new(MergerSt {
+                sources: BTreeMap::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Bind a new source (chain stage) to this unit.
+    fn register(&self, key: SourceKey, base_round: usize, t: f64) {
+        let mut st = self.st.lock().unwrap();
+        st.sources.insert(
+            key,
+            Source {
+                items: VecDeque::new(),
+                lb: t,
+                close_at: None,
+                next_round: base_round,
+            },
+        );
+        self.cv.notify_all();
+    }
+
+    /// Raise a source's delivery lower bound.
+    fn bound(&self, key: SourceKey, lb: f64) {
+        let mut st = self.st.lock().unwrap();
+        if let Some(s) = st.sources.get_mut(&key) {
+            if lb > s.lb {
+                s.lb = lb;
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Enqueue an item (also raises the source's bound to its ready).
+    fn push(&self, key: SourceKey, item: WorkItem) {
+        let mut st = self.st.lock().unwrap();
+        let s = st.sources.get_mut(&key).expect("push to unregistered source");
+        if item.ready > s.lb {
+            s.lb = item.ready;
+        }
+        s.items.push_back(item);
+        self.cv.notify_all();
+    }
+
+    /// Announce that no round at or past `close_at` will arrive on `key`.
+    fn close(&self, key: SourceKey, close_at: usize) {
+        let mut st = self.st.lock().unwrap();
+        if let Some(s) = st.sources.get_mut(&key) {
+            s.close_at = Some(close_at);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Let the worker exit once every source is exhausted.
+    fn shutdown(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// The (ready, key)-minimal queued head, if any.
+    fn min_head(st: &MergerSt) -> Option<(f64, SourceKey)> {
+        let mut best: Option<(f64, SourceKey)> = None;
+        for (&key, s) in &st.sources {
+            if let Some(head) = s.items.front() {
+                let better = match best {
+                    None => true,
+                    Some((br, bk)) => match head.ready.total_cmp(&br) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Greater => false,
+                        std::cmp::Ordering::Equal => key < bk,
+                    },
+                };
+                if better {
+                    best = Some((head.ready, key));
+                }
+            }
+        }
+        best
+    }
+
+    fn take(st: &mut MergerSt, key: SourceKey) -> WorkItem {
+        let s = st.sources.get_mut(&key).expect("pop from missing source");
+        let item = s.items.pop_front().expect("pop from empty source");
+        s.next_round = item.round + 1;
+        item
+    }
+
+    /// Block until an item is safely admissible (or the merger shuts
+    /// down with nothing left). `None` means the worker should exit.
+    fn pop(&self) -> Option<WorkItem> {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            // Drop exhausted sources (their epoch closed and every round
+            // passed through).
+            st.sources.retain(|_, s| {
+                !(s.items.is_empty() && s.close_at.is_some_and(|c| s.next_round >= c))
+            });
+            if st.sources.is_empty() {
+                if st.shutdown {
+                    return None;
+                }
+            } else if let Some((ready, key)) = Self::min_head(&st) {
+                // Safe iff every *other* open source provably delivers
+                // nothing smaller: a queued head already lost the min
+                // comparison; an empty source must have a bound past the
+                // candidate (ties resolve by the causal key order).
+                let safe = st.sources.iter().all(|(&k, s)| {
+                    k == key
+                        || !s.items.is_empty()
+                        || match s.lb.total_cmp(&ready) {
+                            std::cmp::Ordering::Greater => true,
+                            std::cmp::Ordering::Less => false,
+                            std::cmp::Ordering::Equal => key < k,
+                        }
+                });
+                if safe {
+                    return Some(Self::take(&mut st, key));
+                }
+            }
+            let (guard, timeout) = self.cv.wait_timeout(st, MERGE_WAIT_VALVE).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                if let Some((_, key)) = Self::min_head(&st) {
+                    return Some(Self::take(&mut st, key));
+                }
+            }
+        }
+    }
 }
 
 /// Ticker ⇄ driver rendezvous: the admission horizon, retirement, and the
@@ -228,7 +464,7 @@ impl Gate {
 }
 
 struct Worker {
-    tx: mpsc::SyncSender<WorkItem>,
+    merger: Arc<Merger>,
     join: JoinHandle<()>,
 }
 
@@ -330,65 +566,84 @@ fn ticker_loop(t: TickerTask) -> usize {
                 None => break,
             }
         }
+        // Pre-announce the admission to the stage-0 merge queue *before*
+        // (possibly) parking at the horizon gate, so no worker ever waits
+        // on a parked ticker's stale bound.
+        {
+            let (merger, key) = &chain.stages[0];
+            merger.bound(*key, ready);
+        }
         if !gate.admit(ready) {
             break;
         }
         let round = base_round + local;
         ledger.lock().unwrap().note_round(chain.spec.id, round);
-        let item = WorkItem {
+        chain.deliver(WorkItem {
             chain: chain.clone(),
             seq: 0,
             round,
             ready,
             round_start: 0.0,
             payload: None,
-        };
-        if chain.txs[0].send(item).is_err() {
-            break;
-        }
+            poisoned: false,
+        });
         admitted += 1;
+    }
+    // Epoch over (budget, retirement, or a closed feedback loop): no
+    // round at or past `base_round + admitted` will ever exist, so every
+    // stage's source can retire once the admitted prefix drains through.
+    for (merger, key) in &chain.stages {
+        merger.close(*key, base_round + admitted);
     }
     gate.finish();
     admitted
 }
 
-/// One (device, unit) worker: execute in arrival order against a per-unit
-/// engine clock, forward along the chain, report completions.
-fn worker_loop(rx: mpsc::Receiver<WorkItem>, executor: Arc<dyn ChunkExecutor>, time_scale: f64) {
+/// One (device, unit) worker: execute the unit's merge queue in
+/// conservative ready-time order against a per-unit engine clock, forward
+/// along the chain, report completions and busy spans.
+fn worker_loop(
+    merger: Arc<Merger>,
+    device: DeviceId,
+    unit: UnitKind,
+    executor: Arc<dyn ChunkExecutor>,
+    time_scale: f64,
+    acct: mpsc::Sender<BusySpan>,
+) {
     let mut clock = 0.0f64;
-    while let Ok(mut item) = rx.recv() {
+    while let Some(mut item) = merger.pop() {
         let chain = item.chain.clone();
         let task = chain.tasks[item.seq];
         let start = clock.max(item.ready);
-        let ctx = TaskCtx {
-            fleet: &chain.fleet,
-            spec: &chain.spec,
-            task: &task,
-            sensor: chain.sensor,
-            round: item.round,
-        };
-        let dur = match executor.execute(&ctx, &mut item.payload) {
-            Ok(d) => d.max(0.0),
-            Err(e) => {
-                let _ = chain.done.send(DoneMsg::Fault(e.to_string()));
-                // Unblock the ticker: fabricate the pacing feedback the
-                // lost round will never produce, then drop the item (the
-                // fault surfaces as an error from `finish`).
-                if item.seq == 0 {
-                    let _ = chain
-                        .feedback
-                        .send(Feedback::SenseDone { round: item.round, end: start });
+        let mut dur = 0.0;
+        if !item.poisoned {
+            let ctx = TaskCtx {
+                fleet: &chain.fleet,
+                spec: &chain.spec,
+                task: &task,
+                sensor: chain.sensor,
+                round: item.round,
+            };
+            match executor.execute(&ctx, &mut item.payload) {
+                Ok(d) => dur = d.max(0.0),
+                Err(e) => {
+                    let _ = chain.done.send(DoneMsg::Fault(e.to_string()));
+                    item.poisoned = true;
                 }
-                let _ = chain
-                    .feedback
-                    .send(Feedback::RoundDone { round: item.round, end: start });
-                continue;
             }
-        };
+        }
         let end = start + dur;
         clock = end;
+        if !item.poisoned {
+            let _ = acct.send(BusySpan {
+                device,
+                kind: busy_kind(task.kind, unit),
+                dur,
+                end,
+            });
+        }
         if time_scale > 0.0 && dur > 0.0 {
-            std::thread::sleep(std::time::Duration::from_secs_f64(dur * time_scale));
+            std::thread::sleep(Duration::from_secs_f64(dur * time_scale));
         }
         if item.seq == 0 {
             item.round_start = start;
@@ -399,15 +654,16 @@ fn worker_loop(rx: mpsc::Receiver<WorkItem>, executor: Arc<dyn ChunkExecutor>, t
         if item.seq + 1 < chain.tasks.len() {
             item.seq += 1;
             item.ready = end;
-            let tx = chain.txs[item.seq].clone();
-            let _ = tx.send(item);
+            chain.deliver(item);
         } else {
-            let _ = chain.done.send(DoneMsg::Round(RoundRecord {
-                pipeline: chain.spec.id,
-                run: item.round,
-                start: item.round_start,
-                end,
-            }));
+            if !item.poisoned {
+                let _ = chain.done.send(DoneMsg::Round(RoundRecord {
+                    pipeline: chain.spec.id,
+                    run: item.round,
+                    start: item.round_start,
+                    end,
+                }));
+            }
             let _ = chain
                 .feedback
                 .send(Feedback::RoundDone { round: item.round, end });
@@ -427,22 +683,32 @@ pub struct ServeEngine {
     active: Vec<TickerHandle>,
     /// Retired epochs' tickers, joined (for admitted counts) at finish.
     drained: Vec<TickerHandle>,
+    /// Binding epochs bound so far (disambiguates source keys).
+    epochs: usize,
     ledger: Arc<Mutex<EpochLedger>>,
     /// `Some` until [`Self::finish`] drops it to close the collector.
     done_tx: Option<mpsc::Sender<DoneMsg>>,
     done_rx: mpsc::Receiver<DoneMsg>,
+    /// Busy-span collector (energy integration), same lifecycle.
+    acct_tx: Option<mpsc::Sender<BusySpan>>,
+    acct_rx: mpsc::Receiver<BusySpan>,
+    /// Fleet over time: (t, fleet) — index 0 is the starting fleet.
+    fleet_history: Vec<(f64, Fleet)>,
     rebinds: Vec<Rebind>,
     record_cap: Option<usize>,
 }
 
 impl Drop for ServeEngine {
     /// Dropping an engine without [`Self::finish`] must not strand its
-    /// threads: retire every ticker (they exit once their in-flight
-    /// feedback drains); the workers follow when the last chain sender
-    /// drops with the engine's fields.
+    /// threads: retire every ticker (they close their sources once their
+    /// in-flight feedback drains) and let the workers shut down after the
+    /// drain.
     fn drop(&mut self) {
         for h in self.active.iter().chain(&self.drained) {
             h.gate.retire();
+        }
+        for w in self.workers.values() {
+            w.merger.shutdown();
         }
     }
 }
@@ -450,17 +716,22 @@ impl Drop for ServeEngine {
 impl ServeEngine {
     pub fn new(executor: Arc<dyn ChunkExecutor>, cfg: ServeCfg, fleet: Fleet) -> ServeEngine {
         let (done_tx, done_rx) = mpsc::channel();
+        let (acct_tx, acct_rx) = mpsc::channel();
         ServeEngine {
             executor,
             cfg,
-            fleet: Arc::new(fleet),
+            fleet: Arc::new(fleet.clone()),
             now: 0.0,
             workers: BTreeMap::new(),
             active: Vec::new(),
             drained: Vec::new(),
+            epochs: 0,
             ledger: Arc::new(Mutex::new(EpochLedger::new())),
             done_tx: Some(done_tx),
             done_rx,
+            acct_tx: Some(acct_tx),
+            acct_rx,
+            fleet_history: vec![(0.0, fleet)],
             rebinds: Vec::new(),
             record_cap: None,
         }
@@ -490,24 +761,32 @@ impl ServeEngine {
 
     /// Replace the fleet new epochs bind against. Workers of departed
     /// devices stay up (in-flight work drains through them); workers for
-    /// new devices spawn at the next [`Self::set_plan`].
+    /// new devices spawn at the next [`Self::set_plan`]. The change is
+    /// recorded in the fleet history for energy replay.
     pub fn set_fleet(&mut self, fleet: Fleet) {
-        self.fleet = Arc::new(fleet);
+        self.fleet = Arc::new(fleet.clone());
+        self.fleet_history.push((self.now, fleet));
     }
 
-    fn worker_tx(&mut self, device: DeviceId, unit: UnitKind) -> mpsc::SyncSender<WorkItem> {
+    fn worker_merger(&mut self, device: DeviceId, unit: UnitKind) -> Arc<Merger> {
         if let Some(w) = self.workers.get(&(device, unit)) {
-            return w.tx.clone();
+            return w.merger.clone();
         }
-        let (tx, rx) = mpsc::sync_channel(self.cfg.channel_depth.max(4));
+        let merger = Arc::new(Merger::new());
         let executor = self.executor.clone();
         let scale = self.cfg.time_scale;
+        let acct = self
+            .acct_tx
+            .as_ref()
+            .expect("serving engine already finished")
+            .clone();
+        let m = merger.clone();
         let join = std::thread::Builder::new()
             .name(format!("serve-{device}-{unit:?}"))
-            .spawn(move || worker_loop(rx, executor, scale))
+            .spawn(move || worker_loop(m, device, unit, executor, scale, acct))
             .expect("spawn serve worker");
-        self.workers.insert((device, unit), Worker { tx: tx.clone(), join });
-        tx
+        self.workers.insert((device, unit), Worker { merger: merger.clone(), join });
+        merger
     }
 
     fn retire_active(&mut self) {
@@ -545,6 +824,8 @@ impl ServeEngine {
     ) {
         let t0 = Instant::now();
         self.retire_active();
+        let epoch = self.epochs;
+        self.epochs += 1;
         let mut apps = 0usize;
         for ep in &plan.plans {
             let spec = pipelines
@@ -553,15 +834,19 @@ impl ServeEngine {
                 .expect("plan for unknown pipeline")
                 .clone();
             let tasks = ep.tasks(&spec.model);
-            let txs: Vec<mpsc::SyncSender<WorkItem>> = tasks
+            let base_round = self.ledger.lock().unwrap().base_round(spec.id);
+            let stages: Vec<Stage> = tasks
                 .iter()
-                .map(|t| {
+                .enumerate()
+                .map(|(j, t)| {
                     let unit = GroundTruth::unit_of(&self.fleet, t);
-                    self.worker_tx(t.device, unit)
+                    let merger = self.worker_merger(t.device, unit);
+                    let key: SourceKey = (spec.id.0, j, epoch);
+                    merger.register(key, base_round, self.now);
+                    (merger, key)
                 })
                 .collect();
             let sensor = LatencyModel::source_sensor(&spec);
-            let base_round = self.ledger.lock().unwrap().base_round(spec.id);
             let ticker_name = format!("serve-ticker-{}", spec.id);
             let (feedback_tx, feedback_rx) = mpsc::channel();
             let done = self
@@ -572,7 +857,7 @@ impl ServeEngine {
             let chain = Arc::new(ChainBinding {
                 spec,
                 tasks,
-                txs,
+                stages,
                 feedback: feedback_tx,
                 done,
                 fleet: self.fleet.clone(),
@@ -625,7 +910,7 @@ impl ServeEngine {
 
     /// Shut down: retire the live epoch, drain every in-flight round, join
     /// all threads, and return the collected records plus the conservation
-    /// totals.
+    /// totals, busy spans, and fleet history.
     pub fn finish(mut self) -> Result<ServeOutcome, RuntimeError> {
         let backend = self.executor.name();
         self.retire_active();
@@ -636,14 +921,17 @@ impl ServeEngine {
                 message: "serving ticker thread panicked".into(),
             })?;
         }
-        // Drop all our senders: once the in-flight items drain, the worker
-        // inputs and the collector channel close in turn.
+        // Every ticker has exited and closed its sources; the workers
+        // drain what is left and exit once told to shut down. Dropping
+        // our collector senders closes the channels after the last
+        // in-flight clone goes with its chain.
         self.done_tx.take();
+        self.acct_tx.take();
         let workers = std::mem::take(&mut self.workers);
         let worker_count = workers.len();
         let mut joins = Vec::with_capacity(worker_count);
         for (_, w) in workers {
-            drop(w.tx);
+            w.merger.shutdown();
             joins.push(w.join);
         }
         let mut records: Vec<RoundRecord> = Vec::new();
@@ -679,6 +967,14 @@ impl ServeEngine {
                 records.drain(..overflow);
             }
         }
+        let mut busy: Vec<BusySpan> = self.acct_rx.try_iter().collect();
+        busy.sort_by(|a, b| {
+            a.end
+                .total_cmp(&b.end)
+                .then_with(|| a.device.cmp(&b.device))
+                .then_with(|| a.kind.cmp(&b.kind))
+                .then_with(|| a.dur.total_cmp(&b.dur))
+        });
         Ok(ServeOutcome {
             executor: backend,
             records,
@@ -686,6 +982,8 @@ impl ServeEngine {
             completed,
             rebinds: self.rebinds.clone(),
             workers: worker_count,
+            busy,
+            fleet_history: self.fleet_history.clone(),
         })
     }
 
@@ -781,6 +1079,11 @@ mod tests {
         assert!(out.records.iter().all(|r| r.end > r.start && r.start >= 0.0));
         assert_eq!(out.rebinds.len(), 1);
         assert!(out.workers > 0);
+        // Energy accounting: one busy span per executed task, all within
+        // the virtual timeline.
+        assert!(!out.busy.is_empty());
+        assert!(out.busy.iter().all(|s| s.dur >= 0.0 && s.end > 0.0));
+        assert_eq!(out.fleet_history.len(), 1);
     }
 
     #[test]
@@ -868,6 +1171,40 @@ mod tests {
         }
     }
 
+    /// The deterministic-merge acceptance: two pipelines sharing every
+    /// computation unit of one device replay *bit-identically* — records
+    /// and busy spans — across repeated runs, despite OS scheduling.
+    #[test]
+    fn shared_unit_replays_are_bit_identical() {
+        let run = || {
+            let ps = pipes(2);
+            // Both pipelines entirely on device 0: sensor, cpu, accel all
+            // shared — the maximal merge-contention shape.
+            let plan = plan_spread(&ps, 1);
+            let mut eng = engine(1);
+            eng.set_plan(&plan, &ps, Some(10));
+            eng.run_until(f64::INFINITY);
+            eng.finish().unwrap()
+        };
+        let a = run();
+        for _ in 0..3 {
+            let b = run();
+            assert_eq!(a.records.len(), b.records.len());
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!((x.pipeline, x.run), (y.pipeline, y.run));
+                assert_eq!(x.start.to_bits(), y.start.to_bits(), "{x:?} vs {y:?}");
+                assert_eq!(x.end.to_bits(), y.end.to_bits(), "{x:?} vs {y:?}");
+            }
+            assert_eq!(a.busy.len(), b.busy.len());
+            for (x, y) in a.busy.iter().zip(&b.busy) {
+                assert_eq!(x.device, y.device);
+                assert_eq!(x.kind, y.kind);
+                assert_eq!(x.dur.to_bits(), y.dur.to_bits());
+                assert_eq!(x.end.to_bits(), y.end.to_bits());
+            }
+        }
+    }
+
     #[test]
     fn record_cap_bounds_retained_records() {
         let ps = pipes(1);
@@ -882,5 +1219,26 @@ mod tests {
         assert_eq!(out.records.len(), 5, "ring window must cap records");
         // The retained records are the most recent ones.
         assert!(out.records.iter().all(|r| r.run >= 15));
+    }
+
+    /// Busy spans replayed through the power accountant integrate the
+    /// same energy the DES would charge for the same busy time.
+    #[test]
+    fn busy_spans_integrate_into_energy() {
+        use crate::power::EnergyReplay;
+        let ps = pipes(1);
+        let plan = plan_spread(&ps, 1);
+        let mut eng = engine(1);
+        eng.set_plan(&plan, &ps, Some(6));
+        eng.run_until(f64::INFINITY);
+        let out = eng.finish().unwrap();
+        let horizon = out.records.iter().map(|r| r.end).fold(0.0, f64::max);
+        let mut replay = EnergyReplay::new(out.fleet_history[0].1.clone());
+        for s in &out.busy {
+            replay.record(s);
+        }
+        let base = fleet(1).get(DeviceId(0)).spec.power.base_w;
+        let e = replay.energy_at(horizon);
+        assert!(e > base * horizon, "active work must show above base: {e}");
     }
 }

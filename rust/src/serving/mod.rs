@@ -7,11 +7,15 @@
 //! rebindable while rounds are in flight:
 //!
 //! - [`ServeEngine`]: one worker thread per (device, computation unit)
-//!   with bounded queues for backpressure, a sensor-rate ticker per app
-//!   pacing round admission, and *live plan switches* — a replanned
+//!   admitting work through a *deterministic conservative merge*
+//!   (ready-time-ordered per-unit queues with propagated bounds, so
+//!   shared-unit replays are bit-comparable), a sensor-rate ticker per
+//!   app pacing round admission, and *live plan switches* — a replanned
 //!   deployment rebinds onto the same threads while the old epoch's
 //!   in-flight rounds drain gracefully, with the measured rebind pause
-//!   reported and no admitted round ever dropped.
+//!   reported and no admitted round ever dropped. Workers report their
+//!   busy intervals as [`crate::power::BusySpan`]s, so served sessions
+//!   integrate real energy through the shared power accountant.
 //! - [`ChunkExecutor`] / [`VirtualExecutor`]: what "run this chunk" means.
 //!   The device-model cost estimator doubles as a deterministic
 //!   virtual-time executor on stock toolchains; real AOT-compiled HLO

@@ -401,19 +401,51 @@ pub fn scenario_bursty8() -> CannedScenario {
     CannedScenario { name: "bursty8", fleet, scenario }
 }
 
+/// The battery-driven departure cascade: four always-on apps whose
+/// endpoints live on the first body band (d0–d3), batteries declared on
+/// the whole second band (d4–d7) with staggered capacities. Every
+/// depletion is an *exact* timeline event (no poll quantization): the
+/// suffix wearable drains dry, departs, the replan shifts its load onto
+/// the survivors — raising their modeled draw and *accelerating* the next
+/// depletion — until the second band is gone and the apps run on d0–d3
+/// alone. Runs identically on the simulator and the streaming serve path
+/// (`synergy scenario --name cascade8` / `synergy serve --scenario
+/// cascade8`); pair with bounded plan search.
+pub fn scenario_cascade8() -> CannedScenario {
+    let fleet = fleet8();
+    let scenario = Scenario::new()
+        .at(0.0)
+        .register(pipeline(0, ModelName::KWS, 0, 3))
+        .at(0.0)
+        .register(pipeline(1, ModelName::SimpleNet, 1, 2))
+        .at(0.0)
+        .register(pipeline(2, ModelName::ConvNet5, 2, 0))
+        .at(0.0)
+        .register(pipeline(3, ModelName::ResSimpleNet, 3, 1))
+        // Staggered capacities: the suffix device always depletes first,
+        // and each departure concentrates load on the rest.
+        .battery(DeviceId(7), 0.5)
+        .battery(DeviceId(6), 0.9)
+        .battery(DeviceId(5), 1.4)
+        .battery(DeviceId(4), 2.0)
+        .until(10.0);
+    CannedScenario { name: "cascade8", fleet, scenario }
+}
+
 /// Look up a canned scenario by name (see [`canned_scenario_names`]).
 pub fn canned_scenario(name: &str) -> Option<CannedScenario> {
     match name {
         "jog" | "jog4" => Some(scenario_jog4()),
         "churn8" => Some(scenario_churn8()),
         "bursty8" => Some(scenario_bursty8()),
+        "cascade8" => Some(scenario_cascade8()),
         _ => None,
     }
 }
 
 /// Valid canned-scenario names (CLI help and error messages).
 pub fn canned_scenario_names() -> &'static str {
-    "jog, churn8, bursty8"
+    "jog, churn8, bursty8, cascade8"
 }
 
 #[cfg(test)]
@@ -537,7 +569,7 @@ mod tests {
 
     #[test]
     fn canned_scenarios_are_well_formed() {
-        for name in ["jog", "churn8", "bursty8"] {
+        for name in ["jog", "churn8", "bursty8", "cascade8"] {
             let c = canned_scenario(name).unwrap_or_else(|| panic!("missing {name}"));
             assert!(c.scenario.duration() > 0.0, "{name}");
             assert!(!c.scenario.events().is_empty(), "{name}");
@@ -548,6 +580,33 @@ mod tests {
         let jog = scenario_jog4();
         assert_eq!(jog.fleet.get(DeviceId(3)).name, "watch");
         assert!(jog.fleet.get(DeviceId(3)).has_sensor(SensorKind::Imu));
+    }
+
+    #[test]
+    fn cascade8_arms_the_whole_second_band_with_staggered_capacities() {
+        let c = scenario_cascade8();
+        assert_eq!(c.fleet.len(), 8);
+        let batteries = c.scenario.batteries();
+        assert_eq!(batteries.len(), 4);
+        // Batteries cover exactly d4..d7, capacities ascending as ids
+        // descend — the suffix always dries out first.
+        let mut by_dev: Vec<(usize, f64)> =
+            batteries.iter().map(|&(d, cap, _)| (d.0, cap)).collect();
+        by_dev.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(by_dev.iter().map(|&(d, _)| d).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        assert!(by_dev.windows(2).all(|w| w[0].1 > w[1].1), "{by_dev:?}");
+        // Every app endpoint stays on the first band, so all four suffix
+        // departures replan cleanly.
+        for ev in c.scenario.events() {
+            if let crate::api::ScenarioAction::Register { spec, .. } = &ev.action {
+                match (spec.source, spec.target) {
+                    (SourceReq::Device(s), TargetReq::Device(t)) => {
+                        assert!(s.0 < 4 && t.0 < 4, "{spec:?}");
+                    }
+                    other => panic!("pinned endpoints expected, got {other:?}"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use synergy::api::{RuntimeError, Scenario, SessionCfg, SessionReport, SynergyRuntime};
+use synergy::api::{Scenario, SessionCfg, SessionReport, SynergyRuntime};
 use synergy::device::DeviceId;
 use synergy::model::zoo::ModelName;
 use synergy::orchestrator::Synergy;
@@ -96,9 +96,46 @@ fn served_session_tracks_des_session_within_tolerance() {
         );
     }
 
-    // Serving has no power model; the DES does.
-    assert_eq!(served.energy_j, 0.0);
-    assert!(des.energy_j > 0.0);
+    // Both paths integrate energy through the shared power accountant.
+    assert!(des.energy_j > 0.0 && served.energy_j > 0.0);
+    let egap = (served.energy_j - des.energy_j).abs() / des.energy_j;
+    assert!(
+        egap < 0.15,
+        "served {} J vs DES {} J (gap {egap:.3})",
+        served.energy_j,
+        des.energy_j
+    );
+    assert!(served.intervals.iter().all(|iv| iv.power_w > 0.0), "{:?}", served.intervals);
+}
+
+/// The acceptance bar for the `power/` subsystem on the serve path:
+/// identical plans, identical seed → sim and served sessions agree on
+/// total energy within 15% (they share the accountant arithmetic; the
+/// residual gap is scheduling skew in who runs when).
+#[test]
+fn sim_vs_serve_energy_parity() {
+    let cfg = SessionCfg { seed: 11, ..SessionCfg::default() };
+    let build = || {
+        let runtime = SynergyRuntime::new(fleet4());
+        for spec in workload(2).unwrap().pipelines {
+            runtime.register(spec).unwrap();
+        }
+        runtime.session_with(Scenario::new().until(6.0), cfg).unwrap()
+    };
+    let des = build().finish().unwrap();
+    let served = build().serve(ServeCfg::default()).unwrap().finish().unwrap();
+    assert!(des.energy_j > 0.0 && served.energy_j > 0.0);
+    let egap = (served.energy_j - des.energy_j).abs() / des.energy_j;
+    assert!(
+        egap < 0.15,
+        "served {} J vs DES {} J (gap {egap:.3})",
+        served.energy_j,
+        des.energy_j
+    );
+    // Power decomposes per interval on both paths.
+    let base: f64 = fleet4().devices.iter().map(|d| d.spec.power.base_w).sum();
+    assert!(des.power_w > base);
+    assert!(served.power_w > base, "served {} W vs base {base} W", served.power_w);
 }
 
 /// The bursty canned scenario end to end on the streaming engine: five
@@ -178,54 +215,106 @@ fn scripted_set_fleet_reshape_replans_without_panicking() {
     assert_eq!(runtime.fleet().len(), 4);
 }
 
-/// Satellite: `SessionCfg::trace_window` bounds the memory proxy (retained
-/// record count) in long sessions while totals keep counting.
+/// Satellite regression: `SessionCfg::trace_window` bounds *retained*
+/// memory (trace spans) while interval statistics aggregate streamingly —
+/// a long session windowed to 25 spans must still report every round in
+/// its intervals, identical to an unwindowed run.
 #[test]
-fn trace_window_bounds_long_session_records() {
-    let runtime = SynergyRuntime::new(fleet4());
-    runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
-    let cfg = SessionCfg {
-        seed: 5,
-        record_trace: true,
-        trace_window: Some(25),
-        ..SessionCfg::default()
+fn trace_window_bounds_memory_without_corrupting_intervals() {
+    let run = |window: Option<usize>| {
+        let runtime = SynergyRuntime::new(fleet4());
+        runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+        let cfg = SessionCfg { seed: 5, record_trace: true, trace_window: window };
+        runtime
+            .session_with(Scenario::new().at(30.0).pause(PipelineId(0)).until(60.0), cfg)
+            .unwrap()
+            .finish()
+            .unwrap()
     };
-    let report = runtime
-        .session_with(Scenario::new().until(60.0), cfg)
-        .unwrap()
-        .finish()
-        .unwrap();
+    let windowed = run(Some(25));
+    let full = run(None);
     assert!(
-        report.completions > 25,
+        windowed.completions > 25,
         "session too short to exercise the window: {}",
-        report.completions
+        windowed.completions
     );
-    let retained: usize = report.intervals.iter().map(|iv| iv.completions).sum();
-    assert!(
-        retained <= 25,
-        "ring window must bound retained records, got {retained}"
-    );
-    let trace = report.trace.expect("record_trace");
+    // The window must not corrupt intervals older than itself…
+    let retained: usize = windowed.intervals.iter().map(|iv| iv.completions).sum();
+    assert_eq!(retained, windowed.completions, "intervals must see every round");
+    assert_eq!(windowed.completions, full.completions);
+    for (w, f) in windowed.intervals.iter().zip(&full.intervals) {
+        assert_eq!(w.completions, f.completions);
+        assert_eq!(w.avg_latency_s, f.avg_latency_s);
+        assert_eq!(w.power_w, f.power_w);
+    }
+    // …while the trace ring stays bounded.
+    let trace = windowed.trace.expect("record_trace");
     assert!(
         trace.spans.len() <= 25,
-        "trace spans ride the same window, got {}",
+        "trace spans must ride the window, got {}",
         trace.spans.len()
     );
+    assert!(full.trace.expect("record_trace").spans.len() > 25);
 }
 
-/// Battery ramps integrate the DES energy model; the streaming engine has
-/// none, so serving such a scenario is a typed error, not a silent no-op.
+/// Battery ramps run on the serve path too (the drain model is
+/// engine-independent), and the depletion instant matches the simulator
+/// session exactly — no poll quantization on either engine.
 #[test]
-fn serve_session_rejects_battery_scenarios() {
+fn serve_session_runs_battery_scenarios_with_identical_depletion_instants() {
+    let cfg = SessionCfg { seed: 7, ..SessionCfg::default() };
+    let build = || {
+        let runtime = SynergyRuntime::new(fleet_n(3));
+        runtime.register(pipeline(0, ModelName::KWS, 0, 1)).unwrap();
+        runtime
+            .session_with(Scenario::new().battery(DeviceId(2), 0.1).until(2.0), cfg)
+            .unwrap()
+    };
+    let des = build().finish().unwrap();
+    let served = build().serve(ServeCfg::default()).unwrap().finish().unwrap();
+    let depletion_t = |r: &SessionReport| {
+        r.switches
+            .iter()
+            .find(|s| s.cause == "battery-depleted(d2)")
+            .unwrap_or_else(|| panic!("no depletion switch: {:?}", r.switches))
+            .t
+    };
+    let (td, ts) = (depletion_t(&des), depletion_t(&served));
+    assert_eq!(td.to_bits(), ts.to_bits(), "sim {td} vs served {ts}");
+    assert!(td > 0.0 && td < 1.0, "{td}");
+    // Both sessions keep serving on the survivors after the departure.
+    assert!(des.intervals.last().unwrap().completions > 0);
+    assert!(served.intervals.last().unwrap().completions > 0);
+    let summary = served.served.expect("served summary");
+    assert_eq!(summary.admitted_rounds, summary.completed_rounds);
+}
+
+/// Satellite: wall-clock pacing. With `time_scale = 1.0` a short served
+/// session should take roughly its virtual duration in wall time.
+/// `#[ignore]`d in CI (shared runners make wall-clock bounds flaky); run
+/// with `cargo test -- --ignored` to validate pacing locally.
+#[test]
+#[ignore = "wall-clock pacing bound; flaky on loaded shared runners"]
+fn real_time_pacing_tracks_wall_clock() {
     let runtime = SynergyRuntime::new(fleet4());
     runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+    let horizon = 0.5;
     let session = runtime
-        .session(Scenario::new().battery(DeviceId(3), 5.0).until(2.0))
+        .session(Scenario::new().until(horizon))
+        .unwrap()
+        .serve(ServeCfg { time_scale: 1.0, ..ServeCfg::default() })
         .unwrap();
-    let err = session.serve(ServeCfg::default()).unwrap_err();
+    let wall = std::time::Instant::now();
+    let report = session.finish().unwrap();
+    let elapsed = wall.elapsed().as_secs_f64();
+    assert!(report.completions > 0);
+    // Pacing sleeps happen per busy task on the critical path: the run
+    // must take a substantial fraction of the virtual horizon and not
+    // blow far past it.
+    let skew = (elapsed - horizon) / horizon;
     assert!(
-        matches!(err, RuntimeError::InvalidScenario(_)),
-        "{err:?}"
+        (-0.7..=2.0).contains(&skew),
+        "wall {elapsed:.3}s vs virtual {horizon}s (skew {skew:.2})"
     );
 }
 

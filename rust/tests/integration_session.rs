@@ -268,6 +268,145 @@ fn battery_depletion_triggers_departure() {
     assert!(report.intervals.last().unwrap().completions > 0);
 }
 
+/// The canned battery cascade: the whole second band (d4–d7) drains dry
+/// one wearable at a time, each depletion an exact timeline event firing
+/// a replan that shifts load onto the survivors.
+#[test]
+fn cascade8_depletes_the_second_band_in_order() {
+    let canned = synergy::workload::scenario_cascade8();
+    let runtime = SynergyRuntime::builder()
+        .fleet(canned.fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    let report = runtime
+        .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+        .unwrap()
+        .finish()
+        .unwrap();
+    let depletions: Vec<(&str, f64)> = report
+        .switches
+        .iter()
+        .filter(|s| s.cause.starts_with("battery-depleted"))
+        .map(|s| (s.cause.as_str(), s.t))
+        .collect();
+    assert_eq!(
+        depletions.iter().map(|(c, _)| *c).collect::<Vec<_>>(),
+        vec![
+            "battery-depleted(d7)",
+            "battery-depleted(d6)",
+            "battery-depleted(d5)",
+            "battery-depleted(d4)",
+        ],
+        "{:?}",
+        report.switches
+    );
+    assert!(
+        depletions.windows(2).all(|w| w[0].1 <= w[1].1),
+        "depletions must be ordered in time: {depletions:?}"
+    );
+    assert!(depletions.last().unwrap().1 < report.duration);
+    assert_eq!(runtime.fleet().len(), 4, "the whole second band departed");
+    // The apps keep running on the first band to the end.
+    assert!(report.intervals.last().unwrap().completions > 0);
+    assert!(report.energy_j > 0.0);
+}
+
+/// The cascade replays identically on the streaming engine: same
+/// depletion instants (the drain model is engine-independent), same
+/// switch timeline, conservation across every battery-driven rebind.
+#[test]
+fn cascade8_runs_on_the_serve_path_with_matching_depletions() {
+    let run_sim = || {
+        let canned = synergy::workload::scenario_cascade8();
+        let runtime = SynergyRuntime::builder()
+            .fleet(canned.fleet)
+            .planner(Synergy::planner_bounded(8))
+            .build();
+        runtime
+            .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+    let run_serve = || {
+        let canned = synergy::workload::scenario_cascade8();
+        let runtime = SynergyRuntime::builder()
+            .fleet(canned.fleet)
+            .planner(Synergy::planner_bounded(8))
+            .build();
+        runtime
+            .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+            .unwrap()
+            .serve(synergy::serving::ServeCfg::default())
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+    let sim = run_sim();
+    let served = run_serve();
+    let instants = |r: &synergy::api::SessionReport| {
+        r.switches
+            .iter()
+            .filter(|s| s.cause.starts_with("battery-depleted"))
+            .map(|s| (s.cause.clone(), s.t))
+            .collect::<Vec<_>>()
+    };
+    let (a, b) = (instants(&sim), instants(&served));
+    assert_eq!(a.len(), 4);
+    assert_eq!(a.len(), b.len());
+    for ((ca, ta), (cb, tb)) in a.iter().zip(&b) {
+        assert_eq!(ca, cb);
+        assert_eq!(ta.to_bits(), tb.to_bits(), "sim {ta} vs served {tb}");
+    }
+    let summary = served.served.expect("served summary");
+    assert_eq!(
+        summary.admitted_rounds, summary.completed_rounds,
+        "battery-driven rebinds dropped rounds: {summary:?}"
+    );
+    assert!(served.energy_j > 0.0);
+}
+
+/// Scripted recharges move the depletion instant (or prevent depletion
+/// altogether) — the user docking a wearable mid-run.
+#[test]
+fn recharge_defers_battery_depletion() {
+    let run = |recharge_at: Option<f64>| {
+        let runtime = SynergyRuntime::new(fleet_n(2));
+        // The app lives entirely on d0, so the idle suffix d1 can depart.
+        runtime.register(pipeline(0, ModelName::KWS, 0, 0)).unwrap();
+        let mut scenario = Scenario::new().battery(DeviceId(1), 0.6).until(6.0);
+        if let Some(t) = recharge_at {
+            scenario = scenario.at(t).recharge(1, 0.6);
+        }
+        runtime
+            .session_with(scenario, SessionCfg { seed: 3, ..SessionCfg::default() })
+            .unwrap()
+            .finish()
+            .unwrap()
+    };
+    let plain = run(None);
+    let t_plain = plain
+        .switches
+        .iter()
+        .find(|s| s.cause == "battery-depleted(d1)")
+        .unwrap_or_else(|| panic!("no depletion: {:?}", plain.switches))
+        .t;
+    assert!(t_plain > 0.0 && t_plain < 6.0);
+    // Recharging to full just before the depletion restarts the drain
+    // clock: the depletion lands later (roughly twice as late), if at
+    // all within the horizon.
+    let recharged = run(Some(t_plain * 0.5));
+    let t_recharged = recharged
+        .switches
+        .iter()
+        .find(|s| s.cause == "battery-depleted(d1)")
+        .map(|s| s.t);
+    match t_recharged {
+        None => {}
+        Some(t) => assert!(t > t_plain, "recharge must defer depletion: {t} vs {t_plain}"),
+    }
+}
+
 /// Mid-run QoS tightening opens a violation span that closes when the
 /// hints relax again.
 #[test]

@@ -1,0 +1,210 @@
+//! Seeded scenario fuzzer: random *valid* scenarios over `fleet8`,
+//! checked against the session invariants on both execution engines —
+//! deterministic replay, round conservation, interval/total agreement,
+//! identical switch timelines across sim and serve, and no panics.
+//!
+//! The generator is driven by the repo's own LCG-backed PRNG (no new
+//! dependencies) and models runtime state (fleet size, live/paused apps,
+//! armed batteries) so every emitted script is legal: dense-id churn only
+//! at the suffix, endpoints clear of every device that can depart, and
+//! scripted churn disabled whenever a battery can deplete (depletions
+//! already churn the suffix at instants the generator cannot see).
+
+use synergy::api::{Qos, Scenario, SessionCfg, SessionReport, SynergyRuntime};
+use synergy::device::DeviceId;
+use synergy::model::zoo::ModelName;
+use synergy::orchestrator::Synergy;
+use synergy::pipeline::PipelineId;
+use synergy::serving::ServeCfg;
+use synergy::util::rng::Rng;
+use synergy::workload::{fleet8, pipeline};
+
+/// The Table I models the fuzzer draws apps from (small enough to keep
+/// replans fast under the beam planner).
+const MODELS: [ModelName; 4] = [
+    ModelName::KWS,
+    ModelName::SimpleNet,
+    ModelName::ConvNet5,
+    ModelName::ResSimpleNet,
+];
+
+/// One generated scenario: churny (huge batteries, scripted suffix
+/// churn) or battery-draining (no scripted churn; depletions do it).
+fn generate(seed: u64) -> Scenario {
+    let mut rng = Rng::new(seed);
+    let draining = rng.chance(0.5);
+    let mut scenario = Scenario::new();
+
+    // Batteries on the churnable suffix only (d6, d7): endpoints stay on
+    // d0..d5, so battery-driven departures always replan cleanly.
+    let mut armed: Vec<DeviceId> = Vec::new();
+    for d in [7usize, 6] {
+        if rng.chance(0.7) {
+            let cap = if draining {
+                rng.range_f64(0.4, 2.5)
+            } else {
+                1e9 // declared but never depleting: exercises the armed path
+            };
+            scenario = scenario.battery(DeviceId(d), cap);
+            armed.push(DeviceId(d));
+        }
+    }
+
+    let mut t = 0.0f64;
+    let mut next_app = 0usize;
+    let mut live: Vec<usize> = Vec::new();
+    let mut paused: Vec<usize> = Vec::new();
+    let mut fleet_len = 8usize;
+    let mut departed: Vec<DeviceId> = Vec::new();
+
+    // Seed load so the timeline is never empty.
+    for _ in 0..2 {
+        let m = *rng.pick(&MODELS);
+        let (s, tgt) = (rng.range(0, 6), rng.range(0, 6));
+        scenario = scenario.at(t).register(pipeline(next_app, m, s, tgt));
+        live.push(next_app);
+        next_app += 1;
+        t += rng.range_f64(0.05, 0.2);
+    }
+
+    while t < 3.5 {
+        t += rng.range_f64(0.25, 0.6);
+        match rng.range(0, 7) {
+            0 if next_app < 6 => {
+                let m = *rng.pick(&MODELS);
+                let (s, tgt) = (rng.range(0, 6), rng.range(0, 6));
+                scenario = scenario.at(t).register(pipeline(next_app, m, s, tgt));
+                live.push(next_app);
+                next_app += 1;
+            }
+            1 if live.len() > 1 => {
+                let app = live.swap_remove(rng.range(0, live.len()));
+                scenario = scenario.at(t).unregister(PipelineId(app));
+            }
+            2 if !live.is_empty() => {
+                let app = live.swap_remove(rng.range(0, live.len()));
+                scenario = scenario.at(t).pause(PipelineId(app));
+                paused.push(app);
+            }
+            3 if !paused.is_empty() => {
+                let app = paused.swap_remove(rng.range(0, paused.len()));
+                scenario = scenario.at(t).resume(PipelineId(app));
+                live.push(app);
+            }
+            4 if !live.is_empty() => {
+                let app = *rng.pick(&live);
+                let qos = Qos {
+                    min_rate_hz: rng.range_f64(0.0, 30.0),
+                    ..Qos::default()
+                };
+                scenario = scenario.at(t).qos(PipelineId(app), qos);
+            }
+            5 if !draining => {
+                // Scripted suffix churn (only when depletions cannot
+                // shrink the fleet underneath the script).
+                if fleet_len > 6 && rng.chance(0.7) {
+                    fleet_len -= 1;
+                    let d = DeviceId(fleet_len);
+                    departed.push(d);
+                    scenario = scenario.at(t).device_left(d);
+                } else if let Some(d) = departed.pop() {
+                    scenario = scenario.at(t).device_joined(fleet8().get(d).clone());
+                    fleet_len += 1;
+                }
+            }
+            6 if !armed.is_empty() => {
+                let d = *rng.pick(&armed);
+                scenario = scenario.at(t).recharge(d, rng.range_f64(0.2, 1.0));
+            }
+            _ => {}
+        }
+    }
+    scenario.until(t + 0.5)
+}
+
+fn run_sim(scenario: Scenario, seed: u64) -> SessionReport {
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet8())
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    runtime
+        .session_with(scenario, SessionCfg { seed, ..SessionCfg::default() })
+        .unwrap()
+        .finish()
+        .unwrap()
+}
+
+fn run_serve(scenario: Scenario, seed: u64) -> SessionReport {
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet8())
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    runtime
+        .session_with(scenario, SessionCfg { seed, ..SessionCfg::default() })
+        .unwrap()
+        .serve(ServeCfg::default())
+        .unwrap()
+        .finish()
+        .unwrap()
+}
+
+/// Switch timeline signature: everything deterministic (wall-clock
+/// latencies excluded).
+fn switch_sig(report: &SessionReport) -> Vec<(u64, String, usize, f64)> {
+    report
+        .switches
+        .iter()
+        .map(|s| (s.t.to_bits(), s.cause.clone(), s.apps, s.est_throughput))
+        .collect()
+}
+
+#[test]
+fn fuzzed_scenarios_hold_the_session_invariants_on_both_engines() {
+    for seed in 0..4u64 {
+        let scenario = generate(seed * 7919 + 17);
+
+        // Determinism: the same script replays bit-identically on the DES.
+        let a = run_sim(scenario.clone(), seed);
+        let b = run_sim(scenario.clone(), seed);
+        assert_eq!(a.completions, b.completions, "seed {seed}");
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "seed {seed}");
+        assert_eq!(switch_sig(&a), switch_sig(&b), "seed {seed}");
+
+        // Conservation: every completed round lands in exactly one
+        // interval (streaming aggregation).
+        let interval_total: usize = a.intervals.iter().map(|iv| iv.completions).sum();
+        assert_eq!(interval_total, a.completions, "seed {seed}: {a:?}");
+        assert!(a.energy_j > 0.0, "seed {seed}");
+
+        // The serve path: conservation across every rebind, the same
+        // deterministic switch timeline (battery depletion instants
+        // included — the drain model is engine-independent), and energy
+        // in the same ballpark as the DES.
+        let s = run_serve(scenario.clone(), seed);
+        let summary = s.served.expect("served summary");
+        assert_eq!(
+            summary.admitted_rounds, summary.completed_rounds,
+            "seed {seed}: {summary:?}"
+        );
+        assert_eq!(
+            switch_sig(&a).len(),
+            switch_sig(&s).len(),
+            "seed {seed}: sim {:?} vs serve {:?}",
+            a.switches,
+            s.switches
+        );
+        for (x, y) in switch_sig(&a).iter().zip(switch_sig(&s).iter()) {
+            assert_eq!(x.0, y.0, "seed {seed}: switch instants must match");
+            assert_eq!(x.1, y.1, "seed {seed}: switch causes must match");
+        }
+        if a.completions > 10 && a.energy_j > 0.0 {
+            let gap = (s.energy_j - a.energy_j).abs() / a.energy_j;
+            assert!(
+                gap < 0.25,
+                "seed {seed}: served {} J vs DES {} J (gap {gap:.3})",
+                s.energy_j,
+                a.energy_j
+            );
+        }
+    }
+}
