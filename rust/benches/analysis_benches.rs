@@ -1,0 +1,131 @@
+//! Static-verifier benchmarks: `verify_deployment` must be cheap enough
+//! to run at every plan-commit point without showing up in session wall
+//! time.
+//!
+//! The gate is the ISSUE's <1% rule, measured end to end: the per-call
+//! verifier cost, multiplied by the number of plan switches a busy
+//! session actually performs, must stay under 1% of that session's wall
+//! time. (Release builds compile the commit-point hooks out entirely —
+//! `debug_verify_deployment` is debug-assertions-only — so this measures
+//! the cost of *always-on* verification, the worst case.)
+
+mod bench_harness;
+
+use bench_harness::{fmt_duration, report, time_once};
+use synergy::analysis::{verify_deployment, verify_scenario};
+use synergy::api::{Qos, SessionCfg, SynergyRuntime};
+use synergy::orchestrator::{Planner, Synergy};
+use synergy::serving::ServeCfg;
+use synergy::workload::{fleet8, scenario_cascade8, workload_mixed8};
+
+fn main() {
+    let iters = 9;
+
+    // --- Per-call verifier cost on the big artifact ---------------------
+    // mixed8 on fleet8 under the beam planner: 8 pipelines, the largest
+    // deployment the canned surface produces.
+    let fleet = fleet8();
+    let w = workload_mixed8(fleet.len());
+    let plan = Synergy::planner_bounded(8).plan(&w.pipelines, &fleet).unwrap();
+    let qos: Vec<Qos> = w.pipelines.iter().map(|_| Qos::default()).collect();
+
+    const CALLS: usize = 2_000;
+    let mut verify_samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            time_once(&mut || {
+                let mut ok = 0usize;
+                for _ in 0..CALLS {
+                    verify_deployment(&plan, &w.pipelines, &fleet, Some(&qos)).unwrap();
+                    ok += 1;
+                }
+                ok
+            }) / CALLS as f64
+        })
+        .collect();
+    let per_call = report("analysis/verify-deployment/mixed8", &mut verify_samples);
+
+    // Scenario linting, informational (runs once per session, not per
+    // switch).
+    let canned = scenario_cascade8();
+    let mut scen_samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            time_once(&mut || {
+                for _ in 0..CALLS {
+                    verify_scenario(&canned.scenario, &canned.fleet).unwrap();
+                }
+                CALLS
+            }) / CALLS as f64
+        })
+        .collect();
+    report("analysis/verify-scenario/cascade8", &mut scen_samples);
+
+    // --- The busy session the verifier would ride along with ------------
+    // cascade8 on both engines: four always-on apps, a battery-driven
+    // departure cascade — the switch-densest canned timeline.
+    let mut switches = 0usize;
+    let mut sim_samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            time_once(&mut || {
+                let canned = scenario_cascade8();
+                let runtime = SynergyRuntime::builder()
+                    .fleet(canned.fleet)
+                    .planner(Synergy::planner_bounded(8))
+                    .build();
+                let report = runtime
+                    .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+                    .unwrap()
+                    .finish()
+                    .unwrap();
+                switches = switches.max(report.switches.len());
+                report.completions
+            })
+        })
+        .collect();
+    let session_median = report("analysis/session/cascade8-sim", &mut sim_samples);
+    assert!(switches > 0, "cascade8 must switch plans");
+
+    let mut serve_samples: Vec<f64> = (0..iters.min(5))
+        .map(|_| {
+            time_once(&mut || {
+                let canned = scenario_cascade8();
+                let runtime = SynergyRuntime::builder()
+                    .fleet(canned.fleet)
+                    .planner(Synergy::planner_bounded(8))
+                    .build();
+                let report = runtime
+                    .session_with(canned.scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+                    .unwrap()
+                    .serve(ServeCfg::default())
+                    .unwrap()
+                    .finish()
+                    .unwrap();
+                report.completions
+            })
+        })
+        .collect();
+    report("analysis/session/cascade8-serve", &mut serve_samples);
+
+    // --- Verdict ---------------------------------------------------------
+    // Verifying at every one of the session's plan switches costs
+    // `switches × per_call`; gate that against 1% of the session itself
+    // (plus a small absolute epsilon so a sub-millisecond session doesn't
+    // turn timer noise into a failure).
+    let verify_total = per_call * switches as f64;
+    let share = verify_total / session_median.max(1e-12);
+    println!(
+        "analysis/verifier-share: {:.3}% ({} switches x {} = {} vs session {})",
+        share * 100.0,
+        switches,
+        fmt_duration(per_call),
+        fmt_duration(verify_total),
+        fmt_duration(session_median)
+    );
+    assert!(
+        verify_total <= session_median * 0.01 + 0.001,
+        "per-switch verification must stay under 1% of session wall time: \
+         {} vs 1% of {}",
+        fmt_duration(verify_total),
+        fmt_duration(session_median)
+    );
+    println!("OK: static verification is noise next to the session it guards");
+}

@@ -37,7 +37,7 @@ pub fn fmt_duration(t: f64) -> String {
 /// outside the timed section).
 pub fn report(name: &str, samples: &mut [f64]) -> f64 {
     assert!(!samples.is_empty(), "no samples for {name}");
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let median = samples[samples.len() / 2];
     println!(
         "bench {name:<44} median {:>10}  min {:>10}  iters {}",

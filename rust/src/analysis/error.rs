@@ -1,0 +1,84 @@
+//! Typed diagnostics for the static verifier (`synergy check`, the
+//! plan-commit debug assertions, and the mutation tests).
+
+use crate::device::{DeviceId, OorError};
+use crate::pipeline::PipelineId;
+use crate::plan::UnitKind;
+
+/// Why a plan or scenario failed static verification. Each variant is one
+/// machine-checkable invariant class, so mutation tests can assert the
+/// verifier rejects a corrupted artifact *for the right reason*.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum AnalysisError {
+    /// The plan carries an execution plan for a pipeline the active set
+    /// does not contain.
+    #[error("plan references pipeline {pipeline}, which is not in the active set")]
+    UnknownPipeline { pipeline: PipelineId },
+
+    /// A plan references a device the fleet does not have (ghost device).
+    #[error("{pipeline}: {role} device {device} is not in the {fleet_len}-device fleet")]
+    MissingDevice {
+        pipeline: PipelineId,
+        device: DeviceId,
+        /// Which slot referenced it: `"source"`, `"target"`, or `"chunk"`.
+        role: &'static str,
+        fleet_len: usize,
+    },
+
+    /// The chunk chain is not a contiguous output→input partition of the
+    /// model's layers (gap, overlap, wrong end, or no chunks at all).
+    #[error("{pipeline}: malformed chunk chain: {reason}")]
+    BadShape { pipeline: PipelineId, reason: String },
+
+    /// One stage of the expanded task sequence books the same computation
+    /// unit twice — e.g. consecutive chunks on one device force its
+    /// half-duplex radio to Tx to itself and Rx from itself in the same
+    /// inter-chunk hop.
+    #[error("{pipeline}: {unit:?} on {device} is double-booked within one stage")]
+    UnitDoubleBooked {
+        pipeline: PipelineId,
+        device: DeviceId,
+        unit: UnitKind,
+    },
+
+    /// The joint memory usage of all chunks assigned to an accelerator
+    /// exceeds its capacity (§IV-C's runnable check, statically).
+    #[error("memory overflow on {device}: {kind}")]
+    MemoryOverflow { device: DeviceId, kind: OorError },
+
+    /// The estimator's chain latency — a lower bound on any achievable
+    /// end-to-end latency — already exceeds the app's budget, so no
+    /// schedule can meet the QoS hint.
+    #[error(
+        "{pipeline}: QoS infeasible: chain latency {est_ms:.1} ms is a lower \
+         bound, budget is {budget_ms:.1} ms"
+    )]
+    QosInfeasible {
+        pipeline: PipelineId,
+        est_ms: f64,
+        budget_ms: f64,
+    },
+
+    /// A scripted event references a device that cannot be on the body at
+    /// that instant (departed earlier in the script, or never joined).
+    #[error("scenario event at t={t}: device {device} is absent: {detail}")]
+    DeviceAbsent {
+        t: f64,
+        device: DeviceId,
+        detail: String,
+    },
+
+    /// Two batteries declared for one device would silently race.
+    #[error("duplicate battery declared for {device} — one battery per device")]
+    DuplicateBattery { device: DeviceId },
+
+    /// A recharge targets a device with no declared battery — a silent
+    /// no-op at runtime, almost certainly a typo.
+    #[error("scenario event at t={t}: recharge targets {device}, which has no declared battery")]
+    RechargeUnarmed { t: f64, device: DeviceId },
+
+    /// An event is scripted after the explicit `until` horizon and can
+    /// never fire.
+    #[error("scenario event {action:?} at t={t} is after the horizon until={until} and never fires")]
+    ActionAfterEnd { t: f64, until: f64, action: String },
+}

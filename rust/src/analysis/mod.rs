@@ -1,0 +1,32 @@
+//! Static analysis & verification: machine-checkable invariants over
+//! plans and scenarios, plus seeded race exploration.
+//!
+//! Three pieces:
+//!
+//! - **Static plan verification** ([`verify_deployment`]): every holistic
+//!   collaboration plan must reference known pipelines and present
+//!   devices, chain its chunks shape-connectedly, never double-book a
+//!   computation unit within a stage, fit every accelerator's memory
+//!   jointly, and (optionally) clear each app's QoS latency budget at the
+//!   estimator's lower bound. Wired into every plan-commit point — the
+//!   orchestrator, session replans, and serve rebinds — behind debug
+//!   assertions ([`debug_verify_deployment`]), and exposed as the
+//!   `synergy check` CLI subcommand with typed [`AnalysisError`]
+//!   diagnostics.
+//! - **Static scenario linting** ([`verify_scenario`]): scripts are
+//!   checked before replay for events on departed devices, duplicate
+//!   batteries, recharges of unarmed batteries, and actions after the
+//!   `until` horizon.
+//! - **Seeded race exploration** ([`SameTimePolicy`]): both engines order
+//!   simultaneously-ready events by an arbitrary tie rule; the policy
+//!   makes that rule a seeded knob so `tests/scenario_fuzz.rs` can assert
+//!   the session invariants (round conservation, determinism per seed,
+//!   sim-vs-serve switch-timeline equality) under every ordering.
+
+pub mod error;
+pub mod policy;
+pub mod verify;
+
+pub use error::AnalysisError;
+pub use policy::SameTimePolicy;
+pub use verify::{debug_verify_deployment, verify_deployment, verify_scenario};

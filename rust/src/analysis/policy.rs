@@ -1,0 +1,92 @@
+//! Seeded same-time tie-breaking (ROADMAP direction 5).
+//!
+//! Both engines order simultaneously-ready work deterministically: the DES
+//! breaks `(time, kind)` ties by `(epoch, id)`, and the serve merger breaks
+//! equal-virtual-time ties by `SourceKey` order. Those tie orders are
+//! *arbitrary* — any strict total order preserves the invariants (round
+//! conservation, switch-timeline equality) — so a correct system must hold
+//! them under every perturbation. [`SameTimePolicy`] makes the perturbation
+//! a first-class, seeded knob: `Deterministic` reproduces the historical
+//! order bit-for-bit; `Randomized { seed }` permutes tie-breaking with a
+//! splitmix64 hash, giving `tests/scenario_fuzz.rs` a race-exploration
+//! sweep that stays replayable per seed.
+
+/// How simultaneously-ready events are ordered.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SameTimePolicy {
+    /// Historical tie order (`(epoch, id)` on the DES, natural `SourceKey`
+    /// order on the serve merger). Bit-identical to builds without the
+    /// policy knob.
+    #[default]
+    Deterministic,
+    /// Permute tie-breaking by a seeded hash. Each seed is its own fixed
+    /// total order, so runs stay deterministic *per seed* while a sweep
+    /// over seeds explores distinct same-time interleavings.
+    Randomized { seed: u64 },
+}
+
+impl SameTimePolicy {
+    /// Tie rank for a DES event identified by `(epoch, id)`. Compared
+    /// before `(epoch, id)` itself, so `Deterministic` (all zeros) keeps
+    /// the historical order and `Randomized` permutes it.
+    #[inline]
+    pub fn tie(&self, epoch: usize, id: usize) -> u64 {
+        match *self {
+            SameTimePolicy::Deterministic => 0,
+            SameTimePolicy::Randomized { seed } => {
+                splitmix64(seed ^ ((epoch as u64) << 32) ^ (id as u64).wrapping_mul(0x9e37_79b9))
+            }
+        }
+    }
+
+    /// Tie rank for a serve-merger source key `(pipeline, stage, epoch)`.
+    /// Compared before the key itself in every equal-virtual-time tie.
+    #[inline]
+    pub fn key_rank(&self, key: (usize, usize, usize)) -> u64 {
+        match *self {
+            SameTimePolicy::Deterministic => 0,
+            SameTimePolicy::Randomized { seed } => splitmix64(
+                seed ^ ((key.0 as u64) << 42) ^ ((key.1 as u64) << 21) ^ key.2 as u64,
+            ),
+        }
+    }
+}
+
+/// splitmix64 finalizer — a cheap, well-mixed 64-bit hash (public domain
+/// constants from Vigna's reference implementation).
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_ranks_are_all_zero() {
+        let p = SameTimePolicy::Deterministic;
+        assert_eq!(p.tie(0, 0), 0);
+        assert_eq!(p.tie(7, 123), 0);
+        assert_eq!(p.key_rank((3, 1, 9)), 0);
+    }
+
+    #[test]
+    fn randomized_ranks_are_seed_stable_and_distinguish_events() {
+        let p = SameTimePolicy::Randomized { seed: 42 };
+        assert_eq!(p.tie(3, 5), p.tie(3, 5), "stable per seed");
+        assert_ne!(p.tie(3, 5), p.tie(3, 6));
+        assert_ne!(p.tie(3, 5), p.tie(4, 5));
+        assert_ne!(p.key_rank((0, 0, 1)), p.key_rank((0, 0, 2)));
+        let q = SameTimePolicy::Randomized { seed: 43 };
+        assert_ne!(p.tie(3, 5), q.tie(3, 5), "seeds differ");
+    }
+
+    #[test]
+    fn default_is_deterministic() {
+        assert_eq!(SameTimePolicy::default(), SameTimePolicy::Deterministic);
+    }
+}

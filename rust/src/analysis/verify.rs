@@ -1,0 +1,259 @@
+//! The static verifier: machine-checkable invariants over plans and
+//! scenarios, checked *before* anything executes.
+
+use std::collections::BTreeMap;
+
+use crate::api::{Qos, Scenario, ScenarioAction};
+use crate::device::{AccelMemory, DeviceId, Fleet};
+use crate::estimator::{estimate_plan, LatencyModel};
+use crate::pipeline::{PipelineSpec, SourceReq, TargetReq};
+use crate::plan::{CollabPlan, UnitKind};
+
+use super::error::AnalysisError;
+
+/// Statically verify a holistic collaboration plan against the fleet and
+/// active pipeline set:
+///
+/// 1. every execution plan references a known pipeline;
+/// 2. every referenced device (source, target, chunks) is in the fleet;
+/// 3. the chunk chain is a contiguous output→input partition of the model
+///    (shape connectivity);
+/// 4. no computation unit is double-booked within a stage (consecutive
+///    chunks on one device would make its half-duplex radio Tx to itself
+///    and Rx from itself in the same hop);
+/// 5. the joint per-accelerator memory usage fits (§IV-C runnable, but as
+///    a typed error instead of a panic on malformed input);
+/// 6. optionally, QoS lower-bound feasibility: the estimator's chain
+///    latency is a lower bound on any achievable end-to-end latency, so a
+///    chain already over an app's budget can never meet it.
+///
+/// `qos`, when given, is index-aligned with `pipelines`. Pass `None` at
+/// plan-commit points: a deployed plan may *legitimately* miss QoS hints
+/// (that is a [`crate::api::RuntimeEvent::PlanDegraded`] notification, not
+/// a malformed plan); infeasibility is a lint for `synergy check`.
+pub fn verify_deployment(
+    plan: &CollabPlan,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+    qos: Option<&[Qos]>,
+) -> Result<(), AnalysisError> {
+    for ep in &plan.plans {
+        let pipeline = ep.pipeline;
+        let spec = pipelines
+            .iter()
+            .find(|p| p.id == pipeline)
+            .ok_or(AnalysisError::UnknownPipeline { pipeline })?;
+
+        // Ghost devices before anything indexes the fleet.
+        let mut refs: Vec<(DeviceId, &'static str)> =
+            vec![(ep.source_dev, "source"), (ep.target_dev, "target")];
+        refs.extend(ep.chunks.iter().map(|a| (a.device, "chunk")));
+        for (device, role) in refs {
+            if device.0 >= fleet.len() {
+                return Err(AnalysisError::MissingDevice {
+                    pipeline,
+                    device,
+                    role,
+                    fleet_len: fleet.len(),
+                });
+            }
+        }
+
+        if ep.chunks.is_empty() {
+            return Err(AnalysisError::BadShape {
+                pipeline,
+                reason: "no chunks".into(),
+            });
+        }
+
+        // Double-booking before the shape check so the two corruption
+        // classes stay distinguishable: the task expansion emits the
+        // inter-chunk Tx/Rx hop unconditionally, so consecutive chunks on
+        // one device book its radio for both ends of the same stage.
+        for w in ep.chunks.windows(2) {
+            if w[0].device == w[1].device {
+                return Err(AnalysisError::UnitDoubleBooked {
+                    pipeline,
+                    device: w[0].device,
+                    unit: UnitKind::Radio,
+                });
+            }
+        }
+
+        ep.validate(&spec.model)
+            .map_err(|reason| AnalysisError::BadShape { pipeline, reason })?;
+    }
+
+    // Joint memory fit across all pipelines, accelerator devices only —
+    // chunks on plain MCUs are legal (CPU-inference baselines) and have no
+    // modeled memory ceiling.
+    let mut usage: BTreeMap<DeviceId, AccelMemory> = BTreeMap::new();
+    for ep in &plan.plans {
+        let model = &pipelines
+            .iter()
+            .find(|p| p.id == ep.pipeline)
+            .expect("pipeline verified above")
+            .model;
+        for a in &ep.chunks {
+            let m = usage.entry(a.device).or_default();
+            m.weight_bytes += model.weight_bytes(a.range);
+            m.bias_bytes += model.bias_bytes(a.range);
+            m.layers += a.range.len();
+        }
+    }
+    for (device, used) in usage {
+        if let Some(spec) = &fleet.get(device).spec.accel {
+            AccelMemory::default()
+                .check(spec, used.weight_bytes, used.bias_bytes, used.layers)
+                .map_err(|kind| AnalysisError::MemoryOverflow { device, kind })?;
+        }
+    }
+
+    if let Some(qos) = qos {
+        let lm = LatencyModel::new(fleet);
+        let estimate = estimate_plan(plan, pipelines, fleet, &lm);
+        for (i, ep) in plan.plans.iter().enumerate() {
+            let Some(pi) = pipelines.iter().position(|p| p.id == ep.pipeline) else {
+                continue;
+            };
+            let Some(q) = qos.get(pi) else { continue };
+            let est_ms = estimate.chain_latency[i] * 1e3;
+            if q.latency_budget_ms.is_finite() && est_ms > q.latency_budget_ms {
+                return Err(AnalysisError::QosInfeasible {
+                    pipeline: ep.pipeline,
+                    est_ms,
+                    budget_ms: q.latency_budget_ms,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Statically lint a scenario script against its starting fleet, before
+/// replay:
+///
+/// - duplicate battery declarations;
+/// - recharges targeting a device with no declared battery (a silent
+///   runtime no-op);
+/// - events scripted after the `until` horizon (they never fire);
+/// - events referencing devices that cannot be on the body at that instant
+///   (departed earlier in the script, or beyond the scripted fleet).
+///
+/// The device check is *conservative* under battery depletions: a
+/// depletion shrinks the fleet at an instant no static checker can see, so
+/// with batteries declared only references **at or beyond** the maximum
+/// possible fleet length are flagged; without batteries the dense-suffix
+/// churn rules are enforced exactly.
+pub fn verify_scenario(scenario: &Scenario, fleet: &Fleet) -> Result<(), AnalysisError> {
+    let batteries = scenario.batteries();
+    for (i, &(d, _, _)) in batteries.iter().enumerate() {
+        if batteries[..i].iter().any(|&(prev, _, _)| prev == d) {
+            return Err(AnalysisError::DuplicateBattery { device: d });
+        }
+    }
+    let armed: Vec<DeviceId> = batteries.iter().map(|&(d, _, _)| d).collect();
+    let depletions_possible = !armed.is_empty();
+
+    let until = scenario.duration();
+    for ev in scenario.events() {
+        if ev.t > until {
+            return Err(AnalysisError::ActionAfterEnd {
+                t: ev.t,
+                until,
+                action: ev.action.describe(),
+            });
+        }
+        if let ScenarioAction::Recharge { device, .. } = &ev.action {
+            if !armed.contains(device) {
+                return Err(AnalysisError::RechargeUnarmed { t: ev.t, device: *device });
+            }
+        }
+    }
+
+    // Walk the script in firing order, tracking the scripted fleet length
+    // (device ids are dense, so "length" is the whole state).
+    let mut events = scenario.events().to_vec();
+    events.sort_by(|a, b| a.t.total_cmp(&b.t));
+    let mut len = fleet.len();
+    for ev in &events {
+        match &ev.action {
+            ScenarioAction::DeviceLeft(d) => {
+                if d.0 >= len {
+                    return Err(AnalysisError::DeviceAbsent {
+                        t: ev.t,
+                        device: *d,
+                        detail: format!("departure of {d} from a {len}-device fleet"),
+                    });
+                }
+                if !depletions_possible && d.0 != len - 1 {
+                    return Err(AnalysisError::DeviceAbsent {
+                        t: ev.t,
+                        device: *d,
+                        detail: format!(
+                            "device ids are dense: only the last device (d{}) can leave",
+                            len - 1
+                        ),
+                    });
+                }
+                // With batteries, depletions may already have shrunk the
+                // suffix down to d; either way d and everything above are
+                // gone after this event.
+                len = d.0;
+            }
+            ScenarioAction::DeviceJoined(dev) => {
+                if dev.id.0 > len {
+                    return Err(AnalysisError::DeviceAbsent {
+                        t: ev.t,
+                        device: dev.id,
+                        detail: format!(
+                            "joined device id must extend the dense fleet (at most d{len})"
+                        ),
+                    });
+                }
+                len = len.max(dev.id.0 + 1);
+            }
+            ScenarioAction::SetFleet(f) => len = f.len(),
+            ScenarioAction::Register { spec, .. } => {
+                for (d, role) in endpoint_devices(spec) {
+                    if d.0 >= len {
+                        return Err(AnalysisError::DeviceAbsent {
+                            t: ev.t,
+                            device: d,
+                            detail: format!(
+                                "{role} endpoint of {}:{} (fleet has {len} devices here)",
+                                spec.id, spec.name
+                            ),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn endpoint_devices(spec: &PipelineSpec) -> Vec<(DeviceId, &'static str)> {
+    let mut out = Vec::new();
+    if let SourceReq::Device(d) = spec.source {
+        out.push((d, "source"));
+    }
+    if let TargetReq::Device(d) = spec.target {
+        out.push((d, "target"));
+    }
+    out
+}
+
+/// Debug-assertion wrapper for plan-commit points (planner output,
+/// incremental replan, serve rebind): a full static verification in debug
+/// builds, free in release. Panics with the typed diagnostic — a plan
+/// failing here is a planner bug, not a user error.
+#[inline]
+pub fn debug_verify_deployment(plan: &CollabPlan, pipelines: &[PipelineSpec], fleet: &Fleet) {
+    if cfg!(debug_assertions) {
+        if let Err(e) = verify_deployment(plan, pipelines, fleet, None) {
+            panic!("plan failed static verification at commit: {e}");
+        }
+    }
+}

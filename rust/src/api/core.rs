@@ -367,7 +367,11 @@ impl RuntimeCore {
             };
             (plan, stats)
         };
-        debug_assert!(plan.check_runnable(&self.active, &self.fleet).is_ok());
+        // Every plan the orchestrator commits must pass full static
+        // verification (shape connectivity, ghost devices, double-booking,
+        // joint memory fit) — a failure here is a planner bug. Debug-only;
+        // compiles out of release builds.
+        crate::analysis::debug_verify_deployment(&plan, &self.active, &self.fleet);
 
         let lm = LatencyModel::new(&self.fleet);
         let estimate = estimate_plan(&plan, &self.active, &self.fleet, &lm);

@@ -6,6 +6,7 @@
 //! gone. `PlanError` (OOR / unsatisfiable requirements, §IV-D) converts
 //! transparently so callers can still match on planning outcomes.
 
+use crate::analysis::AnalysisError;
 use crate::orchestrator::PlanError;
 use crate::pipeline::PipelineId;
 
@@ -51,6 +52,12 @@ pub enum RuntimeError {
         backend: &'static str,
         message: String,
     },
+
+    /// Static verification rejected a plan or scenario
+    /// ([`crate::analysis::verify_deployment`] /
+    /// [`crate::analysis::verify_scenario`]).
+    #[error(transparent)]
+    Analysis(#[from] AnalysisError),
 }
 
 #[cfg(test)]

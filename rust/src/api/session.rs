@@ -58,6 +58,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::analysis::{debug_verify_deployment, SameTimePolicy};
 use crate::device::{DeviceId, Fleet};
 use crate::pipeline::{PipelineId, PipelineSpec};
 use crate::plan::CollabPlan;
@@ -84,6 +85,10 @@ pub struct SessionCfg {
     /// by the window; totals ([`SessionReport::completions`]) keep
     /// counting too. `None` (default) retains everything.
     pub trace_window: Option<usize>,
+    /// How the DES orders simultaneously-ready events
+    /// ([`crate::analysis::SameTimePolicy`]) — the race-exploration knob.
+    /// Served sessions take theirs from [`ServeCfg::same_time`].
+    pub same_time: SameTimePolicy,
 }
 
 impl Default for SessionCfg {
@@ -92,6 +97,7 @@ impl Default for SessionCfg {
             seed: 42,
             record_trace: false,
             trace_window: None,
+            same_time: SameTimePolicy::Deterministic,
         }
     }
 }
@@ -287,9 +293,13 @@ impl SessionEngine {
         }
     }
 
-    fn set_plan(&mut self, plan: &CollabPlan, pipelines: &[PipelineSpec]) {
+    fn set_plan(
+        &mut self,
+        plan: &CollabPlan,
+        pipelines: &[PipelineSpec],
+    ) -> Result<(), RuntimeError> {
         match self {
-            SessionEngine::Sim(e) => e.set_plan(plan, pipelines, None),
+            SessionEngine::Sim(e) => e.set_plan(plan, pipelines, None).map_err(RuntimeError::from),
             SessionEngine::Serve(e) => e.set_plan(plan, pipelines, None),
         }
     }
@@ -351,16 +361,10 @@ pub struct Session {
     /// sessions rebuild the marks at finish from the busy-span replay).
     energy_marks: Vec<f64>,
     /// Streaming per-interval aggregates; `scratch[i]` covers
-    /// `bounds[i]..bounds[i+1]`.
+    /// `(bounds[i], bounds[i+1]]` — a round completing exactly at a plan
+    /// switch ran under the *old* plan, so it belongs to the interval
+    /// that ends there (identical on both engines).
     scratch: Vec<IntervalScratch>,
-    /// Rounds that completed exactly at the latest drain horizon
-    /// (`carry_t`). If that instant becomes an interval boundary they
-    /// belong to the interval that *starts* there (the DES's half-open
-    /// interval rule, matching the serve path's assignment); if the
-    /// timeline moves past it first, they were interior after all and
-    /// fold into the open interval.
-    carry: Vec<RoundRecord>,
-    carry_t: f64,
     switches: Vec<PlanSwitch>,
     open_qos: BTreeMap<PipelineId, (QosViolation, f64)>,
     qos_spans: Vec<QosSpan>,
@@ -410,10 +414,12 @@ impl Session {
                 cfg.record_trace,
             );
             engine.set_span_cap(cfg.trace_window);
+            engine.set_same_time(cfg.same_time);
             let mut est = None;
             let mut plan = None;
             if let Some(dep) = core.deployment() {
-                engine.set_plan(&dep.plan, core.active_apps(), None);
+                debug_verify_deployment(&dep.plan, core.active_apps(), core.fleet());
+                engine.set_plan(&dep.plan, core.active_apps(), None)?;
                 est = Some((dep.estimate.throughput, dep.estimate.chain_latency.clone()));
                 plan = Some(dep.plan.clone());
             }
@@ -453,8 +459,6 @@ impl Session {
             bounds: vec![0.0],
             energy_marks: vec![0.0],
             scratch: vec![IntervalScratch::default()],
-            carry: Vec::new(),
-            carry_t: 0.0,
             switches: Vec::new(),
             open_qos: BTreeMap::new(),
             qos_spans: Vec::new(),
@@ -506,9 +510,10 @@ impl Session {
                 core.deployment().map(|d| d.plan.clone()),
             )
         };
-        let mut engine = ServeEngine::new(executor, cfg, fleet);
+        let mut engine = ServeEngine::new(executor, cfg, fleet.clone());
         if let Some(plan) = dep_plan {
-            engine.set_plan(&plan, &active, None);
+            debug_verify_deployment(&plan, &active, &fleet);
+            engine.set_plan(&plan, &active, None)?;
         }
         self.engine = SessionEngine::Serve(engine);
         Ok(self)
@@ -691,15 +696,14 @@ impl Session {
     }
 
     /// The interval a completed round belongs to, given the final
-    /// boundary list: `[bounds[i], bounds[i+1])`, last interval
-    /// inclusive of the horizon.
+    /// boundary list: `(bounds[i], bounds[i+1]]` — a round ending exactly
+    /// at a boundary completed under the plan that was retiring there, so
+    /// it counts toward the interval that *ends* at the boundary (the
+    /// same attribution the simulator path applies while draining).
     fn interval_index(bounds: &[f64], end: f64) -> usize {
         let m = bounds.len() - 1;
-        if end >= bounds[m] {
-            return m - 1;
-        }
-        let i = bounds.partition_point(|&x| x <= end);
-        (i.max(1) - 1).min(m - 1)
+        let i = bounds.partition_point(|&x| x < end);
+        i.clamp(1, m) - 1
     }
 
     /// Advance the engine to `to`, firing exact battery-depletion events
@@ -739,32 +743,21 @@ impl Session {
             while t < to {
                 t = (t + 1.0).min(to);
                 self.engine.run_until(t);
-                self.drain_records(t);
+                self.drain_records();
             }
         } else {
             self.engine.run_until(to);
-            self.drain_records(to);
+            self.drain_records();
         }
     }
 
     /// Fold newly completed rounds into the open interval (simulator
     /// engines; the streaming engine's records are collected at finish).
-    /// Rounds completing exactly at `horizon` are held back in the carry:
-    /// if `horizon` turns out to be an interval boundary they belong to
-    /// the interval that starts there; once the timeline moves past it,
-    /// they flush into the open interval.
-    fn drain_records(&mut self, horizon: f64) {
-        if matches!(self.engine, SessionEngine::Serve(_)) {
-            return;
-        }
-        if !self.carry.is_empty() && self.carry_t < horizon {
-            // The stashed instant never became a boundary — interior.
-            let carry = std::mem::take(&mut self.carry);
-            let open = self.scratch.last_mut().expect("open interval");
-            for rec in carry {
-                open.add(&rec);
-            }
-        }
+    /// Every drained round completed at or before the drain horizon, so
+    /// it belongs to the interval that is open *up to* that horizon —
+    /// including rounds ending exactly on an interval boundary, which ran
+    /// under the plan that retires there.
+    fn drain_records(&mut self) {
         let recs = match &mut self.engine {
             SessionEngine::Sim(e) => e.take_records(),
             SessionEngine::Serve(_) => return,
@@ -772,19 +765,10 @@ impl Session {
         if recs.is_empty() {
             return;
         }
-        let mut carry = std::mem::take(&mut self.carry);
-        {
-            let open = self.scratch.last_mut().expect("open interval");
-            for rec in recs {
-                if rec.end >= horizon {
-                    carry.push(rec);
-                } else {
-                    open.add(&rec);
-                }
-            }
+        let open = self.scratch.last_mut().expect("open interval");
+        for rec in recs {
+            open.add(&rec);
         }
-        self.carry = carry;
-        self.carry_t = horizon;
     }
 
     /// Apply one action at time `t`: mutate the core (one incremental
@@ -915,7 +899,11 @@ impl Session {
         }
         let est_throughput = match &snapshot.deployment_plan {
             Some((plan, throughput, _)) => {
-                self.engine.set_plan(plan, &snapshot.active);
+                // Every mid-timeline replan recommits through the static
+                // verifier — a failure here is a planner bug (debug
+                // builds; free in release).
+                debug_verify_deployment(plan, &snapshot.active, &snapshot.fleet);
+                self.engine.set_plan(plan, &snapshot.active)?;
                 *throughput
             }
             None => {
@@ -1025,39 +1013,26 @@ impl Session {
         });
     }
 
-    /// Record an interval boundary at time `t`: drain and assign the
-    /// completed rounds, snapshot the energy state, open the next
-    /// interval.
+    /// Record an interval boundary at time `t`: drain the completed
+    /// rounds into the ending interval (boundary rounds included — they
+    /// ran under the retiring plan), snapshot the energy state, open the
+    /// next interval.
     fn close_interval(&mut self, t: f64) {
         let last = *self.bounds.last().expect("initial boundary");
         if t <= last {
             // Same-instant event bursts share one boundary.
             return;
         }
-        self.drain_records(t);
+        self.drain_records();
         self.bounds.push(t);
         self.energy_marks.push(self.engine.energy_probe_j(t));
         self.scratch.push(IntervalScratch::default());
-        // Rounds that completed exactly at `t` open the new interval.
-        let carry = std::mem::take(&mut self.carry);
-        let open = self.scratch.last_mut().expect("new interval");
-        for rec in carry {
-            open.add(&rec);
-        }
     }
 
-    /// Close the report at the horizon. Unlike mid-run boundaries, the
-    /// final interval is inclusive: rounds completing exactly at the
-    /// horizon belong to it.
+    /// Close the report at the horizon: the final interval takes every
+    /// remaining round, horizon-exact completions included.
     fn close_final(&mut self, duration: f64) {
-        self.drain_records(duration);
-        let carry = std::mem::take(&mut self.carry);
-        {
-            let open = self.scratch.last_mut().expect("open interval");
-            for rec in carry {
-                open.add(&rec);
-            }
-        }
+        self.drain_records();
         let last = *self.bounds.last().expect("initial boundary");
         if last < duration {
             self.bounds.push(duration);

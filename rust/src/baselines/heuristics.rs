@@ -59,9 +59,11 @@ fn plan_with_rank(
             .into_iter()
             .filter(|c| ledger.fits(c, &spec.model, fleet))
             .min_by(|a, b| {
-                rank.key(a, spec, fleet)
-                    .partial_cmp(&rank.key(b, spec, fleet))
-                    .unwrap()
+                let (a0, a1, a2) = rank.key(a, spec, fleet);
+                let (b0, b1, b2) = rank.key(b, spec, fleet);
+                a0.total_cmp(&b0)
+                    .then_with(|| a1.total_cmp(&b1))
+                    .then_with(|| a2.total_cmp(&b2))
             })
             .ok_or_else(|| PlanError::Oor { pipeline: spec.name.clone() })?;
         ledger.commit(&chosen, &spec.model);

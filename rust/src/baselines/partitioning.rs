@@ -82,7 +82,7 @@ fn best_by<F: FnMut(&crate::plan::ExecutionPlan) -> f64>(
         .into_iter()
         .filter(|c| ledger.map(|l| l.fits(c, &spec.model, fleet)).unwrap_or(true))
         .map(|c| (cost(&c), c))
-        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .min_by(|a, b| a.0.total_cmp(&b.0))
         .map(|(_, c)| c)
         .ok_or_else(|| PlanError::Oor { pipeline: spec.name.clone() })
 }

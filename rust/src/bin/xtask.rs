@@ -1,0 +1,314 @@
+//! `xtask` — repository lints that rustc and clippy don't enforce.
+//!
+//! Run as `cargo run --bin xtask -- lint` (CI does). Three rules, all
+//! scoped to non-test library code under `src/` (test modules, `tests/`,
+//! and `benches/` are exempt — tests may unwrap freely):
+//!
+//! 1. **forbid-partial-cmp** — no `.partial_cmp(` call sites. Every float
+//!    ordering in this crate is a time or a score; `partial_cmp().unwrap()`
+//!    panics the moment a NaN appears (a zero-duration estimate, an
+//!    inf/inf ratio), and silently-`None` comparisons corrupt sorts. Use
+//!    `f64::total_cmp` (or derive `Ord`).
+//! 2. **float-comparator** — comparator closures handed to `sort_by` /
+//!    `min_by` / `max_by` / `binary_search_by` must order through a total
+//!    order (`total_cmp` or `Ord::cmp`), the same rule, caught even when
+//!    the comparison avoids `partial_cmp` (e.g. `a < b` on floats).
+//! 3. **unwrap-budget** — a ratchet on `.unwrap()` / `.expect(` in
+//!    non-test library code. The count must not grow; shrink it and lower
+//!    [`UNWRAP_BUDGET`]. New code paths that can fail want typed errors
+//!    ([`synergy::api::RuntimeError`] / [`synergy::analysis::AnalysisError`]),
+//!    not panics.
+//!
+//! The scanner strips comments, string/char literals, and `#[cfg(test)]`
+//! modules with a small brace-tracking lexer — crude next to a real AST,
+//! but dependency-free and byte-exact on this codebase's idioms.
+
+use std::path::{Path, PathBuf};
+
+/// Ratchet for rule 3: the number of `.unwrap()`/`.expect(` sites allowed
+/// in non-test code under `src/` (counting feature-gated files too). Only
+/// ever lower this — the lint prints the current count.
+const UNWRAP_BUDGET: usize = 80;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => std::process::exit(lint()),
+        _ => {
+            eprintln!("usage: cargo run --bin xtask -- lint");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn lint() -> i32 {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+
+    let mut errors = 0usize;
+    let mut unwraps = 0usize;
+    for path in &files {
+        let raw = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("xtask: cannot read {}: {e}", path.display());
+                return 2;
+            }
+        };
+        let code = NonTestCode::strip(&raw);
+        let rel = path.strip_prefix(&src).unwrap_or(path).display().to_string();
+
+        for (line_no, line) in code.lines() {
+            if line.contains(".partial_cmp(") {
+                eprintln!(
+                    "src/{rel}:{line_no}: forbidden `.partial_cmp(` — \
+                     use f64::total_cmp (NaN-safe total order)"
+                );
+                errors += 1;
+            }
+        }
+        for (line_no, body) in code.comparator_bodies() {
+            if !(body.contains("total_cmp") || body.contains(".cmp(") || body.contains("cmp::")) {
+                eprintln!(
+                    "src/{rel}:{line_no}: comparator closure without a total \
+                     order — order floats with f64::total_cmp, not `<`/`>`"
+                );
+                errors += 1;
+            }
+        }
+        // The ratchet skips `src/bin/` (this tool and future dev tools are
+        // not library code).
+        if !rel.starts_with("bin/") && !rel.starts_with("bin\\") {
+            for (_, line) in code.lines() {
+                unwraps += count_calls(line, ".unwrap()") + count_calls(line, ".expect(");
+            }
+        }
+    }
+
+    println!("xtask lint: {} non-test unwrap/expect sites (budget {UNWRAP_BUDGET})", unwraps);
+    if unwraps > UNWRAP_BUDGET {
+        eprintln!(
+            "unwrap-budget exceeded: {unwraps} > {UNWRAP_BUDGET} — new code \
+             paths that can fail want typed errors, not panics"
+        );
+        errors += 1;
+    }
+    if errors == 0 {
+        println!("xtask lint: clean ({} files)", files.len());
+        0
+    } else {
+        eprintln!("xtask lint: {errors} finding(s)");
+        1
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn count_calls(line: &str, needle: &str) -> usize {
+    line.matches(needle).count()
+}
+
+/// Source with comments, string/char literals, and `#[cfg(test)]` modules
+/// blanked out (line structure preserved, so reported line numbers match
+/// the file on disk).
+struct NonTestCode {
+    lines: Vec<String>,
+}
+
+impl NonTestCode {
+    fn strip(raw: &str) -> NonTestCode {
+        let blanked = blank_comments_and_literals(raw);
+        let mut lines: Vec<String> = blanked.lines().map(str::to_string).collect();
+
+        // Blank `#[cfg(test)] mod … { … }` bodies by brace depth.
+        let mut depth: i64 = 0;
+        let mut pending_cfg_test = false;
+        let mut test_until: Option<i64> = None;
+        for line in &mut lines {
+            let opens = line.matches('{').count() as i64;
+            let closes = line.matches('}').count() as i64;
+            if test_until.is_none() {
+                if line.contains("#[cfg(test)]") {
+                    pending_cfg_test = true;
+                }
+                if pending_cfg_test && line.contains("mod ") && opens > 0 {
+                    test_until = Some(depth);
+                    pending_cfg_test = false;
+                }
+            }
+            depth += opens - closes;
+            if let Some(d) = test_until {
+                line.clear();
+                if depth <= d {
+                    test_until = None;
+                }
+            }
+        }
+        NonTestCode { lines }
+    }
+
+    fn lines(&self) -> impl Iterator<Item = (usize, &str)> {
+        self.lines.iter().enumerate().map(|(i, l)| (i + 1, l.as_str()))
+    }
+
+    /// Comparator-call bodies: for each `sort_by(` / `min_by(` /
+    /// `max_by(` / `binary_search_by(` call site, the text from the
+    /// opening paren to its balanced close (possibly spanning lines).
+    fn comparator_bodies(&self) -> Vec<(usize, String)> {
+        const CALLS: [&str; 4] = [".sort_by(", ".min_by(", ".max_by(", ".binary_search_by("];
+        let mut out = Vec::new();
+        for (i, line) in self.lines.iter().enumerate() {
+            for call in CALLS {
+                let Some(at) = line.find(call) else { continue };
+                let mut body = String::new();
+                let mut depth = 0i64;
+                let mut pos = at + call.len() - 1; // at the '('
+                let mut row = i;
+                'scan: loop {
+                    let l = &self.lines[row];
+                    for c in l[pos..].chars() {
+                        body.push(c);
+                        match c {
+                            '(' => depth += 1,
+                            ')' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break 'scan;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    body.push('\n');
+                    row += 1;
+                    pos = 0;
+                    if row >= self.lines.len() {
+                        break;
+                    }
+                }
+                out.push((i + 1, body));
+            }
+        }
+        out
+    }
+}
+
+/// Replace the contents of comments, string literals, and char literals
+/// with spaces, preserving newlines (and therefore line numbers and brace
+/// structure outside literals).
+fn blank_comments_and_literals(raw: &str) -> String {
+    let b: Vec<char> = raw.chars().collect();
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment (covers `///` and `//!` doc comments too).
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nesting handled).
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        out.push('\n');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string literal: `r"…"`, `r#"…"#`, `br#"…"#` — no escapes,
+        // closes on `"` followed by the same number of `#`s.
+        if c == 'r' || (c == 'b' && b.get(i + 1) == Some(&'r')) {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0;
+            while b.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&'"') {
+                j += 1;
+                'raw: while j < b.len() {
+                    if b[j] == '\n' {
+                        out.push('\n');
+                    }
+                    if b[j] == '"' && b[j + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes {
+                        j += 1 + hashes;
+                        break 'raw;
+                    }
+                    j += 1;
+                }
+                out.push('"');
+                out.push('"');
+                i = j;
+                continue;
+            }
+            // not a raw string — fall through
+        }
+        // String literal.
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < b.len() && b[i] != '"' {
+                if b[i] == '\\' {
+                    i += 1; // skip the escaped char
+                }
+                if b.get(i) == Some(&'\n') {
+                    out.push('\n');
+                }
+                i += 1;
+            }
+            out.push('"');
+            i += 1;
+            continue;
+        }
+        // Char literal vs lifetime: a `'` is a char literal iff it closes
+        // within a few chars (`'x'`, `'\n'`, `b'{'`) — lifetimes never
+        // close.
+        if c == '\'' {
+            let close = if b.get(i + 1) == Some(&'\\') {
+                // escaped char: find the next quote
+                (i + 2..b.len().min(i + 8)).find(|&j| b[j] == '\'')
+            } else if b.get(i + 2) == Some(&'\'') {
+                Some(i + 2)
+            } else {
+                None
+            };
+            if let Some(j) = close {
+                out.push('\'');
+                out.push(' ');
+                out.push('\'');
+                i = j + 1;
+                continue;
+            }
+            // lifetime — fall through
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}

@@ -82,6 +82,11 @@
 //!   (device, unit), a [`serving::ChunkExecutor`] abstraction (virtual
 //!   time on stock toolchains, PJRT behind the feature), and mid-stream
 //!   plan rebinding with graceful drain.
+//! - [`analysis`] — static verification: plan/scenario invariant checking
+//!   ([`analysis::verify_deployment`] / [`analysis::verify_scenario`],
+//!   wired into every plan-commit point and the `synergy check`
+//!   subcommand) and seeded same-time race exploration
+//!   ([`analysis::SameTimePolicy`]).
 //! - [`api`] — **the public surface**: the [`api::SynergyRuntime`] session
 //!   facade — fluent app registration with QoS hints, typed
 //!   [`api::RuntimeError`]s, stamped [`api::RuntimeEvent`] subscriptions,
@@ -107,6 +112,7 @@ pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
 pub mod serving;
+pub mod analysis;
 pub mod api;
 pub mod workload;
 pub mod experiments;

@@ -7,6 +7,8 @@
 //!   serve [--scenario jog]                        streaming serving (worker threads,
 //!                                                 live plan rebinds; PJRT without
 //!                                                 --scenario, needs artifacts)
+//!   check [--workload N|--fleet F|--scenario S]   static verification sweep,
+//!                                                 no execution (plans + scripts)
 //!   zoo                                           print the Table I model zoo
 //!   list                                          list experiments
 
@@ -29,6 +31,7 @@ fn main() {
         Some("plan") => cmd_plan(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
+        Some("check") => cmd_check(&args),
         Some("zoo") => cmd_zoo(),
         Some("trace") => cmd_trace(&args),
         Some("list") => cmd_list(),
@@ -41,7 +44,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: synergy <exp|plan|scenario|serve|zoo|list> [options]\n\
+    "usage: synergy <exp|plan|scenario|serve|check|zoo|list> [options]\n\
      \n\
      exp <id|all>   reproduce a paper experiment (see `synergy list`)\n\
      \u{20}              --runs N (sim rounds), --seed S, --full (fig9 full sweep)\n\
@@ -59,6 +62,12 @@ fn usage() -> String {
      \u{20}              --scenario: PJRT demo (needs `make artifacts` and\n\
      \u{20}              the pjrt feature), --runs N, --inflight K,\n\
      \u{20}              --artifacts DIR\n\
+     check          static verification, no execution: plan every canned\n\
+     \u{20}              workload/fleet combo and verify the selected plans\n\
+     \u{20}              (device refs, chain shape, unit booking, memory\n\
+     \u{20}              fit, QoS bounds), lint every canned scenario\n\
+     \u{20}              script; narrow with --workload 1..4|mixed8\n\
+     \u{20}              --fleet 4|4h|8|12h, or --scenario NAME\n\
      zoo            print the Table I model zoo\n\
      trace          --workload 1..4 [--runs N]: per-unit utilization +\n\
      \u{20}              task timeline of the deployed plan\n\
@@ -400,6 +409,148 @@ fn cmd_plan(args: &Args) -> i32 {
             eprintln!("simulation failed: {e}");
             1
         }
+    }
+}
+
+/// Resolve a `--fleet` value to a named fleet (shared by plan/check).
+fn fleet_by_name(name: &str) -> Option<synergy::device::Fleet> {
+    match name {
+        "4" => Some(workload::fleet4()),
+        "4h" => Some(workload::fleet4_hetero()),
+        "8" => Some(workload::fleet8()),
+        "12h" => Some(workload::fleet12_hetero()),
+        _ => None,
+    }
+}
+
+/// Plan one workload on one fleet and statically verify the selection —
+/// no execution. Returns the number of verified execution plans.
+fn check_combo(
+    w: &workload::Workload,
+    fleet_name: &str,
+    fleet: &synergy::device::Fleet,
+) -> Result<usize, String> {
+    // Exhaustive enumeration is intractable past ~5 devices; bounded
+    // search keeps the sweep interactive (same default as `plan`).
+    let planner = if fleet.len() > 5 {
+        Synergy::planner_bounded(synergy::plan::DEFAULT_BEAM_WIDTH)
+    } else {
+        Synergy::planner()
+    };
+    let plan = planner
+        .plan(&w.pipelines, fleet)
+        .map_err(|e| format!("{} on fleet {fleet_name}: planning failed: {e}", w.name))?;
+    let qos: Vec<synergy::api::Qos> =
+        w.pipelines.iter().map(|_| synergy::api::Qos::default()).collect();
+    synergy::analysis::verify_deployment(&plan, &w.pipelines, fleet, Some(&qos))
+        .map_err(|e| format!("{} on fleet {fleet_name}: {e}", w.name))?;
+    Ok(plan.plans.len())
+}
+
+/// Lint one canned scenario script against its starting fleet.
+fn check_scenario(name: &str) -> Result<(), String> {
+    let canned = workload::canned_scenario(name).ok_or_else(|| {
+        format!(
+            "unknown scenario {name:?}: valid scenarios are {}",
+            workload::canned_scenario_names()
+        )
+    })?;
+    synergy::analysis::verify_scenario(&canned.scenario, &canned.fleet)
+        .map_err(|e| format!("scenario {name:?}: {e}"))
+}
+
+/// `synergy check` — the static verifier as a command: plan canned
+/// workload/fleet combos and verify the selected plans, lint canned
+/// scenario scripts. Nothing executes. With no options it sweeps every
+/// canned combo and scenario; `--workload`/`--fleet`/`--scenario` narrow
+/// the run. Exit 0 = everything verified, 1 = a check failed, 2 = usage.
+fn cmd_check(args: &Args) -> i32 {
+    // Scenario-only mode.
+    if let Some(name) = args.opt("scenario") {
+        return match check_scenario(name) {
+            Ok(()) => {
+                println!("ok   scenario {name:?}");
+                0
+            }
+            Err(e) => {
+                eprintln!("FAIL {e}");
+                if workload::canned_scenario(name).is_none() { 2 } else { 1 }
+            }
+        };
+    }
+
+    // Single-combo mode when either knob is given.
+    if args.opt("workload").is_some() || args.opt("fleet").is_some() {
+        let fleet_name = args.opt("fleet").unwrap_or("4");
+        let Some(fleet) = fleet_by_name(fleet_name) else {
+            eprintln!("unknown fleet {fleet_name:?}: valid fleets are 4, 4h, 8, 12h");
+            return 2;
+        };
+        let w = match args.opt("workload").unwrap_or("1") {
+            "mixed8" => workload::workload_mixed8(fleet.len()),
+            s => match s.parse::<usize>().map(workload::workload) {
+                Ok(Ok(w)) => w,
+                Ok(Err(e)) => {
+                    eprintln!("{e} (or mixed8)");
+                    return 2;
+                }
+                Err(_) => {
+                    eprintln!(
+                        "unknown workload {s:?}: valid workloads are {}, mixed8",
+                        workload::workload_names()
+                    );
+                    return 2;
+                }
+            },
+        };
+        return match check_combo(&w, fleet_name, &fleet) {
+            Ok(n) => {
+                println!("ok   {} on fleet {fleet_name}: {n} execution plans verified", w.name);
+                0
+            }
+            Err(e) => {
+                eprintln!("FAIL {e}");
+                1
+            }
+        };
+    }
+
+    // Full sweep: every canned workload × fleet combo, every scenario.
+    let mut failures = 0usize;
+    let mut combos: Vec<(workload::Workload, &str, synergy::device::Fleet)> = Vec::new();
+    for w in workload::all_workloads() {
+        combos.push((w.clone(), "4", workload::fleet4()));
+        combos.push((w, "4h", workload::fleet4_hetero()));
+    }
+    combos.push((workload::workload_mixed8(8), "8", workload::fleet8()));
+    combos.push((workload::workload_mixed8(12), "12h", workload::fleet12_hetero()));
+    for (w, fleet_name, fleet) in &combos {
+        match check_combo(w, fleet_name, fleet) {
+            Ok(n) => {
+                println!("ok   {} on fleet {fleet_name}: {n} execution plans verified", w.name)
+            }
+            Err(e) => {
+                eprintln!("FAIL {e}");
+                failures += 1;
+            }
+        }
+    }
+    for name in ["jog", "churn8", "bursty8", "cascade8"] {
+        match check_scenario(name) {
+            Ok(()) => println!("ok   scenario {name:?}"),
+            Err(e) => {
+                eprintln!("FAIL {e}");
+                failures += 1;
+            }
+        }
+    }
+    let total = combos.len() + 4;
+    if failures == 0 {
+        println!("all {total} checks passed");
+        0
+    } else {
+        eprintln!("{failures}/{total} checks FAILED");
+        1
     }
 }
 

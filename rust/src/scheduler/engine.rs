@@ -26,6 +26,7 @@
 
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
+use crate::analysis::{AnalysisError, SameTimePolicy};
 use crate::device::{DeviceId, Fleet};
 use crate::pipeline::{PipelineId, PipelineSpec};
 use crate::plan::task::{PlanTask, UnitKind};
@@ -95,14 +96,17 @@ pub struct RoundRecord {
     pub end: f64,
 }
 
-/// Min-heap event: (time, kind, epoch, task id). `Done` sorts before
+/// Min-heap event: (time, kind, tie, epoch, task id). `Done` sorts before
 /// `Ready` at equal times so a freed unit can immediately take the
-/// arriving task. With a single epoch the ordering is identical to the
-/// pre-session batch engine's (time, kind, id).
+/// arriving task. `tie` is the [`SameTimePolicy`] rank — all zeros under
+/// the deterministic policy, so with a single epoch the ordering is
+/// identical to the pre-session batch engine's (time, kind, id); a seeded
+/// policy permutes only the order among *simultaneously-ready* events.
 #[derive(Clone, Copy, Debug, PartialEq)]
 struct Event {
     time: f64,
     kind: EventKind,
+    tie: u64,
     epoch: usize,
     id: usize,
 }
@@ -126,6 +130,7 @@ impl Ord for Event {
             .time
             .total_cmp(&self.time)
             .then_with(|| other.kind.cmp(&self.kind))
+            .then_with(|| other.tie.cmp(&self.tie))
             .then_with(|| other.epoch.cmp(&self.epoch))
             .then_with(|| other.id.cmp(&self.id))
     }
@@ -284,6 +289,8 @@ pub struct SimEngine {
     record_cap: Option<usize>,
     /// Ring window over retained trace spans; `None` retains everything.
     span_cap: Option<usize>,
+    /// How simultaneously-ready events are ordered (race exploration).
+    same_time: SameTimePolicy,
 }
 
 impl SimEngine {
@@ -308,7 +315,18 @@ impl SimEngine {
             completions_total: 0,
             record_cap: None,
             span_cap: None,
+            same_time: SameTimePolicy::default(),
         }
+    }
+
+    /// Set the same-time tie-breaking policy (see
+    /// [`crate::analysis::SameTimePolicy`]). The default deterministic
+    /// policy reproduces the historical `(epoch, id)` tie order
+    /// bit-for-bit; a seeded policy permutes only the order among events
+    /// that are ready at the same instant, which any correct schedule must
+    /// tolerate.
+    pub fn set_same_time(&mut self, policy: SameTimePolicy) {
+        self.same_time = policy;
     }
 
     /// Cap retained [`Self::records`] and trace spans to the most recent
@@ -439,15 +457,19 @@ impl SimEngine {
     /// exactly `m` rounds per pipeline (batch mode); with `None` rounds
     /// spawn indefinitely and execution is bounded by [`Self::run_until`]
     /// horizons.
+    ///
+    /// Fails with [`AnalysisError::UnknownPipeline`] when the plan
+    /// references a pipeline absent from `pipelines` — the current epoch
+    /// is still retired in that case (the engine never half-deploys).
     pub fn set_plan(
         &mut self,
         plan: &CollabPlan,
         pipelines: &[PipelineSpec],
         max_rounds: Option<usize>,
-    ) {
+    ) -> Result<(), AnalysisError> {
         self.clear_plan();
         if plan.plans.is_empty() {
-            return;
+            return Ok(());
         }
         let specs: Vec<PipelineSpec> = plan
             .plans
@@ -456,10 +478,10 @@ impl SimEngine {
                 pipelines
                     .iter()
                     .find(|p| p.id == ep.pipeline)
-                    .expect("plan for unknown pipeline")
-                    .clone()
+                    .cloned()
+                    .ok_or(AnalysisError::UnknownPipeline { pipeline: ep.pipeline })
             })
-            .collect();
+            .collect::<Result<_, _>>()?;
         let per_pipeline: Vec<Vec<PlanTask>> = plan
             .plans
             .iter()
@@ -497,12 +519,14 @@ impl SimEngine {
                 self.heap.push(Event {
                     time: self.now,
                     kind: EventKind::Ready,
+                    tie: self.same_time.tie(e, id),
                     epoch: e,
                     id,
                 });
             }
         }
         self.epochs.push(epoch);
+        Ok(())
     }
 
     /// Start task (epoch e, id) on unit `key` at time `t`.
@@ -521,6 +545,7 @@ impl SimEngine {
         self.heap.push(Event {
             time: t + dur,
             kind: EventKind::Done,
+            tie: self.same_time.tie(e, id),
             epoch: e,
             id,
         });
@@ -538,6 +563,7 @@ impl SimEngine {
             self.heap.push(Event {
                 time: t,
                 kind: EventKind::Ready,
+                tie: self.same_time.tie(e, id),
                 epoch: e,
                 id,
             });
@@ -758,7 +784,9 @@ pub fn simulate(
     assert!(n > 0, "empty plan");
 
     let mut engine = SimEngine::new(fleet.clone(), gt.clone(), cfg.policy, cfg.record_trace);
-    engine.set_plan(plan, pipelines, Some(cfg.runs));
+    engine
+        .set_plan(plan, pipelines, Some(cfg.runs))
+        .expect("plan for unknown pipeline");
     engine.run_until(f64::INFINITY);
 
     // Round (start, end) matrices in plan order. Every round completed
@@ -1012,7 +1040,7 @@ mod tests {
         let rep = simulate(&plan, &ps, &f, &gt, cfg(Policy::atp()));
 
         let mut eng = SimEngine::new(f.clone(), gt.clone(), Policy::atp(), false);
-        eng.set_plan(&plan, &ps, Some(12));
+        eng.set_plan(&plan, &ps, Some(12)).unwrap();
         let step = rep.makespan / 17.0;
         let mut t = 0.0;
         while t < rep.makespan {
@@ -1037,14 +1065,14 @@ mod tests {
         let plan = plan_spread(&ps, 2);
         let gt = GroundTruth::default();
         let mut eng = SimEngine::new(f.clone(), gt.clone(), Policy::atp(), true);
-        eng.set_plan(&plan, &ps, None);
+        eng.set_plan(&plan, &ps, None).unwrap();
         eng.run_until(0.5);
         let pre = eng.completions();
         assert!(pre > 0, "no rounds before the switch");
         let t_switch = eng.now();
 
         let solo = CollabPlan::new(vec![plan.plans[0].clone()]);
-        eng.set_plan(&solo, &ps[..1], None);
+        eng.set_plan(&solo, &ps[..1], None).unwrap();
         eng.run_until(1.0);
         let records: Vec<RoundRecord> = eng.records().iter().copied().collect();
         assert!(eng.completions() > pre, "no rounds after the switch");
@@ -1076,7 +1104,7 @@ mod tests {
         let gt = GroundTruth::default();
         let mut eng = SimEngine::new(f, gt, Policy::atp(), true);
         eng.set_record_cap(Some(5));
-        eng.set_plan(&plan, &ps, Some(20));
+        eng.set_plan(&plan, &ps, Some(20)).unwrap();
         eng.run_until(f64::INFINITY);
         assert_eq!(eng.completions(), 20, "the counter must see every round");
         assert_eq!(eng.records().len(), 5, "the ring must evict old records");
@@ -1146,12 +1174,12 @@ mod tests {
         let plan = plan_spread(&ps, 1);
         let gt = GroundTruth::default();
         let mut eng = SimEngine::new(f.clone(), gt.clone(), Policy::atp(), false);
-        eng.set_plan(&plan, &ps, None);
+        eng.set_plan(&plan, &ps, None).unwrap();
         eng.run_until(1.0);
         // Device 1 (idle) leaves at t=1; its base energy must freeze.
         let d1_at_leave = eng.device_energy_j(DeviceId(1), 1.0);
         eng.set_fleet(fleet(1));
-        eng.set_plan(&plan, &ps, None);
+        eng.set_plan(&plan, &ps, None).unwrap();
         eng.run_until(2.0);
         let d1_later = eng.device_energy_j(DeviceId(1), 2.0);
         assert!(
@@ -1161,5 +1189,57 @@ mod tests {
         // Device 0 keeps accruing.
         let d0 = eng.device_energy_j(DeviceId(0), 2.0);
         assert!(d0 > eng.device_energy_j(DeviceId(0), 1.0));
+    }
+
+    #[test]
+    fn set_plan_for_unknown_pipeline_is_a_typed_error() {
+        // Regression: this used to panic via `expect` inside the engine.
+        let f = fleet(1);
+        let ps = pipes(2);
+        let plan = plan_spread(&ps, 1);
+        let gt = GroundTruth::default();
+        let mut eng = SimEngine::new(f, gt, Policy::atp(), false);
+        let err = eng.set_plan(&plan, &ps[..1], None).unwrap_err();
+        assert!(matches!(
+            err,
+            crate::analysis::AnalysisError::UnknownPipeline { pipeline: PipelineId(1) }
+        ));
+    }
+
+    #[test]
+    fn randomized_same_time_keeps_round_conservation_and_trace_soundness() {
+        // Permuting same-time tie order must never lose or duplicate
+        // rounds, overlap a unit, or break causality — only reorder work
+        // among simultaneously-ready tasks.
+        let f = fleet(2);
+        let ps = pipes(3);
+        let plan = plan_spread(&ps, 2);
+        let gt = GroundTruth::default();
+        for seed in 0..8u64 {
+            let mut eng = SimEngine::new(f.clone(), gt.clone(), Policy::atp(), true);
+            eng.set_same_time(SameTimePolicy::Randomized { seed });
+            eng.set_plan(&plan, &ps, Some(12)).unwrap();
+            eng.run_until(f64::INFINITY);
+            assert_eq!(eng.completions(), 3 * 12, "seed {seed}");
+            let trace = eng.into_trace().unwrap();
+            trace.check_unit_exclusivity().unwrap();
+            trace.check_causality().unwrap();
+        }
+    }
+
+    #[test]
+    fn randomized_same_time_is_deterministic_per_seed() {
+        let f = fleet(2);
+        let ps = pipes(2);
+        let plan = plan_spread(&ps, 2);
+        let gt = GroundTruth::default();
+        let run = |seed: u64| {
+            let mut eng = SimEngine::new(f.clone(), gt.clone(), Policy::atp(), false);
+            eng.set_same_time(SameTimePolicy::Randomized { seed });
+            eng.set_plan(&plan, &ps, Some(12)).unwrap();
+            eng.run_until(f64::INFINITY);
+            (eng.makespan().to_bits(), eng.energy_total_j(eng.makespan()).to_bits())
+        };
+        assert_eq!(run(7), run(7), "same seed must replay bit-identically");
     }
 }

@@ -48,7 +48,7 @@ impl Trace {
                 .push((s.start, s.end));
         }
         for ((dev, unit), mut spans) in by_unit {
-            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in spans.windows(2) {
                 if w[1].0 < w[0].1 - 1e-12 {
                     return Err(format!(

@@ -84,7 +84,7 @@ impl ExecutionBackend for ServeBackend {
         };
         let wall = std::time::Instant::now();
         let mut engine = ServeEngine::new(executor, serve_cfg, fleet.clone());
-        engine.set_plan(&deployment.plan, apps, Some(cfg.runs));
+        engine.set_plan(&deployment.plan, apps, Some(cfg.runs))?;
         engine.run_until(f64::INFINITY);
         let outcome = engine.finish()?;
         let wall_s = wall.elapsed().as_secs_f64();

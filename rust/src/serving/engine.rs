@@ -30,11 +30,13 @@
 //! smaller — the classic conservative-simulation admission rule — so two
 //! pipelines sharing a computation unit produce *bit-comparable* served
 //! replays, independent of OS scheduling. A generous wait timeout
-//! (`MERGE_WAIT_VALVE`, 5 s) acts as a liveness valve: under continuous
-//! driving the bounds never stall, but a session parked mid-run for
-//! longer than the valve (or a wall-time executor chunk outlasting it)
-//! falls back to the minimal *available* item — degraded ordering, never
-//! a hang or a dropped round.
+//! ([`ServeCfg::liveness_valve_s`], 5 s by default) acts as a liveness
+//! valve: under continuous driving the bounds never stall, but a session
+//! parked mid-run for longer than the valve (or a wall-time executor
+//! chunk outlasting it) falls back to the minimal *available* item —
+//! degraded ordering, never a hang or a dropped round. Equal-ready-time
+//! ties resolve by source-key order, perturbable for race exploration via
+//! [`ServeCfg::same_time`] (see [`crate::analysis::SameTimePolicy`]).
 //!
 //! **Energy.** Workers report every completed busy interval as a
 //! [`BusySpan`] (the same task→draw mapping the DES charges); the engine
@@ -61,6 +63,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::analysis::{AnalysisError, SameTimePolicy};
 use crate::device::{DeviceId, Fleet, SensorKind};
 use crate::estimator::LatencyModel;
 use crate::pipeline::PipelineSpec;
@@ -88,6 +91,15 @@ pub struct ServeCfg {
     /// `0.0` (default) free-runs — virtual time advances as fast as the
     /// threads can carry it; `1.0` paces serving to real time.
     pub time_scale: f64,
+    /// Liveness valve in wall seconds: how long a worker waits on
+    /// admission bounds before falling back to the minimal *available*
+    /// item (degraded merge order, never a hang). Raise it for real
+    /// executors with long chunks; lower it for tests that park sessions
+    /// deliberately.
+    pub liveness_valve_s: f64,
+    /// How equal-virtual-time admission ties are ordered (race
+    /// exploration; the default reproduces the causal source-key order).
+    pub same_time: SameTimePolicy,
 }
 
 impl Default for ServeCfg {
@@ -96,6 +108,8 @@ impl Default for ServeCfg {
             max_inflight: 2,
             channel_depth: 64,
             time_scale: 0.0,
+            liveness_valve_s: 5.0,
+            same_time: SameTimePolicy::Deterministic,
         }
     }
 }
@@ -238,32 +252,50 @@ struct MergerSt {
 struct Merger {
     st: Mutex<MergerSt>,
     cv: Condvar,
+    /// The liveness valve ([`ServeCfg::liveness_valve_s`]): how long a
+    /// worker waits on admission bounds before falling back to the minimal
+    /// available item, degrading merge order instead of hanging. With the
+    /// engine actively driven, correct bound propagation never trips this.
+    /// It *can* trip — by design — when a driver parks a session mid-run
+    /// for longer than the valve with work queued behind a horizon-parked
+    /// ticker, or when a real (PJRT) executor runs one chunk longer than
+    /// the valve: conservation still holds, but the replay is no longer
+    /// bit-comparable to an unpaused run.
+    valve: Duration,
+    /// Equal-ready-time tie ordering (race exploration).
+    same_time: SameTimePolicy,
 }
 
-/// The liveness valve: how long a worker waits on admission bounds before
-/// falling back to the minimal available item, degrading merge order
-/// instead of hanging. With the engine actively driven, correct bound
-/// propagation never trips this. It *can* trip — by design — when a
-/// driver parks a session mid-run for longer than the valve with work
-/// queued behind a horizon-parked ticker, or when a real (PJRT) executor
-/// runs one chunk longer than the valve: conservation still holds, but
-/// the replay is no longer bit-comparable to an unpaused run.
-const MERGE_WAIT_VALVE: Duration = Duration::from_secs(5);
+/// Lock, recovering the data on poison: a panicking worker thread must
+/// not cascade `PoisonError` panics through every peer draining the same
+/// merger — the fault surfaces once, as a typed `Backend` error at
+/// [`ServeEngine::finish`].
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 impl Merger {
-    fn new() -> Merger {
+    fn new(valve: Duration, same_time: SameTimePolicy) -> Merger {
         Merger {
             st: Mutex::new(MergerSt {
                 sources: BTreeMap::new(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
+            valve,
+            same_time,
         }
+    }
+
+    /// Strict total tie order over source keys: the seeded rank first
+    /// (all zeros under the deterministic policy), causal key order last.
+    fn key_lt(&self, a: SourceKey, b: SourceKey) -> bool {
+        (self.same_time.key_rank(a), a) < (self.same_time.key_rank(b), b)
     }
 
     /// Bind a new source (chain stage) to this unit.
     fn register(&self, key: SourceKey, base_round: usize, t: f64) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         st.sources.insert(
             key,
             Source {
@@ -278,7 +310,7 @@ impl Merger {
 
     /// Raise a source's delivery lower bound.
     fn bound(&self, key: SourceKey, lb: f64) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         if let Some(s) = st.sources.get_mut(&key) {
             if lb > s.lb {
                 s.lb = lb;
@@ -289,7 +321,7 @@ impl Merger {
 
     /// Enqueue an item (also raises the source's bound to its ready).
     fn push(&self, key: SourceKey, item: WorkItem) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         let s = st.sources.get_mut(&key).expect("push to unregistered source");
         if item.ready > s.lb {
             s.lb = item.ready;
@@ -300,7 +332,7 @@ impl Merger {
 
     /// Announce that no round at or past `close_at` will arrive on `key`.
     fn close(&self, key: SourceKey, close_at: usize) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         if let Some(s) = st.sources.get_mut(&key) {
             s.close_at = Some(close_at);
         }
@@ -309,13 +341,14 @@ impl Merger {
 
     /// Let the worker exit once every source is exhausted.
     fn shutdown(&self) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         st.shutdown = true;
         self.cv.notify_all();
     }
 
-    /// The (ready, key)-minimal queued head, if any.
-    fn min_head(st: &MergerSt) -> Option<(f64, SourceKey)> {
+    /// The (ready, key)-minimal queued head, if any — key ties under the
+    /// same-time policy's total order.
+    fn min_head(&self, st: &MergerSt) -> Option<(f64, SourceKey)> {
         let mut best: Option<(f64, SourceKey)> = None;
         for (&key, s) in &st.sources {
             if let Some(head) = s.items.front() {
@@ -324,7 +357,7 @@ impl Merger {
                     Some((br, bk)) => match head.ready.total_cmp(&br) {
                         std::cmp::Ordering::Less => true,
                         std::cmp::Ordering::Greater => false,
-                        std::cmp::Ordering::Equal => key < bk,
+                        std::cmp::Ordering::Equal => self.key_lt(key, bk),
                     },
                 };
                 if better {
@@ -345,7 +378,7 @@ impl Merger {
     /// Block until an item is safely admissible (or the merger shuts
     /// down with nothing left). `None` means the worker should exit.
     fn pop(&self) -> Option<WorkItem> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         loop {
             // Drop exhausted sources (their epoch closed and every round
             // passed through).
@@ -356,28 +389,31 @@ impl Merger {
                 if st.shutdown {
                     return None;
                 }
-            } else if let Some((ready, key)) = Self::min_head(&st) {
+            } else if let Some((ready, key)) = self.min_head(&st) {
                 // Safe iff every *other* open source provably delivers
                 // nothing smaller: a queued head already lost the min
                 // comparison; an empty source must have a bound past the
-                // candidate (ties resolve by the causal key order).
+                // candidate (ties resolve by the policy's total order).
                 let safe = st.sources.iter().all(|(&k, s)| {
                     k == key
                         || !s.items.is_empty()
                         || match s.lb.total_cmp(&ready) {
                             std::cmp::Ordering::Greater => true,
                             std::cmp::Ordering::Less => false,
-                            std::cmp::Ordering::Equal => key < k,
+                            std::cmp::Ordering::Equal => self.key_lt(key, k),
                         }
                 });
                 if safe {
                     return Some(Self::take(&mut st, key));
                 }
             }
-            let (guard, timeout) = self.cv.wait_timeout(st, MERGE_WAIT_VALVE).unwrap();
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(st, self.valve)
+                .unwrap_or_else(|e| e.into_inner());
             st = guard;
             if timeout.timed_out() {
-                if let Some((_, key)) = Self::min_head(&st) {
+                if let Some((_, key)) = self.min_head(&st) {
                     return Some(Self::take(&mut st, key));
                 }
             }
@@ -417,7 +453,7 @@ impl Gate {
     /// Ticker side: block until `ready` falls inside the horizon; `false`
     /// means the epoch retired instead.
     fn admit(&self, ready: f64) -> bool {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         loop {
             if st.retired {
                 return false;
@@ -429,18 +465,18 @@ impl Gate {
             st.parked = true;
             st.next_ready = ready;
             self.cv.notify_all();
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     fn finish(&self) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         st.done = true;
         self.cv.notify_all();
     }
 
     fn set_horizon(&self, t: f64) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         if t > st.horizon {
             st.horizon = t;
         }
@@ -448,7 +484,7 @@ impl Gate {
     }
 
     fn retire(&self) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         st.retired = true;
         self.cv.notify_all();
     }
@@ -456,9 +492,9 @@ impl Gate {
     /// Driver side: wait until the ticker can admit nothing more before
     /// `t` — parked at or past it, finished its round budget, or retired.
     fn wait_idle(&self, t: f64) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_recover(&self.st);
         while !(st.done || st.retired || (st.parked && st.next_ready >= t)) {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -577,7 +613,7 @@ fn ticker_loop(t: TickerTask) -> usize {
             break;
         }
         let round = base_round + local;
-        ledger.lock().unwrap().note_round(chain.spec.id, round);
+        lock_recover(&ledger).note_round(chain.spec.id, round);
         chain.deliver(WorkItem {
             chain: chain.clone(),
             seq: 0,
@@ -768,25 +804,35 @@ impl ServeEngine {
         self.fleet_history.push((self.now, fleet));
     }
 
-    fn worker_merger(&mut self, device: DeviceId, unit: UnitKind) -> Arc<Merger> {
+    fn worker_merger(&mut self, device: DeviceId, unit: UnitKind) -> Result<Arc<Merger>, RuntimeError> {
         if let Some(w) = self.workers.get(&(device, unit)) {
-            return w.merger.clone();
+            return Ok(w.merger.clone());
         }
-        let merger = Arc::new(Merger::new());
+        let backend = self.executor.name();
+        let merger = Arc::new(Merger::new(
+            Duration::from_secs_f64(self.cfg.liveness_valve_s.max(0.0)),
+            self.cfg.same_time,
+        ));
         let executor = self.executor.clone();
         let scale = self.cfg.time_scale;
         let acct = self
             .acct_tx
             .as_ref()
-            .expect("serving engine already finished")
+            .ok_or(RuntimeError::Backend {
+                backend,
+                message: "serving engine already finished".into(),
+            })?
             .clone();
         let m = merger.clone();
         let join = std::thread::Builder::new()
             .name(format!("serve-{device}-{unit:?}"))
             .spawn(move || worker_loop(m, device, unit, executor, scale, acct))
-            .expect("spawn serve worker");
+            .map_err(|e| RuntimeError::Backend {
+                backend,
+                message: format!("failed to spawn serve worker: {e}"),
+            })?;
         self.workers.insert((device, unit), Worker { merger: merger.clone(), join });
-        merger
+        Ok(merger)
     }
 
     fn retire_active(&mut self) {
@@ -816,43 +862,50 @@ impl ServeEngine {
     /// chain bindings and tickers change. With `max_rounds = Some(m)` each
     /// pipeline executes exactly `m` rounds (one-shot mode); with `None`
     /// admission is bounded by [`Self::run_until`] horizons.
+    ///
+    /// Fails with [`RuntimeError::Analysis`] when the plan references a
+    /// pipeline absent from `pipelines`, and [`RuntimeError::Backend`] on
+    /// thread-spawn failure. The current epoch is retired either way (the
+    /// engine never half-deploys): chains bound before the failure drain
+    /// gracefully like any retired epoch.
     pub fn set_plan(
         &mut self,
         plan: &CollabPlan,
         pipelines: &[PipelineSpec],
         max_rounds: Option<usize>,
-    ) {
+    ) -> Result<(), RuntimeError> {
         let t0 = Instant::now();
         self.retire_active();
         let epoch = self.epochs;
         self.epochs += 1;
+        let backend = self.executor.name();
         let mut apps = 0usize;
         for ep in &plan.plans {
             let spec = pipelines
                 .iter()
                 .find(|p| p.id == ep.pipeline)
-                .expect("plan for unknown pipeline")
-                .clone();
+                .cloned()
+                .ok_or(AnalysisError::UnknownPipeline { pipeline: ep.pipeline })?;
             let tasks = ep.tasks(&spec.model);
-            let base_round = self.ledger.lock().unwrap().base_round(spec.id);
-            let stages: Vec<Stage> = tasks
-                .iter()
-                .enumerate()
-                .map(|(j, t)| {
-                    let unit = GroundTruth::unit_of(&self.fleet, t);
-                    let merger = self.worker_merger(t.device, unit);
-                    let key: SourceKey = (spec.id.0, j, epoch);
-                    merger.register(key, base_round, self.now);
-                    (merger, key)
-                })
-                .collect();
+            let base_round = lock_recover(&self.ledger).base_round(spec.id);
+            let mut stages: Vec<Stage> = Vec::with_capacity(tasks.len());
+            for (j, t) in tasks.iter().enumerate() {
+                let unit = GroundTruth::unit_of(&self.fleet, t);
+                let merger = self.worker_merger(t.device, unit)?;
+                let key: SourceKey = (spec.id.0, j, epoch);
+                merger.register(key, base_round, self.now);
+                stages.push((merger, key));
+            }
             let sensor = LatencyModel::source_sensor(&spec);
             let ticker_name = format!("serve-ticker-{}", spec.id);
             let (feedback_tx, feedback_rx) = mpsc::channel();
             let done = self
                 .done_tx
                 .as_ref()
-                .expect("serving engine already finished")
+                .ok_or(RuntimeError::Backend {
+                    backend,
+                    message: "serving engine already finished".into(),
+                })?
                 .clone();
             let chain = Arc::new(ChainBinding {
                 spec,
@@ -877,7 +930,10 @@ impl ServeEngine {
             let join = std::thread::Builder::new()
                 .name(ticker_name)
                 .spawn(move || ticker_loop(task))
-                .expect("spawn serve ticker");
+                .map_err(|e| RuntimeError::Backend {
+                    backend,
+                    message: format!("failed to spawn serve ticker: {e}"),
+                })?;
             self.active.push(TickerHandle { gate, join });
             apps += 1;
         }
@@ -886,6 +942,7 @@ impl ServeEngine {
             wall_s: t0.elapsed().as_secs_f64(),
             apps,
         });
+        Ok(())
     }
 
     /// Raise the admission horizon to `t` and wait until every live ticker
@@ -1060,7 +1117,7 @@ mod tests {
         let ps = pipes(3);
         let plan = plan_spread(&ps, 2);
         let mut eng = engine(2);
-        eng.set_plan(&plan, &ps, Some(12));
+        eng.set_plan(&plan, &ps, Some(12)).unwrap();
         eng.run_until(f64::INFINITY);
         let out = eng.finish().unwrap();
         assert_eq!(out.admitted, 3 * 12);
@@ -1091,12 +1148,12 @@ mod tests {
         let ps = pipes(1);
         let plan = plan_spread(&ps, 1);
         let mut eng = engine(1);
-        eng.set_plan(&plan, &ps, None);
+        eng.set_plan(&plan, &ps, None).unwrap();
         eng.run_until(0.5);
         let short = eng.finish().unwrap();
 
         let mut eng = engine(1);
-        eng.set_plan(&plan_spread(&pipes(1), 1), &pipes(1), None);
+        eng.set_plan(&plan_spread(&pipes(1), 1), &pipes(1), None).unwrap();
         eng.run_until(2.0);
         let long = eng.finish().unwrap();
 
@@ -1117,11 +1174,11 @@ mod tests {
         let ps = pipes(2);
         let plan = plan_spread(&ps, 2);
         let mut eng = engine(2);
-        eng.set_plan(&plan, &ps, None);
+        eng.set_plan(&plan, &ps, None).unwrap();
         eng.run_until(0.5);
         // Switch to a solo plan mid-stream; the old epoch drains.
         let solo = CollabPlan::new(vec![plan.plans[0].clone()]);
-        eng.set_plan(&solo, &ps[..1], None);
+        eng.set_plan(&solo, &ps[..1], None).unwrap();
         eng.run_until(1.0);
         let out = eng.finish().unwrap();
         assert_eq!(out.rebinds.len(), 2);
@@ -1157,7 +1214,7 @@ mod tests {
             let ps = pipes(2);
             let plan = plan_spread(&ps, 2);
             let mut eng = engine(2);
-            eng.set_plan(&plan, &ps, Some(8));
+            eng.set_plan(&plan, &ps, Some(8)).unwrap();
             eng.run_until(f64::INFINITY);
             eng.finish().unwrap()
         };
@@ -1182,7 +1239,7 @@ mod tests {
             // shared — the maximal merge-contention shape.
             let plan = plan_spread(&ps, 1);
             let mut eng = engine(1);
-            eng.set_plan(&plan, &ps, Some(10));
+            eng.set_plan(&plan, &ps, Some(10)).unwrap();
             eng.run_until(f64::INFINITY);
             eng.finish().unwrap()
         };
@@ -1211,7 +1268,7 @@ mod tests {
         let plan = plan_spread(&ps, 1);
         let mut eng = engine(1);
         eng.set_record_cap(Some(5));
-        eng.set_plan(&plan, &ps, Some(20));
+        eng.set_plan(&plan, &ps, Some(20)).unwrap();
         eng.run_until(f64::INFINITY);
         let out = eng.finish().unwrap();
         assert_eq!(out.admitted, 20);
@@ -1229,7 +1286,7 @@ mod tests {
         let ps = pipes(1);
         let plan = plan_spread(&ps, 1);
         let mut eng = engine(1);
-        eng.set_plan(&plan, &ps, Some(6));
+        eng.set_plan(&plan, &ps, Some(6)).unwrap();
         eng.run_until(f64::INFINITY);
         let out = eng.finish().unwrap();
         let horizon = out.records.iter().map(|r| r.end).fold(0.0, f64::max);
@@ -1240,5 +1297,72 @@ mod tests {
         let base = fleet(1).get(DeviceId(0)).spec.power.base_w;
         let e = replay.energy_at(horizon);
         assert!(e > base * horizon, "active work must show above base: {e}");
+    }
+
+    #[test]
+    fn set_plan_for_unknown_pipeline_is_a_typed_error() {
+        // Regression: this used to panic via `expect` on the serve path.
+        let ps = pipes(2);
+        let plan = plan_spread(&ps, 1);
+        let mut eng = engine(1);
+        let err = eng.set_plan(&plan, &ps[..1], None).unwrap_err();
+        assert!(matches!(
+            err,
+            RuntimeError::Analysis(AnalysisError::UnknownPipeline { pipeline: PipelineId(1) })
+        ));
+        // The engine stays usable: bind a valid plan afterwards.
+        eng.set_plan(&plan_spread(&ps[..1], 1), &ps[..1], Some(3)).unwrap();
+        eng.run_until(f64::INFINITY);
+        let out = eng.finish().unwrap();
+        assert_eq!(out.admitted, out.completed);
+    }
+
+    #[test]
+    fn configured_liveness_valve_replaces_the_hardcoded_default() {
+        // A tiny valve must not break conservation — only (possibly)
+        // degrade merge order. This pins the ServeCfg knob end to end.
+        let ps = pipes(2);
+        let plan = plan_spread(&ps, 1);
+        let mut eng = ServeEngine::new(
+            Arc::new(VirtualExecutor::with_seed(7)),
+            ServeCfg { liveness_valve_s: 0.05, ..ServeCfg::default() },
+            fleet(1),
+        );
+        eng.set_plan(&plan, &ps, Some(8)).unwrap();
+        eng.run_until(f64::INFINITY);
+        let out = eng.finish().unwrap();
+        assert_eq!(out.admitted, 2 * 8);
+        assert_eq!(out.completed, 2 * 8);
+    }
+
+    #[test]
+    fn randomized_same_time_keeps_conservation_and_per_seed_determinism() {
+        let run = |seed: u64| {
+            let ps = pipes(2);
+            let plan = plan_spread(&ps, 1);
+            let mut eng = ServeEngine::new(
+                Arc::new(VirtualExecutor::with_seed(7)),
+                ServeCfg {
+                    same_time: SameTimePolicy::Randomized { seed },
+                    ..ServeCfg::default()
+                },
+                fleet(1),
+            );
+            eng.set_plan(&plan, &ps, Some(10)).unwrap();
+            eng.run_until(f64::INFINITY);
+            eng.finish().unwrap()
+        };
+        for seed in 0..4u64 {
+            let a = run(seed);
+            assert_eq!(a.admitted, 2 * 10, "seed {seed}");
+            assert_eq!(a.completed, 2 * 10, "seed {seed}");
+            let b = run(seed);
+            assert_eq!(a.records.len(), b.records.len());
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!((x.pipeline, x.run), (y.pipeline, y.run), "seed {seed}");
+                assert_eq!(x.start.to_bits(), y.start.to_bits(), "seed {seed}");
+                assert_eq!(x.end.to_bits(), y.end.to_bits(), "seed {seed}");
+            }
+        }
     }
 }

@@ -224,7 +224,12 @@ fn trace_window_bounds_memory_without_corrupting_intervals() {
     let run = |window: Option<usize>| {
         let runtime = SynergyRuntime::new(fleet4());
         runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
-        let cfg = SessionCfg { seed: 5, record_trace: true, trace_window: window };
+        let cfg = SessionCfg {
+            seed: 5,
+            record_trace: true,
+            trace_window: window,
+            ..SessionCfg::default()
+        };
         runtime
             .session_with(Scenario::new().at(30.0).pause(PipelineId(0)).until(60.0), cfg)
             .unwrap()

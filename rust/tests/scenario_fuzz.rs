@@ -10,14 +10,15 @@
 //! scripted churn disabled whenever a battery can deplete (depletions
 //! already churn the suffix at instants the generator cannot see).
 
-use synergy::api::{Qos, Scenario, SessionCfg, SessionReport, SynergyRuntime};
+use synergy::analysis::SameTimePolicy;
+use synergy::api::{Qos, Scenario, ScenarioAction, SessionCfg, SessionReport, SynergyRuntime};
 use synergy::device::DeviceId;
 use synergy::model::zoo::ModelName;
 use synergy::orchestrator::Synergy;
 use synergy::pipeline::PipelineId;
 use synergy::serving::ServeCfg;
 use synergy::util::rng::Rng;
-use synergy::workload::{fleet8, pipeline};
+use synergy::workload::{canned_scenario, fleet8, pipeline};
 
 /// The Table I models the fuzzer draws apps from (small enough to keep
 /// replans fast under the beam planner).
@@ -207,4 +208,201 @@ fn fuzzed_scenarios_hold_the_session_invariants_on_both_engines() {
             );
         }
     }
+}
+
+// ------------------------------------------- seeded same-time exploration
+
+fn run_sim_with(scenario: Scenario, seed: u64, same_time: SameTimePolicy) -> SessionReport {
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet8())
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    runtime
+        .session_with(scenario, SessionCfg { seed, same_time, ..SessionCfg::default() })
+        .unwrap()
+        .finish()
+        .unwrap()
+}
+
+fn run_serve_with(scenario: Scenario, seed: u64, same_time: SameTimePolicy) -> SessionReport {
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet8())
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    runtime
+        .session_with(scenario, SessionCfg { seed, same_time, ..SessionCfg::default() })
+        .unwrap()
+        .serve(ServeCfg { same_time, ..ServeCfg::default() })
+        .unwrap()
+        .finish()
+        .unwrap()
+}
+
+/// The race-exploration sweep (ROADMAP direction 5): 16 seeded same-time
+/// orderings on both engines. Every permutation of simultaneously-ready
+/// events must preserve the session invariants — the tie order is
+/// arbitrary, so nothing observable may depend on *which* arbitrary order
+/// runs:
+///
+/// - round conservation (interval totals = completions on the DES;
+///   admitted = completed on the serve path);
+/// - determinism per seed (a seed names one fixed total order);
+/// - the switch timeline is *invariant* under the perturbation — scripted
+///   events fire at scripted instants and battery depletions at
+///   closed-form instants, none of which may move with tie-breaking —
+///   and identical across sim and serve.
+#[test]
+fn seeded_same_time_sweep_holds_invariants_on_both_engines() {
+    let scenario = generate(4242);
+    let baseline = run_sim_with(scenario.clone(), 7, SameTimePolicy::Deterministic);
+    let base_sig = switch_sig(&baseline);
+    assert!(!base_sig.is_empty(), "sweep scenario must replan mid-run");
+
+    for seed in 0..16u64 {
+        let policy = SameTimePolicy::Randomized { seed };
+        let a = run_sim_with(scenario.clone(), 7, policy);
+
+        // Conservation under perturbation.
+        let interval_total: usize = a.intervals.iter().map(|iv| iv.completions).sum();
+        assert_eq!(interval_total, a.completions, "seed {seed}");
+
+        // Switch timeline invariant under same-time perturbation.
+        assert_eq!(switch_sig(&a), base_sig, "seed {seed}");
+
+        // Determinism per seed (spot-checked — each run replans the whole
+        // timeline, so a few seeds keep the sweep fast).
+        if seed < 4 {
+            let b = run_sim_with(scenario.clone(), 7, policy);
+            assert_eq!(a.completions, b.completions, "seed {seed}");
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "seed {seed}");
+            assert_eq!(switch_sig(&a), switch_sig(&b), "seed {seed}");
+        }
+
+        // The serve path under the same perturbed order: conservation
+        // across every rebind and the baseline switch instants/causes.
+        let s = run_serve_with(scenario.clone(), 7, policy);
+        let summary = s.served.expect("served summary");
+        assert_eq!(
+            summary.admitted_rounds, summary.completed_rounds,
+            "seed {seed}: {summary:?}"
+        );
+        let serve_sig = switch_sig(&s);
+        assert_eq!(serve_sig.len(), base_sig.len(), "seed {seed}");
+        for (x, y) in serve_sig.iter().zip(base_sig.iter()) {
+            assert_eq!(x.0, y.0, "seed {seed}: switch instants must match");
+            assert_eq!(x.1, y.1, "seed {seed}: switch causes must match");
+        }
+    }
+}
+
+// ------------------------------------------------------ targeted injection
+
+fn jogging_runtime() -> (SynergyRuntime, Scenario) {
+    let canned = canned_scenario("jog").unwrap();
+    let runtime = SynergyRuntime::new(canned.fleet);
+    (runtime, canned.scenario)
+}
+
+/// Injecting a pause/resume pair mid-drain (between scripted events, while
+/// in-flight rounds from the previous epoch are still draining) must
+/// replan twice and conserve every round.
+#[test]
+fn injected_pause_resume_mid_drain_conserves_rounds() {
+    let (runtime, scenario) = jogging_runtime();
+    let mut session = runtime
+        .session_with(scenario, SessionCfg { seed: 11, ..SessionCfg::default() })
+        .unwrap();
+    session.run_until(1.3).unwrap();
+    session.inject(ScenarioAction::Pause(PipelineId(0))).unwrap();
+    session.run_until(1.9).unwrap();
+    session.inject(ScenarioAction::Resume(PipelineId(0))).unwrap();
+    let report = session.finish().unwrap();
+
+    let causes: Vec<&str> = report.switches.iter().map(|s| s.cause.as_str()).collect();
+    assert!(causes.contains(&"pause(p0)"), "{causes:?}");
+    assert!(causes.contains(&"resume(p0)"), "{causes:?}");
+    let interval_total: usize = report.intervals.iter().map(|iv| iv.completions).sum();
+    assert_eq!(interval_total, report.completions);
+    assert!(report.completions > 0);
+}
+
+/// Injecting exactly *at* an interval boundary (the instant a scripted
+/// event just fired) must not duplicate or drop boundary-straddling
+/// rounds: a round ending on the boundary belongs to the interval it ran
+/// in, and the zero-width segment the injection opens stays empty.
+#[test]
+fn injection_at_an_interval_boundary_keeps_attribution_exact() {
+    let (runtime, scenario) = jogging_runtime();
+    // jog scripts the watch's departure at t=6.0; land exactly on it, so
+    // the scripted replan and the injected one share a timestamp.
+    let mut session = runtime
+        .session_with(scenario, SessionCfg { seed: 5, ..SessionCfg::default() })
+        .unwrap();
+    session.run_until(6.0).unwrap();
+    session
+        .inject(ScenarioAction::Pause(PipelineId(1)))
+        .unwrap();
+    session.run_until(7.0).unwrap();
+    session
+        .inject(ScenarioAction::Resume(PipelineId(1)))
+        .unwrap();
+    let report = session.finish().unwrap();
+
+    let interval_total: usize = report.intervals.iter().map(|iv| iv.completions).sum();
+    assert_eq!(interval_total, report.completions);
+    // Interval bounds stay monotone even with a boundary-coincident split.
+    for w in report.intervals.windows(2) {
+        assert!(w[0].end <= w[1].start + 1e-12, "{:?}", report.intervals);
+    }
+    assert!(report.switches.iter().any(|s| s.cause == "pause(p1)"));
+}
+
+/// Injecting at a battery-depletion tick: replay cascade8 once to learn
+/// the first depletion instant, then drive a fresh session exactly to it
+/// and inject more churn at that instant. The depletion replan and the
+/// injected replan coexist at one timestamp without double-counting.
+#[test]
+fn injection_at_a_depletion_tick_composes_with_the_cascade() {
+    let canned = canned_scenario("cascade8").unwrap();
+    let build = || {
+        SynergyRuntime::builder()
+            .fleet(canned.fleet.clone())
+            .planner(Synergy::planner_bounded(8))
+            .build()
+    };
+    let baseline = build()
+        .session_with(canned.scenario.clone(), SessionCfg { seed: 3, ..SessionCfg::default() })
+        .unwrap()
+        .finish()
+        .unwrap();
+    let Some(dep) = baseline
+        .switches
+        .iter()
+        .find(|s| s.cause.starts_with("battery-depleted"))
+    else {
+        panic!("cascade8 must deplete at least one battery: {:?}", baseline.switches);
+    };
+    let t_dep = dep.t;
+
+    let mut session = build()
+        .session_with(canned.scenario.clone(), SessionCfg { seed: 3, ..SessionCfg::default() })
+        .unwrap();
+    session.run_until(t_dep).unwrap();
+    session.inject(ScenarioAction::Pause(PipelineId(0))).unwrap();
+    let report = session.finish().unwrap();
+
+    // Both the depletion and the injected pause landed, at the same t.
+    let at_tick: Vec<&str> = report
+        .switches
+        .iter()
+        .filter(|s| s.t == t_dep)
+        .map(|s| s.cause.as_str())
+        .collect();
+    assert!(
+        at_tick.iter().any(|c| c.starts_with("battery-depleted")),
+        "{at_tick:?}"
+    );
+    assert!(at_tick.contains(&"pause(p0)"), "{at_tick:?}");
+    let interval_total: usize = report.intervals.iter().map(|iv| iv.completions).sum();
+    assert_eq!(interval_total, report.completions);
 }

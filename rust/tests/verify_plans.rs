@@ -1,0 +1,281 @@
+//! The static verifier against real planner outputs (property: everything
+//! the planners select verifies) and against hand-corrupted plans
+//! (mutation: each corruption class is rejected with *its* typed
+//! [`AnalysisError`], not a neighboring one).
+
+use synergy::analysis::{verify_deployment, verify_scenario, AnalysisError};
+use synergy::api::{Qos, Scenario};
+use synergy::device::{DeviceId, Fleet};
+use synergy::model::SplitRange;
+use synergy::orchestrator::{Planner, Synergy};
+use synergy::pipeline::PipelineId;
+use synergy::plan::{Assignment, CollabPlan, ExecutionPlan, UnitKind};
+use synergy::workload::{
+    all_workloads, canned_scenario, fleet12_hetero, fleet4, fleet4_hetero, fleet8, workload,
+    workload_mixed8, Workload,
+};
+
+fn default_qos(w: &Workload) -> Vec<Qos> {
+    w.pipelines.iter().map(|_| Qos::default()).collect()
+}
+
+// ---------------------------------------------------------------- property
+
+/// Every plan the exhaustive planner selects on the paper fleets passes
+/// full static verification, QoS feasibility included.
+#[test]
+fn exhaustive_planner_outputs_verify_on_paper_fleets() {
+    for fleet in [fleet4(), fleet4_hetero()] {
+        for w in all_workloads() {
+            let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+            verify_deployment(&plan, &w.pipelines, &fleet, Some(&default_qos(&w)))
+                .unwrap_or_else(|e| panic!("{} on {}-device fleet: {e}", w.name, fleet.len()));
+        }
+    }
+}
+
+/// Bounded search on the large fleets verifies too — the beam never emits
+/// a structurally invalid plan.
+#[test]
+fn bounded_planner_outputs_verify_on_large_fleets() {
+    for fleet in [fleet8(), fleet12_hetero()] {
+        let w = workload_mixed8(fleet.len());
+        let plan = Synergy::planner_bounded(8).plan(&w.pipelines, &fleet).unwrap();
+        verify_deployment(&plan, &w.pipelines, &fleet, Some(&default_qos(&w)))
+            .unwrap_or_else(|e| panic!("mixed8 on {}-device fleet: {e}", fleet.len()));
+    }
+}
+
+/// All canned scenario scripts lint clean against their starting fleets.
+#[test]
+fn canned_scenarios_verify() {
+    for name in ["jog", "churn8", "bursty8", "cascade8"] {
+        let canned = canned_scenario(name).unwrap();
+        verify_scenario(&canned.scenario, &canned.fleet)
+            .unwrap_or_else(|e| panic!("scenario {name}: {e}"));
+    }
+}
+
+// ---------------------------------------------------------------- mutation
+
+/// A verified Workload 1 plan on fleet4 — the base artifact the mutation
+/// tests corrupt.
+fn valid_plan() -> (CollabPlan, Workload, Fleet) {
+    let fleet = fleet4();
+    let w = workload(1).unwrap();
+    let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+    verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap();
+    (plan, w, fleet)
+}
+
+#[test]
+fn ghost_device_is_rejected_as_missing_device() {
+    let (mut plan, w, fleet) = valid_plan();
+    plan.plans[0].chunks[0].device = DeviceId(99);
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            AnalysisError::MissingDevice { device: DeviceId(99), role: "chunk", fleet_len: 4, .. }
+        ),
+        "{err}"
+    );
+
+    // Ghost endpoints are flagged with their role, not as chunk refs.
+    let (mut plan, w, fleet) = valid_plan();
+    plan.plans[0].target_dev = DeviceId(7);
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::MissingDevice { device: DeviceId(7), role: "target", .. }),
+        "{err}"
+    );
+}
+
+#[test]
+fn shape_gap_is_rejected_as_bad_shape() {
+    let (mut plan, w, fleet) = valid_plan();
+    // Replace the first pipeline's chain with one that stops a layer
+    // short of the model tail (contiguous from 0, so the *only* defect
+    // is the gap at the end).
+    let layers = w.pipelines[0].model.num_layers();
+    assert!(layers >= 2, "Table I models are multi-layer");
+    let device = plan.plans[0].chunks[0].device;
+    plan.plans[0].chunks = vec![Assignment { device, range: SplitRange::new(0, layers - 1) }];
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::BadShape { pipeline: PipelineId(0), .. }),
+        "{err}"
+    );
+}
+
+#[test]
+fn empty_chunk_chain_is_rejected_as_bad_shape() {
+    let (mut plan, w, fleet) = valid_plan();
+    plan.plans[0].chunks.clear();
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap_err();
+    assert!(matches!(err, AnalysisError::BadShape { .. }), "{err}");
+}
+
+#[test]
+fn consecutive_chunks_on_one_device_are_rejected_as_double_booking() {
+    let (mut plan, w, fleet) = valid_plan();
+    // Split the first pipeline's chain in two on the *same* device: still
+    // a contiguous partition of the model (so this is not a shape error)
+    // but the inter-chunk hop books the device's radio for both Tx and Rx.
+    let layers = w.pipelines[0].model.num_layers();
+    assert!(layers >= 2, "Table I models are multi-layer");
+    let device = plan.plans[0].chunks[0].device;
+    plan.plans[0].chunks = vec![
+        Assignment { device, range: SplitRange::new(0, 1) },
+        Assignment { device, range: SplitRange::new(1, layers) },
+    ];
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            AnalysisError::UnitDoubleBooked {
+                pipeline: PipelineId(0),
+                unit: UnitKind::Radio,
+                device: d,
+            } if d == device
+        ),
+        "{err}"
+    );
+}
+
+#[test]
+fn joint_memory_overflow_is_rejected_with_the_device() {
+    // Workload 3's EfficientNetV2 exceeds a single MAX78000 accelerator
+    // (that is *why* it must be split): a plan that piles every layer onto
+    // one device must be rejected as a memory overflow there.
+    let fleet = fleet4();
+    let w = workload(3).unwrap();
+    let spec = &w.pipelines[0];
+    let layers = spec.model.num_layers();
+    let plan = CollabPlan::new(vec![ExecutionPlan {
+        pipeline: spec.id,
+        source_dev: DeviceId(0),
+        target_dev: DeviceId(0),
+        chunks: vec![Assignment { device: DeviceId(0), range: SplitRange::new(0, layers) }],
+    }]);
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::MemoryOverflow { device: DeviceId(0), .. }),
+        "{err}"
+    );
+}
+
+#[test]
+fn unknown_pipeline_is_rejected_before_anything_else() {
+    let (mut plan, w, fleet) = valid_plan();
+    plan.plans[0].pipeline = PipelineId(99);
+    // Corrupt the chunks too: the pipeline check must fire first (the
+    // verifier cannot shape-check against a spec it does not have).
+    plan.plans[0].chunks[0].device = DeviceId(42);
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::UnknownPipeline { pipeline: PipelineId(99) }),
+        "{err}"
+    );
+}
+
+#[test]
+fn unmeetable_latency_budget_is_qos_infeasible() {
+    let (plan, w, fleet) = valid_plan();
+    let mut qos = default_qos(&w);
+    // A 1 ns budget is below any chain's estimator lower bound.
+    qos[0].latency_budget_ms = 1e-6;
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, Some(&qos)).unwrap_err();
+    match err {
+        AnalysisError::QosInfeasible { pipeline, est_ms, budget_ms } => {
+            assert_eq!(pipeline, w.pipelines[0].id);
+            assert!(est_ms > budget_ms, "est {est_ms} ms vs budget {budget_ms} ms");
+        }
+        other => panic!("expected QosInfeasible, got {other}"),
+    }
+    // The same plan with default (unbounded) hints verifies.
+    verify_deployment(&plan, &w.pipelines, &fleet, Some(&default_qos(&w))).unwrap();
+}
+
+// ------------------------------------------------------- scenario mutation
+
+#[test]
+fn scenario_event_after_horizon_is_rejected() {
+    let s = Scenario::new().at(10.0).pause(PipelineId(0)).until(5.0);
+    let err = verify_scenario(&s, &fleet4()).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::ActionAfterEnd { t, until, .. } if t == 10.0 && until == 5.0),
+        "{err}"
+    );
+}
+
+#[test]
+fn recharge_without_a_battery_is_rejected() {
+    let s = Scenario::new().at(2.0).recharge(1, 5.0).until(6.0);
+    let err = verify_scenario(&s, &fleet4()).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::RechargeUnarmed { device: DeviceId(1), .. }),
+        "{err}"
+    );
+    // Armed, the same script verifies.
+    let s = Scenario::new()
+        .battery(DeviceId(1), 10.0)
+        .at(2.0)
+        .recharge(1, 5.0)
+        .until(6.0);
+    verify_scenario(&s, &fleet4()).unwrap();
+}
+
+#[test]
+fn duplicate_battery_is_rejected() {
+    let s = Scenario::new()
+        .battery(DeviceId(3), 10.0)
+        .battery(DeviceId(3), 2.0)
+        .until(6.0);
+    let err = verify_scenario(&s, &fleet4()).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::DuplicateBattery { device: DeviceId(3) }),
+        "{err}"
+    );
+}
+
+#[test]
+fn departed_device_cannot_depart_again() {
+    let s = Scenario::new()
+        .at(1.0)
+        .device_left(3)
+        .at(2.0)
+        .device_left(3)
+        .until(6.0);
+    let err = verify_scenario(&s, &fleet4()).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::DeviceAbsent { t, device: DeviceId(3), .. } if t == 2.0),
+        "{err}"
+    );
+}
+
+#[test]
+fn non_suffix_departure_is_rejected_without_batteries() {
+    // Device ids are dense: only the highest id can leave. With a battery
+    // armed the checker must go conservative (a depletion may already have
+    // shrunk the suffix), so the same script passes.
+    let s = Scenario::new().at(1.0).device_left(1).until(6.0);
+    let err = verify_scenario(&s, &fleet4()).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::DeviceAbsent { device: DeviceId(1), .. }),
+        "{err}"
+    );
+    let s = Scenario::new()
+        .battery(DeviceId(3), 1.0)
+        .at(1.0)
+        .device_left(1)
+        .until(6.0);
+    verify_scenario(&s, &fleet4()).unwrap();
+}
+
+#[test]
+fn rejoin_after_scripted_departure_verifies() {
+    // The jog story: the watch (last id) leaves and later rejoins.
+    let canned = canned_scenario("jog").unwrap();
+    verify_scenario(&canned.scenario, &canned.fleet).unwrap();
+}
