@@ -12,14 +12,43 @@
 mod bench_harness;
 
 use bench_harness::{fmt_duration, report, time_once};
-use synergy::analysis::{verify_deployment, verify_scenario};
+use synergy::analysis::{analyze_capacity, verify_deployment, verify_scenario};
 use synergy::api::{Qos, SessionCfg, SynergyRuntime};
 use synergy::orchestrator::{Planner, Synergy};
 use synergy::serving::ServeCfg;
+use synergy::util::json::Json;
 use synergy::workload::{fleet8, scenario_cascade8, workload_mixed8};
+
+/// Check one measurement against its entry in `BENCH_analysis.json`:
+/// hard `budget` always gates; the `max_delta_pct` window additionally
+/// gates once a nonzero `baseline` has been recorded.
+fn gate_budget(budgets: &Json, name: &str, measured: f64) {
+    let metric = budgets
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .and_then(|ms| ms.iter().find(|m| m.get("name").and_then(Json::as_str) == Some(name)))
+        .unwrap_or_else(|| panic!("BENCH_analysis.json has no metric named {name}"));
+    let budget = metric.get("budget").and_then(Json::as_f64).unwrap();
+    let baseline = metric.get("baseline").and_then(Json::as_f64).unwrap_or(0.0);
+    let max_delta_pct = metric.get("max_delta_pct").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(
+        measured <= budget,
+        "{name}: measured {measured} over hard budget {budget}"
+    );
+    if baseline > 0.0 {
+        let ceiling = baseline * (1.0 + max_delta_pct / 100.0);
+        assert!(
+            measured <= ceiling,
+            "{name}: measured {measured} regressed past baseline {baseline} (+{max_delta_pct}%)"
+        );
+    }
+    println!("budget {name:<44} measured {measured:.3e} budget {budget:.3e}");
+}
 
 fn main() {
     let iters = 9;
+    let budgets = Json::parse(include_str!("BENCH_analysis.json"))
+        .expect("benches/BENCH_analysis.json parses");
 
     // --- Per-call verifier cost on the big artifact ---------------------
     // mixed8 on fleet8 under the beam planner: 8 pipelines, the largest
@@ -43,6 +72,45 @@ fn main() {
         })
         .collect();
     let per_call = report("analysis/verify-deployment/mixed8", &mut verify_samples);
+
+    // --- Capacity analysis vs the planner it prunes for -----------------
+    // One full per-unit/per-pipeline decomposition per plan commit; the
+    // ISSUE gates it at <1% of the bounded planner run that produced the
+    // plan (the ratio is machine-independent, unlike the raw timings).
+    let mut cap_samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            time_once(&mut || {
+                let mut ok = 0usize;
+                for _ in 0..CALLS {
+                    let rep = analyze_capacity(&plan, &w.pipelines, &fleet, Some(&qos)).unwrap();
+                    rep.check().unwrap();
+                    ok += 1;
+                }
+                ok
+            }) / CALLS as f64
+        })
+        .collect();
+    let cap_call = report("analysis/capacity/mixed8", &mut cap_samples);
+
+    let mut plan_samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            time_once(&mut || Synergy::planner_bounded(8).plan(&w.pipelines, &fleet).unwrap())
+        })
+        .collect();
+    let plan_median = report("analysis/planner/mixed8-bounded8", &mut plan_samples);
+    let cap_share = cap_call / plan_median.max(1e-12);
+    println!(
+        "analysis/capacity-share: {:.3}% ({} per plan vs planner {})",
+        cap_share * 100.0,
+        fmt_duration(cap_call),
+        fmt_duration(plan_median)
+    );
+    assert!(
+        cap_call <= plan_median * 0.01 + 1e-4,
+        "capacity analysis must stay under 1% of planner wall time: {} vs 1% of {}",
+        fmt_duration(cap_call),
+        fmt_duration(plan_median)
+    );
 
     // Scenario linting, informational (runs once per session, not per
     // switch).
@@ -127,5 +195,32 @@ fn main() {
         fmt_duration(verify_total),
         fmt_duration(session_median)
     );
+
+    // --- Budget gates + trajectory snapshot ------------------------------
+    // The checked-in BENCH_analysis.json carries the budgets; the run
+    // emits its measured snapshot next to the build artifacts so a merge
+    // job (ROADMAP direction 3) can fold it into the trajectory.
+    gate_budget(&budgets, "analysis/verify-deployment/mixed8", per_call);
+    gate_budget(&budgets, "analysis/capacity/mixed8", cap_call);
+    gate_budget(&budgets, "analysis/capacity-share-of-planner", cap_share);
+    let snapshot = synergy::util::json::obj([
+        ("area", Json::Str("analysis".into())),
+        (
+            "measured",
+            Json::Obj(
+                [
+                    ("analysis/verify-deployment/mixed8", per_call),
+                    ("analysis/capacity/mixed8", cap_call),
+                    ("analysis/capacity-share-of-planner", cap_share),
+                ]
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v)))
+                .collect(),
+            ),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/target/BENCH_analysis.json");
+    std::fs::write(out, snapshot.to_string_pretty()).expect("write bench snapshot");
+    println!("snapshot written to {out}");
     println!("OK: static verification is noise next to the session it guards");
 }

@@ -1,0 +1,445 @@
+//! Static schedulability & capacity analysis of a deployed plan (§VI's
+//! throughput claims, made checkable before anything executes).
+//!
+//! The estimator ([`crate::estimator::estimate_plan`]) already computes
+//! the unified-round period `max(bottleneck, critical/2)`; this module
+//! decomposes the same accumulation *per unit and per pipeline* into a
+//! [`CapacityReport`]:
+//!
+//! - **per-unit utilization** — each (device, computation-unit)'s busy
+//!   time per unified round, its occupancy `busy / period`, and its
+//!   *demand utilization* `Σ_app min_rate · busy` under the admitted QoS
+//!   rate floors. Demand utilization ≥ 1 is the classic schedulability
+//!   necessary condition failing: the unit's backlog grows without bound
+//!   no matter the schedule ([`AnalysisError::UnitOversubscribed`]).
+//! - **per-pipeline static bounds** — an isolated rate cap (the pipeline
+//!   alone on the fleet: its busiest own unit, double-buffered against
+//!   its chain), the shared steady-state rate (one completion per
+//!   unified round), the interference it suffers at the system
+//!   bottleneck (other pipelines' work on that unit), and headroom
+//!   against its QoS floor ([`AnalysisError::ThroughputInfeasible`] when
+//!   the floor exceeds the shared bound).
+//!
+//! Every latency comes from the same memoized [`LatencyModel`] the
+//! planner scores with and the per-unit keys are the estimator's raw
+//! `task.unit()` keys, so [`CapacityReport::throughput_hz`] is
+//! *identical* to the estimator's throughput — the report is the
+//! estimate, explained. Radio hops appear as `Radio` busy on both
+//! endpoint devices (link-unit load), exactly as the task expansion
+//! books them.
+
+use std::collections::BTreeMap;
+
+use crate::api::Qos;
+use crate::device::{DeviceId, Fleet};
+use crate::estimator::LatencyModel;
+use crate::model::{ModelGraph, SplitRange};
+use crate::pipeline::{PipelineId, PipelineSpec};
+use crate::plan::{Assignment, CollabPlan, PlanTask, TaskKind, UnitKind};
+
+use super::error::AnalysisError;
+
+/// One (device, computation-unit)'s load under the plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UnitLoad {
+    pub device: DeviceId,
+    pub unit: UnitKind,
+    /// Busy seconds per unified round (every pipeline executed once).
+    pub busy_s: f64,
+    /// Occupancy under the ATP steady state: `busy / round period`. The
+    /// bottleneck unit sits at 1.0; everything else below.
+    pub utilization: f64,
+    /// Demand utilization `Σ_app min_rate_hz · busy_s(app, unit)` under
+    /// the admitted QoS rate floors (0 when no floors are set). `≥ 1`
+    /// means the floors alone saturate the unit.
+    pub demand_utilization: f64,
+}
+
+/// Static throughput/latency bounds for one pipeline of the plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PipelineCapacity {
+    pub pipeline: PipelineId,
+    /// Sequential latency of the pipeline's own task chain, seconds —
+    /// the estimator's per-chain lower bound on end-to-end latency.
+    pub chain_latency_s: f64,
+    /// The pipeline's busiest own unit (its private bottleneck).
+    pub own_bottleneck_s: f64,
+    pub own_bottleneck_device: DeviceId,
+    pub own_bottleneck_unit: UnitKind,
+    /// Rate cap if the pipeline ran alone on the fleet:
+    /// `1 / max(own bottleneck, chain/2)`.
+    pub isolated_rate_hz: f64,
+    /// Steady-state rate sharing the fleet: one completion per unified
+    /// round, `1 / round period`. Always ≤ the isolated cap.
+    pub shared_rate_hz: f64,
+    /// Other pipelines' busy seconds on the *system* bottleneck unit —
+    /// the interference that stretches this pipeline's round.
+    pub interference_s: f64,
+    /// The app's QoS rate floor (0 without one).
+    pub demand_hz: f64,
+    /// `shared_rate_hz − demand_hz`: slack against the floor (negative =
+    /// statically infeasible).
+    pub headroom_hz: f64,
+}
+
+/// The full static capacity decomposition of a deployment. Produced by
+/// [`analyze_capacity`]; checked by [`CapacityReport::check`]; rendered
+/// by [`super::explain::render_explain`] (`synergy explain`).
+#[derive(Clone, Debug)]
+pub struct CapacityReport {
+    /// Every loaded (device, unit), sorted by descending busy time
+    /// (ties broken by device/unit id, so the order is deterministic).
+    pub units: Vec<UnitLoad>,
+    /// The system bottleneck — the busiest unit, which sets the round
+    /// period. `None` only for an empty plan.
+    pub bottleneck: Option<(DeviceId, UnitKind, f64)>,
+    /// The ATP unified-round period `max(bottleneck, critical/2)`.
+    pub round_period_s: f64,
+    /// Longest chain (the DAG critical path), seconds.
+    pub critical_path_s: f64,
+    /// Steady-state system throughput upper bound, `n / period` —
+    /// identical to [`crate::estimator::PlanEstimate::throughput`].
+    pub throughput_hz: f64,
+    /// Throughput with strictly back-to-back rounds (no ATP) — the
+    /// matching lower anchor, `n / Σ chains`.
+    pub throughput_sequential_hz: f64,
+    /// Per-pipeline bounds, in plan order.
+    pub pipelines: Vec<PipelineCapacity>,
+}
+
+impl CapacityReport {
+    /// First schedulability violation, in deterministic order: demand
+    /// oversubscription of any unit (busiest first), then per-pipeline
+    /// rate-floor infeasibility (plan order). `Ok` means the admitted
+    /// rate floors are statically satisfiable under this plan.
+    pub fn check(&self) -> Result<(), AnalysisError> {
+        for u in &self.units {
+            if u.demand_utilization >= 1.0 {
+                return Err(AnalysisError::UnitOversubscribed {
+                    device: u.device,
+                    unit: u.unit,
+                    utilization: u.demand_utilization,
+                });
+            }
+        }
+        for p in &self.pipelines {
+            if p.demand_hz > 0.0 && p.demand_hz > p.shared_rate_hz {
+                // A loaded pipeline implies a bottleneck unit; fall back
+                // to the pipeline's own busiest unit rather than panic.
+                let (device, unit, _) = self
+                    .bottleneck
+                    .unwrap_or((p.own_bottleneck_device, p.own_bottleneck_unit, 0.0));
+                return Err(AnalysisError::ThroughputInfeasible {
+                    pipeline: p.pipeline,
+                    need_hz: p.demand_hz,
+                    bound_hz: p.shared_rate_hz,
+                    device,
+                    unit,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Statically decompose a deployment's capacity (see the module docs).
+///
+/// `qos`, when given, is index-aligned with `pipelines` (the same
+/// convention as [`super::verify_deployment`]); its `min_rate_hz` floors
+/// become the demand terms. Fails with
+/// [`AnalysisError::UnknownPipeline`] when the plan references a
+/// pipeline absent from `pipelines`.
+pub fn analyze_capacity(
+    plan: &CollabPlan,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+    qos: Option<&[Qos]>,
+) -> Result<CapacityReport, AnalysisError> {
+    let lm = LatencyModel::new(fleet);
+    // Accumulate exactly what `EstimateAccum::add_plan` accumulates, but
+    // keep the per-pipeline split of every unit's busy time.
+    let mut total_busy: BTreeMap<(DeviceId, UnitKind), f64> = BTreeMap::new();
+    let mut per_pipe: Vec<(PipelineId, f64, BTreeMap<(DeviceId, UnitKind), f64>, f64)> =
+        Vec::with_capacity(plan.plans.len());
+    for ep in &plan.plans {
+        let pipeline = ep.pipeline;
+        let spec_idx = pipelines
+            .iter()
+            .position(|p| p.id == pipeline)
+            .ok_or(AnalysisError::UnknownPipeline { pipeline })?;
+        let spec = &pipelines[spec_idx];
+        let sensor = LatencyModel::source_sensor(spec);
+        let mut own: BTreeMap<(DeviceId, UnitKind), f64> = BTreeMap::new();
+        let mut chain = 0.0;
+        for task in ep.tasks(&spec.model) {
+            let lat = lm.task_latency(&task, &spec.model, sensor);
+            chain += lat;
+            *own.entry((task.device, task.unit())).or_default() += lat;
+        }
+        for (&key, &busy) in &own {
+            *total_busy.entry(key).or_default() += busy;
+        }
+        let rate = qos
+            .and_then(|q| q.get(spec_idx))
+            .map_or(0.0, |q| q.min_rate_hz.max(0.0));
+        per_pipe.push((pipeline, chain, own, rate));
+    }
+
+    let critical_path_s = per_pipe.iter().map(|(_, c, _, _)| *c).fold(0.0, f64::max);
+    let bottleneck = total_busy
+        .iter()
+        .fold(None::<((DeviceId, UnitKind), f64)>, |best, (&k, &b)| {
+            // Strict `>` keeps the first (lowest device/unit) key on ties
+            // — BTreeMap iteration makes that deterministic.
+            match best {
+                Some((_, bb)) if bb >= b => best,
+                _ => Some((k, b)),
+            }
+        });
+    let bottleneck_busy = bottleneck.map_or(0.0, |(_, b)| b);
+    let round_period_s = bottleneck_busy.max(critical_path_s / 2.0).max(1e-12);
+
+    let mut units: Vec<UnitLoad> = total_busy
+        .iter()
+        .map(|(&(device, unit), &busy_s)| UnitLoad {
+            device,
+            unit,
+            busy_s,
+            utilization: busy_s / round_period_s,
+            demand_utilization: per_pipe
+                .iter()
+                .map(|(_, _, own, rate)| rate * own.get(&(device, unit)).copied().unwrap_or(0.0))
+                .sum(),
+        })
+        .collect();
+    units.sort_by(|a, b| {
+        b.busy_s
+            .total_cmp(&a.busy_s)
+            .then_with(|| (a.device, a.unit).cmp(&(b.device, b.unit)))
+    });
+
+    let n = per_pipe.len() as f64;
+    let total_chain: f64 = per_pipe.iter().map(|(_, c, _, _)| *c).sum();
+    let shared_rate_hz = 1.0 / round_period_s;
+    let pipelines_cap = per_pipe
+        .iter()
+        .map(|(pipeline, chain, own, rate)| {
+            let (own_key, own_bottleneck_s) = own.iter().fold(
+                ((DeviceId(0), UnitKind::Cpu), 0.0f64),
+                |best, (&k, &b)| if b > best.1 { (k, b) } else { best },
+            );
+            let isolated_period = own_bottleneck_s.max(chain / 2.0).max(1e-12);
+            let interference_s = bottleneck.map_or(0.0, |(bk, busy)| {
+                busy - own.get(&bk).copied().unwrap_or(0.0)
+            });
+            PipelineCapacity {
+                pipeline: *pipeline,
+                chain_latency_s: *chain,
+                own_bottleneck_s,
+                own_bottleneck_device: own_key.0,
+                own_bottleneck_unit: own_key.1,
+                isolated_rate_hz: 1.0 / isolated_period,
+                shared_rate_hz,
+                interference_s,
+                demand_hz: *rate,
+                headroom_hz: shared_rate_hz - *rate,
+            }
+        })
+        .collect();
+
+    Ok(CapacityReport {
+        units,
+        bottleneck: bottleneck.map(|((d, u), b)| (d, u, b)),
+        round_period_s,
+        critical_path_s,
+        throughput_hz: n / round_period_s,
+        throughput_sequential_hz: n / total_chain.max(1e-12),
+        pipelines: pipelines_cap,
+    })
+}
+
+/// Admissible per-unit lower bound of a chunk skeleton: the busiest
+/// (device, unit) busy time any full plan built from these chunks must
+/// pay — its Load/Infer/Unload tasks plus the actual inter-chunk radio
+/// hops, costed by the same [`LatencyModel`]. Endpoint (sense, final
+/// Tx/Rx, interact) tasks only ever *add* busy time, so
+/// `chunks_unit_bound ≤ own_bottleneck_s` of every completed plan: a
+/// rate floor above `1 / max(bound, chain_bound/2)` can be rejected
+/// before endpoint assignment (the bounded planner's admission pruning).
+pub fn chunks_unit_bound(chunks: &[Assignment], model: &ModelGraph, lm: &LatencyModel) -> f64 {
+    let mut busy: Vec<((DeviceId, UnitKind), f64)> = Vec::with_capacity(chunks.len() * 3);
+    let mut add = |dev: DeviceId, kind: TaskKind, lat: f64| {
+        let key = (dev, kind.unit());
+        match busy.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => *v += lat,
+            None => busy.push((key, lat)),
+        }
+    };
+    for (i, a) in chunks.iter().enumerate() {
+        let in_bytes = if a.range.start == 0 {
+            model.in_bytes()
+        } else {
+            model.boundary_bytes(a.range.start - 1)
+        };
+        let out_bytes = model.boundary_bytes(a.range.end - 1);
+        let cost = |dev: DeviceId, kind: TaskKind| {
+            let probe = PlanTask { pipeline: PipelineId(0), seq: 0, device: dev, kind };
+            lm.task_latency(&probe, model, None)
+        };
+        let load = TaskKind::Load { bytes: in_bytes };
+        add(a.device, load, cost(a.device, load));
+        let infer = TaskKind::Infer { range: SplitRange::new(a.range.start, a.range.end) };
+        add(a.device, infer, cost(a.device, infer));
+        let unload = TaskKind::Unload { bytes: out_bytes };
+        add(a.device, unload, cost(a.device, unload));
+        if i > 0 {
+            let prev = chunks[i - 1].device;
+            let tx = TaskKind::Tx { bytes: in_bytes, to: a.device };
+            let rx = TaskKind::Rx { bytes: in_bytes, from: prev };
+            add(prev, tx, cost(prev, tx));
+            add(a.device, rx, cost(a.device, rx));
+        }
+    }
+    busy.iter().map(|&(_, b)| b).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::estimate_plan;
+    use crate::orchestrator::{Planner, Synergy};
+    use crate::workload::{fleet4, fleet4_hetero, workload};
+
+    fn planned(w: usize) -> (CollabPlan, Vec<PipelineSpec>, Fleet) {
+        let fleet = fleet4();
+        let w = workload(w).unwrap();
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        (plan, w.pipelines, fleet)
+    }
+
+    #[test]
+    fn report_reproduces_the_estimator_exactly() {
+        for wid in 1..=4 {
+            let (plan, ps, fleet) = planned(wid);
+            let lm = LatencyModel::new(&fleet);
+            let est = estimate_plan(&plan, &ps, &fleet, &lm);
+            let rep = analyze_capacity(&plan, &ps, &fleet, None).unwrap();
+            assert!((rep.throughput_hz - est.throughput).abs() <= 1e-12 * est.throughput);
+            assert!((rep.critical_path_s - est.critical_path).abs() <= 1e-15);
+            let (_, _, busiest) = rep.bottleneck.unwrap();
+            assert!((busiest - est.bottleneck).abs() <= 1e-15);
+            assert_eq!(rep.pipelines.len(), plan.plans.len());
+            for (p, chain) in rep.pipelines.iter().zip(&est.chain_latency) {
+                assert!((p.chain_latency_s - chain).abs() <= 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn bottleneck_unit_sits_at_full_utilization_when_it_sets_the_period() {
+        let (plan, ps, fleet) = planned(2);
+        let rep = analyze_capacity(&plan, &ps, &fleet, None).unwrap();
+        let (d, u, busy) = rep.bottleneck.unwrap();
+        assert_eq!((rep.units[0].device, rep.units[0].unit), (d, u));
+        // Sorted descending; occupancy tops out at the bottleneck.
+        for w in rep.units.windows(2) {
+            assert!(w[0].busy_s >= w[1].busy_s);
+        }
+        if busy >= rep.critical_path_s / 2.0 {
+            assert!((rep.units[0].utilization - 1.0).abs() < 1e-9);
+        }
+        for u in &rep.units {
+            assert!(u.utilization <= 1.0 + 1e-9);
+            assert_eq!(u.demand_utilization, 0.0, "no QoS floors given");
+        }
+    }
+
+    #[test]
+    fn shared_rate_never_exceeds_isolated_rate() {
+        for fleet in [fleet4(), fleet4_hetero()] {
+            let w = workload(2).unwrap();
+            let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+            let rep = analyze_capacity(&plan, &w.pipelines, &fleet, None).unwrap();
+            for p in &rep.pipelines {
+                assert!(p.shared_rate_hz <= p.isolated_rate_hz + 1e-9);
+                assert!(p.interference_s >= -1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscribing_floors_trip_the_unit_check() {
+        let (plan, ps, fleet) = planned(1);
+        let rep = analyze_capacity(&plan, &ps, &fleet, None).unwrap();
+        // A floor just above each pipeline's isolated cap saturates some
+        // unit with certainty.
+        let qos: Vec<Qos> = rep
+            .pipelines
+            .iter()
+            .map(|p| Qos {
+                min_rate_hz: 2.0 / p.own_bottleneck_s.max(1e-12),
+                ..Qos::default()
+            })
+            .collect();
+        let rep = analyze_capacity(&plan, &ps, &fleet, Some(&qos)).unwrap();
+        let err = rep.check().unwrap_err();
+        assert!(
+            matches!(
+                err,
+                AnalysisError::UnitOversubscribed { utilization, .. } if utilization >= 1.0
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn shared_round_infeasibility_fires_without_oversubscription() {
+        // Workload 2 has multiple pipelines: floor-free apps inflate the
+        // shared round, so a floor between the shared bound and what its
+        // own units could do is infeasible *without* any unit demand ≥ 1.
+        let (plan, ps, fleet) = planned(2);
+        let base = analyze_capacity(&plan, &ps, &fleet, None).unwrap();
+        let p0 = &base.pipelines[0];
+        assert!(
+            p0.isolated_rate_hz > p0.shared_rate_hz * 1.2,
+            "need real interference for this scenario: isolated {} vs shared {}",
+            p0.isolated_rate_hz,
+            p0.shared_rate_hz
+        );
+        let mut qos = vec![Qos::default(); ps.len()];
+        let floor = p0.shared_rate_hz * 1.1;
+        qos[0].min_rate_hz = floor;
+        // Demand stays under 1 on every unit…
+        assert!(floor * p0.own_bottleneck_s < 1.0);
+        let rep = analyze_capacity(&plan, &ps, &fleet, Some(&qos)).unwrap();
+        let err = rep.check().unwrap_err();
+        assert!(
+            matches!(
+                err,
+                AnalysisError::ThroughputInfeasible { pipeline, need_hz, bound_hz, .. }
+                    if pipeline == plan.plans[0].pipeline && need_hz > bound_hz
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn chunks_unit_bound_lower_bounds_the_full_plan() {
+        for wid in 1..=4 {
+            let (plan, ps, fleet) = planned(wid);
+            let lm = LatencyModel::new(&fleet);
+            let rep = analyze_capacity(&plan, &ps, &fleet, None).unwrap();
+            for (ep, cap) in plan.plans.iter().zip(&rep.pipelines) {
+                let spec = ps.iter().find(|p| p.id == ep.pipeline).unwrap();
+                let bound = chunks_unit_bound(&ep.chunks, &spec.model, &lm);
+                assert!(
+                    bound <= cap.own_bottleneck_s + 1e-12,
+                    "skeleton bound {bound} must not exceed the plan's own \
+                     bottleneck {}",
+                    cap.own_bottleneck_s
+                );
+                assert!(bound > 0.0);
+            }
+        }
+    }
+}

@@ -59,6 +59,49 @@ pub enum AnalysisError {
         budget_ms: f64,
     },
 
+    /// A computation unit's demand utilization `Σ_app min_rate · busy`
+    /// is at or above 1: the admitted rates alone saturate the unit, so
+    /// its backlog grows without bound — no schedule exists
+    /// (schedulability necessary condition, per-unit).
+    #[error(
+        "{unit:?} on {device} is oversubscribed: admitted rates demand \
+         {utilization:.3}× its capacity (≥ 1 means unbounded backlog)"
+    )]
+    UnitOversubscribed {
+        device: DeviceId,
+        unit: UnitKind,
+        /// Demand utilization `Σ_app min_rate_hz · busy_s(unit)`.
+        utilization: f64,
+    },
+
+    /// An app's rate floor exceeds the plan's static per-pipeline
+    /// throughput upper bound (one completion per unified round, the
+    /// round period set by the bottleneck unit) — reachable without any
+    /// single unit being oversubscribed, e.g. when floor-free apps
+    /// inflate the shared round.
+    #[error(
+        "{pipeline}: rate floor {need_hz:.2} Hz exceeds the static bound \
+         {bound_hz:.2} Hz set by the bottleneck {unit:?} on {device}"
+    )]
+    ThroughputInfeasible {
+        pipeline: PipelineId,
+        /// The app's `min_rate_hz` floor.
+        need_hz: f64,
+        /// Static per-pipeline steady-state rate upper bound, 1/period.
+        bound_hz: f64,
+        /// The system bottleneck unit that sets the round period.
+        device: DeviceId,
+        unit: UnitKind,
+    },
+
+    /// The serve engine's chunk-chain/merge channel graph has a cycle: a
+    /// stage would wait (transitively) on its own output, a backpressure
+    /// deadlock. Plans expanded by [`crate::plan::ExecutionPlan::tasks`]
+    /// are forward-only chains and can never trip this — the variant
+    /// exists so the invariant is *checked*, not folklore.
+    #[error("{pipeline}: channel graph cycle: {detail}")]
+    ChannelCycle { pipeline: PipelineId, detail: String },
+
     /// A scripted event references a device that cannot be on the body at
     /// that instant (departed earlier in the script, or never joined).
     #[error("scenario event at t={t}: device {device} is absent: {detail}")]

@@ -1,0 +1,138 @@
+//! Human-readable rendering of a [`CapacityReport`] — the `synergy
+//! explain` subcommand's body. Pure string construction over the static
+//! analysis, so tests can assert on the rendered output and the CLI
+//! stays a thin argument parser.
+
+use crate::pipeline::PipelineSpec;
+use crate::util::table::Table;
+
+use super::capacity::CapacityReport;
+
+/// Render the full capacity explanation: round summary, per-unit
+/// utilization (bottleneck marked), and per-pipeline static bounds vs
+/// QoS with headroom. `pipelines` supplies app names; entries absent
+/// from it fall back to the pipeline id.
+pub fn render_explain(report: &CapacityReport, pipelines: &[PipelineSpec]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "steady state: {:.2} completions/s over {} pipeline(s); unified \
+         round {:.3} ms (critical path {:.3} ms)\n",
+        report.throughput_hz,
+        report.pipelines.len(),
+        report.round_period_s * 1e3,
+        report.critical_path_s * 1e3,
+    ));
+    match report.bottleneck {
+        Some((dev, unit, busy)) => out.push_str(&format!(
+            "bottleneck: {unit:?} on {dev} ({:.3} ms busy per round)\n\n",
+            busy * 1e3
+        )),
+        None => out.push_str("bottleneck: none (empty plan)\n\n"),
+    }
+
+    let mut units = Table::new(["unit", "device", "busy/round", "occupancy", "demand util", ""]);
+    for u in &report.units {
+        let mark = match report.bottleneck {
+            Some((d, k, _)) if (d, k) == (u.device, u.unit) => "<- bottleneck",
+            _ => "",
+        };
+        units.row([
+            format!("{:?}", u.unit),
+            u.device.to_string(),
+            format!("{:.3} ms", u.busy_s * 1e3),
+            format!("{:>5.1}%", u.utilization * 100.0),
+            format!("{:.3}", u.demand_utilization),
+            mark.to_string(),
+        ]);
+    }
+    out.push_str(&units.render());
+    out.push('\n');
+
+    let mut pipes = Table::new([
+        "pipeline",
+        "chain",
+        "own bottleneck",
+        "isolated",
+        "shared bound",
+        "interference",
+        "floor",
+        "headroom",
+        "verdict",
+    ]);
+    for p in &report.pipelines {
+        let name = pipelines
+            .iter()
+            .find(|s| s.id == p.pipeline)
+            .map_or_else(|| p.pipeline.to_string(), |s| s.name.clone());
+        let verdict = if p.demand_hz <= 0.0 {
+            "ok (no floor)"
+        } else if p.demand_hz <= p.shared_rate_hz {
+            "ok"
+        } else {
+            "INFEASIBLE"
+        };
+        pipes.row([
+            name,
+            format!("{:.3} ms", p.chain_latency_s * 1e3),
+            format!(
+                "{:?}@{} {:.3} ms",
+                p.own_bottleneck_unit,
+                p.own_bottleneck_device,
+                p.own_bottleneck_s * 1e3
+            ),
+            format!("{:.2} Hz", p.isolated_rate_hz),
+            format!("{:.2} Hz", p.shared_rate_hz),
+            format!("{:.3} ms", p.interference_s * 1e3),
+            if p.demand_hz > 0.0 {
+                format!("{:.2} Hz", p.demand_hz)
+            } else {
+                "-".to_string()
+            },
+            format!("{:+.2} Hz", p.headroom_hz),
+            verdict.to_string(),
+        ]);
+    }
+    out.push_str(&pipes.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::capacity::analyze_capacity;
+    use crate::api::Qos;
+    use crate::orchestrator::{Planner, Synergy};
+    use crate::workload::{fleet4, workload};
+
+    #[test]
+    fn rendering_names_the_bottleneck_and_every_pipeline() {
+        let fleet = fleet4();
+        let w = workload(2).unwrap();
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let rep = analyze_capacity(&plan, &w.pipelines, &fleet, None).unwrap();
+        let s = render_explain(&rep, &w.pipelines);
+        assert!(s.contains("<- bottleneck"), "{s}");
+        assert!(s.contains("ok (no floor)"), "{s}");
+        for spec in &w.pipelines {
+            assert!(s.contains(&spec.name), "missing {}: {s}", spec.name);
+        }
+        // One unit row per loaded unit, one pipeline row per app.
+        assert!(s.matches(" ms").count() >= rep.units.len() + rep.pipelines.len());
+    }
+
+    #[test]
+    fn infeasible_floor_is_flagged_in_the_verdict_column() {
+        let fleet = fleet4();
+        let w = workload(1).unwrap();
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let qos: Vec<Qos> = w
+            .pipelines
+            .iter()
+            .map(|_| Qos { min_rate_hz: 1e9, ..Qos::default() })
+            .collect();
+        let rep = analyze_capacity(&plan, &w.pipelines, &fleet, Some(&qos)).unwrap();
+        let s = render_explain(&rep, &w.pipelines);
+        assert!(s.contains("INFEASIBLE"), "{s}");
+        assert!(s.contains("1000000000.00 Hz"), "{s}");
+    }
+}

@@ -7,26 +7,45 @@
 //!   collaboration plan must reference known pipelines and present
 //!   devices, chain its chunks shape-connectedly, never double-book a
 //!   computation unit within a stage, fit every accelerator's memory
-//!   jointly, and (optionally) clear each app's QoS latency budget at the
-//!   estimator's lower bound. Wired into every plan-commit point — the
-//!   orchestrator, session replans, and serve rebinds — behind debug
-//!   assertions ([`debug_verify_deployment`]), and exposed as the
-//!   `synergy check` CLI subcommand with typed [`AnalysisError`]
-//!   diagnostics.
+//!   jointly, bind an acyclic channel graph on the serve engine
+//!   ([`crate::serving::plan_channel_graph`]), and (optionally) clear
+//!   each app's QoS hints — latency budgets at the estimator's lower
+//!   bound AND rate floors against the full capacity analysis. Wired
+//!   into every plan-commit point — the orchestrator, session replans,
+//!   and serve rebinds — behind debug assertions
+//!   ([`debug_verify_deployment`]), and exposed as the `synergy check`
+//!   CLI subcommand with typed [`AnalysisError`] diagnostics.
+//! - **Capacity / schedulability analysis** ([`analyze_capacity`]): the
+//!   estimator's unified-round accumulation decomposed per (device,
+//!   unit) and per pipeline into a [`CapacityReport`] — utilization,
+//!   demand utilization under admitted rate floors, the bottleneck
+//!   unit, interference terms, and static per-pipeline throughput
+//!   bounds. [`CapacityReport::check`] turns it into typed
+//!   oversubscription/infeasibility rejections; [`render_explain`]
+//!   turns it into the `synergy explain` report; the bounded planner
+//!   prunes skeletons against the same bounds before device assignment.
 //! - **Static scenario linting** ([`verify_scenario`]): scripts are
 //!   checked before replay for events on departed devices, duplicate
 //!   batteries, recharges of unarmed batteries, and actions after the
-//!   `until` horizon.
+//!   `until` horizon; scripted batteries get drain-model depletion
+//!   windows ([`battery_depletion_windows`]) so the dense-suffix
+//!   departure rule stays active when batteries are armed.
 //! - **Seeded race exploration** ([`SameTimePolicy`]): both engines order
 //!   simultaneously-ready events by an arbitrary tie rule; the policy
 //!   makes that rule a seeded knob so `tests/scenario_fuzz.rs` can assert
 //!   the session invariants (round conservation, determinism per seed,
 //!   sim-vs-serve switch-timeline equality) under every ordering.
 
+pub mod capacity;
 pub mod error;
+pub mod explain;
 pub mod policy;
 pub mod verify;
 
+pub use capacity::{analyze_capacity, chunks_unit_bound, CapacityReport, PipelineCapacity, UnitLoad};
 pub use error::AnalysisError;
+pub use explain::render_explain;
 pub use policy::SameTimePolicy;
-pub use verify::{debug_verify_deployment, verify_deployment, verify_scenario};
+pub use verify::{
+    battery_depletion_windows, debug_verify_deployment, verify_deployment, verify_scenario,
+};

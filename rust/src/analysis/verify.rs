@@ -5,10 +5,12 @@ use std::collections::BTreeMap;
 
 use crate::api::{Qos, Scenario, ScenarioAction};
 use crate::device::{AccelMemory, DeviceId, Fleet};
-use crate::estimator::{estimate_plan, LatencyModel};
 use crate::pipeline::{PipelineSpec, SourceReq, TargetReq};
 use crate::plan::{CollabPlan, UnitKind};
+use crate::power::peak_device_draw;
+use crate::serving::plan_channel_graph;
 
+use super::capacity::analyze_capacity;
 use super::error::AnalysisError;
 
 /// Statically verify a holistic collaboration plan against the fleet and
@@ -23,9 +25,17 @@ use super::error::AnalysisError;
 ///    and Rx from itself in the same hop);
 /// 5. the joint per-accelerator memory usage fits (§IV-C runnable, but as
 ///    a typed error instead of a panic on malformed input);
-/// 6. optionally, QoS lower-bound feasibility: the estimator's chain
-///    latency is a lower bound on any achievable end-to-end latency, so a
-///    chain already over an app's budget can never meet it.
+/// 6. the serve engine's channel topology for this plan is cycle-free
+///    ([`plan_channel_graph`]) — backpressure deadlock is a checked
+///    invariant, not folklore;
+/// 7. optionally, full QoS feasibility via the static capacity analysis
+///    ([`analyze_capacity`]): no unit's demand utilization under the
+///    admitted rate floors reaches 1
+///    ([`AnalysisError::UnitOversubscribed`]), every floor clears the
+///    plan's per-pipeline static throughput bound
+///    ([`AnalysisError::ThroughputInfeasible`]), and each chain-latency
+///    lower bound clears its latency budget
+///    ([`AnalysisError::QosInfeasible`]).
 ///
 /// `qos`, when given, is index-aligned with `pipelines`. Pass `None` at
 /// plan-commit points: a deployed plan may *legitimately* miss QoS hints
@@ -89,11 +99,11 @@ pub fn verify_deployment(
     // modeled memory ceiling.
     let mut usage: BTreeMap<DeviceId, AccelMemory> = BTreeMap::new();
     for ep in &plan.plans {
-        let model = &pipelines
-            .iter()
-            .find(|p| p.id == ep.pipeline)
-            .expect("pipeline verified above")
-            .model;
+        // The per-pipeline loop above already rejected unknown ids.
+        let Some(spec) = pipelines.iter().find(|p| p.id == ep.pipeline) else {
+            return Err(AnalysisError::UnknownPipeline { pipeline: ep.pipeline });
+        };
+        let model = &spec.model;
         for a in &ep.chunks {
             let m = usage.entry(a.device).or_default();
             m.weight_bytes += model.weight_bytes(a.range);
@@ -109,15 +119,24 @@ pub fn verify_deployment(
         }
     }
 
+    // The channel graph the serve engine would bind is forward-only by
+    // construction; prove it per deployment (O(tasks)).
+    plan_channel_graph(plan, pipelines, fleet)?.check_acyclic()?;
+
     if let Some(qos) = qos {
-        let lm = LatencyModel::new(fleet);
-        let estimate = estimate_plan(plan, pipelines, fleet, &lm);
-        for (i, ep) in plan.plans.iter().enumerate() {
+        let report = analyze_capacity(plan, pipelines, fleet, Some(qos))?;
+        // Rate feasibility: demand oversubscription of any unit, then
+        // per-pipeline floors against the static round bound.
+        report.check()?;
+        // Latency feasibility: the chain latency is a lower bound on any
+        // achievable end-to-end latency, so a chain already over an
+        // app's budget can never meet it.
+        for (ep, cap) in plan.plans.iter().zip(&report.pipelines) {
             let Some(pi) = pipelines.iter().position(|p| p.id == ep.pipeline) else {
                 continue;
             };
             let Some(q) = qos.get(pi) else { continue };
-            let est_ms = estimate.chain_latency[i] * 1e3;
+            let est_ms = cap.chain_latency_s * 1e3;
             if q.latency_budget_ms.is_finite() && est_ms > q.latency_budget_ms {
                 return Err(AnalysisError::QosInfeasible {
                     pipeline: ep.pipeline,
@@ -130,6 +149,55 @@ pub fn verify_deployment(
     Ok(())
 }
 
+/// Static per-battery depletion windows `(device, earliest, latest)` for
+/// a scenario's declared batteries on its starting fleet: the earliest
+/// instant the battery *could* run dry (continuous drain at the device's
+/// [`peak_device_draw`] bound, Peukert-derated), and the latest (idle
+/// base draw, every scripted recharge banked; `INFINITY` for a zero base
+/// draw). Both assume continuous presence from `t = 0` — a battery whose
+/// device joins late only depletes later, so `earliest` stays a sound
+/// lower bound. Devices beyond the starting fleet have no power spec and
+/// get the maximally-permissive `(0, INFINITY)` window.
+pub fn battery_depletion_windows(scenario: &Scenario, fleet: &Fleet) -> Vec<(DeviceId, f64, f64)> {
+    let peak = peak_device_draw(fleet);
+    scenario
+        .batteries()
+        .iter()
+        .map(|&(d, capacity_j, cfg)| {
+            let Some(&peak_w) = peak.get(d.0) else {
+                return (d, 0.0, f64::INFINITY);
+            };
+            let base_w = fleet.get(d).spec.power.base_w;
+            // Peukert drain `draw·(draw/ref)^(k−1)` is monotone in the
+            // draw for k > 0, so the peak draw bounds the drain rate.
+            let drain_upper = if cfg.peukert != 1.0 && base_w > 0.0 {
+                peak_w * (peak_w / base_w).powf(cfg.peukert - 1.0)
+            } else {
+                peak_w
+            };
+            let earliest = if drain_upper > 0.0 {
+                capacity_j / drain_upper
+            } else {
+                f64::INFINITY
+            };
+            let banked: f64 = scenario
+                .events()
+                .iter()
+                .filter_map(|ev| match ev.action {
+                    ScenarioAction::Recharge { device, joules } if device == d => Some(joules),
+                    _ => None,
+                })
+                .sum();
+            let latest = if base_w > 0.0 {
+                (capacity_j + banked) / base_w
+            } else {
+                f64::INFINITY
+            };
+            (d, earliest, latest)
+        })
+        .collect()
+}
+
 /// Statically lint a scenario script against its starting fleet, before
 /// replay:
 ///
@@ -140,11 +208,13 @@ pub fn verify_deployment(
 /// - events referencing devices that cannot be on the body at that instant
 ///   (departed earlier in the script, or beyond the scripted fleet).
 ///
-/// The device check is *conservative* under battery depletions: a
-/// depletion shrinks the fleet at an instant no static checker can see, so
-/// with batteries declared only references **at or beyond** the maximum
-/// possible fleet length are flagged; without batteries the dense-suffix
-/// churn rules are enforced exactly.
+/// The device check stays active under battery depletions: a depletion
+/// shrinks the fleet at an instant no static checker can pinpoint, but
+/// the drain model bounds *when* it could happen
+/// ([`battery_depletion_windows`]) — a scripted non-suffix departure is
+/// accepted only when every higher-id device is battery-armed and could
+/// already have depleted (earliest window ≤ the event time); without
+/// batteries the dense-suffix churn rules are enforced exactly.
 pub fn verify_scenario(scenario: &Scenario, fleet: &Fleet) -> Result<(), AnalysisError> {
     let batteries = scenario.batteries();
     for (i, &(d, _, _)) in batteries.iter().enumerate() {
@@ -153,7 +223,7 @@ pub fn verify_scenario(scenario: &Scenario, fleet: &Fleet) -> Result<(), Analysi
         }
     }
     let armed: Vec<DeviceId> = batteries.iter().map(|&(d, _, _)| d).collect();
-    let depletions_possible = !armed.is_empty();
+    let windows = battery_depletion_windows(scenario, fleet);
 
     let until = scenario.duration();
     for ev in scenario.events() {
@@ -186,19 +256,41 @@ pub fn verify_scenario(scenario: &Scenario, fleet: &Fleet) -> Result<(), Analysi
                         detail: format!("departure of {d} from a {len}-device fleet"),
                     });
                 }
-                if !depletions_possible && d.0 != len - 1 {
-                    return Err(AnalysisError::DeviceAbsent {
-                        t: ev.t,
-                        device: *d,
-                        detail: format!(
-                            "device ids are dense: only the last device (d{}) can leave",
-                            len - 1
-                        ),
-                    });
+                // A non-suffix departure is reachable only if every
+                // higher id already depleted and departed — possible
+                // exactly when each is armed with an earliest-depletion
+                // window at or before this instant.
+                for above in (d.0 + 1)..len {
+                    let dev = DeviceId(above);
+                    match windows.iter().find(|&&(w, _, _)| w == dev) {
+                        Some(&(_, earliest, _)) if earliest <= ev.t => {}
+                        Some(&(_, earliest, _)) => {
+                            return Err(AnalysisError::DeviceAbsent {
+                                t: ev.t,
+                                device: *d,
+                                detail: format!(
+                                    "device ids are dense: {dev} above it cannot have \
+                                     depleted yet (earliest {earliest:.3} s at peak drain)"
+                                ),
+                            });
+                        }
+                        None if armed.contains(&dev) => unreachable!("windows cover armed ids"),
+                        None => {
+                            return Err(AnalysisError::DeviceAbsent {
+                                t: ev.t,
+                                device: *d,
+                                detail: format!(
+                                    "device ids are dense: {dev} above it has no battery, \
+                                     so only the last device (d{}) can leave",
+                                    len - 1
+                                ),
+                            });
+                        }
+                    }
                 }
-                // With batteries, depletions may already have shrunk the
-                // suffix down to d; either way d and everything above are
-                // gone after this event.
+                // Depletions may already have shrunk the suffix down to
+                // d; either way d and everything above are gone after
+                // this event.
                 len = d.0;
             }
             ScenarioAction::DeviceJoined(dev) => {

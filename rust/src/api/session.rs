@@ -172,6 +172,13 @@ pub struct Interval {
     /// streaming engine integrates its workers' busy spans through the
     /// same accountant the DES uses).
     pub power_w: f64,
+    /// State of charge of every armed battery at the interval's *end*
+    /// boundary, `(device, remaining joules)` sorted by device id —
+    /// engine-independent (the drain model is closed-form), so cascade
+    /// scenarios plot directly from the report without hand-sampling
+    /// [`Session::battery_remaining_j`]. Empty when the scenario
+    /// declares no batteries.
+    pub battery_j: Vec<(DeviceId, f64)>,
     pub per_app: Vec<AppInterval>,
 }
 
@@ -219,6 +226,24 @@ pub struct SessionReport {
     /// Streaming-engine summary when the session ran on
     /// [`Session::serve`].
     pub served: Option<ServeSummary>,
+}
+
+impl SessionReport {
+    /// One device's state-of-charge series over the interval end
+    /// boundaries, `(t, remaining joules)` — the plottable per-battery
+    /// view of [`Interval::battery_j`]. Entries stop once the device's
+    /// battery departs (depletion or scripted departure).
+    pub fn battery_series(&self, device: DeviceId) -> Vec<(f64, f64)> {
+        self.intervals
+            .iter()
+            .filter_map(|iv| {
+                iv.battery_j
+                    .iter()
+                    .find(|&&(d, _)| d == device)
+                    .map(|&(_, j)| (iv.end, j))
+            })
+            .collect()
+    }
 }
 
 /// Core state cloned out of the lock after applying a scenario event —
@@ -360,6 +385,10 @@ pub struct Session {
     /// Cumulative energy at each boundary (simulator sessions; served
     /// sessions rebuild the marks at finish from the busy-span replay).
     energy_marks: Vec<f64>,
+    /// Battery state-of-charge snapshot at each boundary (parallel to
+    /// `bounds`; engine-independent — the closed-form drain model is
+    /// shared, so no serve-side rebuild is needed).
+    soc_marks: Vec<Vec<(DeviceId, f64)>>,
     /// Streaming per-interval aggregates; `scratch[i]` covers
     /// `(bounds[i], bounds[i+1]]` — a round completing exactly at a plan
     /// switch ran under the *old* plan, so it belongs to the interval
@@ -447,6 +476,7 @@ impl Session {
             |d| fleet.devices.get(d.0).map_or(0.0, |dev| dev.spec.power.base_w),
         );
 
+        let soc0 = batteries.snapshot();
         let mut session = Session {
             shared,
             engine: SessionEngine::Sim(engine),
@@ -458,6 +488,7 @@ impl Session {
             fleet_len: fleet.len(),
             bounds: vec![0.0],
             energy_marks: vec![0.0],
+            soc_marks: vec![soc0],
             scratch: vec![IntervalScratch::default()],
             switches: Vec::new(),
             open_qos: BTreeMap::new(),
@@ -585,6 +616,7 @@ impl Session {
         let bounds = std::mem::take(&mut self.bounds);
         let mut scratch = std::mem::take(&mut self.scratch);
         let sim_marks = std::mem::take(&mut self.energy_marks);
+        let soc_marks = std::mem::take(&mut self.soc_marks);
         let names = std::mem::take(&mut self.names);
 
         let (completions, energy_j, trace, served, marks) = match self.engine {
@@ -677,6 +709,7 @@ impl Session {
                     0.0
                 },
                 power_w: (marks[i + 1] - marks[i]) / span,
+                battery_j: soc_marks.get(i + 1).cloned().unwrap_or_default(),
                 per_app,
             });
         }
@@ -1026,6 +1059,9 @@ impl Session {
         self.drain_records();
         self.bounds.push(t);
         self.energy_marks.push(self.engine.energy_probe_j(t));
+        // `apply`/`advance` always advance the batteries to `t` before
+        // closing an interval, so this snapshot is boundary-exact.
+        self.soc_marks.push(self.batteries.snapshot());
         self.scratch.push(IntervalScratch::default());
     }
 
@@ -1037,6 +1073,7 @@ impl Session {
         if last < duration {
             self.bounds.push(duration);
             self.energy_marks.push(self.engine.energy_probe_j(duration));
+            self.soc_marks.push(self.batteries.snapshot());
         } else if self.scratch.len() == self.bounds.len() && self.scratch.len() >= 2 {
             // A terminal event landed exactly on the horizon: fold its
             // empty trailing interval into the final one.

@@ -21,7 +21,7 @@ use synergy::workload;
 
 const VALUE_OPTS: &[&str] = &[
     "runs", "seed", "workload", "combos", "artifacts", "inflight", "fleet", "beam", "name",
-    "until", "scenario",
+    "until", "scenario", "rate",
 ];
 
 fn main() {
@@ -29,6 +29,7 @@ fn main() {
     let code = match args.cmd() {
         Some("exp") => cmd_exp(&args),
         Some("plan") => cmd_plan(&args),
+        Some("explain") => cmd_explain(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
         Some("check") => cmd_check(&args),
@@ -44,13 +45,20 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: synergy <exp|plan|scenario|serve|check|zoo|list> [options]\n\
+    "usage: synergy <exp|plan|explain|scenario|serve|check|zoo|list> [options]\n\
      \n\
      exp <id|all>   reproduce a paper experiment (see `synergy list`)\n\
      \u{20}              --runs N (sim rounds), --seed S, --full (fig9 full sweep)\n\
      plan           --workload 1..4|mixed8, print the selected plan\n\
      \u{20}              --fleet 4|4h|8|12h, --beam W (bounded plan search;\n\
      \u{20}              default exhaustive — required beyond ~5 devices)\n\
+     explain        static capacity analysis of the selected plan: per-unit\n\
+     \u{20}              utilization, the bottleneck unit, per-pipeline\n\
+     \u{20}              throughput bounds vs QoS with headroom — no\n\
+     \u{20}              execution. --workload/--fleet/--beam as in plan;\n\
+     \u{20}              --rate R arms a uniform min-rate floor (Hz) on\n\
+     \u{20}              every app (planner admission pruning + feasibility\n\
+     \u{20}              verdicts; exit 1 if statically infeasible)\n\
      scenario       live session with mid-run churn: time-series report,\n\
      \u{20}              plan-switch timeline, QoS spans (cascade8 = battery-\n\
      \u{20}              driven departure cascade with event-driven depletion)\n\
@@ -175,6 +183,36 @@ fn print_session_report(header: &str, report: &SessionReport) {
         }
     }
     t.print();
+
+    // Per-device state of charge at the interval boundaries, batteries
+    // armed (e.g. cascade8) — plottable straight from the report.
+    let mut battery_devs: Vec<synergy::device::DeviceId> = report
+        .intervals
+        .iter()
+        .flat_map(|iv| iv.battery_j.iter().map(|&(d, _)| d))
+        .collect();
+    battery_devs.sort();
+    battery_devs.dedup();
+    if !battery_devs.is_empty() {
+        println!("\nbattery state of charge (J at interval end):");
+        let mut header = vec!["t".to_string()];
+        header.extend(battery_devs.iter().map(|d| d.to_string()));
+        let mut t = Table::new(header);
+        for iv in &report.intervals {
+            let mut row = vec![format!("{:.2}s", iv.end)];
+            for d in &battery_devs {
+                row.push(
+                    iv.battery_j
+                        .iter()
+                        .find(|&&(dev, _)| dev == *d)
+                        .map(|&(_, j)| format!("{j:.2}"))
+                        .unwrap_or_else(|| "-".to_string()),
+                );
+            }
+            t.row(row);
+        }
+        t.print();
+    }
 
     if report.qos_spans.is_empty() {
         println!("\nno QoS violations");
@@ -407,6 +445,113 @@ fn cmd_plan(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("simulation failed: {e}");
+            1
+        }
+    }
+}
+
+/// `synergy explain` — the static capacity analysis as a command: plan
+/// the workload, then print per-unit utilization, the bottleneck unit,
+/// and per-pipeline static throughput bounds vs QoS with headroom.
+/// Nothing executes. `--rate R` arms a uniform `min_rate_hz` floor on
+/// every app, which both engages the bounded planner's skeleton
+/// admission pruning and drives the feasibility verdicts. Exit 0 =
+/// statically feasible, 1 = infeasible (the typed diagnostic is
+/// printed), 2 = usage.
+fn cmd_explain(args: &Args) -> i32 {
+    let Some(fleet) = fleet_by_name(args.opt("fleet").unwrap_or("4")) else {
+        eprintln!(
+            "unknown fleet {:?}: valid fleets are 4, 4h, 8, 12h",
+            args.opt("fleet").unwrap_or("4")
+        );
+        return 2;
+    };
+    let w = match args.opt("workload") {
+        None => match workload::workload(1) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
+        Some("mixed8") => workload::workload_mixed8(fleet.len()),
+        Some(s) => match s.parse::<usize>() {
+            Ok(id) => match workload::workload(id) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("{e} (or mixed8)");
+                    return 2;
+                }
+            },
+            Err(_) => {
+                eprintln!(
+                    "unknown workload {s:?}: valid workloads are {}, mixed8",
+                    workload::workload_names()
+                );
+                return 2;
+            }
+        },
+    };
+    let rate = match args.opt("rate") {
+        None => 0.0,
+        Some(r) => match r.parse::<f64>() {
+            Ok(v) if v >= 0.0 && v.is_finite() => v,
+            _ => {
+                eprintln!("--rate takes a non-negative rate in Hz, got {r:?}");
+                return 2;
+            }
+        },
+    };
+    let mut planner = Synergy::planner();
+    if let Some(beam) = args.opt("beam") {
+        let Ok(width) = beam.parse::<usize>() else {
+            eprintln!("--beam takes a positive integer, got {beam:?}");
+            return 2;
+        };
+        planner = Synergy::planner_bounded(width.max(1));
+    } else if fleet.len() > 5 {
+        eprintln!(
+            "note: {}-device fleet — using bounded plan search (--beam {})",
+            fleet.len(),
+            synergy::plan::DEFAULT_BEAM_WIDTH
+        );
+        planner = Synergy::planner_bounded(synergy::plan::DEFAULT_BEAM_WIDTH);
+    }
+    let selection = if rate > 0.0 {
+        planner.select_admitted(&w.pipelines, &fleet, &vec![rate; w.pipelines.len()])
+    } else {
+        planner.select(&w.pipelines, &fleet)
+    };
+    let plan = match selection {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("orchestration failed: {e}");
+            return 1;
+        }
+    };
+    let qos: Vec<synergy::api::Qos> = w
+        .pipelines
+        .iter()
+        .map(|_| synergy::api::Qos { min_rate_hz: rate, ..synergy::api::Qos::default() })
+        .collect();
+    let report = match synergy::analysis::analyze_capacity(&plan, &w.pipelines, &fleet, Some(&qos))
+    {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("capacity analysis failed: {e}");
+            return 1;
+        }
+    };
+    println!("{} — static capacity analysis:", w.name);
+    for ep in &plan.plans {
+        println!("  {ep}");
+    }
+    println!();
+    print!("{}", synergy::analysis::render_explain(&report, &w.pipelines));
+    match report.check() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("\nstatically infeasible: {e}");
             1
         }
     }

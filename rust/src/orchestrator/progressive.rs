@@ -9,6 +9,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::analysis::chunks_unit_bound;
 use crate::device::Fleet;
 use crate::estimator::{EstimateAccum, LatencyModel};
 use crate::pipeline::{PipelineId, PipelineSpec};
@@ -99,6 +100,36 @@ impl ProgressivePlanner {
         pipelines: &[PipelineSpec],
         fleet: &Fleet,
     ) -> Result<CollabPlan, PlanError> {
+        self.select_inner(pipelines, fleet, None)
+    }
+
+    /// [`Self::select`] with QoS admission pruning: `min_rates` is
+    /// index-aligned with `pipelines` (Hz floors, 0 = no floor). Under
+    /// bounded search, skeletons whose static bottleneck bound —
+    /// `1 / max(busiest own unit, chain/2)` over the chunk tasks alone,
+    /// an admissible cap on any completed plan's isolated rate
+    /// ([`crate::analysis::chunks_unit_bound`]) — already violates the
+    /// floor are dropped *before* endpoint assignment and scoring. The
+    /// exhaustive search ignores the floors (its streaming enumeration is
+    /// bit-parity-pinned against the replan cache); so does a pipeline
+    /// whose every skeleton would be dropped — the planner then selects
+    /// normally and `verify_deployment` reports the infeasibility with
+    /// its typed error instead of an opaque planning failure.
+    pub fn select_admitted(
+        &self,
+        pipelines: &[PipelineSpec],
+        fleet: &Fleet,
+        min_rates: &[f64],
+    ) -> Result<CollabPlan, PlanError> {
+        self.select_inner(pipelines, fleet, Some(min_rates))
+    }
+
+    fn select_inner(
+        &self,
+        pipelines: &[PipelineSpec],
+        fleet: &Fleet,
+        floors: Option<&[f64]>,
+    ) -> Result<CollabPlan, PlanError> {
         self.candidates_scored.set(0);
         if matches!(self.cfg.search, SearchMode::Bounded { .. }) {
             // Bounded search: enumerate pruned candidate lists once (in
@@ -108,8 +139,9 @@ impl ProgressivePlanner {
             let mut run = |priority: Priority| {
                 let order = priority.order(pipelines);
                 let mut scored = 0;
-                let result =
-                    self.select_over_skeletons(pipelines, fleet, &order, &skels, &mut scored);
+                let result = self.select_over_skeletons_admitted(
+                    pipelines, fleet, &order, &skels, &mut scored, floors,
+                );
                 self.candidates_scored
                     .set(self.candidates_scored.get() + scored);
                 result
@@ -150,6 +182,21 @@ impl ProgressivePlanner {
         skels: &BTreeMap<PipelineId, Vec<Skeleton>>,
         scored: &mut u64,
     ) -> Result<CollabPlan, PlanError> {
+        self.select_over_skeletons_admitted(specs, fleet, order, skels, scored, None)
+    }
+
+    /// [`Self::select_over_skeletons`] with optional QoS admission
+    /// pruning (see [`Self::select_admitted`]). `floors = None` is the
+    /// bit-identical legacy path.
+    pub(crate) fn select_over_skeletons_admitted(
+        &self,
+        specs: &[PipelineSpec],
+        fleet: &Fleet,
+        order: &[usize],
+        skels: &BTreeMap<PipelineId, Vec<Skeleton>>,
+        scored: &mut u64,
+        floors: Option<&[f64]>,
+    ) -> Result<CollabPlan, PlanError> {
         let lm = LatencyModel::new(fleet);
         let mut ledger = MemoryLedger::default();
         let mut accum = EstimateAccum::new(fleet);
@@ -170,6 +217,38 @@ impl ProgressivePlanner {
             let skeletons = skels
                 .get(&spec.id)
                 .expect("skeletons enumerated for every pipeline");
+            // Admission pruning (bounded search only): a skeleton whose
+            // static bottleneck bound cannot reach the pipeline's rate
+            // floor is dropped before endpoint assignment. Sound because
+            // `chunks_unit_bound ≤` any completed plan's busiest own
+            // unit and `chain_bound ≤` its chain, so the cap only
+            // over-estimates what the plan could deliver in isolation —
+            // nothing feasible is ever dropped. Pruning preserves the
+            // ascending-`chain_bound` order, keeping the optimistic
+            // early-`break` safe. If every skeleton would be dropped,
+            // fall back to the full list: the planner still commits its
+            // best effort and the verifier reports the typed
+            // infeasibility.
+            let floor = floors.and_then(|f| f.get(i)).copied().unwrap_or(0.0);
+            let admitted: Vec<&Skeleton> = if bounded && floor > 0.0 {
+                let adm: Vec<&Skeleton> = skeletons
+                    .iter()
+                    .filter(|s| {
+                        let cap = 1.0
+                            / chunks_unit_bound(&s.chunks, &spec.model, &lm)
+                                .max(s.chain_bound / 2.0)
+                                .max(1e-12);
+                        floor <= cap
+                    })
+                    .collect();
+                if adm.is_empty() {
+                    skeletons.iter().collect()
+                } else {
+                    adm
+                }
+            } else {
+                skeletons.iter().collect()
+            };
             let mut cand = ExecutionPlan {
                 pipeline: spec.id,
                 source_dev: sources[0],
@@ -177,7 +256,7 @@ impl ProgressivePlanner {
                 chunks: Vec::new(),
             };
             let mut best: Option<(f64, ExecutionPlan)> = None;
-            for skel in skeletons {
+            for &skel in &admitted {
                 if bounded {
                     if let Some((best_score, _)) = &best {
                         if self.objective.score_upper_bound(&accum, skel.chain_bound)
@@ -453,6 +532,32 @@ mod tests {
             scored < space / 100,
             "bounded search must prune: scored {scored} of {space}"
         );
+    }
+
+    #[test]
+    fn admission_pruning_keeps_quality_and_degrades_gracefully() {
+        let f = fleet(8);
+        let ps = pipes(&[ModelName::KWS, ModelName::UNet, ModelName::SimpleNet]);
+        let lm = LatencyModel::new(&f);
+        let planner = Synergy::planner_bounded(8);
+        let base = planner.select(&ps, &f).unwrap();
+        let base_tput = crate::estimator::estimate_plan(&base, &ps, &f, &lm).throughput;
+        // A feasible floor (half each pipeline's shared steady-state
+        // rate) must not cost selection quality.
+        let feasible = base_tput / ps.len() as f64 * 0.5;
+        let pruned = planner
+            .select_admitted(&ps, &f, &vec![feasible; ps.len()])
+            .unwrap();
+        let pruned_tput = crate::estimator::estimate_plan(&pruned, &ps, &f, &lm).throughput;
+        assert!(
+            pruned_tput >= base_tput * 0.99,
+            "admission pruning cost quality: {pruned_tput} vs {base_tput}"
+        );
+        // An impossible floor drops every skeleton: the planner falls
+        // back to the unpruned lists and still commits its best effort
+        // (the verifier owns the typed rejection).
+        let hopeless = planner.select_admitted(&ps, &f, &vec![1e12; ps.len()]).unwrap();
+        assert_eq!(hopeless, base);
     }
 
     #[test]

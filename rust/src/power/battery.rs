@@ -162,6 +162,17 @@ impl BatteryManager {
         self.batteries.iter().find(|b| b.device == device).map(|b| b.remaining_j)
     }
 
+    /// State of charge of every armed battery at the current timeline
+    /// position, sorted by device id — the session samples this at each
+    /// report-interval boundary so [`crate::api::Interval`] carries a
+    /// plottable per-device series.
+    pub fn snapshot(&self) -> Vec<(DeviceId, f64)> {
+        let mut soc: Vec<(DeviceId, f64)> =
+            self.batteries.iter().map(|b| (b.device, b.remaining_j)).collect();
+        soc.sort_by_key(|&(d, _)| d);
+        soc
+    }
+
     /// The exact next depletion instant, if any. Device ids are dense, so
     /// only the fleet's current highest id can depart: a depleted
     /// non-suffix battery defers until churn frees the suffix (this is

@@ -80,6 +80,28 @@ pub fn plan_device_draw(
     draw
 }
 
+/// Sound per-device upper bound on the draw *any* deployment can induce,
+/// in watts, indexed by dense device id: base plus every unit active at
+/// once (radio at the larger of Tx/Rx power). Real draws are strictly
+/// lower — each unit's busy time per round is at most the bottleneck's,
+/// which is at most the round period — so `active_energy / period ≤
+/// Σ_unit P_active(unit)`. The scenario linter uses this for static
+/// earliest-depletion windows ([`crate::analysis::battery_depletion_windows`]).
+pub fn peak_device_draw(fleet: &Fleet) -> Vec<f64> {
+    fleet
+        .devices
+        .iter()
+        .map(|d| {
+            let p = &d.spec.power;
+            p.base_w
+                + p.sensor_active_w
+                + p.cpu_active_w
+                + p.accel_active_w
+                + p.radio_tx_w.max(p.radio_rx_w)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +188,12 @@ mod tests {
         // The compute host now also receives/transmits; the second device
         // stops idling.
         assert!(remote[1] > local[1]);
+        // Both deployments stay under the static peak bound.
+        let peak = peak_device_draw(&f);
+        for draw in [&local, &remote] {
+            for (d, p) in draw.iter().zip(&peak) {
+                assert!(d <= p, "plan draw {d} W exceeds peak bound {p} W");
+            }
+        }
     }
 }

@@ -38,4 +38,4 @@ pub mod drain;
 
 pub use accountant::{busy_kind, Accountant, BusyKind, BusySpan, EnergyReplay};
 pub use battery::{BatteryCfg, BatteryManager};
-pub use drain::plan_device_draw;
+pub use drain::{peak_device_draw, plan_device_draw};

@@ -37,9 +37,11 @@ pub mod engine;
 pub mod executor;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod topology;
 
 pub use backend::ServeBackend;
 pub use engine::{Rebind, ServeCfg, ServeEngine, ServeOutcome};
 pub use executor::{ChunkExecutor, TaskCtx, VirtualExecutor};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtChunkExecutor;
+pub use topology::{plan_channel_graph, ChannelGraph};

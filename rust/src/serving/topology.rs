@@ -1,0 +1,172 @@
+//! Static extraction of the serve engine's channel topology, so the
+//! "backpressure deadlock is impossible" argument is a checked invariant
+//! instead of folklore.
+//!
+//! [`ServeEngine::set_plan`](super::ServeEngine::set_plan) binds each
+//! pipeline's expanded task chain to per-(device, unit) worker mergers:
+//! stage `j` produces into stage `j+1`'s merger, and a worker admits a
+//! stage only when every earlier stage of that round has completed. A
+//! cycle in that producer→consumer graph would be a deadlock: some stage
+//! would wait (transitively) on its own output. [`plan_channel_graph`]
+//! rebuilds exactly the graph `set_plan` would bind — same task
+//! expansion, same [`GroundTruth::unit_of`] worker resolution — and
+//! [`ChannelGraph::check_acyclic`] proves it cycle-free with a
+//! topological sort, returning [`AnalysisError::ChannelCycle`] naming a
+//! stage on the cycle otherwise. `verify_deployment` runs this on every
+//! plan, so the invariant is re-proved for each deployment rather than
+//! assumed from the chain-shaped construction.
+
+use crate::analysis::AnalysisError;
+use crate::device::{DeviceId, Fleet};
+use crate::pipeline::{PipelineId, PipelineSpec};
+use crate::plan::{CollabPlan, UnitKind};
+use crate::scheduler::GroundTruth;
+
+/// The producer→consumer stage graph one deployment binds onto the serve
+/// engine's workers. Nodes are chain stages `(pipeline, stage index)`;
+/// `workers[i]` is the (device, effective unit) worker that executes node
+/// `i`; edges point from a stage to the stage consuming its output.
+#[derive(Clone, Debug, Default)]
+pub struct ChannelGraph {
+    pub nodes: Vec<(PipelineId, usize)>,
+    pub workers: Vec<(DeviceId, UnitKind)>,
+    /// Directed `(producer, consumer)` pairs, indices into `nodes`.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl ChannelGraph {
+    /// Prove the stage graph cycle-free (Kahn's algorithm). On failure,
+    /// names a stage that sits on a cycle — a stage whose admission
+    /// transitively waits on its own output.
+    pub fn check_acyclic(&self) -> Result<(), AnalysisError> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(a, b) in &self.edges {
+            out[a].push(b);
+            indeg[b] += 1;
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(i) = ready.pop() {
+            seen += 1;
+            for &j in &out[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    ready.push(j);
+                }
+            }
+        }
+        if seen == n {
+            return Ok(());
+        }
+        // Every unprocessed node has residual in-degree — each lies on or
+        // downstream of a cycle; report the first for determinism.
+        let stuck = indeg.iter().position(|&d| d > 0).unwrap_or_default();
+        let (pipeline, stage) = self.nodes.get(stuck).copied().unwrap_or((PipelineId(0), 0));
+        let (dev, unit) = self
+            .workers
+            .get(stuck)
+            .copied()
+            .unwrap_or((DeviceId(0), UnitKind::Cpu));
+        Err(AnalysisError::ChannelCycle {
+            pipeline,
+            detail: format!(
+                "stage {stage} (on {unit:?} of {dev}) waits transitively on its own output"
+            ),
+        })
+    }
+}
+
+/// Rebuild the channel graph [`ServeEngine::set_plan`] would bind for
+/// this deployment, without touching any engine state. KEEP IN SYNC with
+/// the binding loop in `set_plan`: one node per expanded task, worker =
+/// `GroundTruth::unit_of`, one edge per adjacent stage pair. Fails with
+/// [`AnalysisError::UnknownPipeline`] exactly where `set_plan` would.
+///
+/// [`ServeEngine::set_plan`]: super::ServeEngine::set_plan
+pub fn plan_channel_graph(
+    plan: &CollabPlan,
+    pipelines: &[PipelineSpec],
+    fleet: &Fleet,
+) -> Result<ChannelGraph, AnalysisError> {
+    let mut g = ChannelGraph::default();
+    for ep in &plan.plans {
+        let spec = pipelines
+            .iter()
+            .find(|p| p.id == ep.pipeline)
+            .ok_or(AnalysisError::UnknownPipeline { pipeline: ep.pipeline })?;
+        let base = g.nodes.len();
+        for (j, t) in ep.tasks(&spec.model).iter().enumerate() {
+            g.nodes.push((spec.id, j));
+            g.workers.push((t.device, GroundTruth::unit_of(fleet, t)));
+            if j > 0 {
+                g.edges.push((base + j - 1, base + j));
+            }
+        }
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::{Planner, Synergy};
+    use crate::workload::{all_workloads, fleet4, fleet4_hetero};
+
+    /// Every planner output binds to a forward-only chain per pipeline —
+    /// the graph the engine would build is provably acyclic.
+    #[test]
+    fn planner_outputs_bind_acyclic_graphs() {
+        for fleet in [fleet4(), fleet4_hetero()] {
+            for w in all_workloads() {
+                let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+                let g = plan_channel_graph(&plan, &w.pipelines, &fleet).unwrap();
+                assert!(!g.nodes.is_empty());
+                assert_eq!(g.nodes.len(), g.workers.len());
+                g.check_acyclic()
+                    .unwrap_or_else(|e| panic!("{} on {}-dev fleet: {e}", w.name, fleet.len()));
+            }
+        }
+    }
+
+    /// Workers on devices without an accelerator resolve Infer to the
+    /// core — the graph reflects the engine's effective units, not the
+    /// plan's nominal ones.
+    #[test]
+    fn workers_use_effective_units() {
+        let fleet = fleet4_hetero();
+        let w = &all_workloads()[0];
+        let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+        let g = plan_channel_graph(&plan, &w.pipelines, &fleet).unwrap();
+        for &(dev, unit) in &g.workers {
+            if unit == UnitKind::Accel {
+                assert!(fleet.get(dev).has_accel());
+            }
+        }
+    }
+
+    /// A hand-built cyclic graph (inexpressible as a `CollabPlan`, which
+    /// only yields chains) is rejected with the stage on the cycle.
+    #[test]
+    fn hand_built_cycle_is_rejected() {
+        let g = ChannelGraph {
+            nodes: vec![(PipelineId(7), 0), (PipelineId(7), 1), (PipelineId(7), 2)],
+            workers: vec![(DeviceId(0), UnitKind::Cpu); 3],
+            edges: vec![(0, 1), (1, 2), (2, 1)],
+        };
+        let err = g.check_acyclic().unwrap_err();
+        assert!(
+            matches!(err, AnalysisError::ChannelCycle { pipeline: PipelineId(7), .. }),
+            "{err}"
+        );
+        // The empty graph and a diamond are fine.
+        ChannelGraph::default().check_acyclic().unwrap();
+        let diamond = ChannelGraph {
+            nodes: vec![(PipelineId(0), 0); 4],
+            workers: vec![(DeviceId(0), UnitKind::Cpu); 4],
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        };
+        diamond.check_acyclic().unwrap();
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-validation of the static capacity analysis against both
+//! execution engines: on every canned workload × fleet combo, the static
+//! steady-state throughput bound must bracket what the DES session and
+//! the streaming serve engine actually measure. Both engines pace
+//! admission with the same double-buffer window (`max_inflight = 2`) the
+//! ATP period model `max(bottleneck, critical/2)` assumes, so the bound
+//! is sound up to ground-truth jitter (0.3% multiplicative) and horizon
+//! edge effects — hence the small relative + absolute slack below.
+//!
+//! Also here: mutation tests proving oversubscribed deployments are
+//! rejected *statically* with the typed variant naming the unit, the
+//! skeleton-level relaxation really is a relaxation, and bounded-planner
+//! admission pruning preserves selection quality.
+
+use synergy::analysis::{analyze_capacity, verify_deployment, AnalysisError};
+use synergy::api::{Qos, Scenario, SessionCfg, SessionReport, SynergyRuntime};
+use synergy::device::Fleet;
+use synergy::estimator::{estimate_plan, LatencyModel};
+use synergy::orchestrator::{Planner, ProgressivePlanner, Synergy};
+use synergy::plan::CollabPlan;
+use synergy::serving::ServeCfg;
+use synergy::workload::{
+    all_workloads, fleet12_hetero, fleet4, fleet4_hetero, fleet8, workload, workload_mixed8,
+    Workload,
+};
+
+/// Measured whole-session throughput must not beat the static
+/// steady-state bound by more than jitter + edge slack. `n/duration`
+/// absorbs the partial round straddling the horizon.
+fn assert_bracketed(engine: &str, combo: &str, report: &SessionReport, bound_hz: f64, n: usize) {
+    let slack = bound_hz * 0.05 + n as f64 / report.duration.max(1e-9);
+    assert!(
+        report.throughput <= bound_hz + slack,
+        "{combo} [{engine}]: measured {} inf/s exceeds static bound {} + slack {}",
+        report.throughput,
+        bound_hz,
+        slack
+    );
+    assert!(report.completions > 0, "{combo} [{engine}]: session did no work");
+}
+
+/// One combo, both engines: run the DES session and the serve engine on
+/// fresh runtimes, pull the *committed* plan back out, and check the
+/// static report brackets both measurements.
+fn check_combo(
+    combo: &str,
+    fleet: &Fleet,
+    w: &Workload,
+    planner: fn() -> ProgressivePlanner,
+    horizon: f64,
+) {
+    let cfg = SessionCfg { seed: 17, ..SessionCfg::default() };
+    let build = || {
+        let runtime = SynergyRuntime::builder()
+            .fleet(fleet.clone())
+            .planner(planner())
+            .build();
+        for spec in w.pipelines.clone() {
+            runtime.register(spec).unwrap();
+        }
+        runtime
+    };
+
+    let runtime = build();
+    let plan: CollabPlan = runtime.deployment().expect("deployment committed").plan;
+    let apps = runtime.apps();
+    let report = analyze_capacity(&plan, &apps, fleet, None).unwrap();
+    assert!(report.throughput_hz > 0.0, "{combo}: empty static report");
+    // The sequential anchor sits at or below the pipelined bound.
+    assert!(
+        report.throughput_sequential_hz <= report.throughput_hz * (1.0 + 1e-9),
+        "{combo}"
+    );
+
+    let des = runtime
+        .session_with(Scenario::new().until(horizon), cfg)
+        .unwrap()
+        .finish()
+        .unwrap();
+    assert_bracketed("des", combo, &des, report.throughput_hz, apps.len());
+
+    let served = build()
+        .session_with(Scenario::new().until(horizon), cfg)
+        .unwrap()
+        .serve(ServeCfg::default())
+        .unwrap()
+        .finish()
+        .unwrap();
+    assert_bracketed("serve", combo, &served, report.throughput_hz, apps.len());
+}
+
+#[test]
+fn static_bound_brackets_both_engines_on_table1_workloads() {
+    for (fname, fleet) in [("fleet4", fleet4()), ("fleet4-hetero", fleet4_hetero())] {
+        for w in all_workloads() {
+            let combo = format!("{} × {fname}", w.name);
+            check_combo(&combo, &fleet, &w, Synergy::planner, 10.0);
+        }
+    }
+}
+
+#[test]
+fn static_bound_brackets_both_engines_on_mixed8_fleets() {
+    for (fname, fleet) in [("fleet8", fleet8()), ("fleet12-hetero", fleet12_hetero())] {
+        let w = workload_mixed8(fleet.len());
+        let combo = format!("{} × {fname}", w.name);
+        check_combo(&combo, &fleet, &w, || Synergy::planner_bounded(8), 6.0);
+    }
+}
+
+#[test]
+fn oversubscribing_rate_floors_are_rejected_with_the_unit_named() {
+    let fleet = fleet4();
+    let w = workload(1).unwrap();
+    let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+    // Sanity: the deployment is clean without floors.
+    verify_deployment(&plan, &w.pipelines, &fleet, None).unwrap();
+
+    let base = analyze_capacity(&plan, &w.pipelines, &fleet, None).unwrap();
+    let qos: Vec<Qos> = base
+        .pipelines
+        .iter()
+        .map(|p| Qos { min_rate_hz: 2.0 / p.own_bottleneck_s.max(1e-12), ..Qos::default() })
+        .collect();
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, Some(&qos)).unwrap_err();
+    match err {
+        AnalysisError::UnitOversubscribed { device, unit, utilization } => {
+            assert!(utilization >= 1.0, "{utilization}");
+            // The named unit must actually exist in the capacity report.
+            assert!(
+                base.units.iter().any(|u| u.device == device && u.unit == unit),
+                "named ({device}, {unit:?}) is not a loaded unit"
+            );
+        }
+        other => panic!("expected UnitOversubscribed, got {other}"),
+    }
+}
+
+#[test]
+fn interference_bound_violations_are_rejected_as_throughput_infeasible() {
+    let fleet = fleet4();
+    let w = workload(2).unwrap();
+    let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+    let base = analyze_capacity(&plan, &w.pipelines, &fleet, None).unwrap();
+    let p0 = &base.pipelines[0];
+
+    // A floor above the shared round bound but below the pipeline's own
+    // capacity: no single unit oversubscribes, the *round* does.
+    let floor = p0.shared_rate_hz * 1.1;
+    assert!(floor * p0.own_bottleneck_s < 1.0, "floor must stay under unit saturation");
+    let mut qos = vec![Qos::default(); w.pipelines.len()];
+    qos[0].min_rate_hz = floor;
+    let err = verify_deployment(&plan, &w.pipelines, &fleet, Some(&qos)).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            AnalysisError::ThroughputInfeasible { pipeline, need_hz, bound_hz, .. }
+                if pipeline == p0.pipeline && need_hz > bound_hz
+        ),
+        "{err}"
+    );
+}
+
+#[test]
+fn skeleton_bound_is_a_relaxation_of_every_committed_plan() {
+    use synergy::analysis::chunks_unit_bound;
+    for (fname, fleet) in [("fleet4", fleet4()), ("fleet4-hetero", fleet4_hetero())] {
+        let lm = LatencyModel::new(&fleet);
+        for w in all_workloads() {
+            let plan = Synergy::planner().plan(&w.pipelines, &fleet).unwrap();
+            let rep = analyze_capacity(&plan, &w.pipelines, &fleet, None).unwrap();
+            for (ep, cap) in plan.plans.iter().zip(&rep.pipelines) {
+                let spec = w.pipelines.iter().find(|p| p.id == ep.pipeline).unwrap();
+                let bound = chunks_unit_bound(&ep.chunks, &spec.model, &lm);
+                assert!(
+                    bound <= cap.own_bottleneck_s + 1e-12,
+                    "{} × {fname} {}: skeleton bound {bound} exceeds own bottleneck {}",
+                    w.name,
+                    ep.pipeline,
+                    cap.own_bottleneck_s
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn admission_pruning_preserves_selection_quality_on_paper_fleets() {
+    let fleet = fleet8();
+    let w = workload_mixed8(fleet.len());
+    let planner = Synergy::planner_bounded(8);
+    let lm = LatencyModel::new(&fleet);
+
+    let base = planner.plan(&w.pipelines, &fleet).unwrap();
+    let base_tput = estimate_plan(&base, &w.pipelines, &fleet, &lm).throughput;
+
+    // A feasible floor well under the fair share: pruning may drop
+    // skeletons but must keep ≥ 0.99× of the unpruned score.
+    let floor = base_tput / w.pipelines.len() as f64 * 0.5;
+    let pruned = planner
+        .select_admitted(&w.pipelines, &fleet, &vec![floor; w.pipelines.len()])
+        .unwrap();
+    let pruned_tput = estimate_plan(&pruned, &w.pipelines, &fleet, &lm).throughput;
+    assert!(
+        pruned_tput >= base_tput * 0.99,
+        "admission pruning cost quality: {pruned_tput} vs {base_tput}"
+    );
+}

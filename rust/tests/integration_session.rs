@@ -309,6 +309,32 @@ fn cascade8_depletes_the_second_band_in_order() {
     // The apps keep running on the first band to the end.
     assert!(report.intervals.last().unwrap().completions > 0);
     assert!(report.energy_j > 0.0);
+    // The report carries the plottable state-of-charge series: every
+    // armed battery's charge is monotone non-increasing (no recharges in
+    // the cascade) and the series stops when its device departs.
+    for d in 4..8usize {
+        let series = report.battery_series(DeviceId(d));
+        assert!(!series.is_empty(), "no SoC series for d{d}");
+        assert!(
+            series.windows(2).all(|w| w[1].1 <= w[0].1 + 1e-12),
+            "d{d} SoC must not increase: {series:?}"
+        );
+        let depleted_at = depletions
+            .iter()
+            .find(|(c, _)| *c == format!("battery-depleted(d{d})"))
+            .map(|&(_, t)| t)
+            .unwrap();
+        assert!(
+            series.iter().all(|&(t, _)| t <= depleted_at + 1e-9),
+            "d{d} series must stop at departure ({depleted_at}): {series:?}"
+        );
+        let (_, last_j) = *series.last().unwrap();
+        assert!(last_j <= 1e-9, "d{d} departs empty, got {last_j} J");
+    }
+    // Batteries that never deplete within the horizon keep reporting to
+    // the end — nothing in the first band is armed, so intervals after
+    // the last depletion carry no entries.
+    assert!(report.intervals.last().unwrap().battery_j.is_empty());
 }
 
 /// The cascade replays identically on the streaming engine: same

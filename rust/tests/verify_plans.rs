@@ -3,7 +3,9 @@
 //! (mutation: each corruption class is rejected with *its* typed
 //! [`AnalysisError`], not a neighboring one).
 
-use synergy::analysis::{verify_deployment, verify_scenario, AnalysisError};
+use synergy::analysis::{
+    battery_depletion_windows, verify_deployment, verify_scenario, AnalysisError,
+};
 use synergy::api::{Qos, Scenario};
 use synergy::device::{DeviceId, Fleet};
 use synergy::model::SplitRange;
@@ -256,21 +258,89 @@ fn departed_device_cannot_depart_again() {
 
 #[test]
 fn non_suffix_departure_is_rejected_without_batteries() {
-    // Device ids are dense: only the highest id can leave. With a battery
-    // armed the checker must go conservative (a depletion may already have
-    // shrunk the suffix), so the same script passes.
+    // Device ids are dense: only the highest id can leave. Batteries used
+    // to make the checker go fully conservative; the drain model now
+    // bounds *when* each armed device could deplete, so the rule stays
+    // active unless every higher id is armed and could already be dry.
     let s = Scenario::new().at(1.0).device_left(1).until(6.0);
     let err = verify_scenario(&s, &fleet4()).unwrap_err();
     assert!(
         matches!(err, AnalysisError::DeviceAbsent { device: DeviceId(1), .. }),
         "{err}"
     );
+
+    // One armed device above is not enough — d2 has no battery, so it
+    // cannot have left before d1.
     let s = Scenario::new()
         .battery(DeviceId(3), 1.0)
         .at(1.0)
         .device_left(1)
         .until(6.0);
+    let err = verify_scenario(&s, &fleet4()).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::DeviceAbsent { t, device: DeviceId(1), .. } if t == 1.0),
+        "{err}"
+    );
+
+    // Armed but too full: neither tiny window reaches t=1 s even at peak
+    // drain, so the suffix above d1 must still be intact.
+    let s = Scenario::new()
+        .battery(DeviceId(2), 1e9)
+        .battery(DeviceId(3), 1e9)
+        .at(1.0)
+        .device_left(1)
+        .until(6.0);
+    let err = verify_scenario(&s, &fleet4()).unwrap_err();
+    assert!(
+        matches!(err, AnalysisError::DeviceAbsent { device: DeviceId(1), .. }),
+        "{err}"
+    );
+
+    // Every higher id armed with near-empty batteries: both could have
+    // depleted within microseconds, so the departure is reachable.
+    let s = Scenario::new()
+        .battery(DeviceId(2), 1e-4)
+        .battery(DeviceId(3), 1e-4)
+        .at(1.0)
+        .device_left(1)
+        .until(6.0);
     verify_scenario(&s, &fleet4()).unwrap();
+}
+
+#[test]
+fn depletion_windows_order_and_respond_to_recharges() {
+    let base = Scenario::new()
+        .battery(DeviceId(2), 1.0)
+        .battery(DeviceId(3), 1.0)
+        .until(6.0);
+    let windows = battery_depletion_windows(&base, &fleet4());
+    assert_eq!(windows.len(), 2);
+    for &(d, earliest, latest) in &windows {
+        assert!(earliest > 0.0, "{d}: peak drain cannot be instantaneous");
+        assert!(
+            earliest <= latest,
+            "{d}: earliest {earliest} must precede latest {latest}"
+        );
+    }
+
+    // Banked recharges push the latest-depletion bound out, and leave the
+    // peak-drain earliest bound alone (a recharge cannot make a battery
+    // die sooner).
+    let recharged = Scenario::new()
+        .battery(DeviceId(2), 1.0)
+        .battery(DeviceId(3), 1.0)
+        .at(2.0)
+        .recharge(DeviceId(3), 5.0)
+        .until(6.0);
+    let after = battery_depletion_windows(&recharged, &fleet4());
+    let find = |ws: &[(DeviceId, f64, f64)], d: usize| {
+        ws.iter().copied().find(|&(w, _, _)| w == DeviceId(d)).unwrap()
+    };
+    assert_eq!(find(&windows, 2), find(&after, 2));
+    let (_, e0, l0) = find(&windows, 3);
+    let (_, e1, l1) = find(&after, 3);
+    assert_eq!(e0, e1);
+    assert!(l1 > l0, "banked {l1} must exceed unbanked {l0}");
 }
 
 #[test]
