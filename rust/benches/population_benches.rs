@@ -1,0 +1,171 @@
+//! Population-scale serving benchmarks: the shared plan cache must make
+//! cohort planning dramatically cheaper without perturbing a single
+//! simulated timeline.
+//!
+//! Two gates, both from the ISSUE:
+//!  * cache-on cohort planning wall (Σ replan latency over all users)
+//!    stays ≤ 1/5 of the cache-off wall — the ≥5× cross-user speedup;
+//!  * the aggregate report is bit-identical across cache modes and
+//!    worker-pool sizes (the fingerprint is the witness).
+
+mod bench_harness;
+
+use bench_harness::{fmt_duration, report, time_once};
+use synergy::population::{run_population, PopulationCfg, PopulationReport};
+use synergy::util::json::Json;
+
+/// Check one measurement against its entry in `BENCH_population.json`:
+/// hard `budget` always gates; the `max_delta_pct` window additionally
+/// gates once a nonzero `baseline` has been recorded.
+fn gate_budget(budgets: &Json, name: &str, measured: f64) {
+    let metric = budgets
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .and_then(|ms| ms.iter().find(|m| m.get("name").and_then(Json::as_str) == Some(name)))
+        .unwrap_or_else(|| panic!("BENCH_population.json has no metric named {name}"));
+    let budget = metric.get("budget").and_then(Json::as_f64).unwrap();
+    let baseline = metric.get("baseline").and_then(Json::as_f64).unwrap_or(0.0);
+    let max_delta_pct = metric.get("max_delta_pct").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(
+        measured <= budget,
+        "{name}: measured {measured} over hard budget {budget}"
+    );
+    if baseline > 0.0 {
+        let ceiling = baseline * (1.0 + max_delta_pct / 100.0);
+        assert!(
+            measured <= ceiling,
+            "{name}: measured {measured} regressed past baseline {baseline} (+{max_delta_pct}%)"
+        );
+    }
+    println!("budget {name:<44} measured {measured:.3e} budget {budget:.3e}");
+}
+
+/// The bench cohort: 240 users over 40 seeds, so every sampled planning
+/// problem recurs at least six times — the regime the cross-user cache
+/// exists for. Worker count is pinned; determinism makes it irrelevant
+/// to everything but wall clock.
+const USERS: usize = 240;
+const SEEDS: u64 = 40;
+
+fn cohort(shared_cache: bool, workers: usize) -> PopulationCfg {
+    PopulationCfg {
+        users: USERS,
+        seed_lo: 0,
+        seed_hi: SEEDS,
+        workers,
+        shared_cache,
+        ..PopulationCfg::default()
+    }
+}
+
+fn main() {
+    let iters = 3;
+    let budgets = Json::parse(include_str!("BENCH_population.json"))
+        .expect("benches/BENCH_population.json parses");
+
+    // --- Cache-on: the serving configuration ----------------------------
+    let mut last: Option<PopulationReport> = None;
+    let mut on_samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            time_once(&mut || {
+                last = Some(run_population(&cohort(true, 4)).unwrap());
+            })
+        })
+        .collect();
+    let on_wall = report("population/run-240u-cached-4w", &mut on_samples);
+    let on = last.take().expect("cache-on population run");
+    let per_user = on_wall / USERS as f64;
+    println!(
+        "population/per-user: {} ({} users, {} workers)",
+        fmt_duration(per_user),
+        on.users,
+        on.workers
+    );
+
+    let stats = on.cache.expect("shared cache on");
+    println!(
+        "population/cache: hit rate {:.1}% ({} lookups, {} distinct problems, {} plans)",
+        stats.hit_rate() * 100.0,
+        stats.lookups,
+        stats.unique_signatures,
+        stats.unique_plans
+    );
+    assert!(
+        stats.hit_rate() > 0.5,
+        "a 6x-repeating cohort must share most planning problems: {stats:?}"
+    );
+
+    // --- Cache-off: every user replans from scratch ---------------------
+    let mut off_samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            time_once(&mut || {
+                last = Some(run_population(&cohort(false, 4)).unwrap());
+            })
+        })
+        .collect();
+    report("population/run-240u-uncached-4w", &mut off_samples);
+    let off = last.take().expect("cache-off population run");
+
+    // --- The ≥5× gate ----------------------------------------------------
+    // Compare the deterministic work's wall cost, not outer wall clock:
+    // Σ replan latency across the cohort is exactly the planning the
+    // cache exists to dedup. The 10 ms pad keeps a microscopic baseline
+    // from turning timer noise into a failure.
+    let on_total = on.replan_wall_total_s;
+    let off_total = off.replan_wall_total_s;
+    let share = on_total / (off_total + 0.01);
+    println!(
+        "population/replan-wall: cached {} vs uncached {} ({:.1}x speedup)",
+        fmt_duration(on_total),
+        fmt_duration(off_total),
+        off_total / on_total.max(1e-12)
+    );
+    assert!(
+        on_total * 5.0 <= off_total + 0.01,
+        "shared cache must cut cohort planning wall at least 5x: cached {} vs uncached {}",
+        fmt_duration(on_total),
+        fmt_duration(off_total)
+    );
+
+    // --- Bit-identity across cache modes and worker counts ---------------
+    assert_eq!(
+        on.fingerprint, off.fingerprint,
+        "cache hits must not perturb any user's timeline"
+    );
+    for workers in [1usize, 8] {
+        let r = run_population(&cohort(true, workers)).unwrap();
+        assert_eq!(
+            on.fingerprint, r.fingerprint,
+            "population report must be bit-identical at {workers} workers"
+        );
+        assert_eq!(on.completions, r.completions);
+        assert_eq!(on.energy_j, r.energy_j);
+        assert_eq!(on.switches, r.switches);
+        assert_eq!(on.qos_violation_s, r.qos_violation_s);
+    }
+    println!("determinism: fingerprint {:016x} stable across cache modes and 1/4/8 workers", on.fingerprint);
+
+    // --- Budget gates + trajectory snapshot ------------------------------
+    gate_budget(&budgets, "population/replan-share-cached", share);
+    gate_budget(&budgets, "population/per-user-wall", per_user);
+    let snapshot = synergy::util::json::obj([
+        ("area", Json::Str("population".into())),
+        (
+            "measured",
+            Json::Obj(
+                [
+                    ("population/replan-share-cached", share),
+                    ("population/per-user-wall", per_user),
+                    ("population/cache-hit-rate", stats.hit_rate()),
+                ]
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v)))
+                .collect(),
+            ),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/target/BENCH_population.json");
+    std::fs::write(out, snapshot.to_string_pretty()).expect("write bench snapshot");
+    println!("snapshot written to {out}");
+    println!("OK: one cohort, one cache — planning cost amortizes, timelines don't move");
+}

@@ -9,17 +9,20 @@
 //! mutation that changes the set of active apps or the fleet triggers
 //! exactly one re-orchestration (§III-C).
 
+use std::sync::Arc;
+
 use crate::device::{Device, DeviceId, Fleet};
 use crate::estimator::{estimate_plan, LatencyModel, PlanEstimate};
 use crate::orchestrator::Planner;
 use crate::pipeline::{PipelineId, PipelineSpec};
-use crate::plan::{CollabPlan, ExecutionPlan};
+use crate::plan::{rebind_pipelines, CollabPlan, ExecutionPlan};
 use crate::scheduler::{simulate, GroundTruth, Policy, SimReport};
 
 use super::error::RuntimeError;
 use super::events::{EventBus, EventSubscription, RuntimeEvent};
 use super::qos::{Qos, QosViolation};
 use super::replan::{select_with_cache, PlanCache, ReplanStats};
+use super::shared_cache::{plan_signature, GlobalPlanCache};
 
 /// A selected + checked holistic collaboration plan, ready to deploy.
 #[derive(Clone, Debug)]
@@ -70,6 +73,9 @@ pub struct RuntimeCore {
     last_replan: Option<ReplanStats>,
     cache_hits: usize,
     enumerations: usize,
+    /// Cross-user planning service, if this runtime participates in one
+    /// (see [`super::shared_cache`]).
+    shared_cache: Option<Arc<GlobalPlanCache>>,
 }
 
 impl RuntimeCore {
@@ -86,7 +92,14 @@ impl RuntimeCore {
             last_replan: None,
             cache_hits: 0,
             enumerations: 0,
+            shared_cache: None,
         }
+    }
+
+    /// Join a cross-user planning service: progressive orchestrations
+    /// consult (and feed) the shared cache before running bounded search.
+    pub(crate) fn set_shared_cache(&mut self, cache: Arc<GlobalPlanCache>) {
+        self.shared_cache = Some(cache);
     }
 
     pub fn fleet(&self) -> &Fleet {
@@ -347,18 +360,47 @@ impl RuntimeCore {
             return Ok(());
         }
         self.orchestrations += 1;
+        let qos_list = self.active_qos();
 
         let (plan, stats) = if let Some(pp) = planner.as_progressive() {
-            self.cache.sync_fleet(&self.fleet, pp.cfg);
-            let prios: Vec<_> = self
-                .apps
-                .iter()
-                .filter(|a| !a.paused)
-                .map(|a| a.qos.priority)
-                .collect();
-            let (res, stats) =
-                select_with_cache(pp, &self.active, &prios, &self.fleet, &mut self.cache);
-            (res?, stats)
+            // Cross-user service: signature-equal planning problems share
+            // one bounded search (see [`super::shared_cache`] for why a
+            // rebound hit is bit-equal to the search it replaces).
+            let key = self
+                .shared_cache
+                .as_ref()
+                .map(|_| plan_signature(pp, &self.active, &qos_list, &self.fleet));
+            let hit = match (&self.shared_cache, &key) {
+                (Some(cache), Some(key)) => cache.lookup(key),
+                _ => None,
+            };
+            if let Some(cached) = hit {
+                let ids: Vec<PipelineId> = self.active.iter().map(|s| s.id).collect();
+                let plan = rebind_pipelines(&cached, &ids);
+                // The per-runtime skeleton cache is left stale on a hit; it
+                // re-syncs at the next shared miss. Every app rode the
+                // shared plan, so all count as reused.
+                let stats = ReplanStats {
+                    reused_apps: self.active.len(),
+                    ..ReplanStats::default()
+                };
+                (plan, stats)
+            } else {
+                self.cache.sync_fleet(&self.fleet, pp.cfg);
+                let prios: Vec<_> = self
+                    .apps
+                    .iter()
+                    .filter(|a| !a.paused)
+                    .map(|a| a.qos.priority)
+                    .collect();
+                let (res, stats) =
+                    select_with_cache(pp, &self.active, &prios, &self.fleet, &mut self.cache);
+                let plan = res?;
+                if let (Some(cache), Some(key)) = (&self.shared_cache, key) {
+                    cache.insert(key, plan.clone());
+                }
+                (plan, stats)
+            }
         } else {
             let plan = planner.plan(&self.active, &self.fleet)?;
             let stats = ReplanStats {
@@ -382,7 +424,6 @@ impl RuntimeCore {
         // QoS degradation notifications: each app completes once per
         // unified round, so per-app rate = system throughput / #apps.
         let per_app_rate = estimate.throughput / self.active.len() as f64;
-        let qos_list = self.active_qos();
         for (i, spec) in self.active.iter().enumerate() {
             if let Some(violation) = qos_list[i].check(per_app_rate, estimate.chain_latency[i]) {
                 self.events.emit(RuntimeEvent::PlanDegraded {

@@ -34,6 +34,10 @@
 //!   worker threads rebind live at every plan switch, with the measured
 //!   pause in the switch timeline and a conservation summary
 //!   ([`ServeSummary`]) in the report.
+//! - **Cross-user planning service** ([`shared_cache`]): many runtimes
+//!   share one [`GlobalPlanCache`] — signature-equal planning problems
+//!   reuse one bounded search across users
+//!   ([`RuntimeBuilder::shared_plan_cache`], [`crate::population`]).
 
 pub mod app;
 pub mod backend;
@@ -44,6 +48,7 @@ pub mod qos;
 pub mod replan;
 pub mod scenario;
 pub mod session;
+pub mod shared_cache;
 
 mod runtime;
 
@@ -61,6 +66,7 @@ pub use self::scenario::{Scenario, ScenarioAction, TimedAction};
 pub use self::session::{
     AppInterval, Interval, PlanSwitch, QosSpan, ServeSummary, Session, SessionCfg, SessionReport,
 };
+pub use self::shared_cache::{GlobalPlanCache, PlanCacheStats};
 
 // Capability vocabulary under the names the app interface reads best with:
 // `.source(Sensor::Microphone)`, `.target(Interaction::Haptic)`.

@@ -25,11 +25,21 @@ use super::qos::Qos;
 use super::replan::ReplanStats;
 use super::scenario::Scenario;
 use super::session::{Session, SessionCfg};
+use super::shared_cache::GlobalPlanCache;
 
 /// Core + planner behind one lock, shared with [`AppHandle`]s.
 pub(crate) struct Shared {
     pub(crate) core: RuntimeCore,
     pub(crate) planner: Box<dyn Planner + Send>,
+}
+
+/// Non-poisoning lock over the shared core: in a population run one
+/// panicking user session must not wedge its runtime's own teardown.
+pub(crate) fn lock_shared(shared: &Mutex<Shared>) -> std::sync::MutexGuard<'_, Shared> {
+    match shared.lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    }
 }
 
 /// The one registration path (fluent builder and spec-based registration
@@ -236,6 +246,7 @@ pub struct RuntimeBuilder {
     fleet: Fleet,
     planner: Box<dyn Planner + Send>,
     backend: Box<dyn ExecutionBackend>,
+    shared_cache: Option<Arc<GlobalPlanCache>>,
 }
 
 impl Default for RuntimeBuilder {
@@ -244,6 +255,7 @@ impl Default for RuntimeBuilder {
             fleet: Fleet::default(),
             planner: Box::new(Synergy::planner()),
             backend: Box::new(SimBackend),
+            shared_cache: None,
         }
     }
 }
@@ -275,10 +287,23 @@ impl RuntimeBuilder {
         self
     }
 
+    /// Join a cross-user planning service: progressive orchestrations
+    /// consult the shared [`GlobalPlanCache`] before running bounded
+    /// search, and feed it on a miss. Hand the same `Arc` to every
+    /// runtime that should share plans (see [`crate::population`]).
+    pub fn shared_plan_cache(mut self, cache: Arc<GlobalPlanCache>) -> RuntimeBuilder {
+        self.shared_cache = Some(cache);
+        self
+    }
+
     pub fn build(self) -> SynergyRuntime {
+        let mut core = RuntimeCore::new(self.fleet);
+        if let Some(cache) = self.shared_cache {
+            core.set_shared_cache(cache);
+        }
         SynergyRuntime {
             shared: Arc::new(Mutex::new(Shared {
-                core: RuntimeCore::new(self.fleet),
+                core,
                 planner: self.planner,
             })),
             backend: self.backend,

@@ -69,7 +69,7 @@ use crate::serving::{ChunkExecutor, ServeCfg, ServeEngine, VirtualExecutor};
 use super::error::RuntimeError;
 use super::qos::{Qos, QosViolation};
 use super::replan::ReplanStats;
-use super::runtime::Shared;
+use super::runtime::{lock_shared, Shared};
 use super::scenario::{Scenario, ScenarioAction, TimedAction};
 
 /// Session configuration (see [`super::SynergyRuntime::session_with`]).
@@ -376,6 +376,19 @@ pub struct Session {
     /// The event-driven battery timeline (empty manager when the scenario
     /// declares none).
     batteries: BatteryManager,
+    /// Mirrored deterministic DES used as the measured-energy probe for
+    /// battery re-anchoring when the main engine cannot serve as one
+    /// (streaming engine, or a DES running a non-default
+    /// [`SameTimePolicy`]): same fleet, seed, and plan sequence, always
+    /// default tie-breaking — so anchors are policy-invariant and
+    /// depletion instants stay bit-identical across engines and
+    /// same-time policies.
+    shadow: Option<Box<SimEngine>>,
+    /// Cumulative measured device energy at each battery's last
+    /// re-anchor — the window baseline for
+    /// [`BatteryManager::reanchor`]. Entries are dropped when the device
+    /// leaves and re-seeded when it joins.
+    anchor_cum: BTreeMap<DeviceId, f64>,
     /// Current fleet size (dense ids) — battery suffix eligibility.
     fleet_len: usize,
     /// Interval boundaries, ascending, starting at 0.0. While running,
@@ -387,7 +400,10 @@ pub struct Session {
     energy_marks: Vec<f64>,
     /// Battery state-of-charge snapshot at each boundary (parallel to
     /// `bounds`; engine-independent — the closed-form drain model is
-    /// shared, so no serve-side rebuild is needed).
+    /// shared, so no serve-side rebuild is needed). Boundary snapshots
+    /// are taken *before* the switch's measured re-anchor, so a series
+    /// shows the modeled drain up to each switch and the anchored
+    /// correction from the next interval on.
     soc_marks: Vec<Vec<(DeviceId, f64)>>,
     /// Streaming per-interval aggregates; `scratch[i]` covers
     /// `(bounds[i], bounds[i+1]]` — a round completing exactly at a plan
@@ -416,7 +432,7 @@ impl Session {
 
         // A battery for a device that never exists would silently never
         // deplete — reject the typo up front.
-        let fleet_len = shared.lock().unwrap().core.fleet().len();
+        let fleet_len = lock_shared(&shared).core.fleet().len();
         for &(d, _, _) in &declared {
             let joins_later = scenario.events().iter().any(|e| match &e.action {
                 ScenarioAction::DeviceJoined(dev) => dev.id == d,
@@ -432,8 +448,8 @@ impl Session {
             }
         }
 
-        let (engine, names, active, qos, est, plan, fleet) = {
-            let guard = shared.lock().unwrap();
+        let (engine, names, active, qos, est, plan, fleet, policy) = {
+            let guard = lock_shared(&shared);
             let core = &guard.core;
             let policy = guard.planner.exec_policy();
             let mut engine = SimEngine::new(
@@ -465,6 +481,7 @@ impl Session {
                 est,
                 plan,
                 core.fleet().clone(),
+                policy,
             )
         };
 
@@ -476,6 +493,26 @@ impl Session {
             |d| fleet.devices.get(d.0).map_or(0.0, |dev| dev.spec.power.base_w),
         );
 
+        // A perturbed same-time policy reshuffles the main DES, but
+        // battery re-anchoring must stay policy-invariant (depletion
+        // instants are part of the switch timeline that the race sweep
+        // compares across policies) — so anchor against a mirrored
+        // default-policy DES instead of the perturbed main engine.
+        let shadow = if !batteries.is_empty() && cfg.same_time != SameTimePolicy::Deterministic {
+            let mut sh = SimEngine::new(
+                fleet.clone(),
+                GroundTruth::with_seed(cfg.seed),
+                policy,
+                false,
+            );
+            if let Some(p) = plan.as_ref() {
+                sh.set_plan(p, &active, None)?;
+            }
+            Some(Box::new(sh))
+        } else {
+            None
+        };
+
         let soc0 = batteries.snapshot();
         let mut session = Session {
             shared,
@@ -485,6 +522,8 @@ impl Session {
             seed: cfg.seed,
             trace_window: cfg.trace_window,
             batteries,
+            shadow,
+            anchor_cum: BTreeMap::new(),
             fleet_len: fleet.len(),
             bounds: vec![0.0],
             energy_marks: vec![0.0],
@@ -532,19 +571,37 @@ impl Session {
                     .into(),
             ));
         }
-        let (fleet, active, dep_plan) = {
-            let guard = self.shared.lock().unwrap();
+        let (fleet, active, dep_plan, policy) = {
+            let guard = lock_shared(&self.shared);
             let core = &guard.core;
             (
                 core.fleet().clone(),
                 core.active_apps().to_vec(),
                 core.deployment().map(|d| d.plan.clone()),
+                guard.planner.exec_policy(),
             )
         };
         let mut engine = ServeEngine::new(executor, cfg, fleet.clone());
-        if let Some(plan) = dep_plan {
-            debug_verify_deployment(&plan, &active, &fleet);
-            engine.set_plan(&plan, &active, None)?;
+        if let Some(plan) = &dep_plan {
+            debug_verify_deployment(plan, &active, &fleet);
+            engine.set_plan(plan, &active, None)?;
+        }
+        // The streaming engine has no DES energy integral to anchor
+        // batteries against — mirror a default-policy simulator alongside
+        // it as the measured-energy probe (same seed/fleet/plan sequence
+        // as the comparable simulator session, so anchored depletion
+        // instants still match that session bit-for-bit).
+        if !self.batteries.is_empty() && self.shadow.is_none() {
+            let mut sh = SimEngine::new(
+                fleet.clone(),
+                GroundTruth::with_seed(self.seed),
+                policy,
+                false,
+            );
+            if let Some(p) = &dep_plan {
+                sh.set_plan(p, &active, None)?;
+            }
+            self.shadow = Some(Box::new(sh));
         }
         self.engine = SessionEngine::Serve(engine);
         Ok(self)
@@ -782,6 +839,28 @@ impl Session {
             self.engine.run_until(to);
             self.drain_records();
         }
+        // The probe mirror tracks the main engine's clock; its records
+        // are dropped — only its energy integral is ever read.
+        if let Some(sh) = &mut self.shadow {
+            sh.run_until(to);
+            let _ = sh.take_records();
+        }
+    }
+
+    /// Cumulative measured energy for `device` at time `t` on the
+    /// deterministic reference timeline: the main DES when it *is* that
+    /// timeline, otherwise the mirrored shadow probe (already stepped to
+    /// `t` alongside the main engine).
+    fn measured_energy_j(&self, device: DeviceId, t: f64) -> f64 {
+        if let Some(sh) = &self.shadow {
+            return sh.device_energy_j(device, t);
+        }
+        match &self.engine {
+            SessionEngine::Sim(e) => e.device_energy_j(device, t),
+            // Unreachable in practice: serving sessions with batteries
+            // always carry a shadow probe.
+            SessionEngine::Serve(_) => 0.0,
+        }
     }
 
     /// Fold newly completed rounds into the open interval (simulator
@@ -822,7 +901,7 @@ impl Session {
                 | ScenarioAction::SetFleet(_)
         );
         let (snapshot, wall) = {
-            let mut guard = self.shared.lock().unwrap();
+            let mut guard = lock_shared(&self.shared);
             let Shared { core, planner } = &mut *guard;
             let orchestrations_before = core.orchestrations();
             let had_deployment = core.deployment().is_some();
@@ -869,9 +948,15 @@ impl Session {
                     self.close_interval(t);
                     if fleet_changed {
                         self.engine.set_fleet(fleet.clone());
+                        if let Some(sh) = &mut self.shadow {
+                            sh.set_fleet(fleet.clone());
+                        }
                     }
                     if cleared {
                         self.engine.clear_plan();
+                        if let Some(sh) = &mut self.shadow {
+                            sh.clear_plan();
+                        }
                     }
                     self.switches.push(PlanSwitch {
                         t,
@@ -888,7 +973,7 @@ impl Session {
                             0.0
                         },
                     });
-                    self.sync_batteries(&fleet, &active, plan.as_ref());
+                    self.sync_batteries(t, &fleet, &active, plan.as_ref());
                     self.refresh_qos(t, &[], &[], None);
                 }
                 return Err(e);
@@ -929,6 +1014,9 @@ impl Session {
         self.close_interval(t);
         if fleet_changes {
             self.engine.set_fleet(snapshot.fleet.clone());
+            if let Some(sh) = &mut self.shadow {
+                sh.set_fleet(snapshot.fleet.clone());
+            }
         }
         let est_throughput = match &snapshot.deployment_plan {
             Some((plan, throughput, _)) => {
@@ -937,10 +1025,16 @@ impl Session {
                 // builds; free in release).
                 debug_verify_deployment(plan, &snapshot.active, &snapshot.fleet);
                 self.engine.set_plan(plan, &snapshot.active)?;
+                if let Some(sh) = &mut self.shadow {
+                    sh.set_plan(plan, &snapshot.active, None)?;
+                }
                 *throughput
             }
             None => {
                 self.engine.clear_plan();
+                if let Some(sh) = &mut self.shadow {
+                    sh.clear_plan();
+                }
                 0.0
             }
         };
@@ -948,6 +1042,7 @@ impl Session {
             self.names.insert(spec.id, spec.name.clone());
         }
         self.sync_batteries(
+            t,
             &snapshot.fleet,
             &snapshot.active,
             snapshot.deployment_plan.as_ref().map(|(p, _, _)| p),
@@ -978,10 +1073,15 @@ impl Session {
         Ok(())
     }
 
-    /// Reconcile batteries with the post-event world: presence (dense
-    /// ids), then the new plan's modeled per-device draws.
+    /// Reconcile batteries with the post-event world: re-anchor each
+    /// draining battery's remaining charge to the *measured* energy
+    /// integral since its last anchor (the modeled draw only schedules
+    /// depletion *between* switches; the accountant's integral corrects
+    /// the drift at every switch), then presence (dense ids), then the
+    /// new plan's modeled per-device draws.
     fn sync_batteries(
         &mut self,
+        t: f64,
         fleet: &Fleet,
         active: &[PipelineSpec],
         plan: Option<&CollabPlan>,
@@ -990,7 +1090,28 @@ impl Session {
         if self.batteries.is_empty() {
             return;
         }
+        for d in self.batteries.active_devices() {
+            if d.0 >= fleet.len() {
+                // The device is leaving this instant (departure or
+                // depletion): its window is moot, and dropping the
+                // baseline re-seeds it cleanly on a later rejoin.
+                self.anchor_cum.remove(&d);
+                continue;
+            }
+            let cum = self.measured_energy_j(d, t);
+            let prev = self.anchor_cum.insert(d, cum).unwrap_or(0.0);
+            self.batteries.reanchor(d, (cum - prev).max(0.0));
+        }
         self.batteries.sync_presence(fleet.len());
+        // A battery that just started draining (its device joined, or a
+        // scripted reshape grew past it) anchors forward from here: seed
+        // its baseline so the first window excludes pre-presence energy.
+        for d in self.batteries.active_devices() {
+            if !self.anchor_cum.contains_key(&d) {
+                let cum = self.measured_energy_j(d, t);
+                self.anchor_cum.insert(d, cum);
+            }
+        }
         let draws = plan_device_draw(plan, active, fleet);
         self.batteries.set_loads(
             |d| draws.get(d.0).copied().unwrap_or(0.0),

@@ -1,0 +1,279 @@
+//! The cross-user plan cache: one planning service shared by many
+//! runtimes (see [`crate::population`]).
+//!
+//! A single [`super::SynergyRuntime`] owns exactly one fleet, so serving
+//! N users naively costs N bounded plan searches — even when thousands of
+//! bodies wear the same device shapes and run the same workloads. The
+//! [`GlobalPlanCache`] memoizes selected [`CollabPlan`]s under a
+//! *canonical signature* of the planning problem; signature-equal users
+//! get the cached plan re-endpointed onto their concrete
+//! [`crate::pipeline::PipelineId`]s ([`crate::plan::rebind_pipelines`])
+//! instead of re-running the search. This is the PR-2 per-app skeleton
+//! cache ([`super::replan::PlanCache`], private to one runtime)
+//! generalized into a keyed global cache shared *across* runtimes.
+//!
+//! **Why a hit is exact, not approximate.** The signature covers
+//! everything selection reads: the planner configuration (priority,
+//! objective, search config, execution policy), each device's spec and
+//! capability lists in fleet order (names excluded — planning never
+//! reads them), and each active app's model, endpoint requirements, and
+//! full QoS (including [`super::AppPriority`], which reorders the
+//! greedy accumulation) in registration order. Selection itself is a
+//! pure function of exactly those inputs, and its index-based orderings
+//! make the result invariant to pipeline-id labels — so a rebound hit is
+//! bit-equal to the fresh search it replaces (`tests/population.rs`
+//! pins this plan-for-plan).
+//!
+//! **Concurrency.** Lookups and inserts take one non-poisoning mutex;
+//! concurrent first lookups of the same signature may each miss and then
+//! insert the identical plan (first insert wins — idempotent by the
+//! purity above). That makes the raw hit *count* scheduling-dependent,
+//! which is why [`PlanCacheStats::hit_rate`] is derived from the number
+//! of *distinct signatures seen* instead: deterministic for a fixed user
+//! set regardless of worker count.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::device::Fleet;
+use crate::orchestrator::ProgressivePlanner;
+use crate::pipeline::PipelineSpec;
+use crate::plan::{digest_debug, CollabPlan};
+
+use super::qos::Qos;
+
+/// Deterministic cache counters (see [`GlobalPlanCache::stats`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Total lookups — one per progressive orchestration that consulted
+    /// the cache. Deterministic for a fixed user set.
+    pub lookups: u64,
+    /// Raw hits. Scheduling-dependent under a worker pool (racing first
+    /// lookups of one signature may all miss); use [`Self::hit_rate`]
+    /// for a deterministic figure.
+    pub hits: u64,
+    /// Distinct signatures ever looked up. Deterministic: a fixed user
+    /// set produces a fixed signature set, whatever the interleaving.
+    pub unique_signatures: usize,
+    /// Plans resident in the cache (successful selections only).
+    pub unique_plans: usize,
+}
+
+impl PlanCacheStats {
+    /// Deterministic hit rate: every distinct signature is charged
+    /// exactly one miss (its first search), every other lookup of it is
+    /// a hit — `1 − unique_signatures / lookups`. Equals the raw
+    /// `hits / lookups` on a single worker; unlike it, identical across
+    /// worker-pool sizes.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        1.0 - (self.unique_signatures.min(self.lookups as usize) as f64 / self.lookups as f64)
+    }
+}
+
+struct CacheInner {
+    plans: BTreeMap<String, CollabPlan>,
+    seen: BTreeSet<String>,
+    lookups: u64,
+    hits: u64,
+}
+
+/// The shared, keyed plan store (see the module docs). Construct one,
+/// wrap it in an `Arc`, and hand clones to
+/// [`super::RuntimeBuilder::shared_plan_cache`].
+pub struct GlobalPlanCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl GlobalPlanCache {
+    pub fn new() -> GlobalPlanCache {
+        GlobalPlanCache {
+            inner: Mutex::new(CacheInner {
+                plans: BTreeMap::new(),
+                seen: BTreeSet::new(),
+                lookups: 0,
+                hits: 0,
+            }),
+        }
+    }
+
+    /// Non-poisoning lock: a panicking user session must not wedge every
+    /// other user of the service.
+    fn lock(&self) -> MutexGuard<'_, CacheInner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        }
+    }
+
+    /// Look up a signature, counting the lookup. Returns a clone of the
+    /// cached plan (callers rebind it onto their own pipeline ids).
+    pub(crate) fn lookup(&self, key: &str) -> Option<CollabPlan> {
+        let mut g = self.lock();
+        g.lookups += 1;
+        if !g.seen.contains(key) {
+            g.seen.insert(key.to_string());
+        }
+        let hit = g.plans.get(key).cloned();
+        if hit.is_some() {
+            g.hits += 1;
+        }
+        hit
+    }
+
+    /// Insert a freshly selected plan. First insert wins — concurrent
+    /// duplicate misses insert the identical plan (selection is pure),
+    /// so the stored value is the same either way.
+    pub(crate) fn insert(&self, key: String, plan: CollabPlan) {
+        let mut g = self.lock();
+        g.plans.entry(key).or_insert(plan);
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PlanCacheStats {
+        let g = self.lock();
+        PlanCacheStats {
+            lookups: g.lookups,
+            hits: g.hits,
+            unique_signatures: g.seen.len(),
+            unique_plans: g.plans.len(),
+        }
+    }
+}
+
+impl Default for GlobalPlanCache {
+    fn default() -> GlobalPlanCache {
+        GlobalPlanCache::new()
+    }
+}
+
+/// Canonical signature of one planning problem: planner configuration,
+/// fleet shape/capabilities, and the active apps' models + endpoint
+/// requirements + QoS in registration order (see the module docs for the
+/// exactness argument). Per-model and per-device `Debug` renderings are
+/// collapsed to streamed FNV-1a digests so keys stay small (~100 bytes)
+/// even for deep model graphs.
+pub(crate) fn plan_signature(
+    pp: &ProgressivePlanner,
+    active: &[PipelineSpec],
+    qos: &[Qos],
+    fleet: &Fleet,
+) -> String {
+    debug_assert_eq!(active.len(), qos.len(), "one QoS per active app");
+    let mut key = String::with_capacity(128 + 24 * (fleet.len() + active.len()));
+    pp.signature_token(&mut key);
+    let _ = write!(key, "|fleet{}[", fleet.len());
+    for d in &fleet.devices {
+        let _ = write!(
+            key,
+            "{:016x};",
+            digest_debug(&(&d.spec, &d.sensors, &d.interactions))
+        );
+    }
+    key.push(']');
+    let _ = write!(key, "|apps{}[", active.len());
+    for (spec, q) in active.iter().zip(qos) {
+        let _ = write!(
+            key,
+            "{:016x}:{:?}:{:?}:{:?};",
+            digest_debug(&spec.model),
+            spec.source,
+            spec.target,
+            q
+        );
+    }
+    key.push(']');
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::AppPriority;
+    use crate::device::DeviceId;
+    use crate::orchestrator::Synergy;
+    use crate::plan::ExecutionPlan;
+    use crate::workload::{fleet4, fleet8, workload};
+
+    fn sig(pp: &ProgressivePlanner, fleet: &Fleet) -> String {
+        let w = workload(1).unwrap();
+        let qos: Vec<Qos> = w.pipelines.iter().map(|_| Qos::default()).collect();
+        plan_signature(pp, &w.pipelines, &qos, fleet)
+    }
+
+    #[test]
+    fn signature_is_stable_and_separates_planning_inputs() {
+        let pp = Synergy::planner_bounded(8);
+        let base = sig(&pp, &fleet4());
+        assert_eq!(base, sig(&pp, &fleet4()), "same inputs, same key");
+        assert_ne!(base, sig(&pp, &fleet8()), "fleet shape is in the key");
+        assert_ne!(base, sig(&Synergy::planner_bounded(4), &fleet4()), "beam is in the key");
+        assert_ne!(base, sig(&Synergy::planner(), &fleet4()), "search mode is in the key");
+    }
+
+    #[test]
+    fn qos_and_app_order_are_in_the_key() {
+        let pp = Synergy::planner_bounded(8);
+        let w = workload(1).unwrap();
+        let f = fleet4();
+        let default_qos: Vec<Qos> = w.pipelines.iter().map(|_| Qos::default()).collect();
+        let base = plan_signature(&pp, &w.pipelines, &default_qos, &f);
+
+        // Priority reorders the greedy accumulation, so it must miss.
+        let mut hot = default_qos.clone();
+        hot[0].priority = AppPriority::High;
+        assert_ne!(base, plan_signature(&pp, &w.pipelines, &hot, &f));
+
+        // Registration order is part of the problem, not a label.
+        if w.pipelines.len() >= 2 {
+            let mut swapped = w.pipelines.clone();
+            swapped.swap(0, 1);
+            assert_ne!(base, plan_signature(&pp, &swapped, &default_qos, &f));
+        }
+    }
+
+    #[test]
+    fn device_names_and_pipeline_ids_are_labels_not_inputs() {
+        let pp = Synergy::planner_bounded(8);
+        let w = workload(1).unwrap();
+        let qos: Vec<Qos> = w.pipelines.iter().map(|_| Qos::default()).collect();
+        let f = fleet4();
+        let mut renamed = f.clone();
+        for d in &mut renamed.devices {
+            d.name = format!("user7-{}", d.name);
+        }
+        let base = plan_signature(&pp, &w.pipelines, &qos, &f);
+        assert_eq!(base, plan_signature(&pp, &w.pipelines, &qos, &renamed));
+
+        let mut relabeled = w.pipelines.clone();
+        for (i, p) in relabeled.iter_mut().enumerate() {
+            p.id = crate::pipeline::PipelineId(100 + i);
+        }
+        assert_eq!(base, plan_signature(&pp, &relabeled, &qos, &f));
+    }
+
+    #[test]
+    fn cache_counts_deterministic_signatures_not_racy_hits() {
+        let cache = GlobalPlanCache::new();
+        let plan = CollabPlan::new(vec![ExecutionPlan::monolithic(
+            &workload(1).unwrap().pipelines[0],
+            DeviceId(0),
+            DeviceId(0),
+            DeviceId(0),
+        )]);
+        assert!(cache.lookup("k1").is_none());
+        cache.insert("k1".into(), plan.clone());
+        assert_eq!(cache.lookup("k1").as_ref(), Some(&plan));
+        assert!(cache.lookup("k2").is_none());
+        // Duplicate insert keeps the first value (idempotent).
+        cache.insert("k1".into(), plan.clone());
+        let s = cache.stats();
+        assert_eq!((s.lookups, s.hits), (3, 1));
+        assert_eq!((s.unique_signatures, s.unique_plans), (2, 1));
+        // 3 lookups over 2 distinct signatures: 1/3 deterministic rate.
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -35,15 +35,17 @@ use std::path::{Path, PathBuf};
 /// Ratchet for rule 3: the number of `.unwrap()`/`.expect(` sites allowed
 /// in non-test code under `src/` (counting feature-gated files too). Only
 /// ever lower this — the lint prints the current count.
-const UNWRAP_BUDGET: usize = 75;
+const UNWRAP_BUDGET: usize = 72;
 
 /// Whitelist for rule 4: files allowed to read the wall clock in non-test
 /// code, with the number of permitted call sites. All are measurement
 /// points timing *real* execution (PJRT dispatch, serve-engine stage
-/// timing, session wall-time accounting); everything else must take time
-/// from the simulation clock or a caller-provided timestamp.
-const WALL_CLOCK_ALLOWED: [(&str, usize); 4] = [
+/// timing, session wall-time accounting, the population CLI's end-to-end
+/// serving-rate readout); everything else must take time from the
+/// simulation clock or a caller-provided timestamp.
+const WALL_CLOCK_ALLOWED: [(&str, usize); 5] = [
     ("api/session.rs", 1),
+    ("main.rs", 1),
     ("serving/backend.rs", 1),
     ("serving/engine.rs", 2),
     ("serving/pjrt.rs", 3),

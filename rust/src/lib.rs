@@ -95,7 +95,13 @@
 //!   real inference, and scenario-driven live sessions
 //!   ([`api::Scenario`] / [`api::Session`]) that replan mid-timeline and
 //!   report time series.
-//! - [`workload`] — Table I workloads and synthetic sensor sources.
+//! - [`workload`] — Table I workloads and synthetic sensor sources, plus
+//!   seeded whole-user sampling ([`workload::sample_user`]) for
+//!   population runs.
+//! - [`population`] — many bodies, one runtime: N sampled user sessions
+//!   driven through one shared planning service
+//!   ([`api::GlobalPlanCache`]) on a bounded worker pool, with
+//!   deterministic aggregate distributions ([`population::PopulationReport`]).
 //! - [`experiments`] — one harness per paper table/figure.
 
 pub mod util;
@@ -115,6 +121,7 @@ pub mod serving;
 pub mod analysis;
 pub mod api;
 pub mod workload;
+pub mod population;
 pub mod experiments;
 
 /// Crate-wide result type.

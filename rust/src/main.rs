@@ -9,6 +9,9 @@
 //!                                                 --scenario, needs artifacts)
 //!   check [--workload N|--fleet F|--scenario S]   static verification sweep,
 //!                                                 no execution (plans + scripts)
+//!   population --users N --seed-range A..B        Monte-Carlo fleet of sampled
+//!                                                 users through one shared
+//!                                                 planning service
 //!   zoo                                           print the Table I model zoo
 //!   list                                          list experiments
 
@@ -21,7 +24,7 @@ use synergy::workload;
 
 const VALUE_OPTS: &[&str] = &[
     "runs", "seed", "workload", "combos", "artifacts", "inflight", "fleet", "beam", "name",
-    "until", "scenario", "rate",
+    "until", "scenario", "rate", "users", "seed-range", "workers", "fleet-mix",
 ];
 
 fn main() {
@@ -33,6 +36,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
         Some("check") => cmd_check(&args),
+        Some("population") => cmd_population(&args),
         Some("zoo") => cmd_zoo(),
         Some("trace") => cmd_trace(&args),
         Some("list") => cmd_list(),
@@ -45,7 +49,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: synergy <exp|plan|explain|scenario|serve|check|zoo|list> [options]\n\
+    "usage: synergy <exp|plan|explain|scenario|serve|check|population|zoo|list> [options]\n\
      \n\
      exp <id|all>   reproduce a paper experiment (see `synergy list`)\n\
      \u{20}              --runs N (sim rounds), --seed S, --full (fig9 full sweep)\n\
@@ -76,6 +80,14 @@ fn usage() -> String {
      \u{20}              fit, QoS bounds), lint every canned scenario\n\
      \u{20}              script; narrow with --workload 1..4|mixed8\n\
      \u{20}              --fleet 4|4h|8|12h, or --scenario NAME\n\
+     population     Monte-Carlo fleet: N sampled users (fleet + app mix +\n\
+     \u{20}              churn journey per seed) each replayed as a live\n\
+     \u{20}              session, all sharing one cross-user plan cache;\n\
+     \u{20}              prints population distributions (p50/p95/p99),\n\
+     \u{20}              cache hit rate, and a determinism fingerprint\n\
+     \u{20}              --users N, --seed-range A..B, --workers W (0=auto),\n\
+     \u{20}              --beam W, --fleet-mix mixed|fleet4|fleet8|hetero,\n\
+     \u{20}              --no-cache (baseline: every user replans alone)\n\
      zoo            print the Table I model zoo\n\
      trace          --workload 1..4 [--runs N]: per-unit utilization +\n\
      \u{20}              task timeline of the deployed plan\n\
@@ -305,6 +317,110 @@ fn cmd_serve_scenario(name: &str, args: &Args) -> i32 {
     } else {
         1
     }
+}
+
+/// Run a Monte-Carlo population: N sampled users (one live session each)
+/// through one shared planning service, and print the population-level
+/// distributions, cache effectiveness, and determinism fingerprint.
+fn cmd_population(args: &Args) -> i32 {
+    use synergy::population::{run_population, Dist, PopulationCfg};
+    use synergy::workload::FleetMix;
+
+    let users = args.opt_parse("users", 100usize);
+    let (seed_lo, seed_hi) = match args.opt("seed-range") {
+        None => (0, users as u64),
+        Some(s) => {
+            let parsed = s
+                .split_once("..")
+                .and_then(|(a, b)| Some((a.parse::<u64>().ok()?, b.parse::<u64>().ok()?)));
+            match parsed {
+                Some(range) => range,
+                None => {
+                    eprintln!("--seed-range takes A..B (two integers), got {s:?}");
+                    return 2;
+                }
+            }
+        }
+    };
+    let mix = match args.opt("fleet-mix") {
+        None => FleetMix::Mixed,
+        Some(s) => match FleetMix::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!(
+                    "unknown fleet mix {s:?}: valid mixes are {}",
+                    FleetMix::names()
+                );
+                return 2;
+            }
+        },
+    };
+    let cfg = PopulationCfg {
+        users,
+        seed_lo,
+        seed_hi,
+        workers: args.opt_parse("workers", 0usize),
+        beam: args.opt_parse("beam", synergy::plan::DEFAULT_BEAM_WIDTH),
+        shared_cache: !args.flag("no-cache"),
+        mix,
+        ..PopulationCfg::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let report = match run_population(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("population failed: {e}");
+            return 1;
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "population — {} users (seeds {}..{}), {} workers, {:.2} s wall ({:.0} users/s)",
+        report.users,
+        cfg.seed_lo,
+        cfg.seed_hi,
+        report.workers,
+        wall,
+        report.users as f64 / wall.max(1e-9),
+    );
+    match &report.cache {
+        Some(c) => println!(
+            "shared plan cache: {} lookups, {} distinct planning problems, \
+             {} plans resident — {:.1}% hit rate",
+            c.lookups,
+            c.unique_signatures,
+            c.unique_plans,
+            100.0 * c.hit_rate(),
+        ),
+        None => println!("shared plan cache: off (--no-cache)"),
+    }
+    println!("fingerprint: {:016x}\n", report.fingerprint);
+
+    let mut t = Table::new(["metric", "min", "p50", "p95", "p99", "max", "mean"]);
+    let mut row = |name: &str, d: &Dist, scale: f64, unit: &str| {
+        t.row([
+            name.to_string(),
+            format!("{:.2}{unit}", d.min * scale),
+            format!("{:.2}{unit}", d.p50 * scale),
+            format!("{:.2}{unit}", d.p95 * scale),
+            format!("{:.2}{unit}", d.p99 * scale),
+            format!("{:.2}{unit}", d.max * scale),
+            format!("{:.2}{unit}", d.mean * scale),
+        ]);
+    };
+    row("completions", &report.completions, 1.0, "");
+    row("energy", &report.energy_j, 1.0, " J");
+    row("plan switches", &report.switches, 1.0, "");
+    row("QoS violation", &report.qos_violation_s, 1.0, " s");
+    row("replan latency", &report.replan_wall_s, 1e3, " ms");
+    t.print();
+    println!(
+        "\ntotal replan wall across the population: {:.1} ms",
+        1e3 * report.replan_wall_total_s
+    );
+    0
 }
 
 fn cmd_list() -> i32 {

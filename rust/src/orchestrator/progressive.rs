@@ -87,6 +87,21 @@ impl ProgressivePlanner {
         }
     }
 
+    /// Append this planner's configuration token to a cross-user plan
+    /// signature (see [`crate::api::GlobalPlanCache`]): every knob that
+    /// can change what [`Self::select`] returns — priority, objective,
+    /// search/enumeration config, and the execution policy deployed with
+    /// the plan. `Debug` renderings are stable and (for floats) shortest
+    /// round-trip, so equal tokens mean equal configurations.
+    pub fn signature_token(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(
+            out,
+            "planner{{{:?}|{:?}|{:?}|{:?}}}",
+            self.priority, self.objective, self.cfg, self.policy
+        );
+    }
+
     /// Run the progressive selection, returning plans in pipeline order.
     ///
     /// Greedy accumulation can dead-end: an early pipeline's best plan may

@@ -11,6 +11,7 @@ pub mod task;
 pub mod exec_plan;
 pub mod enumerate;
 pub mod collab;
+pub mod signature;
 
 pub use collab::{CollabPlan, RunnableError};
 pub use enumerate::{
@@ -19,4 +20,5 @@ pub use enumerate::{
     EnumerateCfg, PlannerCfg, SearchMode, Skeleton, BOUNDED_EXACT_THRESHOLD, DEFAULT_BEAM_WIDTH,
 };
 pub use exec_plan::{Assignment, ExecutionPlan};
+pub use signature::{digest_debug, rebind_pipelines, FnvWriter};
 pub use task::{PlanTask, TaskKind, UnitKind};

@@ -1,0 +1,160 @@
+//! Canonical plan signatures and plan rebinding — the plan-layer half of
+//! the cross-user plan cache ([`crate::api::GlobalPlanCache`]).
+//!
+//! Two users whose planning problems are *shape-equal* — same planner
+//! configuration, same per-device specs and capabilities, same models,
+//! endpoint requirements, and QoS floors in the same registration order —
+//! are handed the exact same bounded search, so the selected
+//! [`CollabPlan`] can be computed once and shared. This module provides
+//! the primitives the cache key and the cache hit are built from:
+//!
+//! - [`FnvWriter`] / [`digest_debug`] — a streaming FNV-1a 64-bit hash
+//!   over a value's `Debug` rendering. Rust's `Debug` for `f64` prints
+//!   the shortest round-trip decimal, so equal digests of the config
+//!   structs mean bit-equal configurations — without materializing the
+//!   (potentially kilobytes-long) `Debug` string of a model graph.
+//! - [`rebind_pipelines`] — re-endpoint a cached plan onto another user's
+//!   concrete [`PipelineId`]s. Plan selection is purely positional
+//!   (priority orders index lists by model properties with index
+//!   tie-breaks; device and endpoint references are dense ids), so the
+//!   rebind is the *identity* on everything but the id labels: the
+//!   rebound plan is bit-equal to what a fresh search would select for
+//!   the signature-equal user (pinned by `tests/population.rs`).
+
+use std::fmt::{self, Write};
+
+use crate::pipeline::PipelineId;
+
+use super::CollabPlan;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a 64-bit hasher behind [`std::fmt::Write`]: format a
+/// value straight into the hash state instead of into a `String`.
+pub struct FnvWriter {
+    hash: u64,
+}
+
+impl FnvWriter {
+    pub fn new() -> FnvWriter {
+        FnvWriter { hash: FNV_OFFSET }
+    }
+
+    /// The hash of everything written so far.
+    pub fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+impl Default for FnvWriter {
+    fn default() -> FnvWriter {
+        FnvWriter::new()
+    }
+}
+
+impl Write for FnvWriter {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        for &b in s.as_bytes() {
+            self.hash ^= b as u64;
+            self.hash = self.hash.wrapping_mul(FNV_PRIME);
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a 64 of a value's `Debug` rendering, streamed (never allocated).
+pub fn digest_debug(value: &impl fmt::Debug) -> u64 {
+    let mut w = FnvWriter::new();
+    // Writing into FnvWriter is infallible; `write!` only propagates the
+    // sink's errors.
+    let _ = write!(w, "{value:?}");
+    w.finish()
+}
+
+/// Re-endpoint a cached plan onto a user's concrete pipeline ids,
+/// positionally: `plans[i]` gets `ids[i]`. Everything else — device
+/// assignments, split ranges, source/target endpoints — is shared
+/// structure and carries over untouched (see the module docs for why
+/// that is exact, not approximate).
+///
+/// # Panics
+/// If `ids` does not have one id per execution plan — a signature
+/// mismatch, which the cache key construction makes impossible.
+pub fn rebind_pipelines(plan: &CollabPlan, ids: &[PipelineId]) -> CollabPlan {
+    assert_eq!(
+        plan.plans.len(),
+        ids.len(),
+        "rebind needs one pipeline id per execution plan"
+    );
+    let mut out = plan.clone();
+    for (ep, &id) in out.plans.iter_mut().zip(ids) {
+        ep.pipeline = id;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceId;
+    use crate::model::SplitRange;
+    use crate::plan::exec_plan::{Assignment, ExecutionPlan};
+
+    #[test]
+    fn fnv1a_matches_the_reference_vectors() {
+        assert_eq!(digest_debug(&format_args!("")), 0xcbf2_9ce4_8422_2325);
+        let mut w = FnvWriter::new();
+        w.write_str("a").unwrap();
+        assert_eq!(w.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut w = FnvWriter::new();
+        w.write_str("foobar").unwrap();
+        assert_eq!(w.finish(), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn digest_separates_values_and_streams_like_a_string() {
+        // Streaming in two writes equals one concatenated write.
+        let mut a = FnvWriter::new();
+        a.write_str("foo").unwrap();
+        a.write_str("bar").unwrap();
+        let mut b = FnvWriter::new();
+        b.write_str("foobar").unwrap();
+        assert_eq!(a.finish(), b.finish());
+        assert_ne!(digest_debug(&1.0f64), digest_debug(&1.5f64));
+    }
+
+    fn plan_for(ids: &[usize]) -> CollabPlan {
+        CollabPlan::new(
+            ids.iter()
+                .map(|&i| ExecutionPlan {
+                    pipeline: PipelineId(i),
+                    source_dev: DeviceId(0),
+                    target_dev: DeviceId(1),
+                    chunks: vec![Assignment {
+                        device: DeviceId(i % 2),
+                        range: SplitRange::new(0, 1),
+                    }],
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn rebind_relabels_pipelines_and_nothing_else() {
+        let cached = plan_for(&[0, 1]);
+        let rebound = rebind_pipelines(&cached, &[PipelineId(7), PipelineId(9)]);
+        assert_eq!(rebound.plans[0].pipeline, PipelineId(7));
+        assert_eq!(rebound.plans[1].pipeline, PipelineId(9));
+        // Identity rebind is bit-equal; the relabel touches only the id.
+        assert_eq!(rebind_pipelines(&cached, &[PipelineId(0), PipelineId(1)]), cached);
+        assert_eq!(rebound.plans[0].chunks, cached.plans[0].chunks);
+        assert_eq!(rebound.plans[1].source_dev, cached.plans[1].source_dev);
+    }
+
+    #[test]
+    #[should_panic(expected = "one pipeline id per execution plan")]
+    fn rebind_rejects_mismatched_arity() {
+        rebind_pipelines(&plan_for(&[0, 1]), &[PipelineId(0)]);
+    }
+}

@@ -1,0 +1,399 @@
+//! Population-scale serving: many bodies, one runtime stack.
+//!
+//! A [`Population`](run_population) drives N independent *users* — each a
+//! sampled fleet + day-in-the-life [`crate::api::Scenario`]
+//! ([`crate::workload::sample_user`]) replayed on its own
+//! [`crate::api::SynergyRuntime`] session — through one shared planning
+//! service: every runtime joins the same [`GlobalPlanCache`], so
+//! signature-equal planning problems across users run bounded search
+//! once and share the selected plan
+//! ([`crate::api::RuntimeBuilder::shared_plan_cache`]).
+//!
+//! **Determinism contract.** The aggregate [`PopulationReport`] —
+//! distributions and the [`PopulationReport::fingerprint`] over every
+//! user's simulated timeline — is bit-identical for a fixed
+//! (users, seed range, fleet mix, beam, same-time policy), regardless of
+//! the worker-pool size *and* of whether the shared cache is on: a cache
+//! hit re-endpoints a plan that is bit-equal to the fresh search it
+//! replaces (see [`crate::api::shared_cache`]), so only wall-clock
+//! replan latency and the racy raw hit count vary between runs — both
+//! are reported as a non-fingerprinted annex. `tests/population.rs`
+//! pins all of this.
+//!
+//! CLI: `synergy population --users 1000 --seed-range 0..1000`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+
+use crate::analysis::SameTimePolicy;
+use crate::api::{
+    GlobalPlanCache, PlanCacheStats, RuntimeError, SessionCfg, SessionReport, SynergyRuntime,
+};
+use crate::orchestrator::Synergy;
+use crate::plan::{FnvWriter, DEFAULT_BEAM_WIDTH};
+use crate::util::stats::{mean, percentile};
+use crate::workload::{sample_user, FleetMix};
+
+/// Configures one population run (see [`run_population`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PopulationCfg {
+    /// How many user sessions to run.
+    pub users: usize,
+    /// Seed range `[seed_lo, seed_hi)`; user `i` draws seed
+    /// `seed_lo + (i % (seed_hi − seed_lo))`, so ranges narrower than
+    /// `users` deliberately repeat cohort members.
+    pub seed_lo: u64,
+    pub seed_hi: u64,
+    /// Worker threads (0 = available parallelism). Any value produces
+    /// the same report fingerprint.
+    pub workers: usize,
+    /// Beam width for each user's bounded plan search.
+    pub beam: usize,
+    /// Same-time tie policy for every user session.
+    pub same_time: SameTimePolicy,
+    /// Share one [`GlobalPlanCache`] across users (`false` replans every
+    /// user from scratch — the bench baseline).
+    pub shared_cache: bool,
+    /// Which fleets the cohort draws from.
+    pub mix: FleetMix,
+}
+
+impl Default for PopulationCfg {
+    fn default() -> PopulationCfg {
+        PopulationCfg {
+            users: 100,
+            seed_lo: 0,
+            seed_hi: 100,
+            workers: 0,
+            beam: DEFAULT_BEAM_WIDTH,
+            same_time: SameTimePolicy::Deterministic,
+            shared_cache: true,
+            mix: FleetMix::Mixed,
+        }
+    }
+}
+
+/// Summary statistics of one per-user metric across the population.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dist {
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl Dist {
+    /// Distribution of a sample set (all zeros for empty input).
+    pub fn of(xs: &[f64]) -> Dist {
+        if xs.is_empty() {
+            return Dist { min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0, mean: 0.0 };
+        }
+        Dist {
+            min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+            p50: percentile(xs, 50.0),
+            p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
+            max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            mean: mean(xs),
+        }
+    }
+}
+
+/// One user's deterministic outcome (the population's per-row record).
+#[derive(Clone, Debug)]
+pub struct UserOutcome {
+    pub seed: u64,
+    /// Sampled fleet / journey labels ([`crate::workload::SampledUser`]).
+    pub fleet_name: &'static str,
+    pub journey: &'static str,
+    /// Rounds completed over the session horizon.
+    pub completions: usize,
+    /// Session energy, joules.
+    pub energy_j: f64,
+    /// Plan switches over the timeline (including battery departures).
+    pub switches: usize,
+    /// Violated app-seconds: Σ span lengths over the session's
+    /// QoS-violation spans (can exceed the horizon when several apps
+    /// violate at once).
+    pub qos_violation_s: f64,
+    /// Σ wall-clock replan latency across this user's switches, seconds.
+    /// Wall clock — excluded from [`Self::digest`].
+    pub replan_wall_s: f64,
+    /// FNV-1a digest of the user's simulated timeline: completions,
+    /// energy, every switch's (t, cause, apps, estimated throughput),
+    /// every QoS span. Excludes wall-clock fields and cache bookkeeping,
+    /// which legitimately differ between cache-on/off and across worker
+    /// interleavings.
+    pub digest: u64,
+}
+
+/// Aggregate view of one population run.
+#[derive(Clone, Debug)]
+pub struct PopulationReport {
+    pub users: usize,
+    /// Worker threads actually used.
+    pub workers: usize,
+    /// Per-user rounds completed.
+    pub completions: Dist,
+    /// Per-user session energy, joules.
+    pub energy_j: Dist,
+    /// Per-user plan-switch counts.
+    pub switches: Dist,
+    /// Per-user violated app-seconds (see [`UserOutcome::qos_violation_s`]).
+    pub qos_violation_s: Dist,
+    /// Per-switch wall-clock replan latency across all users, seconds.
+    /// Wall clock — a non-fingerprinted annex.
+    pub replan_wall_s: Dist,
+    /// Σ wall-clock replan latency across the whole population, seconds
+    /// (the bench's cache-on vs cache-off planning-cost metric).
+    pub replan_wall_total_s: f64,
+    /// Shared-cache counters when [`PopulationCfg::shared_cache`] is on.
+    /// [`PlanCacheStats::hit_rate`] is deterministic; the raw hit count
+    /// is not (see [`crate::api::shared_cache`]).
+    pub cache: Option<PlanCacheStats>,
+    /// FNV-1a fingerprint over every user's (seed, digest) in user-index
+    /// order — the bit-identity witness across worker counts and cache
+    /// modes.
+    pub fingerprint: u64,
+    /// Per-user rows in user-index order.
+    pub outcomes: Vec<UserOutcome>,
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    }
+}
+
+/// Digest the deterministic slice of one session report (see
+/// [`UserOutcome::digest`] for what is excluded and why).
+fn digest_report(seed: u64, report: &SessionReport) -> u64 {
+    use std::fmt::Write as _;
+    let mut w = FnvWriter::new();
+    let _ = write!(
+        w,
+        "u{seed}|c{}|d{:016x}|e{:016x}|",
+        report.completions,
+        report.duration.to_bits(),
+        report.energy_j.to_bits()
+    );
+    for s in &report.switches {
+        let _ = write!(
+            w,
+            "s{:016x}:{}:{}:{:016x};",
+            s.t.to_bits(),
+            s.cause,
+            s.apps,
+            s.est_throughput.to_bits()
+        );
+    }
+    for q in &report.qos_spans {
+        let _ = write!(
+            w,
+            "q{}:{}:{:?}:{:016x}:{:016x};",
+            q.app,
+            q.name,
+            q.violation,
+            q.start.to_bits(),
+            q.end.to_bits()
+        );
+    }
+    w.finish()
+}
+
+fn run_user(
+    seed: u64,
+    cfg: &PopulationCfg,
+    cache: Option<&Arc<GlobalPlanCache>>,
+) -> Result<UserOutcome, RuntimeError> {
+    let user = sample_user(seed, cfg.mix);
+    let mut builder = SynergyRuntime::builder()
+        .fleet(user.fleet)
+        .planner(Synergy::planner_bounded(cfg.beam));
+    if let Some(c) = cache {
+        builder = builder.shared_plan_cache(c.clone());
+    }
+    let runtime = builder.build();
+    let session = runtime.session_with(
+        user.scenario,
+        SessionCfg {
+            seed,
+            same_time: cfg.same_time,
+            ..SessionCfg::default()
+        },
+    )?;
+    let report = session.finish()?;
+    Ok(UserOutcome {
+        seed,
+        fleet_name: user.fleet_name,
+        journey: user.journey,
+        completions: report.completions,
+        energy_j: report.energy_j,
+        switches: report.switches.len(),
+        qos_violation_s: report.qos_spans.iter().map(|q| q.end - q.start).sum(),
+        replan_wall_s: report.switches.iter().map(|s| s.replan_wall_s).sum(),
+        digest: digest_report(seed, &report),
+    })
+}
+
+/// Run the whole population: sample each user from the seed range, drive
+/// every session to its horizon on a bounded worker pool, aggregate.
+/// Per-user work depends only on (seed, cfg) and the *contents* of the
+/// shared cache — which plan-selection purity makes order-independent —
+/// so the report fingerprint is identical for every `workers` value.
+///
+/// The first failing user (by user index, deterministic) aborts the run
+/// with its error.
+pub fn run_population(cfg: &PopulationCfg) -> Result<PopulationReport, RuntimeError> {
+    if cfg.users == 0 {
+        return Err(RuntimeError::InvalidScenario(
+            "population needs at least one user".into(),
+        ));
+    }
+    if cfg.seed_hi <= cfg.seed_lo {
+        return Err(RuntimeError::InvalidScenario(format!(
+            "empty seed range {}..{} — need seed_lo < seed_hi",
+            cfg.seed_lo, cfg.seed_hi
+        )));
+    }
+    if cfg.beam == 0 {
+        return Err(RuntimeError::InvalidScenario(
+            "bounded search needs a beam width ≥ 1".into(),
+        ));
+    }
+
+    let span = cfg.seed_hi - cfg.seed_lo;
+    let seeds: Vec<u64> = (0..cfg.users)
+        .map(|i| cfg.seed_lo + (i as u64 % span))
+        .collect();
+    let workers = if cfg.workers == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.workers
+    }
+    .clamp(1, cfg.users);
+
+    let cache = if cfg.shared_cache {
+        Some(Arc::new(GlobalPlanCache::new()))
+    } else {
+        None
+    };
+
+    // Bounded pool over an atomic work dispenser: workers pull the next
+    // user index, so any pool size covers every user exactly once.
+    let next = AtomicUsize::new(0);
+    let rows: Mutex<Vec<(usize, Result<UserOutcome, RuntimeError>)>> =
+        Mutex::new(Vec::with_capacity(cfg.users));
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= seeds.len() {
+                    break;
+                }
+                let out = run_user(seeds[i], cfg, cache.as_ref());
+                lock(&rows).push((i, out));
+            });
+        }
+    });
+    let mut rows = match rows.into_inner() {
+        Ok(v) => v,
+        Err(e) => e.into_inner(),
+    };
+    rows.sort_by(|a, b| a.0.cmp(&b.0));
+
+    let mut outcomes = Vec::with_capacity(cfg.users);
+    for (_, row) in rows {
+        outcomes.push(row?);
+    }
+
+    use std::fmt::Write as _;
+    let mut fp = FnvWriter::new();
+    let mut walls = Vec::new();
+    for o in &outcomes {
+        let _ = write!(fp, "{}:{:016x};", o.seed, o.digest);
+        walls.push(o.replan_wall_s);
+    }
+    let per_user = |f: fn(&UserOutcome) -> f64| -> Vec<f64> { outcomes.iter().map(f).collect() };
+    Ok(PopulationReport {
+        users: cfg.users,
+        workers,
+        completions: Dist::of(&per_user(|o| o.completions as f64)),
+        energy_j: Dist::of(&per_user(|o| o.energy_j)),
+        switches: Dist::of(&per_user(|o| o.switches as f64)),
+        qos_violation_s: Dist::of(&per_user(|o| o.qos_violation_s)),
+        replan_wall_s: Dist::of(&walls),
+        replan_wall_total_s: walls.iter().sum(),
+        cache: cache.map(|c| c.stats()),
+        fingerprint: fp.finish(),
+        outcomes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(users: usize, workers: usize, shared_cache: bool) -> PopulationCfg {
+        PopulationCfg {
+            users,
+            seed_lo: 0,
+            seed_hi: users as u64,
+            workers,
+            shared_cache,
+            ..PopulationCfg::default()
+        }
+    }
+
+    #[test]
+    fn empty_or_inverted_cfgs_are_typed_errors() {
+        assert!(run_population(&cfg(0, 1, true)).is_err());
+        let bad = PopulationCfg { seed_lo: 5, seed_hi: 5, ..PopulationCfg::default() };
+        assert!(run_population(&bad).is_err());
+        let bad = PopulationCfg { beam: 0, ..PopulationCfg::default() };
+        assert!(run_population(&bad).is_err());
+    }
+
+    #[test]
+    fn small_population_runs_and_aggregates() {
+        let r = run_population(&cfg(8, 2, true)).unwrap();
+        assert_eq!(r.users, 8);
+        assert_eq!(r.outcomes.len(), 8);
+        assert!(r.outcomes.iter().all(|o| o.completions > 0), "{r:?}");
+        assert!(r.completions.min > 0.0);
+        assert!(r.completions.max >= r.completions.p99);
+        assert!(r.completions.p99 >= r.completions.p50);
+        assert!(r.energy_j.mean > 0.0);
+        let stats = r.cache.expect("shared cache on");
+        assert!(stats.lookups > 0);
+        assert!(stats.unique_signatures as u64 <= stats.lookups);
+    }
+
+    #[test]
+    fn narrow_seed_ranges_repeat_cohort_members() {
+        let narrow = PopulationCfg { users: 6, seed_lo: 0, seed_hi: 2, ..PopulationCfg::default() };
+        let r = run_population(&narrow).unwrap();
+        assert_eq!(r.outcomes[0].digest, r.outcomes[2].digest);
+        assert_eq!(r.outcomes[1].digest, r.outcomes[3].digest);
+        assert_ne!(
+            r.outcomes[0].seed, r.outcomes[1].seed,
+            "adjacent users still differ"
+        );
+    }
+
+    #[test]
+    fn cache_mode_and_worker_count_leave_the_fingerprint_alone() {
+        // The full matrix lives in tests/population.rs; this is the
+        // fast in-crate smoke over a tiny cohort.
+        let a = run_population(&cfg(6, 1, true)).unwrap();
+        let b = run_population(&cfg(6, 3, true)).unwrap();
+        let c = run_population(&cfg(6, 2, false)).unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.fingerprint, c.fingerprint);
+        assert!(c.cache.is_none());
+    }
+}

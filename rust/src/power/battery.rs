@@ -50,6 +50,13 @@ struct Battery {
     started: bool,
     /// Whether the device is on the body right now (draining).
     active: bool,
+    /// Modeled joules actually subtracted since the last re-anchor (the
+    /// amount [`BatteryManager::reanchor`] credits back before charging
+    /// the measured integral instead).
+    modeled_since_anchor: f64,
+    /// Timeline position of the last re-anchor (set when the device
+    /// first starts draining).
+    anchor_t: f64,
 }
 
 impl Battery {
@@ -88,6 +95,8 @@ impl BatteryManager {
                     draw_w: 0.0,
                     started: false,
                     active: false,
+                    modeled_since_anchor: 0.0,
+                    anchor_t: 0.0,
                 })
                 .collect(),
             now: 0.0,
@@ -104,10 +113,55 @@ impl BatteryManager {
         let dt = to - self.now;
         if dt > 0.0 {
             for b in &mut self.batteries {
-                b.remaining_j = (b.remaining_j - b.drain_w() * dt).max(0.0);
+                // Spend is capped at the remaining charge so a later
+                // [`Self::reanchor`] credits back exactly what was taken.
+                let spend = (b.drain_w() * dt).min(b.remaining_j);
+                b.remaining_j -= spend;
+                b.modeled_since_anchor += spend;
             }
             self.now = to;
         }
+    }
+
+    /// Re-anchor one battery to the engine's *measured* energy integral:
+    /// credit back the modeled joules subtracted since the last anchor
+    /// and charge `measured_j` — the DES accountant's actual per-device
+    /// energy over the anchor window ([base + executed-task active
+    /// draws](crate::power::Accountant::device_energy_j)) — instead. The
+    /// session calls this at every plan switch, so between anchors the
+    /// drain stays the exact piecewise-constant closed form (depletion
+    /// instants remain poll-free events), while across switches the
+    /// state of charge tracks what the device actually executed rather
+    /// than the plan's steady-state estimate.
+    ///
+    /// Under a Peukert exponent above 1 the measured window is derated
+    /// through the same law as the modeled drain, using the window's
+    /// average draw: `drained = avg_w · (avg_w / ref_w)^(k−1) · dt`.
+    pub fn reanchor(&mut self, device: DeviceId, measured_j: f64) {
+        let now = self.now;
+        for b in &mut self.batteries {
+            if b.device != device || !b.active {
+                continue;
+            }
+            let dt = now - b.anchor_t;
+            let measured = measured_j.max(0.0);
+            let drained = if b.cfg.peukert == 1.0 || b.ref_w <= 0.0 || dt <= 0.0 {
+                measured
+            } else {
+                let avg_w = measured / dt;
+                avg_w * (avg_w / b.ref_w).powf(b.cfg.peukert - 1.0) * dt
+            };
+            b.remaining_j =
+                (b.remaining_j + b.modeled_since_anchor - drained).clamp(0.0, b.capacity_j);
+            b.modeled_since_anchor = 0.0;
+            b.anchor_t = now;
+        }
+    }
+
+    /// Devices whose batteries are currently draining (the set the
+    /// session re-anchors at each plan switch), in declaration order.
+    pub fn active_devices(&self) -> Vec<DeviceId> {
+        self.batteries.iter().filter(|b| b.active).map(|b| b.device).collect()
     }
 
     /// Reconcile with the (dense-id) fleet size after a churn event: a
@@ -118,6 +172,11 @@ impl BatteryManager {
     pub fn sync_presence(&mut self, fleet_len: usize) {
         self.batteries.retain_mut(|b| {
             if b.device.0 < fleet_len {
+                if !b.started {
+                    // First time on the body: the measured-energy anchor
+                    // window starts here, not at t = 0.
+                    b.anchor_t = self.now;
+                }
                 b.started = true;
                 b.active = true;
                 true
@@ -265,6 +324,90 @@ mod tests {
         m.set_loads(|_| 1.0, |_| 0.25);
         let derated = m.next_depletion(1).unwrap().1;
         assert!(derated < 1.0, "{derated}");
+    }
+
+    #[test]
+    fn reanchor_to_the_modeled_integral_is_a_no_op() {
+        let mut m = manager(&[(0, 2.0)]);
+        m.sync_presence(1);
+        m.set_loads(|_| 0.5, |_| 0.5);
+        m.advance(2.0); // modeled spend: 1 J
+        m.reanchor(DeviceId(0), 1.0);
+        assert_eq!(m.remaining_j(DeviceId(0)), Some(1.0));
+        assert_eq!(m.next_depletion(1), Some((DeviceId(0), 4.0)));
+    }
+
+    #[test]
+    fn reanchor_shifts_the_depletion_instant_with_the_measured_window() {
+        // A device that actually executed more than the plan's
+        // steady-state estimate depletes sooner; one that idled depletes
+        // later. Same modeled draw either way.
+        let mut hot = manager(&[(0, 2.0)]);
+        hot.sync_presence(1);
+        hot.set_loads(|_| 0.5, |_| 0.5);
+        hot.advance(2.0);
+        hot.reanchor(DeviceId(0), 1.5); // measured 1.5 J > modeled 1 J
+        assert_eq!(hot.remaining_j(DeviceId(0)), Some(0.5));
+        assert_eq!(hot.next_depletion(1), Some((DeviceId(0), 3.0)));
+
+        let mut cool = manager(&[(0, 2.0)]);
+        cool.sync_presence(1);
+        cool.set_loads(|_| 0.5, |_| 0.5);
+        cool.advance(2.0);
+        cool.reanchor(DeviceId(0), 0.25); // mostly idle window
+        assert_eq!(cool.remaining_j(DeviceId(0)), Some(1.75));
+        assert_eq!(cool.next_depletion(1), Some((DeviceId(0), 5.5)));
+    }
+
+    #[test]
+    fn reanchor_clamps_at_capacity_and_empty_and_resets_the_window() {
+        let mut m = manager(&[(0, 1.0)]);
+        m.sync_presence(1);
+        m.set_loads(|_| 0.5, |_| 0.5);
+        m.advance(1.0); // 0.5 J left, 0.5 J modeled
+        m.reanchor(DeviceId(0), 10.0); // measured overdraw → empty, not negative
+        assert_eq!(m.remaining_j(DeviceId(0)), Some(0.0));
+        // The window reset means a second re-anchor has nothing modeled
+        // left to credit back.
+        m.reanchor(DeviceId(0), 0.0);
+        assert_eq!(m.remaining_j(DeviceId(0)), Some(0.0));
+
+        let mut m = manager(&[(0, 1.0)]);
+        m.sync_presence(1);
+        m.set_loads(|_| 0.5, |_| 0.5);
+        m.advance(1.0);
+        m.reanchor(DeviceId(0), 0.0); // measured-zero window credits back…
+        assert_eq!(m.remaining_j(DeviceId(0)), Some(1.0), "…but clamps at capacity");
+    }
+
+    #[test]
+    fn reanchor_ignores_inactive_batteries_and_respects_peukert() {
+        // Not on the body yet: nothing to re-anchor.
+        let mut m = manager(&[(5, 1.0)]);
+        m.sync_presence(3);
+        m.advance(1.0);
+        m.reanchor(DeviceId(5), 0.7);
+        assert_eq!(m.remaining_j(DeviceId(5)), Some(1.0));
+
+        // Peukert: a measured window above the reference derates
+        // super-linearly, exactly like the modeled drain at that draw.
+        let decls = [(DeviceId(0), 4.0, BatteryCfg { peukert: 2.0 })];
+        let mut m = BatteryManager::new(&decls);
+        m.sync_presence(1);
+        m.set_loads(|_| 0.5, |_| 0.5);
+        m.advance(2.0); // modeled spend 1 J (at reference: no derating)
+        // Measured 2 J over dt=2 → avg 1 W = 2× ref → derated ×2 → 4 J.
+        m.reanchor(DeviceId(0), 2.0);
+        assert_eq!(m.remaining_j(DeviceId(0)), Some(0.0));
+    }
+
+    #[test]
+    fn active_devices_tracks_presence() {
+        let mut m = manager(&[(1, 1.0), (4, 1.0)]);
+        m.sync_presence(2); // d4 not on the body yet
+        assert_eq!(m.active_devices(), vec![DeviceId(1)]);
+        m.sync_presence(5);
+        assert_eq!(m.active_devices(), vec![DeviceId(1), DeviceId(4)]);
     }
 
     #[test]

@@ -11,6 +11,10 @@ use crate::device::{Device, DeviceId, DeviceKind, Fleet, InteractionKind, Sensor
 use crate::model::zoo::{model_by_name, ModelName};
 use crate::pipeline::{PipelineId, PipelineSpec, SourceReq, TargetReq};
 
+pub mod sample;
+
+pub use sample::{sample_user, FleetMix, SampledUser, SAMPLE_HORIZON};
+
 /// A named set of concurrent pipelines.
 #[derive(Clone, Debug)]
 pub struct Workload {

@@ -1,0 +1,245 @@
+//! Seeded sampling of whole users — fleet + app mix + day-in-the-life
+//! scenario — for population-scale runs ([`crate::population`]).
+//!
+//! A *user* is one body: a wearable fleet, a couple of always-on apps
+//! with QoS floors, and a scripted journey of mid-run churn. The sampler
+//! is deterministic per seed (one [`crate::util::rng::Rng`] stream per
+//! user, nothing shared), so a `--seed-range A..B` population is a fixed,
+//! replayable cohort.
+//!
+//! The sampled space is deliberately *discrete where planning looks*:
+//! fleets, app templates, QoS floors, and journey shapes come from small
+//! finite sets, while event *times* (and battery capacities) vary
+//! continuously. Plan signatures ([`crate::api::GlobalPlanCache`]) cover
+//! only the planning-visible state — so a thousand users collapse onto a
+//! few dozen distinct planning problems (high shared-cache hit rate),
+//! yet no two users share a timeline.
+
+use crate::api::{AppPriority, Qos, Scenario};
+use crate::device::{DeviceId, Fleet};
+use crate::model::zoo::ModelName;
+use crate::pipeline::PipelineId;
+use crate::util::rng::Rng;
+
+use super::{fleet4, fleet4_hetero, fleet8, pipeline};
+
+/// Which fleets the population draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetMix {
+    /// The default cohort: 50% eight-wearable bands, 30% standard
+    /// four-wearable bands, 20% heterogeneous four-wearable bands.
+    Mixed,
+    /// Everyone wears the standard four-wearable band.
+    Fleet4,
+    /// Everyone wears the eight-wearable double band.
+    Fleet8,
+    /// Everyone wears the heterogeneous band (watch upgraded).
+    Hetero,
+}
+
+impl FleetMix {
+    /// Parse a CLI `--fleet-mix` value (see [`Self::names`]).
+    pub fn parse(s: &str) -> Option<FleetMix> {
+        match s {
+            "mixed" | "default" => Some(FleetMix::Mixed),
+            "fleet4" => Some(FleetMix::Fleet4),
+            "fleet8" => Some(FleetMix::Fleet8),
+            "hetero" | "fleet4-hetero" => Some(FleetMix::Hetero),
+            _ => None,
+        }
+    }
+
+    /// Valid `--fleet-mix` values (CLI help and error messages).
+    pub fn names() -> &'static str {
+        "mixed, fleet4, fleet8, hetero"
+    }
+}
+
+/// One sampled user: a seed, a body, and a scripted day.
+#[derive(Clone, Debug)]
+pub struct SampledUser {
+    /// The seed this user was drawn from (also the session seed).
+    pub seed: u64,
+    pub fleet: Fleet,
+    pub scenario: Scenario,
+    /// Which fleet shape was drawn (reporting label).
+    pub fleet_name: &'static str,
+    /// Which journey shape was drawn (reporting label).
+    pub journey: &'static str,
+}
+
+/// The session horizon every sampled scenario runs to, seconds.
+pub const SAMPLE_HORIZON: f64 = 4.0;
+
+/// Draw one user deterministically from `seed`. Two base apps register
+/// at t=0 (endpoints pinned inside d0..d3, present on every fleet in the
+/// mix); one of four journey shapes scripts the mid-run churn; eight-
+/// wearable users may carry a battery on the suffix device whose
+/// depletion mid-run sheds the second band's last wearable.
+pub fn sample_user(seed: u64, mix: FleetMix) -> SampledUser {
+    let mut rng = Rng::new(seed ^ 0x5f0f_c0de_u64);
+
+    let (fleet, fleet_name, is_fleet8) = match mix {
+        FleetMix::Fleet4 => (fleet4(), "fleet4", false),
+        FleetMix::Fleet8 => (fleet8(), "fleet8", true),
+        FleetMix::Hetero => (fleet4_hetero(), "hetero", false),
+        FleetMix::Mixed => match rng.range(0, 10) {
+            0..=4 => (fleet8(), "fleet8", true),
+            5..=7 => (fleet4(), "fleet4", false),
+            _ => (fleet4_hetero(), "hetero", false),
+        },
+    };
+
+    // Two always-on apps from discrete templates, endpoints inside the
+    // d0..d3 band every mix fleet has. Ids 0 and 1; journeys use 2+.
+    let app0 = if rng.chance(0.5) {
+        pipeline(0, ModelName::KWS, 0, 3)
+    } else {
+        pipeline(0, ModelName::ConvNet5, 0, 1)
+    };
+    let app1 = if rng.chance(0.5) {
+        pipeline(1, ModelName::SimpleNet, 1, 2)
+    } else {
+        pipeline(1, ModelName::ResSimpleNet, 3, 1)
+    };
+    // Discrete QoS floor so signature-equal users stay signature-equal.
+    let base_qos = Qos {
+        min_rate_hz: if rng.chance(0.5) { 1.0 } else { 0.0 },
+        ..Qos::default()
+    };
+
+    let mut scenario = Scenario::new()
+        .at(0.0)
+        .register_with_qos(app0, base_qos)
+        .at(0.0)
+        .register(app1);
+
+    // Journey times vary continuously — the cache key is state-based,
+    // not time-based, so this costs no hits.
+    let (s, journey) = match rng.range(0, 4) {
+        0 => {
+            // A short-lived third app bursts in and drains out.
+            let t = rng.range_f64(0.8, 1.8);
+            let s = scenario
+                .at(t)
+                .register(pipeline(2, ModelName::WideNet, 2, 0))
+                .at(t + rng.range_f64(0.8, 1.2))
+                .unregister(PipelineId(2));
+            (s, "burst")
+        }
+        1 => {
+            // The second app backgrounds for a stretch.
+            let t = rng.range_f64(0.8, 1.8);
+            let s = scenario
+                .at(t)
+                .pause(PipelineId(1))
+                .at(t + rng.range_f64(0.6, 1.0))
+                .resume(PipelineId(1));
+            (s, "pause-resume")
+        }
+        2 => {
+            // A context window opens: the first app demands more, then
+            // relaxes back to its sampled floor.
+            let t = rng.range_f64(0.8, 1.8);
+            let hot = Qos {
+                min_rate_hz: 2.0,
+                priority: AppPriority::High,
+                ..Qos::default()
+            };
+            let s = scenario
+                .at(t)
+                .qos(PipelineId(0), hot)
+                .at(t + rng.range_f64(0.8, 1.2))
+                .qos(PipelineId(0), base_qos);
+            (s, "qos-window")
+        }
+        _ => (scenario, "quiet"),
+    };
+    scenario = s;
+
+    // Some eight-wearable users run their suffix wearable dry mid-run —
+    // a battery-driven departure and a shrink replan.
+    if is_fleet8 && rng.chance(0.5) {
+        scenario = scenario.battery(DeviceId(7), rng.range_f64(0.6, 2.4));
+    }
+
+    SampledUser {
+        seed,
+        fleet,
+        scenario: scenario.until(SAMPLE_HORIZON),
+        fleet_name,
+        journey,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ScenarioAction;
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        for seed in [0u64, 1, 7, 99] {
+            let a = sample_user(seed, FleetMix::Mixed);
+            let b = sample_user(seed, FleetMix::Mixed);
+            assert_eq!(a.fleet_name, b.fleet_name, "seed {seed}");
+            assert_eq!(a.journey, b.journey, "seed {seed}");
+            assert_eq!(a.scenario.events().len(), b.scenario.events().len());
+            for (x, y) in a.scenario.events().iter().zip(b.scenario.events()) {
+                assert_eq!(x.t, y.t, "seed {seed}");
+                assert_eq!(x.action.describe(), y.action.describe(), "seed {seed}");
+            }
+            assert_eq!(a.scenario.batteries(), b.scenario.batteries());
+        }
+    }
+
+    #[test]
+    fn every_sampled_scenario_validates_and_stays_in_band() {
+        let mut shapes = std::collections::BTreeSet::new();
+        for seed in 0..200u64 {
+            let u = sample_user(seed, FleetMix::Mixed);
+            assert!(u.fleet.len() >= 4, "seed {seed}");
+            assert_eq!(u.scenario.duration(), SAMPLE_HORIZON);
+            shapes.insert((u.fleet_name, u.journey));
+            // Registered endpoints stay inside the shared d0..d3 band.
+            for ev in u.scenario.events() {
+                if let ScenarioAction::Register { spec, .. } = &ev.action {
+                    use crate::pipeline::{SourceReq, TargetReq};
+                    match (spec.source, spec.target) {
+                        (SourceReq::Device(s), TargetReq::Device(t)) => {
+                            assert!(s.0 < 4 && t.0 < 4, "seed {seed}: {spec:?}");
+                        }
+                        other => panic!("pinned endpoints expected, got {other:?}"),
+                    }
+                }
+            }
+            // Batteries only arm the eight-wearable suffix device.
+            for &(d, cap, _) in u.scenario.batteries() {
+                assert_eq!(u.fleet_name, "fleet8", "seed {seed}");
+                assert_eq!(d, DeviceId(7), "seed {seed}");
+                assert!(cap > 0.0, "seed {seed}");
+            }
+        }
+        // The discrete space actually gets explored.
+        assert!(shapes.len() >= 8, "only {shapes:?}");
+    }
+
+    #[test]
+    fn pinned_mixes_pin_the_fleet() {
+        for seed in 0..20u64 {
+            assert_eq!(sample_user(seed, FleetMix::Fleet4).fleet_name, "fleet4");
+            assert_eq!(sample_user(seed, FleetMix::Fleet8).fleet_name, "fleet8");
+            assert_eq!(sample_user(seed, FleetMix::Hetero).fleet_name, "hetero");
+        }
+    }
+
+    #[test]
+    fn fleet_mix_parses_cli_names() {
+        assert_eq!(FleetMix::parse("mixed"), Some(FleetMix::Mixed));
+        assert_eq!(FleetMix::parse("default"), Some(FleetMix::Mixed));
+        assert_eq!(FleetMix::parse("fleet4"), Some(FleetMix::Fleet4));
+        assert_eq!(FleetMix::parse("fleet8"), Some(FleetMix::Fleet8));
+        assert_eq!(FleetMix::parse("hetero"), Some(FleetMix::Hetero));
+        assert_eq!(FleetMix::parse("nope"), None);
+    }
+}

@@ -309,15 +309,19 @@ fn cascade8_depletes_the_second_band_in_order() {
     // The apps keep running on the first band to the end.
     assert!(report.intervals.last().unwrap().completions > 0);
     assert!(report.energy_j > 0.0);
-    // The report carries the plottable state-of-charge series: every
-    // armed battery's charge is monotone non-increasing (no recharges in
-    // the cascade) and the series stops when its device departs.
-    for d in 4..8usize {
+    // The report carries the plottable state-of-charge series. Charge
+    // may tick *up* across a plan switch — every switch re-anchors the
+    // battery to the DES's measured energy integral, crediting back any
+    // modeled over-draw — but it always stays within [0, capacity] and
+    // each armed battery still departs empty (no recharges in the
+    // cascade).
+    let caps = [(4usize, 2.0f64), (5, 1.4), (6, 0.9), (7, 0.5)];
+    for (d, cap) in caps {
         let series = report.battery_series(DeviceId(d));
         assert!(!series.is_empty(), "no SoC series for d{d}");
         assert!(
-            series.windows(2).all(|w| w[1].1 <= w[0].1 + 1e-12),
-            "d{d} SoC must not increase: {series:?}"
+            series.iter().all(|&(_, j)| (-1e-9..=cap + 1e-9).contains(&j)),
+            "d{d} SoC must stay within [0, {cap}]: {series:?}"
         );
         let depleted_at = depletions
             .iter()
@@ -553,6 +557,108 @@ fn battery_for_unknown_device_is_rejected() {
         matches!(err, synergy::api::RuntimeError::InvalidScenario(_)),
         "{err:?}"
     );
+}
+
+/// Plan switches re-anchor batteries to the *measured* energy integral
+/// (the ROADMAP battery/accountant coupling): between switches a battery
+/// drains at the plan's modeled steady-state draw, and each switch
+/// replaces the modeled window with what the DES accountant actually
+/// charged. A device doing real (jittered, round-quantized) work drifts
+/// from the steady-state estimate, so inserting one replan event that
+/// keeps the same plan shifts the depletion instant — while the
+/// deterministic mirror probe keeps sim and serve bit-identical.
+#[test]
+fn plan_switches_reanchor_batteries_to_the_measured_integral() {
+    // KWS interacts on d3 every round, so the battery device executes
+    // measured work; SimpleNet keeps the rest of the fleet busy.
+    let setup = || {
+        let runtime = SynergyRuntime::new(fleet4());
+        runtime.register(pipeline(0, ModelName::KWS, 0, 3)).unwrap();
+        runtime.register(pipeline(1, ModelName::SimpleNet, 1, 2)).unwrap();
+        runtime
+    };
+
+    // Probe the modeled drain: a huge battery never depletes and never
+    // replans, so its series is the pure closed-form draw.
+    let drained = {
+        let runtime = setup();
+        let scenario = Scenario::new().battery(DeviceId(3), 1e3).until(4.0);
+        let report = runtime
+            .session_with(scenario, SessionCfg { seed: 7, ..SessionCfg::default() })
+            .unwrap()
+            .finish()
+            .unwrap();
+        assert!(report.switches.is_empty(), "{:?}", report.switches);
+        let series = report.battery_series(DeviceId(3));
+        1e3 - series.last().unwrap().1
+    };
+    assert!(drained > 0.0, "d3 must drain ({drained} J)");
+    // Depletes at t ≈ 2.8 under the pure model: after the t=2 re-anchor
+    // event, before the t=4 horizon, with margin for the measured drift.
+    let cap = 0.7 * drained;
+
+    let run = |anchor_event: bool, serve: bool| -> f64 {
+        let runtime = setup();
+        let est0 = runtime.deployment().expect("deployment").estimate.throughput;
+        let mut scenario = Scenario::new().battery(DeviceId(3), cap);
+        if anchor_event {
+            // A tiny rate hint replans without changing the winning plan
+            // (priorities untouched): the switch exists only to anchor.
+            scenario = scenario
+                .at(2.0)
+                .qos(PipelineId(0), Qos { min_rate_hz: 0.01, ..Qos::default() });
+        }
+        let session = runtime
+            .session_with(
+                scenario.until(4.0),
+                SessionCfg { seed: 7, ..SessionCfg::default() },
+            )
+            .unwrap();
+        let mut session = if serve {
+            session.serve(synergy::serving::ServeCfg::default()).unwrap()
+        } else {
+            session
+        };
+        // KWS pins its target to d3, so the depletion-driven departure
+        // cannot replan: drive manually and read the timeline recorded up
+        // to that (expected) failure.
+        let result = session.run_until(4.0);
+        if anchor_event {
+            let est_at_2 = session
+                .switches()
+                .iter()
+                .find(|s| s.t == 2.0)
+                .unwrap_or_else(|| panic!("no t=2 switch: {:?}", session.switches()))
+                .est_throughput;
+            assert_eq!(
+                est_at_2, est0,
+                "the anchor event must keep the winning plan"
+            );
+        }
+        let t_dep = session
+            .switches()
+            .iter()
+            .find(|s| s.cause.starts_with("battery-depleted(d3)"))
+            .unwrap_or_else(|| panic!("no depletion: {:?}", session.switches()))
+            .t;
+        assert!(result.is_err(), "departure with a pinned endpoint must fail");
+        t_dep
+    };
+
+    let t_modeled = run(false, false);
+    let t_anchored = run(true, false);
+    assert!(t_modeled > 2.0 && t_modeled < 4.0, "{t_modeled}");
+    assert!(t_anchored > 2.0 && t_anchored < 4.0, "{t_anchored}");
+    assert_ne!(
+        t_modeled.to_bits(),
+        t_anchored.to_bits(),
+        "the measured window must shift the depletion instant \
+         (modeled {t_modeled} vs anchored {t_anchored})"
+    );
+    // The serve path anchors against the mirrored deterministic DES, so
+    // the shifted instant is engine-independent down to the bit.
+    let t_served = run(true, true);
+    assert_eq!(t_anchored.to_bits(), t_served.to_bits(), "{t_anchored} vs {t_served}");
 }
 
 /// Scenario scripting errors surface as typed errors, not panics.

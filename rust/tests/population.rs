@@ -1,0 +1,170 @@
+//! Population-scale serving: cross-user plan-cache correctness (a cache
+//! hit must be indistinguishable from the fresh search it replaces) and
+//! aggregate determinism across worker-pool sizes, cache modes, and
+//! same-time policies.
+
+use std::sync::Arc;
+
+use synergy::analysis::{verify_deployment, SameTimePolicy};
+use synergy::api::{GlobalPlanCache, SynergyRuntime};
+use synergy::model::zoo::ModelName;
+use synergy::orchestrator::Synergy;
+use synergy::pipeline::PipelineId;
+use synergy::plan::{digest_debug, rebind_pipelines};
+use synergy::population::{run_population, PopulationCfg};
+use synergy::workload::{fleet8, pipeline};
+
+/// A cache-hit deployment re-endpointed onto a signature-equal fleet is
+/// plan-for-plan identical to the fresh bounded search it replaced, and
+/// the rebound plan passes the static verifier.
+#[test]
+fn cache_hits_rebind_to_the_exact_fresh_search_plan() {
+    let apps = |ids: [usize; 3]| {
+        [
+            pipeline(ids[0], ModelName::KWS, 0, 3),
+            pipeline(ids[1], ModelName::SimpleNet, 1, 2),
+            pipeline(ids[2], ModelName::ConvNet5, 2, 0),
+        ]
+    };
+    let build = |cache: Option<Arc<GlobalPlanCache>>| {
+        let mut b = SynergyRuntime::builder()
+            .fleet(fleet8())
+            .planner(Synergy::planner_bounded(8));
+        if let Some(c) = cache {
+            b = b.shared_plan_cache(c);
+        }
+        b.build()
+    };
+    let cache = Arc::new(GlobalPlanCache::new());
+
+    // User A fills the cache with fresh bounded searches (one planning
+    // problem per registration step).
+    let a = build(Some(cache.clone()));
+    for spec in apps([0, 1, 2]) {
+        a.register(spec).unwrap();
+    }
+    let plan_a = a.deployment().expect("deployment A").plan;
+
+    // User B: same planner config, fleet shape, and app shapes — its own
+    // pipeline ids. Every one of its planning problems is a cache hit.
+    let b = build(Some(cache.clone()));
+    for spec in apps([10, 11, 12]) {
+        b.register(spec).unwrap();
+    }
+    let plan_b = b.deployment().expect("deployment B").plan;
+
+    // User C replays B's exact registrations with no cache: the fresh
+    // bounded search is the ground truth the hit must reproduce.
+    let c = build(None);
+    for spec in apps([10, 11, 12]) {
+        c.register(spec).unwrap();
+    }
+    let plan_c = c.deployment().expect("deployment C").plan;
+
+    // Plan-for-plan identity: the rebound plan *is* the fresh search —
+    // same device bindings, splits, and estimates, bit for bit.
+    assert_eq!(digest_debug(&plan_b), digest_debug(&plan_c));
+    // And it is exactly A's plan re-endpointed onto B's pipeline ids.
+    let rebound = rebind_pipelines(
+        &plan_a,
+        &[PipelineId(10), PipelineId(11), PipelineId(12)],
+    );
+    assert_eq!(digest_debug(&rebound), digest_debug(&plan_b));
+    assert_ne!(
+        digest_debug(&plan_a),
+        digest_debug(&plan_b),
+        "distinct pipeline ids must show up in the rebound plan"
+    );
+
+    // The rebound deployment holds up under the static verifier.
+    verify_deployment(&plan_b, &b.apps(), &b.fleet(), None).unwrap();
+
+    // Single-threaded, so even the racy raw counters are exact: three
+    // misses (A), three hits (B), C bypassed the cache entirely.
+    let stats = cache.stats();
+    assert_eq!(stats.lookups, 6);
+    assert_eq!(stats.hits, 3);
+    assert_eq!(stats.unique_signatures, 3);
+    assert!((stats.hit_rate() - 0.5).abs() < 1e-12, "{stats:?}");
+}
+
+/// The aggregate population report is bit-identical across reruns and
+/// worker-pool sizes (1, 4, 8), under both same-time policies, and with
+/// the shared plan cache on or off.
+#[test]
+fn population_reports_are_bit_identical_across_workers_and_policies() {
+    for same_time in [
+        SameTimePolicy::Deterministic,
+        SameTimePolicy::Randomized { seed: 11 },
+    ] {
+        let base = PopulationCfg {
+            users: 8,
+            seed_lo: 0,
+            seed_hi: 8,
+            workers: 1,
+            same_time,
+            ..PopulationCfg::default()
+        };
+        let reference = run_population(&base).unwrap();
+        assert_eq!(reference.workers, 1);
+        assert!(reference.completions.min > 0.0, "{reference:?}");
+
+        let rerun = run_population(&base).unwrap();
+        assert_eq!(reference.fingerprint, rerun.fingerprint, "{same_time:?}");
+
+        for workers in [4usize, 8] {
+            let r = run_population(&PopulationCfg { workers, ..base }).unwrap();
+            assert_eq!(r.workers, workers);
+            assert_eq!(
+                reference.fingerprint, r.fingerprint,
+                "workers {workers}, {same_time:?}"
+            );
+            assert_eq!(reference.completions, r.completions);
+            assert_eq!(reference.energy_j, r.energy_j);
+            assert_eq!(reference.switches, r.switches);
+            assert_eq!(reference.qos_violation_s, r.qos_violation_s);
+            for (x, y) in reference.outcomes.iter().zip(&r.outcomes) {
+                assert_eq!(x.seed, y.seed);
+                assert_eq!(x.digest, y.digest);
+            }
+        }
+
+        // Cache off: every user replans from scratch, same timelines.
+        let uncached = run_population(&PopulationCfg {
+            shared_cache: false,
+            workers: 4,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(reference.fingerprint, uncached.fingerprint, "{same_time:?}");
+        assert!(uncached.cache.is_none());
+    }
+}
+
+/// The default mix keeps the cohort's planning problems heavily shared:
+/// a modest cohort already re-uses most signatures, pinning (at test
+/// scale) the population-scale claim that the default-mix hit rate
+/// clears 50%.
+#[test]
+fn default_mix_shares_most_planning_problems() {
+    let r = run_population(&PopulationCfg {
+        users: 32,
+        seed_lo: 0,
+        seed_hi: 32,
+        workers: 4,
+        ..PopulationCfg::default()
+    })
+    .unwrap();
+    let stats = r.cache.expect("cache on");
+    assert!(
+        stats.hit_rate() > 0.5,
+        "cohort hit rate {:.2} (lookups {}, distinct problems {})",
+        stats.hit_rate(),
+        stats.lookups,
+        stats.unique_signatures
+    );
+    assert!(
+        stats.unique_plans <= stats.unique_signatures,
+        "first-insert-wins keeps at most one plan per signature: {stats:?}"
+    );
+}
