@@ -1,0 +1,177 @@
+//! Flight-recorder benchmarks: tracing must be free when disabled and
+//! cheap when enabled.
+//!
+//! Two gates, both measured as machine-independent shares of the cascade8
+//! session they ride along with (the switch-densest canned timeline), on
+//! both engines:
+//!
+//! - **disabled** — pushing the full session report through a
+//!   [`synergy::obs::NullSink`] must cost ≤ 1% of the session itself.
+//!   Every emission helper early-returns on `sink.enabled()`, so this is
+//!   really benchmarking a branch per record_* call.
+//! - **enabled** — a flight-recorded session
+//!   ([`synergy::api::Session::finish_traced`]) must stay within 5% of
+//!   the plain `finish()` wall time. The recorder is post-hoc — it walks
+//!   the finished report and the serve engine's busy spans — so the
+//!   session hot path itself is untouched; this bounds the walk.
+//!
+//! The run writes its measured snapshot to `target/BENCH_obs.json`;
+//! `cargo run --bin xtask -- bench-merge` folds it into the checked-in
+//! `benches/BENCH_obs.json` trajectory (arming the regression windows).
+
+mod bench_harness;
+
+use bench_harness::{fmt_duration, report, time_once};
+use synergy::api::{SessionCfg, SynergyRuntime, TracedReport};
+use synergy::obs::{self, FlightRecording, NullSink};
+use synergy::orchestrator::Synergy;
+use synergy::serving::ServeCfg;
+use synergy::util::json::Json;
+use synergy::workload::scenario_cascade8;
+
+/// Check one measurement against its entry in `BENCH_obs.json`: the hard
+/// `budget` always gates; the `max_delta_pct` window additionally gates
+/// once a nonzero `baseline` has been recorded (see bench-merge).
+fn gate_budget(budgets: &Json, name: &str, measured: f64) {
+    let metric = budgets
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .and_then(|ms| ms.iter().find(|m| m.get("name").and_then(Json::as_str) == Some(name)))
+        .unwrap_or_else(|| panic!("BENCH_obs.json has no metric named {name}"));
+    let budget = metric.get("budget").and_then(Json::as_f64).unwrap();
+    let baseline = metric.get("baseline").and_then(Json::as_f64).unwrap_or(0.0);
+    let max_delta_pct = metric.get("max_delta_pct").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(
+        measured <= budget,
+        "{name}: measured {measured} over hard budget {budget}"
+    );
+    if baseline > 0.0 {
+        let ceiling = baseline * (1.0 + max_delta_pct / 100.0);
+        assert!(
+            measured <= ceiling,
+            "{name}: measured {measured} regressed past baseline {baseline} (+{max_delta_pct}%)"
+        );
+    }
+    println!("budget {name:<44} measured {measured:.3e} budget {budget:.3e}");
+}
+
+/// One cascade8 session on the chosen engine; `traced` arms the task
+/// trace and finishes through the flight recorder.
+fn run_cascade8(serve: bool, traced: bool) -> (f64, Option<TracedReport>) {
+    let canned = scenario_cascade8();
+    let runtime = SynergyRuntime::builder()
+        .fleet(canned.fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    let cfg = SessionCfg { seed: 7, record_trace: traced, ..SessionCfg::default() };
+    let session = runtime.session_with(canned.scenario, cfg).unwrap();
+    let session = if serve { session.serve(ServeCfg::default()).unwrap() } else { session };
+    if traced {
+        let t = session.finish_traced().unwrap();
+        let completions = t.report.completions as f64;
+        (completions, Some(t))
+    } else {
+        let r = session.finish().unwrap();
+        (r.completions as f64, None)
+    }
+}
+
+fn main() {
+    let budgets = Json::parse(include_str!("BENCH_obs.json")).expect("benches/BENCH_obs.json parses");
+    let mut measured: Vec<(&str, f64)> = Vec::new();
+
+    for (engine, serve, iters) in [("sim", false, 9usize), ("serve", true, 5usize)] {
+        // --- Baseline: the plain session, no tracing anywhere -----------
+        let mut plain_samples: Vec<f64> =
+            (0..iters).map(|_| time_once(&mut || run_cascade8(serve, false).0)).collect();
+        let plain = report(&format!("obs/session-plain/cascade8-{engine}"), &mut plain_samples);
+
+        // --- Enabled: full flight-recorded finish ------------------------
+        let mut traced_samples: Vec<f64> =
+            (0..iters).map(|_| time_once(&mut || run_cascade8(serve, true).0)).collect();
+        let traced = report(&format!("obs/session-traced/cascade8-{engine}"), &mut traced_samples);
+        // Medians jitter a little; a traced run faster than the plain one
+        // just means the overhead is below noise — clamp at zero.
+        let enabled_share = ((traced - plain) / plain.max(1e-12)).max(0.0);
+
+        // --- Disabled: the same emission walk through a NullSink ---------
+        // `record_session` is the everything-included entry point; with a
+        // disabled sink every helper early-returns, so this measures the
+        // per-call guard branch and nothing else.
+        let (_, traced_report) = run_cascade8(serve, true);
+        let traced_report = traced_report.expect("traced run returns a TracedReport");
+        let sess = &traced_report.report;
+        const CALLS: usize = 2_000;
+        let mut null_samples: Vec<f64> = (0..iters)
+            .map(|_| {
+                time_once(&mut || {
+                    let mut sink = NullSink;
+                    for _ in 0..CALLS {
+                        obs::record_session(sess, &[], &mut sink);
+                    }
+                    CALLS
+                }) / CALLS as f64
+            })
+            .collect();
+        let null_call = report(&format!("obs/nullsink-emit/cascade8-{engine}"), &mut null_samples);
+        let disabled_share = null_call / plain.max(1e-12);
+
+        // Informational: replaying the recording into a fresh sink and the
+        // Chrome export (the `synergy trace` write path).
+        let mut rec_samples: Vec<f64> = (0..iters)
+            .map(|_| {
+                time_once(&mut || {
+                    let mut rec = FlightRecording::new();
+                    obs::record_session(sess, &[], &mut rec);
+                    rec.len()
+                })
+            })
+            .collect();
+        report(&format!("obs/record/cascade8-{engine}"), &mut rec_samples);
+        let mut export_samples: Vec<f64> = (0..iters)
+            .map(|_| time_once(&mut || obs::to_chrome_json(&traced_report.recording).len()))
+            .collect();
+        let export = report(&format!("obs/chrome-export/cascade8-{engine}"), &mut export_samples);
+
+        println!(
+            "obs/{engine}: plain {} traced {} (+{:.2}%), nullsink emit {}/call \
+             ({:.4}% of session), export {} for {} events",
+            fmt_duration(plain),
+            fmt_duration(traced),
+            enabled_share * 100.0,
+            fmt_duration(null_call),
+            disabled_share * 100.0,
+            fmt_duration(export),
+            traced_report.recording.len(),
+        );
+
+        let disabled_name: &str = match engine {
+            "sim" => "obs/disabled-emit-share/sim",
+            _ => "obs/disabled-emit-share/serve",
+        };
+        let enabled_name: &str = match engine {
+            "sim" => "obs/enabled-overhead/sim",
+            _ => "obs/enabled-overhead/serve",
+        };
+        gate_budget(&budgets, disabled_name, disabled_share);
+        gate_budget(&budgets, enabled_name, enabled_share);
+        measured.push((disabled_name, disabled_share));
+        measured.push((enabled_name, enabled_share));
+    }
+
+    // --- Trajectory snapshot ---------------------------------------------
+    // bench-merge folds this into benches/BENCH_obs.json.
+    let snapshot = synergy::util::json::obj([
+        ("area", Json::Str("obs".into())),
+        (
+            "measured",
+            Json::Obj(
+                measured.into_iter().map(|(k, v)| (k.to_string(), Json::Num(v))).collect(),
+            ),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/target/BENCH_obs.json");
+    std::fs::write(out, snapshot.to_string_pretty()).expect("write bench snapshot");
+    println!("snapshot written to {out}");
+    println!("OK: the flight recorder is free when off and noise when on");
+}

@@ -65,6 +65,7 @@ pub use self::runtime::{RuntimeBuilder, RuntimeStats, SynergyRuntime};
 pub use self::scenario::{Scenario, ScenarioAction, TimedAction};
 pub use self::session::{
     AppInterval, Interval, PlanSwitch, QosSpan, ServeSummary, Session, SessionCfg, SessionReport,
+    TracedReport,
 };
 pub use self::shared_cache::{GlobalPlanCache, PlanCacheStats};
 

@@ -60,9 +60,10 @@ use std::time::Instant;
 
 use crate::analysis::{debug_verify_deployment, SameTimePolicy};
 use crate::device::{DeviceId, Fleet};
+use crate::obs::{self, FlightRecording, MetricsRegistry, MetricsSnapshot};
 use crate::pipeline::{PipelineId, PipelineSpec};
 use crate::plan::CollabPlan;
-use crate::power::{plan_device_draw, BatteryManager, EnergyReplay};
+use crate::power::{plan_device_draw, BatteryManager, BusySpan, EnergyReplay};
 use crate::scheduler::{GroundTruth, RoundRecord, SimEngine, Trace};
 use crate::serving::{ChunkExecutor, ServeCfg, ServeEngine, VirtualExecutor};
 
@@ -244,6 +245,23 @@ impl SessionReport {
             })
             .collect()
     }
+}
+
+/// A finished session with its flight recording and metrics snapshot —
+/// what [`Session::finish_traced`] returns. Export the recording with
+/// [`crate::obs::to_chrome_json`] (Perfetto / `chrome://tracing`) and
+/// the metrics with [`MetricsSnapshot::to_json`].
+#[derive(Clone, Debug)]
+pub struct TracedReport {
+    /// The ordinary time-series report ([`Session::finish`]).
+    pub report: SessionReport,
+    /// The session timeline as trace events: switch/depletion instants,
+    /// QoS spans, power/battery counter tracks, per-(device, unit) task
+    /// or busy spans.
+    pub recording: FlightRecording,
+    /// Session aggregates + planner/replan counters. Wall-clock figures
+    /// sit under `annex.` — scrub before determinism comparisons.
+    pub metrics: MetricsSnapshot,
 }
 
 /// Core state cloned out of the lock after applying a scenario event —
@@ -659,7 +677,52 @@ impl Session {
 
     /// Run the remaining scenario to its horizon and produce the
     /// time-series report.
-    pub fn finish(mut self) -> Result<SessionReport, RuntimeError> {
+    pub fn finish(self) -> Result<SessionReport, RuntimeError> {
+        self.finish_inner().map(|(report, _)| report)
+    }
+
+    /// [`Self::finish`], additionally producing a flight recording of
+    /// the session timeline and a metrics snapshot (session aggregates,
+    /// planner search counters, replan cache counters; wall-clock
+    /// figures under the scrub-able `annex.` prefix).
+    ///
+    /// The recording is emitted *post-hoc* from the finished report's
+    /// deterministic artifacts — never live from engine hot paths — so
+    /// it is bit-identical across reruns and, for served sessions,
+    /// across worker counts. Set [`SessionCfg::record_trace`] to include
+    /// per-(device, unit) task spans on simulator sessions.
+    pub fn finish_traced(self) -> Result<TracedReport, RuntimeError> {
+        let shared = Arc::clone(&self.shared);
+        let (report, serve_busy) = self.finish_inner()?;
+
+        let mut recording = FlightRecording::new();
+        obs::record_session(&report, &serve_busy, &mut recording);
+
+        let registry = MetricsRegistry::new();
+        obs::session_metrics(&report, &registry);
+        {
+            let guard = lock_shared(&shared);
+            if let Some(pp) = guard.planner.as_progressive() {
+                registry
+                    .counter("planner.candidates_scored")
+                    .add(pp.candidates_scored.get());
+                registry
+                    .counter("planner.skeletons_considered")
+                    .add(pp.counters.skeletons_considered.get());
+                registry
+                    .counter("planner.admission_pruned")
+                    .add(pp.counters.admission_pruned.get());
+                registry.counter("planner.bound_cutoffs").add(pp.counters.bound_cutoffs.get());
+            }
+            let (cache_hits, enumerations) = guard.core.cache_counters();
+            registry.counter("replan.cache_hits").add(cache_hits as u64);
+            registry.counter("replan.enumerations").add(enumerations as u64);
+        }
+
+        Ok(TracedReport { report, recording, metrics: registry.snapshot() })
+    }
+
+    fn finish_inner(mut self) -> Result<(SessionReport, Vec<BusySpan>), RuntimeError> {
         self.run_until(self.duration)?;
         self.close_final(self.duration);
         // Close still-open QoS spans at the horizon.
@@ -676,11 +739,11 @@ impl Session {
         let soc_marks = std::mem::take(&mut self.soc_marks);
         let names = std::mem::take(&mut self.names);
 
-        let (completions, energy_j, trace, served, marks) = match self.engine {
+        let (completions, energy_j, trace, served, marks, serve_busy) = match self.engine {
             SessionEngine::Sim(engine) => {
                 let completions = engine.completions();
                 let energy_j = engine.energy_total_j(duration);
-                (completions, energy_j, engine.into_trace(), None, sim_marks)
+                (completions, energy_j, engine.into_trace(), None, sim_marks, Vec::new())
             }
             SessionEngine::Serve(engine) => {
                 let outcome = engine.finish()?;
@@ -736,7 +799,7 @@ impl Session {
                     marks.push(replay.energy_at(b));
                 }
                 let energy_j = marks.last().copied().unwrap_or(0.0);
-                (completions, energy_j, None, Some(served), marks)
+                (completions, energy_j, None, Some(served), marks, outcome.busy)
             }
         };
 
@@ -771,7 +834,7 @@ impl Session {
             });
         }
 
-        Ok(SessionReport {
+        let report = SessionReport {
             duration,
             completions,
             throughput: completions as f64 / duration.max(1e-12),
@@ -782,7 +845,8 @@ impl Session {
             qos_spans: self.qos_spans,
             trace,
             served,
-        })
+        };
+        Ok((report, serve_busy))
     }
 
     /// The interval a completed round belongs to, given the final

@@ -27,16 +27,19 @@
 //! **Concurrency.** Lookups and inserts take one non-poisoning mutex;
 //! concurrent first lookups of the same signature may each miss and then
 //! insert the identical plan (first insert wins — idempotent by the
-//! purity above). That makes the raw hit *count* scheduling-dependent,
+//! purity above). That makes the raw hit *count* scheduling-dependent —
+//! it lives in the cache's [`MetricsRegistry`] as the annex counter
+//! `annex.plan_cache.raw_hits`, not in the deterministic inner state —
 //! which is why [`PlanCacheStats::hit_rate`] is derived from the number
 //! of *distinct signatures seen* instead: deterministic for a fixed user
 //! set regardless of worker count.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt::Write as _;
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::device::Fleet;
+use crate::obs::{Counter, MetricsRegistry};
 use crate::orchestrator::ProgressivePlanner;
 use crate::pipeline::PipelineSpec;
 use crate::plan::{digest_debug, CollabPlan};
@@ -78,25 +81,34 @@ struct CacheInner {
     plans: BTreeMap<String, CollabPlan>,
     seen: BTreeSet<String>,
     lookups: u64,
-    hits: u64,
 }
 
 /// The shared, keyed plan store (see the module docs). Construct one,
 /// wrap it in an `Arc`, and hand clones to
 /// [`super::RuntimeBuilder::shared_plan_cache`].
+///
+/// Deterministic counters (lookups, distinct signatures) live in the
+/// locked inner state; the scheduling-dependent raw hit count is an
+/// atomic [`Counter`] in the cache's [`MetricsRegistry`], under the
+/// annex prefix so determinism comparisons scrub it.
 pub struct GlobalPlanCache {
     inner: Mutex<CacheInner>,
+    metrics: MetricsRegistry,
+    raw_hits: Arc<Counter>,
 }
 
 impl GlobalPlanCache {
     pub fn new() -> GlobalPlanCache {
+        let metrics = MetricsRegistry::new();
+        let raw_hits = metrics.counter("annex.plan_cache.raw_hits");
         GlobalPlanCache {
             inner: Mutex::new(CacheInner {
                 plans: BTreeMap::new(),
                 seen: BTreeSet::new(),
                 lookups: 0,
-                hits: 0,
             }),
+            metrics,
+            raw_hits,
         }
     }
 
@@ -119,7 +131,7 @@ impl GlobalPlanCache {
         }
         let hit = g.plans.get(key).cloned();
         if hit.is_some() {
-            g.hits += 1;
+            self.raw_hits.inc();
         }
         hit
     }
@@ -132,15 +144,21 @@ impl GlobalPlanCache {
         g.plans.entry(key).or_insert(plan);
     }
 
-    /// Counter snapshot.
+    /// Counter snapshot. `hits` is read back from the annex metrics
+    /// counter — racy under a worker pool, deterministic single-threaded.
     pub fn stats(&self) -> PlanCacheStats {
         let g = self.lock();
         PlanCacheStats {
             lookups: g.lookups,
-            hits: g.hits,
+            hits: self.raw_hits.get(),
             unique_signatures: g.seen.len(),
             unique_plans: g.plans.len(),
         }
+    }
+
+    /// The cache's metrics registry (holds `annex.plan_cache.raw_hits`).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 }
 
@@ -275,5 +293,25 @@ mod tests {
         assert_eq!((s.unique_signatures, s.unique_plans), (2, 1));
         // 3 lookups over 2 distinct signatures: 1/3 deterministic rate.
         assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn raw_hits_live_in_the_annex_metrics_counter() {
+        let cache = GlobalPlanCache::new();
+        let plan = CollabPlan::new(vec![ExecutionPlan::monolithic(
+            &workload(1).unwrap().pipelines[0],
+            DeviceId(0),
+            DeviceId(0),
+            DeviceId(0),
+        )]);
+        cache.insert("k".into(), plan);
+        cache.lookup("k");
+        cache.lookup("k");
+        let snap = cache.metrics().snapshot();
+        assert_eq!(snap.counter("annex.plan_cache.raw_hits"), Some(2));
+        // Scrubbing the annex removes the racy figure entirely.
+        let mut scrubbed = snap.clone();
+        scrubbed.scrub_annex();
+        assert_eq!(scrubbed.counter("annex.plan_cache.raw_hits"), None);
     }
 }

@@ -1,8 +1,21 @@
-//! `xtask` — repository lints that rustc and clippy don't enforce.
+//! `xtask` — repository lints and maintenance chores that rustc and
+//! clippy don't enforce.
 //!
-//! Run as `cargo run --bin xtask -- lint` (CI does). Four rules, all
-//! scoped to non-test library code under `src/` (test modules, `tests/`,
-//! and `benches/` are exempt — tests may unwrap freely):
+//! Subcommands (CI runs all three):
+//!
+//! - `lint` — the rule set below.
+//! - `bench-merge` — fold the measured snapshots the bench targets write
+//!   to `target/BENCH_*.json` into the checked-in `benches/BENCH_*.json`
+//!   trajectories: each metric's `baseline` is set to its latest measured
+//!   value, arming the `max_delta_pct` regression window (a zero baseline
+//!   means unseeded — only the hard `budget` gates).
+//! - `validate-trace <file>` — structural validation that a file emitted
+//!   by `synergy trace` parses as Chrome trace-event JSON (the format
+//!   ui.perfetto.dev loads), via [`synergy::obs::validate_chrome_trace`].
+//!
+//! Run as `cargo run --bin xtask -- lint`. Five rules, all scoped to
+//! non-test library code under `src/` (test modules, `tests/`, and
+//! `benches/` are exempt — tests may unwrap freely):
 //!
 //! 1. **forbid-partial-cmp** — no `.partial_cmp(` call sites. Every float
 //!    ordering in this crate is a time or a score; `partial_cmp().unwrap()`
@@ -25,6 +38,11 @@
 //!    (and breaks the DES/serve cross-validation the CI gates on). The
 //!    whitelisted sites are the real-execution measurement points, where
 //!    wall time *is* the measurand.
+//! 5. **obs-simulated-time** — `std::time` must not appear at all under
+//!    `src/obs/`. The flight recorder stamps events in *simulated* (or
+//!    caller-injected) time only; a wall-clock read anywhere in the
+//!    tracing path would break the bit-identical-trace guarantees CI
+//!    replays (reruns, 1/4/8 population workers, sim vs serve).
 //!
 //! The scanner strips comments, string/char literals, and `#[cfg(test)]`
 //! modules with a small brace-tracking lexer — crude next to a real AST,
@@ -35,7 +53,7 @@ use std::path::{Path, PathBuf};
 /// Ratchet for rule 3: the number of `.unwrap()`/`.expect(` sites allowed
 /// in non-test code under `src/` (counting feature-gated files too). Only
 /// ever lower this — the lint prints the current count.
-const UNWRAP_BUDGET: usize = 72;
+const UNWRAP_BUDGET: usize = 70;
 
 /// Whitelist for rule 4: files allowed to read the wall clock in non-test
 /// code, with the number of permitted call sites. All are measurement
@@ -55,10 +73,142 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("lint") => std::process::exit(lint()),
+        Some("bench-merge") => std::process::exit(bench_merge()),
+        Some("validate-trace") => match args.get(1) {
+            Some(path) => std::process::exit(validate_trace(path)),
+            None => {
+                eprintln!("usage: cargo run --bin xtask -- validate-trace <file>");
+                std::process::exit(2);
+            }
+        },
         _ => {
-            eprintln!("usage: cargo run --bin xtask -- lint");
+            eprintln!("usage: cargo run --bin xtask -- <lint|bench-merge|validate-trace FILE>");
             std::process::exit(2);
         }
+    }
+}
+
+/// `validate-trace <file>`: structural Chrome trace-event validation of an
+/// exported flight recording (CI smoke-checks the `synergy trace` output
+/// with this before anyone loads it into Perfetto).
+fn validate_trace(path: &str) -> i32 {
+    let text = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("xtask validate-trace: cannot read {path}: {e}");
+            return 2;
+        }
+    };
+    match synergy::obs::validate_chrome_trace(&text) {
+        Ok(events) => {
+            println!("xtask validate-trace: {path}: ok ({events} trace events)");
+            0
+        }
+        Err(e) => {
+            eprintln!("xtask validate-trace: {path}: {e}");
+            1
+        }
+    }
+}
+
+/// `bench-merge`: fold `target/BENCH_*.json` measured snapshots (written
+/// by the bench targets) into the checked-in `benches/BENCH_*.json`
+/// trajectories. For every metric with a measured value, `baseline` is
+/// set to that value — arming the `max_delta_pct` regression window the
+/// benches gate against on the next run. Files are rewritten in the
+/// canonical pretty-printed form of [`synergy::util::json`] (sorted
+/// keys), so reruns are byte-stable.
+fn bench_merge() -> i32 {
+    use synergy::util::json::Json;
+
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut baselines: Vec<PathBuf> = match std::fs::read_dir(root.join("benches")) {
+        Ok(entries) => entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            })
+            .collect(),
+        Err(e) => {
+            eprintln!("xtask bench-merge: cannot read benches/: {e}");
+            return 2;
+        }
+    };
+    baselines.sort();
+
+    let mut errors = 0usize;
+    let mut merged_files = 0usize;
+    for path in &baselines {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let measured_path = root.join("target").join(name);
+        let Ok(measured_raw) = std::fs::read_to_string(&measured_path) else {
+            println!("bench-merge: {name}: no snapshot in target/ (run the bench) — skipped");
+            continue;
+        };
+        let (doc, measured) = match (
+            std::fs::read_to_string(path).map_err(|e| e.to_string()).and_then(|s| {
+                Json::parse(&s).map_err(|e| format!("benches/{name} does not parse: {e}"))
+            }),
+            Json::parse(&measured_raw).map_err(|e| format!("target/{name} does not parse: {e}")),
+        ) {
+            (Ok(d), Ok(m)) => (d, m),
+            (a, b) => {
+                for r in [a.err(), b.err()].into_iter().flatten() {
+                    eprintln!("xtask bench-merge: {r}");
+                }
+                errors += 1;
+                continue;
+            }
+        };
+        let Some(samples) = measured.get("measured").and_then(Json::as_obj).cloned() else {
+            eprintln!("xtask bench-merge: target/{name} has no `measured` object");
+            errors += 1;
+            continue;
+        };
+        let mut doc = doc;
+        let mut armed = 0usize;
+        if let Json::Obj(top) = &mut doc {
+            if let Some(Json::Arr(metrics)) = top.get_mut("metrics") {
+                for metric in metrics.iter_mut() {
+                    let Json::Obj(fields) = metric else { continue };
+                    let Some(value) = fields
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .and_then(|n| samples.get(n))
+                        .and_then(Json::as_f64)
+                    else {
+                        continue;
+                    };
+                    fields.insert("baseline".to_string(), Json::Num(value));
+                    armed += 1;
+                }
+            }
+        }
+        if armed == 0 {
+            println!("bench-merge: {name}: snapshot names match no metric — skipped");
+            continue;
+        }
+        let mut text = doc.to_string_pretty();
+        text.push('\n');
+        if let Err(e) = std::fs::write(path, text) {
+            eprintln!("xtask bench-merge: cannot write benches/{name}: {e}");
+            errors += 1;
+            continue;
+        }
+        println!("bench-merge: {name}: armed {armed} baseline(s) from target/{name}");
+        merged_files += 1;
+    }
+    println!(
+        "xtask bench-merge: {merged_files}/{} trajectories updated",
+        baselines.len()
+    );
+    if errors == 0 {
+        0
+    } else {
+        1
     }
 }
 
@@ -104,6 +254,21 @@ fn lint() -> i32 {
         if !rel.starts_with("bin/") && !rel.starts_with("bin\\") {
             for (_, line) in code.lines() {
                 unwraps += count_calls(line, ".unwrap()") + count_calls(line, ".expect(");
+            }
+        }
+        // Rule 5: the flight recorder stamps simulated/injected time only
+        // — no `std::time` anywhere under src/obs/ (stricter than rule 4:
+        // even a Duration import is suspect in the tracing path).
+        if rel.starts_with("obs/") || rel.starts_with("obs\\") {
+            for (line_no, line) in code.lines() {
+                if line.contains("std::time") {
+                    eprintln!(
+                        "src/{rel}:{line_no}: `std::time` in the flight \
+                         recorder — obs/ stamps simulated/injected time \
+                         only (bit-identical traces are a CI gate)"
+                    );
+                    errors += 1;
+                }
             }
         }
         // Rule 4: determinism — wall-clock reads only at the whitelisted

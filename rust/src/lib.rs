@@ -95,6 +95,11 @@
 //!   real inference, and scenario-driven live sessions
 //!   ([`api::Scenario`] / [`api::Session`]) that replan mid-timeline and
 //!   report time series.
+//! - [`obs`] — observability: the flight recorder ([`obs::TraceSink`] /
+//!   [`obs::FlightRecording`] stamped in simulated time), the
+//!   [`obs::MetricsRegistry`] of deterministic counters/gauges/histograms,
+//!   and Chrome/Perfetto trace + flat JSON exporters (`synergy trace`,
+//!   [`api::Session::finish_traced`]).
 //! - [`workload`] — Table I workloads and synthetic sensor sources, plus
 //!   seeded whole-user sampling ([`workload::sample_user`]) for
 //!   population runs.
@@ -120,6 +125,7 @@ pub mod coordinator;
 pub mod serving;
 pub mod analysis;
 pub mod api;
+pub mod obs;
 pub mod workload;
 pub mod population;
 pub mod experiments;

@@ -24,7 +24,8 @@ use synergy::workload;
 
 const VALUE_OPTS: &[&str] = &[
     "runs", "seed", "workload", "combos", "artifacts", "inflight", "fleet", "beam", "name",
-    "until", "scenario", "rate", "users", "seed-range", "workers", "fleet-mix",
+    "until", "scenario", "rate", "users", "seed-range", "workers", "fleet-mix", "out",
+    "trace-user",
 ];
 
 fn main() {
@@ -62,11 +63,13 @@ fn usage() -> String {
      \u{20}              execution. --workload/--fleet/--beam as in plan;\n\
      \u{20}              --rate R arms a uniform min-rate floor (Hz) on\n\
      \u{20}              every app (planner admission pruning + feasibility\n\
-     \u{20}              verdicts; exit 1 if statically infeasible)\n\
+     \u{20}              verdicts; exit 1 if statically infeasible);\n\
+     \u{20}              --json (machine-readable capacity report)\n\
      scenario       live session with mid-run churn: time-series report,\n\
      \u{20}              plan-switch timeline, QoS spans (cascade8 = battery-\n\
      \u{20}              driven departure cascade with event-driven depletion)\n\
-     \u{20}              --name jog|churn8|bursty8|cascade8, --seed S, --until T\n\
+     \u{20}              --name jog|churn8|bursty8|cascade8, --seed S, --until T,\n\
+     \u{20}              --json (machine-readable session report)\n\
      serve          streaming serving on real worker threads\n\
      \u{20}              --scenario jog|churn8|bursty8|cascade8: live session on the\n\
      \u{20}              virtual-time engine (stock toolchain) with mid-run\n\
@@ -87,10 +90,17 @@ fn usage() -> String {
      \u{20}              cache hit rate, and a determinism fingerprint\n\
      \u{20}              --users N, --seed-range A..B, --workers W (0=auto),\n\
      \u{20}              --beam W, --fleet-mix mixed|fleet4|fleet8|hetero,\n\
-     \u{20}              --no-cache (baseline: every user replans alone)\n\
+     \u{20}              --no-cache (baseline: every user replans alone),\n\
+     \u{20}              --json (machine-readable report), --trace-user S\n\
+     \u{20}              (flight-record user seed S; --out FILE writes the\n\
+     \u{20}              Chrome trace)\n\
      zoo            print the Table I model zoo\n\
      trace          --workload 1..4 [--runs N]: per-unit utilization +\n\
-     \u{20}              task timeline of the deployed plan\n\
+     \u{20}              task timeline of the deployed plan; or\n\
+     \u{20}              --scenario jog|churn8|bursty8|cascade8 [--serve]\n\
+     \u{20}              [--out FILE]: flight-record the live session and\n\
+     \u{20}              export Chrome/Perfetto trace-event JSON (load at\n\
+     \u{20}              ui.perfetto.dev)\n\
      list           list experiment ids\n"
         .to_string()
 }
@@ -277,7 +287,14 @@ fn cmd_scenario(args: &Args) -> i32 {
             return 1;
         }
     };
-    print_session_report(&format!("scenario {name:?}"), &report);
+    if args.flag("json") {
+        println!(
+            "{}",
+            synergy::obs::export::session_report_json(&report).to_string_pretty()
+        );
+    } else {
+        print_session_report(&format!("scenario {name:?}"), &report);
+    }
     0
 }
 
@@ -355,6 +372,16 @@ fn cmd_population(args: &Args) -> i32 {
             }
         },
     };
+    let trace_user = match args.opt("trace-user") {
+        None => None,
+        Some(s) => match s.parse::<u64>() {
+            Ok(seed) => Some(seed),
+            Err(_) => {
+                eprintln!("--trace-user takes a user seed (integer), got {s:?}");
+                return 2;
+            }
+        },
+    };
     let cfg = PopulationCfg {
         users,
         seed_lo,
@@ -363,6 +390,7 @@ fn cmd_population(args: &Args) -> i32 {
         beam: args.opt_parse("beam", synergy::plan::DEFAULT_BEAM_WIDTH),
         shared_cache: !args.flag("no-cache"),
         mix,
+        trace_user,
         ..PopulationCfg::default()
     };
 
@@ -375,6 +403,43 @@ fn cmd_population(args: &Args) -> i32 {
         }
     };
     let wall = t0.elapsed().as_secs_f64();
+
+    // Flight-recorded user: export the Chrome trace before the summary so
+    // `--trace-user S --out FILE` composes with both output modes.
+    if let Some(rec) = &report.trace {
+        let chrome = synergy::obs::to_chrome_json(rec);
+        match args.opt("out") {
+            Some(path) => {
+                if let Err(e) = std::fs::write(path, &chrome) {
+                    eprintln!("failed to write {path}: {e}");
+                    return 1;
+                }
+                eprintln!(
+                    "trace: user {} — {} events → {path}",
+                    trace_user.unwrap_or_default(),
+                    rec.len()
+                );
+            }
+            None => eprintln!(
+                "trace: user {} — {} events recorded (pass --out FILE to export)",
+                trace_user.unwrap_or_default(),
+                rec.len()
+            ),
+        }
+    } else if trace_user.is_some() {
+        eprintln!(
+            "note: --trace-user {} matched no sampled user seed",
+            trace_user.unwrap_or_default()
+        );
+    }
+
+    if args.flag("json") {
+        println!(
+            "{}",
+            synergy::obs::export::population_report_json(&report).to_string_pretty()
+        );
+        return 0;
+    }
 
     println!(
         "population — {} users (seeds {}..{}), {} workers, {:.2} s wall ({:.0} users/s)",
@@ -658,6 +723,16 @@ fn cmd_explain(args: &Args) -> i32 {
             return 1;
         }
     };
+    if args.flag("json") {
+        println!(
+            "{}",
+            synergy::obs::export::capacity_report_json(&report).to_string_pretty()
+        );
+        return match report.check() {
+            Ok(()) => 0,
+            Err(_) => 1,
+        };
+    }
     println!("{} — static capacity analysis:", w.name);
     for ep in &plan.plans {
         println!("  {ep}");
@@ -912,11 +987,66 @@ fn cmd_serve_pjrt(args: &Args) -> i32 {
     }
 }
 
+/// Flight-record a canned scenario session and export the recording as
+/// Chrome/Perfetto trace-event JSON: one track per (device, unit), instant
+/// markers for plan switches, counter tracks for power/battery/in-flight
+/// rounds. `--serve` re-seats the session on the streaming engine so the
+/// per-worker busy lanes land in the trace too.
+fn cmd_trace_scenario(name: &str, args: &Args) -> i32 {
+    let (runtime, scenario, mut cfg) = match canned_runtime(name, args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    cfg.record_trace = true;
+    let session = match runtime.session_with(scenario, cfg).and_then(|s| {
+        if args.flag("serve") {
+            s.serve(synergy::serving::ServeCfg::default())
+        } else {
+            Ok(s)
+        }
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace failed to start: {e}");
+            return 1;
+        }
+    };
+    let traced = match session.finish_traced() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trace failed: {e}");
+            return 1;
+        }
+    };
+    let chrome = synergy::obs::to_chrome_json(&traced.recording);
+    eprintln!(
+        "scenario {name:?} — {} trace events over {:.1} s simulated ({} tracks); \
+         load the JSON at ui.perfetto.dev",
+        traced.recording.len(),
+        traced.report.duration,
+        traced.recording.tracks.len(),
+    );
+    match args.opt("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &chrome) {
+                eprintln!("failed to write {path}: {e}");
+                return 1;
+            }
+            eprintln!("wrote {path}");
+        }
+        None => println!("{chrome}"),
+    }
+    0
+}
+
 /// Per-unit utilization and a task timeline of a deployed workload — the
 /// diagnostic view of what adaptive task parallelization actually does on
 /// each computation unit (Fig. 12's story, measured).
 fn cmd_trace(args: &Args) -> i32 {
     use synergy::scheduler::{simulate, GroundTruth, SimConfig};
+    if let Some(name) = args.opt("scenario") {
+        return cmd_trace_scenario(name, args);
+    }
     // Strict parse: a typo must error, not silently trace Workload 1.
     let w = match args.opt("workload") {
         None => match workload::workload(1) {

@@ -1,0 +1,214 @@
+//! Machine-readable JSON forms of the crate's reports, for the `--json`
+//! CLI flags and external dashboards. Built on [`crate::util::json`], so
+//! output keys are sorted and byte-stable across reruns.
+//!
+//! Wall-clock annex figures keep their `_wall_` names here (consumers
+//! may want the overhead numbers); determinism comparisons should use
+//! the trace/metrics paths, which scrub the annex explicitly.
+
+use crate::analysis::CapacityReport;
+use crate::api::SessionReport;
+use crate::population::{Dist, PopulationReport};
+use crate::util::json::{obj, Json};
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn count(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn dist_json(d: &Dist) -> Json {
+    obj([
+        ("min", num(d.min)),
+        ("p50", num(d.p50)),
+        ("p95", num(d.p95)),
+        ("p99", num(d.p99)),
+        ("max", num(d.max)),
+        ("mean", num(d.mean)),
+    ])
+}
+
+/// `SessionReport` as JSON: whole-session aggregates, interval series,
+/// switch timeline, and QoS spans (the raw task trace stays out — that
+/// is what the Chrome exporter is for).
+pub fn session_report_json(r: &SessionReport) -> Json {
+    let intervals: Vec<Json> = r
+        .intervals
+        .iter()
+        .map(|iv| {
+            obj([
+                ("start", num(iv.start)),
+                ("end", num(iv.end)),
+                ("completions", count(iv.completions)),
+                ("throughput_hz", num(iv.throughput)),
+                ("avg_latency_s", num(iv.avg_latency_s)),
+                ("power_w", num(iv.power_w)),
+                (
+                    "battery_j",
+                    Json::Obj(
+                        iv.battery_j
+                            .iter()
+                            .map(|&(d, j)| (format!("d{}", d.0), num(j)))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let switches: Vec<Json> = r
+        .switches
+        .iter()
+        .map(|s| {
+            obj([
+                ("t", num(s.t)),
+                ("cause", Json::Str(s.cause.clone())),
+                ("apps", count(s.apps)),
+                ("incremental", Json::Bool(s.incremental)),
+                ("reused_apps", count(s.reused_apps)),
+                ("enumerated_apps", count(s.enumerated_apps)),
+                ("est_throughput_hz", num(s.est_throughput)),
+                ("replan_wall_s", num(s.replan_wall_s)),
+                ("rebind_wall_s", num(s.rebind_wall_s)),
+            ])
+        })
+        .collect();
+    let qos: Vec<Json> = r
+        .qos_spans
+        .iter()
+        .map(|q| {
+            obj([
+                ("app", count(q.app.0)),
+                ("name", Json::Str(q.name.clone())),
+                ("violation", Json::Str(q.violation.to_string())),
+                ("start", num(q.start)),
+                ("end", num(q.end)),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("duration_s", num(r.duration)),
+        ("completions", count(r.completions)),
+        ("throughput_hz", num(r.throughput)),
+        ("energy_j", num(r.energy_j)),
+        ("power_w", num(r.power_w)),
+        ("intervals", Json::Arr(intervals)),
+        ("switches", Json::Arr(switches)),
+        ("qos_spans", Json::Arr(qos)),
+    ];
+    if let Some(s) = &r.served {
+        fields.push((
+            "served",
+            obj([
+                ("executor", Json::Str(s.executor.into())),
+                ("admitted_rounds", count(s.admitted_rounds)),
+                ("completed_rounds", count(s.completed_rounds)),
+                ("rebinds", count(s.rebinds)),
+                ("workers", count(s.workers)),
+            ]),
+        ));
+    }
+    obj(fields)
+}
+
+/// `PopulationReport` as JSON: cohort distributions, cache counters, the
+/// fingerprint (hex, the bit-identity witness), and per-user rows.
+pub fn population_report_json(r: &PopulationReport) -> Json {
+    let outcomes: Vec<Json> = r
+        .outcomes
+        .iter()
+        .map(|u| {
+            obj([
+                ("seed", num(u.seed as f64)),
+                ("fleet", Json::Str(u.fleet_name.into())),
+                ("journey", Json::Str(u.journey.into())),
+                ("completions", count(u.completions)),
+                ("energy_j", num(u.energy_j)),
+                ("switches", count(u.switches)),
+                ("qos_violation_s", num(u.qos_violation_s)),
+                ("replan_wall_s", num(u.replan_wall_s)),
+                ("digest", Json::Str(format!("{:016x}", u.digest))),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("users", count(r.users)),
+        ("workers", count(r.workers)),
+        ("completions", dist_json(&r.completions)),
+        ("energy_j", dist_json(&r.energy_j)),
+        ("switches", dist_json(&r.switches)),
+        ("qos_violation_s", dist_json(&r.qos_violation_s)),
+        ("replan_wall_s", dist_json(&r.replan_wall_s)),
+        ("replan_wall_total_s", num(r.replan_wall_total_s)),
+        ("fingerprint", Json::Str(format!("{:016x}", r.fingerprint))),
+        ("outcomes", Json::Arr(outcomes)),
+        ("metrics", r.metrics.to_json()),
+    ];
+    if let Some(c) = &r.cache {
+        fields.push((
+            "cache",
+            obj([
+                ("lookups", num(c.lookups as f64)),
+                ("raw_hits", num(c.hits as f64)),
+                ("unique_signatures", count(c.unique_signatures)),
+                ("unique_plans", count(c.unique_plans)),
+                ("hit_rate", num(c.hit_rate())),
+            ]),
+        ));
+    }
+    obj(fields)
+}
+
+/// `CapacityReport` as JSON — the `synergy explain --json` payload.
+pub fn capacity_report_json(r: &CapacityReport) -> Json {
+    let units: Vec<Json> = r
+        .units
+        .iter()
+        .map(|u| {
+            obj([
+                ("device", count(u.device.0)),
+                ("unit", Json::Str(format!("{:?}", u.unit))),
+                ("busy_s", num(u.busy_s)),
+                ("utilization", num(u.utilization)),
+                ("demand_utilization", num(u.demand_utilization)),
+            ])
+        })
+        .collect();
+    let pipelines: Vec<Json> = r
+        .pipelines
+        .iter()
+        .map(|p| {
+            obj([
+                ("pipeline", count(p.pipeline.0)),
+                ("chain_latency_s", num(p.chain_latency_s)),
+                ("own_bottleneck_s", num(p.own_bottleneck_s)),
+                ("own_bottleneck_device", count(p.own_bottleneck_device.0)),
+                ("own_bottleneck_unit", Json::Str(format!("{:?}", p.own_bottleneck_unit))),
+                ("isolated_rate_hz", num(p.isolated_rate_hz)),
+                ("shared_rate_hz", num(p.shared_rate_hz)),
+                ("interference_s", num(p.interference_s)),
+                ("demand_hz", num(p.demand_hz)),
+                ("headroom_hz", num(p.headroom_hz)),
+            ])
+        })
+        .collect();
+    let bottleneck = match r.bottleneck {
+        Some((d, u, busy)) => obj([
+            ("device", count(d.0)),
+            ("unit", Json::Str(format!("{u:?}"))),
+            ("busy_s", num(busy)),
+        ]),
+        None => Json::Null,
+    };
+    obj([
+        ("units", Json::Arr(units)),
+        ("bottleneck", bottleneck),
+        ("round_period_s", num(r.round_period_s)),
+        ("critical_path_s", num(r.critical_path_s)),
+        ("throughput_hz", num(r.throughput_hz)),
+        ("throughput_sequential_hz", num(r.throughput_sequential_hz)),
+        ("pipelines", Json::Arr(pipelines)),
+        ("schedulable", Json::Bool(r.check().is_ok())),
+    ])
+}

@@ -1,0 +1,38 @@
+//! Observability: the flight recorder (§VII's temporal claims, made
+//! visible).
+//!
+//! Three pieces, all dependency-free:
+//!
+//! - [`sink`] — the [`TraceSink`] span/instant/counter API stamped in
+//!   **simulated** time, with a zero-cost [`NullSink`] and the in-memory
+//!   [`FlightRecording`]. Emission is post-hoc over deterministic
+//!   engine artifacts ([`emit`]), never live from worker threads, so a
+//!   recording is bit-identical across reruns and worker counts.
+//! - [`registry`] — [`MetricsRegistry`]: named atomic counters, gauges,
+//!   and histograms with deterministic [`MetricsSnapshot`]s. Wall-clock
+//!   and scheduling-dependent figures live under the `annex.` prefix
+//!   and are dropped by [`MetricsSnapshot::scrub_annex`] before
+//!   determinism comparisons.
+//! - [`perfetto`] / [`export`] — exporters: canonical Chrome
+//!   trace-event JSON (loads in [Perfetto](https://ui.perfetto.dev)),
+//!   a serde-free structural validator for CI, and flat JSON forms of
+//!   the session / population / capacity reports for `--json` CLI
+//!   output.
+//!
+//! Surfaces: `synergy trace --scenario cascade8 --out trace.json`,
+//! [`Session::finish_traced`](crate::api::Session::finish_traced), and
+//! [`PopulationCfg::trace_user`](crate::population::PopulationCfg).
+//!
+//! The xtask linter bans `std::time` in this module: every timestamp a
+//! sink sees is simulated or injected by the caller.
+
+pub mod emit;
+pub mod export;
+pub mod perfetto;
+pub mod registry;
+pub mod sink;
+
+pub use emit::{record_session, session_metrics};
+pub use perfetto::{to_chrome_json, validate_chrome_trace};
+pub use registry::{Counter, HistSummary, MetricsRegistry, MetricsSnapshot, ANNEX_PREFIX};
+pub use sink::{EventKind, FlightRecording, NullSink, TraceEvent, TraceSink, Track, TrackId};

@@ -1,0 +1,244 @@
+//! Chrome trace-event JSON export (the format Perfetto and
+//! `chrome://tracing` load) plus a serde-free structural validator.
+//!
+//! Mapping: each distinct track *process* becomes a Perfetto process
+//! (pid), each track a thread within it (tid), both announced with `"M"`
+//! metadata events. Spans serialize as complete `"X"` events, markers as
+//! thread-scoped `"i"` instants, counter samples as `"C"` events with
+//! `args.value`. Timestamps convert from simulated seconds to integer
+//! microseconds.
+//!
+//! Export is canonical: events are sorted by (track, kind, time, name,
+//! payload) before serialization, and the JSON builder emits sorted
+//! object keys. Two recordings of the same timeline therefore serialize
+//! to bit-identical bytes even when their emission interleavings differ
+//! — the property the determinism tests compare.
+
+use super::sink::{EventKind, FlightRecording, TraceEvent};
+use crate::util::json::{obj, Json};
+
+/// Convert simulated seconds to the integer microseconds Chrome traces
+/// use. Rounding keeps the serialized numbers exponent-free.
+fn us(t: f64) -> Json {
+    Json::Num((t * 1e6).round())
+}
+
+fn kind_rank(k: &EventKind) -> u8 {
+    match k {
+        EventKind::Span { .. } => 0,
+        EventKind::Instant => 1,
+        EventKind::Counter { .. } => 2,
+    }
+}
+
+fn payload(k: &EventKind) -> f64 {
+    match *k {
+        EventKind::Span { dur } => dur,
+        EventKind::Instant => 0.0,
+        EventKind::Counter { value } => value,
+    }
+}
+
+/// Serialize `rec` as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`), canonically ordered. Load the result in
+/// [Perfetto](https://ui.perfetto.dev) or `chrome://tracing`.
+pub fn to_chrome_json(rec: &FlightRecording) -> String {
+    // pid per distinct process name (first-appearance order), tid per
+    // track within its process. Perfetto treats 0 as "unset", so both
+    // are 1-based.
+    let mut processes: Vec<&str> = Vec::new();
+    let mut pid_of = Vec::with_capacity(rec.tracks.len());
+    let mut tid_of = Vec::with_capacity(rec.tracks.len());
+    for tr in &rec.tracks {
+        let pid = match processes.iter().position(|p| *p == tr.process) {
+            Some(i) => i,
+            None => {
+                processes.push(&tr.process);
+                processes.len() - 1
+            }
+        };
+        pid_of.push(pid + 1);
+        let tid = rec.tracks[..tid_of.len()]
+            .iter()
+            .filter(|t| t.process == tr.process)
+            .count();
+        tid_of.push(tid + 1);
+    }
+
+    let mut events: Vec<Json> = Vec::with_capacity(rec.events.len() + rec.tracks.len() + 1);
+    for (i, p) in processes.iter().enumerate() {
+        events.push(obj([
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("process_name".into())),
+            ("pid", Json::Num((i + 1) as f64)),
+            ("args", obj([("name", Json::Str((*p).into()))])),
+        ]));
+    }
+    for (i, tr) in rec.tracks.iter().enumerate() {
+        events.push(obj([
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(pid_of[i] as f64)),
+            ("tid", Json::Num(tid_of[i] as f64)),
+            ("args", obj([("name", Json::Str(tr.thread.clone()))])),
+        ]));
+    }
+
+    // Canonical event order: (track, kind, time, name, payload), with
+    // floats under total_cmp — the sort that makes export byte-stable.
+    let mut ordered: Vec<&TraceEvent> = rec.events.iter().collect();
+    ordered.sort_by(|a, b| {
+        (a.track.0, kind_rank(&a.kind))
+            .cmp(&(b.track.0, kind_rank(&b.kind)))
+            .then(a.t.total_cmp(&b.t))
+            .then_with(|| a.name.cmp(&b.name))
+            .then(payload(&a.kind).total_cmp(&payload(&b.kind)))
+    });
+    for ev in ordered {
+        let pid = Json::Num(pid_of[ev.track.0] as f64);
+        let tid = Json::Num(tid_of[ev.track.0] as f64);
+        let name = Json::Str(ev.name.clone());
+        events.push(match ev.kind {
+            EventKind::Span { dur } => obj([
+                ("ph", Json::Str("X".into())),
+                ("name", name),
+                ("pid", pid),
+                ("tid", tid),
+                ("ts", us(ev.t)),
+                ("dur", us(dur)),
+            ]),
+            EventKind::Instant => obj([
+                ("ph", Json::Str("i".into())),
+                ("s", Json::Str("t".into())),
+                ("name", name),
+                ("pid", pid),
+                ("tid", tid),
+                ("ts", us(ev.t)),
+            ]),
+            EventKind::Counter { value } => obj([
+                ("ph", Json::Str("C".into())),
+                ("name", name),
+                ("pid", pid),
+                ("tid", tid),
+                ("ts", us(ev.t)),
+                ("args", obj([("value", Json::Num(value))])),
+            ]),
+        });
+    }
+
+    obj([("traceEvents", Json::Arr(events))]).to_string_compact()
+}
+
+/// Structurally validate `text` as a Chrome trace-event document: a
+/// top-level `traceEvents` array whose members carry the fields each
+/// phase requires. Returns the number of events checked. Serde-free —
+/// this is what `xtask -- validate-trace` runs in CI against the
+/// `synergy trace` smoke output.
+pub fn validate_chrome_trace(text: &str) -> Result<usize, String> {
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing top-level \"traceEvents\" array".to_string())?;
+    for (i, ev) in events.iter().enumerate() {
+        let fail = |what: &str| Err(format!("traceEvents[{i}]: {what}"));
+        if ev.as_obj().is_none() {
+            return fail("not an object");
+        }
+        let Some(ph) = ev.get("ph").and_then(Json::as_str) else {
+            return fail("missing \"ph\"");
+        };
+        if ev.get("name").and_then(Json::as_str).is_none() {
+            return fail("missing \"name\"");
+        }
+        if ev.get("pid").and_then(Json::as_f64).is_none() {
+            return fail("missing numeric \"pid\"");
+        }
+        let has_tid = ev.get("tid").and_then(Json::as_f64).is_some();
+        let has_ts = ev.get("ts").and_then(Json::as_f64).is_some();
+        match ph {
+            "M" => {} // metadata: pid suffices (thread_name also has tid)
+            "X" => {
+                if !has_tid || !has_ts {
+                    return fail("\"X\" event needs numeric tid and ts");
+                }
+                match ev.get("dur").and_then(Json::as_f64) {
+                    Some(d) if d >= 0.0 => {}
+                    _ => return fail("\"X\" event needs non-negative \"dur\""),
+                }
+            }
+            "i" => {
+                if !has_tid || !has_ts {
+                    return fail("\"i\" event needs numeric tid and ts");
+                }
+                if ev.get("s").and_then(Json::as_str).is_none() {
+                    return fail("\"i\" event needs a scope \"s\"");
+                }
+            }
+            "C" => {
+                if !has_ts {
+                    return fail("\"C\" event needs numeric ts");
+                }
+                if ev.get("args").and_then(|a| a.get("value")).and_then(Json::as_f64).is_none() {
+                    return fail("\"C\" event needs args.value");
+                }
+            }
+            other => return Err(format!("traceEvents[{i}]: unknown phase {other:?}")),
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sink::TraceSink;
+
+    fn sample() -> FlightRecording {
+        let mut r = FlightRecording::new();
+        let cpu = r.track("d0", "Cpu");
+        let acc = r.track("d0", "Accel");
+        let sw = r.track("session", "switches");
+        r.span(cpu, "p0 sense", 0.0, 0.5);
+        r.span(acc, "p0 infer", 0.5, 1.25);
+        r.instant(sw, "plan-switch: device-joined", 2.0);
+        r.counter(sw, "power_w", 0.0, 0.125);
+        r
+    }
+
+    #[test]
+    fn export_validates_and_is_canonical_across_emission_order() {
+        let a = sample();
+        let json = to_chrome_json(&a);
+        assert_eq!(validate_chrome_trace(&json), Ok(4 + 2 + 3)); // events + procs + threads
+
+        // Same timeline, different emission interleaving → same bytes.
+        let mut b = FlightRecording::new();
+        let cpu = b.track("d0", "Cpu");
+        let acc = b.track("d0", "Accel");
+        let sw = b.track("session", "switches");
+        b.counter(sw, "power_w", 0.0, 0.125);
+        b.instant(sw, "plan-switch: device-joined", 2.0);
+        b.span(acc, "p0 infer", 0.5, 1.25);
+        b.span(cpu, "p0 sense", 0.0, 0.5);
+        assert_eq!(json, to_chrome_json(&b));
+    }
+
+    #[test]
+    fn timestamps_are_integer_microseconds() {
+        let json = to_chrome_json(&sample());
+        assert!(json.contains("\"ts\":500000"), "{json}");
+        assert!(json.contains("\"dur\":750000"), "{json}");
+        assert!(json.contains("\"ts\":2000000"), "{json}");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("[]").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\": [{\"ph\": \"X\"}]}").is_err());
+        let neg_dur = "{\"traceEvents\": [{\"ph\":\"X\",\"name\":\"x\",\"pid\":1,\
+                        \"tid\":1,\"ts\":0,\"dur\":-1}]}";
+        assert!(validate_chrome_trace(neg_dur).is_err());
+        assert_eq!(validate_chrome_trace("{\"traceEvents\": []}"), Ok(0));
+    }
+}

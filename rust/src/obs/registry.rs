@@ -1,0 +1,285 @@
+//! The metrics registry: named counters, gauges, and histograms with
+//! deterministic snapshots.
+//!
+//! Counters are atomics so concurrent emitters (population workers, the
+//! shared plan cache) can bump them without a lock; everything else sits
+//! behind a mutex. Snapshots iterate `BTreeMap`s, so serialization order
+//! is fixed regardless of registration order.
+//!
+//! Names under the `annex.` prefix are *wall-clock annex* figures —
+//! useful for overhead accounting but scheduling-dependent (raw cache
+//! hits, replan wall seconds). [`MetricsSnapshot::scrub_annex`] drops
+//! them, and everything that remains is bit-identical across reruns and
+//! worker counts. Determinism tests scrub before comparing.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::util::json::{obj, Json};
+use crate::util::stats;
+
+/// Name prefix for scheduling-dependent figures (wall-clock readings,
+/// raw racy counts). Scrubbed before determinism comparisons.
+pub const ANNEX_PREFIX: &str = "annex.";
+
+/// A monotonically increasing atomic counter. Handed out as
+/// `Arc<Counter>` so hot paths bump it without touching the registry
+/// lock (the shared plan cache's raw hit count lives in one of these).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Vec<f64>>,
+}
+
+/// Registry of named metrics. Cheap to create per session or per cohort;
+/// there is deliberately no global instance — a process-wide registry
+/// would entangle parallel population runs and break per-user
+/// determinism.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    /// Fresh, empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // Metric state stays valid across a panicking holder; recover
+        // rather than poisoning every later snapshot.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register (or fetch) the counter called `name`. The returned arc
+    /// can be bumped from any thread without re-entering the registry.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.lock();
+        if let Some(c) = g.counters.get(name) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(Counter::default());
+        g.counters.insert(name.to_string(), Arc::clone(&c));
+        c
+    }
+
+    /// Set the gauge `name` to `value` (last write wins).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.lock().gauges.insert(name.to_string(), value);
+    }
+
+    /// Append one observation to the histogram `name`.
+    pub fn observe(&self, name: &str, value: f64) {
+        self.lock().hists.entry(name.to_string()).or_default().push(value);
+    }
+
+    /// Deterministic point-in-time snapshot (sorted names, summarized
+    /// histograms).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.lock();
+        MetricsSnapshot {
+            counters: g.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+            gauges: g.gauges.clone(),
+            hists: g.hists.iter().map(|(k, v)| (k.clone(), HistSummary::of(v))).collect(),
+        }
+    }
+}
+
+/// Five-number summary of a histogram at snapshot time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistSummary {
+    /// Number of observations.
+    pub count: usize,
+    /// Sum of observations.
+    pub sum: f64,
+    /// Smallest observation (0 when empty).
+    pub min: f64,
+    /// Largest observation (0 when empty).
+    pub max: f64,
+    /// Median (linear interpolation).
+    pub p50: f64,
+    /// 95th percentile (linear interpolation).
+    pub p95: f64,
+}
+
+impl HistSummary {
+    /// Summarize `xs` (all-zero summary for empty input).
+    pub fn of(xs: &[f64]) -> HistSummary {
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+        }
+        HistSummary {
+            count: xs.len(),
+            sum: xs.iter().sum(),
+            min: if xs.is_empty() { 0.0 } else { min },
+            max: if xs.is_empty() { 0.0 } else { max },
+            p50: stats::percentile(xs, 50.0),
+            p95: stats::percentile(xs, 95.0),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        obj([
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+        ])
+    }
+}
+
+/// Frozen copy of a registry: sorted name → value maps, safe to compare,
+/// diff, and serialize. Produced by [`MetricsRegistry::snapshot`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values by name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram summaries by name.
+    pub hists: BTreeMap<String, HistSummary>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value by name, if registered.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    /// Gauge value by name, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Drop every metric under the [`ANNEX_PREFIX`] — the wall-clock /
+    /// scheduling-dependent figures. What remains is deterministic.
+    pub fn scrub_annex(&mut self) {
+        self.counters.retain(|k, _| !k.starts_with(ANNEX_PREFIX));
+        self.gauges.retain(|k, _| !k.starts_with(ANNEX_PREFIX));
+        self.hists.retain(|k, _| !k.starts_with(ANNEX_PREFIX));
+    }
+
+    /// Add `other`'s counters into `self` (missing names are created).
+    /// Counters only: cohort aggregation re-observes raw values for
+    /// gauges and histograms instead of merging summaries.
+    pub fn absorb_counters(&mut self, other: &MetricsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    /// Flat JSON form: `{"counters": {...}, "gauges": {...},
+    /// "histograms": {name: {count, sum, min, max, p50, p95}}}`.
+    pub fn to_json(&self) -> Json {
+        obj([
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect()),
+            ),
+            (
+                "histograms",
+                Json::Obj(self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_shared_and_snapshot_deterministically() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("planner.bound_cutoffs");
+        let b = reg.counter("planner.bound_cutoffs");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.snapshot().counter("planner.bound_cutoffs"), Some(3));
+
+        reg.set_gauge("session.energy_j", 1.5);
+        reg.observe("user.completions", 10.0);
+        reg.observe("user.completions", 20.0);
+        let s = reg.snapshot();
+        assert_eq!(s.gauge("session.energy_j"), Some(1.5));
+        let h = s.hists["user.completions"];
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 30.0);
+        assert_eq!(h.min, 10.0);
+        assert_eq!(h.max, 20.0);
+        assert_eq!(h.p50, 15.0);
+    }
+
+    #[test]
+    fn scrub_annex_drops_only_prefixed_names() {
+        let reg = MetricsRegistry::new();
+        reg.counter("plan_cache.lookups").add(5);
+        reg.counter("annex.plan_cache.raw_hits").add(3);
+        reg.set_gauge("annex.session.replan_wall_s", 0.01);
+        reg.set_gauge("session.energy_j", 2.0);
+        let mut s = reg.snapshot();
+        s.scrub_annex();
+        assert_eq!(s.counter("plan_cache.lookups"), Some(5));
+        assert_eq!(s.counter("annex.plan_cache.raw_hits"), None);
+        assert_eq!(s.gauge("annex.session.replan_wall_s"), None);
+        assert_eq!(s.gauge("session.energy_j"), Some(2.0));
+    }
+
+    #[test]
+    fn snapshot_json_is_stable_across_registration_order() {
+        let a = MetricsRegistry::new();
+        a.counter("b").inc();
+        a.counter("a").add(2);
+        let b = MetricsRegistry::new();
+        b.counter("a").add(2);
+        b.counter("b").inc();
+        assert_eq!(
+            a.snapshot().to_json().to_string_compact(),
+            b.snapshot().to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn empty_histogram_summarizes_to_zeros() {
+        let h = HistSummary::of(&[]);
+        assert_eq!(h.count, 0);
+        assert_eq!((h.min, h.max, h.p50, h.p95), (0.0, 0.0, 0.0, 0.0));
+    }
+}

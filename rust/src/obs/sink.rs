@@ -1,0 +1,209 @@
+//! The flight-recorder sink: spans, instants, and counter samples on
+//! named tracks, stamped in **simulated** time.
+//!
+//! Two implementations: [`NullSink`] (recording off — every method is a
+//! no-op and [`TraceSink::enabled`] returns `false`, so emission sites
+//! skip even their `format!` calls) and [`FlightRecording`] (an in-memory
+//! event buffer that the Chrome/Perfetto exporter serializes).
+//!
+//! Timestamps are seconds of simulated time, the same clock the DES and
+//! the serve-engine timeline run on. Wall-clock readings never enter a
+//! recording — the xtask linter bans `std::time` in this module outright
+//! — which is what makes traces bit-identical across reruns and worker
+//! counts.
+
+/// Handle to a (process, thread) track inside a sink. `TrackId(0)` is
+/// what [`NullSink`] hands out; a recording sink returns a stable index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrackId(pub(crate) usize);
+
+/// A named timeline: `process` groups tracks (a device, or the session
+/// itself), `thread` is the lane within it (a compute unit, "switches").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Track {
+    /// Coarse grouping — becomes the Perfetto process name.
+    pub process: String,
+    /// Lane within the group — becomes the Perfetto thread name.
+    pub thread: String,
+}
+
+/// What happened at [`TraceEvent::t`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// A duration: the event's `t` is the start, `dur` the length (s).
+    Span { dur: f64 },
+    /// A point marker (plan switch, battery depletion, epoch retire).
+    Instant,
+    /// A sampled value on a counter track (power_w, battery_j, inflight).
+    Counter { value: f64 },
+}
+
+/// One recorded event on one track, stamped in simulated seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Index into [`FlightRecording::tracks`].
+    pub track: TrackId,
+    /// Event label (span name, marker text, or counter series name).
+    pub name: String,
+    /// Simulated time in seconds (span start for [`EventKind::Span`]).
+    pub t: f64,
+    /// Span / instant / counter payload.
+    pub kind: EventKind,
+}
+
+/// Where emission sites write. All timestamps are simulated seconds;
+/// implementations must not consult any clock of their own.
+///
+/// Emission helpers check [`TraceSink::enabled`] before building names,
+/// so the disabled path performs no allocation at all (the zero-cost
+/// contract `tests/obs_zero_alloc.rs` pins).
+pub trait TraceSink {
+    /// `false` for the no-op sink: callers skip formatting entirely.
+    fn enabled(&self) -> bool;
+    /// Intern a (process, thread) track and return its handle.
+    fn track(&mut self, process: &str, thread: &str) -> TrackId;
+    /// Record a duration `[start, end]` on `track`.
+    fn span(&mut self, track: TrackId, name: &str, start: f64, end: f64);
+    /// Record a point marker at `t` on `track`.
+    fn instant(&mut self, track: TrackId, name: &str, t: f64);
+    /// Record a counter sample `value` at `t` on `track`.
+    fn counter(&mut self, track: TrackId, name: &str, t: f64, value: f64);
+}
+
+/// Recording disabled: every method is a no-op and `enabled()` is
+/// `false`. The zero-alloc bench and test gate this path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn track(&mut self, _process: &str, _thread: &str) -> TrackId {
+        TrackId(0)
+    }
+    fn span(&mut self, _track: TrackId, _name: &str, _start: f64, _end: f64) {}
+    fn instant(&mut self, _track: TrackId, _name: &str, _t: f64) {}
+    fn counter(&mut self, _track: TrackId, _name: &str, _t: f64, _value: f64) {}
+}
+
+/// In-memory recording: interned tracks plus the event stream, in
+/// emission order. The Chrome exporter canonicalizes ordering, so two
+/// recordings of the same timeline serialize identically even if their
+/// emission interleavings differ.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FlightRecording {
+    /// Interned tracks; [`TraceEvent::track`] indexes into this.
+    pub tracks: Vec<Track>,
+    /// Events in emission order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl FlightRecording {
+    /// Fresh, empty recording.
+    pub fn new() -> FlightRecording {
+        FlightRecording::default()
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// `true` when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The track an event of *this* recording was emitted on. Panics if
+    /// handed an event from a different recording (the handle is an
+    /// index).
+    pub fn track_of(&self, event: &TraceEvent) -> &Track {
+        &self.tracks[event.track.0]
+    }
+}
+
+impl TraceSink for FlightRecording {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn track(&mut self, process: &str, thread: &str) -> TrackId {
+        // Linear intern: track counts are tens (devices × units), and a
+        // scan avoids allocating a lookup key on repeat registration.
+        if let Some(i) = self
+            .tracks
+            .iter()
+            .position(|tr| tr.process == process && tr.thread == thread)
+        {
+            return TrackId(i);
+        }
+        self.tracks.push(Track { process: process.to_string(), thread: thread.to_string() });
+        TrackId(self.tracks.len() - 1)
+    }
+
+    fn span(&mut self, track: TrackId, name: &str, start: f64, end: f64) {
+        self.events.push(TraceEvent {
+            track,
+            name: name.to_string(),
+            t: start,
+            kind: EventKind::Span { dur: (end - start).max(0.0) },
+        });
+    }
+
+    fn instant(&mut self, track: TrackId, name: &str, t: f64) {
+        self.events.push(TraceEvent { track, name: name.to_string(), t, kind: EventKind::Instant });
+    }
+
+    fn counter(&mut self, track: TrackId, name: &str, t: f64, value: f64) {
+        self.events.push(TraceEvent {
+            track,
+            name: name.to_string(),
+            t,
+            kind: EventKind::Counter { value },
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled_and_inert() {
+        let mut s = NullSink;
+        assert!(!s.enabled());
+        let t = s.track("d0", "Cpu");
+        assert_eq!(t, TrackId(0));
+        s.span(t, "x", 0.0, 1.0);
+        s.instant(t, "x", 0.5);
+        s.counter(t, "x", 0.5, 1.0);
+    }
+
+    #[test]
+    fn recording_interns_tracks_and_keeps_emission_order() {
+        let mut r = FlightRecording::new();
+        let a = r.track("d0", "Cpu");
+        let b = r.track("d0", "Accel");
+        let a2 = r.track("d0", "Cpu");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(r.tracks.len(), 2);
+
+        r.span(a, "infer", 1.0, 2.5);
+        r.instant(b, "switch", 2.0);
+        r.counter(a, "power_w", 0.0, 0.25);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.events[0].kind, EventKind::Span { dur: 1.5 });
+        assert_eq!(r.events[1].kind, EventKind::Instant);
+        assert_eq!(r.events[2].kind, EventKind::Counter { value: 0.25 });
+    }
+
+    #[test]
+    fn negative_spans_clamp_to_zero_duration() {
+        let mut r = FlightRecording::new();
+        let t = r.track("d0", "Cpu");
+        r.span(t, "x", 2.0, 1.0);
+        assert_eq!(r.events[0].kind, EventKind::Span { dur: 0.0 });
+    }
+}

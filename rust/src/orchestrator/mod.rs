@@ -14,7 +14,7 @@ pub mod oracle;
 
 pub use objective::Objective;
 pub use priority::Priority;
-pub use progressive::{ProgressivePlanner, Synergy};
+pub use progressive::{PlannerCounters, ProgressivePlanner, Synergy};
 
 use crate::device::Fleet;
 use crate::pipeline::PipelineSpec;

@@ -41,6 +41,27 @@ pub struct ProgressivePlanner {
     /// effort; Fig. 9's 5 576× reduction claim) — interior mutability so
     /// `Planner::plan` can stay `&self`.
     pub candidates_scored: std::cell::Cell<u64>,
+    /// Cumulative search-effort counters across the planner's lifetime
+    /// (unlike [`Self::candidates_scored`], never reset per call) — the
+    /// flight recorder's planner metrics.
+    pub counters: PlannerCounters,
+}
+
+/// Cumulative bounded-search effort counters, `Cell`-backed so selection
+/// can stay `&self`. Deterministic for a fixed call history: the bounded
+/// search is single-threaded and its pruning decisions are pure. Not
+/// part of the cross-user plan signature ([`ProgressivePlanner::
+/// signature_token`] reads configuration only).
+#[derive(Clone, Debug, Default)]
+pub struct PlannerCounters {
+    /// Skeleton candidates that survived admission pruning and entered
+    /// endpoint assignment/scoring.
+    pub skeletons_considered: std::cell::Cell<u64>,
+    /// Skeletons dropped by QoS admission pruning before scoring.
+    pub admission_pruned: std::cell::Cell<u64>,
+    /// Times the optimistic-score bound ended a pipeline's candidate
+    /// scan early (branch-and-bound cutoffs).
+    pub bound_cutoffs: std::cell::Cell<u64>,
 }
 
 /// Synergy's default planner configuration.
@@ -84,6 +105,7 @@ impl ProgressivePlanner {
             cfg: PlannerCfg::default(),
             policy: Policy::atp(),
             candidates_scored: std::cell::Cell::new(0),
+            counters: PlannerCounters::default(),
         }
     }
 
@@ -264,6 +286,11 @@ impl ProgressivePlanner {
             } else {
                 skeletons.iter().collect()
             };
+            let c = &self.counters;
+            c.skeletons_considered
+                .set(c.skeletons_considered.get() + admitted.len() as u64);
+            c.admission_pruned
+                .set(c.admission_pruned.get() + (skeletons.len() - admitted.len()) as u64);
             let mut cand = ExecutionPlan {
                 pipeline: spec.id,
                 source_dev: sources[0],
@@ -277,6 +304,7 @@ impl ProgressivePlanner {
                         if self.objective.score_upper_bound(&accum, skel.chain_bound)
                             <= *best_score
                         {
+                            c.bound_cutoffs.set(c.bound_cutoffs.get() + 1);
                             break;
                         }
                     }
@@ -573,6 +601,44 @@ mod tests {
         // (the verifier owns the typed rejection).
         let hopeless = planner.select_admitted(&ps, &f, &vec![1e12; ps.len()]).unwrap();
         assert_eq!(hopeless, base);
+    }
+
+    #[test]
+    fn search_counters_accumulate_across_calls() {
+        let f = fleet(8);
+        let ps = pipes(&[ModelName::KWS, ModelName::SimpleNet]);
+        let planner = Synergy::planner_bounded(8);
+        planner.select(&ps, &f).unwrap();
+        let considered_once = planner.counters.skeletons_considered.get();
+        let cutoffs_once = planner.counters.bound_cutoffs.get();
+        assert!(considered_once > 0);
+        // No floors → nothing admission-pruned.
+        assert_eq!(planner.counters.admission_pruned.get(), 0);
+
+        // Cumulative (not reset per call, unlike candidates_scored).
+        planner.select(&ps, &f).unwrap();
+        assert_eq!(planner.counters.skeletons_considered.get(), 2 * considered_once);
+        assert_eq!(planner.counters.bound_cutoffs.get(), 2 * cutoffs_once);
+
+        // Under floors the two counters stay conservative: every skeleton
+        // lands in exactly one bucket, so considered + pruned tiles the
+        // candidate lists (one full pass per selection order attempted).
+        let lm = LatencyModel::new(&f);
+        let base = planner.select(&ps, &f).unwrap();
+        let tput = crate::estimator::estimate_plan(&base, &ps, &f, &lm).throughput;
+        let before_c = planner.counters.skeletons_considered.get();
+        let before_p = planner.counters.admission_pruned.get();
+        planner
+            .select_admitted(&ps, &f, &vec![tput / ps.len() as f64 * 0.5; ps.len()])
+            .unwrap();
+        let dc = planner.counters.skeletons_considered.get() - before_c;
+        let dp = planner.counters.admission_pruned.get() - before_p;
+        assert!(dc > 0, "a committed plan scored at least one skeleton");
+        assert_eq!(
+            (dc + dp) % considered_once,
+            0,
+            "considered ({dc}) + pruned ({dp}) must tile the skeleton lists"
+        );
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::analysis::SameTimePolicy;
 use crate::api::{
     GlobalPlanCache, PlanCacheStats, RuntimeError, SessionCfg, SessionReport, SynergyRuntime,
 };
+use crate::obs::{FlightRecording, MetricsRegistry, MetricsSnapshot};
 use crate::orchestrator::Synergy;
 use crate::plan::{FnvWriter, DEFAULT_BEAM_WIDTH};
 use crate::util::stats::{mean, percentile};
@@ -57,6 +58,12 @@ pub struct PopulationCfg {
     pub shared_cache: bool,
     /// Which fleets the cohort draws from.
     pub mix: FleetMix,
+    /// Record a flight-recorder trace for the cohort member(s) sampled
+    /// with this seed (`None` = no tracing). When a narrow seed range
+    /// repeats the seed, the lowest user index wins. The recording is
+    /// emitted post-hoc from the user's deterministic report, so it is
+    /// bit-identical across worker counts.
+    pub trace_user: Option<u64>,
 }
 
 impl Default for PopulationCfg {
@@ -70,6 +77,7 @@ impl Default for PopulationCfg {
             same_time: SameTimePolicy::Deterministic,
             shared_cache: true,
             mix: FleetMix::Mixed,
+            trace_user: None,
         }
     }
 }
@@ -160,6 +168,14 @@ pub struct PopulationReport {
     pub fingerprint: u64,
     /// Per-user rows in user-index order.
     pub outcomes: Vec<UserOutcome>,
+    /// Aggregate metrics: per-user outcome histograms, cohort counters,
+    /// shared-cache counters, and the wall-clock annex (scrub with
+    /// [`MetricsSnapshot::scrub_annex`] before determinism comparisons).
+    pub metrics: MetricsSnapshot,
+    /// Flight recording of the [`PopulationCfg::trace_user`] member
+    /// (lowest user index when the seed repeats); `None` when tracing
+    /// was off or no user drew the seed.
+    pub trace: Option<FlightRecording>,
 }
 
 fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
@@ -209,7 +225,7 @@ fn run_user(
     seed: u64,
     cfg: &PopulationCfg,
     cache: Option<&Arc<GlobalPlanCache>>,
-) -> Result<UserOutcome, RuntimeError> {
+) -> Result<(UserOutcome, Option<FlightRecording>), RuntimeError> {
     let user = sample_user(seed, cfg.mix);
     let mut builder = SynergyRuntime::builder()
         .fleet(user.fleet)
@@ -218,16 +234,23 @@ fn run_user(
         builder = builder.shared_plan_cache(c.clone());
     }
     let runtime = builder.build();
+    let traced = cfg.trace_user == Some(seed);
     let session = runtime.session_with(
         user.scenario,
         SessionCfg {
             seed,
             same_time: cfg.same_time,
+            record_trace: traced,
             ..SessionCfg::default()
         },
     )?;
-    let report = session.finish()?;
-    Ok(UserOutcome {
+    let (report, recording) = if traced {
+        let t = session.finish_traced()?;
+        (t.report, Some(t.recording))
+    } else {
+        (session.finish()?, None)
+    };
+    let outcome = UserOutcome {
         seed,
         fleet_name: user.fleet_name,
         journey: user.journey,
@@ -237,7 +260,8 @@ fn run_user(
         qos_violation_s: report.qos_spans.iter().map(|q| q.end - q.start).sum(),
         replan_wall_s: report.switches.iter().map(|s| s.replan_wall_s).sum(),
         digest: digest_report(seed, &report),
-    })
+    };
+    Ok((outcome, recording))
 }
 
 /// Run the whole population: sample each user from the seed range, drive
@@ -286,8 +310,8 @@ pub fn run_population(cfg: &PopulationCfg) -> Result<PopulationReport, RuntimeEr
     // Bounded pool over an atomic work dispenser: workers pull the next
     // user index, so any pool size covers every user exactly once.
     let next = AtomicUsize::new(0);
-    let rows: Mutex<Vec<(usize, Result<UserOutcome, RuntimeError>)>> =
-        Mutex::new(Vec::with_capacity(cfg.users));
+    type Row = (usize, Result<(UserOutcome, Option<FlightRecording>), RuntimeError>);
+    let rows: Mutex<Vec<Row>> = Mutex::new(Vec::with_capacity(cfg.users));
     thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
@@ -307,8 +331,15 @@ pub fn run_population(cfg: &PopulationCfg) -> Result<PopulationReport, RuntimeEr
     rows.sort_by(|a, b| a.0.cmp(&b.0));
 
     let mut outcomes = Vec::with_capacity(cfg.users);
+    let mut trace = None;
     for (_, row) in rows {
-        outcomes.push(row?);
+        let (outcome, recording) = row?;
+        // Rows arrive index-sorted, so the first recording seen is the
+        // lowest-index user that drew the traced seed.
+        if trace.is_none() {
+            trace = recording;
+        }
+        outcomes.push(outcome);
     }
 
     use std::fmt::Write as _;
@@ -318,8 +349,48 @@ pub fn run_population(cfg: &PopulationCfg) -> Result<PopulationReport, RuntimeEr
         let _ = write!(fp, "{}:{:016x};", o.seed, o.digest);
         walls.push(o.replan_wall_s);
     }
+    // Aggregate metrics: per-user outcome histograms (deterministic —
+    // fed in user-index order), cohort counters, shared-cache counters,
+    // and the wall-clock annex.
+    let registry = MetricsRegistry::new();
+    registry.counter("population.users").add(cfg.users as u64);
+    registry.counter("population.workers").add(workers as u64);
+    for o in &outcomes {
+        registry.observe("user.completions", o.completions as f64);
+        registry.observe("user.energy_j", o.energy_j);
+        registry.observe("user.switches", o.switches as f64);
+        registry.observe("user.qos_violation_s", o.qos_violation_s);
+        registry.observe("annex.user.replan_wall_s", o.replan_wall_s);
+    }
+    registry.set_gauge("annex.population.replan_wall_total_s", walls.iter().sum());
+    let cache_stats = cache.as_ref().map(|c| c.stats());
+    if let Some(s) = &cache_stats {
+        registry.counter("plan_cache.lookups").add(s.lookups);
+        registry.counter("plan_cache.unique_signatures").add(s.unique_signatures as u64);
+        registry.counter("plan_cache.unique_plans").add(s.unique_plans as u64);
+        registry.set_gauge("plan_cache.hit_rate", s.hit_rate());
+    }
+    let mut metrics = registry.snapshot();
+    if let Some(c) = &cache {
+        // Pull the cache's own annex counters (the racy raw hit count).
+        metrics.absorb_counters(&c.metrics().snapshot());
+    }
+    Ok(finish_report(cfg, workers, outcomes, walls, cache_stats, fp.finish(), metrics, trace))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish_report(
+    cfg: &PopulationCfg,
+    workers: usize,
+    outcomes: Vec<UserOutcome>,
+    walls: Vec<f64>,
+    cache: Option<PlanCacheStats>,
+    fingerprint: u64,
+    metrics: MetricsSnapshot,
+    trace: Option<FlightRecording>,
+) -> PopulationReport {
     let per_user = |f: fn(&UserOutcome) -> f64| -> Vec<f64> { outcomes.iter().map(f).collect() };
-    Ok(PopulationReport {
+    PopulationReport {
         users: cfg.users,
         workers,
         completions: Dist::of(&per_user(|o| o.completions as f64)),
@@ -328,10 +399,12 @@ pub fn run_population(cfg: &PopulationCfg) -> Result<PopulationReport, RuntimeEr
         qos_violation_s: Dist::of(&per_user(|o| o.qos_violation_s)),
         replan_wall_s: Dist::of(&walls),
         replan_wall_total_s: walls.iter().sum(),
-        cache: cache.map(|c| c.stats()),
-        fingerprint: fp.finish(),
+        cache,
+        fingerprint,
         outcomes,
-    })
+        metrics,
+        trace,
+    }
 }
 
 #[cfg(test)]

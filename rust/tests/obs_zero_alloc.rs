@@ -1,0 +1,79 @@
+//! The zero-cost-when-disabled contract, enforced at the allocator: a
+//! full `record_session` walk of a finished mixed8 session report through
+//! a [`synergy::obs::NullSink`] must perform **zero** heap allocations.
+//! Every emission helper checks `sink.enabled()` before building any
+//! event name, so the disabled path is a branch per call and nothing
+//! else.
+//!
+//! This lives in its own integration-test binary because the counting
+//! `#[global_allocator]` is process-wide: any concurrently running test
+//! would pollute the delta. One test, one thread, exact count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use synergy::api::{Scenario, SessionCfg, SynergyRuntime};
+use synergy::obs::{self, NullSink};
+use synergy::orchestrator::Synergy;
+use synergy::workload::{fleet8, workload_mixed8};
+
+/// System allocator with an allocation-event counter (alloc + realloc;
+/// frees don't matter for the zero-alloc claim).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_sink_emits_a_mixed8_session_without_allocating() {
+    // Build the report first — sessions allocate plenty, and that's fine.
+    let fleet = fleet8();
+    let w = workload_mixed8(fleet.len());
+    let runtime = SynergyRuntime::builder()
+        .fleet(fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    for spec in w.pipelines {
+        runtime.register(spec).unwrap();
+    }
+    let cfg = SessionCfg { seed: 7, record_trace: true, ..SessionCfg::default() };
+    let report = runtime
+        .session_with(Scenario::new().until(4.0), cfg)
+        .unwrap()
+        .finish()
+        .unwrap();
+    assert!(report.completions > 0, "mixed8 session must do work");
+    assert!(report.trace.is_some(), "task trace must be armed");
+
+    // The measured section: the full emission walk through the no-op
+    // sink. Zero allocation events, exactly.
+    let mut sink = NullSink;
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    obs::record_session(&report, &[], &mut sink);
+    let after = ALLOC_EVENTS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled tracing allocated {} time(s) — an emission site is \
+         formatting before checking sink.enabled()",
+        after - before
+    );
+}

@@ -1,0 +1,218 @@
+//! Flight-recorder integration: deterministic traces (bit-identical
+//! Chrome JSON across reruns, population worker counts, and per same-time
+//! seed), sim-vs-serve agreement on the switch-marker timeline, and the
+//! machine-readable exports.
+//!
+//! Wall-clock figures never enter a recording (the `annex.` metrics carry
+//! them instead and are scrubbed before comparison), so every comparison
+//! here is on raw exported bytes.
+
+use synergy::analysis::SameTimePolicy;
+use synergy::api::{SessionCfg, SynergyRuntime, TracedReport};
+use synergy::obs::{self, validate_chrome_trace, EventKind, FlightRecording};
+use synergy::orchestrator::Synergy;
+use synergy::population::{run_population, PopulationCfg};
+use synergy::serving::ServeCfg;
+use synergy::util::json::Json;
+use synergy::workload::scenario_cascade8;
+
+/// One flight-recorded cascade8 session (task trace armed) on the chosen
+/// engine under the chosen same-time policy.
+fn traced_cascade8(serve: bool, same_time: SameTimePolicy) -> TracedReport {
+    let canned = scenario_cascade8();
+    let runtime = SynergyRuntime::builder()
+        .fleet(canned.fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    let cfg = SessionCfg { seed: 7, record_trace: true, same_time, ..SessionCfg::default() };
+    let session = runtime.session_with(canned.scenario, cfg).unwrap();
+    let session = if serve {
+        session.serve(ServeCfg { same_time, ..ServeCfg::default() }).unwrap()
+    } else {
+        session
+    };
+    session.finish_traced().unwrap()
+}
+
+/// The plan-switch instants on the session's `switches` track, in
+/// canonical order: `(bit-exact simulated time, marker text)`.
+fn switch_markers(rec: &FlightRecording) -> Vec<(u64, String)> {
+    let mut markers: Vec<(u64, String)> = rec
+        .events
+        .iter()
+        .filter(|e| {
+            let tr = rec.track_of(e);
+            tr.process == "session"
+                && tr.thread == "switches"
+                && matches!(e.kind, EventKind::Instant)
+        })
+        .map(|e| (e.t.to_bits(), e.name.clone()))
+        .collect();
+    markers.sort();
+    markers
+}
+
+/// Rerunning the same scenario yields byte-identical Chrome JSON on both
+/// engines, and the export passes the structural trace-event validator.
+#[test]
+fn cascade8_trace_is_bit_identical_across_reruns_and_validates() {
+    for serve in [false, true] {
+        let a = traced_cascade8(serve, SameTimePolicy::Deterministic);
+        let b = traced_cascade8(serve, SameTimePolicy::Deterministic);
+        assert!(!a.recording.is_empty(), "serve={serve}: empty recording");
+
+        let ja = obs::to_chrome_json(&a.recording);
+        let jb = obs::to_chrome_json(&b.recording);
+        assert_eq!(ja, jb, "serve={serve}: rerun produced different trace bytes");
+
+        let events = validate_chrome_trace(&ja)
+            .unwrap_or_else(|e| panic!("serve={serve}: invalid chrome trace: {e}"));
+        assert!(events > 0);
+
+        // cascade8's signature content is all present: switch markers,
+        // power counters, and battery state-of-charge counters.
+        assert!(!switch_markers(&a.recording).is_empty(), "serve={serve}");
+        assert!(ja.contains("power_w"), "serve={serve}");
+        assert!(ja.contains("battery_j"), "serve={serve}");
+        assert!(
+            ja.contains("battery-depleted"),
+            "serve={serve}: cascade8 must trace its depletion switches"
+        );
+
+        // Metrics agree too once the wall-clock annex is scrubbed.
+        let (mut ma, mut mb) = (a.metrics.clone(), b.metrics.clone());
+        ma.scrub_annex();
+        mb.scrub_annex();
+        assert_eq!(ma, mb, "serve={serve}");
+        assert!(ma.counter("session.completions").unwrap_or(0) > 0);
+        assert!(ma.counter("planner.skeletons_considered").unwrap_or(0) > 0);
+    }
+}
+
+/// Same-time perturbation: each seed names one fixed total order (traces
+/// rerun bit-identically under `Randomized` too), and the switch-marker
+/// timeline — the policy-invariant observable the race sweep pins — is
+/// byte-equal between the two policies.
+#[test]
+fn same_time_policies_keep_traces_deterministic_and_switches_invariant() {
+    let det = traced_cascade8(false, SameTimePolicy::Deterministic);
+    let rnd = traced_cascade8(false, SameTimePolicy::Randomized { seed: 11 });
+    let rnd2 = traced_cascade8(false, SameTimePolicy::Randomized { seed: 11 });
+
+    assert_eq!(
+        obs::to_chrome_json(&rnd.recording),
+        obs::to_chrome_json(&rnd2.recording),
+        "a same-time seed must name one fixed trace"
+    );
+    let det_markers = switch_markers(&det.recording);
+    assert!(!det_markers.is_empty());
+    assert_eq!(
+        det_markers,
+        switch_markers(&rnd.recording),
+        "tie-breaking must not move scripted switches or battery depletions"
+    );
+}
+
+/// The DES and the streaming engine trace the same switch-marker
+/// timeline for the same scenario: same instants (bit-exact), same cause
+/// labels, same app counts.
+#[test]
+fn sim_and_serve_traces_agree_on_the_switch_timeline() {
+    let sim = traced_cascade8(false, SameTimePolicy::Deterministic);
+    let srv = traced_cascade8(true, SameTimePolicy::Deterministic);
+    let sim_markers = switch_markers(&sim.recording);
+    assert!(!sim_markers.is_empty());
+    assert_eq!(sim_markers, switch_markers(&srv.recording));
+}
+
+/// `PopulationCfg::trace_user` flight-records one user without perturbing
+/// the cohort, and the recorded trace is byte-identical across reruns and
+/// worker-pool sizes (1, 4, 8) — the recorder only ever sees the
+/// deterministic per-user artifacts, never scheduling.
+#[test]
+fn population_trace_is_bit_identical_across_worker_counts() {
+    let base = PopulationCfg {
+        users: 4,
+        seed_lo: 0,
+        seed_hi: 4,
+        workers: 1,
+        trace_user: Some(2),
+        ..PopulationCfg::default()
+    };
+    let reference = run_population(&base).unwrap();
+    let ref_rec = reference.trace.as_ref().expect("trace_user=2 records user 2");
+    assert!(!ref_rec.is_empty());
+    let ref_json = obs::to_chrome_json(ref_rec);
+    validate_chrome_trace(&ref_json).expect("population trace validates");
+
+    let mut ref_metrics = reference.metrics.clone();
+    ref_metrics.scrub_annex();
+    assert_eq!(ref_metrics.counter("population.users"), Some(4));
+    assert!(ref_metrics.counter("plan_cache.lookups").unwrap_or(0) > 0);
+
+    for workers in [1usize, 4, 8] {
+        let r = run_population(&PopulationCfg { workers, ..base }).unwrap();
+        assert_eq!(reference.fingerprint, r.fingerprint, "workers {workers}");
+        let rec = r.trace.as_ref().expect("trace survives worker scaling");
+        assert_eq!(
+            ref_json,
+            obs::to_chrome_json(rec),
+            "workers {workers}: trace bytes diverged"
+        );
+        // Aggregated cohort metrics match too, once the wall-clock annex
+        // (raw racy cache hits, replan wall) is scrubbed. The worker
+        // count itself is reported, so align it before comparing.
+        let mut m = r.metrics.clone();
+        m.scrub_annex();
+        m.counters.insert("population.workers".to_string(), 1);
+        let mut expect = ref_metrics.clone();
+        expect.counters.insert("population.workers".to_string(), 1);
+        assert_eq!(expect, m, "workers {workers}");
+    }
+
+    // A seed outside the sampled range records nothing.
+    let none = run_population(&PopulationCfg { trace_user: Some(99), ..base }).unwrap();
+    assert!(none.trace.is_none());
+    assert_eq!(none.fingerprint, reference.fingerprint);
+}
+
+/// The machine-readable exports parse back through the in-crate JSON
+/// parser and carry the headline report fields.
+#[test]
+fn machine_readable_exports_roundtrip() {
+    let traced = traced_cascade8(true, SameTimePolicy::Deterministic);
+    let sess = Json::parse(
+        &obs::export::session_report_json(&traced.report).to_string_pretty(),
+    )
+    .expect("session json parses");
+    assert_eq!(
+        sess.get("completions").and_then(Json::as_usize),
+        Some(traced.report.completions)
+    );
+    assert_eq!(
+        sess.get("switches").and_then(Json::as_arr).map(|a| a.len()),
+        Some(traced.report.switches.len())
+    );
+    assert!(sess.get("served").is_some_and(|s| s.get("workers").is_some()));
+
+    let pop = run_population(&PopulationCfg {
+        users: 3,
+        seed_lo: 0,
+        seed_hi: 3,
+        workers: 1,
+        ..PopulationCfg::default()
+    })
+    .unwrap();
+    let pj = Json::parse(&obs::export::population_report_json(&pop).to_string_pretty())
+        .expect("population json parses");
+    assert_eq!(pj.get("users").and_then(Json::as_usize), Some(3));
+    assert_eq!(
+        pj.get("fingerprint").and_then(Json::as_str),
+        Some(format!("{:016x}", pop.fingerprint).as_str())
+    );
+    assert_eq!(
+        pj.get("outcomes").and_then(Json::as_arr).map(|a| a.len()),
+        Some(pop.outcomes.len())
+    );
+    assert!(pj.get("metrics").is_some_and(|m| m.get("counters").is_some()));
+}
