@@ -133,9 +133,27 @@ fn main() {
             .collect();
         let export = report(&format!("obs/chrome-export/cascade8-{engine}"), &mut export_samples);
 
+        // --- Blame: post-hoc critical-path extraction --------------------
+        // `synergy blame` reads a finished recording — reconstructing the
+        // task spans, extracting every round's critical path, and
+        // aggregating the report must stay a small share of the session
+        // that produced the recording.
+        let mut blame_samples: Vec<f64> = (0..iters)
+            .map(|_| {
+                time_once(&mut || {
+                    let b = obs::BlameReport::from_recording(&traced_report.recording)
+                        .expect("cascade8 recording parses");
+                    b.rounds
+                })
+            })
+            .collect();
+        let blame = report(&format!("obs/blame-extract/cascade8-{engine}"), &mut blame_samples);
+        let blame_share = blame / plain.max(1e-12);
+
         println!(
             "obs/{engine}: plain {} traced {} (+{:.2}%), nullsink emit {}/call \
-             ({:.4}% of session), export {} for {} events",
+             ({:.4}% of session), export {} for {} events, blame extract {} \
+             ({:.2}% of session)",
             fmt_duration(plain),
             fmt_duration(traced),
             enabled_share * 100.0,
@@ -143,6 +161,8 @@ fn main() {
             disabled_share * 100.0,
             fmt_duration(export),
             traced_report.recording.len(),
+            fmt_duration(blame),
+            blame_share * 100.0,
         );
 
         let disabled_name: &str = match engine {
@@ -153,10 +173,16 @@ fn main() {
             "sim" => "obs/enabled-overhead/sim",
             _ => "obs/enabled-overhead/serve",
         };
+        let blame_name: &str = match engine {
+            "sim" => "obs/blame-extract-share/sim",
+            _ => "obs/blame-extract-share/serve",
+        };
         gate_budget(&budgets, disabled_name, disabled_share);
         gate_budget(&budgets, enabled_name, enabled_share);
+        gate_budget(&budgets, blame_name, blame_share);
         measured.push((disabled_name, disabled_share));
         measured.push((enabled_name, enabled_share));
+        measured.push((blame_name, blame_share));
     }
 
     // --- Trajectory snapshot ---------------------------------------------

@@ -6,15 +6,49 @@
 //! cache + swapping the plan into the resumable DES) must be cheaper
 //! than the restart alternative (fresh runtime, re-registering every app
 //! with full plan enumeration, rebuilding the engine).
+//!
+//! The run writes its measured snapshot to `target/BENCH_session.json`;
+//! `cargo run --bin xtask -- bench-merge` folds it into the checked-in
+//! `benches/BENCH_session.json` trajectory (arming the regression
+//! windows).
 
 mod bench_harness;
 
 use bench_harness::{fmt_duration, report, time_once};
 use synergy::api::{Scenario, ScenarioAction, SynergyRuntime};
 use synergy::device::DeviceId;
+use synergy::util::json::Json;
 use synergy::workload::{fleet_n, workload};
 
+/// Check one measurement against its entry in `BENCH_session.json`: the
+/// hard `budget` always gates; the `max_delta_pct` window additionally
+/// gates once a nonzero `baseline` has been recorded (see bench-merge).
+fn gate_budget(budgets: &Json, name: &str, measured: f64) {
+    let metric = budgets
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .and_then(|ms| ms.iter().find(|m| m.get("name").and_then(Json::as_str) == Some(name)))
+        .unwrap_or_else(|| panic!("BENCH_session.json has no metric named {name}"));
+    let budget = metric.get("budget").and_then(Json::as_f64).unwrap();
+    let baseline = metric.get("baseline").and_then(Json::as_f64).unwrap_or(0.0);
+    let max_delta_pct = metric.get("max_delta_pct").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(
+        measured <= budget,
+        "{name}: measured {measured} over hard budget {budget}"
+    );
+    if baseline > 0.0 {
+        let ceiling = baseline * (1.0 + max_delta_pct / 100.0);
+        assert!(
+            measured <= ceiling,
+            "{name}: measured {measured} regressed past baseline {baseline} (+{max_delta_pct}%)"
+        );
+    }
+    println!("budget {name:<44} measured {measured:.3e} budget {budget:.3e}");
+}
+
 fn main() {
+    let budgets = Json::parse(include_str!("BENCH_session.json"))
+        .expect("benches/BENCH_session.json parses");
     let w = workload(1).unwrap();
     let iters = 15;
 
@@ -77,5 +111,24 @@ fn main() {
         fmt_duration(switch),
         fmt_duration(fresh)
     );
+    let ratio = switch / fresh.max(1e-12);
+    gate_budget(&budgets, "session/switch-vs-fresh/ratio", ratio);
+
+    // --- Trajectory snapshot ---------------------------------------------
+    // bench-merge folds this into benches/BENCH_session.json.
+    let snapshot = synergy::util::json::obj([
+        ("area", Json::Str("session".into())),
+        (
+            "measured",
+            Json::Obj(
+                [("session/switch-vs-fresh/ratio".to_string(), Json::Num(ratio))]
+                    .into_iter()
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/target/BENCH_session.json");
+    std::fs::write(out, snapshot.to_string_pretty()).expect("write bench snapshot");
+    println!("snapshot written to {out}");
     println!("OK: mid-run plan switches beat session restarts");
 }

@@ -108,6 +108,14 @@ pub struct CapacityReport {
 }
 
 impl CapacityReport {
+    /// The bottleneck's (device, unit) key without the busy figure —
+    /// what measured-blame cross-validation
+    /// ([`BlameReport::agrees_with`](crate::obs::BlameReport::agrees_with))
+    /// compares against.
+    pub fn bottleneck_unit(&self) -> Option<(DeviceId, UnitKind)> {
+        self.bottleneck.map(|(d, u, _)| (d, u))
+    }
+
     /// First schedulability violation, in deterministic order: demand
     /// oversubscription of any unit (busiest first), then per-pipeline
     /// rate-floor infeasibility (plan order). `Ok` means the admitted

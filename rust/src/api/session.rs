@@ -78,7 +78,9 @@ use super::scenario::{Scenario, ScenarioAction, TimedAction};
 pub struct SessionCfg {
     /// Seed for the ground-truth jitter stream.
     pub seed: u64,
-    /// Record a full task trace into the report (simulator sessions).
+    /// Record a full task trace into the report — on both engines: the
+    /// DES keeps its execution trace, a served session reconstructs the
+    /// identical-schema trace from the engine's post-hoc task spans.
     pub record_trace: bool,
     /// Ring window over retained trace spans: keep only the most recent
     /// `n`, so hour-scale traced sessions stay bounded in memory.
@@ -221,8 +223,10 @@ pub struct SessionReport {
     pub switches: Vec<PlanSwitch>,
     /// QoS-violation spans.
     pub qos_spans: Vec<QosSpan>,
-    /// Full task trace when requested via [`SessionCfg::record_trace`]
-    /// (simulator sessions only).
+    /// Full task trace when requested via [`SessionCfg::record_trace`].
+    /// Both engines fill it with the same schema: the DES records spans
+    /// as it executes, a served session sorts the workers' post-hoc task
+    /// spans into chronological order at [`Session::finish`].
     pub trace: Option<Trace>,
     /// Streaming-engine summary when the session ran on
     /// [`Session::serve`].
@@ -390,6 +394,7 @@ pub struct Session {
     queue: VecDeque<TimedAction>,
     duration: f64,
     seed: u64,
+    record_trace: bool,
     trace_window: Option<usize>,
     /// The event-driven battery timeline (empty manager when the scenario
     /// declares none).
@@ -538,6 +543,7 @@ impl Session {
             queue,
             duration,
             seed: cfg.seed,
+            record_trace: cfg.record_trace,
             trace_window: cfg.trace_window,
             batteries,
             shadow,
@@ -690,7 +696,8 @@ impl Session {
     /// deterministic artifacts — never live from engine hot paths — so
     /// it is bit-identical across reruns and, for served sessions,
     /// across worker counts. Set [`SessionCfg::record_trace`] to include
-    /// per-(device, unit) task spans on simulator sessions.
+    /// per-(device, unit) task spans on either engine — the serve path
+    /// collects them post-hoc, never live from worker threads.
     pub fn finish_traced(self) -> Result<TracedReport, RuntimeError> {
         let shared = Arc::clone(&self.shared);
         let (report, serve_busy) = self.finish_inner()?;
@@ -733,6 +740,8 @@ impl Session {
         }
 
         let duration = self.duration;
+        let record_trace = self.record_trace;
+        let trace_window = self.trace_window;
         let bounds = std::mem::take(&mut self.bounds);
         let mut scratch = std::mem::take(&mut self.scratch);
         let sim_marks = std::mem::take(&mut self.energy_marks);
@@ -799,7 +808,27 @@ impl Session {
                     marks.push(replay.energy_at(b));
                 }
                 let energy_j = marks.last().copied().unwrap_or(0.0);
-                (completions, energy_j, None, Some(served), marks, outcome.busy)
+                let trace = if record_trace {
+                    // Same schema as the DES trace: chronological span
+                    // order, ties broken by the canonical task identity,
+                    // ring-windowed to the most recent `n` when capped.
+                    let mut task_spans = outcome.tasks.clone();
+                    task_spans.sort_by(|a, b| {
+                        a.start.total_cmp(&b.start).then_with(|| {
+                            (a.pipeline, a.run, a.seq).cmp(&(b.pipeline, b.run, b.seq))
+                        })
+                    });
+                    if let Some(cap) = trace_window {
+                        if task_spans.len() > cap {
+                            let overflow = task_spans.len() - cap;
+                            task_spans.drain(..overflow);
+                        }
+                    }
+                    Some(Trace { spans: task_spans })
+                } else {
+                    None
+                };
+                (completions, energy_j, trace, Some(served), marks, outcome.busy)
             }
         };
 

@@ -53,7 +53,7 @@ use std::path::{Path, PathBuf};
 /// Ratchet for rule 3: the number of `.unwrap()`/`.expect(` sites allowed
 /// in non-test code under `src/` (counting feature-gated files too). Only
 /// ever lower this — the lint prints the current count.
-const UNWRAP_BUDGET: usize = 70;
+const UNWRAP_BUDGET: usize = 68;
 
 /// Whitelist for rule 4: files allowed to read the wall clock in non-test
 /// code, with the number of permitted call sites. All are measurement

@@ -40,6 +40,8 @@ fn main() {
         Some("population") => cmd_population(&args),
         Some("zoo") => cmd_zoo(),
         Some("trace") => cmd_trace(&args),
+        Some("blame") => cmd_blame(&args),
+        Some("trace-diff") => cmd_trace_diff(&args),
         Some("list") => cmd_list(),
         _ => {
             eprint!("{}", usage());
@@ -50,7 +52,8 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: synergy <exp|plan|explain|scenario|serve|check|population|zoo|list> [options]\n\
+    "usage: synergy <exp|plan|explain|scenario|serve|check|population|blame|trace-diff|zoo|list> \
+     [options]\n\
      \n\
      exp <id|all>   reproduce a paper experiment (see `synergy list`)\n\
      \u{20}              --runs N (sim rounds), --seed S, --full (fig9 full sweep)\n\
@@ -91,9 +94,22 @@ fn usage() -> String {
      \u{20}              --users N, --seed-range A..B, --workers W (0=auto),\n\
      \u{20}              --beam W, --fleet-mix mixed|fleet4|fleet8|hetero,\n\
      \u{20}              --no-cache (baseline: every user replans alone),\n\
-     \u{20}              --json (machine-readable report), --trace-user S\n\
-     \u{20}              (flight-record user seed S; --out FILE writes the\n\
-     \u{20}              Chrome trace)\n\
+     \u{20}              --json (machine-readable report), --trace-user\n\
+     \u{20}              S|p50|p95|p99 (flight-record user seed S, or the\n\
+     \u{20}              user at that completions percentile, picked\n\
+     \u{20}              without perturbing the cohort fingerprint;\n\
+     \u{20}              --out FILE writes the Chrome trace)\n\
+     blame          measured critical-path attribution of a canned\n\
+     \u{20}              scenario: flight-record the session, reconstruct\n\
+     \u{20}              each round's critical path, and print where every\n\
+     \u{20}              nanosecond went (compute/radio/queue/pacing) plus\n\
+     \u{20}              the measured bottleneck unit\n\
+     \u{20}              --scenario jog|churn8|bursty8|cascade8, --serve\n\
+     \u{20}              (streaming engine), --seed S, --until T, --json\n\
+     trace-diff     A.json B.json: structural diff of two exported Chrome\n\
+     \u{20}              traces — ranked per-track deltas and per-pipeline\n\
+     \u{20}              blame movement; exit 0 identical, 1 differences\n\
+     \u{20}              --json (machine-readable delta report)\n\
      zoo            print the Table I model zoo\n\
      trace          --workload 1..4 [--runs N]: per-unit utilization +\n\
      \u{20}              task timeline of the deployed plan; or\n\
@@ -340,7 +356,7 @@ fn cmd_serve_scenario(name: &str, args: &Args) -> i32 {
 /// through one shared planning service, and print the population-level
 /// distributions, cache effectiveness, and determinism fingerprint.
 fn cmd_population(args: &Args) -> i32 {
-    use synergy::population::{run_population, Dist, PopulationCfg};
+    use synergy::population::{run_population, Dist, Pctl, PopulationCfg};
     use synergy::workload::FleetMix;
 
     let users = args.opt_parse("users", 100usize);
@@ -372,16 +388,23 @@ fn cmd_population(args: &Args) -> i32 {
             }
         },
     };
-    let trace_user = match args.opt("trace-user") {
-        None => None,
-        Some(s) => match s.parse::<u64>() {
-            Ok(seed) => Some(seed),
-            Err(_) => {
-                eprintln!("--trace-user takes a user seed (integer), got {s:?}");
-                return 2;
-            }
-        },
-    };
+    let mut trace_user = None;
+    let mut trace_percentile = None;
+    if let Some(s) = args.opt("trace-user") {
+        match s.parse::<u64>() {
+            Ok(seed) => trace_user = Some(seed),
+            Err(_) => match s.parse::<Pctl>() {
+                Ok(p) => trace_percentile = Some(p),
+                Err(_) => {
+                    eprintln!(
+                        "--trace-user takes a user seed (integer) or a completions \
+                         percentile (p50, p95, p99), got {s:?}"
+                    );
+                    return 2;
+                }
+            },
+        }
+    }
     let cfg = PopulationCfg {
         users,
         seed_lo,
@@ -391,6 +414,7 @@ fn cmd_population(args: &Args) -> i32 {
         shared_cache: !args.flag("no-cache"),
         mix,
         trace_user,
+        trace_percentile,
         ..PopulationCfg::default()
     };
 
@@ -408,23 +432,28 @@ fn cmd_population(args: &Args) -> i32 {
     // `--trace-user S --out FILE` composes with both output modes.
     if let Some(rec) = &report.trace {
         let chrome = synergy::obs::to_chrome_json(rec);
+        let seed = report.traced_seed.unwrap_or_default();
         match args.opt("out") {
             Some(path) => {
                 if let Err(e) = std::fs::write(path, &chrome) {
                     eprintln!("failed to write {path}: {e}");
                     return 1;
                 }
-                eprintln!(
-                    "trace: user {} — {} events → {path}",
-                    trace_user.unwrap_or_default(),
-                    rec.len()
-                );
+                eprintln!("trace: user {seed} — {} events → {path}", rec.len());
             }
             None => eprintln!(
-                "trace: user {} — {} events recorded (pass --out FILE to export)",
-                trace_user.unwrap_or_default(),
+                "trace: user {seed} — {} events recorded (pass --out FILE to export)",
                 rec.len()
             ),
+        }
+        if let Some(b) = &report.blame {
+            match b.measured_bottleneck {
+                Some((d, u)) => eprintln!(
+                    "blame: user {seed} — {} rounds, measured bottleneck d{} {u:?}",
+                    b.rounds, d.0
+                ),
+                None => eprintln!("blame: user {seed} — no complete rounds to attribute"),
+            }
         }
     } else if trace_user.is_some() {
         eprintln!(
@@ -1037,6 +1066,181 @@ fn cmd_trace_scenario(name: &str, args: &Args) -> i32 {
         None => println!("{chrome}"),
     }
     0
+}
+
+/// `synergy blame` — measured critical-path attribution of a canned
+/// scenario: flight-record the session (sim engine, or the streaming
+/// engine with `--serve`), reconstruct each round's critical path from
+/// the recording, and print where every nanosecond of round latency
+/// went (compute / radio / queue / pacing) plus the measured bottleneck
+/// unit. Attribution is conservation-checked before printing: the four
+/// categories sum bit-exactly to each round's latency.
+fn cmd_blame(args: &Args) -> i32 {
+    let name = args.opt("scenario").unwrap_or("cascade8");
+    let (runtime, scenario, mut cfg) = match canned_runtime(name, args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    cfg.record_trace = true;
+    let session = match runtime.session_with(scenario, cfg).and_then(|s| {
+        if args.flag("serve") {
+            s.serve(synergy::serving::ServeCfg::default())
+        } else {
+            Ok(s)
+        }
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("blame failed to start: {e}");
+            return 1;
+        }
+    };
+    let traced = match session.finish_traced() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("blame failed: {e}");
+            return 1;
+        }
+    };
+    let blame = match synergy::obs::BlameReport::from_recording(&traced.recording) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("blame extraction failed: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = blame.check_conservation() {
+        eprintln!("blame conservation violated: {e}");
+        return 1;
+    }
+    if args.flag("json") {
+        println!(
+            "{}",
+            synergy::obs::export::blame_report_json(&blame).to_string_pretty()
+        );
+        return 0;
+    }
+    let engine = if args.flag("serve") { "streaming" } else { "sim" };
+    println!(
+        "scenario {name:?} ({engine} engine) — blame over {} rounds ({} incomplete dropped):\n",
+        blame.rounds, blame.incomplete_rounds
+    );
+    let secs = |ns: i64| synergy::util::fmt_secs(ns as f64 / 1e9);
+    let mut t = Table::new([
+        "pipeline", "rounds", "compute", "radio", "queue", "pacing", "mean latency", "dominant",
+    ]);
+    for p in &blame.pipelines {
+        t.row([
+            format!("p{}", p.pipeline),
+            p.rounds.to_string(),
+            secs(p.compute_ns),
+            secs(p.radio_ns),
+            secs(p.queue_ns),
+            secs(p.pacing_ns),
+            synergy::util::fmt_secs(p.mean_latency_s()),
+            p.dominant().to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nper-(device, unit) load on the critical path:");
+    let mut t = Table::new(["device/unit", "busy", "queue caused", "normalized busy"]);
+    for u in &blame.units {
+        t.row([
+            format!("d{} {:?}", u.device.0, u.unit),
+            secs(u.busy_ns),
+            secs(u.queue_caused_ns),
+            format!("{:.3} s/round", u.normalized_busy_s),
+        ]);
+    }
+    t.print();
+    match blame.measured_bottleneck {
+        Some((d, u)) => println!("\nmeasured bottleneck: d{} {u:?}", d.0),
+        None => println!("\nmeasured bottleneck: none (no complete rounds)"),
+    }
+    0
+}
+
+/// `synergy trace-diff A.json B.json` — structural diff of two exported
+/// Chrome traces: re-import both recordings, aggregate per
+/// (process, thread, name), and print the ranked deltas plus the
+/// per-pipeline blame movement. Exit 0 = identical, 1 = differences,
+/// 2 = usage or parse error.
+fn cmd_trace_diff(args: &Args) -> i32 {
+    let (Some(path_a), Some(path_b)) = (args.positionals.get(1), args.positionals.get(2)) else {
+        eprintln!("usage: synergy trace-diff A.json B.json [--json]");
+        return 2;
+    };
+    let load = |path: &str| -> Result<synergy::obs::FlightRecording, i32> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("failed to read {path}: {e}");
+                return Err(2);
+            }
+        };
+        match synergy::obs::recording_from_chrome_json(&text) {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                Err(2)
+            }
+        }
+    };
+    let a = match load(path_a) {
+        Ok(r) => r,
+        Err(code) => return code,
+    };
+    let b = match load(path_b) {
+        Ok(r) => r,
+        Err(code) => return code,
+    };
+    let diff = synergy::obs::diff_recordings(&a, &b);
+    if args.flag("json") {
+        println!(
+            "{}",
+            synergy::obs::export::trace_diff_json(&diff).to_string_pretty()
+        );
+        return if diff.is_empty() { 0 } else { 1 };
+    }
+    if diff.is_empty() {
+        println!("traces identical: {path_a} == {path_b}");
+        return 0;
+    }
+    println!(
+        "{} track deltas ({path_a} → {path_b}), largest first:\n",
+        diff.entries.len()
+    );
+    let mut t = Table::new(["track", "name", "kind", "count", "total", "delta"]);
+    for e in &diff.entries {
+        t.row([
+            format!("{}/{}", e.process, e.thread),
+            e.name.clone(),
+            e.kind.to_string(),
+            format!("{} → {}", e.count_a, e.count_b),
+            format!("{:.4} → {:.4}", e.total_a, e.total_b),
+            format!("{:+.4}", e.delta()),
+        ]);
+    }
+    t.print();
+    if !diff.pipelines.is_empty() {
+        println!("\nper-pipeline blame movement:");
+        let mut t = Table::new(["pipeline", "rounds", "mean latency", "delta", "moved"]);
+        for p in &diff.pipelines {
+            t.row([
+                format!("p{}", p.pipeline),
+                format!("{} → {}", p.rounds_a, p.rounds_b),
+                format!(
+                    "{} → {}",
+                    synergy::util::fmt_secs(p.mean_latency_a_s),
+                    synergy::util::fmt_secs(p.mean_latency_b_s)
+                ),
+                format!("{:+.4} s", p.delta_latency_s()),
+                p.moved.map(|c| c.to_string()).unwrap_or_else(|| "-".to_string()),
+            ]);
+        }
+        t.print();
+    }
+    1
 }
 
 /// Per-unit utilization and a task timeline of a deployed workload — the

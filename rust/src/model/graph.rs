@@ -67,9 +67,10 @@ impl ModelGraph {
         assert!(!layers.is_empty(), "model must have at least one layer");
         let mut shapes = Vec::with_capacity(layers.len() + 1);
         shapes.push(input);
+        let mut prev = input;
         for l in &layers {
-            let prev = *shapes.last().unwrap();
-            shapes.push(l.out_shape(prev));
+            prev = l.out_shape(prev);
+            shapes.push(prev);
         }
         let mut prefix_w = Vec::with_capacity(layers.len() + 1);
         let mut prefix_b = Vec::with_capacity(layers.len() + 1);
@@ -116,7 +117,8 @@ impl ModelGraph {
 
     /// Final output shape of the whole model.
     pub fn output(&self) -> Shape {
-        *self.shapes.last().unwrap()
+        // `shapes` holds layers.len() + 1 entries by construction.
+        self.shapes[self.layers.len()]
     }
 
     /// Output bytes of layer `l` (8-bit activations).

@@ -1,0 +1,328 @@
+//! Blame reports: aggregate per-round critical-path attributions
+//! ([`super::critical`]) into per-pipeline and per-(device, unit)
+//! stories, and name the *measured* bottleneck.
+//!
+//! The measured bottleneck uses the same normalization and tie rule as
+//! the static [`analyze_capacity`](crate::analysis::analyze_capacity)
+//! analysis: each lane's busy time is normalized per round of each
+//! pipeline that used it (`Σ_p busy_{p,lane} / rounds_p`), the busiest
+//! lane wins, and ties keep the lowest (device, unit) key. That makes
+//! [`BlameReport::agrees_with`] a meaningful cross-check — the static
+//! prediction and the measured trace must name the same unit, which
+//! `tests/blame_diff.rs` gates for every canned workload × fleet.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::critical::{extract_critical, tasks_from_recording};
+use super::sink::FlightRecording;
+use crate::analysis::CapacityReport;
+use crate::device::DeviceId;
+use crate::plan::UnitKind;
+use crate::scheduler::TaskSpan;
+
+/// Where a slice of round latency went. Declaration order is the
+/// tie-break order for [`PipelineBlame::dominant`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BlameCategory {
+    /// Non-radio task execution (Sense, Load, Infer, Unload, Interact).
+    Compute,
+    /// Tx/Rx task execution.
+    Radio,
+    /// Waiting for a (device, unit) lane that was busy with other work.
+    Queue,
+    /// Residual idle time: admission pacing, dependency slack.
+    Pacing,
+}
+
+impl BlameCategory {
+    /// All categories, in declaration (tie-break) order.
+    pub const ALL: [BlameCategory; 4] = [
+        BlameCategory::Compute,
+        BlameCategory::Radio,
+        BlameCategory::Queue,
+        BlameCategory::Pacing,
+    ];
+}
+
+impl fmt::Display for BlameCategory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BlameCategory::Compute => "compute",
+            BlameCategory::Radio => "radio",
+            BlameCategory::Queue => "queue",
+            BlameCategory::Pacing => "pacing",
+        })
+    }
+}
+
+/// One pipeline's latency attribution, summed over its complete rounds.
+/// The category totals partition `latency_ns` exactly, inheriting the
+/// per-round conservation invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineBlame {
+    pub pipeline: usize,
+    /// Complete rounds aggregated here.
+    pub rounds: usize,
+    pub compute_ns: i64,
+    pub radio_ns: i64,
+    pub queue_ns: i64,
+    pub pacing_ns: i64,
+    /// Total end-to-end latency over the aggregated rounds.
+    pub latency_ns: i64,
+}
+
+impl PipelineBlame {
+    /// Total nanoseconds attributed to `c`.
+    pub fn category_ns(&self, c: BlameCategory) -> i64 {
+        match c {
+            BlameCategory::Compute => self.compute_ns,
+            BlameCategory::Radio => self.radio_ns,
+            BlameCategory::Queue => self.queue_ns,
+            BlameCategory::Pacing => self.pacing_ns,
+        }
+    }
+
+    /// The category holding the most latency; ties keep the first in
+    /// [`BlameCategory::ALL`] order.
+    pub fn dominant(&self) -> BlameCategory {
+        let mut best = BlameCategory::Compute;
+        for c in BlameCategory::ALL {
+            if self.category_ns(c) > self.category_ns(best) {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Mean end-to-end round latency in seconds (0 when no rounds).
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.latency_ns as f64 / 1e9 / self.rounds as f64
+        }
+    }
+}
+
+/// One (device, unit) lane's measured load story.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UnitBlame {
+    pub device: DeviceId,
+    pub unit: UnitKind,
+    /// Task-execution time on this lane, over complete rounds.
+    pub busy_ns: i64,
+    /// How long rounds waited *for* this lane while it ran other work.
+    pub queue_caused_ns: i64,
+    /// Busy seconds normalized per round of each pipeline that used the
+    /// lane — the measured analogue of static per-round unit busy, and
+    /// the bottleneck ranking key.
+    pub normalized_busy_s: f64,
+}
+
+/// The aggregated blame story of one trace. All lists are sorted by
+/// their natural keys; building the report twice from equal traces
+/// yields equal reports (`tests/blame_diff.rs` pins this across
+/// engines, reruns, and worker counts).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct BlameReport {
+    /// Per-pipeline attributions, ordered by pipeline id.
+    pub pipelines: Vec<PipelineBlame>,
+    /// Per-lane load, ordered by (device, unit).
+    pub units: Vec<UnitBlame>,
+    /// Complete rounds aggregated across all pipelines.
+    pub rounds: usize,
+    /// Rounds skipped as truncated/unfinished.
+    pub incomplete_rounds: usize,
+    /// The measured bottleneck lane (highest normalized busy; ties keep
+    /// the lowest key — the same rule the static analysis uses). `None`
+    /// when the trace holds no complete round.
+    pub measured_bottleneck: Option<(DeviceId, UnitKind)>,
+}
+
+impl BlameReport {
+    /// Aggregate a task trace (either engine's) into a blame report.
+    pub fn from_spans(spans: &[TaskSpan]) -> BlameReport {
+        let cp = extract_critical(spans);
+
+        let mut pipelines: BTreeMap<usize, PipelineBlame> = BTreeMap::new();
+        for r in &cp.rounds {
+            let p = pipelines.entry(r.pipeline).or_insert(PipelineBlame {
+                pipeline: r.pipeline,
+                rounds: 0,
+                compute_ns: 0,
+                radio_ns: 0,
+                queue_ns: 0,
+                pacing_ns: 0,
+                latency_ns: 0,
+            });
+            p.rounds += 1;
+            p.compute_ns += r.compute_ns;
+            p.radio_ns += r.radio_ns;
+            p.queue_ns += r.queue_ns;
+            p.pacing_ns += r.pacing_ns;
+            p.latency_ns += r.latency_ns();
+        }
+        let rounds_of: BTreeMap<usize, usize> =
+            pipelines.values().map(|p| (p.pipeline, p.rounds)).collect();
+
+        let mut units: BTreeMap<(DeviceId, UnitKind), UnitBlame> = BTreeMap::new();
+        for b in &cp.busy_by_lane {
+            let u = units.entry((b.device, b.unit)).or_insert(UnitBlame {
+                device: b.device,
+                unit: b.unit,
+                busy_ns: 0,
+                queue_caused_ns: 0,
+                normalized_busy_s: 0.0,
+            });
+            u.busy_ns += b.busy_ns;
+            if let Some(&n) = rounds_of.get(&b.pipeline) {
+                if n > 0 {
+                    u.normalized_busy_s += b.busy_ns as f64 / 1e9 / n as f64;
+                }
+            }
+        }
+        for q in &cp.queue_by_lane {
+            if let Some(u) = units.get_mut(&(q.device, q.unit)) {
+                u.queue_caused_ns += q.queue_ns;
+            }
+        }
+
+        // Strict `>` keeps the first (lowest) lane key on ties — the
+        // fold analyze_capacity uses for its static bottleneck.
+        let mut bottleneck: Option<((DeviceId, UnitKind), f64)> = None;
+        for (&key, u) in &units {
+            bottleneck = match bottleneck {
+                Some((_, best)) if best >= u.normalized_busy_s => bottleneck,
+                _ => Some((key, u.normalized_busy_s)),
+            };
+        }
+
+        BlameReport {
+            rounds: cp.rounds.len(),
+            incomplete_rounds: cp.incomplete_rounds,
+            pipelines: pipelines.into_values().collect(),
+            units: units.into_values().collect(),
+            measured_bottleneck: bottleneck.map(|(key, _)| key),
+        }
+    }
+
+    /// Aggregate a flight recording's task spans — errors if the
+    /// recording's task-span labels do not parse.
+    pub fn from_recording(rec: &FlightRecording) -> Result<BlameReport, String> {
+        Ok(BlameReport::from_spans(&tasks_from_recording(rec)?))
+    }
+
+    /// `true` when the measured bottleneck names the same (device, unit)
+    /// as the static capacity analysis — the check that makes the
+    /// planner's predictions and the engines' traces argue.
+    pub fn agrees_with(&self, cap: &CapacityReport) -> bool {
+        self.measured_bottleneck == cap.bottleneck_unit()
+    }
+
+    /// Conservation check over every pipeline: attributed category
+    /// totals must equal total latency, bit-exactly. `Err` names the
+    /// first offending pipeline.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        for p in &self.pipelines {
+            let attributed = p.compute_ns + p.radio_ns + p.queue_ns + p.pacing_ns;
+            if attributed != p.latency_ns {
+                return Err(format!(
+                    "pipeline {}: attributed {} ns != latency {} ns",
+                    p.pipeline, attributed, p.latency_ns
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SplitRange;
+    use crate::plan::TaskKind;
+
+    fn task(
+        pipeline: usize,
+        run: usize,
+        seq: usize,
+        kind: TaskKind,
+        device: usize,
+        start: f64,
+        end: f64,
+    ) -> TaskSpan {
+        TaskSpan {
+            pipeline,
+            seq,
+            run,
+            device: DeviceId(device),
+            unit: kind.unit(),
+            kind,
+            start,
+            end,
+        }
+    }
+
+    fn contended() -> Vec<TaskSpan> {
+        vec![
+            task(0, 0, 0, TaskKind::Sense { bytes: 1 }, 0, 0.0, 0.1),
+            task(0, 0, 1, TaskKind::Infer { range: SplitRange::new(0, 1) }, 0, 0.1, 0.6),
+            task(0, 0, 2, TaskKind::Interact { bytes: 1 }, 0, 0.6, 0.7),
+            task(1, 0, 0, TaskKind::Sense { bytes: 1 }, 0, 0.0, 0.1),
+            task(1, 0, 1, TaskKind::Infer { range: SplitRange::new(0, 1) }, 0, 0.7, 1.2),
+            task(1, 0, 2, TaskKind::Interact { bytes: 1 }, 0, 1.2, 1.3),
+        ]
+    }
+
+    #[test]
+    fn report_aggregates_and_conserves() {
+        let r = BlameReport::from_spans(&contended());
+        assert_eq!(r.rounds, 2);
+        assert_eq!(r.incomplete_rounds, 0);
+        assert_eq!(r.pipelines.len(), 2);
+        r.check_conservation().unwrap();
+        assert_eq!(r.pipelines[0].dominant(), BlameCategory::Compute);
+        assert_eq!(r.pipelines[1].dominant(), BlameCategory::Compute);
+        assert_eq!(r.pipelines[1].queue_ns, 500_000_000);
+    }
+
+    #[test]
+    fn measured_bottleneck_is_the_contended_accel() {
+        let r = BlameReport::from_spans(&contended());
+        // Accel runs 1.0 s of infer across two 1-round pipelines; the
+        // Cpu and Sensor lanes carry far less.
+        assert_eq!(r.measured_bottleneck, Some((DeviceId(0), UnitKind::Accel)));
+        let accel = r
+            .units
+            .iter()
+            .find(|u| u.unit == UnitKind::Accel)
+            .expect("accel lane present");
+        assert_eq!(accel.busy_ns, 1_000_000_000);
+        assert_eq!(accel.queue_caused_ns, 500_000_000);
+        assert!((accel.normalized_busy_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_has_no_bottleneck() {
+        let r = BlameReport::from_spans(&[]);
+        assert_eq!(r.rounds, 0);
+        assert_eq!(r.measured_bottleneck, None);
+        assert!(r.pipelines.is_empty());
+        r.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn dominant_prefers_declaration_order_on_ties() {
+        let p = PipelineBlame {
+            pipeline: 0,
+            rounds: 1,
+            compute_ns: 5,
+            radio_ns: 5,
+            queue_ns: 5,
+            pacing_ns: 5,
+            latency_ns: 20,
+        };
+        assert_eq!(p.dominant(), BlameCategory::Compute);
+    }
+}

@@ -1,0 +1,446 @@
+//! Critical-path extraction: turn a task trace (or a [`FlightRecording`]
+//! of one) into per-round latency attributions.
+//!
+//! A pipeline round is its seq-ordered task chain; everything between
+//! the first task's start and the Interact task's end is the round's
+//! end-to-end latency. Every nanosecond of it lands in exactly one of
+//! four buckets:
+//!
+//! - **compute** — a non-radio task was running (Sense, Load, Infer,
+//!   Unload, Interact),
+//! - **radio** — a Tx/Rx task was running,
+//! - **queue** — the next task's (device, unit) lane was busy with some
+//!   *other* span during the gap before it started,
+//! - **pacing** — the residual: admission pacing, dependency slack, and
+//!   any idle air between tasks that no lane contention explains.
+//!
+//! Attribution works in integer nanoseconds ([`ns`]) and telescopes —
+//! task durations plus inter-task gaps sum to `end − start` exactly —
+//! so the conservation invariant `attributed_ns() == latency_ns()` holds
+//! bit-exactly on both engines, which `tests/blame_diff.rs` pins.
+//!
+//! Extraction is post-hoc: it reads a finished trace, never instruments
+//! a running engine.
+
+use std::collections::BTreeMap;
+
+use super::sink::{EventKind, FlightRecording};
+use crate::device::DeviceId;
+use crate::model::SplitRange;
+use crate::plan::{TaskKind, UnitKind};
+use crate::scheduler::TaskSpan;
+
+/// Simulated seconds to integer nanoseconds, the unit all attribution
+/// arithmetic runs in. Rounding (not truncation) keeps values that are
+/// exact in microseconds — e.g. Chrome-export roundtrips — exact here.
+pub fn ns(t: f64) -> i64 {
+    (t * 1e9).round() as i64
+}
+
+/// One complete round's latency attribution. The four category fields
+/// partition the round's latency exactly:
+/// `compute_ns + radio_ns + queue_ns + pacing_ns == end_ns - start_ns`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundBlame {
+    /// Pipeline the round belongs to.
+    pub pipeline: usize,
+    /// Round number within the pipeline.
+    pub run: usize,
+    /// First task's start, in integer nanoseconds.
+    pub start_ns: i64,
+    /// Interact task's end, in integer nanoseconds.
+    pub end_ns: i64,
+    /// Time a non-radio task of this round was executing.
+    pub compute_ns: i64,
+    /// Time a Tx/Rx task of this round was executing.
+    pub radio_ns: i64,
+    /// Gap time the next task's lane was occupied by another span.
+    pub queue_ns: i64,
+    /// Residual gap time (admission pacing, dependency slack).
+    pub pacing_ns: i64,
+}
+
+impl RoundBlame {
+    /// End-to-end round latency in nanoseconds.
+    pub fn latency_ns(&self) -> i64 {
+        self.end_ns - self.start_ns
+    }
+
+    /// Sum of the four attribution buckets — equals [`Self::latency_ns`]
+    /// by construction (the conservation invariant).
+    pub fn attributed_ns(&self) -> i64 {
+        self.compute_ns + self.radio_ns + self.queue_ns + self.pacing_ns
+    }
+}
+
+/// Queue-wait charged to one (device, unit) lane: how long complete
+/// rounds spent waiting for this unit while it ran other work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneQueue {
+    pub device: DeviceId,
+    pub unit: UnitKind,
+    /// Total queue-wait nanoseconds behind this lane.
+    pub queue_ns: i64,
+}
+
+/// Busy time one pipeline's complete rounds spent on one lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneBusy {
+    pub device: DeviceId,
+    pub unit: UnitKind,
+    pub pipeline: usize,
+    /// Total task-execution nanoseconds on this lane.
+    pub busy_ns: i64,
+}
+
+/// The extraction result: per-round attributions plus the per-lane
+/// aggregates blame reports build on. Lists are sorted by their natural
+/// keys, so equal traces extract to equal values.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct CriticalPath {
+    /// One entry per complete round, ordered by (pipeline, run).
+    pub rounds: Vec<RoundBlame>,
+    /// Rounds skipped because their task chain was truncated (trace
+    /// window, horizon cut) or never reached its Interact task.
+    pub incomplete_rounds: usize,
+    /// Queue-wait per lane, over complete rounds.
+    pub queue_by_lane: Vec<LaneQueue>,
+    /// Busy time per (lane, pipeline), over complete rounds.
+    pub busy_by_lane: Vec<LaneBusy>,
+}
+
+/// Total lane occupancy within `[a, b)` given the lane's spans sorted by
+/// start. Unit exclusivity keeps lane spans non-overlapping, so summing
+/// per-span overlaps never double-counts.
+fn occupied_within(spans: &[(i64, i64)], a: i64, b: i64) -> i64 {
+    // Only the last span starting before `a` can straddle it.
+    let mut i = spans.partition_point(|&(s, _)| s < a).saturating_sub(1);
+    let mut total = 0;
+    while i < spans.len() {
+        let (s, e) = spans[i];
+        if s >= b {
+            break;
+        }
+        total += (e.min(b) - s.max(a)).max(0);
+        i += 1;
+    }
+    total
+}
+
+/// Walk `spans` and attribute every complete round's latency. Rounds are
+/// grouped by (pipeline, run) and ordered by seq; a round is complete
+/// when its seqs are contiguous from 0 and end in an Interact task.
+pub fn extract_critical(spans: &[TaskSpan]) -> CriticalPath {
+    // Lane occupancy index: queue classification asks "was this unit
+    // busy during the gap before task i?".
+    let mut lanes: BTreeMap<(DeviceId, UnitKind), Vec<(i64, i64)>> = BTreeMap::new();
+    for s in spans {
+        lanes.entry((s.device, s.unit)).or_default().push((ns(s.start), ns(s.end)));
+    }
+    for v in lanes.values_mut() {
+        v.sort_unstable();
+    }
+
+    let mut rounds_by_key: BTreeMap<(usize, usize), Vec<&TaskSpan>> = BTreeMap::new();
+    for s in spans {
+        rounds_by_key.entry((s.pipeline, s.run)).or_default().push(s);
+    }
+
+    let mut out = CriticalPath::default();
+    let mut queue_by_lane: BTreeMap<(DeviceId, UnitKind), i64> = BTreeMap::new();
+    let mut busy_by_lane: BTreeMap<(DeviceId, UnitKind, usize), i64> = BTreeMap::new();
+    for ((pipeline, run), mut tasks) in rounds_by_key {
+        tasks.sort_by_key(|s| s.seq);
+        let contiguous = tasks.iter().enumerate().all(|(i, s)| s.seq == i);
+        let terminal = matches!(tasks.last().map(|s| s.kind), Some(TaskKind::Interact { .. }));
+        if !contiguous || !terminal {
+            out.incomplete_rounds += 1;
+            continue;
+        }
+
+        let start_ns = ns(tasks[0].start);
+        let mut blame = RoundBlame {
+            pipeline,
+            run,
+            start_ns,
+            end_ns: ns(tasks[tasks.len() - 1].end),
+            compute_ns: 0,
+            radio_ns: 0,
+            queue_ns: 0,
+            pacing_ns: 0,
+        };
+        let mut prev_end = start_ns;
+        for t in &tasks {
+            let (s, e) = (ns(t.start), ns(t.end));
+            let dur = e - s;
+            match t.kind {
+                TaskKind::Tx { .. } | TaskKind::Rx { .. } => blame.radio_ns += dur,
+                _ => blame.compute_ns += dur,
+            }
+            *busy_by_lane.entry((t.device, t.unit, pipeline)).or_insert(0) += dur;
+
+            let gap = s - prev_end;
+            if gap > 0 {
+                let occupied = lanes
+                    .get(&(t.device, t.unit))
+                    .map_or(0, |v| occupied_within(v, prev_end, s))
+                    .min(gap);
+                blame.queue_ns += occupied;
+                blame.pacing_ns += gap - occupied;
+                if occupied > 0 {
+                    *queue_by_lane.entry((t.device, t.unit)).or_insert(0) += occupied;
+                }
+            } else {
+                // A causality violation would surface as negative pacing
+                // instead of silently breaking conservation.
+                blame.pacing_ns += gap;
+            }
+            prev_end = e;
+        }
+        out.rounds.push(blame);
+    }
+
+    out.queue_by_lane = queue_by_lane
+        .into_iter()
+        .map(|((device, unit), queue_ns)| LaneQueue { device, unit, queue_ns })
+        .collect();
+    out.busy_by_lane = busy_by_lane
+        .into_iter()
+        .map(|((device, unit, pipeline), busy_ns)| LaneBusy { device, unit, pipeline, busy_ns })
+        .collect();
+    out
+}
+
+fn parse_device(process: &str) -> Option<DeviceId> {
+    process.strip_prefix('d')?.parse().ok().map(DeviceId)
+}
+
+fn parse_unit(thread: &str) -> Option<UnitKind> {
+    match thread {
+        "Sensor" => Some(UnitKind::Sensor),
+        "Cpu" => Some(UnitKind::Cpu),
+        "Accel" => Some(UnitKind::Accel),
+        "Radio" => Some(UnitKind::Radio),
+        _ => None,
+    }
+}
+
+/// Payload sizes are not in the recording, so reconstructed kinds carry
+/// zero bytes — attribution only looks at the kind's category.
+fn kind_from_label(label: &str) -> Option<TaskKind> {
+    Some(match label {
+        "sense" => TaskKind::Sense { bytes: 0 },
+        "load" => TaskKind::Load { bytes: 0 },
+        "infer" => TaskKind::Infer { range: SplitRange::new(0, 1) },
+        "unload" => TaskKind::Unload { bytes: 0 },
+        "tx" => TaskKind::Tx { bytes: 0, to: DeviceId(0) },
+        "rx" => TaskKind::Rx { bytes: 0, from: DeviceId(0) },
+        "interact" => TaskKind::Interact { bytes: 0 },
+        _ => return None,
+    })
+}
+
+/// `p<pipeline> <task> r<run> s<seq>`, the label
+/// [`record_task_spans`](super::emit::record_task_spans) writes.
+fn parse_task_name(name: &str) -> Option<(usize, TaskKind, usize, usize)> {
+    let mut it = name.split(' ');
+    let pipeline = it.next()?.strip_prefix('p')?.parse().ok()?;
+    let kind = kind_from_label(it.next()?)?;
+    let run = it.next()?.strip_prefix('r')?.parse().ok()?;
+    let seq = it.next()?.strip_prefix('s')?.parse().ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some((pipeline, kind, run, seq))
+}
+
+/// Reconstruct the task spans a recording holds: spans on `d<N>` /
+/// unit-named tracks whose labels parse as task identities. Busy-lane
+/// spans (bare unit labels on the same tracks), counters, instants, and
+/// session tracks are skipped; a `p`-prefixed label that fails to parse
+/// is an error — it means the emit format drifted.
+pub fn tasks_from_recording(rec: &FlightRecording) -> Result<Vec<TaskSpan>, String> {
+    let mut out = Vec::new();
+    for ev in &rec.events {
+        let EventKind::Span { dur } = ev.kind else {
+            continue;
+        };
+        let track = rec.track_of(ev);
+        let Some(device) = parse_device(&track.process) else {
+            continue;
+        };
+        let Some(unit) = parse_unit(&track.thread) else {
+            continue;
+        };
+        if !ev.name.starts_with('p') {
+            continue;
+        }
+        let (pipeline, kind, run, seq) = parse_task_name(&ev.name)
+            .ok_or_else(|| format!("malformed task-span label {:?}", ev.name))?;
+        out.push(TaskSpan {
+            pipeline,
+            seq,
+            run,
+            device,
+            unit,
+            kind,
+            start: ev.t,
+            end: ev.t + dur,
+        });
+    }
+    out.sort_by(|a, b| {
+        a.start
+            .total_cmp(&b.start)
+            .then_with(|| (a.pipeline, a.run, a.seq).cmp(&(b.pipeline, b.run, b.seq)))
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::emit::record_task_spans;
+    use crate::obs::sink::TraceSink;
+    use crate::scheduler::Trace;
+
+    fn task(
+        pipeline: usize,
+        run: usize,
+        seq: usize,
+        kind: TaskKind,
+        device: usize,
+        start: f64,
+        end: f64,
+    ) -> TaskSpan {
+        TaskSpan {
+            pipeline,
+            seq,
+            run,
+            device: DeviceId(device),
+            unit: kind.unit(),
+            kind,
+            start,
+            end,
+        }
+    }
+
+    /// Two pipelines contending for d0's Accel: p1's infer waits behind
+    /// p0's, and the wait classifies as queue, not pacing.
+    fn contended_spans() -> Vec<TaskSpan> {
+        vec![
+            task(0, 0, 0, TaskKind::Sense { bytes: 1 }, 0, 0.0, 0.1),
+            task(0, 0, 1, TaskKind::Infer { range: SplitRange::new(0, 1) }, 0, 0.1, 0.6),
+            task(0, 0, 2, TaskKind::Interact { bytes: 1 }, 0, 0.6, 0.7),
+            task(1, 0, 0, TaskKind::Sense { bytes: 1 }, 0, 0.0, 0.1),
+            // Waits 0.5 s for the Accel (queue), then 0.1 s of nothing
+            // (pacing), runs 0.7–1.2.
+            task(1, 0, 1, TaskKind::Infer { range: SplitRange::new(0, 1) }, 0, 0.7, 1.2),
+            task(1, 0, 2, TaskKind::Interact { bytes: 1 }, 0, 1.2, 1.3),
+        ]
+    }
+
+    #[test]
+    fn attribution_conserves_latency_bit_exactly() {
+        let cp = extract_critical(&contended_spans());
+        assert_eq!(cp.incomplete_rounds, 0);
+        assert_eq!(cp.rounds.len(), 2);
+        for r in &cp.rounds {
+            assert_eq!(r.attributed_ns(), r.latency_ns(), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn queue_wait_is_separated_from_pacing() {
+        let cp = extract_critical(&contended_spans());
+        let p1 = cp.rounds[1];
+        assert_eq!(p1.pipeline, 1);
+        // 0.1 sense + 0.5 infer + 0.1 interact compute; gap 0.1–0.7 is
+        // 0.5 queued behind p0's infer + 0.1 idle.
+        assert_eq!(p1.compute_ns, 700_000_000);
+        assert_eq!(p1.queue_ns, 500_000_000);
+        assert_eq!(p1.pacing_ns, 100_000_000);
+        assert_eq!(p1.radio_ns, 0);
+
+        let accel_queue: i64 = cp
+            .queue_by_lane
+            .iter()
+            .filter(|l| l.unit == UnitKind::Accel)
+            .map(|l| l.queue_ns)
+            .sum();
+        assert_eq!(accel_queue, 500_000_000);
+    }
+
+    #[test]
+    fn radio_tasks_bucket_separately() {
+        let spans = vec![
+            task(0, 0, 0, TaskKind::Sense { bytes: 1 }, 0, 0.0, 0.1),
+            task(0, 0, 1, TaskKind::Tx { bytes: 1, to: DeviceId(1) }, 0, 0.1, 0.3),
+            task(0, 0, 2, TaskKind::Rx { bytes: 1, from: DeviceId(0) }, 1, 0.3, 0.5),
+            task(0, 0, 3, TaskKind::Infer { range: SplitRange::new(0, 1) }, 1, 0.5, 0.7),
+            task(0, 0, 4, TaskKind::Interact { bytes: 1 }, 1, 0.7, 0.8),
+        ];
+        let cp = extract_critical(&spans);
+        assert_eq!(cp.rounds.len(), 1);
+        let r = cp.rounds[0];
+        assert_eq!(r.radio_ns, 400_000_000);
+        assert_eq!(r.compute_ns, 400_000_000);
+        assert_eq!(r.attributed_ns(), r.latency_ns());
+    }
+
+    #[test]
+    fn truncated_rounds_count_as_incomplete() {
+        let mut spans = contended_spans();
+        spans.remove(0); // p0 loses its seq-0 sense task.
+        let cp = extract_critical(&spans);
+        assert_eq!(cp.incomplete_rounds, 1);
+        assert_eq!(cp.rounds.len(), 1);
+        assert_eq!(cp.rounds[0].pipeline, 1);
+
+        // A round without its Interact terminal is incomplete too.
+        let open = vec![task(0, 0, 0, TaskKind::Sense { bytes: 1 }, 0, 0.0, 0.1)];
+        let cp = extract_critical(&open);
+        assert_eq!(cp.incomplete_rounds, 1);
+        assert!(cp.rounds.is_empty());
+    }
+
+    #[test]
+    fn recording_roundtrip_preserves_task_identity() {
+        let spans = contended_spans();
+        let mut rec = FlightRecording::new();
+        record_task_spans(&Trace { spans: spans.clone() }, &mut rec);
+        // Busy-lane noise on the same tracks must not confuse the parser.
+        let lane = rec.track("d0", "Accel");
+        rec.span(lane, "Accel", 0.1, 1.2);
+
+        let got = tasks_from_recording(&rec).unwrap();
+        assert_eq!(got.len(), spans.len());
+        let mut want = spans;
+        want.sort_by(|a, b| {
+            a.start
+                .total_cmp(&b.start)
+                .then_with(|| (a.pipeline, a.run, a.seq).cmp(&(b.pipeline, b.run, b.seq)))
+        });
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!((g.pipeline, g.run, g.seq), (w.pipeline, w.run, w.seq));
+            assert_eq!((g.device, g.unit), (w.device, w.unit));
+            assert_eq!(g.start.to_bits(), w.start.to_bits());
+            assert_eq!(g.end.to_bits(), w.end.to_bits());
+            assert_eq!(g.kind.unit(), w.kind.unit());
+        }
+
+        let malformed = {
+            let mut r = FlightRecording::new();
+            let t = r.track("d0", "Cpu");
+            r.span(t, "p0 sense", 0.0, 0.1); // pre-PR-10 label: no r/s.
+            r
+        };
+        assert!(tasks_from_recording(&malformed).is_err());
+    }
+
+    #[test]
+    fn ns_rounds_rather_than_truncates() {
+        assert_eq!(ns(0.1), 100_000_000);
+        assert_eq!(ns(0.3), 300_000_000);
+        assert_eq!(ns(1e-9), 1);
+    }
+}

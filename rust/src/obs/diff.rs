@@ -1,0 +1,439 @@
+//! Trace differencing: structurally compare two flight recordings (or
+//! two metrics snapshots) and rank what moved.
+//!
+//! Recordings diff at two levels. The *event* level aggregates both
+//! recordings by (process, thread, label, event kind) — span count and
+//! total duration, counter count and last value, instant count — and
+//! reports every key whose aggregate differs, ranked by delta magnitude.
+//! The *pipeline* level reconstructs task spans from both sides
+//! ([`super::critical::tasks_from_recording`]), builds a
+//! [`BlameReport`](super::blame::BlameReport) for each, and reports
+//! per-pipeline round/latency deltas together with the blame category
+//! that moved most — the "where did the regression go" answer.
+//!
+//! Diffing is pure structural comparison of deterministic artifacts: a
+//! recording diffed against itself (or against a rerun, on either
+//! engine, at any worker count) is empty, which `tests/blame_diff.rs`
+//! pins and `synergy trace-diff` turns into an exit code.
+
+use std::collections::BTreeMap;
+
+use super::blame::{BlameCategory, BlameReport, PipelineBlame};
+use super::critical::{ns, tasks_from_recording};
+use super::registry::MetricsSnapshot;
+use super::sink::{EventKind, FlightRecording};
+
+/// One differing (process, thread, label, kind) aggregate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffEntry {
+    pub process: String,
+    pub thread: String,
+    pub name: String,
+    /// `"span"`, `"instant"`, or `"counter"`.
+    pub kind: &'static str,
+    /// Event counts on each side.
+    pub count_a: usize,
+    pub count_b: usize,
+    /// Aggregate value on each side: total span seconds, a counter's
+    /// last value, 0 for instants (instants diff by count alone).
+    pub total_a: f64,
+    pub total_b: f64,
+}
+
+impl DiffEntry {
+    /// Signed aggregate movement (`b − a`).
+    pub fn delta(&self) -> f64 {
+        self.total_b - self.total_a
+    }
+
+    /// Ranking key: aggregate movement, falling back to count movement
+    /// for instants (whose aggregate is always 0).
+    fn magnitude(&self) -> f64 {
+        let v = self.delta().abs();
+        if v > 0.0 {
+            v
+        } else {
+            (self.count_b as f64 - self.count_a as f64).abs()
+        }
+    }
+}
+
+/// One pipeline whose rounds, latency, or blame mix moved. All deltas
+/// are per-round means in seconds, `b − a`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PipelineDelta {
+    pub pipeline: usize,
+    pub rounds_a: usize,
+    pub rounds_b: usize,
+    pub mean_latency_a_s: f64,
+    pub mean_latency_b_s: f64,
+    pub delta_compute_s: f64,
+    pub delta_radio_s: f64,
+    pub delta_queue_s: f64,
+    pub delta_pacing_s: f64,
+    /// The blame category whose per-round mean moved most — `None` when
+    /// only round counts differ.
+    pub moved: Option<BlameCategory>,
+}
+
+impl PipelineDelta {
+    /// Per-round mean latency movement in seconds (`b − a`).
+    pub fn delta_latency_s(&self) -> f64 {
+        self.mean_latency_b_s - self.mean_latency_a_s
+    }
+}
+
+/// Ranked structural difference of two recordings.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RecordingDiff {
+    /// Differing event aggregates, ranked by delta magnitude (ties by
+    /// key). Empty iff both recordings aggregate identically.
+    pub entries: Vec<DiffEntry>,
+    /// Pipelines whose measured story moved, ordered by pipeline id.
+    pub pipelines: Vec<PipelineDelta>,
+}
+
+impl RecordingDiff {
+    /// `true` when nothing differs — the identity-diff contract.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty() && self.pipelines.is_empty()
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct Agg {
+    count: usize,
+    total: f64,
+}
+
+fn kind_tag(k: &EventKind) -> (u8, &'static str) {
+    match k {
+        EventKind::Span { .. } => (0, "span"),
+        EventKind::Instant => (1, "instant"),
+        EventKind::Counter { .. } => (2, "counter"),
+    }
+}
+
+fn aggregate(rec: &FlightRecording) -> BTreeMap<(String, String, String, u8), Agg> {
+    let mut out: BTreeMap<(String, String, String, u8), Agg> = BTreeMap::new();
+    for ev in &rec.events {
+        let track = rec.track_of(ev);
+        let (rank, _) = kind_tag(&ev.kind);
+        let a = out
+            .entry((track.process.clone(), track.thread.clone(), ev.name.clone(), rank))
+            .or_default();
+        a.count += 1;
+        match ev.kind {
+            // Integer-ns duration totals: bit-stable regardless of the
+            // (deterministic) accumulation order.
+            EventKind::Span { dur } => a.total += ns(dur) as f64 / 1e9,
+            EventKind::Instant => {}
+            EventKind::Counter { value } => a.total = value,
+        }
+    }
+    out
+}
+
+fn kind_name(rank: u8) -> &'static str {
+    match rank {
+        0 => "span",
+        1 => "instant",
+        _ => "counter",
+    }
+}
+
+fn mean_category_s(p: Option<&PipelineBlame>, c: BlameCategory) -> f64 {
+    match p {
+        Some(p) if p.rounds > 0 => p.category_ns(c) as f64 / 1e9 / p.rounds as f64,
+        _ => 0.0,
+    }
+}
+
+fn pipeline_deltas(a: &BlameReport, b: &BlameReport) -> Vec<PipelineDelta> {
+    let index = |r: &BlameReport| -> BTreeMap<usize, PipelineBlame> {
+        r.pipelines.iter().map(|p| (p.pipeline, *p)).collect()
+    };
+    let (ia, ib) = (index(a), index(b));
+    let mut ids: Vec<usize> = ia.keys().chain(ib.keys()).copied().collect();
+    ids.sort_unstable();
+    ids.dedup();
+
+    let mut out = Vec::new();
+    for id in ids {
+        let (pa, pb) = (ia.get(&id), ib.get(&id));
+        let rounds = |p: Option<&PipelineBlame>| p.map_or(0, |p| p.rounds);
+        let mean_latency = |p: Option<&PipelineBlame>| p.map_or(0.0, |p| p.mean_latency_s());
+        let mut delta = PipelineDelta {
+            pipeline: id,
+            rounds_a: rounds(pa),
+            rounds_b: rounds(pb),
+            mean_latency_a_s: mean_latency(pa),
+            mean_latency_b_s: mean_latency(pb),
+            delta_compute_s: 0.0,
+            delta_radio_s: 0.0,
+            delta_queue_s: 0.0,
+            delta_pacing_s: 0.0,
+            moved: None,
+        };
+        let mut best = 0.0_f64;
+        for c in BlameCategory::ALL {
+            let d = mean_category_s(pb, c) - mean_category_s(pa, c);
+            match c {
+                BlameCategory::Compute => delta.delta_compute_s = d,
+                BlameCategory::Radio => delta.delta_radio_s = d,
+                BlameCategory::Queue => delta.delta_queue_s = d,
+                BlameCategory::Pacing => delta.delta_pacing_s = d,
+            }
+            if d.abs() > best {
+                best = d.abs();
+                delta.moved = Some(c);
+            }
+        }
+        let differs = delta.rounds_a != delta.rounds_b
+            || delta.mean_latency_a_s != delta.mean_latency_b_s
+            || delta.moved.is_some();
+        if differs {
+            out.push(delta);
+        }
+    }
+    out
+}
+
+/// Structurally diff two recordings: event aggregates plus per-pipeline
+/// blame movement. Task-span reconstruction failures (a recording with
+/// foreign span labels) degrade to an event-level-only diff rather than
+/// erroring — the event level already covers every difference.
+pub fn diff_recordings(a: &FlightRecording, b: &FlightRecording) -> RecordingDiff {
+    let (agg_a, agg_b) = (aggregate(a), aggregate(b));
+
+    let mut keys: Vec<&(String, String, String, u8)> = agg_a.keys().chain(agg_b.keys()).collect();
+    keys.sort();
+    keys.dedup();
+
+    let mut entries = Vec::new();
+    for key in keys {
+        let empty = Agg::default();
+        let va = agg_a.get(key).unwrap_or(&empty);
+        let vb = agg_b.get(key).unwrap_or(&empty);
+        if va.count != vb.count || va.total != vb.total {
+            entries.push(DiffEntry {
+                process: key.0.clone(),
+                thread: key.1.clone(),
+                name: key.2.clone(),
+                kind: kind_name(key.3),
+                count_a: va.count,
+                count_b: vb.count,
+                total_a: va.total,
+                total_b: vb.total,
+            });
+        }
+    }
+    entries.sort_by(|x, y| {
+        let kx = (&x.process, &x.thread, &x.name, x.kind);
+        let ky = (&y.process, &y.thread, &y.name, y.kind);
+        y.magnitude().total_cmp(&x.magnitude()).then_with(|| kx.cmp(&ky))
+    });
+
+    let blame_a = tasks_from_recording(a).map(|t| BlameReport::from_spans(&t)).unwrap_or_default();
+    let blame_b = tasks_from_recording(b).map(|t| BlameReport::from_spans(&t)).unwrap_or_default();
+
+    RecordingDiff { entries, pipelines: pipeline_deltas(&blame_a, &blame_b) }
+}
+
+/// One differing metric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricDelta {
+    pub name: String,
+    /// `"counter"`, `"gauge"`, or `"histogram"`.
+    pub kind: &'static str,
+    /// Representative value on each side (histograms use their sum).
+    pub a: f64,
+    pub b: f64,
+}
+
+impl MetricDelta {
+    /// Signed movement (`b − a`).
+    pub fn delta(&self) -> f64 {
+        self.b - self.a
+    }
+}
+
+/// Ranked structural difference of two metrics snapshots.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct MetricsDiff {
+    /// Differing metrics, ranked by |delta| (ties by name).
+    pub entries: Vec<MetricDelta>,
+}
+
+impl MetricsDiff {
+    /// `true` when the snapshots are identical.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Compare two metrics snapshots name-by-name. Missing names count as
+/// absent (0 for counters/histogram sums; gauges compare against 0.0).
+pub fn diff_metrics(a: &MetricsSnapshot, b: &MetricsSnapshot) -> MetricsDiff {
+    let mut entries = Vec::new();
+
+    let mut counter_names: Vec<&String> = a.counters.keys().chain(b.counters.keys()).collect();
+    counter_names.sort();
+    counter_names.dedup();
+    for name in counter_names {
+        let (va, vb) = (a.counters.get(name).copied(), b.counters.get(name).copied());
+        if va != vb {
+            entries.push(MetricDelta {
+                name: name.clone(),
+                kind: "counter",
+                a: va.unwrap_or(0) as f64,
+                b: vb.unwrap_or(0) as f64,
+            });
+        }
+    }
+
+    let mut gauge_names: Vec<&String> = a.gauges.keys().chain(b.gauges.keys()).collect();
+    gauge_names.sort();
+    gauge_names.dedup();
+    for name in gauge_names {
+        let (va, vb) = (a.gauges.get(name).copied(), b.gauges.get(name).copied());
+        if va != vb {
+            entries.push(MetricDelta {
+                name: name.clone(),
+                kind: "gauge",
+                a: va.unwrap_or(0.0),
+                b: vb.unwrap_or(0.0),
+            });
+        }
+    }
+
+    let mut hist_names: Vec<&String> = a.hists.keys().chain(b.hists.keys()).collect();
+    hist_names.sort();
+    hist_names.dedup();
+    for name in hist_names {
+        let (ha, hb) = (a.hists.get(name), b.hists.get(name));
+        if ha != hb {
+            entries.push(MetricDelta {
+                name: name.clone(),
+                kind: "histogram",
+                a: ha.map_or(0.0, |h| h.sum),
+                b: hb.map_or(0.0, |h| h.sum),
+            });
+        }
+    }
+
+    entries.sort_by(|x, y| {
+        y.delta()
+            .abs()
+            .total_cmp(&x.delta().abs())
+            .then_with(|| x.name.cmp(&y.name))
+    });
+    MetricsDiff { entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceId;
+    use crate::model::SplitRange;
+    use crate::obs::emit::record_task_spans;
+    use crate::obs::registry::MetricsRegistry;
+    use crate::obs::sink::TraceSink;
+    use crate::plan::TaskKind;
+    use crate::scheduler::{TaskSpan, Trace};
+
+    fn round(pipeline: usize, run: usize, shift: f64, infer_s: f64) -> Vec<TaskSpan> {
+        let mk = |seq: usize, kind: TaskKind, start: f64, end: f64| TaskSpan {
+            pipeline,
+            seq,
+            run,
+            device: DeviceId(0),
+            unit: kind.unit(),
+            kind,
+            start: start + shift,
+            end: end + shift,
+        };
+        vec![
+            mk(0, TaskKind::Sense { bytes: 1 }, 0.0, 0.1),
+            mk(1, TaskKind::Infer { range: SplitRange::new(0, 1) }, 0.1, 0.1 + infer_s),
+            mk(2, TaskKind::Interact { bytes: 1 }, 0.1 + infer_s, 0.2 + infer_s),
+        ]
+    }
+
+    fn recording(infer_s: f64) -> FlightRecording {
+        let mut spans = round(0, 0, 0.0, infer_s);
+        spans.extend(round(0, 1, 1.0, infer_s));
+        let mut rec = FlightRecording::new();
+        record_task_spans(&Trace { spans }, &mut rec);
+        rec
+    }
+
+    #[test]
+    fn self_diff_is_empty() {
+        let rec = recording(0.5);
+        let d = diff_recordings(&rec, &rec);
+        assert!(d.is_empty(), "{d:?}");
+        // A rerun with identical content but different emission order
+        // also diffs empty.
+        let mut reordered = FlightRecording::new();
+        for ev in rec.events.iter().rev() {
+            let track = rec.track_of(ev);
+            let t = reordered.track(&track.process, &track.thread);
+            if let EventKind::Span { dur } = ev.kind {
+                reordered.span(t, &ev.name, ev.t, ev.t + dur);
+            }
+        }
+        assert!(diff_recordings(&rec, &reordered).is_empty());
+    }
+
+    #[test]
+    fn slower_infer_ranks_first_and_blames_compute() {
+        let fast = recording(0.5);
+        let slow = recording(0.9);
+        let d = diff_recordings(&fast, &slow);
+        assert!(!d.is_empty());
+        // The biggest event-level mover is the infer span aggregate.
+        assert!(d.entries[0].name.contains("infer"), "{:?}", d.entries[0]);
+        assert!(d.entries[0].delta() > 0.0);
+        // The pipeline story names compute as the moved category.
+        assert_eq!(d.pipelines.len(), 1);
+        let p = d.pipelines[0];
+        assert_eq!(p.moved, Some(BlameCategory::Compute));
+        assert!((p.delta_compute_s - 0.4).abs() < 1e-9);
+        assert!(p.delta_latency_s() > 0.0);
+    }
+
+    #[test]
+    fn missing_track_shows_as_count_delta() {
+        let a = recording(0.5);
+        let mut b = recording(0.5);
+        let extra = b.track("session", "switches");
+        b.instant(extra, "plan-switch: device-joined", 0.5);
+        let d = diff_recordings(&a, &b);
+        assert_eq!(d.entries.len(), 1);
+        assert_eq!(d.entries[0].kind, "instant");
+        assert_eq!((d.entries[0].count_a, d.entries[0].count_b), (0, 1));
+        assert!(d.pipelines.is_empty());
+    }
+
+    #[test]
+    fn metrics_diff_ranks_by_magnitude() {
+        let ra = MetricsRegistry::new();
+        ra.counter("session.completions").add(10);
+        ra.set_gauge("session.energy_j", 2.0);
+        ra.observe("round.latency", 0.5);
+        let rb = MetricsRegistry::new();
+        rb.counter("session.completions").add(12);
+        rb.set_gauge("session.energy_j", 8.0);
+        rb.observe("round.latency", 0.5);
+
+        let d = diff_metrics(&ra.snapshot(), &rb.snapshot());
+        assert_eq!(d.entries.len(), 2);
+        assert_eq!(d.entries[0].name, "session.energy_j");
+        assert_eq!(d.entries[0].delta(), 6.0);
+        assert_eq!(d.entries[1].name, "session.completions");
+
+        let same = diff_metrics(&ra.snapshot(), &ra.snapshot());
+        assert!(same.is_empty());
+    }
+}

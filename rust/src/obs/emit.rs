@@ -120,8 +120,11 @@ pub fn record_power(report: &SessionReport, sink: &mut impl TraceSink) {
     }
 }
 
-/// Every DES task span on its (device, unit) lane, labelled
-/// `p<pipeline> <task>` — the §IV-F per-unit occupancy picture.
+/// Every task span on its (device, unit) lane, labelled
+/// `p<pipeline> <task> r<run> s<seq>` — the §IV-F per-unit occupancy
+/// picture. The label carries the full task identity so
+/// [`crate::obs::critical::tasks_from_recording`] can reconstruct
+/// rounds from an exported recording.
 pub fn record_task_spans(trace: &Trace, sink: &mut impl TraceSink) {
     if !sink.enabled() {
         return;
@@ -130,7 +133,13 @@ pub fn record_task_spans(trace: &Trace, sink: &mut impl TraceSink) {
         let track = sink.track(&device_process(span.device), &format!("{:?}", span.unit));
         sink.span(
             track,
-            &format!("p{} {}", span.pipeline, task_label(&span.kind)),
+            &format!(
+                "p{} {} r{} s{}",
+                span.pipeline,
+                task_label(&span.kind),
+                span.run,
+                span.seq
+            ),
             span.start,
             span.end,
         );

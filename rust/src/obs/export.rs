@@ -6,6 +6,8 @@
 //! may want the overhead numbers); determinism comparisons should use
 //! the trace/metrics paths, which scrub the annex explicitly.
 
+use super::blame::BlameReport;
+use super::diff::{MetricsDiff, RecordingDiff};
 use crate::analysis::CapacityReport;
 use crate::api::SessionReport;
 use crate::population::{Dist, PopulationReport};
@@ -157,7 +159,127 @@ pub fn population_report_json(r: &PopulationReport) -> Json {
             ]),
         ));
     }
+    if let Some(seed) = r.traced_seed {
+        fields.push(("traced_seed", num(seed as f64)));
+    }
+    if let Some(b) = &r.blame {
+        fields.push(("blame", blame_report_json(b)));
+    }
     obj(fields)
+}
+
+/// `BlameReport` as JSON — the `synergy blame --json` payload.
+pub fn blame_report_json(r: &BlameReport) -> Json {
+    let pipelines: Vec<Json> = r
+        .pipelines
+        .iter()
+        .map(|p| {
+            obj([
+                ("pipeline", count(p.pipeline)),
+                ("rounds", count(p.rounds)),
+                ("compute_ns", num(p.compute_ns as f64)),
+                ("radio_ns", num(p.radio_ns as f64)),
+                ("queue_ns", num(p.queue_ns as f64)),
+                ("pacing_ns", num(p.pacing_ns as f64)),
+                ("latency_ns", num(p.latency_ns as f64)),
+                ("mean_latency_s", num(p.mean_latency_s())),
+                ("dominant", Json::Str(p.dominant().to_string())),
+            ])
+        })
+        .collect();
+    let units: Vec<Json> = r
+        .units
+        .iter()
+        .map(|u| {
+            obj([
+                ("device", count(u.device.0)),
+                ("unit", Json::Str(format!("{:?}", u.unit))),
+                ("busy_ns", num(u.busy_ns as f64)),
+                ("queue_caused_ns", num(u.queue_caused_ns as f64)),
+                ("normalized_busy_s", num(u.normalized_busy_s)),
+            ])
+        })
+        .collect();
+    let bottleneck = match r.measured_bottleneck {
+        Some((d, u)) => obj([("device", count(d.0)), ("unit", Json::Str(format!("{u:?}")))]),
+        None => Json::Null,
+    };
+    obj([
+        ("rounds", count(r.rounds)),
+        ("incomplete_rounds", count(r.incomplete_rounds)),
+        ("measured_bottleneck", bottleneck),
+        ("pipelines", Json::Arr(pipelines)),
+        ("units", Json::Arr(units)),
+    ])
+}
+
+/// `RecordingDiff` as JSON — the `synergy trace-diff --json` payload.
+pub fn trace_diff_json(d: &RecordingDiff) -> Json {
+    let entries: Vec<Json> = d
+        .entries
+        .iter()
+        .map(|e| {
+            obj([
+                ("process", Json::Str(e.process.clone())),
+                ("thread", Json::Str(e.thread.clone())),
+                ("name", Json::Str(e.name.clone())),
+                ("kind", Json::Str(e.kind.into())),
+                ("count_a", count(e.count_a)),
+                ("count_b", count(e.count_b)),
+                ("total_a", num(e.total_a)),
+                ("total_b", num(e.total_b)),
+                ("delta", num(e.delta())),
+            ])
+        })
+        .collect();
+    let pipelines: Vec<Json> = d
+        .pipelines
+        .iter()
+        .map(|p| {
+            obj([
+                ("pipeline", count(p.pipeline)),
+                ("rounds_a", count(p.rounds_a)),
+                ("rounds_b", count(p.rounds_b)),
+                ("mean_latency_a_s", num(p.mean_latency_a_s)),
+                ("mean_latency_b_s", num(p.mean_latency_b_s)),
+                ("delta_latency_s", num(p.delta_latency_s())),
+                ("delta_compute_s", num(p.delta_compute_s)),
+                ("delta_radio_s", num(p.delta_radio_s)),
+                ("delta_queue_s", num(p.delta_queue_s)),
+                ("delta_pacing_s", num(p.delta_pacing_s)),
+                (
+                    "moved",
+                    match p.moved {
+                        Some(c) => Json::Str(c.to_string()),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        })
+        .collect();
+    obj([
+        ("identical", Json::Bool(d.is_empty())),
+        ("entries", Json::Arr(entries)),
+        ("pipelines", Json::Arr(pipelines)),
+    ])
+}
+
+/// `MetricsDiff` as JSON.
+pub fn metrics_diff_json(d: &MetricsDiff) -> Json {
+    let entries: Vec<Json> = d
+        .entries
+        .iter()
+        .map(|e| {
+            obj([
+                ("name", Json::Str(e.name.clone())),
+                ("kind", Json::Str(e.kind.into())),
+                ("a", num(e.a)),
+                ("b", num(e.b)),
+                ("delta", num(e.delta())),
+            ])
+        })
+        .collect();
+    obj([("identical", Json::Bool(d.is_empty())), ("entries", Json::Arr(entries))])
 }
 
 /// `CapacityReport` as JSON — the `synergy explain --json` payload.

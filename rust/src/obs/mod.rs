@@ -1,7 +1,8 @@
 //! Observability: the flight recorder (§VII's temporal claims, made
-//! visible).
+//! visible) and the analysis layer that turns recordings into
+//! explanations.
 //!
-//! Three pieces, all dependency-free:
+//! The pieces, all dependency-free:
 //!
 //! - [`sink`] — the [`TraceSink`] span/instant/counter API stamped in
 //!   **simulated** time, with a zero-cost [`NullSink`] and the in-memory
@@ -15,24 +16,37 @@
 //!   determinism comparisons.
 //! - [`perfetto`] / [`export`] — exporters: canonical Chrome
 //!   trace-event JSON (loads in [Perfetto](https://ui.perfetto.dev)),
-//!   a serde-free structural validator for CI, and flat JSON forms of
-//!   the session / population / capacity reports for `--json` CLI
-//!   output.
+//!   the inverse importer for `trace-diff`, a serde-free structural
+//!   validator for CI, and flat JSON forms of the session / population /
+//!   capacity / blame reports for `--json` CLI output.
+//! - [`critical`] / [`blame`] / [`diff`] — post-hoc analysis over
+//!   recordings: critical-path extraction with bit-exact latency
+//!   attribution, [`BlameReport`]s whose measured bottleneck
+//!   cross-checks the static capacity analysis, and structural trace /
+//!   metrics differencing with ranked deltas.
 //!
 //! Surfaces: `synergy trace --scenario cascade8 --out trace.json`,
+//! `synergy blame --scenario <name>`, `synergy trace-diff A.json
+//! B.json`,
 //! [`Session::finish_traced`](crate::api::Session::finish_traced), and
 //! [`PopulationCfg::trace_user`](crate::population::PopulationCfg).
 //!
 //! The xtask linter bans `std::time` in this module: every timestamp a
 //! sink sees is simulated or injected by the caller.
 
+pub mod blame;
+pub mod critical;
+pub mod diff;
 pub mod emit;
 pub mod export;
 pub mod perfetto;
 pub mod registry;
 pub mod sink;
 
+pub use blame::{BlameCategory, BlameReport, PipelineBlame, UnitBlame};
+pub use critical::{extract_critical, tasks_from_recording, CriticalPath, RoundBlame};
+pub use diff::{diff_metrics, diff_recordings, MetricsDiff, RecordingDiff};
 pub use emit::{record_session, session_metrics};
-pub use perfetto::{to_chrome_json, validate_chrome_trace};
+pub use perfetto::{recording_from_chrome_json, to_chrome_json, validate_chrome_trace};
 pub use registry::{Counter, HistSummary, MetricsRegistry, MetricsSnapshot, ANNEX_PREFIX};
 pub use sink::{EventKind, FlightRecording, NullSink, TraceEvent, TraceSink, Track, TrackId};

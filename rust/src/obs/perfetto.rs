@@ -14,7 +14,9 @@
 //! to bit-identical bytes even when their emission interleavings differ
 //! — the property the determinism tests compare.
 
-use super::sink::{EventKind, FlightRecording, TraceEvent};
+use std::collections::BTreeMap;
+
+use super::sink::{EventKind, FlightRecording, TraceEvent, TraceSink};
 use crate::util::json::{obj, Json};
 
 /// Convert simulated seconds to the integer microseconds Chrome traces
@@ -189,6 +191,83 @@ pub fn validate_chrome_trace(text: &str) -> Result<usize, String> {
     Ok(events.len())
 }
 
+/// Parse a Chrome trace-event document back into a [`FlightRecording`]
+/// — the inverse of [`to_chrome_json`], used by `synergy trace-diff` to
+/// load recordings from disk. Track names come from the `"M"` metadata
+/// events (unnamed pids/tids fall back to `pid<N>`/`tid<N>`), and
+/// timestamps convert from integer microseconds back to seconds, so a
+/// re-export of the imported recording is byte-identical.
+pub fn recording_from_chrome_json(text: &str) -> Result<FlightRecording, String> {
+    validate_chrome_trace(text)?;
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing top-level \"traceEvents\" array".to_string())?;
+
+    let mut process_names: BTreeMap<i64, String> = BTreeMap::new();
+    let mut thread_names: BTreeMap<(i64, i64), String> = BTreeMap::new();
+    let id = |ev: &Json, field: &str| -> i64 {
+        ev.get(field).and_then(Json::as_f64).unwrap_or(0.0) as i64
+    };
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) != Some("M") {
+            continue;
+        }
+        let arg = ev.get("args").and_then(|a| a.get("name")).and_then(Json::as_str);
+        let Some(arg) = arg else {
+            continue; // Foreign metadata kinds are ignorable.
+        };
+        match ev.get("name").and_then(Json::as_str) {
+            Some("process_name") => {
+                process_names.insert(id(ev, "pid"), arg.to_string());
+            }
+            Some("thread_name") => {
+                thread_names.insert((id(ev, "pid"), id(ev, "tid")), arg.to_string());
+            }
+            _ => {}
+        }
+    }
+
+    let mut rec = FlightRecording::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap_or("");
+        if ph == "M" {
+            continue;
+        }
+        let (pid, tid) = (id(ev, "pid"), id(ev, "tid"));
+        let process = process_names
+            .get(&pid)
+            .cloned()
+            .unwrap_or_else(|| format!("pid{pid}"));
+        let thread = thread_names
+            .get(&(pid, tid))
+            .cloned()
+            .unwrap_or_else(|| format!("tid{tid}"));
+        let track = rec.track(&process, &thread);
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+        let t = ev.get("ts").and_then(Json::as_f64).unwrap_or(0.0) / 1e6;
+        match ph {
+            "X" => {
+                let dur = ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0) / 1e6;
+                rec.span(track, name, t, t + dur);
+            }
+            "i" => rec.instant(track, name, t),
+            "C" => {
+                let value = ev
+                    .get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+                rec.counter(track, name, t, value);
+            }
+            // validate_chrome_trace already rejected unknown phases.
+            other => return Err(format!("unknown phase {other:?}")),
+        }
+    }
+    Ok(rec)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,6 +309,19 @@ mod tests {
         assert!(json.contains("\"ts\":500000"), "{json}");
         assert!(json.contains("\"dur\":750000"), "{json}");
         assert!(json.contains("\"ts\":2000000"), "{json}");
+    }
+
+    #[test]
+    fn chrome_json_roundtrips_through_import() {
+        let rec = sample();
+        let json = to_chrome_json(&rec);
+        let back = recording_from_chrome_json(&json).unwrap();
+        // Track names and integer-µs timestamps survive, so the
+        // re-export is byte-identical — the trace-diff loading contract.
+        assert_eq!(to_chrome_json(&back), json);
+        assert_eq!(back.len(), rec.len());
+        assert!(recording_from_chrome_json("{}").is_err());
+        assert!(recording_from_chrome_json("not json").is_err());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::analysis::SameTimePolicy;
 use crate::api::{
     GlobalPlanCache, PlanCacheStats, RuntimeError, SessionCfg, SessionReport, SynergyRuntime,
 };
-use crate::obs::{FlightRecording, MetricsRegistry, MetricsSnapshot};
+use crate::obs::{BlameReport, FlightRecording, MetricsRegistry, MetricsSnapshot};
 use crate::orchestrator::Synergy;
 use crate::plan::{FnvWriter, DEFAULT_BEAM_WIDTH};
 use crate::util::stats::{mean, percentile};
@@ -64,6 +64,46 @@ pub struct PopulationCfg {
     /// emitted post-hoc from the user's deterministic report, so it is
     /// bit-identical across worker counts.
     pub trace_user: Option<u64>,
+    /// Trace the user at this completions percentile instead of a fixed
+    /// seed: the cohort runs untraced first, the seed at the percentile
+    /// rank is picked deterministically, and that one session is
+    /// replayed traced — so distributions, fingerprint, and cache
+    /// counters are exactly those of an untraced run.
+    /// [`PopulationCfg::trace_user`] takes precedence when both are set.
+    pub trace_percentile: Option<Pctl>,
+}
+
+/// Completion-percentile selector for [`PopulationCfg::trace_percentile`]
+/// (the CLI's `--trace-user p50|p95|p99`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pctl {
+    P50,
+    P95,
+    P99,
+}
+
+impl Pctl {
+    /// The percentile as a fraction of the rank range.
+    pub fn fraction(self) -> f64 {
+        match self {
+            Pctl::P50 => 0.50,
+            Pctl::P95 => 0.95,
+            Pctl::P99 => 0.99,
+        }
+    }
+}
+
+impl std::str::FromStr for Pctl {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Pctl, String> {
+        match s {
+            "p50" => Ok(Pctl::P50),
+            "p95" => Ok(Pctl::P95),
+            "p99" => Ok(Pctl::P99),
+            other => Err(format!("unknown percentile {other:?} (expected p50, p95, or p99)")),
+        }
+    }
 }
 
 impl Default for PopulationCfg {
@@ -78,6 +118,7 @@ impl Default for PopulationCfg {
             shared_cache: true,
             mix: FleetMix::Mixed,
             trace_user: None,
+            trace_percentile: None,
         }
     }
 }
@@ -172,10 +213,16 @@ pub struct PopulationReport {
     /// shared-cache counters, and the wall-clock annex (scrub with
     /// [`MetricsSnapshot::scrub_annex`] before determinism comparisons).
     pub metrics: MetricsSnapshot,
-    /// Flight recording of the [`PopulationCfg::trace_user`] member
-    /// (lowest user index when the seed repeats); `None` when tracing
-    /// was off or no user drew the seed.
+    /// Flight recording of the traced member ([`PopulationCfg::trace_user`]
+    /// or the [`PopulationCfg::trace_percentile`] pick; lowest user index
+    /// when the seed repeats); `None` when tracing was off or no user
+    /// drew the seed.
     pub trace: Option<FlightRecording>,
+    /// Seed of the traced member, when a recording was produced.
+    pub traced_seed: Option<u64>,
+    /// Blame summary of the traced member's recording — where that
+    /// user's round latency went ([`BlameReport`]).
+    pub blame: Option<BlameReport>,
 }
 
 fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
@@ -342,6 +389,38 @@ pub fn run_population(cfg: &PopulationCfg) -> Result<PopulationReport, RuntimeEr
         outcomes.push(outcome);
     }
 
+    let mut traced_seed = cfg.trace_user.filter(|_| trace.is_some());
+    if trace.is_none() && cfg.trace_user.is_none() {
+        if let Some(p) = cfg.trace_percentile {
+            // Percentile pick, phase two: the cohort above ran untraced,
+            // so its distributions, fingerprint, and cache counters are
+            // exactly those of an untraced run. Rank users by
+            // (completions, seed) — nearest rank, ties broken by seed —
+            // and replay just that session traced. The replay skips the
+            // shared cache so cohort cache counters stay untouched;
+            // plan-selection purity makes the session bit-identical
+            // either way.
+            let mut ranked: Vec<(usize, u64)> =
+                outcomes.iter().map(|o| (o.completions, o.seed)).collect();
+            ranked.sort_unstable();
+            let idx = ((ranked.len() - 1) as f64 * p.fraction()).round() as usize;
+            let seed = ranked[idx].1;
+            let mut traced_cfg = *cfg;
+            traced_cfg.trace_user = Some(seed);
+            let (outcome, recording) = run_user(seed, &traced_cfg, None)?;
+            debug_assert!(
+                outcomes.iter().any(|o| o.seed == seed && o.digest == outcome.digest),
+                "traced replay diverged from the cohort pass"
+            );
+            trace = recording;
+            traced_seed = Some(outcome.seed);
+        }
+    }
+    let blame = match &trace {
+        Some(rec) => Some(BlameReport::from_recording(rec).map_err(RuntimeError::InvalidScenario)?),
+        None => None,
+    };
+
     use std::fmt::Write as _;
     let mut fp = FnvWriter::new();
     let mut walls = Vec::new();
@@ -375,7 +454,18 @@ pub fn run_population(cfg: &PopulationCfg) -> Result<PopulationReport, RuntimeEr
         // Pull the cache's own annex counters (the racy raw hit count).
         metrics.absorb_counters(&c.metrics().snapshot());
     }
-    Ok(finish_report(cfg, workers, outcomes, walls, cache_stats, fp.finish(), metrics, trace))
+    Ok(finish_report(
+        cfg,
+        workers,
+        outcomes,
+        walls,
+        cache_stats,
+        fp.finish(),
+        metrics,
+        trace,
+        traced_seed,
+        blame,
+    ))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -388,6 +478,8 @@ fn finish_report(
     fingerprint: u64,
     metrics: MetricsSnapshot,
     trace: Option<FlightRecording>,
+    traced_seed: Option<u64>,
+    blame: Option<BlameReport>,
 ) -> PopulationReport {
     let per_user = |f: fn(&UserOutcome) -> f64| -> Vec<f64> { outcomes.iter().map(f).collect() };
     PopulationReport {
@@ -404,6 +496,8 @@ fn finish_report(
         outcomes,
         metrics,
         trace,
+        traced_seed,
+        blame,
     }
 }
 
@@ -468,5 +562,46 @@ mod tests {
         assert_eq!(a.fingerprint, b.fingerprint);
         assert_eq!(a.fingerprint, c.fingerprint);
         assert!(c.cache.is_none());
+    }
+
+    #[test]
+    fn percentile_pick_parses_and_ranks() {
+        assert_eq!("p50".parse::<Pctl>(), Ok(Pctl::P50));
+        assert_eq!("p95".parse::<Pctl>(), Ok(Pctl::P95));
+        assert_eq!("p99".parse::<Pctl>(), Ok(Pctl::P99));
+        assert!("p42".parse::<Pctl>().is_err());
+        assert!(Pctl::P50.fraction() < Pctl::P95.fraction());
+        assert!(Pctl::P95.fraction() < Pctl::P99.fraction());
+    }
+
+    #[test]
+    fn percentile_tracing_leaves_the_fingerprint_alone_and_records() {
+        let plain = run_population(&cfg(6, 2, true)).unwrap();
+        let traced_cfg = PopulationCfg { trace_percentile: Some(Pctl::P95), ..cfg(6, 2, true) };
+        let traced = run_population(&traced_cfg).unwrap();
+        // Phase one is the untraced cohort, so everything fingerprinted
+        // (and the deterministic cache counters — raw hits are
+        // scheduling-dependent) match the plain run bit-for-bit.
+        assert_eq!(traced.fingerprint, plain.fingerprint);
+        let (tc, pc) = (traced.cache.unwrap(), plain.cache.unwrap());
+        assert_eq!(tc.lookups, pc.lookups);
+        assert_eq!(tc.unique_signatures, pc.unique_signatures);
+        assert_eq!(tc.unique_plans, pc.unique_plans);
+        // Phase two produced a recording, its seed, and a blame summary.
+        let seed = traced.traced_seed.expect("percentile pick traced a user");
+        assert!(traced.outcomes.iter().any(|o| o.seed == seed));
+        let rec = traced.trace.as_ref().expect("recording present");
+        assert!(!rec.events.is_empty());
+        let blame = traced.blame.as_ref().expect("blame summary present");
+        assert!(blame.rounds > 0, "{blame:?}");
+        blame.check_conservation().unwrap();
+        // An explicit --trace-user wins over the percentile selector.
+        let both = PopulationCfg {
+            trace_user: Some(1),
+            trace_percentile: Some(Pctl::P50),
+            ..cfg(6, 2, true)
+        };
+        let r = run_population(&both).unwrap();
+        assert_eq!(r.traced_seed, Some(1));
     }
 }

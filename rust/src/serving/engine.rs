@@ -70,7 +70,7 @@ use crate::pipeline::PipelineSpec;
 use crate::plan::task::{PlanTask, UnitKind};
 use crate::plan::CollabPlan;
 use crate::power::{busy_kind, BusySpan};
-use crate::scheduler::{EpochLedger, GroundTruth, RoundRecord};
+use crate::scheduler::{EpochLedger, GroundTruth, RoundRecord, TaskSpan};
 
 use crate::api::RuntimeError;
 
@@ -150,6 +150,13 @@ pub struct ServeOutcome {
     /// through [`crate::power::EnergyReplay`] (with [`Self::fleet_history`])
     /// to integrate energy exactly as the DES does.
     pub busy: Vec<BusySpan>,
+    /// Every executed task instance, sorted by (pipeline, run, seq) — the
+    /// serve-path analogue of the DES task trace. Collected post-hoc at
+    /// [`ServeEngine::finish`] (workers only ever send into a channel, the
+    /// same discipline as [`Self::busy`]), so downstream consumers — the
+    /// flight recorder, blame attribution — stay bit-identical across
+    /// worker counts and reruns.
+    pub tasks: Vec<TaskSpan>,
     /// The fleet over time: the starting fleet at `t = 0.0` plus one
     /// entry per [`ServeEngine::set_fleet`], in order.
     pub fleet_history: Vec<(f64, Fleet)>,
@@ -645,6 +652,7 @@ fn worker_loop(
     executor: Arc<dyn ChunkExecutor>,
     time_scale: f64,
     acct: mpsc::Sender<BusySpan>,
+    tasks: mpsc::Sender<TaskSpan>,
 ) {
     let mut clock = 0.0f64;
     while let Some(mut item) = merger.pop() {
@@ -675,6 +683,16 @@ fn worker_loop(
                 device,
                 kind: busy_kind(task.kind, unit),
                 dur,
+                end,
+            });
+            let _ = tasks.send(TaskSpan {
+                pipeline: chain.spec.id.0,
+                seq: item.seq,
+                run: item.round,
+                device,
+                unit,
+                kind: task.kind,
+                start,
                 end,
             });
         }
@@ -728,6 +746,9 @@ pub struct ServeEngine {
     /// Busy-span collector (energy integration), same lifecycle.
     acct_tx: Option<mpsc::Sender<BusySpan>>,
     acct_rx: mpsc::Receiver<BusySpan>,
+    /// Task-span collector (trace/blame attribution), same lifecycle.
+    task_tx: Option<mpsc::Sender<TaskSpan>>,
+    task_rx: mpsc::Receiver<TaskSpan>,
     /// Fleet over time: (t, fleet) — index 0 is the starting fleet.
     fleet_history: Vec<(f64, Fleet)>,
     rebinds: Vec<Rebind>,
@@ -753,6 +774,7 @@ impl ServeEngine {
     pub fn new(executor: Arc<dyn ChunkExecutor>, cfg: ServeCfg, fleet: Fleet) -> ServeEngine {
         let (done_tx, done_rx) = mpsc::channel();
         let (acct_tx, acct_rx) = mpsc::channel();
+        let (task_tx, task_rx) = mpsc::channel();
         ServeEngine {
             executor,
             cfg,
@@ -767,6 +789,8 @@ impl ServeEngine {
             done_rx,
             acct_tx: Some(acct_tx),
             acct_rx,
+            task_tx: Some(task_tx),
+            task_rx,
             fleet_history: vec![(0.0, fleet)],
             rebinds: Vec::new(),
             record_cap: None,
@@ -823,10 +847,18 @@ impl ServeEngine {
                 message: "serving engine already finished".into(),
             })?
             .clone();
+        let tasks = self
+            .task_tx
+            .as_ref()
+            .ok_or(RuntimeError::Backend {
+                backend,
+                message: "serving engine already finished".into(),
+            })?
+            .clone();
         let m = merger.clone();
         let join = std::thread::Builder::new()
             .name(format!("serve-{device}-{unit:?}"))
-            .spawn(move || worker_loop(m, device, unit, executor, scale, acct))
+            .spawn(move || worker_loop(m, device, unit, executor, scale, acct, tasks))
             .map_err(|e| RuntimeError::Backend {
                 backend,
                 message: format!("failed to spawn serve worker: {e}"),
@@ -984,6 +1016,7 @@ impl ServeEngine {
         // in-flight clone goes with its chain.
         self.done_tx.take();
         self.acct_tx.take();
+        self.task_tx.take();
         let workers = std::mem::take(&mut self.workers);
         let worker_count = workers.len();
         let mut joins = Vec::with_capacity(worker_count);
@@ -1032,6 +1065,10 @@ impl ServeEngine {
                 .then_with(|| a.kind.cmp(&b.kind))
                 .then_with(|| a.dur.total_cmp(&b.dur))
         });
+        let mut tasks: Vec<TaskSpan> = self.task_rx.try_iter().collect();
+        // (pipeline, run, seq) names each task instance exactly once, so
+        // the order is canonical regardless of channel arrival order.
+        tasks.sort_by_key(|s| (s.pipeline, s.run, s.seq));
         Ok(ServeOutcome {
             executor: backend,
             records,
@@ -1040,6 +1077,7 @@ impl ServeEngine {
             rebinds: self.rebinds.clone(),
             workers: worker_count,
             busy,
+            tasks,
             fleet_history: self.fleet_history.clone(),
         })
     }
@@ -1140,6 +1178,13 @@ mod tests {
         // the virtual timeline.
         assert!(!out.busy.is_empty());
         assert!(out.busy.iter().all(|s| s.dur >= 0.0 && s.end > 0.0));
+        // Task trace: one span per executed task, causally ordered within
+        // each (pipeline, run) chain.
+        assert_eq!(out.tasks.len(), out.busy.len());
+        assert!(out.tasks.iter().all(|s| s.end >= s.start && s.start >= 0.0));
+        let trace = crate::scheduler::Trace { spans: out.tasks.clone() };
+        trace.check_causality().unwrap();
+        trace.check_unit_exclusivity().unwrap();
         assert_eq!(out.fleet_history.len(), 1);
     }
 
@@ -1258,6 +1303,13 @@ mod tests {
                 assert_eq!(x.kind, y.kind);
                 assert_eq!(x.dur.to_bits(), y.dur.to_bits());
                 assert_eq!(x.end.to_bits(), y.end.to_bits());
+            }
+            assert_eq!(a.tasks.len(), b.tasks.len());
+            for (x, y) in a.tasks.iter().zip(&b.tasks) {
+                assert_eq!((x.pipeline, x.run, x.seq), (y.pipeline, y.run, y.seq));
+                assert_eq!((x.device, x.unit), (y.device, y.unit));
+                assert_eq!(x.start.to_bits(), y.start.to_bits(), "{x:?} vs {y:?}");
+                assert_eq!(x.end.to_bits(), y.end.to_bits(), "{x:?} vs {y:?}");
             }
         }
     }

@@ -1,0 +1,228 @@
+//! Blame & diff over the flight recorder, end to end:
+//!
+//! - **Conservation** — on every canned scenario × engine, each
+//!   pipeline's compute/radio/queue/pacing attributions sum bit-exactly
+//!   to its measured round latency (integer-ns arithmetic, no epsilon).
+//! - **Measured vs static** — on every canned workload × fleet combo,
+//!   the bottleneck the trace measures must name the same (device, unit)
+//!   the static capacity analysis predicts.
+//! - **Diff identity** — a recording diffed against a rerun is empty, on
+//!   either engine, under every same-time seed, at any population worker
+//!   count; and a genuinely different pair diffs non-empty with the
+//!   blame category that moved.
+
+use synergy::analysis::{analyze_capacity, SameTimePolicy};
+use synergy::api::{Scenario, SessionCfg, SynergyRuntime, TracedReport};
+use synergy::obs::{diff_metrics, diff_recordings, BlameReport};
+use synergy::orchestrator::{ProgressivePlanner, Synergy};
+use synergy::population::{run_population, PopulationCfg};
+use synergy::serving::ServeCfg;
+use synergy::workload::{
+    all_workloads, canned_scenario, fleet12_hetero, fleet4, fleet4_hetero, fleet8,
+    workload_mixed8, Workload,
+};
+
+/// One flight-recorded canned scenario on the chosen engine.
+fn traced_canned(name: &str, serve: bool, same_time: SameTimePolicy) -> TracedReport {
+    let canned = canned_scenario(name).unwrap_or_else(|| panic!("unknown scenario {name:?}"));
+    let runtime = SynergyRuntime::builder()
+        .fleet(canned.fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    let cfg = SessionCfg { seed: 7, record_trace: true, same_time, ..SessionCfg::default() };
+    let session = runtime.session_with(canned.scenario, cfg).unwrap();
+    let session = if serve {
+        session.serve(ServeCfg { same_time, ..ServeCfg::default() }).unwrap()
+    } else {
+        session
+    };
+    session.finish_traced().unwrap()
+}
+
+/// Every canned scenario, both engines: the recording's task spans parse
+/// back, every pipeline conserves latency bit-exactly, and the recording
+/// path agrees with the in-memory task trace.
+#[test]
+fn blame_conserves_bit_exactly_on_every_canned_scenario_and_engine() {
+    for name in ["jog", "churn8", "bursty8", "cascade8"] {
+        for serve in [false, true] {
+            let t = traced_canned(name, serve, SameTimePolicy::Deterministic);
+            let blame = BlameReport::from_recording(&t.recording)
+                .unwrap_or_else(|e| panic!("{name} serve={serve}: {e}"));
+            blame
+                .check_conservation()
+                .unwrap_or_else(|e| panic!("{name} serve={serve}: {e}"));
+            assert!(blame.rounds > 0, "{name} serve={serve}: no complete rounds");
+            assert!(blame.measured_bottleneck.is_some(), "{name} serve={serve}");
+            for p in &blame.pipelines {
+                assert!(p.latency_ns > 0, "{name} serve={serve} p{}", p.pipeline);
+                assert!(p.compute_ns > 0, "{name} serve={serve} p{}", p.pipeline);
+            }
+            // Reconstructing spans from the recording and reading them
+            // straight off the report tell the same story.
+            let spans = &t.report.trace.as_ref().expect("trace armed").spans;
+            assert_eq!(blame, BlameReport::from_spans(spans), "{name} serve={serve}");
+        }
+    }
+}
+
+/// One combo, both engines: run a steady-state traced session and check
+/// the measured bottleneck names the unit `analyze_capacity` predicts.
+fn check_agreement(
+    combo: &str,
+    fleet: &synergy::device::Fleet,
+    w: &Workload,
+    planner: fn() -> ProgressivePlanner,
+    horizon: f64,
+) {
+    let cfg = SessionCfg { seed: 17, record_trace: true, ..SessionCfg::default() };
+    let build = || {
+        let runtime = SynergyRuntime::builder()
+            .fleet(fleet.clone())
+            .planner(planner())
+            .build();
+        for spec in w.pipelines.clone() {
+            runtime.register(spec).unwrap();
+        }
+        runtime
+    };
+
+    let runtime = build();
+    let plan = runtime.deployment().expect("deployment committed").plan;
+    let apps = runtime.apps();
+    let cap = analyze_capacity(&plan, &apps, fleet, None).unwrap();
+
+    let des = runtime
+        .session_with(Scenario::new().until(horizon), cfg)
+        .unwrap()
+        .finish_traced()
+        .unwrap();
+    let served = build()
+        .session_with(Scenario::new().until(horizon), cfg)
+        .unwrap()
+        .serve(ServeCfg::default())
+        .unwrap()
+        .finish_traced()
+        .unwrap();
+
+    for (engine, traced) in [("des", &des), ("serve", &served)] {
+        let blame = BlameReport::from_recording(&traced.recording)
+            .unwrap_or_else(|e| panic!("{combo} [{engine}]: {e}"));
+        blame
+            .check_conservation()
+            .unwrap_or_else(|e| panic!("{combo} [{engine}]: {e}"));
+        assert!(blame.rounds > 0, "{combo} [{engine}]: no complete rounds");
+        assert!(
+            blame.agrees_with(&cap),
+            "{combo} [{engine}]: measured bottleneck {:?} != static {:?}",
+            blame.measured_bottleneck,
+            cap.bottleneck_unit()
+        );
+    }
+}
+
+#[test]
+fn measured_bottleneck_matches_static_on_table1_workloads() {
+    for (fname, fleet) in [("fleet4", fleet4()), ("fleet4-hetero", fleet4_hetero())] {
+        for w in all_workloads() {
+            let combo = format!("{} × {fname}", w.name);
+            check_agreement(&combo, &fleet, &w, Synergy::planner, 10.0);
+        }
+    }
+}
+
+#[test]
+fn measured_bottleneck_matches_static_on_mixed8_fleets() {
+    for (fname, fleet) in [("fleet8", fleet8()), ("fleet12-hetero", fleet12_hetero())] {
+        let w = workload_mixed8(fleet.len());
+        let combo = format!("{} × {fname}", w.name);
+        check_agreement(&combo, &fleet, &w, || Synergy::planner_bounded(8), 6.0);
+    }
+}
+
+/// The identity-diff contract: reruns on both engines, every same-time
+/// seed, and every population worker count produce recordings (and
+/// scrubbed metrics) that diff empty.
+#[test]
+fn self_diff_is_empty_across_engines_seeds_and_worker_counts() {
+    for serve in [false, true] {
+        let a = traced_canned("cascade8", serve, SameTimePolicy::Deterministic);
+        let b = traced_canned("cascade8", serve, SameTimePolicy::Deterministic);
+        let d = diff_recordings(&a.recording, &b.recording);
+        assert!(d.is_empty(), "serve={serve}: {:?}", d.entries.first());
+
+        let (mut ma, mut mb) = (a.metrics.clone(), b.metrics.clone());
+        ma.scrub_annex();
+        mb.scrub_annex();
+        let md = diff_metrics(&ma, &mb);
+        assert!(md.is_empty(), "serve={serve}: {:?}", md.entries.first());
+    }
+
+    // Each same-time seed names one fixed recording.
+    for seed in [3u64, 11] {
+        let a = traced_canned("cascade8", false, SameTimePolicy::Randomized { seed });
+        let b = traced_canned("cascade8", false, SameTimePolicy::Randomized { seed });
+        let d = diff_recordings(&a.recording, &b.recording);
+        assert!(d.is_empty(), "seed {seed}: {:?}", d.entries.first());
+    }
+
+    // Population worker pools (1, 4, 8) leave the traced user's
+    // recording and blame summary identical.
+    let base = PopulationCfg {
+        users: 4,
+        seed_lo: 0,
+        seed_hi: 4,
+        workers: 1,
+        trace_user: Some(2),
+        ..PopulationCfg::default()
+    };
+    let reference = run_population(&base).unwrap();
+    let ref_rec = reference.trace.as_ref().expect("trace recorded");
+    let ref_blame = reference.blame.as_ref().expect("blame computed");
+    ref_blame.check_conservation().unwrap();
+    assert_eq!(reference.traced_seed, Some(2));
+    for workers in [4usize, 8] {
+        let r = run_population(&PopulationCfg { workers, ..base }).unwrap();
+        let rec = r.trace.as_ref().expect("trace recorded");
+        let d = diff_recordings(ref_rec, rec);
+        assert!(d.is_empty(), "workers {workers}: {:?}", d.entries.first());
+        assert_eq!(Some(ref_blame), r.blame.as_ref(), "workers {workers}");
+    }
+}
+
+/// A genuinely different pair — the same scenario cut to a shorter
+/// horizon — diffs non-empty: ranked task-track deltas plus pipeline
+/// rows naming what moved.
+#[test]
+fn a_shortened_session_diffs_with_pipeline_movement() {
+    let full = traced_canned("cascade8", false, SameTimePolicy::Deterministic);
+
+    let canned = canned_scenario("cascade8").unwrap();
+    let runtime = SynergyRuntime::builder()
+        .fleet(canned.fleet)
+        .planner(Synergy::planner_bounded(8))
+        .build();
+    let cfg = SessionCfg { seed: 7, record_trace: true, ..SessionCfg::default() };
+    let cut = runtime
+        .session_with(canned.scenario.until(10.0), cfg)
+        .unwrap()
+        .finish_traced()
+        .unwrap();
+
+    let d = diff_recordings(&full.recording, &cut.recording);
+    assert!(!d.is_empty());
+    assert!(!d.entries.is_empty());
+    assert!(!d.pipelines.is_empty());
+    for p in &d.pipelines {
+        assert!(
+            p.rounds_a != p.rounds_b
+                || p.mean_latency_a_s != p.mean_latency_b_s
+                || p.moved.is_some(),
+            "{p:?} listed but nothing moved"
+        );
+    }
+    // Diffing is antisymmetric on the headline signs.
+    let rev = diff_recordings(&cut.recording, &full.recording);
+    assert_eq!(rev.entries.len(), d.entries.len());
+    assert!(!rev.is_empty());
+}
